@@ -1,0 +1,74 @@
+//! Ablation: how much does the P2 refinement loop (Eq. 3/4) matter?
+//!
+//! Runs the same trace three ways —
+//!   * full GOGH (P1 + P2 refinement + online learning),
+//!   * P1-only (refinement disabled),
+//!   * frozen (refinement on, online learning off)
+//! — and reports estimation MAE + energy. The refinement loop is the
+//! paper's core claim: observing one GPU type should sharpen estimates
+//! on all the others.
+//!
+//!     cargo run --release --example ablation_refinement
+
+use gogh::cluster::ClusterSpec;
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::{GoghOptions, GoghScheduler, SimDriver};
+use gogh::runtime::Engine;
+use gogh::workload::{ThroughputOracle, Trace};
+
+fn main() -> gogh::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 30;
+    cfg.trace.mean_interarrival_s = 40.0;
+    cfg.trace.mean_work_s = 800.0;
+    cfg.seed = 31;
+    cfg.trace.seed = 31;
+    let engine = Engine::load(&cfg.estimator.artifacts_dir)?;
+
+    println!(
+        "{:<22} {:>10} {:>10} {:>9} {:>7}",
+        "variant", "est_mae", "busy_J", "slo_def", "viols"
+    );
+    for (name, refine, online) in [
+        ("gogh-full", true, cfg.estimator.online_steps_per_round),
+        ("gogh-p1-only", false, cfg.estimator.online_steps_per_round),
+        ("gogh-frozen", true, 0),
+        ("gogh-p1-only-frozen", false, 0),
+    ] {
+        let oracle = ThroughputOracle::new(cfg.seed);
+        let trace = Trace::generate(&cfg.trace, &oracle);
+        let mut driver = SimDriver::new(
+            ClusterSpec::mix(&cfg.cluster.accel_mix),
+            oracle.clone(),
+            trace,
+            cfg.noise_sigma,
+            cfg.monitor_interval_s,
+            cfg.seed,
+        );
+        let mut est_cfg = cfg.estimator.clone();
+        est_cfg.online_steps_per_round = online;
+        let mut sched = GoghScheduler::new(
+            &engine,
+            &oracle,
+            GoghOptions {
+                estimator: est_cfg,
+                optimizer: cfg.optimizer.clone(),
+                history_jobs: 24,
+                enable_refinement: refine,
+                exploration_epsilon: 0.0,
+                seed: cfg.seed,
+            },
+        )?;
+        let report = driver.run(&mut sched)?;
+        println!(
+            "{:<22} {:>10.4} {:>10.0} {:>9.3} {:>7}",
+            name,
+            report.estimation_mae.unwrap_or(f64::NAN),
+            report.energy_joules,
+            report.slo_deficit,
+            report.slo_violations
+        );
+    }
+    println!("\nlower est_mae with refinement on == the paper's Eq. 3/4 claim");
+    Ok(())
+}

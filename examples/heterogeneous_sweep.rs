@@ -1,0 +1,83 @@
+//! Heterogeneity sweep: how the schedulers compare as the cluster mix
+//! shifts from legacy-heavy (mostly k80) to modern-heavy (mostly v100)
+//! — the scenario the paper's introduction motivates (mixed-generation
+//! clusters that cannot be upgraded wholesale).
+//!
+//!     cargo run --release --example heterogeneous_sweep
+
+use gogh::baselines::{GreedyScheduler, RandomScheduler};
+use gogh::cluster::ClusterSpec;
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::{GoghOptions, GoghScheduler, SimDriver};
+use gogh::runtime::Engine;
+use gogh::workload::{AccelType, ThroughputOracle, Trace};
+
+fn mixes() -> Vec<(&'static str, Vec<(AccelType, u32)>)> {
+    use AccelType::*;
+    vec![
+        ("legacy-heavy", vec![(K80, 5), (K80Unconsolidated, 3), (P100, 2), (V100, 1)]),
+        (
+            "balanced",
+            vec![(K80, 2), (K80Unconsolidated, 2), (P100, 2), (P100Unconsolidated, 2), (V100, 2), (V100Unconsolidated, 2)],
+        ),
+        ("modern-heavy", vec![(V100, 5), (V100Unconsolidated, 3), (P100, 2), (K80, 1)]),
+    ]
+}
+
+fn main() -> gogh::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 24;
+    cfg.trace.mean_interarrival_s = 50.0;
+    cfg.trace.mean_work_s = 700.0;
+    cfg.seed = 23;
+    cfg.trace.seed = 23;
+    let engine = Engine::load(&cfg.estimator.artifacts_dir)?;
+
+    println!(
+        "{:<14} {:<10} {:>12} {:>10} {:>8} {:>8}",
+        "mix", "policy", "busy_J", "J/job", "slo_def", "jct_s"
+    );
+    for (mix_name, mix) in mixes() {
+        for policy in ["random", "greedy", "gogh"] {
+            let oracle = ThroughputOracle::new(cfg.seed);
+            let trace = Trace::generate(&cfg.trace, &oracle);
+            let mut driver = SimDriver::new(
+                ClusterSpec::mix(&mix),
+                oracle.clone(),
+                trace,
+                cfg.noise_sigma,
+                cfg.monitor_interval_s,
+                cfg.seed,
+            );
+            let report = match policy {
+                "random" => driver.run(&mut RandomScheduler::new(cfg.seed))?,
+                "greedy" => driver.run(&mut GreedyScheduler::new())?,
+                _ => {
+                    let mut sched = GoghScheduler::new(
+                        &engine,
+                        &oracle,
+                        GoghOptions {
+                            estimator: cfg.estimator.clone(),
+                            optimizer: cfg.optimizer.clone(),
+                            history_jobs: 24,
+                            enable_refinement: true,
+                            exploration_epsilon: 0.0,
+                            seed: cfg.seed,
+                        },
+                    )?;
+                    driver.run(&mut sched)?
+                }
+            };
+            println!(
+                "{:<14} {:<10} {:>12.0} {:>10.0} {:>8.3} {:>8.1}",
+                mix_name,
+                policy,
+                report.energy_joules,
+                report.joules_per_job(),
+                report.slo_deficit,
+                report.mean_jct
+            );
+        }
+    }
+    Ok(())
+}

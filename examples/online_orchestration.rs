@@ -1,0 +1,108 @@
+//! End-to-end driver (DESIGN.md §E2E): run the full GOGH system on a
+//! realistic online trace — P1 initial estimation, ILP allocation,
+//! monitoring, P2 cross-GPU refinement and continuous online training of
+//! both AOT-compiled networks — and compare against every baseline on
+//! the same trace. Logs the online-learning loss curve of the estimator
+//! pair along the way.
+//!
+//!     cargo run --release --example online_orchestration
+//!
+//! The headline numbers of EXPERIMENTS.md §E2E come from this binary.
+
+use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
+use gogh::cluster::ClusterSpec;
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::history;
+use gogh::coordinator::{GoghOptions, GoghScheduler, SimDriver};
+use gogh::metrics::SchedulerComparison;
+use gogh::runtime::{Engine, Estimator};
+use gogh::workload::{ThroughputOracle, Trace};
+
+fn main() -> gogh::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 40;
+    cfg.trace.mean_interarrival_s = 40.0;
+    cfg.trace.mean_work_s = 900.0;
+    cfg.seed = 11;
+    cfg.trace.seed = 11;
+
+    let engine = Engine::load(&cfg.estimator.artifacts_dir)?;
+
+    // ---- phase 1: online-learning curve of the estimator pair --------
+    // Train P1 (RNN) on catalog history exactly as the coordinator's
+    // bootstrap does, logging the loss curve (a few hundred steps).
+    println!("== online estimator training (P1 = rnn) ==");
+    let oracle = ThroughputOracle::new(cfg.seed);
+    let mut catalog = gogh::catalog::Catalog::new();
+    history::seed_catalog(&mut catalog, &oracle, 24, 0.02, cfg.seed);
+    let samples = history::p1_samples_from_catalog(&catalog, 4096, cfg.seed);
+    let mut p1 = Estimator::new(&engine, "p1_rnn")?;
+    let mut rng = gogh::util::Rng::seed_from_u64(cfg.seed);
+    let batch = p1.spec().train_batch;
+    for step in 0..300 {
+        let mut idx: Vec<usize> = (0..samples.len()).collect();
+        rng.shuffle(&mut idx);
+        let xs: Vec<Vec<f32>> = idx[..batch.min(samples.len())]
+            .iter()
+            .map(|&i| samples[i].x.clone())
+            .collect();
+        let ys: Vec<[f32; 2]> = idx[..batch.min(samples.len())]
+            .iter()
+            .map(|&i| samples[i].y)
+            .collect();
+        let (loss, mae) = p1.train_step(&xs, &ys)?;
+        if step % 30 == 0 || step == 299 {
+            println!("  step {step:>4}  loss {loss:.5}  mae {mae:.4}");
+        }
+    }
+
+    // ---- phase 2: full system comparison on one trace ----------------
+    println!("\n== scheduler comparison ({} jobs) ==", cfg.trace.n_jobs);
+    let mut table = SchedulerComparison::default();
+    for policy in ["random", "greedy", "gogh", "gogh-frozen", "oracle-ilp"] {
+        let oracle = ThroughputOracle::new(cfg.seed);
+        let trace = Trace::generate(&cfg.trace, &oracle);
+        let spec = ClusterSpec::mix(&cfg.cluster.accel_mix);
+        let mut driver = SimDriver::new(
+            spec,
+            oracle.clone(),
+            trace,
+            cfg.noise_sigma,
+            cfg.monitor_interval_s,
+            cfg.seed,
+        );
+        let report = match policy {
+            "random" => driver.run(&mut RandomScheduler::new(cfg.seed))?,
+            "greedy" => driver.run(&mut GreedyScheduler::new())?,
+            "oracle-ilp" => {
+                driver.run(&mut OracleScheduler::new(oracle, cfg.optimizer.clone()))?
+            }
+            name => {
+                let mut opts = GoghOptions {
+                    estimator: cfg.estimator.clone(),
+                    optimizer: cfg.optimizer.clone(),
+                    history_jobs: 24,
+                    enable_refinement: true,
+                    exploration_epsilon: 0.0,
+                    seed: cfg.seed,
+                };
+                if name == "gogh-frozen" {
+                    // ablation: no online learning after bootstrap
+                    opts.estimator.online_steps_per_round = 0;
+                }
+                let mut sched = GoghScheduler::new(&engine, &oracle, opts)?;
+                let mut rep = driver.run(&mut sched)?;
+                rep.scheduler = name.to_string();
+                rep
+            }
+        };
+        println!("  finished {policy}");
+        table.push(report);
+    }
+    println!("\n{}", table.table());
+    println!("energy vs random baseline:");
+    for (name, ratio) in table.energy_ratios() {
+        println!("  {name:<14} {ratio:.3}x");
+    }
+    Ok(())
+}

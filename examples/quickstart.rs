@@ -1,0 +1,51 @@
+//! Quickstart: bring up the full GOGH stack on a small heterogeneous
+//! cluster, schedule a short trace, and print the run report.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (the AOT-compiled estimators).
+
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::Gogh;
+use gogh::metrics::RunReport;
+
+fn main() -> gogh::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 12;
+    cfg.trace.mean_interarrival_s = 45.0;
+    cfg.trace.mean_work_s = 600.0;
+    cfg.seed = 7;
+    cfg.trace.seed = 7;
+
+    println!("cluster:");
+    for (a, n) in &cfg.cluster.accel_mix {
+        println!("  {:<22} x{}", a.name(), n);
+    }
+    println!(
+        "\nscheduling {} jobs with P1={} / P2={} ...\n",
+        cfg.trace.n_jobs, cfg.estimator.p1_arch, cfg.estimator.p2_arch
+    );
+
+    let mut sys = Gogh::from_config(&cfg)?;
+    let report = sys.run()?;
+
+    println!("{}", RunReport::header());
+    println!("{}", report.row());
+    println!(
+        "\nenergy per completed job: {:.0} J",
+        report.joules_per_job()
+    );
+    if let Some(mae) = report.estimation_mae {
+        println!("throughput-estimation MAE: {mae:.4} (normalized units)");
+    }
+    println!(
+        "decision path: ILP {:.2} ms, P1 {:.2} ms per call",
+        report.mean_solve_ms, report.mean_p1_ms
+    );
+    println!(
+        "catalog: {} records ({} measured)",
+        sys.scheduler().catalog.len(),
+        sys.scheduler().catalog.n_measured()
+    );
+    Ok(())
+}

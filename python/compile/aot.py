@@ -1,0 +1,134 @@
+"""AOT lowering: JAX → HLO **text** → ``artifacts/`` for the rust runtime.
+
+Emits, for every (net × arch) pair of the GOGH estimators
+(p1/p2 × ff/rnn/transformer):
+
+  * ``{net}_{arch}_init.hlo.txt``  — ``() -> state`` seeded param+Adam init
+  * ``{net}_{arch}_fwd.hlo.txt``   — ``(state…, x) -> (yhat,)``
+  * ``{net}_{arch}_train.hlo.txt`` — ``(state…, x, y) -> (state…, loss, mae)``
+
+plus ``manifest.json`` describing every artifact's I/O so the rust
+runtime can drive them blindly.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+— the rust side unwraps the single tuple output.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT batch sizes (PJRT executables are shape-specialized; the rust
+# side pads partial batches and slices results).
+TRAIN_BATCH = 256
+PRED_BATCH = 256
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_model(net: str, arch: str, out_dir: pathlib.Path, lr: float) -> dict:
+    """Lower init/fwd/train for one (net, arch); returns its manifest entry."""
+    raw_in, padded_in, tokens = model.NETS[net]
+    entries = model.state_entries(net, arch)
+    state_specs = [_spec(s) for _, s in entries]
+    n_params = model.n_params(net, arch)
+    param_specs = state_specs[:n_params]
+    x_train = _spec((TRAIN_BATCH, padded_in))
+    y_train = _spec((TRAIN_BATCH, model.OUT_DIM))
+    x_pred = _spec((PRED_BATCH, padded_in))
+
+    key = f"{net}_{arch}"
+    files = {}
+    for kind, fn, args in (
+        ("init", model.make_init_fn(net, arch), ()),
+        # fwd consumes params only — unused Adam state would be pruned
+        # from the HLO entry signature (see model.make_fwd_fn).
+        ("fwd", model.make_fwd_fn(net, arch), (*param_specs, x_pred)),
+        ("train", model.make_train_fn(net, arch, lr), (*state_specs, x_train, y_train)),
+    ):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{key}_{kind}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        files[kind] = fname
+        print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB)")
+
+    return {
+        "net": net,
+        "arch": arch,
+        "input_dim": raw_in,
+        "padded_dim": padded_in,
+        "tokens": tokens,
+        "out_dim": model.OUT_DIM,
+        "train_batch": TRAIN_BATCH,
+        "pred_batch": PRED_BATCH,
+        "lr": lr,
+        "param_count": model.param_count(model.init_params(net, arch)),
+        "n_params": n_params,
+        "state": [{"name": n, "shape": list(s)} for n, s in entries],
+        "files": files,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--lr", type=float, default=model.DEFAULT_LR, help="Adam learning rate baked into train steps")
+    ap.add_argument("--only", default=None, help="comma-separated net_arch keys to lower (default: all)")
+    # legacy single-file flag kept so `make` prerequisites stay simple
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "token_dim": model.TOKEN_DIM,
+        "models": {},
+    }
+    for net in model.NETS:
+        for arch in model.ARCHS:
+            key = f"{net}_{arch}"
+            if only and key not in only:
+                continue
+            print(f"lowering {key} ...")
+            manifest["models"][key] = lower_model(net, arch, out_dir, args.lr)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'} ({len(manifest['models'])} models)")
+    if only is None:
+        # stamp file used by `make` to detect completion of a FULL build
+        (out_dir / ".stamp").write_text("ok\n")
+
+
+if __name__ == "__main__":
+    main()

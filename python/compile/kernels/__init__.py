@@ -1,0 +1,19 @@
+"""L1 — Pallas kernels for the GOGH estimator hot-spots.
+
+Public surface:
+  * :func:`fused_linear.fused_linear` — tiled ``act(x @ w + b)``.
+  * :func:`fused_linear.layernorm` — fused row LayerNorm.
+  * :func:`gru_cell.gru_cell` — fused GRU recurrence step.
+  * :func:`attention.attention` — fused scaled-dot-product attention.
+  * :mod:`ref` — pure-jnp oracles for all of the above.
+
+All kernels lower with ``interpret=True`` so the emitted HLO runs on the
+CPU PJRT client the rust runtime uses (see DESIGN.md).
+"""
+
+from .attention import attention
+from .fused_linear import fused_linear, layernorm
+from .gru_cell import gru_cell
+from . import ref
+
+__all__ = ["attention", "fused_linear", "layernorm", "gru_cell", "ref"]

@@ -1,0 +1,106 @@
+"""Fused scaled-dot-product attention as a Pallas kernel.
+
+The Transformer estimator variant attends over the 4–5 field-group tokens
+of a P1/P2 input. Sequence lengths are tiny, so unlike FlashAttention
+there is no need to stream K/V tiles: one program instance holds the
+whole ``(S, S)`` score matrix for a batch×head tile in VMEM and fuses
+scale → softmax → value-weighting in a single pass (the same "never
+spill the scores" insight FlashAttention applies at large S with
+streaming; see DESIGN.md §Hardware-Adaptation).
+
+Autodiff: ``jax.custom_vjp`` with the softmax probabilities stashed by
+the forward kernel — the standard SDPA backward, all-batched einsums over
+tiny ``(S, S)`` tiles.
+
+Grid: ``(B*H / block_bh,)`` over flattened batch×head rows.
+``interpret=True`` as everywhere in this package.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import _ceil_to
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, p_ref, *, scale: float):
+    q = q_ref[...]  # (bh, S, Dh)
+    k = k_ref[...]
+    v = v_ref[...]
+    scores = jnp.einsum("bsd,btd->bst", q, k, preferred_element_type=jnp.float32) * scale
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    p_ref[...] = probs.astype(p_ref.dtype)
+    o_ref[...] = jnp.einsum("bst,btd->bsd", probs, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _attn_pallas(qf, kf, vf, scale: float, block_bh: int):
+    bh, s, dh = qf.shape
+    bbh = min(block_bh, _ceil_to(bh, 8))
+    bhp = _ceil_to(bh, bbh)
+    if bhp != bh:
+        pad = ((0, bhp - bh), (0, 0), (0, 0))
+        qf, kf, vf = jnp.pad(qf, pad), jnp.pad(kf, pad), jnp.pad(vf, pad)
+    spec = pl.BlockSpec((bbh, s, dh), lambda i: (i, 0, 0))
+    pspec = pl.BlockSpec((bbh, s, s), lambda i: (i, 0, 0))
+    out, probs = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(bhp // bbh,),
+        in_specs=[spec] * 3,
+        out_specs=[spec, pspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bhp, s, dh), qf.dtype),
+            jax.ShapeDtypeStruct((bhp, s, s), qf.dtype),
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    return out[:bh], probs[:bh]
+
+
+@functools.lru_cache(maxsize=None)
+def _make_attention(scale: float, block_bh: int):
+    @jax.custom_vjp
+    def attn(qf, kf, vf):
+        return _attn_pallas(qf, kf, vf, scale, block_bh)[0]
+
+    def fwd(qf, kf, vf):
+        out, probs = _attn_pallas(qf, kf, vf, scale, block_bh)
+        return out, (qf, kf, vf, probs)
+
+    def bwd(res, do):
+        qf, kf, vf, p = res
+        dv = jnp.einsum("bst,bsd->btd", p, do)
+        dp = jnp.einsum("bsd,btd->bst", do, vf)
+        # softmax backward: ds = p * (dp - sum_t(dp * p))
+        ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+        dq = jnp.einsum("bst,btd->bsd", ds, kf) * scale
+        dk = jnp.einsum("bst,bsd->btd", ds, qf) * scale
+        return dq, dk, dv
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, block_bh: int = 64) -> jax.Array:
+    """Fused SDPA; matches :func:`ref.attention_ref`. Differentiable.
+
+    Args:
+      q, k, v: ``(B, H, S, Dh)`` per-head tensors.
+    Returns:
+      ``(B, H, S, Dh)``.
+    """
+    bsz, heads, s, dh = q.shape
+    assert k.shape == q.shape and v.shape == q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    bh = bsz * heads
+    out = _make_attention(scale, block_bh)(
+        q.reshape(bh, s, dh), k.reshape(bh, s, dh), v.reshape(bh, s, dh)
+    )
+    return out.reshape(bsz, heads, s, dh)

@@ -1,0 +1,272 @@
+"""Fused linear layer as a Pallas kernel: ``act(x @ w + b)``.
+
+This is the dominant compute of every estimator variant (FF layers, the
+GRU head, Transformer MLP/projections), so it is the L1 hot-spot. The
+kernel tiles ``(M, K) x (K, N)`` over a ``(M/bm, N/bn)`` grid with the
+full ``K`` reduction resident per program instance, fusing the bias add
+and activation into the same VMEM residency — the TPU analogue of a CUDA
+shared-memory tile kernel with a fused epilogue (DESIGN.md
+§Hardware-Adaptation).
+
+Autodiff: interpret-mode ``pallas_call`` has no built-in VJP, so the
+public entry points carry ``jax.custom_vjp`` rules (the FlashAttention
+pattern). The forward kernel additionally emits the pre-activation so the
+backward pass never re-runs the matmul; the three backward matmuls
+(``dz @ wᵀ``, ``xᵀ @ dz`` and the LayerNorm reductions) reuse the same
+tiled kernel with ``activation="none"``.
+
+``interpret=True`` everywhere: CPU PJRT cannot run Mosaic custom-calls;
+the interpret lowering emits plain HLO that the rust runtime executes.
+
+TPU sizing notes (for §Perf estimates, not enforced on CPU):
+  * default tiles bm=128, bn=128 match the MXU systolic array;
+  * VMEM per instance = bm*K + K*bn + 2*bm*bn + bn floats; at the largest
+    model shape here (K=192) ≈ 82k f32 ≈ 328 KiB — far under the
+    ~16 MiB/core VMEM budget, so the schedule is single-pass with no
+    K-splitting.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTIVATIONS = ("none", "relu", "tanh", "gelu")
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _apply_act(z: jax.Array, activation: str) -> jax.Array:
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    if activation == "gelu":
+        return jax.nn.gelu(z)
+    return z
+
+
+def _act_grad(z: jax.Array, y: jax.Array, activation: str) -> jax.Array:
+    """d act(z) / dz, using the saved pre-activation ``z`` (and ``y=act(z)``)."""
+    if activation == "relu":
+        return jnp.where(z > 0.0, 1.0, 0.0)
+    if activation == "tanh":
+        return 1.0 - jnp.square(y)
+    if activation == "gelu":
+        # d/dz [z * Φ(z)] with the tanh approximation jax.nn.gelu uses.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        t = jnp.tanh(c * (z + 0.044715 * z**3))
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * z**2)
+    return jnp.ones_like(z)
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, y_ref, z_ref, *, activation: str):
+    """One ``(bm, bn)`` output tile: full-K matmul + bias + activation.
+
+    Emits both ``y = act(z)`` and the pre-activation ``z`` (backward reuse).
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = acc + b_ref[...][None, :]
+    z_ref[...] = z.astype(z_ref.dtype)
+    y_ref[...] = _apply_act(z, activation).astype(y_ref.dtype)
+
+
+def _linear_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str,
+    block_m: int,
+    block_n: int,
+):
+    """Raw tiled pallas call; returns ``(y, z)`` both ``(M, N)``."""
+    m, k = x.shape
+    _, n = w.shape
+    # Shrink tiles to the problem, then pad the problem to the tiles so the
+    # grid divides exactly. Padding contributes zeros to the reduction and
+    # is sliced off the outputs.
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+
+    y, z = pl.pallas_call(
+        functools.partial(_linear_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        ],
+        interpret=True,
+    )(xp, wp, bp)
+    return y[:m, :n], z[:m, :n]
+
+
+def _matmul(a: jax.Array, bmat: jax.Array) -> jax.Array:
+    """Plain tiled matmul through the same pallas kernel (backward reuse)."""
+    zero = jnp.zeros((bmat.shape[1],), a.dtype)
+    y, _ = _linear_pallas(a, bmat, zero, "none", 128, 128)
+    return y
+
+
+@functools.lru_cache(maxsize=None)
+def _make_linear(activation: str, block_m: int, block_n: int):
+    @jax.custom_vjp
+    def linear(x, w, b):
+        y, _ = _linear_pallas(x, w, b, activation, block_m, block_n)
+        return y
+
+    def fwd(x, w, b):
+        y, z = _linear_pallas(x, w, b, activation, block_m, block_n)
+        return y, (x, w, z, y)
+
+    def bwd(res, dy):
+        x, w, z, y = res
+        dz = dy * _act_grad(z, y, activation)
+        dx = _matmul(dz, w.T)
+        dw = _matmul(x.T, dz)
+        db = jnp.sum(dz, axis=0)
+        return dx, dw, db
+
+    linear.defvjp(fwd, bwd)
+    return linear
+
+
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "none",
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jax.Array:
+    """``act(x @ w + b)`` with Pallas tiling; matches :func:`ref.linear_ref`.
+
+    Differentiable (custom VJP; backward matmuls reuse the tiled kernel).
+
+    Args:
+      x: ``(M, K)``.
+      w: ``(K, N)``.
+      b: ``(N,)``.
+      activation: ``"none" | "relu" | "tanh" | "gelu"``.
+      block_m / block_n: output tile shape (MXU-aligned by default).
+    Returns:
+      ``(M, N)`` in ``x.dtype``.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+    return _make_linear(activation, block_m, block_n)(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, y_ref, xhat_ref, rstd_ref, *, eps: float):
+    """Row-tile LayerNorm: mean/var/scale fused in one VMEM pass.
+
+    Also emits the normalized input and reciprocal std for the backward.
+    """
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mu) * rstd
+    xhat_ref[...] = xhat.astype(xhat_ref.dtype)
+    rstd_ref[...] = rstd[:, 0].astype(rstd_ref.dtype)
+    y_ref[...] = (xhat * g_ref[...][None, :] + b_ref[...][None, :]).astype(y_ref.dtype)
+
+
+def _layernorm_pallas(x, g, b, eps: float, block_m: int):
+    m, d = x.shape
+    bm = min(block_m, _ceil_to(m, 8))
+    mp = _ceil_to(m, bm)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    y, xhat, rstd = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, d), x.dtype),
+            jax.ShapeDtypeStruct((mp, d), x.dtype),
+            jax.ShapeDtypeStruct((mp,), x.dtype),
+        ],
+        interpret=True,
+    )(xp, g, b)
+    return y[:m], xhat[:m], rstd[:m]
+
+
+@functools.lru_cache(maxsize=None)
+def _make_layernorm(eps: float, block_m: int):
+    @jax.custom_vjp
+    def ln(x, g, b):
+        y, _, _ = _layernorm_pallas(x, g, b, eps, block_m)
+        return y
+
+    def fwd(x, g, b):
+        y, xhat, rstd = _layernorm_pallas(x, g, b, eps, block_m)
+        return y, (xhat, rstd, g)
+
+    def bwd(res, dy):
+        xhat, rstd, g = res
+        d = xhat.shape[-1]
+        dg = jnp.sum(dy * xhat, axis=0)
+        db = jnp.sum(dy, axis=0)
+        dxhat = dy * g[None, :]
+        # standard LN backward: dx = rstd * (dxhat - mean(dxhat) - xhat*mean(dxhat*xhat))
+        dx = rstd[:, None] * (
+            dxhat
+            - jnp.mean(dxhat, axis=-1, keepdims=True)
+            - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+        )
+        del d
+        return dx, dg, db
+
+    ln.defvjp(fwd, bwd)
+    return ln
+
+
+def layernorm(
+    x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5, block_m: int = 128
+) -> jax.Array:
+    """LayerNorm over the last axis; matches :func:`ref.layernorm_ref`.
+
+    Differentiable (custom VJP).
+
+    Args:
+      x: ``(M, D)``.
+      g, b: ``(D,)`` scale and shift.
+    """
+    m, d = x.shape
+    assert g.shape == (d,) and b.shape == (d,), (x.shape, g.shape, b.shape)
+    return _make_layernorm(eps, block_m)(x, g, b)

@@ -1,0 +1,133 @@
+"""Fused GRU cell as a Pallas kernel.
+
+The RNN estimator variant (paper §3.1) runs a GRU over the field-group
+token sequence of the P1/P2 inputs. The per-step compute — two
+``(B, ·) x (·, 3H)`` matmuls plus the gate nonlinearities — is fused into
+a single kernel so the ``(B, 3H)`` gate tiles never leave VMEM between
+the matmuls and the sigmoid/tanh epilogue. On real TPU this is one MXU
+pass per projection with the elementwise gates on the VPU; here it runs
+``interpret=True`` (see fused_linear.py).
+
+Autodiff: ``jax.custom_vjp``. The forward kernel stashes the gate
+activations ``(r, z, n, nh)`` so the backward pass is pure elementwise
+algebra plus four matmuls, which reuse the tiled pallas matmul from
+:mod:`fused_linear`.
+
+Gate layout along the ``3H`` axis is ``[r, z, n]``, matching
+:func:`ref.gru_cell_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import _ceil_to, _matmul
+
+
+def _gru_kernel(x_ref, h_ref, w_ref, u_ref, b_ref, o_ref, r_ref, z_ref, n_ref, nh_ref, *, hidden: int):
+    x = x_ref[...]
+    h = h_ref[...]
+    gx = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...][None, :]
+    gh = jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32)
+    rx, zx, nx = gx[:, :hidden], gx[:, hidden : 2 * hidden], gx[:, 2 * hidden :]
+    rh, zh, nh = gh[:, :hidden], gh[:, hidden : 2 * hidden], gh[:, 2 * hidden :]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    o_ref[...] = ((1.0 - z) * h + z * n).astype(o_ref.dtype)
+    r_ref[...] = r.astype(r_ref.dtype)
+    z_ref[...] = z.astype(z_ref.dtype)
+    n_ref[...] = n.astype(n_ref.dtype)
+    nh_ref[...] = nh.astype(nh_ref.dtype)
+
+
+def _gru_pallas(x, h, w, u, b, block_b: int):
+    bsz, d = x.shape
+    hdim = h.shape[-1]
+    bb = min(block_b, _ceil_to(bsz, 8))
+    bp = _ceil_to(bsz, bb)
+    xp = jnp.pad(x, ((0, bp - bsz), (0, 0))) if bp != bsz else x
+    hp = jnp.pad(h, ((0, bp - bsz), (0, 0))) if bp != bsz else h
+
+    spec_bh = pl.BlockSpec((bb, hdim), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_gru_kernel, hidden=hdim),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            spec_bh,
+            pl.BlockSpec((d, 3 * hdim), lambda i: (0, 0)),
+            pl.BlockSpec((hdim, 3 * hdim), lambda i: (0, 0)),
+            pl.BlockSpec((3 * hdim,), lambda i: (0,)),
+        ],
+        out_specs=[spec_bh] * 5,
+        out_shape=[jax.ShapeDtypeStruct((bp, hdim), x.dtype)] * 5,
+        interpret=True,
+    )(xp, hp, w, u, b)
+    return tuple(o[:bsz] for o in outs)  # (h', r, z, n, nh)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_gru(block_b: int):
+    @jax.custom_vjp
+    def cell(x, h, w, u, b):
+        return _gru_pallas(x, h, w, u, b, block_b)[0]
+
+    def fwd(x, h, w, u, b):
+        hn, r, z, n, nh = _gru_pallas(x, h, w, u, b, block_b)
+        return hn, (x, h, w, u, r, z, n, nh)
+
+    def bwd(res, dhn):
+        x, h, w, u, r, z, n, nh = res
+        # h' = (1-z)*h + z*n,  n = tanh(nx + r*nh),  r/z = sigmoid(pre)
+        dz = dhn * (n - h)
+        dn = dhn * z
+        dh = dhn * (1.0 - z)
+        dn_pre = dn * (1.0 - jnp.square(n))
+        dr = dn_pre * nh
+        dnh = dn_pre * r
+        dz_pre = dz * z * (1.0 - z)
+        dr_pre = dr * r * (1.0 - r)
+        dgx = jnp.concatenate([dr_pre, dz_pre, dn_pre], axis=-1)  # (B, 3H)
+        dgh = jnp.concatenate([dr_pre, dz_pre, dnh], axis=-1)
+        dx = _matmul(dgx, w.T)
+        dw = _matmul(x.T, dgx)
+        db = jnp.sum(dgx, axis=0)
+        dh = dh + _matmul(dgh, u.T)
+        du = _matmul(h.T, dgh)
+        return dx, dh, dw, du, db
+
+    cell.defvjp(fwd, bwd)
+    return cell
+
+
+def gru_cell(
+    x: jax.Array,
+    h: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    block_b: int = 128,
+) -> jax.Array:
+    """One fused GRU step; matches :func:`ref.gru_cell_ref`. Differentiable.
+
+    Args:
+      x: ``(B, D)`` step input.
+      h: ``(B, H)`` previous hidden state.
+      w: ``(D, 3H)`` input projection.
+      u: ``(H, 3H)`` recurrent projection.
+      b: ``(3H,)`` bias.
+    Returns:
+      ``(B, H)`` next hidden state.
+    """
+    bsz, d = x.shape
+    hdim = h.shape[-1]
+    assert h.shape == (bsz, hdim)
+    assert w.shape == (d, 3 * hdim), (w.shape, d, hdim)
+    assert u.shape == (hdim, 3 * hdim), (u.shape, hdim)
+    assert b.shape == (3 * hdim,), (b.shape, hdim)
+    return _make_gru(block_b)(x, h, w, u, b)

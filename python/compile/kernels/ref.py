@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only. The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated
+shape/dtype sweeps — this file is the correctness ground truth for the
+whole compiled stack (the L2 models call the kernels, never the refs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "none") -> jax.Array:
+    """``act(x @ w + b)`` — oracle for :func:`fused_linear.fused_linear`.
+
+    Args:
+      x: ``(M, K)`` input.
+      w: ``(K, N)`` weight.
+      b: ``(N,)`` bias.
+      activation: one of ``"none" | "relu" | "tanh" | "gelu"``.
+    """
+    y = jnp.dot(x, w) + b[None, :]
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def gru_cell_ref(
+    x: jax.Array, h: jax.Array, w: jax.Array, u: jax.Array, b: jax.Array
+) -> jax.Array:
+    """One GRU step — oracle for :func:`gru_cell.gru_cell`.
+
+    Gate layout along the last axis of ``w``/``u``/``b`` is ``[r, z, n]``
+    (reset, update, candidate), matching the fused kernel.
+
+    Args:
+      x: ``(B, D)`` input at this step.
+      h: ``(B, H)`` previous hidden state.
+      w: ``(D, 3H)`` input projection.
+      u: ``(H, 3H)`` recurrent projection.
+      b: ``(3H,)`` bias.
+    Returns:
+      ``(B, H)`` next hidden state.
+    """
+    gx = jnp.dot(x, w) + b[None, :]
+    gh = jnp.dot(h, u)
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return (1.0 - z) * h + z * n
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled-dot-product attention — oracle for :func:`attention.attention`.
+
+    Args:
+      q, k, v: ``(B, H, S, Dh)`` per-head tensors.
+    Returns:
+      ``(B, H, S, Dh)``.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def layernorm_ref(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis — oracle for :func:`fused_linear.layernorm`."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b

@@ -1,0 +1,340 @@
+"""L2 — the GOGH estimator networks (P1 and P2) in JAX.
+
+The paper (§3.1) evaluates three capacity-matched architectures for both
+the initial-estimation network P1 (Eq. 1) and the refinement network P2
+(Eq. 3): Feedforward (FF), Recurrent (RNN — a GRU here), and Transformer.
+This module defines parameter init, forward pass, MSE/MAE loss, and a
+full Adam training step for every (net × arch) pair. All dense algebra
+goes through the L1 Pallas kernels (:mod:`compile.kernels`) so that the
+AOT-lowered HLO contains the kernels' tiled schedules.
+
+I/O contract (shared with the rust runtime via ``artifacts/manifest.json``):
+
+* P1 input  (B, 32): ``Ψ_j2(8) ‖ Ψ_j3(8) ‖ a(6) ‖ T_{a,j2} ‖ T_{a,j3} ‖
+  Ψ_j1(8)`` → output (B, 2) = ``(T̃_{a,j1}, T̃_{a,j3})``.
+* P2 input  (B, 40; 34 used, zero-padded): ``Ψ_j1(8) ‖ Ψ_j2(8) ‖ a1(6) ‖
+  a2(6) ‖ T̃_{a1,j1} ‖ T̃_{a1,j2} ‖ T_{a1,j1} ‖ T_{a1,j2} ‖ T̃_{a2,j1} ‖
+  T̃_{a2,j2} ‖ 0⁶`` → output (B, 2) = ``(T̃ⁱ_{a2,j1}, T̃ⁱ_{a2,j2})``.
+
+The RNN and Transformer variants view the input as ``T`` tokens of
+``TOKEN_DIM = 8`` features (4 tokens for P1, 5 for P2) — the field groups
+of the paper's tuples; FF flattens. Throughputs are pre-normalized to
+``[0, 1]`` by the rust side (global scale in the manifest).
+
+Everything here is build-time only: ``aot.py`` lowers ``init`` / ``fwd``
+/ ``train_step`` once to HLO text and the rust runtime drives training
+and inference through PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, fused_linear, gru_cell, layernorm
+
+# ---------------------------------------------------------------------------
+# Dimensions
+# ---------------------------------------------------------------------------
+
+TOKEN_DIM = 8
+OUT_DIM = 2
+
+#: net name -> (raw input dim, padded input dim, token count)
+NETS: Dict[str, Tuple[int, int, int]] = {
+    "p1": (32, 32, 4),
+    "p2": (34, 40, 5),
+}
+
+ARCHS = ("ff", "rnn", "transformer")
+
+# Capacity-matched sizes (≈20k params each; paper §3.1 requires
+# "comparable numbers of layers, hidden units, and training configs").
+FF_HIDDEN = (96, 96, 48)
+RNN_EMBED = 48
+RNN_HIDDEN = 64
+TF_DMODEL = 48
+TF_HEADS = 4
+TF_MLP = 128
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+DEFAULT_LR = 1e-3
+
+Params = Dict[str, jax.Array]
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+# ---------------------------------------------------------------------------
+# Architectures
+# ---------------------------------------------------------------------------
+
+
+def init_ff(key: jax.Array, in_dim: int) -> Params:
+    dims = (in_dim, *FF_HIDDEN, OUT_DIM)
+    params: Params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        params[f"w{i}"] = _glorot(k, (a, b))
+        params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    return params
+
+
+def apply_ff(params: Params, x: jax.Array) -> jax.Array:
+    n_layers = len(FF_HIDDEN) + 1
+    h = x
+    for i in range(n_layers):
+        act = "relu" if i < n_layers - 1 else "none"
+        h = fused_linear(h, params[f"w{i}"], params[f"b{i}"], act)
+    return h
+
+
+def init_rnn(key: jax.Array, in_dim: int) -> Params:
+    del in_dim  # consumes tokens, not the flat vector
+    ke, kw, ku, kh = jax.random.split(key, 4)
+    return {
+        "embed_w": _glorot(ke, (TOKEN_DIM, RNN_EMBED)),
+        "embed_b": jnp.zeros((RNN_EMBED,), jnp.float32),
+        "gru_w": _glorot(kw, (RNN_EMBED, 3 * RNN_HIDDEN)),
+        "gru_u": _glorot(ku, (RNN_HIDDEN, 3 * RNN_HIDDEN)),
+        "gru_b": jnp.zeros((3 * RNN_HIDDEN,), jnp.float32),
+        "head_w": _glorot(kh, (RNN_HIDDEN, OUT_DIM)),
+        "head_b": jnp.zeros((OUT_DIM,), jnp.float32),
+    }
+
+
+def apply_rnn(params: Params, x: jax.Array) -> jax.Array:
+    bsz, in_dim = x.shape
+    t = in_dim // TOKEN_DIM
+    tokens = x.reshape(bsz, t, TOKEN_DIM)
+    # shared token embedding through the fused kernel
+    emb = fused_linear(
+        tokens.reshape(bsz * t, TOKEN_DIM), params["embed_w"], params["embed_b"], "tanh"
+    )
+    emb = emb.reshape(bsz, t, RNN_EMBED)
+
+    def step(h, xt):
+        hn = gru_cell(xt, h, params["gru_w"], params["gru_u"], params["gru_b"])
+        return hn, None
+
+    h0 = jnp.zeros((bsz, RNN_HIDDEN), jnp.float32)
+    hT, _ = jax.lax.scan(step, h0, jnp.transpose(emb, (1, 0, 2)))
+    return fused_linear(hT, params["head_w"], params["head_b"], "none")
+
+
+def init_transformer(key: jax.Array, in_dim: int) -> Params:
+    t = in_dim // TOKEN_DIM
+    keys = jax.random.split(key, 8)
+    d = TF_DMODEL
+    return {
+        "embed_w": _glorot(keys[0], (TOKEN_DIM, d)),
+        "embed_b": jnp.zeros((d,), jnp.float32),
+        "pos": jax.random.normal(keys[1], (t, d), jnp.float32) * 0.02,
+        "wqkv": _glorot(keys[2], (d, 3 * d)),
+        "bqkv": jnp.zeros((3 * d,), jnp.float32),
+        "wo": _glorot(keys[3], (d, d)),
+        "bo": jnp.zeros((d,), jnp.float32),
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "mlp_w1": _glorot(keys[4], (d, TF_MLP)),
+        "mlp_b1": jnp.zeros((TF_MLP,), jnp.float32),
+        "mlp_w2": _glorot(keys[5], (TF_MLP, d)),
+        "mlp_b2": jnp.zeros((d,), jnp.float32),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+        "head_w": _glorot(keys[6], (d, OUT_DIM)),
+        "head_b": jnp.zeros((OUT_DIM,), jnp.float32),
+    }
+
+
+def apply_transformer(params: Params, x: jax.Array) -> jax.Array:
+    bsz, in_dim = x.shape
+    t = in_dim // TOKEN_DIM
+    d, nh = TF_DMODEL, TF_HEADS
+    dh = d // nh
+
+    tokens = x.reshape(bsz * t, TOKEN_DIM)
+    h = fused_linear(tokens, params["embed_w"], params["embed_b"], "none").reshape(bsz, t, d)
+    h = h + params["pos"][None, :, :]
+
+    # --- pre-LN multi-head self-attention block
+    hn = layernorm(h.reshape(bsz * t, d), params["ln1_g"], params["ln1_b"]).reshape(bsz, t, d)
+    qkv = fused_linear(hn.reshape(bsz * t, d), params["wqkv"], params["bqkv"], "none")
+    qkv = qkv.reshape(bsz, t, 3, nh, dh).transpose(2, 0, 3, 1, 4)  # (3, B, H, T, Dh)
+    att = attention(qkv[0], qkv[1], qkv[2])  # (B, H, T, Dh)
+    att = att.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+    h = h + fused_linear(att, params["wo"], params["bo"], "none").reshape(bsz, t, d)
+
+    # --- pre-LN MLP block
+    hn = layernorm(h.reshape(bsz * t, d), params["ln2_g"], params["ln2_b"])
+    m = fused_linear(hn, params["mlp_w1"], params["mlp_b1"], "gelu")
+    m = fused_linear(m, params["mlp_w2"], params["mlp_b2"], "none")
+    h = h + m.reshape(bsz, t, d)
+
+    # --- final LN, mean pool, head
+    hf = layernorm(h.reshape(bsz * t, d), params["lnf_g"], params["lnf_b"]).reshape(bsz, t, d)
+    pooled = jnp.mean(hf, axis=1)
+    return fused_linear(pooled, params["head_w"], params["head_b"], "none")
+
+
+_INIT = {"ff": init_ff, "rnn": init_rnn, "transformer": init_transformer}
+_APPLY = {"ff": apply_ff, "rnn": apply_rnn, "transformer": apply_transformer}
+
+
+def init_params(net: str, arch: str, seed: int = 0) -> Params:
+    """Seeded parameter init for network ``net`` in architecture ``arch``."""
+    _, padded, _ = NETS[net]
+    # stable across processes (no PYTHONHASHSEED dependence)
+    tag = sum(ord(c) * 31**i for i, c in enumerate(f"{net}/{arch}")) % (2**31)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), tag)
+    return _INIT[arch](key, padded)
+
+
+def apply(params: Params, x: jax.Array, arch: str) -> jax.Array:
+    """Forward pass: ``(B, padded_in) -> (B, 2)`` throughput estimates."""
+    return _APPLY[arch](params, x)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for p in params.values())
+
+
+# ---------------------------------------------------------------------------
+# Loss + Adam train step
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: Params, x: jax.Array, y: jax.Array, arch: str):
+    """MSE loss (paper's training loss) + MAE (paper's reported metric)."""
+    pred = apply(params, x, arch)
+    err = pred - y
+    return jnp.mean(jnp.square(err)), jnp.mean(jnp.abs(err))
+
+
+def init_opt_state(params: Params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    m = {f"m_{k}": z for k, z in zeros.items()}
+    v = {f"v_{k}": z for k, z in zeros.items()}
+    return m, v, jnp.zeros((), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("arch", "lr"))
+def train_step(
+    params: Params,
+    m: Params,
+    v: Params,
+    step: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    arch: str,
+    lr: float = DEFAULT_LR,
+):
+    """One Adam step; returns updated (params, m, v, step, loss, mae)."""
+    (loss, mae), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, y, arch)
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = ADAM_B1 * m[f"m_{k}"] + (1.0 - ADAM_B1) * g
+        vk = ADAM_B2 * v[f"v_{k}"] + (1.0 - ADAM_B2) * jnp.square(g)
+        new_m[f"m_{k}"] = mk
+        new_v[f"v_{k}"] = vk
+        new_params[k] = params[k] - lr * (mk / bc1) / (jnp.sqrt(vk / bc2) + ADAM_EPS)
+    return new_params, new_m, new_v, t, loss, mae
+
+
+# ---------------------------------------------------------------------------
+# Flat-state view (the rust runtime's contract)
+# ---------------------------------------------------------------------------
+
+
+def state_entries(net: str, arch: str):
+    """Deterministic (name, shape) list for the flattened runtime state.
+
+    Order: params (sorted by name), then m_*, then v_*, then the scalar
+    Adam step counter. The rust runtime treats this as an opaque buffer
+    list; the manifest records names/shapes for debugging and checks.
+    """
+    params = init_params(net, arch)
+    names = sorted(params)
+    entries = [(n, tuple(params[n].shape)) for n in names]
+    entries += [(f"m_{n}", tuple(params[n].shape)) for n in names]
+    entries += [(f"v_{n}", tuple(params[n].shape)) for n in names]
+    entries.append(("adam_step", ()))
+    return entries
+
+
+def pack_state(params: Params, m: Params, v: Params, step: jax.Array):
+    names = sorted(params)
+    flat = [params[n] for n in names]
+    flat += [m[f"m_{n}"] for n in names]
+    flat += [v[f"v_{n}"] for n in names]
+    flat.append(step)
+    return tuple(flat)
+
+
+def unpack_state(flat, net: str, arch: str):
+    names = sorted(init_params(net, arch))
+    k = len(names)
+    params = dict(zip(names, flat[:k]))
+    m = {f"m_{n}": t for n, t in zip(names, flat[k : 2 * k])}
+    v = {f"v_{n}": t for n, t in zip(names, flat[2 * k : 3 * k])}
+    step = flat[3 * k]
+    return params, m, v, step
+
+
+# The three AOT entry points, defined over flat state ----------------------
+
+
+def make_init_fn(net: str, arch: str, seed: int = 0):
+    def init_fn():
+        params = init_params(net, arch, seed)
+        m, v, step = init_opt_state(params)
+        return pack_state(params, m, v, step)
+
+    return init_fn
+
+
+def n_params(net: str, arch: str) -> int:
+    """Number of parameter tensors (first entries of the flat state)."""
+    return len(init_params(net, arch))
+
+
+def make_fwd_fn(net: str, arch: str):
+    """fwd takes ONLY the parameter tensors (not Adam state): the m/v/step
+    tensors are unused in inference and StableHLO→HLO conversion prunes
+    unused entry parameters, which would break the runtime's input arity.
+    """
+
+    def fwd_fn(*args):
+        *params_flat, x = args
+        names = sorted(init_params(net, arch))
+        params = dict(zip(names, params_flat))
+        return (apply(params, x, arch),)
+
+    return fwd_fn
+
+
+def make_train_fn(net: str, arch: str, lr: float = DEFAULT_LR):
+    def train_fn(*args):
+        *flat, x, y = args
+        params, m, v, step = unpack_state(flat, net, arch)
+        new_params, new_m, new_v, new_step, loss, mae = train_step(
+            params, m, v, step, x, y, arch, lr
+        )
+        return (*pack_state(new_params, new_m, new_v, new_step), loss, mae)
+
+    return train_fn

@@ -1,0 +1,57 @@
+"""pytest: AOT lowering round-trip — HLO text artifacts + manifest.
+
+Lowers one representative model end-to-end through ``aot.lower_model``
+and validates the artifact contract the rust runtime assumes: HLO text
+parses (non-empty, ENTRY present), manifest shapes match
+``model.state_entries``, and the fixed batch dims are recorded.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entry = aot.lower_model("p1", "ff", out, lr=1e-3)
+    return out, entry
+
+
+def test_hlo_files_exist_and_parse_shape(lowered):
+    out, entry = lowered
+    for kind in ("init", "fwd", "train"):
+        text = (out / entry["files"][kind]).read_text()
+        assert "ENTRY" in text and "HloModule" in text
+        assert len(text) > 1000
+
+
+def test_manifest_entry_matches_model(lowered):
+    _, entry = lowered
+    entries = model.state_entries("p1", "ff")
+    assert [e["name"] for e in entry["state"]] == [n for n, _ in entries]
+    assert [tuple(e["shape"]) for e in entry["state"]] == [s for _, s in entries]
+    assert entry["input_dim"] == 32
+    assert entry["padded_dim"] == 32
+    assert entry["train_batch"] == aot.TRAIN_BATCH
+    assert entry["param_count"] == model.param_count(model.init_params("p1", "ff"))
+
+
+def test_train_hlo_io_arity(lowered):
+    """train HLO: |state| + 2 inputs (state, x, y) in the ENTRY block."""
+    out, entry = lowered
+    text = (out / entry["files"]["train"]).read_text()
+    n_state = len(entry["state"])
+    # count parameter(...) instructions inside the ENTRY computation
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    n_inputs = 0
+    for l in lines[start + 1 :]:
+        if l.startswith("}"):
+            break
+        if " parameter(" in l:
+            n_inputs += 1
+    assert n_inputs == n_state + 2, (n_inputs, n_state)

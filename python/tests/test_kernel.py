@@ -1,0 +1,259 @@
+"""pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+hypothesis sweeps shapes/dtypes/activations; every kernel is checked for
+forward agreement AND custom-VJP agreement against ``jax.grad`` of the
+oracle. These properties are what make the AOT-compiled HLO trustworthy:
+the L2 models call the kernels, never the refs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from compile.kernels import attention, fused_linear, gru_cell, layernorm, ref
+
+jax.config.update("jax_enable_x64", False)
+
+SET = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5)}
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 96),
+    n=st.integers(1, 130),
+    act=st.sampled_from(["none", "relu", "tanh", "gelu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    kx, kw, kb = _keys(seed, 3)
+    x = _rand(kx, (m, k), jnp.float32)
+    w = _rand(kw, (k, n), jnp.float32, 0.3)
+    b = _rand(kb, (n,), jnp.float32)
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, act), ref.linear_ref(x, w, b, act), **TOL[jnp.float32]
+    )
+
+
+@SET
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 48),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu", "tanh", "gelu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_linear_grads_match_ref(m, k, n, act, seed):
+    kx, kw, kb, kc = _keys(seed, 4)
+    x = _rand(kx, (m, k), jnp.float32)
+    w = _rand(kw, (k, n), jnp.float32, 0.3)
+    b = _rand(kb, (n,), jnp.float32)
+    # random cotangent-weighted scalar so every output element matters
+    c = _rand(kc, (m, n), jnp.float32)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) * c)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.linear_ref(x, w, b, act) * c)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, bgrad in zip(gk, gr):
+        np.testing.assert_allclose(a, bgrad, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_rejects_unknown_activation():
+    x = jnp.zeros((2, 3))
+    with pytest.raises(ValueError):
+        fused_linear(x, jnp.zeros((3, 4)), jnp.zeros((4,)), "swish")
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 128), (128, 16), (128, 128)])
+def test_fused_linear_block_shape_invariance(bm, bn):
+    """Tiling must never change the numbers — pure schedule choice."""
+    kx, kw, kb = _keys(7, 3)
+    x = _rand(kx, (57, 33), jnp.float32)
+    w = _rand(kw, (33, 41), jnp.float32, 0.3)
+    b = _rand(kb, (41,), jnp.float32)
+    base = ref.linear_ref(x, w, b, "relu")
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, "relu", block_m=bm, block_n=bn), base, **TOL[jnp.float32]
+    )
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(m=st.integers(1, 130), d=st.integers(2, 96), seed=st.integers(0, 2**16))
+def test_layernorm_matches_ref(m, d, seed):
+    kx, kg, kb = _keys(seed, 3)
+    x = _rand(kx, (m, d), jnp.float32, 2.0)
+    g = _rand(kg, (d,), jnp.float32)
+    b = _rand(kb, (d,), jnp.float32)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=5e-5, atol=5e-5
+    )
+
+
+@SET
+@given(m=st.integers(1, 40), d=st.integers(2, 48), seed=st.integers(0, 2**16))
+def test_layernorm_grads_match_ref(m, d, seed):
+    kx, kg, kb, kc = _keys(seed, 4)
+    x = _rand(kx, (m, d), jnp.float32, 2.0)
+    g = _rand(kg, (d,), jnp.float32)
+    b = _rand(kb, (d,), jnp.float32)
+    c = _rand(kc, (m, d), jnp.float32)
+    gk = jax.grad(lambda *a: jnp.sum(layernorm(*a) * c), argnums=(0, 1, 2))(x, g, b)
+    gr = jax.grad(lambda *a: jnp.sum(ref.layernorm_ref(*a) * c), argnums=(0, 1, 2))(x, g, b)
+    for a, bgrad in zip(gk, gr):
+        np.testing.assert_allclose(a, bgrad, rtol=2e-4, atol=2e-4)
+
+
+def test_layernorm_normalizes():
+    """With unit gain / zero shift the output rows are ~standardized."""
+    x = _rand(jax.random.PRNGKey(3), (16, 64), jnp.float32, 5.0)
+    y = layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(y, axis=-1), np.zeros(16), atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, axis=-1), np.ones(16), atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# gru_cell
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    bsz=st.integers(1, 130),
+    d=st.integers(1, 32),
+    h=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_gru_cell_matches_ref(bsz, d, h, seed):
+    kx, kh, kw, ku, kb = _keys(seed, 5)
+    x = _rand(kx, (bsz, d), jnp.float32)
+    hs = _rand(kh, (bsz, h), jnp.float32)
+    w = _rand(kw, (d, 3 * h), jnp.float32, 0.3)
+    u = _rand(ku, (h, 3 * h), jnp.float32, 0.3)
+    b = _rand(kb, (3 * h,), jnp.float32, 0.1)
+    np.testing.assert_allclose(
+        gru_cell(x, hs, w, u, b), ref.gru_cell_ref(x, hs, w, u, b), rtol=3e-5, atol=3e-5
+    )
+
+
+@SET
+@given(bsz=st.integers(1, 33), d=st.integers(1, 16), h=st.integers(1, 24), seed=st.integers(0, 2**16))
+def test_gru_cell_grads_match_ref(bsz, d, h, seed):
+    kx, kh, kw, ku, kb, kc = _keys(seed, 6)
+    x = _rand(kx, (bsz, d), jnp.float32)
+    hs = _rand(kh, (bsz, h), jnp.float32)
+    w = _rand(kw, (d, 3 * h), jnp.float32, 0.3)
+    u = _rand(ku, (h, 3 * h), jnp.float32, 0.3)
+    b = _rand(kb, (3 * h,), jnp.float32, 0.1)
+    c = _rand(kc, (bsz, h), jnp.float32)
+    gk = jax.grad(lambda *a: jnp.sum(gru_cell(*a) * c), argnums=tuple(range(5)))(x, hs, w, u, b)
+    gr = jax.grad(lambda *a: jnp.sum(ref.gru_cell_ref(*a) * c), argnums=tuple(range(5)))(
+        x, hs, w, u, b
+    )
+    for a, bgrad in zip(gk, gr):
+        np.testing.assert_allclose(a, bgrad, rtol=2e-4, atol=2e-4)
+
+
+def test_gru_cell_fixed_point_of_zero_update():
+    """If the update gate saturates to 0 (huge negative z-bias), h' == h."""
+    bsz, d, h = 4, 8, 8
+    kx, kh = _keys(11, 2)
+    x = _rand(kx, (bsz, d), jnp.float32)
+    hs = _rand(kh, (bsz, h), jnp.float32)
+    w = jnp.zeros((d, 3 * h))
+    u = jnp.zeros((h, 3 * h))
+    b = jnp.zeros((3 * h,)).at[h : 2 * h].set(-30.0)  # z ≈ 0
+    np.testing.assert_allclose(gru_cell(x, hs, w, u, b), hs, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    bsz=st.integers(1, 40),
+    heads=st.integers(1, 4),
+    s=st.integers(1, 8),
+    dh=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(bsz, heads, s, dh, seed):
+    kq, kk, kv = _keys(seed, 3)
+    q = _rand(kq, (bsz, heads, s, dh), jnp.float32)
+    k = _rand(kk, (bsz, heads, s, dh), jnp.float32)
+    v = _rand(kv, (bsz, heads, s, dh), jnp.float32)
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), rtol=3e-5, atol=3e-5
+    )
+
+
+@SET
+@given(
+    bsz=st.integers(1, 12),
+    heads=st.integers(1, 3),
+    s=st.integers(1, 6),
+    dh=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_grads_match_ref(bsz, heads, s, dh, seed):
+    kq, kk, kv, kc = _keys(seed, 4)
+    q = _rand(kq, (bsz, heads, s, dh), jnp.float32)
+    k = _rand(kk, (bsz, heads, s, dh), jnp.float32)
+    v = _rand(kv, (bsz, heads, s, dh), jnp.float32)
+    c = _rand(kc, (bsz, heads, s, dh), jnp.float32)
+    gk = jax.grad(lambda *a: jnp.sum(attention(*a) * c), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: jnp.sum(ref.attention_ref(*a) * c), argnums=(0, 1, 2))(q, k, v)
+    for a, bgrad in zip(gk, gr):
+        np.testing.assert_allclose(a, bgrad, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_uniform_when_scores_equal():
+    """Identical keys ⇒ uniform probabilities ⇒ output = mean of values."""
+    bsz, heads, s, dh = 2, 2, 5, 8
+    q = _rand(jax.random.PRNGKey(0), (bsz, heads, s, dh), jnp.float32)
+    k = jnp.ones((bsz, heads, s, dh))
+    v = _rand(jax.random.PRNGKey(1), (bsz, heads, s, dh), jnp.float32)
+    expect = jnp.broadcast_to(jnp.mean(v, axis=2, keepdims=True), v.shape)
+    np.testing.assert_allclose(attention(q, k, v), expect, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_softmax_stability_large_scores():
+    """Max-subtraction keeps huge logits finite."""
+    q = jnp.full((1, 1, 4, 8), 100.0)
+    k = jnp.full((1, 1, 4, 8), 100.0)
+    v = _rand(jax.random.PRNGKey(2), (1, 1, 4, 8), jnp.float32)
+    out = attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))

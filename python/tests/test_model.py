@@ -1,0 +1,121 @@
+"""pytest: L2 estimator models — shapes, determinism, training descent,
+and the flat-state contract the rust runtime depends on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+ALL = [(net, arch) for net in model.NETS for arch in model.ARCHS]
+
+
+def _batch(net, n=32, seed=0):
+    _, pad, _ = model.NETS[net]
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, pad))
+    # targets in [0,1] like normalized throughputs
+    y = jax.random.uniform(ky, (n, model.OUT_DIM))
+    return x, y
+
+
+@pytest.mark.parametrize("net,arch", ALL)
+def test_forward_shape(net, arch):
+    params = model.init_params(net, arch)
+    x, _ = _batch(net)
+    out = model.apply(params, x, arch)
+    assert out.shape == (32, model.OUT_DIM)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("net,arch", ALL)
+def test_init_deterministic(net, arch):
+    a = model.init_params(net, arch, seed=7)
+    b = model.init_params(net, arch, seed=7)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = model.init_params(net, arch, seed=8)
+    assert any(not np.array_equal(a[k], c[k]) for k in a if a[k].size > 1)
+
+
+def test_archs_capacity_matched():
+    """Paper §3.1: 'similar structural complexity'. Enforce within 40%."""
+    for net in model.NETS:
+        counts = [model.param_count(model.init_params(net, a)) for a in model.ARCHS]
+        assert max(counts) / min(counts) < 1.4, counts
+
+
+@pytest.mark.parametrize("net,arch", ALL)
+def test_train_step_descends(net, arch):
+    params = model.init_params(net, arch)
+    m, v, s = model.init_opt_state(params)
+    x, y = _batch(net, 64)
+    first = None
+    for _ in range(25):
+        params, m, v, s, loss, mae = model.train_step(params, m, v, s, x, y, arch)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.5 * first, (first, float(loss))
+    assert float(s) == 25.0
+    assert float(mae) >= 0.0
+
+
+@pytest.mark.parametrize("net,arch", ALL)
+def test_flat_state_roundtrip(net, arch):
+    """pack_state/unpack_state must be exact inverses in the declared order."""
+    params = model.init_params(net, arch)
+    m, v, s = model.init_opt_state(params)
+    flat = model.pack_state(params, m, v, s)
+    entries = model.state_entries(net, arch)
+    assert len(flat) == len(entries)
+    for t, (name, shape) in zip(flat, entries):
+        assert tuple(t.shape) == shape, name
+    p2, m2, v2, s2 = model.unpack_state(flat, net, arch)
+    for k in params:
+        np.testing.assert_array_equal(params[k], p2[k])
+    np.testing.assert_array_equal(s, s2)
+
+
+@pytest.mark.parametrize("net,arch", ALL)
+def test_aot_entry_points_consistent(net, arch):
+    """init→fwd through the AOT wrappers == direct apply().
+
+    fwd consumes only the parameter tensors (state[:n_params]) — the
+    contract the rust runtime relies on (see make_fwd_fn).
+    """
+    init_fn = model.make_init_fn(net, arch)
+    fwd_fn = model.make_fwd_fn(net, arch)
+    flat = init_fn()
+    k = model.n_params(net, arch)
+    x, _ = _batch(net, 16)
+    (yhat,) = fwd_fn(*flat[:k], x)
+    params = model.init_params(net, arch)
+    np.testing.assert_allclose(yhat, model.apply(params, x, arch), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("net,arch", ALL)
+def test_aot_train_fn_matches_train_step(net, arch):
+    train_fn = model.make_train_fn(net, arch)
+    flat = model.make_init_fn(net, arch)()
+    x, y = _batch(net, model.OUT_DIM and 16)
+    out = train_fn(*flat, x, y)
+    assert len(out) == len(flat) + 2
+    params, m, v, s = model.unpack_state(flat, net, arch)
+    p2, m2, v2, s2, loss, mae = model.train_step(params, m, v, s, x, y, arch)
+    ref_flat = model.pack_state(p2, m2, v2, s2)
+    for a, b in zip(out[: len(flat)], ref_flat):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out[-2], loss, rtol=1e-5)
+    np.testing.assert_allclose(out[-1], mae, rtol=1e-5)
+
+
+def test_batch_size_invariance():
+    """Per-example predictions must not depend on batch composition."""
+    net, arch = "p1", "transformer"
+    params = model.init_params(net, arch)
+    x, _ = _batch(net, 48)
+    full = model.apply(params, x, arch)
+    half = model.apply(params, x[:24], arch)
+    np.testing.assert_allclose(full[:24], half, rtol=1e-5, atol=1e-6)

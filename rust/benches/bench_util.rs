@@ -1,0 +1,72 @@
+// Shared helpers for the experiment benches (included via `include!`;
+// replaces criterion in this offline build — see Cargo.toml).
+
+use std::time::Instant;
+
+/// Train an estimator on `samples` for `steps` Adam steps; returns the
+/// final (loss, mae) pair.
+#[allow(dead_code)]
+pub fn train_estimator(
+    est: &mut gogh::runtime::Estimator,
+    samples: &[gogh::runtime::Sample],
+    steps: usize,
+    seed: u64,
+) -> gogh::Result<(f32, f32)> {
+    let batch = est.spec().train_batch;
+    #[allow(unused_assignments)]
+    let mut last = (f32::NAN, f32::NAN);
+    let mut step = 0;
+    let mut epoch = 0u64;
+    'outer: loop {
+        for (xs, ys) in gogh::runtime::dataset::batches(samples, batch, seed ^ epoch) {
+            last = est.train_step(&xs, &ys)?;
+            step += 1;
+            if step >= steps {
+                break 'outer;
+            }
+        }
+        epoch += 1;
+    }
+    Ok(last)
+}
+
+/// Evaluate (mse, mae) of an estimator on samples.
+#[allow(dead_code)]
+pub fn eval_estimator(
+    est: &mut gogh::runtime::Estimator,
+    samples: &[gogh::runtime::Sample],
+) -> gogh::Result<(f32, f32)> {
+    let xs: Vec<Vec<f32>> = samples.iter().map(|s| s.x.clone()).collect();
+    let ys: Vec<[f32; 2]> = samples.iter().map(|s| s.y).collect();
+    est.evaluate(&xs, &ys)
+}
+
+/// Median wall time of `f` over `iters` runs (warmup 2), in seconds.
+#[allow(dead_code)]
+pub fn median_time<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    for _ in 0..2 {
+        f();
+    }
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[allow(dead_code)]
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}

@@ -1,0 +1,110 @@
+//! End-to-end scheduling comparison (EXPERIMENTS.md §E2E): energy, SLO
+//! satisfaction, completion time and migrations for GOGH vs baselines
+//! on identical traces, plus GOGH's online estimation MAE (the paper's
+//! "prediction errors as low as 5%" headline).
+//!
+//!     cargo bench --bench e2e_scheduling
+
+include!("bench_util.rs");
+
+use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
+use gogh::cluster::ClusterSpec;
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::{GoghOptions, GoghScheduler, SimDriver};
+use gogh::metrics::SchedulerComparison;
+use gogh::runtime::Engine;
+use gogh::workload::{ThroughputOracle, Trace};
+
+const SEEDS: [u64; 3] = [11, 12, 13];
+
+fn main() -> gogh::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 30;
+    cfg.trace.mean_interarrival_s = 40.0;
+    cfg.trace.mean_work_s = 800.0;
+
+    println!("# E2E scheduler comparison, mean over seeds {SEEDS:?}");
+    let mut agg: Vec<(String, Vec<gogh::metrics::RunReport>)> = vec![];
+    for policy in ["random", "greedy", "gogh", "oracle-ilp"] {
+        let mut reports = vec![];
+        for &seed in &SEEDS {
+            cfg.seed = seed;
+            cfg.trace.seed = seed;
+            let oracle = ThroughputOracle::new(seed);
+            let trace = Trace::generate(&cfg.trace, &oracle);
+            let mut driver = SimDriver::new(
+                ClusterSpec::mix(&cfg.cluster.accel_mix),
+                oracle.clone(),
+                trace,
+                cfg.noise_sigma,
+                cfg.monitor_interval_s,
+                seed,
+            );
+            let report = match policy {
+                "random" => driver.run(&mut RandomScheduler::new(seed))?,
+                "greedy" => driver.run(&mut GreedyScheduler::new())?,
+                "oracle-ilp" => {
+                    driver.run(&mut OracleScheduler::new(oracle, cfg.optimizer.clone()))?
+                }
+                _ => {
+                    let mut sched = GoghScheduler::new(
+                        &engine,
+                        &oracle,
+                        GoghOptions {
+                            estimator: cfg.estimator.clone(),
+                            optimizer: cfg.optimizer.clone(),
+                            history_jobs: 24,
+                            enable_refinement: true,
+                            exploration_epsilon: 0.0,
+                            seed,
+                        },
+                    )?;
+                    driver.run(&mut sched)?
+                }
+            };
+            reports.push(report);
+        }
+        agg.push((policy.to_string(), reports));
+    }
+
+    let mut table = SchedulerComparison::default();
+    for (name, reports) in &agg {
+        let n = reports.len() as f64;
+        let mut mean = gogh::metrics::RunReport {
+            scheduler: name.clone(),
+            jobs_total: reports[0].jobs_total,
+            ..Default::default()
+        };
+        for r in reports {
+            mean.energy_joules += r.energy_joules / n;
+            mean.total_energy_joules += r.total_energy_joules / n;
+            mean.jobs_completed += r.jobs_completed / reports.len();
+            mean.slo_deficit += r.slo_deficit / n;
+            mean.slo_violations += r.slo_violations / reports.len();
+            mean.migrations += r.migrations / reports.len();
+            mean.mean_jct += r.mean_jct / n;
+            mean.sim_seconds += r.sim_seconds / n;
+            mean.mean_solve_ms += r.mean_solve_ms / n;
+        }
+        mean.estimation_mae = {
+            let maes: Vec<f64> = reports.iter().filter_map(|r| r.estimation_mae).collect();
+            (!maes.is_empty()).then(|| maes.iter().sum::<f64>() / maes.len() as f64)
+        };
+        table.push(mean);
+    }
+    println!("{}", table.table());
+    println!("energy ratios vs random:");
+    for (name, ratio) in table.energy_ratios() {
+        println!("  {name:<12} {ratio:.3}x");
+    }
+    for r in &table.reports {
+        if let Some(mae) = r.estimation_mae {
+            println!("{} estimation MAE: {:.4}", r.scheduler, mae);
+        }
+        if r.mean_solve_ms > 0.0 {
+            println!("{} mean ILP solve: {:.1} ms", r.scheduler, r.mean_solve_ms);
+        }
+    }
+    Ok(())
+}

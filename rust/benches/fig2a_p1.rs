@@ -1,0 +1,50 @@
+//! Figure 2a — MAE of the initial-estimation network P1 across
+//! architectures (FF / RNN / Transformer) on train / validation / test.
+//!
+//!     cargo bench --bench fig2a_p1
+//!
+//! Paper shape: RNN best on train+val; Transformer generalizes best on
+//! the unseen test configs. Absolute values differ (synthetic dataset).
+
+include!("bench_util.rs");
+
+use gogh::runtime::{DatasetBuilder, Engine, Estimator};
+use gogh::workload::ThroughputOracle;
+
+const SEED: u64 = 29;
+const N_TRAIN: usize = 6000;
+const N_EVAL: usize = 1500;
+const STEPS: usize = 400;
+
+fn main() -> gogh::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let oracle = ThroughputOracle::new(SEED);
+    let builder = DatasetBuilder::new(&oracle, SEED);
+    let split = builder.build_split("p1", N_TRAIN, N_EVAL);
+    let (ntr, nva, nte) = split.sizes();
+    println!("# Figure 2a — P1 initial estimation MAE");
+    println!("# dataset: {ntr} train / {nva} val / {nte} test samples, {STEPS} Adam steps");
+    println!(
+        "{:<14} {:>11} {:>11} {:>11} {:>11} {:>12}",
+        "arch", "train_mae", "val_mae", "test_mae", "train_loss", "step_time"
+    );
+    for arch in ["ff", "rnn", "transformer"] {
+        let mut est = Estimator::new(&engine, &format!("p1_{arch}"))?;
+        let t0 = std::time::Instant::now();
+        let (final_loss, _) = train_estimator(&mut est, &split.train, STEPS, SEED)?;
+        let step_time = t0.elapsed().as_secs_f64() / STEPS as f64;
+        let (_, train_mae) = eval_estimator(&mut est, &split.train)?;
+        let (_, val_mae) = eval_estimator(&mut est, &split.val)?;
+        let (_, test_mae) = eval_estimator(&mut est, &split.test)?;
+        println!(
+            "{:<14} {:>11.4} {:>11.4} {:>11.4} {:>11.5} {:>12}",
+            arch,
+            train_mae,
+            val_mae,
+            test_mae,
+            final_loss,
+            fmt_time(step_time)
+        );
+    }
+    Ok(())
+}

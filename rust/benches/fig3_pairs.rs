@@ -1,0 +1,105 @@
+//! Figure 3 — combined validation MAE / loss of every P1 × P2 pair.
+//!
+//!     cargo bench --bench fig3_pairs
+//!
+//! The two-phase pipeline of the paper: P1 produces initial estimates
+//! for a job on two accelerator types; the cluster measures one of
+//! them; P2 transfers the observation to the other type. The reported
+//! metric is the error of P2's refined estimate against ground truth,
+//! over validation-config jobs.
+//!
+//! Paper shape: RNN→FF is the best pair, Transformer→FF the runner-up.
+
+include!("bench_util.rs");
+
+use gogh::runtime::{dataset::PipelineItem, DatasetBuilder, Engine, Estimator};
+use gogh::workload::encoding::{p2_row, PSI_EMPTY};
+use gogh::workload::ThroughputOracle;
+
+const SEED: u64 = 29;
+const N_TRAIN: usize = 6000;
+const N_PIPE: usize = 1200;
+const STEPS: usize = 400;
+
+fn main() -> gogh::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let oracle = ThroughputOracle::new(SEED);
+    let builder = DatasetBuilder::new(&oracle, SEED);
+    let (train_cfgs, val_cfgs, _) = gogh::runtime::split_universe(SEED);
+
+    // train all six networks once
+    let mut p1s = vec![];
+    let mut p2s = vec![];
+    let p1_split = builder.build_split("p1", N_TRAIN, 16);
+    let p2_split = builder.build_split("p2", N_TRAIN, 16);
+    for arch in ["ff", "rnn", "transformer"] {
+        let mut e1 = Estimator::new(&engine, &format!("p1_{arch}"))?;
+        train_estimator(&mut e1, &p1_split.train, STEPS, SEED)?;
+        p1s.push((arch, e1));
+        let mut e2 = Estimator::new(&engine, &format!("p2_{arch}"))?;
+        train_estimator(&mut e2, &p2_split.train, STEPS, SEED)?;
+        p2s.push((arch, e2));
+    }
+
+    let items: Vec<PipelineItem> = builder.pipeline_items(N_PIPE, &val_cfgs, &train_cfgs, 5);
+    println!("# Figure 3 — combined validation metrics of P1→P2 pipelines");
+    println!("# {N_PIPE} pipeline items over validation configs");
+    println!(
+        "{:<26} {:>12} {:>12} {:>14}",
+        "pipeline", "val_mae", "val_loss", "p1_only_mae"
+    );
+
+    let mut results: Vec<(String, f64, f64, f64)> = vec![];
+    for (a1name, p1) in p1s.iter_mut() {
+        // P1 estimates for both accel types of every item (two batched calls)
+        let rows_a1: Vec<Vec<f32>> = items.iter().map(|i| i.p1_row_a1.clone()).collect();
+        let rows_a2: Vec<Vec<f32>> = items.iter().map(|i| i.p1_row_a2.clone()).collect();
+        let est_a1 = p1.predict(&rows_a1)?;
+        let est_a2 = p1.predict(&rows_a2)?;
+        // P1-only error: its a2 estimate without refinement
+        let p1_only_mae: f64 = items
+            .iter()
+            .zip(&est_a2)
+            .map(|(it, e)| (e[0] - it.truth_a2).abs() as f64)
+            .sum::<f64>()
+            / items.len() as f64;
+
+        for (a2name, p2) in p2s.iter_mut() {
+            let p2_rows: Vec<Vec<f32>> = items
+                .iter()
+                .enumerate()
+                .map(|(k, it)| {
+                    p2_row(
+                        &it.psi_j1,
+                        &PSI_EMPTY,
+                        it.a1,
+                        it.a2,
+                        est_a1[k][0],
+                        0.0,
+                        it.meas_a1,
+                        0.0,
+                        est_a2[k][0],
+                        0.0,
+                    )
+                    .to_vec()
+                })
+                .collect();
+            let refined = p2.predict(&p2_rows)?;
+            let (mut abs, mut sq) = (0.0f64, 0.0f64);
+            for (it, r) in items.iter().zip(&refined) {
+                let e = (r[0] - it.truth_a2) as f64;
+                abs += e.abs();
+                sq += e * e;
+            }
+            let mae = abs / items.len() as f64;
+            let loss = sq / items.len() as f64;
+            results.push((format!("{a1name}->{a2name}"), mae, loss, p1_only_mae));
+        }
+    }
+    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (name, mae, loss, p1only) in &results {
+        println!("{:<26} {:>12.5} {:>12.6} {:>14.5}", name, mae, loss, p1only);
+    }
+    println!("\n# best pipeline: {}", results[0].0);
+    Ok(())
+}

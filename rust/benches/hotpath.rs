@@ -1,0 +1,120 @@
+//! Hot-path micro-benchmarks (§Perf): the latencies that sit on GOGH's
+//! decision path — catalog ops, similarity search, feature encoding,
+//! LP pivoting, PJRT predict/train-step.
+//!
+//!     cargo bench --bench hotpath
+
+include!("bench_util.rs");
+
+use gogh::catalog::{Catalog, EstimateKey, SimilarityIndex};
+use gogh::ilp::model::{Model, ObjSense, Sense, VarKind};
+use gogh::ilp::simplex::solve_lp;
+use gogh::runtime::{Engine, Estimator};
+use gogh::util::Rng;
+use gogh::workload::encoding::{p1_row, psi};
+use gogh::workload::{AccelType, Combo, JobId, ModelFamily};
+
+fn bench<F: FnMut()>(name: &str, per_call: usize, iters: usize, f: F) {
+    let t = median_time(f, iters);
+    println!("{:<34} {:>12} / call", name, fmt_time(t / per_call as f64));
+}
+
+fn main() -> gogh::Result<()> {
+    println!("# GOGH hot-path micro-benchmarks (median wall time)");
+
+    // ---- RNG
+    let mut rng = Rng::seed_from_u64(1);
+    bench("rng.f64 x1000", 1000, 50, || {
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += rng.f64();
+        }
+        std::hint::black_box(acc);
+    });
+
+    // ---- feature encoding
+    let pa = psi(ModelFamily::ResNet50, 64, 1);
+    let pb = psi(ModelFamily::LanguageModel, 10, 1);
+    bench("p1_row encode x1000", 1000, 50, || {
+        for _ in 0..1000 {
+            std::hint::black_box(p1_row(&pa, &pb, AccelType::V100, 0.5, 0.25, &pa));
+        }
+    });
+
+    // ---- catalog ops
+    let mut catalog = Catalog::new();
+    for i in 0..2000u32 {
+        let f = gogh::workload::FAMILIES[i as usize % 5];
+        catalog.register_job(JobId(i), psi(f, f.batch_sizes()[0], 1));
+        catalog.record_measurement(
+            EstimateKey {
+                accel: AccelType::K80,
+                job: JobId(i),
+                combo: Combo::Solo(JobId(i)),
+            },
+            0.5,
+        );
+    }
+    let key = EstimateKey {
+        accel: AccelType::K80,
+        job: JobId(500),
+        combo: Combo::Solo(JobId(500)),
+    };
+    bench("catalog.value x1000", 1000, 50, || {
+        for _ in 0..1000 {
+            std::hint::black_box(catalog.value(&key));
+        }
+    });
+    bench("similarity over 2000 jobs", 1, 20, || {
+        let idx = SimilarityIndex::new(&catalog);
+        std::hint::black_box(idx.most_similar(&pa, &[], false));
+    });
+
+    // ---- simplex on a mid-size LP (60 vars, 40 rows)
+    let mut model = Model::new(ObjSense::Minimize);
+    let mut lp_rng = Rng::seed_from_u64(2);
+    let vars: Vec<_> = (0..60)
+        .map(|i| model.add_var(format!("x{i}"), 0.0, 10.0, VarKind::Continuous, lp_rng.range_f64(1.0, 5.0)))
+        .collect();
+    for r in 0..40 {
+        let mut terms: Vec<_> = vec![];
+        for &v in &vars {
+            if lp_rng.bool(0.3) {
+                terms.push((v, lp_rng.range_f64(0.1, 2.0)));
+            }
+        }
+        if !terms.is_empty() {
+            model.add_constraint(format!("c{r}"), terms, Sense::Ge, lp_rng.range_f64(1.0, 8.0));
+        }
+    }
+    bench("simplex 60x40 LP", 1, 20, || {
+        std::hint::black_box(solve_lp(&model, None));
+    });
+
+    // ---- PJRT paths (skip when artifacts absent)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = Engine::load("artifacts")?;
+        let mut p1 = Estimator::new(&engine, "p1_rnn")?;
+        let rows: Vec<Vec<f32>> = (0..256).map(|_| vec![0.3f32; 32]).collect();
+        bench("p1_rnn predict batch=256", 1, 10, || {
+            std::hint::black_box(p1.predict(&rows).unwrap());
+        });
+        let mut p2 = Estimator::new(&engine, "p2_ff")?;
+        let rows2: Vec<Vec<f32>> = (0..256).map(|_| vec![0.3f32; 40]).collect();
+        bench("p2_ff predict batch=256", 1, 10, || {
+            std::hint::black_box(p2.predict(&rows2).unwrap());
+        });
+        let xs: Vec<Vec<f32>> = (0..256).map(|_| vec![0.2f32; 40]).collect();
+        let ys: Vec<[f32; 2]> = (0..256).map(|_| [0.4, 0.5]).collect();
+        bench("p2_ff train_step batch=256", 1, 10, || {
+            std::hint::black_box(p2.train_step(&xs, &ys).unwrap());
+        });
+        let xs1: Vec<Vec<f32>> = (0..256).map(|_| vec![0.2f32; 32]).collect();
+        bench("p1_rnn train_step batch=256", 1, 10, || {
+            std::hint::black_box(p1.train_step(&xs1, &ys).unwrap());
+        });
+    } else {
+        println!("(artifacts missing — PJRT benches skipped)");
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Optimizer (Problem 1) solve-time scaling — the §2.4 discussion: the
+//! paper uses a general-purpose solver and defers faster algorithms to
+//! future work; this bench quantifies where the in-tree B&B solver
+//! stands as |J| and the cluster grow.
+//!
+//!     cargo bench --bench ilp_scaling
+
+include!("bench_util.rs");
+
+use std::collections::HashMap;
+
+use gogh::ilp::branch_bound::BnbConfig;
+use gogh::ilp::problem1::{build_problem1, solve_problem1, Problem1Input};
+use gogh::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, ACCEL_TYPES, FAMILIES};
+
+fn mk_jobs(n: u32, oracle: &ThroughputOracle) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| {
+            let f = FAMILIES[i as usize % FAMILIES.len()];
+            let b = f.batch_sizes()[i as usize % f.batch_sizes().len()];
+            let mut j = JobSpec {
+                id: JobId(i),
+                family: f,
+                batch_size: b,
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: 2,
+                work: 100.0,
+            };
+            j.min_throughput = 0.35 * oracle.solo(&j, AccelType::P100);
+            j
+        })
+        .collect()
+}
+
+fn main() {
+    let oracle = ThroughputOracle::new(41);
+    println!("# Problem 1 (GPU-allocation ILP) solve-time scaling");
+    println!(
+        "{:>5} {:>10} {:>7} {:>8} {:>8} {:>8} {:>12} {:>10}",
+        "jobs", "instances", "vars", "cons", "nodes", "gap%", "solve_ms", "status"
+    );
+    for &per_type in &[1u32, 2, 4] {
+        for &n_jobs in &[4u32, 8, 12, 16, 24] {
+            let jobs = mk_jobs(n_jobs, &oracle);
+            let jobs_c = jobs.clone();
+            let oracle_c = oracle.clone();
+            let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+                let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+                let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+                oracle_c.throughput(spec, c, a, &lookup)
+            };
+            let cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+            let counts: HashMap<AccelType, u32> =
+                ACCEL_TYPES.iter().map(|&a| (a, per_type)).collect();
+            let input = Problem1Input {
+                jobs: &jobs,
+                accel_counts: &counts,
+                throughput: &thr,
+                solo_capability: &cap,
+                max_pairs_per_job: 3,
+                slack_penalty: Some(2000.0),
+                throughput_bonus: 300.0,
+            };
+            let bnb = BnbConfig {
+                max_nodes: 8_000,
+                time_limit_s: 10.0,
+                ..Default::default()
+            };
+            let (model, _, _) = build_problem1(&input, &bnb);
+            let t0 = std::time::Instant::now();
+            let sol = solve_problem1(&input, &bnb);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "{:>5} {:>10} {:>7} {:>8} {:>8} {:>8.2} {:>12.1} {:>10?}",
+                n_jobs,
+                per_type * 6,
+                model.n_vars(),
+                model.n_constraints(),
+                sol.nodes,
+                sol.gap * 100.0,
+                ms,
+                sol.status
+            );
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Greedy fastest-first baseline: jobs grab the fastest *free*
+//! accelerator by hardware generation (public spec knowledge — no
+//! throughput estimates), pairing onto the fastest solo host once the
+//! cluster fills. This is the heterogeneity-aware-but-energy-oblivious
+//! policy a throughput-maximizing scheduler approximates.
+
+use crate::cluster::{AccelId, Cluster, Placement};
+use crate::coordinator::Scheduler;
+use crate::workload::Combo;
+use crate::Result;
+
+#[derive(Default)]
+pub struct GreedyScheduler;
+
+impl GreedyScheduler {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Scheduler for GreedyScheduler {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
+        let mut p = Placement::new();
+        // fastest instances first (stable order for determinism)
+        let mut free: Vec<AccelId> = cluster.spec.accels.clone();
+        free.sort_by(|a, b| {
+            b.accel
+                .base_speed()
+                .partial_cmp(&a.accel.base_speed())
+                .unwrap()
+                .then(a.server.cmp(&b.server))
+        });
+        let mut jobs = cluster.active_job_ids(); // sorted: arrival order
+        let mut solos: Vec<AccelId> = vec![];
+        let mut i = 0;
+        for j in jobs.drain(..) {
+            if i < free.len() {
+                p.assign(free[i], Combo::Solo(j));
+                solos.push(free[i]);
+                i += 1;
+            } else if !solos.is_empty() {
+                // pair onto the fastest host still holding a solo
+                let a = solos.remove(0);
+                let existing = match p.combo_on(a) {
+                    Some(Combo::Solo(e)) => *e,
+                    _ => unreachable!(),
+                };
+                p.assign(a, Combo::pair(existing, j));
+            }
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::workload::{AccelType, JobId, JobSpec, ModelFamily};
+
+    fn job(id: u32) -> JobSpec {
+        JobSpec {
+            id: JobId(id),
+            family: ModelFamily::ResNet50,
+            batch_size: 64,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 1,
+            work: 10.0,
+        }
+    }
+
+    #[test]
+    fn first_job_gets_fastest_gpu() {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        c.add_job(job(0));
+        let p = GreedyScheduler::new().allocate(&c).unwrap();
+        let (aid, _) = p.iter().next().unwrap();
+        assert_eq!(aid.accel, AccelType::V100);
+    }
+
+    #[test]
+    fn overflow_pairs_on_fastest() {
+        let mut c = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 1), (AccelType::K80, 1)]));
+        for i in 0..3 {
+            c.add_job(job(i));
+        }
+        let p = GreedyScheduler::new().allocate(&c).unwrap();
+        // 2 instances, 3 jobs: the v100 must host a pair
+        let v100 = c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
+        assert_eq!(p.combo_on(*v100).unwrap().len(), 2);
+        for i in 0..3 {
+            assert!(p.is_placed(JobId(i)));
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Baseline schedulers the e2e benches compare GOGH against:
+//!
+//! * [`RandomScheduler`] — uniform random feasible placement.
+//! * [`GreedyScheduler`] — fastest-available-GPU first fit (the
+//!   "throughput-greedy" policy heterogeneity-unaware schedulers
+//!   approximate).
+//! * [`OracleScheduler`] — Problem 1 solved with *ground-truth*
+//!   throughputs: the energy lower bound (what GOGH converges toward as
+//!   estimates sharpen).
+
+pub mod greedy;
+pub mod oracle;
+pub mod random;
+
+pub use greedy::GreedyScheduler;
+pub use oracle::OracleScheduler;
+pub use random::RandomScheduler;

@@ -1,0 +1,104 @@
+//! Random placement baseline: every job goes to a uniformly random
+//! accelerator with free capacity (pairing at random when instances run
+//! short). Heterogeneity- and energy-oblivious — the floor of the
+//! comparison table.
+
+use crate::util::Rng;
+
+use crate::cluster::{Cluster, Placement};
+use crate::coordinator::Scheduler;
+use crate::workload::Combo;
+use crate::Result;
+
+pub struct RandomScheduler {
+    rng: Rng,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::seed_from_u64(seed ^ 0xbadd),
+        }
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
+        let mut p = Placement::new();
+        let mut accels = cluster.spec.accels.clone();
+        self.rng.shuffle(&mut accels);
+        let mut jobs = cluster.active_job_ids();
+        self.rng.shuffle(&mut jobs);
+        let mut free = accels;
+        let mut solos: Vec<crate::cluster::AccelId> = vec![];
+        for j in jobs {
+            if let Some(a) = free.pop() {
+                p.assign(a, Combo::Solo(j));
+                solos.push(a);
+            } else if !solos.is_empty() {
+                // out of free instances: pair with a random solo host
+                let idx = (self.rng.next_u32() as usize) % solos.len();
+                let a = solos.swap_remove(idx);
+                let existing = match p.combo_on(a) {
+                    Some(Combo::Solo(e)) => *e,
+                    _ => unreachable!("solos list only holds solo hosts"),
+                };
+                p.assign(a, Combo::pair(existing, j));
+            }
+            // else: cluster totally full (2 jobs everywhere) → job waits
+        }
+        Ok(p)
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::workload::{JobId, JobSpec, ModelFamily};
+
+    fn job(id: u32) -> JobSpec {
+        JobSpec {
+            id: JobId(id),
+            family: ModelFamily::ResNet18,
+            batch_size: 32,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 1,
+            work: 10.0,
+        }
+    }
+
+    #[test]
+    fn places_all_jobs_when_capacity_allows() {
+        let mut c = Cluster::new(ClusterSpec::balanced(1)); // 6 instances
+        for i in 0..9 {
+            c.add_job(job(i)); // 9 jobs > 6 instances → pairing needed
+        }
+        let mut s = RandomScheduler::new(1);
+        let p = s.allocate(&c).unwrap();
+        for i in 0..9 {
+            assert!(p.is_placed(JobId(i)), "job {i} unplaced");
+        }
+        // capacity respected
+        for (_, combo) in p.iter() {
+            assert!(combo.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        for i in 0..4 {
+            c.add_job(job(i));
+        }
+        let p1 = RandomScheduler::new(7).allocate(&c).unwrap();
+        let p2 = RandomScheduler::new(7).allocate(&c).unwrap();
+        assert_eq!(p1.diff_count(&p2), 0);
+    }
+}

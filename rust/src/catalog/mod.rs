@@ -1,0 +1,8 @@
+//! The Catalog (paper §2.1): the store of measured and estimated
+//! throughputs that P1 reads and P2 updates, plus job similarity search.
+
+pub mod similarity;
+pub mod store;
+
+pub use similarity::SimilarityIndex;
+pub use store::{Catalog, EstimateKey, Record};

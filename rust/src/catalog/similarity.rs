@@ -1,0 +1,136 @@
+//! Nearest-neighbour job similarity over Ψ vectors (paper §2.3: "GOGH
+//! retrieves the most similar previously seen job from the Catalog —
+//! based on feature similarity").
+//!
+//! The index is a flat scan over the registered jobs' Ψ vectors with
+//! squared-L2 distance — exact, deterministic, and fast at the catalog
+//! sizes a cluster accumulates (thousands); the hotpath bench measures
+//! it, and at larger scales the scan is trivially replaceable by a KD
+//! tree behind the same API.
+
+use crate::workload::encoding::{psi_distance, PSI_DIM};
+use crate::workload::JobId;
+
+use super::store::Catalog;
+
+/// Similarity queries over the Catalog's job registry.
+pub struct SimilarityIndex<'a> {
+    catalog: &'a Catalog,
+}
+
+impl<'a> SimilarityIndex<'a> {
+    pub fn new(catalog: &'a Catalog) -> Self {
+        Self { catalog }
+    }
+
+    /// Most similar known job to `psi`, excluding the ids in `exclude`
+    /// (typically the query job itself). Requires the candidate to have
+    /// at least one *measured* record if `require_measured` — P1's Eq. 1
+    /// needs real throughput history for j2.
+    pub fn most_similar(
+        &self,
+        psi: &[f32; PSI_DIM],
+        exclude: &[JobId],
+        require_measured: bool,
+    ) -> Option<JobId> {
+        let mut best: Option<(f32, JobId)> = None;
+        let mut ids: Vec<JobId> = self.catalog.known_jobs().copied().collect();
+        ids.sort(); // deterministic tie-breaking
+        for id in ids {
+            if exclude.contains(&id) {
+                continue;
+            }
+            if require_measured && self.catalog.measured_records_of(id).is_empty() {
+                continue;
+            }
+            let d = psi_distance(psi, self.catalog.psi(id).unwrap());
+            if best.map_or(true, |(bd, _)| d < bd) {
+                best = Some((d, id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Top-k most similar jobs (for the ensemble ablation).
+    pub fn top_k(&self, psi: &[f32; PSI_DIM], exclude: &[JobId], k: usize) -> Vec<JobId> {
+        let mut scored: Vec<(f32, JobId)> = self
+            .catalog
+            .known_jobs()
+            .filter(|id| !exclude.contains(id))
+            .map(|id| (psi_distance(psi, self.catalog.psi(*id).unwrap()), *id))
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        scored.into_iter().take(k).map(|(_, id)| id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::store::EstimateKey;
+    use crate::workload::{encoding::psi, AccelType, Combo, ModelFamily};
+
+    fn setup() -> Catalog {
+        let mut c = Catalog::new();
+        c.register_job(JobId(1), psi(ModelFamily::ResNet18, 32, 1));
+        c.register_job(JobId(2), psi(ModelFamily::ResNet18, 64, 1));
+        c.register_job(JobId(3), psi(ModelFamily::Recommendation, 2048, 1));
+        for j in [1, 2, 3] {
+            c.record_measurement(
+                EstimateKey {
+                    accel: AccelType::K80,
+                    job: JobId(j),
+                    combo: Combo::Solo(JobId(j)),
+                },
+                0.5,
+            );
+        }
+        c
+    }
+
+    #[test]
+    fn finds_same_family_neighbour() {
+        let c = setup();
+        let idx = SimilarityIndex::new(&c);
+        let q = psi(ModelFamily::ResNet18, 32, 1);
+        // exclude exact-match job 1 → job 2 (same family) must win over 3
+        assert_eq!(idx.most_similar(&q, &[JobId(1)], true), Some(JobId(2)));
+    }
+
+    #[test]
+    fn exact_match_wins() {
+        let c = setup();
+        let idx = SimilarityIndex::new(&c);
+        let q = psi(ModelFamily::ResNet18, 32, 1);
+        assert_eq!(idx.most_similar(&q, &[], true), Some(JobId(1)));
+    }
+
+    #[test]
+    fn require_measured_filters() {
+        let mut c = setup();
+        c.register_job(JobId(4), psi(ModelFamily::Recommendation, 2048, 1));
+        let idx = SimilarityIndex::new(&c);
+        let q = psi(ModelFamily::Recommendation, 2048, 1);
+        // job 4 is an exact match but has no measurements → skipped when
+        // measurements are required, chosen otherwise.
+        assert_ne!(idx.most_similar(&q, &[JobId(3)], true), Some(JobId(4)));
+        assert_eq!(idx.most_similar(&q, &[JobId(3)], false), Some(JobId(4)));
+    }
+
+    #[test]
+    fn top_k_ordering() {
+        let c = setup();
+        let idx = SimilarityIndex::new(&c);
+        let q = psi(ModelFamily::ResNet18, 32, 1);
+        let top = idx.top_k(&q, &[], 2);
+        assert_eq!(top, vec![JobId(1), JobId(2)]);
+    }
+
+    #[test]
+    fn empty_catalog_returns_none() {
+        let c = Catalog::new();
+        let idx = SimilarityIndex::new(&c);
+        let q = psi(ModelFamily::ResNet18, 32, 1);
+        assert_eq!(idx.most_similar(&q, &[], false), None);
+    }
+}

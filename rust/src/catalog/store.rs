@@ -1,0 +1,359 @@
+//! Throughput estimate store.
+//!
+//! For every (accelerator type, job, combination) the Catalog keeps:
+//!  * the latest *measurement* (if the combo ever ran on that type), and
+//!  * the refinement set 𝒯^c_{a,j} (Eq. 4): every estimate produced by
+//!    P1 (round 0) or P2 (rounds i ≥ 1), whose running average is the
+//!    current estimate T̃^c_{a,j}.
+//!
+//! Measurements always dominate estimates for the same key (the paper's
+//! "measured or estimated" precedence in §2.4).
+
+use std::collections::HashMap;
+
+use crate::util::Json;
+use crate::workload::{AccelType, Combo, JobId};
+
+/// Key of one throughput record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EstimateKey {
+    pub accel: AccelType,
+    pub job: JobId,
+    pub combo: Combo,
+}
+
+/// One record: refinement set + running mean + optional measurement.
+#[derive(Debug, Clone, Default)]
+pub struct Record {
+    /// Σ of refinement-set values (Eq. 4 numerator).
+    sum: f64,
+    /// |𝒯| (Eq. 4 denominator).
+    count: u32,
+    /// latest measured throughput, if any.
+    measured: Option<f64>,
+    /// round index of the last update (0 = P1 initial).
+    pub last_round: u32,
+}
+
+impl Record {
+    /// Current estimate: measurement wins; otherwise the 𝒯-average.
+    pub fn value(&self) -> Option<f64> {
+        if let Some(m) = self.measured {
+            return Some(m);
+        }
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    pub fn estimate_only(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    pub fn is_measured(&self) -> bool {
+        self.measured.is_some()
+    }
+
+    pub fn refinements(&self) -> u32 {
+        self.count
+    }
+}
+
+/// The Catalog.
+#[derive(Debug, Clone, Default)]
+pub struct Catalog {
+    records: HashMap<EstimateKey, Record>,
+    /// Ψ vectors of every job ever seen (for similarity lookups, the
+    /// paper's "historical data from previously executed jobs").
+    psis: HashMap<JobId, [f32; crate::workload::PSI_DIM]>,
+}
+
+impl Catalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a job's attribute vector.
+    pub fn register_job(&mut self, j: JobId, psi: [f32; crate::workload::PSI_DIM]) {
+        self.psis.insert(j, psi);
+    }
+
+    pub fn psi(&self, j: JobId) -> Option<&[f32; crate::workload::PSI_DIM]> {
+        self.psis.get(&j)
+    }
+
+    pub fn known_jobs(&self) -> impl Iterator<Item = &JobId> {
+        self.psis.keys()
+    }
+
+    /// Record an initial P1 estimate (round 0): starts a fresh
+    /// refinement set for the key.
+    pub fn write_initial(&mut self, key: EstimateKey, value: f64) {
+        let r = self.records.entry(key).or_default();
+        r.sum = value;
+        r.count = 1;
+        r.last_round = 0;
+    }
+
+    /// Push a P2 refinement into 𝒯 (Eq. 4): the estimate becomes the
+    /// running average of all refinements.
+    pub fn push_refinement(&mut self, key: EstimateKey, value: f64, round: u32) {
+        let r = self.records.entry(key).or_default();
+        r.sum += value;
+        r.count += 1;
+        r.last_round = r.last_round.max(round);
+    }
+
+    /// Record a measurement (dominates estimates for this key).
+    pub fn record_measurement(&mut self, key: EstimateKey, value: f64) {
+        let r = self.records.entry(key).or_default();
+        r.measured = Some(value);
+    }
+
+    /// Current value (measured > averaged estimate > None).
+    pub fn value(&self, key: &EstimateKey) -> Option<f64> {
+        self.records.get(key).and_then(|r| r.value())
+    }
+
+    pub fn record(&self, key: &EstimateKey) -> Option<&Record> {
+        self.records.get(key)
+    }
+
+    /// All measured (accel, combo) pairs involving `j` — the historical
+    /// co-location evidence P1's Eq. 1 inputs are drawn from.
+    pub fn measured_records_of(&self, j: JobId) -> Vec<(EstimateKey, f64)> {
+        let mut v: Vec<(EstimateKey, f64)> = self
+            .records
+            .iter()
+            .filter(|(k, r)| k.job == j && r.is_measured())
+            .map(|(k, r)| (*k, r.value().unwrap()))
+            .collect();
+        v.sort_by_key(|(k, _)| (k.accel.index(), k.combo));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Number of measured records (diagnostics).
+    pub fn n_measured(&self) -> usize {
+        self.records.values().filter(|r| r.is_measured()).count()
+    }
+
+    // -- persistence ----------------------------------------------------
+    //
+    // A deployed catalog is the cluster's accumulated knowledge; GOGH
+    // checkpoints it across restarts (`gogh simulate --catalog c.json`).
+
+    fn combo_json(c: &Combo) -> Json {
+        match c {
+            Combo::Solo(j) => Json::Array(vec![Json::from(j.0)]),
+            Combo::Pair(a, b) => Json::Array(vec![Json::from(a.0), Json::from(b.0)]),
+        }
+    }
+
+    fn combo_from_json(v: &Json) -> crate::Result<Combo> {
+        let arr = v
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("combo must be an array"))?;
+        match arr {
+            [a] => Ok(Combo::Solo(JobId(a.as_u64().unwrap_or(0) as u32))),
+            [a, b] => Ok(Combo::pair(
+                JobId(a.as_u64().unwrap_or(0) as u32),
+                JobId(b.as_u64().unwrap_or(0) as u32),
+            )),
+            _ => anyhow::bail!("combo arity {} unsupported", arr.len()),
+        }
+    }
+
+    /// Serialize the full catalog (records + Ψ registry) to JSON.
+    pub fn to_json(&self) -> Json {
+        let mut jobs: Vec<(String, Json)> = self
+            .psis
+            .iter()
+            .map(|(j, psi)| {
+                (
+                    j.0.to_string(),
+                    Json::Array(psi.iter().map(|&x| Json::Num(x as f64)).collect()),
+                )
+            })
+            .collect();
+        jobs.sort_by(|a, b| a.0.parse::<u32>().unwrap().cmp(&b.0.parse::<u32>().unwrap()));
+        let mut recs: Vec<Json> = vec![];
+        let mut keys: Vec<&EstimateKey> = self.records.keys().collect();
+        keys.sort_by_key(|k| (k.accel.index(), k.job, k.combo));
+        for k in keys {
+            let r = &self.records[k];
+            let mut fields = vec![
+                ("accel", Json::from(k.accel.name())),
+                ("job", Json::from(k.job.0)),
+                ("combo", Self::combo_json(&k.combo)),
+                ("sum", Json::Num(r.sum)),
+                ("count", Json::from(r.count)),
+                ("last_round", Json::from(r.last_round)),
+            ];
+            if let Some(m) = r.measured {
+                fields.push(("measured", Json::Num(m)));
+            }
+            recs.push(Json::obj(fields));
+        }
+        Json::obj(vec![
+            ("version", Json::from(1u32)),
+            ("jobs", Json::Object(jobs)),
+            ("records", Json::Array(recs)),
+        ])
+    }
+
+    /// Restore a catalog serialized by [`Catalog::to_json`].
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        anyhow::ensure!(v.req_f64("version")? as u32 == 1, "catalog version");
+        let mut c = Catalog::new();
+        for (id, psi_v) in v
+            .req("jobs")?
+            .as_object()
+            .ok_or_else(|| anyhow::anyhow!("jobs must be an object"))?
+        {
+            let arr = psi_v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("psi must be an array"))?;
+            anyhow::ensure!(arr.len() == crate::workload::PSI_DIM, "psi width");
+            let mut psi = [0.0f32; crate::workload::PSI_DIM];
+            for (i, x) in arr.iter().enumerate() {
+                psi[i] = x.as_f64().unwrap_or(0.0) as f32;
+            }
+            c.register_job(JobId(id.parse()?), psi);
+        }
+        for rec in v
+            .req("records")?
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("records must be an array"))?
+        {
+            let accel_name = rec.req_str("accel")?;
+            let accel = crate::workload::ACCEL_TYPES
+                .iter()
+                .copied()
+                .find(|a| a.name() == accel_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown accel {accel_name}"))?;
+            let key = EstimateKey {
+                accel,
+                job: JobId(rec.req_f64("job")? as u32),
+                combo: Self::combo_from_json(rec.req("combo")?)?,
+            };
+            let r = c.records.entry(key).or_default();
+            r.sum = rec.req_f64("sum")?;
+            r.count = rec.req_f64("count")? as u32;
+            r.last_round = rec.req_f64("last_round")? as u32;
+            r.measured = rec.get("measured").and_then(|m| m.as_f64());
+        }
+        Ok(c)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(a: AccelType, j: u32) -> EstimateKey {
+        EstimateKey {
+            accel: a,
+            job: JobId(j),
+            combo: Combo::Solo(JobId(j)),
+        }
+    }
+
+    #[test]
+    fn eq4_running_average() {
+        let mut c = Catalog::new();
+        let k = key(AccelType::K80, 1);
+        c.write_initial(k, 0.4);
+        assert_eq!(c.value(&k), Some(0.4));
+        c.push_refinement(k, 0.6, 1);
+        assert!((c.value(&k).unwrap() - 0.5).abs() < 1e-12);
+        c.push_refinement(k, 0.8, 2);
+        assert!((c.value(&k).unwrap() - 0.6).abs() < 1e-12);
+        assert_eq!(c.record(&k).unwrap().refinements(), 3);
+    }
+
+    #[test]
+    fn measurement_dominates_estimates() {
+        let mut c = Catalog::new();
+        let k = key(AccelType::V100, 2);
+        c.write_initial(k, 0.3);
+        c.record_measurement(k, 0.9);
+        assert_eq!(c.value(&k), Some(0.9));
+        // refinements keep accumulating but don't override the measurement
+        c.push_refinement(k, 0.1, 1);
+        assert_eq!(c.value(&k), Some(0.9));
+        assert_eq!(c.record(&k).unwrap().estimate_only(), Some(0.2));
+    }
+
+    #[test]
+    fn write_initial_resets_refinement_set() {
+        let mut c = Catalog::new();
+        let k = key(AccelType::P100, 3);
+        c.push_refinement(k, 1.0, 1);
+        c.push_refinement(k, 0.0, 2);
+        c.write_initial(k, 0.5);
+        assert_eq!(c.value(&k), Some(0.5));
+        assert_eq!(c.record(&k).unwrap().refinements(), 1);
+    }
+
+    #[test]
+    fn measured_records_filtering() {
+        let mut c = Catalog::new();
+        let k1 = key(AccelType::K80, 1);
+        let k2 = EstimateKey {
+            accel: AccelType::V100,
+            job: JobId(1),
+            combo: Combo::pair(JobId(1), JobId(2)),
+        };
+        c.write_initial(k1, 0.4); // estimate only
+        c.record_measurement(k2, 0.7);
+        let recs = c.measured_records_of(JobId(1));
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].0, k2);
+    }
+
+    #[test]
+    fn unknown_key_is_none() {
+        let c = Catalog::new();
+        assert_eq!(c.value(&key(AccelType::K80, 9)), None);
+    }
+
+    #[test]
+    fn json_persistence_roundtrip() {
+        let mut c = Catalog::new();
+        c.register_job(JobId(1), [0.5; crate::workload::PSI_DIM]);
+        c.register_job(JobId(2), [0.25; crate::workload::PSI_DIM]);
+        let k1 = key(AccelType::K80, 1);
+        let k2 = EstimateKey {
+            accel: AccelType::V100,
+            job: JobId(1),
+            combo: Combo::pair(JobId(1), JobId(2)),
+        };
+        c.write_initial(k1, 0.4);
+        c.push_refinement(k1, 0.6, 3);
+        c.record_measurement(k2, 0.77);
+        let back = Catalog::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.len(), c.len());
+        assert_eq!(back.value(&k1), c.value(&k1));
+        assert_eq!(back.value(&k2), Some(0.77));
+        assert_eq!(back.record(&k1).unwrap().refinements(), 2);
+        assert_eq!(back.record(&k1).unwrap().last_round, 3);
+        assert_eq!(back.psi(JobId(2)), c.psi(JobId(2)));
+        // serialization is deterministic
+        assert_eq!(c.to_json().to_string(), back.to_json().to_string());
+    }
+}

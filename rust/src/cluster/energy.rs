@@ -1,0 +1,176 @@
+//! Energy model γ_a(·) (paper §2.4, objective 2a).
+//!
+//! Power of an accelerator of type `a` at relative load `u ∈ [0, 1]` is
+//! `idle + extra · u^0.8` — idle draw plus a sublinear utilization term,
+//! the shape reported by GPU profiling studies (the paper cites \[10\] for
+//! profiling γ_a). An idle-but-present accelerator still burns its idle
+//! power, which is what makes consolidation onto fewer, faster GPUs
+//! energy-favourable — the effect GOGH's objective exploits.
+
+use std::collections::HashMap;
+
+use super::{AccelId, Placement};
+use crate::workload::{AccelType, JobId};
+
+/// Instantaneous power (watts) of accelerator type `a` at load `u`.
+///
+/// `u` is the hosted combination's aggregate normalized throughput
+/// relative to the accelerator's own solo capability — the `Σ T x`
+/// argument of γ_a in objective (2a).
+pub fn power_watts(a: AccelType, u: f64) -> f64 {
+    let (idle, extra) = a.power_params();
+    let u = u.clamp(0.0, 1.0);
+    idle + extra * u.powf(0.8)
+}
+
+/// Piecewise-linear upper envelope of `power_watts` for the ILP: the
+/// paper notes γ_a can be linearized; since each instance hosts at most
+/// one combination (constraint 2f), the objective is evaluated per-combo
+/// and needs no explicit linearization — this helper exists for the
+/// ablation bench that solves the "linearized-γ" variant instead.
+pub fn power_linearized(a: AccelType, u: f64, segments: usize) -> f64 {
+    let (idle, extra) = a.power_params();
+    let u = u.clamp(0.0, 1.0);
+    // sample the curve at segment knots, take the chord value
+    let seg = (u * segments as f64).floor().min(segments as f64 - 1.0);
+    let u0 = seg / segments as f64;
+    let u1 = (seg + 1.0) / segments as f64;
+    let p0 = idle + extra * u0.powf(0.8);
+    let p1 = idle + extra * u1.powf(0.8);
+    p0 + (p1 - p0) * (u - u0) / (u1 - u0)
+}
+
+/// Integrates cluster energy over simulated time.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    total_joules: f64,
+    /// per-accelerator-type cumulative joules (for the breakdown table)
+    by_type: HashMap<AccelType, f64>,
+    last_t: f64,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accrue energy for the interval `[last_t, t]` given the placement
+    /// and each hosted job's current *measured* normalized throughput.
+    /// `loads` maps accelerator instance → relative load u.
+    pub fn accrue(&mut self, t: f64, spec_accels: &[AccelId], loads: &HashMap<AccelId, f64>) {
+        let dt = (t - self.last_t).max(0.0);
+        self.last_t = t;
+        if dt == 0.0 {
+            return;
+        }
+        for aid in spec_accels {
+            let u = loads.get(aid).copied().unwrap_or(0.0);
+            let p = power_watts(aid.accel, u);
+            self.total_joules += p * dt;
+            *self.by_type.entry(aid.accel).or_default() += p * dt;
+        }
+    }
+
+    pub fn total_joules(&self) -> f64 {
+        self.total_joules
+    }
+
+    pub fn joules_by_type(&self) -> &HashMap<AccelType, f64> {
+        &self.by_type
+    }
+
+    pub fn reset_clock(&mut self, t: f64) {
+        self.last_t = t;
+    }
+}
+
+/// Compute per-instance relative loads for a placement: the load of an
+/// instance is the sum of its hosted jobs' throughputs divided by the
+/// instance's best solo capability (so a well-packed pair ≈ 1.0).
+pub fn placement_loads(
+    placement: &Placement,
+    throughput_of: &dyn Fn(JobId, AccelId) -> f64,
+    solo_capability: &dyn Fn(AccelId) -> f64,
+) -> HashMap<AccelId, f64> {
+    let mut loads = HashMap::new();
+    for (aid, combo) in placement.iter() {
+        let total: f64 = combo.jobs().iter().map(|&j| throughput_of(j, *aid)).sum();
+        let cap = solo_capability(*aid).max(1e-9);
+        loads.insert(*aid, (total / cap).clamp(0.0, 1.0));
+    }
+    loads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Combo;
+
+    #[test]
+    fn power_is_monotone_in_load() {
+        for a in crate::workload::ACCEL_TYPES {
+            let mut last = 0.0;
+            for i in 0..=10 {
+                let p = power_watts(a, i as f64 / 10.0);
+                assert!(p >= last);
+                last = p;
+            }
+        }
+    }
+
+    #[test]
+    fn idle_power_is_nonzero() {
+        assert!(power_watts(AccelType::K80, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn linearization_error_is_small_with_many_segments() {
+        for a in [AccelType::K80, AccelType::V100] {
+            for i in 0..=20 {
+                let u = i as f64 / 20.0;
+                let exact = power_watts(a, u);
+                let lin = power_linearized(a, u, 16);
+                assert!((exact - lin).abs() / exact < 0.02, "{a:?} u={u}: {exact} vs {lin}");
+            }
+        }
+    }
+
+    #[test]
+    fn meter_integrates_idle_cluster() {
+        let mut m = EnergyMeter::new();
+        let accels = vec![AccelId {
+            server: 0,
+            accel: AccelType::K80,
+        }];
+        m.accrue(10.0, &accels, &HashMap::new());
+        // 10 s at k80 idle (25 W) = 250 J
+        assert!((m.total_joules() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loaded_cluster_burns_more() {
+        let accels = vec![AccelId {
+            server: 0,
+            accel: AccelType::V100,
+        }];
+        let mut idle = EnergyMeter::new();
+        idle.accrue(10.0, &accels, &HashMap::new());
+        let mut busy = EnergyMeter::new();
+        let mut loads = HashMap::new();
+        loads.insert(accels[0], 1.0);
+        busy.accrue(10.0, &accels, &loads);
+        assert!(busy.total_joules() > idle.total_joules());
+    }
+
+    #[test]
+    fn placement_loads_clamped_unit() {
+        let mut p = Placement::new();
+        let aid = AccelId {
+            server: 0,
+            accel: AccelType::K80,
+        };
+        p.assign(aid, Combo::pair(JobId(1), JobId(2)));
+        let loads = placement_loads(&p, &|_, _| 0.9, &|_| 1.0);
+        assert_eq!(loads[&aid], 1.0); // 1.8 clamped
+    }
+}

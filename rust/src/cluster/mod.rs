@@ -1,0 +1,316 @@
+//! Heterogeneous cluster substrate: servers × accelerator instances,
+//! placement state, energy accounting and the monitoring module.
+//!
+//! The paper assumes a real cluster; here the substrate is a
+//! discrete-time simulator backed by the [`crate::workload::ThroughputOracle`]
+//! ground truth. GOGH itself only ever sees the oracle through
+//! [`monitor::Monitor`] measurements (with noise) — exactly the
+//! observability a real deployment would have.
+
+pub mod energy;
+pub mod monitor;
+
+pub use energy::{power_watts, EnergyMeter};
+pub use monitor::{Measurement, Monitor};
+
+use std::collections::HashMap;
+
+use crate::workload::{AccelType, Combo, JobId, JobSpec};
+
+/// Identifies one accelerator instance: (server, accel type).
+/// The ILP's x^c_{a,s} variables range over these (constraint 2f: each
+/// instance hosts at most one combination).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AccelId {
+    pub server: u32,
+    pub accel: AccelType,
+}
+
+impl std::fmt::Display for AccelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}/{}", self.server, self.accel.name())
+    }
+}
+
+/// Static cluster topology.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Accelerator instances; a server may appear with several types.
+    pub accels: Vec<AccelId>,
+}
+
+impl ClusterSpec {
+    /// A balanced heterogeneous cluster: `servers_per_type` servers for
+    /// each of the six Gavel accelerator types.
+    pub fn balanced(servers_per_type: u32) -> Self {
+        let mut accels = vec![];
+        let mut server = 0;
+        for a in crate::workload::ACCEL_TYPES {
+            for _ in 0..servers_per_type {
+                accels.push(AccelId { server, accel: a });
+                server += 1;
+            }
+        }
+        Self { accels }
+    }
+
+    /// A custom mix: `(accel type, count)` pairs.
+    pub fn mix(counts: &[(AccelType, u32)]) -> Self {
+        let mut accels = vec![];
+        let mut server = 0;
+        for &(a, n) in counts {
+            for _ in 0..n {
+                accels.push(AccelId { server, accel: a });
+                server += 1;
+            }
+        }
+        Self { accels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.accels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accels.is_empty()
+    }
+}
+
+/// Live placement state of the cluster.
+#[derive(Debug, Clone, Default)]
+pub struct Placement {
+    /// accelerator instance -> hosted combination.
+    by_accel: HashMap<AccelId, Combo>,
+    /// job -> accelerator instances running it (|set| ≤ D_j).
+    by_job: HashMap<JobId, Vec<AccelId>>,
+}
+
+impl Placement {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Assign `combo` to `accel`, replacing whatever ran there.
+    pub fn assign(&mut self, accel: AccelId, combo: Combo) {
+        self.clear_accel(accel);
+        for j in combo.jobs() {
+            self.by_job.entry(j).or_default().push(accel);
+        }
+        self.by_accel.insert(accel, combo);
+    }
+
+    /// Remove whatever combination runs on `accel`.
+    pub fn clear_accel(&mut self, accel: AccelId) {
+        if let Some(old) = self.by_accel.remove(&accel) {
+            for j in old.jobs() {
+                if let Some(v) = self.by_job.get_mut(&j) {
+                    v.retain(|&a| a != accel);
+                    if v.is_empty() {
+                        self.by_job.remove(&j);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Remove a finished/departed job everywhere. Co-runners are
+    /// re-hosted as solos on the same instance.
+    pub fn remove_job(&mut self, j: JobId) {
+        let accels: Vec<AccelId> = self.accels_of(j).to_vec();
+        for a in accels {
+            let combo = self.by_accel[&a];
+            self.clear_accel(a);
+            if let Some(other) = combo.other(j) {
+                self.assign(a, Combo::Solo(other));
+            }
+        }
+    }
+
+    pub fn combo_on(&self, accel: AccelId) -> Option<&Combo> {
+        self.by_accel.get(&accel)
+    }
+
+    pub fn accels_of(&self, j: JobId) -> &[AccelId] {
+        self.by_job.get(&j).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn is_placed(&self, j: JobId) -> bool {
+        self.by_job.contains_key(&j)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&AccelId, &Combo)> {
+        self.by_accel.iter()
+    }
+
+    pub fn busy_accels(&self) -> usize {
+        self.by_accel.len()
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &JobId> {
+        self.by_job.keys()
+    }
+
+    /// Number of placement moves needed to turn `self` into `target`
+    /// (migration cost metric reported by the coordinator).
+    pub fn diff_count(&self, target: &Placement) -> usize {
+        let mut moves = 0;
+        for (a, c) in target.iter() {
+            if self.by_accel.get(a) != Some(c) {
+                moves += 1;
+            }
+        }
+        for a in self.by_accel.keys() {
+            if !target.by_accel.contains_key(a) {
+                moves += 1;
+            }
+        }
+        moves
+    }
+}
+
+/// The simulated cluster: spec + placement + job registry + clock.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    pub placement: Placement,
+    jobs: HashMap<JobId, JobSpec>,
+    now: f64,
+}
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec) -> Self {
+        Self {
+            spec,
+            placement: Placement::new(),
+            jobs: HashMap::new(),
+            now: 0.0,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn advance_to(&mut self, t: f64) {
+        debug_assert!(t >= self.now);
+        self.now = t;
+    }
+
+    pub fn add_job(&mut self, job: JobSpec) {
+        self.jobs.insert(job.id, job);
+    }
+
+    pub fn remove_job(&mut self, j: JobId) -> Option<JobSpec> {
+        self.placement.remove_job(j);
+        self.jobs.remove(&j)
+    }
+
+    pub fn job(&self, j: JobId) -> Option<&JobSpec> {
+        self.jobs.get(&j)
+    }
+
+    pub fn job_mut(&mut self, j: JobId) -> Option<&mut JobSpec> {
+        self.jobs.get_mut(&j)
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &JobSpec> {
+        self.jobs.values()
+    }
+
+    pub fn active_job_ids(&self) -> Vec<JobId> {
+        let mut v: Vec<JobId> = self.jobs.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelFamily;
+
+    fn job(id: u32) -> JobSpec {
+        JobSpec {
+            id: JobId(id),
+            family: ModelFamily::ResNet18,
+            batch_size: 32,
+            replication: 1,
+            min_throughput: 0.1,
+            distributability: 2,
+            work: 100.0,
+        }
+    }
+
+    fn aid(s: u32) -> AccelId {
+        AccelId {
+            server: s,
+            accel: AccelType::V100,
+        }
+    }
+
+    #[test]
+    fn balanced_spec_has_six_types() {
+        let spec = ClusterSpec::balanced(2);
+        assert_eq!(spec.len(), 12);
+        let types: std::collections::HashSet<_> = spec.accels.iter().map(|a| a.accel).collect();
+        assert_eq!(types.len(), 6);
+    }
+
+    #[test]
+    fn assign_replaces_previous_combo() {
+        let mut p = Placement::new();
+        p.assign(aid(0), Combo::Solo(JobId(1)));
+        p.assign(aid(0), Combo::pair(JobId(2), JobId(3)));
+        assert!(!p.is_placed(JobId(1)));
+        assert_eq!(p.combo_on(aid(0)), Some(&Combo::pair(JobId(2), JobId(3))));
+        assert_eq!(p.accels_of(JobId(2)), &[aid(0)]);
+    }
+
+    #[test]
+    fn remove_job_rehosts_co_runner_solo() {
+        let mut p = Placement::new();
+        p.assign(aid(0), Combo::pair(JobId(1), JobId(2)));
+        p.remove_job(JobId(1));
+        assert_eq!(p.combo_on(aid(0)), Some(&Combo::Solo(JobId(2))));
+        assert!(p.is_placed(JobId(2)));
+        assert!(!p.is_placed(JobId(1)));
+    }
+
+    #[test]
+    fn distributed_job_tracked_on_all_accels() {
+        let mut p = Placement::new();
+        p.assign(aid(0), Combo::Solo(JobId(1)));
+        p.assign(aid(1), Combo::Solo(JobId(1)));
+        assert_eq!(p.accels_of(JobId(1)).len(), 2);
+        p.remove_job(JobId(1));
+        assert_eq!(p.busy_accels(), 0);
+    }
+
+    #[test]
+    fn diff_count_counts_moves() {
+        let mut a = Placement::new();
+        a.assign(aid(0), Combo::Solo(JobId(1)));
+        let mut b = Placement::new();
+        b.assign(aid(0), Combo::Solo(JobId(1)));
+        assert_eq!(a.diff_count(&b), 0);
+        b.assign(aid(1), Combo::Solo(JobId(2)));
+        assert_eq!(a.diff_count(&b), 1);
+        b.assign(aid(0), Combo::Solo(JobId(3)));
+        assert_eq!(a.diff_count(&b), 2);
+    }
+
+    #[test]
+    fn cluster_job_lifecycle() {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        c.add_job(job(1));
+        assert!(c.job(JobId(1)).is_some());
+        c.placement.assign(c.spec.accels[0], Combo::Solo(JobId(1)));
+        let removed = c.remove_job(JobId(1));
+        assert!(removed.is_some());
+        assert_eq!(c.placement.busy_accels(), 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! The monitoring module (paper §2.1): measures the *actual* throughput
+//! of each running job on each accelerator after placement.
+//!
+//! In this substrate, measurements come from the ground-truth oracle
+//! plus multiplicative lognormal noise — the observability GOGH would
+//! have via job-iteration counters in a real deployment. GOGH never
+//! touches the oracle directly; everything it learns flows through
+//! [`Monitor::sample`].
+
+use crate::util::Rng;
+
+use super::{AccelId, Cluster};
+use crate::workload::{Combo, JobId, ThroughputOracle};
+
+/// One throughput measurement: job `job` in combination `combo` on
+/// accelerator `accel` achieved `throughput` (normalized).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub job: JobId,
+    pub combo: Combo,
+    pub accel: AccelId,
+    pub throughput: f64,
+    pub at: f64,
+}
+
+/// Samples noisy measurements of the current placement.
+#[derive(Debug, Clone)]
+pub struct Monitor {
+    oracle: ThroughputOracle,
+    /// multiplicative noise sigma (lognormal); 0 disables noise.
+    pub noise_sigma: f64,
+    rng: Rng,
+}
+
+impl Monitor {
+    pub fn new(oracle: ThroughputOracle, noise_sigma: f64, seed: u64) -> Self {
+        Self {
+            oracle,
+            noise_sigma,
+            rng: Rng::seed_from_u64(seed ^ 0x304),
+        }
+    }
+
+    /// Ground-truth oracle — exposed ONLY for metrics (estimation-error
+    /// reporting) and the oracle baseline; the GOGH decision path must
+    /// not call this.
+    pub fn oracle(&self) -> &ThroughputOracle {
+        &self.oracle
+    }
+
+    /// Measure every (job, accelerator) of the current placement.
+    pub fn sample(&mut self, cluster: &Cluster) -> Vec<Measurement> {
+        let mut out = vec![];
+        let mut placements: Vec<(AccelId, Combo)> =
+            cluster.placement.iter().map(|(a, c)| (*a, *c)).collect();
+        placements.sort_by_key(|(a, _)| *a); // deterministic order
+        for (aid, combo) in placements {
+            for j in combo.jobs() {
+                let job = cluster.job(j).expect("placed job must be registered");
+                let lookup = |id: JobId| cluster.job(id).cloned();
+                let truth = self.oracle.throughput(job, &combo, aid.accel, &lookup);
+                let noise = self.rng.lognormal(self.noise_sigma);
+                out.push(Measurement {
+                    job: j,
+                    combo,
+                    accel: aid,
+                    throughput: (truth * noise).max(0.0),
+                    at: cluster.now(),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::workload::{JobSpec, ModelFamily};
+
+    fn setup() -> (Cluster, Monitor) {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        c.add_job(JobSpec {
+            id: JobId(1),
+            family: ModelFamily::ResNet50,
+            batch_size: 64,
+            replication: 1,
+            min_throughput: 0.1,
+            distributability: 1,
+            work: 10.0,
+        });
+        c.add_job(JobSpec {
+            id: JobId(2),
+            family: ModelFamily::Recommendation,
+            batch_size: 1024,
+            replication: 1,
+            min_throughput: 0.1,
+            distributability: 1,
+            work: 10.0,
+        });
+        let aid = c.spec.accels[2]; // a v100
+        c.placement.assign(aid, Combo::pair(JobId(1), JobId(2)));
+        let monitor = Monitor::new(ThroughputOracle::new(9), 0.0, 1);
+        (c, monitor)
+    }
+
+    #[test]
+    fn noiseless_sample_equals_oracle() {
+        let (c, mut m) = setup();
+        let samples = m.sample(&c);
+        assert_eq!(samples.len(), 2);
+        for s in &samples {
+            let job = c.job(s.job).unwrap();
+            let lookup = |id: JobId| c.job(id).cloned();
+            let truth = m.oracle().throughput(job, &s.combo, s.accel.accel, &lookup);
+            assert!((s.throughput - truth).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn noisy_sample_is_near_oracle() {
+        let (c, _) = setup();
+        let mut m = Monitor::new(ThroughputOracle::new(9), 0.05, 1);
+        let mut rel_errs = vec![];
+        for _ in 0..50 {
+            for s in m.sample(&c) {
+                let job = c.job(s.job).unwrap();
+                let lookup = |id: JobId| c.job(id).cloned();
+                let truth = m.oracle().throughput(job, &s.combo, s.accel.accel, &lookup);
+                rel_errs.push((s.throughput / truth - 1.0).abs());
+            }
+        }
+        let mean: f64 = rel_errs.iter().sum::<f64>() / rel_errs.len() as f64;
+        assert!(mean < 0.15, "noise too large: {mean}");
+        assert!(mean > 0.005, "noise suspiciously absent: {mean}");
+    }
+
+    #[test]
+    fn sample_order_is_deterministic() {
+        let (c, mut m1) = setup();
+        let (_, mut m2) = setup();
+        assert_eq!(m1.sample(&c), m2.sample(&c));
+    }
+}

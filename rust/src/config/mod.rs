@@ -1,0 +1,366 @@
+//! Configuration system: JSON-serializable experiment configuration
+//! covering the cluster mix, trace, estimator choice and optimizer
+//! limits. `ExperimentConfig::default()` is the quickstart setup; the
+//! CLI (`gogh simulate --config exp.json`) and every bench build from
+//! this type.
+//!
+//! (Offline-build note: config files are JSON via the in-tree parser —
+//! see Cargo.toml.)
+
+use crate::util::Json;
+use crate::workload::{AccelType, TraceConfig, ACCEL_TYPES};
+use crate::Result;
+
+/// Which neural architecture drives an estimator (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Ff,
+    Rnn,
+    Transformer,
+}
+
+impl Arch {
+    pub fn key(self) -> &'static str {
+        match self {
+            Arch::Ff => "ff",
+            Arch::Rnn => "rnn",
+            Arch::Transformer => "transformer",
+        }
+    }
+
+    pub fn from_key(k: &str) -> Result<Self> {
+        Ok(match k {
+            "ff" => Arch::Ff,
+            "rnn" => Arch::Rnn,
+            "transformer" => Arch::Transformer,
+            other => anyhow::bail!("unknown arch {other:?}"),
+        })
+    }
+
+    pub const ALL: [Arch; 3] = [Arch::Ff, Arch::Rnn, Arch::Transformer];
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
+/// Cluster composition.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Instances per accelerator type, `(type, count)`.
+    pub accel_mix: Vec<(AccelType, u32)>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            accel_mix: ACCEL_TYPES.iter().map(|&a| (a, 2)).collect(),
+        }
+    }
+}
+
+/// Estimator / learning-loop configuration.
+#[derive(Debug, Clone)]
+pub struct EstimatorConfig {
+    /// P1 architecture (paper's best: RNN).
+    pub p1_arch: Arch,
+    /// P2 architecture (paper's best: FF).
+    pub p2_arch: Arch,
+    /// Directory with AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+    /// Online training steps per monitoring round (0 disables online
+    /// learning — the "frozen estimator" ablation).
+    pub online_steps_per_round: usize,
+    /// Pre-training steps on bootstrap (historical) data at startup.
+    pub bootstrap_steps: usize,
+    /// Replay-buffer capacity for online training samples.
+    pub replay_capacity: usize,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        Self {
+            p1_arch: Arch::Rnn,
+            p2_arch: Arch::Ff,
+            artifacts_dir: "artifacts".to_string(),
+            online_steps_per_round: 4,
+            bootstrap_steps: 300,
+            replay_capacity: 8192,
+        }
+    }
+}
+
+/// Optimizer (Problem 1) limits.
+#[derive(Debug, Clone)]
+pub struct OptimizerConfig {
+    pub max_pairs_per_job: usize,
+    pub max_nodes: usize,
+    pub time_limit_s: f64,
+    /// SLO slack penalty (soft constraints; see problem1.rs).
+    pub slack_penalty: f64,
+    /// Lagrangian throughput bonus λ (see problem1.rs; 0 = the paper's
+    /// literal instantaneous-power objective).
+    pub throughput_bonus: f64,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        Self {
+            max_pairs_per_job: 3,
+            // Anytime limits: the greedy warm start + per-node rounding
+            // heuristic give a feasible incumbent immediately; these caps
+            // bound the decision-path latency (§Perf). The LP relaxation
+            // of Problem 1 is fixed-charge-weak, so proving optimality at
+            // |J| ≥ 12 is not worth the wall-clock on the request path.
+            max_nodes: 2000,
+            time_limit_s: 2.0,
+            slack_penalty: 2000.0,
+            throughput_bonus: 300.0,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub trace: TraceConfig,
+    pub estimator: EstimatorConfig,
+    pub optimizer: OptimizerConfig,
+    /// Monitoring interval (seconds of simulated time).
+    pub monitor_interval_s: f64,
+    /// Measurement noise sigma.
+    pub noise_sigma: f64,
+    /// Ground-truth / trace seed.
+    pub seed: u64,
+    /// Optional CSV of measured throughputs (the real Gavel dataset —
+    /// see `workload/gavel_csv.rs`) overlaid on the synthetic oracle.
+    pub gavel_csv: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            cluster: Default::default(),
+            trace: Default::default(),
+            estimator: Default::default(),
+            optimizer: Default::default(),
+            monitor_interval_s: 30.0,
+            noise_sigma: 0.03,
+            seed: 17,
+            gavel_csv: None,
+        }
+    }
+}
+
+fn accel_from_name(n: &str) -> Result<AccelType> {
+    ACCEL_TYPES
+        .iter()
+        .copied()
+        .find(|a| a.name() == n)
+        .ok_or_else(|| anyhow::anyhow!("unknown accel type {n:?}"))
+}
+
+impl ExperimentConfig {
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(c) = j.get("cluster") {
+            if let Some(mix) = c.get("accel_mix").and_then(|m| m.as_object()) {
+                cfg.cluster.accel_mix = mix
+                    .iter()
+                    .map(|(k, v)| Ok((accel_from_name(k)?, v.as_f64().unwrap_or(0.0) as u32)))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+        }
+        if let Some(t) = j.get("trace") {
+            if let Some(v) = t.get("n_jobs") {
+                cfg.trace.n_jobs = v.as_usize().unwrap_or(cfg.trace.n_jobs);
+            }
+            if let Some(v) = t.get("mean_interarrival_s") {
+                cfg.trace.mean_interarrival_s = v.as_f64().unwrap_or(cfg.trace.mean_interarrival_s);
+            }
+            if let Some(v) = t.get("mean_work_s") {
+                cfg.trace.mean_work_s = v.as_f64().unwrap_or(cfg.trace.mean_work_s);
+            }
+            if let Some(v) = t.get("slo_fraction") {
+                cfg.trace.slo_fraction = v.as_f64().unwrap_or(cfg.trace.slo_fraction);
+            }
+            if let Some(v) = t.get("max_distributability") {
+                cfg.trace.max_distributability = v.as_f64().unwrap_or(2.0) as u32;
+            }
+            if let Some(v) = t.get("seed") {
+                cfg.trace.seed = v.as_u64().unwrap_or(cfg.trace.seed);
+            }
+        }
+        if let Some(e) = j.get("estimator") {
+            if let Some(v) = e.get("p1_arch") {
+                cfg.estimator.p1_arch = Arch::from_key(v.as_str().unwrap_or("rnn"))?;
+            }
+            if let Some(v) = e.get("p2_arch") {
+                cfg.estimator.p2_arch = Arch::from_key(v.as_str().unwrap_or("ff"))?;
+            }
+            if let Some(v) = e.get("artifacts_dir") {
+                cfg.estimator.artifacts_dir = v.as_str().unwrap_or("artifacts").to_string();
+            }
+            if let Some(v) = e.get("online_steps_per_round") {
+                cfg.estimator.online_steps_per_round = v.as_usize().unwrap_or(4);
+            }
+            if let Some(v) = e.get("bootstrap_steps") {
+                cfg.estimator.bootstrap_steps = v.as_usize().unwrap_or(300);
+            }
+            if let Some(v) = e.get("replay_capacity") {
+                cfg.estimator.replay_capacity = v.as_usize().unwrap_or(8192);
+            }
+        }
+        if let Some(o) = j.get("optimizer") {
+            if let Some(v) = o.get("max_pairs_per_job") {
+                cfg.optimizer.max_pairs_per_job = v.as_usize().unwrap_or(3);
+            }
+            if let Some(v) = o.get("max_nodes") {
+                cfg.optimizer.max_nodes = v.as_usize().unwrap_or(4000);
+            }
+            if let Some(v) = o.get("time_limit_s") {
+                cfg.optimizer.time_limit_s = v.as_f64().unwrap_or(5.0);
+            }
+            if let Some(v) = o.get("slack_penalty") {
+                cfg.optimizer.slack_penalty = v.as_f64().unwrap_or(2000.0);
+            }
+            if let Some(v) = o.get("throughput_bonus") {
+                cfg.optimizer.throughput_bonus = v.as_f64().unwrap_or(300.0);
+            }
+        }
+        if let Some(v) = j.get("monitor_interval_s") {
+            cfg.monitor_interval_s = v.as_f64().unwrap_or(30.0);
+        }
+        if let Some(v) = j.get("noise_sigma") {
+            cfg.noise_sigma = v.as_f64().unwrap_or(0.03);
+        }
+        if let Some(v) = j.get("seed") {
+            cfg.seed = v.as_u64().unwrap_or(17);
+        }
+        if let Some(v) = j.get("gavel_csv") {
+            cfg.gavel_csv = v.as_str().map(|s| s.to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "cluster",
+                Json::obj(vec![(
+                    "accel_mix",
+                    Json::Object(
+                        self.cluster
+                            .accel_mix
+                            .iter()
+                            .map(|(a, n)| (a.name().to_string(), Json::from(*n)))
+                            .collect(),
+                    ),
+                )]),
+            ),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("n_jobs", self.trace.n_jobs.into()),
+                    ("mean_interarrival_s", self.trace.mean_interarrival_s.into()),
+                    ("mean_work_s", self.trace.mean_work_s.into()),
+                    ("slo_fraction", self.trace.slo_fraction.into()),
+                    ("max_distributability", self.trace.max_distributability.into()),
+                    ("seed", self.trace.seed.into()),
+                ]),
+            ),
+            (
+                "estimator",
+                Json::obj(vec![
+                    ("p1_arch", self.estimator.p1_arch.key().into()),
+                    ("p2_arch", self.estimator.p2_arch.key().into()),
+                    ("artifacts_dir", self.estimator.artifacts_dir.as_str().into()),
+                    (
+                        "online_steps_per_round",
+                        self.estimator.online_steps_per_round.into(),
+                    ),
+                    ("bootstrap_steps", self.estimator.bootstrap_steps.into()),
+                    ("replay_capacity", self.estimator.replay_capacity.into()),
+                ]),
+            ),
+            (
+                "optimizer",
+                Json::obj(vec![
+                    ("max_pairs_per_job", self.optimizer.max_pairs_per_job.into()),
+                    ("max_nodes", self.optimizer.max_nodes.into()),
+                    ("time_limit_s", self.optimizer.time_limit_s.into()),
+                    ("slack_penalty", self.optimizer.slack_penalty.into()),
+                    ("throughput_bonus", self.optimizer.throughput_bonus.into()),
+                ]),
+            ),
+            ("monitor_interval_s", self.monitor_interval_s.into()),
+            ("noise_sigma", self.noise_sigma.into()),
+            ("seed", self.seed.into()),
+            (
+                "gavel_csv",
+                self.gavel_csv.as_deref().map(Json::from).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Build the ground-truth oracle this config describes (synthetic,
+    /// with real measured overlays when `gavel_csv` is set).
+    pub fn build_oracle(&self) -> Result<crate::workload::ThroughputOracle> {
+        let oracle = crate::workload::ThroughputOracle::new(self.seed);
+        match &self.gavel_csv {
+            None => Ok(oracle),
+            Some(path) => {
+                let table =
+                    crate::workload::ThroughputTable::load(std::path::Path::new(path))?;
+                Ok(oracle.with_table(table))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let cfg = ExperimentConfig::default();
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json(&text).unwrap();
+        assert_eq!(back.estimator.p1_arch, Arch::Rnn);
+        assert_eq!(back.cluster.accel_mix.len(), 6);
+        assert_eq!(back.monitor_interval_s, cfg.monitor_interval_s);
+        assert_eq!(back.trace.n_jobs, cfg.trace.n_jobs);
+        assert_eq!(back.optimizer.max_nodes, cfg.optimizer.max_nodes);
+    }
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let cfg = ExperimentConfig::from_json(r#"{"seed": 42, "trace": {"n_jobs": 7}}"#).unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.trace.n_jobs, 7);
+        assert_eq!(cfg.estimator.p2_arch, Arch::Ff);
+    }
+
+    #[test]
+    fn arch_keys_match_manifest_names() {
+        assert_eq!(Arch::Ff.key(), "ff");
+        assert_eq!(Arch::from_key("transformer").unwrap(), Arch::Transformer);
+        assert!(Arch::from_key("mlp").is_err());
+    }
+
+    #[test]
+    fn bad_accel_name_is_error() {
+        assert!(
+            ExperimentConfig::from_json(r#"{"cluster": {"accel_mix": {"h100": 2}}}"#).is_err()
+        );
+    }
+}

@@ -1,0 +1,514 @@
+//! The GOGH coordinator: online P1 → ILP → monitor → P2 loop (Fig. 1).
+//!
+//! [`GoghScheduler`] implements [`Scheduler`] over a live PJRT runtime:
+//!
+//! * **arrival** — register Ψ, pick the most similar measured job j2
+//!   from the Catalog, build Eq. 1 rows for every accelerator type ×
+//!   co-runner candidate, run the AOT-compiled P1, and write the round-0
+//!   estimates into the Catalog; then solve Problem 1 over the current
+//!   estimates and bind the result onto instances.
+//! * **monitoring** — record measurements, score the pre-measurement
+//!   estimates (the system's reported estimation MAE), build Eq. 3 rows
+//!   and run P2 to refine every other GPU type's estimate (Eq. 4), then
+//!   take a few Adam steps on both networks from the replay buffers
+//!   (continuous learning; the paper's feedback loop).
+//!
+//! [`Gogh`] is the top-level system: config → engine + scheduler +
+//! simulator, with catalog history seeding and estimator bootstrap
+//! training.
+
+use std::collections::HashSet;
+
+use crate::catalog::{Catalog, EstimateKey, SimilarityIndex};
+use crate::cluster::{Cluster, ClusterSpec, Measurement, Placement};
+use crate::config::ExperimentConfig;
+use crate::coordinator::history;
+use crate::coordinator::optimizer::Optimizer;
+use crate::coordinator::refinement::{self, catalog_value};
+use crate::coordinator::scheduler::{Scheduler, SimDriver};
+use crate::metrics::{ErrorTracker, RunReport};
+use crate::runtime::dataset::Sample;
+use crate::runtime::{Engine, Estimator};
+use crate::workload::encoding::p1_row;
+use crate::workload::{AccelType, Combo, JobId, ThroughputOracle, Trace, ACCEL_TYPES};
+use crate::Result;
+
+/// Knobs for the scheduler (subset of [`ExperimentConfig`] plus history
+/// size; see config.rs for field docs).
+#[derive(Debug, Clone)]
+pub struct GoghOptions {
+    pub estimator: crate::config::EstimatorConfig,
+    pub optimizer: crate::config::OptimizerConfig,
+    /// historical jobs seeded into the catalog at startup.
+    pub history_jobs: usize,
+    /// Apply P2 cross-GPU refinement (Eq. 3/4). Disabling it is the
+    /// "P1-only" ablation of `examples/ablation_refinement.rs`.
+    pub enable_refinement: bool,
+    /// Active-exploration probability (extension of the paper's
+    /// future-work direction): with probability ε per allocation round,
+    /// one job is deliberately moved to its least-measured accelerator
+    /// type, feeding P2 with cross-GPU observations it would otherwise
+    /// never get. 0 disables (the paper's baseline behaviour).
+    pub exploration_epsilon: f64,
+    pub seed: u64,
+}
+
+impl Default for GoghOptions {
+    fn default() -> Self {
+        Self {
+            estimator: Default::default(),
+            optimizer: Default::default(),
+            history_jobs: 24,
+            enable_refinement: true,
+            exploration_epsilon: 0.0,
+            seed: 17,
+        }
+    }
+}
+
+pub struct GoghScheduler {
+    pub catalog: Catalog,
+    p1: Estimator,
+    p2: Estimator,
+    opt: Optimizer,
+    options: GoghOptions,
+    /// jobs whose round-0 estimates were already produced
+    initialized: HashSet<JobId>,
+    replay_p1: Vec<Sample>,
+    replay_p2: Vec<Sample>,
+    errors: ErrorTracker,
+    round: u32,
+    rng: crate::util::Rng,
+    p1_calls: usize,
+    p1_seconds: f64,
+}
+
+impl GoghScheduler {
+    /// Build over an engine, seeding history + bootstrap-training the
+    /// estimators from the Catalog.
+    pub fn new(engine: &Engine, oracle_for_history: &ThroughputOracle, options: GoghOptions) -> Result<Self> {
+        let p1 = Estimator::new(engine, &format!("p1_{}", options.estimator.p1_arch.key()))?;
+        let p2 = Estimator::new(engine, &format!("p2_{}", options.estimator.p2_arch.key()))?;
+        let mut s = Self {
+            catalog: Catalog::new(),
+            p1,
+            p2,
+            opt: Optimizer::new(options.optimizer.clone()),
+            initialized: HashSet::new(),
+            replay_p1: vec![],
+            replay_p2: vec![],
+            errors: ErrorTracker::new(),
+            round: 0,
+            rng: crate::util::Rng::seed_from_u64(options.seed ^ 0x6064),
+            p1_calls: 0,
+            p1_seconds: 0.0,
+            options,
+        };
+        if s.options.history_jobs > 0 {
+            history::seed_catalog(
+                &mut s.catalog,
+                oracle_for_history,
+                s.options.history_jobs,
+                0.02,
+                s.options.seed,
+            );
+            s.bootstrap()?;
+        }
+        Ok(s)
+    }
+
+    /// Pre-train P1/P2 on catalog history (build-time data only).
+    fn bootstrap(&mut self) -> Result<()> {
+        let steps = self.options.estimator.bootstrap_steps;
+        if steps == 0 {
+            return Ok(());
+        }
+        let n = (steps * 64).min(self.options.estimator.replay_capacity * 4);
+        self.replay_p1 = history::p1_samples_from_catalog(&self.catalog, n, self.options.seed);
+        self.replay_p2 =
+            history::p2_samples_from_catalog(&self.catalog, n, 0.15, self.options.seed);
+        for _ in 0..steps {
+            self.train_once()?;
+        }
+        self.trim_replay();
+        Ok(())
+    }
+
+    fn trim_replay(&mut self) {
+        let cap = self.options.estimator.replay_capacity;
+        let excess = self.replay_p1.len().saturating_sub(cap);
+        if excess > 0 {
+            self.replay_p1.drain(0..excess);
+        }
+        let excess = self.replay_p2.len().saturating_sub(cap);
+        if excess > 0 {
+            self.replay_p2.drain(0..excess);
+        }
+    }
+
+    /// One Adam step for each network on a random replay batch.
+    fn train_once(&mut self) -> Result<()> {
+        for (est, replay) in [
+            (&mut self.p1, &self.replay_p1),
+            (&mut self.p2, &self.replay_p2),
+        ] {
+            if replay.len() < 8 {
+                continue;
+            }
+            let b = est.spec().train_batch.min(replay.len());
+            let mut idx: Vec<usize> = (0..replay.len()).collect();
+            self.rng.shuffle(&mut idx);
+            let xs: Vec<Vec<f32>> = idx[..b].iter().map(|&i| replay[i].x.clone()).collect();
+            let ys: Vec<[f32; 2]> = idx[..b].iter().map(|&i| replay[i].y).collect();
+            est.train_step(&xs, &ys)?;
+        }
+        Ok(())
+    }
+
+    /// Round-0 estimation for a new job (paper §2.3): Eq. 1 rows over
+    /// every accel type × (solo + each active co-runner), one batched P1
+    /// call, estimates written into the Catalog.
+    fn initial_estimates(&mut self, cluster: &Cluster, j1: JobId) -> Result<()> {
+        let spec = cluster.job(j1).expect("job registered").clone();
+        let psi_j1 = spec.psi();
+        self.catalog.register_job(j1, psi_j1);
+
+        // most similar job with measured history
+        let j2 = {
+            let idx = SimilarityIndex::new(&self.catalog);
+            idx.most_similar(&psi_j1, &[j1], true)
+        };
+        let Some(j2) = j2 else {
+            // cold catalog: write generation-speed priors
+            for &a in ACCEL_TYPES.iter() {
+                let v = 0.4 * a.base_speed() / AccelType::V100.base_speed();
+                self.catalog.write_initial(
+                    EstimateKey {
+                        accel: a,
+                        job: j1,
+                        combo: Combo::Solo(j1),
+                    },
+                    v,
+                );
+            }
+            self.initialized.insert(j1);
+            return Ok(());
+        };
+        let psi_j2 = *self.catalog.psi(j2).unwrap();
+
+        // co-runner candidates: the empty job + every other active job
+        let mut others: Vec<JobId> = cluster
+            .active_job_ids()
+            .into_iter()
+            .filter(|&j| j != j1)
+            .collect();
+        others.sort();
+
+        let mut rows: Vec<Vec<f32>> = vec![];
+        let mut keys: Vec<(EstimateKey, Option<EstimateKey>)> = vec![];
+        for &a in ACCEL_TYPES.iter() {
+            // solo row (j3 = j0)
+            let t_j2_solo = catalog_value(&self.catalog, a, j2, &Combo::Solo(j2));
+            rows.push(
+                p1_row(
+                    &psi_j2,
+                    &crate::workload::encoding::PSI_EMPTY,
+                    a,
+                    t_j2_solo as f32,
+                    0.0,
+                    &psi_j1,
+                )
+                .to_vec(),
+            );
+            keys.push((
+                EstimateKey {
+                    accel: a,
+                    job: j1,
+                    combo: Combo::Solo(j1),
+                },
+                None,
+            ));
+            // pair rows
+            for &j3 in &others {
+                let Some(psi_j3) = self.catalog.psi(j3).copied() else {
+                    continue;
+                };
+                // historical analogue of the (j2, j3) co-location: j2's
+                // measured pair with the peer most similar to j3, falling
+                // back to solo values (documented Eq. 1 approximation).
+                let (t_j2, t_j3) = self.historical_pair_inputs(a, j2, j3);
+                rows.push(p1_row(&psi_j2, &psi_j3, a, t_j2 as f32, t_j3 as f32, &psi_j1).to_vec());
+                let combo = Combo::pair(j1, j3);
+                keys.push((
+                    EstimateKey {
+                        accel: a,
+                        job: j1,
+                        combo,
+                    },
+                    Some(EstimateKey {
+                        accel: a,
+                        job: j3,
+                        combo,
+                    }),
+                ));
+            }
+        }
+
+        let t0 = std::time::Instant::now();
+        let preds = self.p1.predict(&rows)?;
+        self.p1_seconds += t0.elapsed().as_secs_f64();
+        self.p1_calls += 1;
+
+        for ((k1, k3), pred) in keys.iter().zip(&preds) {
+            self.catalog
+                .write_initial(*k1, (pred[0] as f64).clamp(0.0, 1.5));
+            if let Some(k3) = k3 {
+                // estimate of the co-runner's degraded throughput; only
+                // written if we have no measurement for it
+                if self.catalog.record(k3).map_or(true, |r| !r.is_measured()) {
+                    self.catalog
+                        .write_initial(*k3, (pred[1] as f64).clamp(0.0, 1.5));
+                }
+            }
+        }
+        self.initialized.insert(j1);
+        Ok(())
+    }
+
+    /// Best available historical inputs for Eq. 1's T_{a,j2}^{(j2,j3)}:
+    /// a measured co-location of j2 on `a` (with any peer), else solo
+    /// values scaled by the pair prior.
+    fn historical_pair_inputs(&self, a: AccelType, j2: JobId, j3: JobId) -> (f64, f64) {
+        let rec = self
+            .catalog
+            .measured_records_of(j2)
+            .into_iter()
+            .find(|(k, _)| k.accel == a && k.combo.len() == 2);
+        if let Some((k, t2)) = rec {
+            let peer = k.combo.other(j2).unwrap();
+            let t_peer = self
+                .catalog
+                .value(&EstimateKey {
+                    accel: a,
+                    job: peer,
+                    combo: k.combo,
+                })
+                .unwrap_or(t2);
+            return (t2, t_peer);
+        }
+        let t2 = catalog_value(&self.catalog, a, j2, &Combo::Solo(j2)) * refinement::PAIR_PRIOR;
+        let t3 = catalog_value(&self.catalog, a, j3, &Combo::Solo(j3)) * refinement::PAIR_PRIOR;
+        (t2, t3)
+    }
+
+    /// Move one randomly chosen job to a free instance of its
+    /// least-measured accelerator type (ε-greedy active exploration).
+    /// Solo placement only, and only when a free instance exists — the
+    /// perturbation trades a little short-term energy/SLO for better
+    /// cross-GPU coverage in the Catalog.
+    fn explore(&mut self, cluster: &Cluster, placement: &mut Placement) {
+        let ids = cluster.active_job_ids();
+        if ids.is_empty() {
+            return;
+        }
+        let j = ids[self.rng.range_usize(0, ids.len())];
+        // least-measured accel type for this job
+        let mut counts: Vec<(usize, AccelType)> = ACCEL_TYPES
+            .iter()
+            .map(|&a| {
+                let n = self
+                    .catalog
+                    .measured_records_of(j)
+                    .iter()
+                    .filter(|(k, _)| k.accel == a)
+                    .count();
+                (n, a)
+            })
+            .collect();
+        counts.sort_by_key(|&(n, a)| (n, a.index()));
+        for (_, target) in counts {
+            // a free instance of that type?
+            let free = cluster
+                .spec
+                .accels
+                .iter()
+                .find(|aid| aid.accel == target && placement.combo_on(**aid).is_none());
+            if let Some(&aid) = free {
+                // only move jobs that are currently solo or unplaced — never
+                // break a pair (the co-runner would silently speed up and
+                // corrupt its estimate provenance).
+                let current = placement.accels_of(j).to_vec();
+                let solo_everywhere = current
+                    .iter()
+                    .all(|a| placement.combo_on(*a).map_or(true, |c| c.len() == 1));
+                if !solo_everywhere {
+                    return;
+                }
+                for a in current {
+                    placement.clear_accel(a);
+                }
+                placement.assign(aid, Combo::Solo(j));
+                crate::log_debug!("explore: moved {j} to {aid}");
+                return;
+            }
+        }
+    }
+
+    /// Collect online training samples out of this round's measurements.
+    fn harvest_samples(&mut self, measurements: &[Measurement]) {
+        // P1: (similar job j2's history) → (j1's measured outcome)
+        let p1_new = history::p1_samples_from_catalog(
+            &self.catalog,
+            measurements.len().min(32),
+            self.options.seed ^ (self.round as u64) << 8,
+        );
+        self.replay_p1.extend(p1_new);
+        // P2: cross-GPU transfer among measured records
+        let p2_new = history::p2_samples_from_catalog(
+            &self.catalog,
+            measurements.len().min(32),
+            0.15,
+            self.options.seed ^ (self.round as u64) << 9,
+        );
+        self.replay_p2.extend(p2_new);
+        self.trim_replay();
+    }
+}
+
+impl Scheduler for GoghScheduler {
+    fn name(&self) -> &str {
+        "gogh"
+    }
+
+    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
+        // round-0 estimates for any job we haven't seen
+        let ids = cluster.active_job_ids();
+        for j in &ids {
+            if !self.initialized.contains(j) {
+                self.initial_estimates(cluster, *j)?;
+            }
+        }
+        // Problem 1 over current catalog values
+        let catalog = &self.catalog;
+        let thr = move |a: AccelType, j: JobId, c: &Combo| catalog_value(catalog, a, j, c);
+        let (mut placement, _sol) = self.opt.allocate(cluster, &thr)?;
+        // active exploration (see GoghOptions::exploration_epsilon)
+        if self.options.exploration_epsilon > 0.0
+            && self.rng.bool(self.options.exploration_epsilon)
+        {
+            self.explore(cluster, &mut placement);
+        }
+        Ok(placement)
+    }
+
+    fn observe(&mut self, measurements: &[Measurement], _cluster: &Cluster) -> Result<()> {
+        self.round += 1;
+        // score pre-measurement estimates, then record measurements
+        for m in measurements {
+            let key = EstimateKey {
+                accel: m.accel.accel,
+                job: m.job,
+                combo: m.combo,
+            };
+            if let Some(rec) = self.catalog.record(&key) {
+                if !rec.is_measured() {
+                    if let Some(est) = rec.estimate_only() {
+                        self.errors.push(est, m.throughput);
+                    }
+                }
+            }
+            self.catalog.record_measurement(key, m.throughput);
+        }
+        // P2 refinement toward unobserved accel types (Eq. 3/4)
+        let queries = if self.options.enable_refinement {
+            refinement::build_refine_queries(&self.catalog, measurements)
+        } else {
+            vec![]
+        };
+        if !queries.is_empty() {
+            let rows: Vec<Vec<f32>> = queries.iter().map(|q| q.x.clone()).collect();
+            let preds = self.p2.predict(&rows)?;
+            refinement::apply_refinements(&mut self.catalog, &queries, &preds, self.round);
+        }
+        // continuous learning
+        if self.options.estimator.online_steps_per_round > 0 && !measurements.is_empty() {
+            self.harvest_samples(measurements);
+            for _ in 0..self.options.estimator.online_steps_per_round {
+                self.train_once()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn estimation_mae(&self) -> Option<f64> {
+        (self.errors.n() > 0).then(|| self.errors.mae())
+    }
+
+    fn decision_latencies(&self) -> (f64, f64) {
+        let p1_ms = if self.p1_calls == 0 {
+            0.0
+        } else {
+            1000.0 * self.p1_seconds / self.p1_calls as f64
+        };
+        (self.opt.mean_solve_ms(), p1_ms)
+    }
+}
+
+/// The full GOGH system: engine + scheduler + simulator from one config.
+pub struct Gogh {
+    driver: SimDriver,
+    scheduler: GoghScheduler,
+}
+
+impl Gogh {
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        let engine = Engine::load(&cfg.estimator.artifacts_dir)?;
+        Self::with_engine(&engine, cfg)
+    }
+
+    /// Build reusing an existing engine (benches construct many systems).
+    pub fn with_engine(engine: &Engine, cfg: &ExperimentConfig) -> Result<Self> {
+        let oracle = cfg.build_oracle()?;
+        let trace = Trace::generate(&cfg.trace, &oracle);
+        let spec = ClusterSpec::mix(&cfg.cluster.accel_mix);
+        let monitor_interval = if cfg.monitor_interval_s > 0.0 {
+            cfg.monitor_interval_s
+        } else {
+            30.0
+        };
+        let driver = SimDriver::new(
+            spec,
+            oracle.clone(),
+            trace,
+            cfg.noise_sigma,
+            monitor_interval,
+            cfg.seed,
+        );
+        let scheduler = GoghScheduler::new(
+            engine,
+            &oracle,
+            GoghOptions {
+                estimator: cfg.estimator.clone(),
+                optimizer: cfg.optimizer.clone(),
+                history_jobs: 24,
+                enable_refinement: true,
+                exploration_epsilon: 0.0,
+                seed: cfg.seed,
+            },
+        )?;
+        Ok(Self { driver, scheduler })
+    }
+
+    /// Run the configured trace to completion.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.driver.run(&mut self.scheduler)
+    }
+
+    pub fn scheduler(&self) -> &GoghScheduler {
+        &self.scheduler
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut GoghScheduler {
+        &mut self.scheduler
+    }
+}

@@ -1,0 +1,301 @@
+//! Historical bootstrap: the paper's P1 "relies on historical data from
+//! previously executed jobs in the cluster". This module synthesizes
+//! that history — measured records of past jobs — into the Catalog, and
+//! builds bootstrap training samples for P1/P2 *from the Catalog alone*
+//! (the estimators never see the oracle).
+
+use crate::util::Rng;
+
+use crate::catalog::{Catalog, EstimateKey, SimilarityIndex};
+use crate::runtime::dataset::Sample;
+use crate::workload::encoding::{p1_row, p2_row};
+use crate::workload::trace::table2_universe;
+use crate::workload::{Combo, JobId, JobSpec, ThroughputOracle, ACCEL_TYPES};
+
+/// Ids of historical jobs start high to never collide with trace jobs.
+pub const HISTORY_ID_BASE: u32 = 1_000_000;
+
+/// Populate `catalog` with measured records of `n_jobs` past jobs:
+/// solo runs on every accelerator type plus pairwise co-locations among
+/// a sampled subset — what a production cluster's monitoring would have
+/// accumulated. Measurement noise matches the monitor's.
+pub fn seed_catalog(
+    catalog: &mut Catalog,
+    oracle: &ThroughputOracle,
+    n_jobs: usize,
+    noise_sigma: f64,
+    seed: u64,
+) -> Vec<JobSpec> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x415);
+    let universe = table2_universe();
+    let noise = |rng: &mut Rng| -> f64 { rng.lognormal(noise_sigma) };
+    let mut jobs = vec![];
+    for i in 0..n_jobs {
+        let (f, b) = universe[rng.range_usize(0, universe.len())];
+        let job = JobSpec {
+            id: JobId(HISTORY_ID_BASE + i as u32),
+            family: f,
+            batch_size: b,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 1,
+            work: 0.0,
+        };
+        catalog.register_job(job.id, job.psi());
+        for &a in ACCEL_TYPES.iter() {
+            let t = oracle.solo(&job, a) * noise(&mut rng);
+            catalog.record_measurement(
+                EstimateKey {
+                    accel: a,
+                    job: job.id,
+                    combo: Combo::Solo(job.id),
+                },
+                t,
+            );
+        }
+        jobs.push(job);
+    }
+    // pairwise history: each job gets co-location records with ~3 peers
+    for i in 0..jobs.len() {
+        for _ in 0..3 {
+            let k = rng.range_usize(0, jobs.len());
+            if k == i {
+                continue;
+            }
+            let (j1, j2) = (&jobs[i], &jobs[k]);
+            let combo = Combo::pair(j1.id, j2.id);
+            for &a in ACCEL_TYPES.iter() {
+                let (t1, t2) = oracle.pair(j1, j2, a);
+                catalog.record_measurement(
+                    EstimateKey {
+                        accel: a,
+                        job: j1.id,
+                        combo,
+                    },
+                    t1 * noise(&mut rng),
+                );
+                catalog.record_measurement(
+                    EstimateKey {
+                        accel: a,
+                        job: j2.id,
+                        combo,
+                    },
+                    t2 * noise(&mut rng),
+                );
+            }
+        }
+    }
+    jobs
+}
+
+/// Build P1 bootstrap samples purely from the Catalog's measured
+/// records: pretend job `j1` is new, use its most similar peer `j2` as
+/// the reference, and its *actual measured* throughputs as targets.
+pub fn p1_samples_from_catalog(catalog: &Catalog, n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x91);
+    let jobs: Vec<JobId> = {
+        let mut v: Vec<JobId> = catalog.known_jobs().copied().collect();
+        v.sort();
+        v
+    };
+    if jobs.len() < 2 {
+        return vec![];
+    }
+    let mut out = vec![];
+    let mut guard = 0;
+    while out.len() < n && guard < n * 20 {
+        guard += 1;
+        let j1 = jobs[rng.range_usize(0, jobs.len())];
+        let psi1 = *catalog.psi(j1).unwrap();
+        let idx = SimilarityIndex::new(catalog);
+        let Some(j2) = idx.most_similar(&psi1, &[j1], true) else {
+            continue;
+        };
+        let psi2 = *catalog.psi(j2).unwrap();
+        // choose a measured record of j1 as the target
+        let recs1 = catalog.measured_records_of(j1);
+        if recs1.is_empty() {
+            continue;
+        }
+        let (k1, y1) = recs1[rng.range_usize(0, recs1.len())];
+        let a = k1.accel;
+        match k1.combo.other(j1) {
+            None => {
+                // solo target: inputs are j2's solo record on a
+                let k2 = EstimateKey {
+                    accel: a,
+                    job: j2,
+                    combo: Combo::Solo(j2),
+                };
+                let Some(t2) = catalog.value(&k2) else { continue };
+                let row = p1_row(
+                    &psi2,
+                    &crate::workload::encoding::PSI_EMPTY,
+                    a,
+                    t2 as f32,
+                    0.0,
+                    &psi1,
+                );
+                out.push(Sample {
+                    x: row.to_vec(),
+                    y: [y1 as f32, 0.0],
+                });
+            }
+            Some(j3) => {
+                // pair target: need j2's measured pair with some peer and
+                // j3's measured value in (j1, j3)
+                let Some(psi3) = catalog.psi(j3).copied() else { continue };
+                let y3 = catalog
+                    .value(&EstimateKey {
+                        accel: a,
+                        job: j3,
+                        combo: k1.combo,
+                    })
+                    .unwrap_or(0.0);
+                // j2's historical co-location on a (any peer ≈ j3's slot)
+                let rec2 = catalog
+                    .measured_records_of(j2)
+                    .into_iter()
+                    .find(|(k, _)| k.accel == a && k.combo.len() == 2);
+                let Some((k2, t2)) = rec2 else { continue };
+                let peer = k2.combo.other(j2).unwrap();
+                let t_peer = catalog
+                    .value(&EstimateKey {
+                        accel: a,
+                        job: peer,
+                        combo: k2.combo,
+                    })
+                    .unwrap_or(0.0);
+                let row = p1_row(&psi2, &psi3, a, t2 as f32, t_peer as f32, &psi1);
+                out.push(Sample {
+                    x: row.to_vec(),
+                    y: [y1 as f32, y3 as f32],
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Build P2 bootstrap samples from the Catalog: a job measured on two
+/// accel types yields a transfer tuple (observe a1 → predict a2), with
+/// synthetic stale estimates perturbing the measured values (the
+/// estimate-error distribution a deployed P1 produces).
+pub fn p2_samples_from_catalog(catalog: &Catalog, n: usize, est_sigma: f64, seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x92);
+    let jobs: Vec<JobId> = {
+        let mut v: Vec<JobId> = catalog.known_jobs().copied().collect();
+        v.sort();
+        v
+    };
+    let noise = |rng: &mut Rng, s: f64| -> f64 { rng.lognormal(s) };
+    let mut out = vec![];
+    let mut guard = 0;
+    while out.len() < n && guard < n * 20 {
+        guard += 1;
+        let j1 = jobs[rng.range_usize(0, jobs.len())];
+        let recs = catalog.measured_records_of(j1);
+        if recs.is_empty() {
+            continue;
+        }
+        let (k1, t_a1_j1) = recs[rng.range_usize(0, recs.len())];
+        let combo = k1.combo;
+        let a1 = k1.accel;
+        // find the same combo measured on a different accel
+        let others: Vec<_> = recs
+            .iter()
+            .filter(|(k, _)| k.combo == combo && k.accel != a1)
+            .collect();
+        if others.is_empty() {
+            continue;
+        }
+        let (k2, t_a2_j1) = others[rng.range_usize(0, others.len())];
+        let a2 = k2.accel;
+        let j2 = combo.other(j1);
+        let t_of = |a, j| {
+            catalog
+                .value(&EstimateKey {
+                    accel: a,
+                    job: j,
+                    combo,
+                })
+                .unwrap_or(0.0)
+        };
+        let (t_a1_j2, t_a2_j2) = match j2 {
+            Some(j) => (t_of(a1, j), t_of(a2, j)),
+            None => (0.0, 0.0),
+        };
+        let psi1 = *catalog.psi(j1).unwrap();
+        let psi2 = j2
+            .and_then(|j| catalog.psi(j).copied())
+            .unwrap_or(crate::workload::encoding::PSI_EMPTY);
+        // correlated stale-estimate synthesis (see dataset.rs)
+        let e1 = noise(&mut rng, est_sigma);
+        let e2 = noise(&mut rng, est_sigma);
+        let r = |rng: &mut Rng| noise(rng, est_sigma * 0.3);
+        let row = p2_row(
+            &psi1,
+            &psi2,
+            a1,
+            a2,
+            (t_a1_j1 * e1 * r(&mut rng)) as f32,
+            (t_a1_j2 * e2 * r(&mut rng)) as f32,
+            t_a1_j1 as f32,
+            t_a1_j2 as f32,
+            (t_a2_j1 * e1 * r(&mut rng)) as f32,
+            (t_a2_j2 * e2 * r(&mut rng)) as f32,
+        );
+        out.push(Sample {
+            x: row.to_vec(),
+            y: [*t_a2_j1 as f32, t_a2_j2 as f32],
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeding_registers_jobs_and_measurements() {
+        let oracle = ThroughputOracle::new(8);
+        let mut c = Catalog::new();
+        let jobs = seed_catalog(&mut c, &oracle, 10, 0.02, 1);
+        assert_eq!(jobs.len(), 10);
+        assert_eq!(c.known_jobs().count(), 10);
+        // every job has ≥ 6 solo measurements
+        for j in &jobs {
+            assert!(c.measured_records_of(j.id).len() >= 6);
+        }
+        assert!(c.n_measured() > 60);
+    }
+
+    #[test]
+    fn p1_bootstrap_samples_are_wellformed() {
+        let oracle = ThroughputOracle::new(8);
+        let mut c = Catalog::new();
+        seed_catalog(&mut c, &oracle, 12, 0.02, 1);
+        let s = p1_samples_from_catalog(&c, 100, 3);
+        assert!(s.len() >= 80, "only {} samples", s.len());
+        for smp in &s {
+            assert_eq!(smp.x.len(), crate::workload::encoding::P1_DIM);
+            assert!(smp.y[0] >= 0.0);
+        }
+        // mix of solo and pair targets
+        assert!(s.iter().any(|s| s.y[1] == 0.0));
+        assert!(s.iter().any(|s| s.y[1] > 0.0));
+    }
+
+    #[test]
+    fn p2_bootstrap_samples_are_wellformed() {
+        let oracle = ThroughputOracle::new(8);
+        let mut c = Catalog::new();
+        seed_catalog(&mut c, &oracle, 12, 0.02, 1);
+        let s = p2_samples_from_catalog(&c, 100, 0.15, 3);
+        assert!(s.len() >= 80);
+        for smp in &s {
+            assert_eq!(smp.x.len(), crate::workload::encoding::P2_PADDED);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator — the GOGH system contribution (paper §2).
+//!
+//! [`gogh::Gogh`] runs the online loop: job arrival → similarity lookup
+//! → P1 initial estimates (Eq. 1) → ILP allocation (Problem 1) →
+//! monitoring → P2 refinement across unobserved GPU types (Eq. 3/4) →
+//! online training of both networks from measured data.
+
+pub mod gogh;
+pub mod history;
+pub mod optimizer;
+pub mod refinement;
+pub mod scheduler;
+
+pub use gogh::{Gogh, GoghOptions, GoghScheduler};
+pub use optimizer::Optimizer;
+pub use scheduler::{Scheduler, SimDriver};

@@ -1,0 +1,199 @@
+//! Optimizer module (paper §2.4): wraps Problem 1 — building the ILP
+//! from throughput estimates, solving it, and binding the aggregated
+//! (type-level) solution onto concrete accelerator instances with
+//! migration-minimizing stability.
+
+use std::collections::HashMap;
+
+use crate::cluster::{AccelId, Cluster, Placement};
+use crate::config::OptimizerConfig;
+use crate::ilp::branch_bound::BnbConfig;
+use crate::ilp::problem1::{solve_problem1, AllocationSolution, Problem1Input};
+use crate::workload::{AccelType, Combo, JobId};
+use crate::Result;
+
+pub struct Optimizer {
+    pub cfg: OptimizerConfig,
+    /// cumulative solve statistics for §Perf reporting
+    pub solves: usize,
+    pub solve_seconds: f64,
+    pub total_nodes: usize,
+}
+
+impl Optimizer {
+    pub fn new(cfg: OptimizerConfig) -> Self {
+        Self {
+            cfg,
+            solves: 0,
+            solve_seconds: 0.0,
+            total_nodes: 0,
+        }
+    }
+
+    pub fn mean_solve_ms(&self) -> f64 {
+        if self.solves == 0 {
+            0.0
+        } else {
+            1000.0 * self.solve_seconds / self.solves as f64
+        }
+    }
+
+    /// Solve Problem 1 for the active jobs and bind to instances.
+    /// `throughput(a, j, c)` supplies T̃ (estimates or truth).
+    pub fn allocate(
+        &mut self,
+        cluster: &Cluster,
+        throughput: &dyn Fn(AccelType, JobId, &Combo) -> f64,
+    ) -> Result<(Placement, AllocationSolution)> {
+        let jobs: Vec<_> = {
+            let mut v: Vec<_> = cluster.jobs().cloned().collect();
+            v.sort_by_key(|j| j.id);
+            v
+        };
+        let mut counts: HashMap<AccelType, u32> = HashMap::new();
+        for a in &cluster.spec.accels {
+            *counts.entry(a.accel).or_default() += 1;
+        }
+        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput,
+            solo_capability: &solo_cap,
+            max_pairs_per_job: self.cfg.max_pairs_per_job,
+            slack_penalty: Some(self.cfg.slack_penalty),
+            throughput_bonus: self.cfg.throughput_bonus,
+        };
+        let bnb = BnbConfig {
+            max_nodes: self.cfg.max_nodes,
+            time_limit_s: self.cfg.time_limit_s,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let sol = solve_problem1(&input, &bnb);
+        self.solve_seconds += t0.elapsed().as_secs_f64();
+        self.solves += 1;
+        self.total_nodes += sol.nodes;
+
+        let placement = bind_instances(cluster, &sol)?;
+        Ok((placement, sol))
+    }
+}
+
+/// Map (type, combo, multiplicity) onto concrete instances, preferring
+/// instances that already host the same combo (stability → fewer
+/// migrations).
+fn bind_instances(cluster: &Cluster, sol: &AllocationSolution) -> Result<Placement> {
+    let mut placement = Placement::new();
+    // instances per type, stable order
+    let mut by_type: HashMap<AccelType, Vec<AccelId>> = HashMap::new();
+    for a in &cluster.spec.accels {
+        by_type.entry(a.accel).or_default().push(*a);
+    }
+    for v in by_type.values_mut() {
+        v.sort();
+    }
+    let mut used: std::collections::HashSet<AccelId> = Default::default();
+
+    // pass 1: keep combos where they already run
+    let mut remaining: Vec<(AccelType, Combo, u32)> = vec![];
+    for &(a, combo, mult) in &sol.assignments {
+        let mut left = mult;
+        for aid in by_type.get(&a).map(|v| v.as_slice()).unwrap_or(&[]) {
+            if left == 0 {
+                break;
+            }
+            if used.contains(aid) {
+                continue;
+            }
+            if cluster.placement.combo_on(*aid) == Some(&combo) {
+                placement.assign(*aid, combo);
+                used.insert(*aid);
+                left -= 1;
+            }
+        }
+        if left > 0 {
+            remaining.push((a, combo, left));
+        }
+    }
+    // pass 2: fill the rest onto free instances
+    for (a, combo, mult) in remaining {
+        let mut left = mult;
+        for aid in by_type.get(&a).map(|v| v.as_slice()).unwrap_or(&[]) {
+            if left == 0 {
+                break;
+            }
+            if used.contains(aid) {
+                continue;
+            }
+            placement.assign(*aid, combo);
+            used.insert(*aid);
+            left -= 1;
+        }
+        anyhow::ensure!(left == 0, "solution over-subscribes {a:?} (leftover {left})");
+    }
+    Ok(placement)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::workload::{JobSpec, ThroughputOracle};
+
+    fn mk_cluster(n_jobs: u32) -> (Cluster, ThroughputOracle) {
+        let oracle = ThroughputOracle::new(4);
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        for i in 0..n_jobs {
+            let f = crate::workload::FAMILIES[i as usize % 5];
+            let b = f.batch_sizes()[0];
+            let mut j = JobSpec {
+                id: JobId(i),
+                family: f,
+                batch_size: b,
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: 1,
+                work: 100.0,
+            };
+            j.min_throughput = 0.3 * oracle.solo(&j, AccelType::P100);
+            c.add_job(j);
+        }
+        (c, oracle)
+    }
+
+    #[test]
+    fn allocation_covers_all_jobs() {
+        let (c, oracle) = mk_cluster(4);
+        let jobs: Vec<JobSpec> = c.jobs().cloned().collect();
+        let thr = move |a: AccelType, j: JobId, combo: &Combo| {
+            let spec = jobs.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs.iter().find(|s| s.id == id).cloned();
+            oracle.throughput(spec, combo, a, &lookup)
+        };
+        let mut opt = Optimizer::new(OptimizerConfig::default());
+        let (p, sol) = opt.allocate(&c, &thr).unwrap();
+        assert!(sol.violated_jobs.is_empty(), "{:?}", sol.violated_jobs);
+        for i in 0..4 {
+            assert!(p.is_placed(JobId(i)));
+        }
+        assert!(opt.mean_solve_ms() > 0.0);
+    }
+
+    #[test]
+    fn rebinding_is_stable() {
+        let (mut c, oracle) = mk_cluster(3);
+        let jobs: Vec<JobSpec> = c.jobs().cloned().collect();
+        let thr = move |a: AccelType, j: JobId, combo: &Combo| {
+            let spec = jobs.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs.iter().find(|s| s.id == id).cloned();
+            oracle.throughput(spec, combo, a, &lookup)
+        };
+        let mut opt = Optimizer::new(OptimizerConfig::default());
+        let (p1, _) = opt.allocate(&c, &thr).unwrap();
+        c.placement = p1.clone();
+        // same jobs, same estimates → the rebound placement must be identical
+        let (p2, _) = opt.allocate(&c, &thr).unwrap();
+        assert_eq!(p1.diff_count(&p2), 0);
+    }
+}

@@ -1,0 +1,250 @@
+//! Estimation refinement (paper §2.5): after monitoring reports the
+//! actual throughput of job j1 (with co-runner j2) on accelerator a1,
+//! P2 transfers that observation into improved estimates on every other
+//! accelerator type a2 (Eq. 3), which accumulate in the Catalog's
+//! refinement sets 𝒯 (Eq. 4).
+
+use crate::catalog::{Catalog, EstimateKey};
+use crate::cluster::Measurement;
+use crate::workload::encoding::{p2_row, PSI_DIM};
+use crate::workload::{AccelType, Combo, JobId, ACCEL_TYPES};
+
+/// Default pair-interference prior used when a pair estimate is missing
+/// (a solo estimate exists but the combination was never seen).
+pub const PAIR_PRIOR: f64 = 0.7;
+
+/// Resolve the Catalog's best current value for (a, j, c), falling back
+/// to `solo × PAIR_PRIOR` for unseen pairs and a generation-speed prior
+/// for totally unknown jobs.
+pub fn catalog_value(catalog: &Catalog, a: AccelType, j: JobId, c: &Combo) -> f64 {
+    let key = EstimateKey {
+        accel: a,
+        job: j,
+        combo: *c,
+    };
+    if let Some(v) = catalog.value(&key) {
+        return v;
+    }
+    if c.len() == 2 {
+        let solo = EstimateKey {
+            accel: a,
+            job: j,
+            combo: Combo::Solo(j),
+        };
+        if let Some(v) = catalog.value(&solo) {
+            return v * PAIR_PRIOR;
+        }
+    }
+    // cold prior: scaled generation speed (≈ mid-range job)
+    0.4 * a.base_speed() / AccelType::V100.base_speed()
+}
+
+/// A P2 query: refine (j1, j2?) in combo `c`, observed on `a1`, toward
+/// target accel `a2`.
+pub struct RefineQuery {
+    pub x: Vec<f32>,
+    pub a2: AccelType,
+    pub j1: JobId,
+    pub j2: Option<JobId>,
+    pub combo: Combo,
+}
+
+/// Build the P2 query rows for one measurement round. `measured`
+/// resolves this round's measured value for (j, combo) on `a1` (the
+/// co-runner's measurement comes from the same round).
+pub fn build_refine_queries(
+    catalog: &Catalog,
+    measurements: &[Measurement],
+) -> Vec<RefineQuery> {
+    let mut queries = vec![];
+    for m in measurements {
+        let a1 = m.accel.accel;
+        let j1 = m.job;
+        let combo = m.combo;
+        let j2 = combo.other(j1);
+        let psi_j1 = match catalog.psi(j1) {
+            Some(p) => *p,
+            None => continue,
+        };
+        let psi_j2: [f32; PSI_DIM] = j2
+            .and_then(|j| catalog.psi(j).copied())
+            .unwrap_or(crate::workload::encoding::PSI_EMPTY);
+        // this-round measurement of the co-runner (same combo + accel)
+        let meas_j2 = j2
+            .and_then(|j| {
+                measurements
+                    .iter()
+                    .find(|o| o.job == j && o.combo == combo && o.accel == m.accel)
+            })
+            .map(|o| o.throughput)
+            .unwrap_or(0.0);
+        // estimates *before* this measurement (refinement-set averages)
+        let est_key = |a: AccelType, j: JobId| EstimateKey {
+            accel: a,
+            job: j,
+            combo,
+        };
+        let est_a1_j1 = catalog
+            .record(&est_key(a1, j1))
+            .and_then(|r| r.estimate_only())
+            .unwrap_or(m.throughput);
+        let est_a1_j2 = j2
+            .map(|j| {
+                catalog
+                    .record(&est_key(a1, j))
+                    .and_then(|r| r.estimate_only())
+                    .unwrap_or(meas_j2)
+            })
+            .unwrap_or(0.0);
+        for &a2 in ACCEL_TYPES.iter() {
+            if a2 == a1 {
+                continue;
+            }
+            let est_a2_j1 = catalog_value(catalog, a2, j1, &combo);
+            let est_a2_j2 = j2.map(|j| catalog_value(catalog, a2, j, &combo)).unwrap_or(0.0);
+            let x = p2_row(
+                &psi_j1,
+                &psi_j2,
+                a1,
+                a2,
+                est_a1_j1 as f32,
+                est_a1_j2 as f32,
+                m.throughput as f32,
+                meas_j2 as f32,
+                est_a2_j1 as f32,
+                est_a2_j2 as f32,
+            );
+            queries.push(RefineQuery {
+                x: x.to_vec(),
+                a2,
+                j1,
+                j2,
+                combo,
+            });
+        }
+    }
+    queries
+}
+
+/// Apply P2 outputs: push each prediction into the refinement set 𝒯 of
+/// the (a2, job, combo) keys (Eq. 4 — the Catalog averages them).
+pub fn apply_refinements(
+    catalog: &mut Catalog,
+    queries: &[RefineQuery],
+    predictions: &[[f32; 2]],
+    round: u32,
+) {
+    for (q, pred) in queries.iter().zip(predictions) {
+        let k1 = EstimateKey {
+            accel: q.a2,
+            job: q.j1,
+            combo: q.combo,
+        };
+        catalog.push_refinement(k1, (pred[0] as f64).clamp(0.0, 1.5), round);
+        if let Some(j2) = q.j2 {
+            let k2 = EstimateKey {
+                accel: q.a2,
+                job: j2,
+                combo: q.combo,
+            };
+            catalog.push_refinement(k2, (pred[1] as f64).clamp(0.0, 1.5), round);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::AccelId;
+    use crate::workload::encoding::psi;
+    use crate::workload::ModelFamily;
+
+    fn setup() -> (Catalog, Vec<Measurement>) {
+        let mut c = Catalog::new();
+        c.register_job(JobId(1), psi(ModelFamily::ResNet18, 32, 1));
+        c.register_job(JobId(2), psi(ModelFamily::LanguageModel, 10, 1));
+        let combo = Combo::pair(JobId(1), JobId(2));
+        // prior estimates on two types
+        for a in [AccelType::K80, AccelType::V100] {
+            for j in [JobId(1), JobId(2)] {
+                c.write_initial(
+                    EstimateKey {
+                        accel: a,
+                        job: j,
+                        combo,
+                    },
+                    0.3,
+                );
+            }
+        }
+        let aid = AccelId {
+            server: 0,
+            accel: AccelType::K80,
+        };
+        let ms = vec![
+            Measurement {
+                job: JobId(1),
+                combo,
+                accel: aid,
+                throughput: 0.25,
+                at: 1.0,
+            },
+            Measurement {
+                job: JobId(2),
+                combo,
+                accel: aid,
+                throughput: 0.18,
+                at: 1.0,
+            },
+        ];
+        (c, ms)
+    }
+
+    #[test]
+    fn queries_cover_all_other_accels() {
+        let (c, ms) = setup();
+        let qs = build_refine_queries(&c, &ms);
+        // 2 measurements × 5 other accel types
+        assert_eq!(qs.len(), 10);
+        for q in &qs {
+            assert_eq!(q.x.len(), crate::workload::encoding::P2_PADDED);
+            assert_ne!(q.a2, AccelType::K80);
+        }
+    }
+
+    #[test]
+    fn refinements_update_the_catalog_average() {
+        let (mut c, ms) = setup();
+        let qs = build_refine_queries(&c, &ms);
+        let preds: Vec<[f32; 2]> = qs.iter().map(|_| [0.5, 0.5]).collect();
+        apply_refinements(&mut c, &qs, &preds, 1);
+        let k = EstimateKey {
+            accel: AccelType::V100,
+            job: JobId(1),
+            combo: Combo::pair(JobId(1), JobId(2)),
+        };
+        // initial 0.3 + two refinements (one per measurement of the pair)
+        let r = c.record(&k).unwrap();
+        assert!(r.refinements() >= 2);
+        let v = c.value(&k).unwrap();
+        assert!(v > 0.3 && v <= 0.5, "{v}");
+    }
+
+    #[test]
+    fn fallback_pair_prior() {
+        let mut c = Catalog::new();
+        c.write_initial(
+            EstimateKey {
+                accel: AccelType::K80,
+                job: JobId(1),
+                combo: Combo::Solo(JobId(1)),
+            },
+            0.6,
+        );
+        let v = catalog_value(&c, AccelType::K80, JobId(1), &Combo::pair(JobId(1), JobId(2)));
+        assert!((v - 0.6 * PAIR_PRIOR).abs() < 1e-12);
+        // unknown job → generation prior
+        let v2 = catalog_value(&c, AccelType::V100, JobId(9), &Combo::Solo(JobId(9)));
+        assert!(v2 > 0.0 && v2 <= 1.0);
+    }
+}

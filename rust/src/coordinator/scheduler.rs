@@ -1,0 +1,290 @@
+//! Scheduler trait + the shared discrete-event simulation driver.
+//!
+//! Every policy (GOGH and the baselines) implements [`Scheduler`]; the
+//! [`SimDriver`] replays a trace against a policy, integrating energy,
+//! SLO deficit, migrations and completion times into a
+//! [`crate::metrics::RunReport`]. Using one driver for all policies is
+//! what makes the e2e comparison table apples-to-apples.
+
+use std::collections::HashMap;
+
+use crate::cluster::energy::{placement_loads, EnergyMeter};
+use crate::cluster::{Cluster, ClusterSpec, Measurement, Monitor, Placement};
+use crate::metrics::RunReport;
+use crate::workload::{AccelType, JobId, ThroughputOracle, Trace, TraceEvent};
+use crate::Result;
+
+/// A placement policy.
+pub trait Scheduler {
+    fn name(&self) -> &str;
+
+    /// Produce a (full) placement for the currently active jobs.
+    /// Called on every arrival and departure.
+    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement>;
+
+    /// Digest monitoring data (learning schedulers refine estimates and
+    /// train here; baselines ignore it).
+    fn observe(&mut self, _measurements: &[Measurement], _cluster: &Cluster) -> Result<()> {
+        Ok(())
+    }
+
+    /// Estimation MAE vs ground truth, if this scheduler estimates.
+    fn estimation_mae(&self) -> Option<f64> {
+        None
+    }
+
+    /// Mean decision-path latencies (solve_ms, p1_ms) for the report.
+    fn decision_latencies(&self) -> (f64, f64) {
+        (0.0, 0.0)
+    }
+}
+
+/// Discrete-event simulation of a trace under a policy.
+pub struct SimDriver {
+    pub cluster: Cluster,
+    pub monitor: Monitor,
+    meter_busy: EnergyMeter,
+    meter_total: EnergyMeter,
+    trace: Trace,
+    monitor_interval_s: f64,
+    /// max simulated seconds after the last arrival (safety stop)
+    pub drain_limit_s: f64,
+}
+
+impl SimDriver {
+    pub fn new(
+        spec: ClusterSpec,
+        oracle: ThroughputOracle,
+        trace: Trace,
+        noise_sigma: f64,
+        monitor_interval_s: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            cluster: Cluster::new(spec),
+            monitor: Monitor::new(oracle, noise_sigma, seed),
+            meter_busy: EnergyMeter::new(),
+            meter_total: EnergyMeter::new(),
+            trace,
+            monitor_interval_s,
+            drain_limit_s: 24.0 * 3600.0,
+        }
+    }
+
+    /// Run the full trace; returns the report.
+    pub fn run(&mut self, policy: &mut dyn Scheduler) -> Result<RunReport> {
+        let mut report = RunReport {
+            scheduler: policy.name().to_string(),
+            jobs_total: self.trace.len(),
+            ..Default::default()
+        };
+        let mut arrivals: Vec<(f64, crate::workload::JobSpec)> = self
+            .trace
+            .events
+            .iter()
+            .map(|TraceEvent::Arrival { at, job }| (*at, job.clone()))
+            .collect();
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut next_arrival = 0usize;
+        let mut arrival_time: HashMap<JobId, f64> = HashMap::new();
+        let mut jct_sum = 0.0f64;
+        let last_arrival_t = arrivals.last().map(|(t, _)| *t).unwrap_or(0.0);
+        let mut next_tick = self.monitor_interval_s;
+
+        loop {
+            let now = self.cluster.now();
+            // next event: arrival or monitor tick
+            let t_arr = arrivals.get(next_arrival).map(|(t, _)| *t);
+            let t_next = match t_arr {
+                Some(ta) if ta <= next_tick => ta,
+                _ => next_tick,
+            };
+
+            // ---- integrate the interval [now, t_next]
+            self.integrate(now, t_next, &mut report, &mut jct_sum, &arrival_time, policy)?;
+            self.cluster.advance_to(t_next);
+
+            // ---- dispatch the event
+            if t_arr == Some(t_next) {
+                let (_, job) = arrivals[next_arrival].clone();
+                next_arrival += 1;
+                arrival_time.insert(job.id, t_next);
+                self.cluster.add_job(job);
+                let new_placement = policy.allocate(&self.cluster)?;
+                report.migrations += self.cluster.placement.diff_count(&new_placement);
+                self.cluster.placement = new_placement;
+            } else {
+                next_tick = t_next + self.monitor_interval_s;
+                let measurements = self.monitor.sample(&self.cluster);
+                policy.observe(&measurements, &self.cluster)?;
+            }
+
+            // ---- termination
+            let drained = next_arrival >= arrivals.len() && self.cluster.n_jobs() == 0;
+            let timed_out = self.cluster.now() > last_arrival_t + self.drain_limit_s;
+            if drained || timed_out {
+                break;
+            }
+        }
+
+        report.sim_seconds = self.cluster.now();
+        report.energy_joules = self.meter_busy.total_joules();
+        report.total_energy_joules = self.meter_total.total_joules();
+        report.mean_jct = if report.jobs_completed > 0 {
+            jct_sum / report.jobs_completed as f64
+        } else {
+            f64::NAN
+        };
+        report.estimation_mae = policy.estimation_mae();
+        let (solve_ms, p1_ms) = policy.decision_latencies();
+        report.mean_solve_ms = solve_ms;
+        report.mean_p1_ms = p1_ms;
+        Ok(report)
+    }
+
+    /// Advance work, energy and SLO accounting over [t0, t1] using the
+    /// ground-truth throughputs of the current placement (the substrate
+    /// "runs" the jobs; schedulers only ever see monitor samples).
+    fn integrate(
+        &mut self,
+        t0: f64,
+        t1: f64,
+        report: &mut RunReport,
+        jct_sum: &mut f64,
+        arrival_time: &HashMap<JobId, f64>,
+        policy: &mut dyn Scheduler,
+    ) -> Result<()> {
+        let dt = t1 - t0;
+        if dt <= 0.0 {
+            return Ok(());
+        }
+        // ground-truth throughput per (job, accel)
+        let oracle = self.monitor.oracle().clone();
+        let mut per_job: HashMap<JobId, f64> = HashMap::new();
+        let mut per_accel: HashMap<crate::cluster::AccelId, f64> = HashMap::new();
+        for (aid, combo) in self.cluster.placement.iter() {
+            for j in combo.jobs() {
+                let spec = self.cluster.job(j).expect("placed job registered");
+                let lookup = |id: JobId| self.cluster.job(id).cloned();
+                let t = oracle.throughput(spec, combo, aid.accel, &lookup);
+                *per_job.entry(j).or_default() += t;
+                *per_accel.entry(*aid).or_default() += t;
+            }
+        }
+
+        // energy: busy = only instances hosting work; total = whole cluster
+        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+        let loads = placement_loads(
+            &self.cluster.placement,
+            &|j, aid| {
+                let spec = self.cluster.job(j).unwrap();
+                let combo = self.cluster.placement.combo_on(aid).unwrap();
+                let lookup = |id: JobId| self.cluster.job(id).cloned();
+                oracle.throughput(spec, combo, aid.accel, &lookup)
+            },
+            &|aid| solo_cap(aid.accel),
+        );
+        let busy: Vec<crate::cluster::AccelId> = loads.keys().copied().collect();
+        self.meter_busy.accrue(t1, &busy, &loads);
+        self.meter_total.accrue(t1, &self.cluster.spec.accels, &loads);
+
+        // SLO + progress + completion
+        let mut slo_violated = false;
+        let ids = self.cluster.active_job_ids();
+        let mut completed: Vec<JobId> = vec![];
+        for id in ids {
+            let achieved = per_job.get(&id).copied().unwrap_or(0.0);
+            let spec = self.cluster.job(id).unwrap();
+            let deficit = (spec.min_throughput - achieved).max(0.0);
+            if deficit > 1e-9 {
+                report.slo_deficit += deficit * dt;
+                slo_violated = true;
+            }
+            let j = self.cluster.job_mut(id).unwrap();
+            j.work -= achieved * dt;
+            if j.work <= 0.0 {
+                completed.push(id);
+            }
+        }
+        if slo_violated {
+            report.slo_violations += 1;
+        }
+        if !completed.is_empty() {
+            for id in completed {
+                self.cluster.remove_job(id);
+                report.jobs_completed += 1;
+                *jct_sum += t1 - arrival_time.get(&id).copied().unwrap_or(0.0);
+            }
+            if self.cluster.n_jobs() > 0 {
+                let new_placement = policy.allocate(&self.cluster)?;
+                report.migrations += self.cluster.placement.diff_count(&new_placement);
+                self.cluster.placement = new_placement;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Combo, TraceConfig};
+
+    /// Trivial policy: first free accelerator, solo.
+    struct FirstFit;
+    impl Scheduler for FirstFit {
+        fn name(&self) -> &str {
+            "firstfit"
+        }
+        fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
+            let mut p = Placement::new();
+            let mut free: Vec<_> = cluster.spec.accels.clone();
+            for id in cluster.active_job_ids() {
+                if let Some(a) = free.pop() {
+                    p.assign(a, Combo::Solo(id));
+                }
+            }
+            Ok(p)
+        }
+    }
+
+    #[test]
+    fn driver_completes_all_jobs() {
+        let oracle = ThroughputOracle::new(2);
+        let cfg = TraceConfig {
+            n_jobs: 6,
+            mean_interarrival_s: 10.0,
+            mean_work_s: 50.0,
+            ..Default::default()
+        };
+        let trace = Trace::generate(&cfg, &oracle);
+        let mut driver = SimDriver::new(ClusterSpec::balanced(2), oracle, trace, 0.0, 15.0, 1);
+        let report = driver.run(&mut FirstFit).unwrap();
+        assert_eq!(report.jobs_completed, 6);
+        assert!(report.energy_joules > 0.0);
+        assert!(report.total_energy_joules >= report.energy_joules);
+        assert!(report.mean_jct > 0.0);
+        assert!(report.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn driver_is_deterministic() {
+        let mk = || {
+            let oracle = ThroughputOracle::new(2);
+            let cfg = TraceConfig {
+                n_jobs: 5,
+                mean_interarrival_s: 5.0,
+                mean_work_s: 30.0,
+                ..Default::default()
+            };
+            let trace = Trace::generate(&cfg, &oracle);
+            let mut d = SimDriver::new(ClusterSpec::balanced(1), oracle, trace, 0.01, 10.0, 3);
+            d.run(&mut FirstFit).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.energy_joules, b.energy_joules);
+        assert_eq!(a.slo_violations, b.slo_violations);
+        assert_eq!(a.mean_jct, b.mean_jct);
+    }
+}

@@ -1,0 +1,23 @@
+//! ILP substrate — built from scratch (the paper relies on an
+//! off-the-shelf solver; DESIGN.md §Substrates).
+//!
+//! * [`model`] — a small modelling layer: variables with bounds and
+//!   integrality, linear constraints with ≤ / ≥ / = senses, min/max
+//!   objective.
+//! * [`simplex`] — dense two-phase primal simplex for the LP
+//!   relaxations (Dantzig pricing with Bland anti-cycling fallback).
+//! * [`branch_bound`] — best-first branch-and-bound for the integer
+//!   program, with LP bounding, most-fractional branching, a rounding
+//!   primal heuristic, and node/gap limits.
+//! * [`problem1`] — builds the paper's Problem 1 (objective 2a,
+//!   constraints 2b–2f) over the combination universe 𝒞.
+
+pub mod branch_bound;
+pub mod model;
+pub mod problem1;
+pub mod simplex;
+
+pub use branch_bound::{solve_ilp, BnbConfig, BnbResult, BnbStatus};
+pub use model::{Constraint, Model, ObjSense, Sense, VarId, VarKind};
+pub use problem1::{build_problem1, AllocationSolution, Problem1Input};
+pub use simplex::{solve_lp, LpResult, LpStatus};

@@ -1,0 +1,171 @@
+//! Modelling layer for linear / integer programs.
+//!
+//! A [`Model`] owns variables (continuous or integer, with bounds) and
+//! linear constraints; [`crate::ilp::simplex`] solves its LP relaxation
+//! and [`crate::ilp::branch_bound`] its integer form.
+
+/// Variable handle (index into the model's variable table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VarId(pub usize);
+
+/// Continuous or integer (B&B branches only on `Integer` variables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarKind {
+    Continuous,
+    Integer,
+}
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// Objective direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjSense {
+    Minimize,
+    Maximize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Variable {
+    pub name: String,
+    pub lb: f64,
+    pub ub: f64,
+    pub kind: VarKind,
+    pub obj: f64,
+}
+
+/// Sparse linear constraint: Σ coef·x  sense  rhs.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub name: String,
+    pub terms: Vec<(VarId, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// A linear / mixed-integer program.
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    pub vars: Vec<Variable>,
+    pub constraints: Vec<Constraint>,
+    pub obj_sense: ObjSense,
+}
+
+impl Default for ObjSense {
+    fn default() -> Self {
+        ObjSense::Minimize
+    }
+}
+
+impl Model {
+    pub fn new(sense: ObjSense) -> Self {
+        Self {
+            vars: vec![],
+            constraints: vec![],
+            obj_sense: sense,
+        }
+    }
+
+    /// Add a variable; returns its handle.
+    pub fn add_var(&mut self, name: impl Into<String>, lb: f64, ub: f64, kind: VarKind, obj: f64) -> VarId {
+        assert!(lb <= ub, "inconsistent bounds");
+        self.vars.push(Variable {
+            name: name.into(),
+            lb,
+            ub,
+            kind,
+            obj,
+        });
+        VarId(self.vars.len() - 1)
+    }
+
+    /// Convenience: binary variable.
+    pub fn add_binary(&mut self, name: impl Into<String>, obj: f64) -> VarId {
+        self.add_var(name, 0.0, 1.0, VarKind::Integer, obj)
+    }
+
+    pub fn add_constraint(
+        &mut self,
+        name: impl Into<String>,
+        terms: Vec<(VarId, f64)>,
+        sense: Sense,
+        rhs: f64,
+    ) {
+        debug_assert!(terms.iter().all(|(v, _)| v.0 < self.vars.len()));
+        self.constraints.push(Constraint {
+            name: name.into(),
+            terms,
+            sense,
+            rhs,
+        });
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn n_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    pub fn n_integer_vars(&self) -> usize {
+        self.vars.iter().filter(|v| v.kind == VarKind::Integer).count()
+    }
+
+    /// Objective value of an assignment.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.vars.iter().zip(x).map(|(v, xi)| v.obj * xi).sum()
+    }
+
+    /// Check feasibility of an assignment within tolerance.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.vars.len() {
+            return false;
+        }
+        for (v, &xi) in self.vars.iter().zip(x) {
+            if xi < v.lb - tol || xi > v.ub + tol {
+                return false;
+            }
+            if v.kind == VarKind::Integer && (xi - xi.round()).abs() > tol {
+                return false;
+            }
+        }
+        for c in &self.constraints {
+            let lhs: f64 = c.terms.iter().map(|&(v, coef)| coef * x[v.0]).sum();
+            let ok = match c.sense {
+                Sense::Le => lhs <= c.rhs + tol,
+                Sense::Ge => lhs >= c.rhs - tol,
+                Sense::Eq => (lhs - c.rhs).abs() <= tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_evaluate() {
+        let mut m = Model::new(ObjSense::Minimize);
+        let x = m.add_var("x", 0.0, 10.0, VarKind::Continuous, 1.0);
+        let y = m.add_binary("y", 2.0);
+        m.add_constraint("c1", vec![(x, 1.0), (y, 1.0)], Sense::Ge, 1.0);
+        assert_eq!(m.n_vars(), 2);
+        assert_eq!(m.n_integer_vars(), 1);
+        assert_eq!(m.objective_value(&[3.0, 1.0]), 5.0);
+        assert!(m.is_feasible(&[1.0, 0.0], 1e-9));
+        assert!(!m.is_feasible(&[0.0, 0.0], 1e-9)); // violates c1
+        assert!(!m.is_feasible(&[0.5, 0.5], 1e-9)); // y fractional
+        assert!(!m.is_feasible(&[11.0, 0.0], 1e-9)); // x above ub
+    }
+}

@@ -1,0 +1,576 @@
+//! Problem 1 — the GPU-allocation ILP (paper §2.4).
+//!
+//! Variables: the paper's x^c_{a,s} is indexed per (combination,
+//! accelerator type, server). Instances of the same type are identical
+//! in this substrate, so we aggregate per type: integer `n_{a,c}` =
+//! number of type-`a` instances hosting combination `c`, with
+//! `0 ≤ n_{a,c} ≤ count(a)`. The aggregation is exact (any aggregated
+//! solution maps to a per-server one by assigning combos to free
+//! instances arbitrarily) and shrinks the ILP by the server count.
+//!
+//! Objective (2a): `min Σ γ_a(load)·n` — energy of *used* instances;
+//! γ_a is evaluated per combination (each instance hosts at most one
+//! combination, constraint 2f, so no piecewise linearization is needed —
+//! the nonlinearity is folded into per-column constants).
+//!
+//! Constraints: (2b) coverage ≥ 1 per job; (2c) ≤ D_j instances per job;
+//! (2d) capacity |c| ≤ θ_a by combo pruning; (2e) aggregate throughput ≥
+//! T̄_j; (2f) Σ_c n_{a,c} ≤ count(a).
+//!
+//! SLO softening: real traces can be transiently infeasible (more jobs
+//! than capacity). `slack_penalty` adds per-job slack on (2b)/(2e) with
+//! a large objective penalty, so the optimizer degrades gracefully and
+//! the coordinator reports the violation instead of failing.
+
+use std::collections::HashMap;
+
+use super::branch_bound::{solve_ilp, BnbConfig, BnbResult, BnbStatus};
+use super::model::{Model, ObjSense, Sense, VarId, VarKind};
+use crate::cluster::energy::power_watts;
+use crate::workload::{AccelType, Combo, JobId, JobSpec, ACCEL_TYPES};
+
+/// Inputs to the allocation ILP.
+pub struct Problem1Input<'a> {
+    /// Active jobs 𝒥.
+    pub jobs: &'a [JobSpec],
+    /// Instances available per accelerator type.
+    pub accel_counts: &'a HashMap<AccelType, u32>,
+    /// Estimated (or measured) normalized throughput T̃^c_{a,j}.
+    pub throughput: &'a dyn Fn(AccelType, JobId, &Combo) -> f64,
+    /// Solo capability of type `a` (denominator of the relative load fed
+    /// to γ_a): the best solo throughput any current job achieves on it.
+    pub solo_capability: &'a dyn Fn(AccelType) -> f64,
+    /// Max candidate pair-combos per job (0 = solos only). Pruning keeps
+    /// the ILP tractable online; pairs are ranked by estimated combined
+    /// throughput.
+    pub max_pairs_per_job: usize,
+    /// Penalty (objective units per unit of slack) for SLO softening.
+    /// `None` builds the paper's hard formulation.
+    pub slack_penalty: Option<f64>,
+    /// Lagrangian throughput bonus λ (watts credited per unit of
+    /// normalized throughput delivered). The paper's objective (2a) is
+    /// pure instantaneous power (λ = 0), but that *slow-walks* jobs onto
+    /// legacy GPUs — power drops while completion times, contention and
+    /// total joules rise (a v100 delivers ~3× more work per joule than a
+    /// k80 here). λ > 0 makes the per-column cost `γ_a(u) − λ·ΣT`, i.e.
+    /// approximately energy-per-work, while keeping Problem 1 linear.
+    /// `benches/e2e_scheduling.rs` quantifies the difference; λ = 0
+    /// reproduces the paper's literal objective.
+    pub throughput_bonus: f64,
+}
+
+/// Decoded solution.
+#[derive(Debug, Clone)]
+pub struct AllocationSolution {
+    /// (accel type, combo, multiplicity) with multiplicity ≥ 1.
+    pub assignments: Vec<(AccelType, Combo, u32)>,
+    /// jobs whose coverage or SLO slack is active (soft mode only).
+    pub violated_jobs: Vec<JobId>,
+    pub objective: f64,
+    pub status: BnbStatus,
+    pub nodes: usize,
+    /// relative optimality gap at termination (0 = proved optimal)
+    pub gap: f64,
+}
+
+/// Build the candidate combination universe 𝒞 (solos + pruned pairs).
+pub fn candidate_combos(
+    jobs: &[JobSpec],
+    throughput: &dyn Fn(AccelType, JobId, &Combo) -> f64,
+    max_pairs_per_job: usize,
+) -> Vec<Combo> {
+    let mut combos: Vec<Combo> = jobs.iter().map(|j| Combo::Solo(j.id)).collect();
+    if max_pairs_per_job == 0 || jobs.len() < 2 {
+        return combos;
+    }
+    // score pairs by combined v100 estimated throughput, keep top-K per job
+    let mut scored: Vec<(f64, Combo)> = vec![];
+    for (i, a) in jobs.iter().enumerate() {
+        for b in jobs.iter().skip(i + 1) {
+            let c = Combo::pair(a.id, b.id);
+            let s = throughput(AccelType::V100, a.id, &c) + throughput(AccelType::V100, b.id, &c);
+            scored.push((s, c));
+        }
+    }
+    scored.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let mut per_job: HashMap<JobId, usize> = HashMap::new();
+    for (_, c) in scored {
+        let js = c.jobs();
+        if js.iter().all(|j| per_job.get(j).copied().unwrap_or(0) < max_pairs_per_job) {
+            for j in &js {
+                *per_job.entry(*j).or_default() += 1;
+            }
+            combos.push(c);
+        }
+    }
+    combos
+}
+
+/// Build and solve Problem 1. Returns `None` only if the hard
+/// formulation is infeasible (use `slack_penalty` to avoid that).
+pub fn build_problem1(input: &Problem1Input, bnb: &BnbConfig) -> (Model, Vec<(AccelType, Combo, VarId)>, HashMap<JobId, (Option<VarId>, Option<VarId>)>) {
+    let combos = candidate_combos(input.jobs, input.throughput, input.max_pairs_per_job);
+    let mut model = Model::new(ObjSense::Minimize);
+    let _ = bnb;
+
+    // n_{a,c} variables with per-column energy coefficients.
+    let mut cols: Vec<(AccelType, Combo, VarId)> = vec![];
+    for &a in ACCEL_TYPES.iter() {
+        let count = input.accel_counts.get(&a).copied().unwrap_or(0);
+        if count == 0 {
+            continue;
+        }
+        for c in &combos {
+            if c.len() as u32 > a.capacity() {
+                continue; // constraint (2d) by pruning
+            }
+            let total_t: f64 = c.jobs().iter().map(|&j| (input.throughput)(a, j, c)).sum();
+            if total_t <= 1e-9 {
+                continue; // useless column
+            }
+            let u = (total_t / (input.solo_capability)(a).max(1e-9)).clamp(0.0, 1.0);
+            let energy = power_watts(a, u) - input.throughput_bonus * total_t;
+            let v = model.add_var(
+                format!("n[{},{:?}]", a.name(), c),
+                0.0,
+                count as f64,
+                VarKind::Integer,
+                energy,
+            );
+            cols.push((a, *c, v));
+        }
+    }
+
+    // Per-job slack (soft mode).
+    let mut slacks: HashMap<JobId, (Option<VarId>, Option<VarId>)> = HashMap::new();
+    for j in input.jobs {
+        let (mut cover_s, mut thr_s) = (None, None);
+        if let Some(p) = input.slack_penalty {
+            cover_s = Some(model.add_var(format!("sc[{}]", j.id), 0.0, 1.0, VarKind::Continuous, 4.0 * p));
+            thr_s = Some(model.add_var(
+                format!("st[{}]", j.id),
+                0.0,
+                j.min_throughput.max(0.0),
+                VarKind::Continuous,
+                p / j.min_throughput.max(1e-3),
+            ));
+        }
+        slacks.insert(j.id, (cover_s, thr_s));
+    }
+
+    // (2b) coverage + (2c) distributability + (2e) throughput
+    for j in input.jobs {
+        let owned: Vec<&(AccelType, Combo, VarId)> =
+            cols.iter().filter(|(_, c, _)| c.contains(j.id)).collect();
+        let mut cover_terms: Vec<(VarId, f64)> = owned.iter().map(|(_, _, v)| (*v, 1.0)).collect();
+        if let (Some(sc), _) = slacks[&j.id] {
+            cover_terms.push((sc, 1.0));
+        }
+        model.add_constraint(format!("cover[{}]", j.id), cover_terms, Sense::Ge, 1.0);
+
+        let dist_terms: Vec<(VarId, f64)> = owned.iter().map(|(_, _, v)| (*v, 1.0)).collect();
+        model.add_constraint(
+            format!("dist[{}]", j.id),
+            dist_terms,
+            Sense::Le,
+            j.distributability as f64,
+        );
+
+        let mut thr_terms: Vec<(VarId, f64)> = owned
+            .iter()
+            .map(|(a, c, v)| (*v, (input.throughput)(*a, j.id, c)))
+            .collect();
+        if let (_, Some(st)) = slacks[&j.id] {
+            thr_terms.push((st, 1.0));
+        }
+        model.add_constraint(
+            format!("thr[{}]", j.id),
+            thr_terms,
+            Sense::Ge,
+            j.min_throughput,
+        );
+    }
+
+    // (2f) instances per type
+    for &a in ACCEL_TYPES.iter() {
+        let count = input.accel_counts.get(&a).copied().unwrap_or(0);
+        let terms: Vec<(VarId, f64)> = cols
+            .iter()
+            .filter(|(aa, _, _)| *aa == a)
+            .map(|(_, _, v)| (*v, 1.0))
+            .collect();
+        if !terms.is_empty() {
+            model.add_constraint(format!("cap[{}]", a.name()), terms, Sense::Le, count as f64);
+        }
+    }
+
+    (model, cols, slacks)
+}
+
+/// Greedy warm start: each job solo on the cheapest-energy instance
+/// type that still has capacity and meets its SLO (falling back to the
+/// fastest remaining type, then to slack). Seeds B&B with an incumbent
+/// so pruning bites immediately — without it the allocation trees at
+/// |J| ≥ 12 explore tens of thousands of nodes before the first
+/// feasible point (EXPERIMENTS.md §Perf).
+fn greedy_warm_start(
+    input: &Problem1Input,
+    model: &Model,
+    cols: &[(AccelType, Combo, VarId)],
+    slacks: &HashMap<JobId, (Option<VarId>, Option<VarId>)>,
+) -> Option<Vec<f64>> {
+    let mut x = vec![0.0f64; model.n_vars()];
+    let mut remaining: HashMap<AccelType, u32> = input.accel_counts.clone();
+    // hardest SLOs first
+    let mut jobs: Vec<&JobSpec> = input.jobs.iter().collect();
+    jobs.sort_by(|a, b| b.min_throughput.partial_cmp(&a.min_throughput).unwrap());
+    for j in jobs {
+        let solo = Combo::Solo(j.id);
+        // candidate types sorted by the energy coefficient of the solo col
+        let mut cands: Vec<(f64, AccelType, VarId, f64)> = cols
+            .iter()
+            .filter(|(a, c, _)| *c == solo && remaining.get(a).copied().unwrap_or(0) > 0)
+            .map(|(a, c, v)| {
+                let t = (input.throughput)(*a, j.id, c);
+                (model.vars[v.0].obj, *a, *v, t)
+            })
+            .collect();
+        cands.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        let pick = cands
+            .iter()
+            .find(|(_, _, _, t)| *t >= j.min_throughput)
+            .or_else(|| {
+                cands
+                    .iter()
+                    .max_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+            });
+        match pick {
+            Some(&(_, a, v, t)) => {
+                x[v.0] = 1.0;
+                *remaining.get_mut(&a).unwrap() -= 1;
+                if t < j.min_throughput {
+                    let (_, st) = slacks[&j.id];
+                    x[st?.0] = (j.min_throughput - t).min(model.vars[st?.0].ub);
+                }
+            }
+            None => {
+                let (sc, st) = slacks[&j.id];
+                x[sc?.0] = 1.0;
+                x[st?.0] = model.vars[st?.0].ub;
+            }
+        }
+    }
+    model.is_feasible(&x, 1e-6).then_some(x)
+}
+
+/// Solve Problem 1 end-to-end and decode the solution.
+pub fn solve_problem1(input: &Problem1Input, bnb: &BnbConfig) -> AllocationSolution {
+    let (model, cols, slacks) = build_problem1(input, bnb);
+    let mut bnb = bnb.clone();
+    if bnb.warm_start.is_none() && input.slack_penalty.is_some() {
+        bnb.warm_start = greedy_warm_start(input, &model, &cols, &slacks);
+    }
+    let r: BnbResult = solve_ilp(&model, &bnb);
+    decode(&r, &cols, &slacks)
+}
+
+fn decode(
+    r: &BnbResult,
+    cols: &[(AccelType, Combo, VarId)],
+    slacks: &HashMap<JobId, (Option<VarId>, Option<VarId>)>,
+) -> AllocationSolution {
+    let mut assignments = vec![];
+    let mut violated = vec![];
+    if matches!(r.status, BnbStatus::Optimal | BnbStatus::Feasible) {
+        for (a, c, v) in cols {
+            let mult = r.x[v.0].round() as u32;
+            if mult > 0 {
+                assignments.push((*a, *c, mult));
+            }
+        }
+        for (j, (sc, st)) in slacks {
+            let viol = sc.map_or(false, |v| r.x[v.0] > 1e-6)
+                || st.map_or(false, |v| r.x[v.0] > 1e-6);
+            if viol {
+                violated.push(*j);
+            }
+        }
+        violated.sort();
+    }
+    AllocationSolution {
+        assignments,
+        violated_jobs: violated,
+        objective: r.objective,
+        status: r.status,
+        nodes: r.nodes,
+        gap: r.gap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelFamily, ThroughputOracle};
+
+    fn mk_jobs(n: u32, oracle: &ThroughputOracle) -> Vec<JobSpec> {
+        let fams = [
+            ModelFamily::ResNet18,
+            ModelFamily::ResNet50,
+            ModelFamily::Transformer,
+            ModelFamily::LanguageModel,
+            ModelFamily::Recommendation,
+        ];
+        (0..n)
+            .map(|i| {
+                let f = fams[i as usize % fams.len()];
+                let b = f.batch_sizes()[i as usize % f.batch_sizes().len()];
+                let mut j = JobSpec {
+                    id: JobId(i),
+                    family: f,
+                    batch_size: b,
+                    replication: 1,
+                    min_throughput: 0.0,
+                    distributability: 2,
+                    work: 100.0,
+                };
+                j.min_throughput = 0.4 * oracle.solo(&j, AccelType::P100);
+                j
+            })
+            .collect()
+    }
+
+    fn oracle_input<'a>(
+        jobs: &'a [JobSpec],
+        oracle: &'a ThroughputOracle,
+        counts: &'a HashMap<AccelType, u32>,
+        thr: &'a dyn Fn(AccelType, JobId, &Combo) -> f64,
+        cap: &'a dyn Fn(AccelType) -> f64,
+    ) -> Problem1Input<'a> {
+        Problem1Input {
+            jobs,
+            accel_counts: counts,
+            throughput: thr,
+            solo_capability: cap,
+            max_pairs_per_job: 3,
+            slack_penalty: None,
+            throughput_bonus: 0.0,
+        }
+        .with(oracle)
+    }
+
+    impl<'a> Problem1Input<'a> {
+        fn with(self, _o: &'a ThroughputOracle) -> Self {
+            self
+        }
+    }
+
+    fn setup(
+        n: u32,
+        per_type: u32,
+    ) -> (
+        Vec<JobSpec>,
+        ThroughputOracle,
+        HashMap<AccelType, u32>,
+    ) {
+        let oracle = ThroughputOracle::new(11);
+        let jobs = mk_jobs(n, &oracle);
+        let counts: HashMap<AccelType, u32> =
+            ACCEL_TYPES.iter().map(|&a| (a, per_type)).collect();
+        (jobs, oracle, counts)
+    }
+
+    #[test]
+    fn every_job_covered_and_slo_met() {
+        let (jobs, oracle, counts) = setup(6, 2);
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0; // v100-normalized
+        let input = oracle_input(&jobs, &oracle, &counts, &thr, &cap);
+        let sol = solve_problem1(&input, &BnbConfig::default());
+        assert!(matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible), "{:?}", sol.status);
+        // coverage + SLO per job
+        for j in &jobs {
+            let total: f64 = sol
+                .assignments
+                .iter()
+                .filter(|(_, c, _)| c.contains(j.id))
+                .map(|(a, c, mult)| thr(*a, j.id, c) * *mult as f64)
+                .sum();
+            assert!(total >= j.min_throughput - 1e-6, "{}: {total} < {}", j.id, j.min_throughput);
+        }
+        // capacity per type
+        for &a in ACCEL_TYPES.iter() {
+            let used: u32 = sol
+                .assignments
+                .iter()
+                .filter(|(aa, _, _)| *aa == a)
+                .map(|(_, _, m)| m)
+                .sum();
+            assert!(used <= counts[&a]);
+        }
+    }
+
+    #[test]
+    fn infeasible_without_slack_feasible_with() {
+        // 4 jobs, 1 accelerator of each of only k80 types → too slow for
+        // harsh SLOs.
+        let oracle = ThroughputOracle::new(11);
+        let mut jobs = mk_jobs(4, &oracle);
+        for j in &mut jobs {
+            j.min_throughput = 0.95; // nearly the global max: only feasible on the best GPU solo
+            j.distributability = 1;
+        }
+        let mut counts = HashMap::new();
+        counts.insert(AccelType::K80, 4u32);
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let hard = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 2,
+            slack_penalty: None,
+            throughput_bonus: 0.0,
+        };
+        let sol = solve_problem1(&hard, &BnbConfig::default());
+        assert_eq!(sol.status, BnbStatus::Infeasible);
+
+        let soft = Problem1Input {
+            slack_penalty: Some(1000.0),
+            ..hard
+        };
+        let sol = solve_problem1(&soft, &BnbConfig::default());
+        assert!(matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible));
+        assert!(!sol.violated_jobs.is_empty());
+    }
+
+    #[test]
+    fn prefers_energy_efficient_packing() {
+        // One tiny job with a loose SLO: the optimizer should pick the
+        // cheapest-energy placement, not the fastest GPU.
+        let oracle = ThroughputOracle::new(11);
+        let mut jobs = mk_jobs(1, &oracle);
+        jobs[0].min_throughput = 0.05 * oracle.solo(&jobs[0], AccelType::K80);
+        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 1)).collect();
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 0,
+            slack_penalty: None,
+            throughput_bonus: 0.0,
+        };
+        let sol = solve_problem1(&input, &BnbConfig::default());
+        assert_eq!(sol.assignments.len(), 1);
+        let (a, _, _) = sol.assignments[0];
+        // k80 idle+load power < v100's → must not pick a v100
+        assert_ne!(a.consolidated(), AccelType::V100, "picked {a:?}");
+    }
+
+    #[test]
+    fn distributability_allows_splitting_for_throughput() {
+        // SLO above any single accelerator's capability; D_j = 2 lets the
+        // job run on two instances whose sum meets the SLO.
+        let oracle = ThroughputOracle::new(11);
+        let mut jobs = mk_jobs(1, &oracle);
+        let best = crate::workload::ACCEL_TYPES
+            .iter()
+            .map(|&a| oracle.solo(&jobs[0], a))
+            .fold(0.0f64, f64::max);
+        jobs[0].min_throughput = 1.5 * best;
+        jobs[0].distributability = 2;
+        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 0,
+            slack_penalty: None,
+            throughput_bonus: 0.0,
+        };
+        let sol = solve_problem1(&input, &BnbConfig::default());
+        assert!(matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible));
+        let total_mult: u32 = sol.assignments.iter().map(|(_, _, m)| m).sum();
+        assert_eq!(total_mult, 2, "{:?}", sol.assignments);
+    }
+
+    #[test]
+    fn throughput_bonus_prefers_efficient_fast_gpus() {
+        // λ = 0 (paper-literal) parks a loose-SLO job on a low-power GPU;
+        // λ = 300 makes energy-per-work the effective criterion → v100.
+        let oracle = ThroughputOracle::new(11);
+        let mut jobs = mk_jobs(1, &oracle);
+        jobs[0].min_throughput = 0.05 * oracle.solo(&jobs[0], AccelType::K80);
+        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 1)).collect();
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let solve = |bonus: f64| {
+            let input = Problem1Input {
+                jobs: &jobs,
+                accel_counts: &counts,
+                throughput: &thr,
+                solo_capability: &cap,
+                max_pairs_per_job: 0,
+                slack_penalty: None,
+                throughput_bonus: bonus,
+            };
+            solve_problem1(&input, &BnbConfig::default())
+        };
+        let literal = solve(0.0);
+        let bonus = solve(300.0);
+        assert_ne!(literal.assignments[0].0.consolidated(), AccelType::V100);
+        assert_eq!(bonus.assignments[0].0.consolidated(), AccelType::V100);
+    }
+
+    #[test]
+    fn candidate_combos_prunes_pairs() {
+        let (jobs, oracle, _) = setup(6, 1);
+        let jobs_c = jobs.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle.throughput(spec, c, a, &lookup)
+        };
+        let solos_only = candidate_combos(&jobs, &thr, 0);
+        assert_eq!(solos_only.len(), 6);
+        let with_pairs = candidate_combos(&jobs, &thr, 2);
+        assert!(with_pairs.len() > 6);
+        assert!(with_pairs.len() <= 6 + 6); // ≤ K·|J|/2 pairs
+    }
+}

@@ -1,0 +1,526 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves the LP relaxation of a [`Model`]: variable lower bounds are
+//! shifted out, upper bounds become explicit `≤` rows, `≥`/`=` rows get
+//! artificials, and the standard-form tableau is optimized with Dantzig
+//! pricing (switching to Bland's rule after a degeneracy streak, which
+//! guarantees termination).
+//!
+//! This is deliberately a *dense* tableau: the GOGH allocation LPs are a
+//! few hundred variables × a few hundred rows, where dense pivots are
+//! cache-friendly and beat a naive sparse implementation. The §Perf pass
+//! benchmarks pivot cost in `benches/ilp_scaling.rs`.
+
+use super::model::{Model, ObjSense, Sense};
+
+const EPS: f64 = 1e-9;
+
+/// LP outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+}
+
+/// LP result: status, primal solution (in the model's original variable
+/// space), objective value.
+#[derive(Debug, Clone)]
+pub struct LpResult {
+    pub status: LpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+/// Solve the LP relaxation of `model`, with optional per-variable bound
+/// overrides (used by branch-and-bound to fix/branch variables).
+///
+/// `bounds`: if `Some`, `bounds[i] = (lb, ub)` replaces the model's
+/// bounds for variable `i`.
+pub fn solve_lp(model: &Model, bounds: Option<&[(f64, f64)]>) -> LpResult {
+    let n = model.n_vars();
+    let get_bounds = |i: usize| -> (f64, f64) {
+        match bounds {
+            Some(b) => b[i],
+            None => (model.vars[i].lb, model.vars[i].ub),
+        }
+    };
+
+    // Quick inconsistency check (branching can cross bounds).
+    for i in 0..n {
+        let (lb, ub) = get_bounds(i);
+        if lb > ub + EPS {
+            return LpResult {
+                status: LpStatus::Infeasible,
+                x: vec![],
+                objective: f64::INFINITY,
+                iterations: 0,
+            };
+        }
+    }
+
+    // Shift x_i = lb_i + x'_i with x' >= 0; finite ub becomes a row.
+    // Objective: always minimize internally.
+    let obj_sign = match model.obj_sense {
+        ObjSense::Minimize => 1.0,
+        ObjSense::Maximize => -1.0,
+    };
+
+    // Presolve: variables with lb == ub are FIXED — they contribute only
+    // constants. Eliminating them (no column, no bound row) is the
+    // single biggest lever for branch-and-bound performance: deep B&B
+    // nodes fix many integers, and before this presolve each one cost an
+    // equality row + an artificial + phase-1 pivots (EXPERIMENTS.md
+    // §Perf records the before/after).
+    let mut compact: Vec<usize> = Vec::with_capacity(n); // original -> compact (or usize::MAX)
+    let mut originals: Vec<usize> = Vec::with_capacity(n); // compact -> original
+    for i in 0..n {
+        let (lb, ub) = get_bounds(i);
+        if ub.is_finite() && ub - lb <= EPS {
+            compact.push(usize::MAX);
+        } else {
+            compact.push(originals.len());
+            originals.push(i);
+        }
+    }
+    let nf = originals.len(); // free (non-fixed) variable count
+    let cost: Vec<f64> = originals
+        .iter()
+        .map(|&i| obj_sign * model.vars[i].obj)
+        .collect();
+
+    // Build rows over compact columns: (coefs, sense, rhs) after shift.
+    // Fixed variables' contributions fold into the rhs via the lb shift.
+    struct Row {
+        coefs: Vec<(usize, f64)>,
+        sense: Sense,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::with_capacity(model.n_constraints() + nf);
+    for c in &model.constraints {
+        let mut rhs = c.rhs;
+        let mut coefs = Vec::with_capacity(c.terms.len());
+        for &(v, coef) in &c.terms {
+            rhs -= coef * get_bounds(v.0).0;
+            if compact[v.0] != usize::MAX {
+                coefs.push((compact[v.0], coef));
+            }
+        }
+        // constraint over only-fixed variables: check it directly
+        if coefs.is_empty() {
+            let ok = match c.sense {
+                Sense::Le => 0.0 <= rhs + EPS,
+                Sense::Ge => 0.0 >= rhs - EPS,
+                Sense::Eq => rhs.abs() <= EPS,
+            };
+            if !ok {
+                return LpResult {
+                    status: LpStatus::Infeasible,
+                    x: vec![],
+                    objective: f64::INFINITY,
+                    iterations: 0,
+                };
+            }
+            continue;
+        }
+        rows.push(Row {
+            coefs,
+            sense: c.sense,
+            rhs,
+        });
+    }
+    for (ci, &i) in originals.iter().enumerate() {
+        let (lb, ub) = get_bounds(i);
+        if ub.is_finite() {
+            rows.push(Row {
+                coefs: vec![(ci, 1.0)],
+                sense: Sense::Le,
+                rhs: ub - lb,
+            });
+        }
+    }
+    let n = nf; // from here on, work in the compact space
+
+    let m = rows.len();
+    // Column layout: [structural 0..n | slack/surplus | artificials] + RHS.
+    // Count extras.
+    let mut n_slack = 0;
+    let mut n_art = 0;
+    for r in &rows {
+        let rhs_neg = r.rhs < -EPS;
+        let sense = effective_sense(r.sense, rhs_neg);
+        match sense {
+            Sense::Le => n_slack += 1,
+            Sense::Ge => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            Sense::Eq => n_art += 1,
+        }
+    }
+    let total = n + n_slack + n_art;
+    let width = total + 1; // + RHS column
+    let mut t = vec![0.0f64; m * width]; // tableau
+    let mut basis = vec![0usize; m];
+
+    let mut slack_col = n;
+    let mut art_col = n + n_slack;
+    let mut art_rows: Vec<usize> = vec![];
+    for (ri, r) in rows.iter().enumerate() {
+        let neg = r.rhs < -EPS;
+        let sgn = if neg { -1.0 } else { 1.0 };
+        let row = &mut t[ri * width..(ri + 1) * width];
+        for &(ci, k) in &r.coefs {
+            row[ci] += sgn * k;
+        }
+        row[total] = sgn * r.rhs;
+        match effective_sense(r.sense, neg) {
+            Sense::Le => {
+                row[slack_col] = 1.0;
+                basis[ri] = slack_col;
+                slack_col += 1;
+            }
+            Sense::Ge => {
+                row[slack_col] = -1.0;
+                slack_col += 1;
+                row[art_col] = 1.0;
+                basis[ri] = art_col;
+                art_col += 1;
+                art_rows.push(ri);
+            }
+            Sense::Eq => {
+                row[art_col] = 1.0;
+                basis[ri] = art_col;
+                art_col += 1;
+                art_rows.push(ri);
+            }
+        }
+    }
+
+    let mut iterations = 0usize;
+
+    // ---- Phase 1: minimize sum of artificials.
+    if n_art > 0 {
+        // reduced costs z for phase-1 objective (sum of artificial rows)
+        let mut z = vec![0.0f64; width];
+        for &ri in &art_rows {
+            for c in 0..width {
+                z[c] += t[ri * width + c];
+            }
+        }
+        // artificial columns have cost 1 → their reduced cost is z - 1... we
+        // track z_j - c_j: for artificials subtract 1.
+        for a in (n + n_slack)..total {
+            z[a] -= 1.0;
+        }
+        let status = optimize(&mut t, &mut basis, &mut z, m, total, width, &mut iterations, Some(n + n_slack));
+        if status == LpStatus::Unbounded {
+            // phase-1 objective is bounded below by 0; cannot happen
+            unreachable!("phase 1 unbounded");
+        }
+        if z[total] > 1e-7 {
+            // Σ artificials > 0 at the phase-1 optimum → infeasible
+            // (z[total] carries c_B'B⁻¹b = the current objective value)
+            return LpResult {
+                status: LpStatus::Infeasible,
+                x: vec![],
+                objective: f64::INFINITY,
+                iterations,
+            };
+        }
+        // Drive any artificial still in the basis out (degenerate rows).
+        for ri in 0..m {
+            if basis[ri] >= n + n_slack {
+                // find a non-artificial column with nonzero coef in this row
+                let mut pivoted = false;
+                for c in 0..(n + n_slack) {
+                    if t[ri * width + c].abs() > 1e-7 {
+                        pivot(&mut t, &mut basis, ri, c, m, width, &mut z);
+                        pivoted = true;
+                        break;
+                    }
+                }
+                if !pivoted {
+                    // redundant row; leave the artificial basic at 0
+                }
+            }
+        }
+    }
+
+    // ---- Phase 2: minimize the real objective (artificial cols barred).
+    let mut z = vec![0.0f64; width];
+    // z_j = c_B' B^-1 A_j - c_j  computed from the current tableau:
+    for c in 0..width {
+        let mut acc = 0.0;
+        for ri in 0..m {
+            let cb = if basis[ri] < n { cost[basis[ri]] } else { 0.0 };
+            acc += cb * t[ri * width + c];
+        }
+        z[c] = acc;
+    }
+    for (j, cj) in cost.iter().enumerate() {
+        z[j] -= cj;
+    }
+    let status = optimize(&mut t, &mut basis, &mut z, m, total, width, &mut iterations, Some(n + n_slack));
+    if status == LpStatus::Unbounded {
+        return LpResult {
+            status,
+            x: vec![],
+            objective: f64::NEG_INFINITY,
+            iterations,
+        };
+    }
+
+    // Extract structural solution (un-shift; fixed vars sit at lb).
+    let mut x = vec![0.0f64; model.n_vars()];
+    for (i, xi) in x.iter_mut().enumerate() {
+        *xi = get_bounds(i).0;
+    }
+    for ri in 0..m {
+        if basis[ri] < n {
+            x[originals[basis[ri]]] += t[ri * width + total];
+        }
+    }
+    for xi in x.iter_mut() {
+        // clean numerical dust
+        if xi.abs() < 1e-11 {
+            *xi = 0.0;
+        }
+    }
+    let objective = model.objective_value(&x);
+    LpResult {
+        status: LpStatus::Optimal,
+        x,
+        objective,
+        iterations,
+    }
+}
+
+fn effective_sense(s: Sense, rhs_negated: bool) -> Sense {
+    if !rhs_negated {
+        return s;
+    }
+    match s {
+        Sense::Le => Sense::Ge,
+        Sense::Ge => Sense::Le,
+        Sense::Eq => Sense::Eq,
+    }
+}
+
+/// Core pivot loop. `z` is the reduced-cost row (z_j - c_j; entering
+/// columns have z_j - c_j > 0 for a minimization), `z[width-1]` holds
+/// `-objective`. `barred_from` bars columns ≥ that index (artificials in
+/// phase 2).
+#[allow(clippy::too_many_arguments)]
+fn optimize(
+    t: &mut [f64],
+    basis: &mut [usize],
+    z: &mut [f64],
+    m: usize,
+    total: usize,
+    width: usize,
+    iterations: &mut usize,
+    barred_from: Option<usize>,
+) -> LpStatus {
+    let bar = barred_from.unwrap_or(total);
+    let mut degenerate_streak = 0usize;
+    loop {
+        *iterations += 1;
+        if *iterations > 50_000 {
+            // safety valve; with Bland's rule this should not trigger
+            return LpStatus::Optimal;
+        }
+        // Pricing: Dantzig normally; Bland when cycling is suspected.
+        let use_bland = degenerate_streak > 2 * (m + total);
+        let mut enter: Option<usize> = None;
+        if use_bland {
+            for c in 0..bar {
+                if z[c] > EPS {
+                    enter = Some(c);
+                    break;
+                }
+            }
+        } else {
+            let mut best = EPS;
+            for c in 0..bar {
+                if z[c] > best {
+                    best = z[c];
+                    enter = Some(c);
+                }
+            }
+        }
+        let Some(e) = enter else {
+            return LpStatus::Optimal;
+        };
+        // Ratio test.
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for ri in 0..m {
+            let a = t[ri * width + e];
+            if a > EPS {
+                let ratio = t[ri * width + total] / a;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.map_or(true, |l| basis[ri] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(ri);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return LpStatus::Unbounded;
+        };
+        if best_ratio < EPS {
+            degenerate_streak += 1;
+        } else {
+            degenerate_streak = 0;
+        }
+        pivot(t, basis, l, e, m, width, z);
+    }
+}
+
+/// Pivot on (row `l`, col `e`), updating tableau, basis, and the z-row.
+fn pivot(t: &mut [f64], basis: &mut [usize], l: usize, e: usize, m: usize, width: usize, z: &mut [f64]) {
+    let piv = t[l * width + e];
+    debug_assert!(piv.abs() > 1e-12);
+    let inv = 1.0 / piv;
+    for c in 0..width {
+        t[l * width + c] *= inv;
+    }
+    t[l * width + e] = 1.0; // exact
+    for ri in 0..m {
+        if ri == l {
+            continue;
+        }
+        let f = t[ri * width + e];
+        if f.abs() > 1e-13 {
+            for c in 0..width {
+                t[ri * width + c] -= f * t[l * width + c];
+            }
+            t[ri * width + e] = 0.0;
+        }
+    }
+    let f = z[e];
+    if f.abs() > 1e-13 {
+        for c in 0..width {
+            z[c] -= f * t[l * width + c];
+        }
+        z[e] = 0.0;
+    }
+    basis[l] = e;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::model::{Model, ObjSense, Sense, VarKind};
+
+    fn var(m: &mut Model, name: &str, obj: f64) -> crate::ilp::VarId {
+        m.add_var(name, 0.0, f64::INFINITY, VarKind::Continuous, obj)
+    }
+
+    #[test]
+    fn maximize_classic_lp() {
+        // max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18 → (2, 6) obj 36
+        let mut m = Model::new(ObjSense::Maximize);
+        let x = var(&mut m, "x", 3.0);
+        let y = var(&mut m, "y", 5.0);
+        m.add_constraint("c1", vec![(x, 1.0)], Sense::Le, 4.0);
+        m.add_constraint("c2", vec![(y, 2.0)], Sense::Le, 12.0);
+        m.add_constraint("c3", vec![(x, 3.0), (y, 2.0)], Sense::Le, 18.0);
+        let r = solve_lp(&m, None);
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.objective - 36.0).abs() < 1e-6, "{}", r.objective);
+        assert!((r.x[0] - 2.0).abs() < 1e-6 && (r.x[1] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minimize_with_ge_constraints() {
+        // min 2x + 3y s.t. x + y ≥ 10, x ≥ 2 → (8, 2)? obj: prefer x
+        // (cheaper): x=10,y=0 gives 20; but x ≥ 2 only. optimum x=10 y=0 → 20
+        let mut m = Model::new(ObjSense::Minimize);
+        let x = var(&mut m, "x", 2.0);
+        let y = var(&mut m, "y", 3.0);
+        m.add_constraint("cover", vec![(x, 1.0), (y, 1.0)], Sense::Ge, 10.0);
+        m.add_constraint("xmin", vec![(x, 1.0)], Sense::Ge, 2.0);
+        let r = solve_lp(&m, None);
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.objective - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x + y s.t. x + 2y = 4, x - y = 1 → x=2, y=1, obj 3
+        let mut m = Model::new(ObjSense::Minimize);
+        let x = var(&mut m, "x", 1.0);
+        let y = var(&mut m, "y", 1.0);
+        m.add_constraint("e1", vec![(x, 1.0), (y, 2.0)], Sense::Eq, 4.0);
+        m.add_constraint("e2", vec![(x, 1.0), (y, -1.0)], Sense::Eq, 1.0);
+        let r = solve_lp(&m, None);
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.x[0] - 2.0).abs() < 1e-6 && (r.x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut m = Model::new(ObjSense::Minimize);
+        let x = var(&mut m, "x", 1.0);
+        m.add_constraint("lo", vec![(x, 1.0)], Sense::Ge, 5.0);
+        m.add_constraint("hi", vec![(x, 1.0)], Sense::Le, 3.0);
+        assert_eq!(solve_lp(&m, None).status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut m = Model::new(ObjSense::Maximize);
+        let x = var(&mut m, "x", 1.0);
+        m.add_constraint("lo", vec![(x, 1.0)], Sense::Ge, 0.0);
+        assert_eq!(solve_lp(&m, None).status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn respects_upper_bounds() {
+        let mut m = Model::new(ObjSense::Maximize);
+        let x = m.add_var("x", 0.0, 2.5, VarKind::Continuous, 1.0);
+        m.add_constraint("c", vec![(x, 1.0)], Sense::Le, 100.0);
+        let r = solve_lp(&m, None);
+        assert!((r.x[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn respects_lower_bound_shift() {
+        // min x with lb 3 → x = 3
+        let mut m = Model::new(ObjSense::Minimize);
+        let x = m.add_var("x", 3.0, 10.0, VarKind::Continuous, 1.0);
+        m.add_constraint("c", vec![(x, 1.0)], Sense::Le, 100.0);
+        let r = solve_lp(&m, None);
+        assert!((r.x[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bound_overrides_fix_variable() {
+        let mut m = Model::new(ObjSense::Maximize);
+        let x = m.add_var("x", 0.0, 5.0, VarKind::Continuous, 1.0);
+        let y = m.add_var("y", 0.0, 5.0, VarKind::Continuous, 1.0);
+        m.add_constraint("c", vec![(x, 1.0), (y, 1.0)], Sense::Le, 6.0);
+        let r = solve_lp(&m, Some(&[(2.0, 2.0), (0.0, 5.0)]));
+        assert!((r.x[0] - 2.0).abs() < 1e-6);
+        assert!((r.x[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // classic degenerate corner: multiple constraints meet at origin
+        let mut m = Model::new(ObjSense::Maximize);
+        let x = var(&mut m, "x", 1.0);
+        let y = var(&mut m, "y", 1.0);
+        m.add_constraint("c1", vec![(x, 1.0), (y, 1.0)], Sense::Le, 1.0);
+        m.add_constraint("c2", vec![(x, 1.0), (y, 2.0)], Sense::Le, 1.0);
+        m.add_constraint("c3", vec![(x, 2.0), (y, 1.0)], Sense::Le, 1.0);
+        let r = solve_lp(&m, None);
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!(r.objective <= 1.0 + 1e-6);
+    }
+}

@@ -1,0 +1,47 @@
+//! # GOGH — Correlation-Guided Orchestration of GPUs in Heterogeneous Clusters
+//!
+//! Production reimplementation of the GOGH scheduler (Raeisi et al.,
+//! CS.DC 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the online coordinator: job queue, [`catalog`]
+//!   of throughput estimates, nearest-neighbour similarity, the ILP
+//!   [`ilp`] optimizer (built from scratch: simplex + branch-and-bound),
+//!   the heterogeneous [`cluster`] simulator with energy accounting, and
+//!   the continuous P1→optimize→monitor→P2 learning loop in
+//!   [`coordinator`].
+//! * **L2/L1 (build-time python)** — the P1/P2 estimator networks
+//!   (FF/RNN/Transformer) with Pallas kernels, AOT-lowered to HLO text in
+//!   `artifacts/`; the [`runtime`] module loads and drives them through
+//!   the PJRT CPU client. Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use gogh::config::ExperimentConfig;
+//! use gogh::coordinator::Gogh;
+//!
+//! let cfg = ExperimentConfig::default();
+//! let mut sys = Gogh::from_config(&cfg).unwrap();
+//! let report = sys.run().unwrap();
+//! println!("energy: {:.1} J, SLO violations: {}", report.energy_joules, report.slo_violations);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/`
+//! for the harnesses that regenerate every figure of the paper.
+
+pub mod baselines;
+pub mod catalog;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod ilp;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use config::ExperimentConfig;
+pub use coordinator::Gogh;
+
+/// Crate-wide result type (anyhow for rich error context).
+pub type Result<T> = anyhow::Result<T>;

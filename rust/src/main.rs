@@ -1,0 +1,241 @@
+//! `gogh` — CLI for the GOGH heterogeneous-cluster orchestrator.
+//!
+//! Subcommands:
+//!   * `simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S] [--config cfg.json]`
+//!   * `info [--workloads]`   — workload universe / accelerators / artifacts
+//!   * `solve [--jobs N] [--servers-per-type K] [--seed S]` — one-shot Problem 1
+//!   * `config`               — dump the default config JSON
+//!
+//! (Argument parsing is hand-rolled — offline build, see Cargo.toml.)
+
+use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::{Gogh, Scheduler, SimDriver};
+use gogh::runtime::Engine;
+use gogh::workload::{ThroughputOracle, Trace};
+use gogh::Result;
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    bools: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut bools = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.insert(name.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags, bools }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.contains(name) || self.flags.contains_key(name)
+    }
+}
+
+const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in heterogeneous clusters
+
+USAGE:
+  gogh simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S]
+                [--config cfg.json] [--save-catalog catalog.json] [--gavel-csv data.csv]
+  gogh info [--workloads]
+  gogh solve [--jobs N] [--servers-per-type K] [--seed S]
+  gogh config
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "simulate" => simulate(&args),
+        "info" => info(&args),
+        "solve" => solve(&args),
+        "config" => {
+            println!("{}", ExperimentConfig::default().to_json());
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ExperimentConfig::load(std::path::Path::new(p))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(n) = args.get_parse::<usize>("jobs") {
+        cfg.trace.n_jobs = n;
+    }
+    if let Some(s) = args.get_parse::<u64>("seed") {
+        cfg.seed = s;
+        cfg.trace.seed = s;
+    }
+    if let Some(p) = args.get("gavel-csv") {
+        cfg.gavel_csv = Some(p.to_string());
+    }
+    Ok(cfg)
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let policy = args.get("policy").unwrap_or("gogh");
+    let report = match policy {
+        "gogh" => {
+            let mut sys = Gogh::from_config(&cfg)?;
+            let report = sys.run()?;
+            // checkpoint the learned catalog for later sessions
+            if let Some(path) = args.get("save-catalog") {
+                sys.scheduler().catalog.save(std::path::Path::new(path))?;
+                println!("catalog saved to {path}");
+            }
+            report
+        }
+        other => {
+            let oracle = cfg.build_oracle()?;
+            let trace = Trace::generate(&cfg.trace, &oracle);
+            let spec = gogh::cluster::ClusterSpec::mix(&cfg.cluster.accel_mix);
+            let mut driver = SimDriver::new(
+                spec,
+                oracle.clone(),
+                trace,
+                cfg.noise_sigma,
+                cfg.monitor_interval_s,
+                cfg.seed,
+            );
+            let mut sched: Box<dyn Scheduler> = match other {
+                "random" => Box::new(RandomScheduler::new(cfg.seed)),
+                "greedy" => Box::new(GreedyScheduler::new()),
+                "oracle" => Box::new(OracleScheduler::new(oracle, cfg.optimizer.clone())),
+                _ => anyhow::bail!("unknown policy {other:?} (want gogh|random|greedy|oracle)"),
+            };
+            driver.run(sched.as_mut())?
+        }
+    };
+    println!("{}", gogh::metrics::RunReport::header());
+    println!("{}", report.row());
+    if let Some(mae) = report.estimation_mae {
+        println!("estimation MAE vs measured: {mae:.4}");
+    }
+    println!(
+        "decision path: ILP {:.2} ms, P1 {:.2} ms",
+        report.mean_solve_ms, report.mean_p1_ms
+    );
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    println!("accelerator types (θ=2 each):");
+    for a in gogh::workload::ACCEL_TYPES {
+        let (idle, extra) = a.power_params();
+        println!(
+            "  {:<22} speed {:.2}x  power {}+{} W",
+            a.name(),
+            a.base_speed(),
+            idle,
+            extra
+        );
+    }
+    if args.has("workloads") {
+        println!("\nTable 2 workload universe:");
+        for f in gogh::workload::FAMILIES {
+            println!("  {:<16} batches {:?}", f.name(), f.batch_sizes());
+        }
+    }
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = Engine::load("artifacts")?;
+        println!("\nAOT artifacts:");
+        let mut keys: Vec<_> = engine.manifest().models.keys().collect();
+        keys.sort();
+        for k in keys {
+            let m = &engine.manifest().models[k];
+            println!(
+                "  {:<16} {} params, in {}→{}",
+                k, m.param_count, m.input_dim, m.padded_dim
+            );
+        }
+    }
+    Ok(())
+}
+
+fn solve(args: &Args) -> Result<()> {
+    use gogh::cluster::{Cluster, ClusterSpec};
+    use gogh::workload::{JobId, JobSpec, FAMILIES};
+    let jobs: u32 = args.get_parse("jobs").unwrap_or(8);
+    let servers_per_type: u32 = args.get_parse("servers-per-type").unwrap_or(2);
+    let seed: u64 = args.get_parse("seed").unwrap_or(17);
+
+    let oracle = ThroughputOracle::new(seed);
+    let mut cluster = Cluster::new(ClusterSpec::balanced(servers_per_type));
+    for i in 0..jobs {
+        let f = FAMILIES[i as usize % FAMILIES.len()];
+        let b = f.batch_sizes()[i as usize % f.batch_sizes().len()];
+        let mut j = JobSpec {
+            id: JobId(i),
+            family: f,
+            batch_size: b,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 2,
+            work: 100.0,
+        };
+        j.min_throughput = 0.4 * oracle.solo(&j, gogh::workload::AccelType::P100);
+        cluster.add_job(j);
+    }
+    let all_jobs: Vec<JobSpec> = cluster.jobs().cloned().collect();
+    let thr = {
+        let oracle = oracle.clone();
+        move |a, j: JobId, c: &gogh::workload::Combo| {
+            let spec = all_jobs.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| all_jobs.iter().find(|s| s.id == id).cloned();
+            oracle.throughput(spec, c, a, &lookup)
+        }
+    };
+    let mut opt = gogh::coordinator::Optimizer::new(gogh::config::OptimizerConfig::default());
+    let t0 = std::time::Instant::now();
+    let (placement, sol) = opt.allocate(&cluster, &thr)?;
+    println!(
+        "solved {} jobs on {} instances in {:.1} ms ({} B&B nodes, objective {:.1} W)",
+        jobs,
+        cluster.spec.len(),
+        t0.elapsed().as_secs_f64() * 1000.0,
+        sol.nodes,
+        sol.objective
+    );
+    let mut rows: Vec<String> = placement
+        .iter()
+        .map(|(a, c)| format!("  {a} <- {c:?}"))
+        .collect();
+    rows.sort();
+    for r in rows {
+        println!("{r}");
+    }
+    Ok(())
+}

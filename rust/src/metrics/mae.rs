@@ -1,0 +1,97 @@
+//! Streaming MAE / MSE tracking — the paper's Figure 2/3 metrics.
+
+/// Accumulates absolute and squared errors.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorTracker {
+    n: u64,
+    abs_sum: f64,
+    sq_sum: f64,
+    max_abs: f64,
+}
+
+impl ErrorTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, predicted: f64, actual: f64) {
+        let e = predicted - actual;
+        self.n += 1;
+        self.abs_sum += e.abs();
+        self.sq_sum += e * e;
+        self.max_abs = self.max_abs.max(e.abs());
+    }
+
+    pub fn merge(&mut self, other: &ErrorTracker) {
+        self.n += other.n;
+        self.abs_sum += other.abs_sum;
+        self.sq_sum += other.sq_sum;
+        self.max_abs = self.max_abs.max(other.max_abs);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean absolute error (the paper's headline metric).
+    pub fn mae(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.abs_sum / self.n as f64
+        }
+    }
+
+    /// Mean squared error (the paper's training loss).
+    pub fn mse(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sq_sum / self.n as f64
+        }
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.max_abs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mae_mse_basic() {
+        let mut t = ErrorTracker::new();
+        t.push(1.0, 0.0); // err 1
+        t.push(0.0, 2.0); // err -2
+        assert_eq!(t.n(), 2);
+        assert!((t.mae() - 1.5).abs() < 1e-12);
+        assert!((t.mse() - 2.5).abs() < 1e-12);
+        assert_eq!(t.max_abs(), 2.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(ErrorTracker::new().mae().is_nan());
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut a = ErrorTracker::new();
+        let mut b = ErrorTracker::new();
+        let mut all = ErrorTracker::new();
+        for i in 0..10 {
+            let (p, y) = (i as f64 * 0.1, 0.5);
+            if i % 2 == 0 {
+                a.push(p, y)
+            } else {
+                b.push(p, y)
+            }
+            all.push(p, y);
+        }
+        a.merge(&b);
+        assert!((a.mae() - all.mae()).abs() < 1e-12);
+        assert!((a.mse() - all.mse()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: estimation-error tracking (the paper's MAE/MSE), energy
+//! accounting summaries, and report tables.
+
+pub mod mae;
+pub mod summary;
+
+pub use mae::ErrorTracker;
+pub use summary::{RunReport, SchedulerComparison};

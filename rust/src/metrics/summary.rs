@@ -1,0 +1,127 @@
+//! Run reports and scheduler-comparison tables (the e2e bench output).
+
+/// Summary of one simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub scheduler: String,
+    /// total simulated time (s)
+    pub sim_seconds: f64,
+    /// energy of busy accelerators (objective 2a integrated over time)
+    pub energy_joules: f64,
+    /// energy including idle accelerators
+    pub total_energy_joules: f64,
+    /// completed / total jobs
+    pub jobs_completed: usize,
+    pub jobs_total: usize,
+    /// time-integral of unmet SLO (Σ max(0, T̄_j − T_j) dt)
+    pub slo_deficit: f64,
+    /// rounds in which ≥1 job was below its SLO
+    pub slo_violations: usize,
+    /// placement moves applied over the run (migration cost)
+    pub migrations: usize,
+    /// mean job completion time (s)
+    pub mean_jct: f64,
+    /// throughput-estimation MAE vs ground truth, if an estimator ran
+    pub estimation_mae: Option<f64>,
+    /// mean ILP solve latency (ms) on the decision path
+    pub mean_solve_ms: f64,
+    /// mean P1 inference latency (ms)
+    pub mean_p1_ms: f64,
+}
+
+impl RunReport {
+    /// Energy per completed job — the headline efficiency number.
+    pub fn joules_per_job(&self) -> f64 {
+        if self.jobs_completed == 0 {
+            f64::NAN
+        } else {
+            self.energy_joules / self.jobs_completed as f64
+        }
+    }
+
+    /// One row of the comparison table.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<14} {:>10.0} {:>12.0} {:>7}/{:<4} {:>9.3} {:>6} {:>7.1} {:>9}",
+            self.scheduler,
+            self.energy_joules,
+            self.total_energy_joules,
+            self.jobs_completed,
+            self.jobs_total,
+            self.slo_deficit,
+            self.slo_violations,
+            self.mean_jct,
+            self.migrations,
+        )
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<14} {:>10} {:>12} {:>12} {:>9} {:>6} {:>7} {:>9}",
+            "scheduler", "busy_J", "total_J", "done/total", "slo_def", "viols", "jct_s", "moves"
+        )
+    }
+}
+
+/// Multiple runs side by side.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerComparison {
+    pub reports: Vec<RunReport>,
+}
+
+impl SchedulerComparison {
+    pub fn push(&mut self, r: RunReport) {
+        self.reports.push(r);
+    }
+
+    pub fn table(&self) -> String {
+        let mut s = RunReport::header();
+        s.push('\n');
+        for r in &self.reports {
+            s.push_str(&r.row());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Relative energy of each scheduler vs the first (baseline) row.
+    pub fn energy_ratios(&self) -> Vec<(String, f64)> {
+        let Some(base) = self.reports.first() else {
+            return vec![];
+        };
+        self.reports
+            .iter()
+            .map(|r| (r.scheduler.clone(), r.energy_joules / base.energy_joules.max(1e-9)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn joules_per_job() {
+        let r = RunReport {
+            energy_joules: 100.0,
+            jobs_completed: 4,
+            ..Default::default()
+        };
+        assert_eq!(r.joules_per_job(), 25.0);
+    }
+
+    #[test]
+    fn table_has_all_rows() {
+        let mut c = SchedulerComparison::default();
+        for name in ["gogh", "random"] {
+            c.push(RunReport {
+                scheduler: name.into(),
+                energy_joules: 10.0,
+                ..Default::default()
+            });
+        }
+        let t = c.table();
+        assert!(t.contains("gogh") && t.contains("random"));
+        assert_eq!(c.energy_ratios()[1].1, 1.0);
+    }
+}

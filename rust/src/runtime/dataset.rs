@@ -1,0 +1,461 @@
+//! Training-tuple builders for P1 (Eq. 1) and P2 (Eq. 3).
+//!
+//! Used in two places:
+//!  * the figure benches (fig2a/fig2b/fig3) build train/val/test sets
+//!    over the Table 2 universe from the ground-truth oracle, mirroring
+//!    the paper's offline evaluation;
+//!  * the coordinator's online loop builds the same rows from *measured*
+//!    catalog records (never the oracle).
+//!
+//! Splits are by workload configuration (family × batch): test configs
+//! never appear as the estimation target j1 in train — that is the
+//! "unseen input distributions" generalization the paper's test MAE
+//! probes.
+
+use crate::util::Rng;
+use crate::workload::encoding::{p1_row, p2_row, psi_distance, PSI_DIM};
+#[cfg(test)]
+use crate::workload::encoding::{P1_DIM, P2_PADDED};
+use crate::workload::trace::table2_universe;
+use crate::workload::{AccelType, JobId, JobSpec, ModelFamily, ThroughputOracle, ACCEL_TYPES};
+
+/// One (x, y) training sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub x: Vec<f32>,
+    pub y: [f32; 2],
+}
+
+/// A train/val/test split of samples.
+#[derive(Debug, Clone, Default)]
+pub struct Split {
+    pub train: Vec<Sample>,
+    pub val: Vec<Sample>,
+    pub test: Vec<Sample>,
+}
+
+impl Split {
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        (self.train.len(), self.val.len(), self.test.len())
+    }
+}
+
+/// Assign the 22 Table 2 configs to train/val/test (70/15/15 by count:
+/// 16/3/3), deterministically per seed.
+pub fn split_universe(seed: u64) -> (Vec<(ModelFamily, u32)>, Vec<(ModelFamily, u32)>, Vec<(ModelFamily, u32)>) {
+    let mut univ = table2_universe();
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5b117);
+    rng.shuffle(&mut univ);
+    let n = univ.len();
+    let n_test = (n as f64 * 0.15).round() as usize;
+    let n_val = (n as f64 * 0.15).round() as usize;
+    let test = univ.split_off(n - n_test);
+    let val = univ.split_off(univ.len() - n_val);
+    (univ, val, test)
+}
+
+/// Builds P1/P2 datasets from the ground-truth oracle.
+pub struct DatasetBuilder<'a> {
+    pub oracle: &'a ThroughputOracle,
+    /// estimate-noise sigma used to synthesize the "current estimate"
+    /// inputs of P2 rows (relative error of a plausible P1 output).
+    pub est_sigma: f64,
+    /// measurement-noise sigma applied to measured inputs.
+    pub meas_sigma: f64,
+    pub seed: u64,
+}
+
+fn mk_job(id: u32, cfg: (ModelFamily, u32)) -> JobSpec {
+    JobSpec {
+        id: JobId(id),
+        family: cfg.0,
+        batch_size: cfg.1,
+        replication: 1,
+        min_throughput: 0.0,
+        distributability: 1,
+        work: 1.0,
+    }
+}
+
+impl<'a> DatasetBuilder<'a> {
+    pub fn new(oracle: &'a ThroughputOracle, seed: u64) -> Self {
+        Self {
+            oracle,
+            est_sigma: 0.15,
+            meas_sigma: 0.02,
+            seed,
+        }
+    }
+
+    fn noise(&self, rng: &mut Rng, sigma: f64) -> f64 {
+        if sigma <= 0.0 {
+            return 1.0;
+        }
+        let u1: f64 = rng.f64().max(1e-12);
+        let u2: f64 = rng.range_f64(0.0, std::f64::consts::TAU);
+        let z = (-2.0 * u1.ln()).sqrt() * u2.cos();
+        (sigma * z).exp()
+    }
+
+    /// Nearest config (by Ψ distance) to `target` within `pool`,
+    /// excluding exact identity — the j2 selection of Eq. 1.
+    fn nearest_config(
+        target: (ModelFamily, u32),
+        pool: &[(ModelFamily, u32)],
+    ) -> (ModelFamily, u32) {
+        let tpsi = crate::workload::encoding::psi(target.0, target.1, 1);
+        let mut best = pool[0];
+        let mut best_d = f32::INFINITY;
+        for &c in pool {
+            if c == target {
+                continue;
+            }
+            let d = psi_distance(&tpsi, &crate::workload::encoding::psi(c.0, c.1, 1));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Generate `n` P1 samples whose estimation target j1 is drawn from
+    /// `j1_pool` and whose reference job j2 comes from `ref_pool`
+    /// (train configs — the "previously seen" jobs of the Catalog).
+    pub fn p1_samples(
+        &self,
+        n: usize,
+        j1_pool: &[(ModelFamily, u32)],
+        ref_pool: &[(ModelFamily, u32)],
+        salt: u64,
+    ) -> Vec<Sample> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ salt ^ 0x9101);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let j1_cfg = j1_pool[rng.range_usize(0, j1_pool.len())];
+            let j2_cfg = Self::nearest_config(j1_cfg, ref_pool);
+            // j3: co-runner, or the empty job j0 ~25% of the time
+            let j3_cfg = if rng.bool(0.25) {
+                None
+            } else {
+                Some(ref_pool[rng.range_usize(0, ref_pool.len())])
+            };
+            let a = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            let j1 = mk_job(3 * i as u32, j1_cfg);
+            let j2 = mk_job(3 * i as u32 + 1, j2_cfg);
+            let (x, y) = self.p1_tuple(&j1, &j2, j3_cfg.map(|c| mk_job(3 * i as u32 + 2, c)), a, &mut rng);
+            out.push(Sample { x, y });
+        }
+        out
+    }
+
+    /// One Eq. 1 tuple: historical throughputs of (j2, j3) on `a` as
+    /// inputs, true throughputs of (j1, j3) as targets.
+    fn p1_tuple(
+        &self,
+        j1: &JobSpec,
+        j2: &JobSpec,
+        j3: Option<JobSpec>,
+        a: AccelType,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, [f32; 2]) {
+        let psi_j1 = j1.psi();
+        let psi_j2 = j2.psi();
+        let (psi_j3, t_j2, t_j3, y1, y3) = match &j3 {
+            None => {
+                // j3 = j0 (empty): historical solo throughput of j2,
+                // target solo throughput of j1.
+                let t2 = self.oracle.solo(j2, a) * self.noise(rng, self.meas_sigma);
+                let y1 = self.oracle.solo(j1, a);
+                (crate::workload::encoding::PSI_EMPTY, t2, 0.0, y1, 0.0)
+            }
+            Some(j3) => {
+                let (t2, t3) = self.oracle.pair(j2, j3, a);
+                let (y1, y3) = self.oracle.pair(j1, j3, a);
+                (
+                    j3.psi(),
+                    t2 * self.noise(rng, self.meas_sigma),
+                    t3 * self.noise(rng, self.meas_sigma),
+                    y1,
+                    y3,
+                )
+            }
+        };
+        let row = p1_row(&psi_j2, &psi_j3, a, t_j2 as f32, t_j3 as f32, &psi_j1);
+        (row.to_vec(), [y1 as f32, y3 as f32])
+    }
+
+    /// Generate `n` P2 samples with targets from `j1_pool`.
+    pub fn p2_samples(
+        &self,
+        n: usize,
+        j1_pool: &[(ModelFamily, u32)],
+        ref_pool: &[(ModelFamily, u32)],
+        salt: u64,
+    ) -> Vec<Sample> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ salt ^ 0x9202);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let j1_cfg = j1_pool[rng.range_usize(0, j1_pool.len())];
+            let j2_cfg = if rng.bool(0.25) {
+                None
+            } else {
+                Some(ref_pool[rng.range_usize(0, ref_pool.len())])
+            };
+            let a1 = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            let mut a2 = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            while a2 == a1 {
+                a2 = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            }
+            let j1 = mk_job(2 * i as u32, j1_cfg);
+            let j2 = j2_cfg.map(|c| mk_job(2 * i as u32 + 1, c));
+            out.push(self.p2_tuple(&j1, j2.as_ref(), a1, a2, &mut rng));
+        }
+        out
+    }
+
+    /// One Eq. 3 tuple: stale estimates + fresh measurement on a1 as
+    /// inputs, true throughputs on a2 as targets.
+    fn p2_tuple(
+        &self,
+        j1: &JobSpec,
+        j2: Option<&JobSpec>,
+        a1: AccelType,
+        a2: AccelType,
+        rng: &mut Rng,
+    ) -> Sample {
+        let (true_a1_j1, true_a1_j2, true_a2_j1, true_a2_j2, psi_j2) = match j2 {
+            None => (
+                self.oracle.solo(j1, a1),
+                0.0,
+                self.oracle.solo(j1, a2),
+                0.0,
+                crate::workload::encoding::PSI_EMPTY,
+            ),
+            Some(j2) => {
+                let (p1a, p2a) = self.oracle.pair(j1, j2, a1);
+                let (p1b, p2b) = self.oracle.pair(j1, j2, a2);
+                (p1a, p2a, p1b, p2b, j2.psi())
+            }
+        };
+        // Stale estimates share one multiplicative error per (job, pair):
+        // a plausible P1 output is wrong in a *correlated* way across GPUs
+        // (it mispredicts the job, not one GPU) — this is exactly the
+        // structure P2 can exploit: observe the error on a1, correct a2.
+        let e_j1 = self.noise(rng, self.est_sigma);
+        let e_j2 = self.noise(rng, self.est_sigma);
+        // plus small independent per-GPU residuals
+        let r = |rng: &mut Rng| self.noise(rng, self.est_sigma * 0.3);
+        let est_a1_j1 = true_a1_j1 * e_j1 * r(rng);
+        let est_a1_j2 = true_a1_j2 * e_j2 * r(rng);
+        let est_a2_j1 = true_a2_j1 * e_j1 * r(rng);
+        let est_a2_j2 = true_a2_j2 * e_j2 * r(rng);
+        let meas_a1_j1 = true_a1_j1 * self.noise(rng, self.meas_sigma);
+        let meas_a1_j2 = true_a1_j2 * self.noise(rng, self.meas_sigma);
+        let row = p2_row(
+            &j1.psi(),
+            &psi_j2,
+            a1,
+            a2,
+            est_a1_j1 as f32,
+            est_a1_j2 as f32,
+            meas_a1_j1 as f32,
+            meas_a1_j2 as f32,
+            est_a2_j1 as f32,
+            est_a2_j2 as f32,
+        );
+        Sample {
+            x: row.to_vec(),
+            y: [true_a2_j1 as f32, true_a2_j2 as f32],
+        }
+    }
+
+    /// Full train/val/test split for one network (`"p1"` or `"p2"`).
+    pub fn build_split(&self, net: &str, n_train: usize, n_eval: usize) -> Split {
+        let (train_cfgs, val_cfgs, test_cfgs) = split_universe(self.seed);
+        let gen = |pool: &[(ModelFamily, u32)], n: usize, salt: u64| match net {
+            "p1" => self.p1_samples(n, pool, &train_cfgs, salt),
+            "p2" => self.p2_samples(n, pool, &train_cfgs, salt),
+            _ => panic!("unknown net {net}"),
+        };
+        Split {
+            train: gen(&train_cfgs, n_train, 1),
+            val: gen(&val_cfgs, n_eval, 2),
+            test: gen(&test_cfgs, n_eval, 3),
+        }
+    }
+}
+
+/// One item of the two-phase (P1 → P2) pipeline evaluation of Figure 3:
+/// P1 estimates job j1 on a1 and a2 from a similar reference job; the
+/// "cluster" then measures a1; P2 transfers that observation to a2.
+#[derive(Debug, Clone)]
+pub struct PipelineItem {
+    /// Eq. 1 row targeting accelerator a1 (solo).
+    pub p1_row_a1: Vec<f32>,
+    /// Eq. 1 row targeting accelerator a2 (solo).
+    pub p1_row_a2: Vec<f32>,
+    /// noisy measurement of j1 on a1 (what the monitor reports).
+    pub meas_a1: f32,
+    /// ground-truth throughput of j1 on a2 — the pipeline target.
+    pub truth_a2: f32,
+    pub psi_j1: [f32; PSI_DIM],
+    pub a1: AccelType,
+    pub a2: AccelType,
+}
+
+impl<'a> DatasetBuilder<'a> {
+    /// Build `n` pipeline-evaluation items with targets from `pool`
+    /// and reference jobs from `ref_pool` (the catalog's history).
+    pub fn pipeline_items(
+        &self,
+        n: usize,
+        pool: &[(ModelFamily, u32)],
+        ref_pool: &[(ModelFamily, u32)],
+        salt: u64,
+    ) -> Vec<PipelineItem> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ salt ^ 0x9303);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let j1_cfg = pool[rng.range_usize(0, pool.len())];
+            let j2_cfg = Self::nearest_config(j1_cfg, ref_pool);
+            let a1 = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            let mut a2 = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            while a2 == a1 {
+                a2 = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            }
+            let j1 = mk_job(2 * i as u32, j1_cfg);
+            let j2 = mk_job(2 * i as u32 + 1, j2_cfg);
+            let empty = crate::workload::encoding::PSI_EMPTY;
+            let mk_row = |a: AccelType, rng: &mut Rng| {
+                let t2 = self.oracle.solo(&j2, a) * self.noise(rng, self.meas_sigma);
+                p1_row(&j2.psi(), &empty, a, t2 as f32, 0.0, &j1.psi()).to_vec()
+            };
+            let p1_row_a1 = mk_row(a1, &mut rng);
+            let p1_row_a2 = mk_row(a2, &mut rng);
+            let meas_a1 =
+                (self.oracle.solo(&j1, a1) * self.noise(&mut rng, self.meas_sigma)) as f32;
+            out.push(PipelineItem {
+                p1_row_a1,
+                p1_row_a2,
+                meas_a1,
+                truth_a2: self.oracle.solo(&j1, a2) as f32,
+                psi_j1: j1.psi(),
+                a1,
+                a2,
+            });
+        }
+        out
+    }
+}
+
+/// Shuffle + batch iterator for training.
+pub fn batches(samples: &[Sample], batch: usize, seed: u64) -> Vec<(Vec<Vec<f32>>, Vec<[f32; 2]>)> {
+    let mut idx: Vec<usize> = (0..samples.len()).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    idx.chunks(batch)
+        .map(|c| {
+            (
+                c.iter().map(|&i| samples[i].x.clone()).collect(),
+                c.iter().map(|&i| samples[i].y).collect(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_disjoint_and_covers() {
+        let (tr, va, te) = split_universe(3);
+        assert_eq!(tr.len() + va.len() + te.len(), 22);
+        for c in &te {
+            assert!(!tr.contains(c) && !va.contains(c));
+        }
+        for c in &va {
+            assert!(!tr.contains(c));
+        }
+        // deterministic
+        let (tr2, _, _) = split_universe(3);
+        assert_eq!(tr, tr2);
+    }
+
+    #[test]
+    fn p1_rows_have_correct_dims_and_range() {
+        let oracle = ThroughputOracle::new(5);
+        let b = DatasetBuilder::new(&oracle, 5);
+        let (tr, _, _) = split_universe(5);
+        let s = b.p1_samples(50, &tr, &tr, 0);
+        assert_eq!(s.len(), 50);
+        for smp in &s {
+            assert_eq!(smp.x.len(), P1_DIM);
+            assert!(smp.y[0] > 0.0 && smp.y[0] <= 1.0);
+            assert!(smp.y[1] >= 0.0 && smp.y[1] <= 1.0);
+        }
+        // some samples must involve the empty co-runner (y[1] == 0)
+        assert!(s.iter().any(|s| s.y[1] == 0.0));
+        assert!(s.iter().any(|s| s.y[1] > 0.0));
+    }
+
+    #[test]
+    fn p2_rows_have_correct_dims() {
+        let oracle = ThroughputOracle::new(5);
+        let b = DatasetBuilder::new(&oracle, 5);
+        let (tr, _, _) = split_universe(5);
+        let s = b.p2_samples(50, &tr, &tr, 0);
+        for smp in &s {
+            assert_eq!(smp.x.len(), P2_PADDED);
+            assert_eq!(&smp.x[34..40], &[0.0; 6]);
+        }
+    }
+
+    #[test]
+    fn datasets_are_deterministic() {
+        let oracle = ThroughputOracle::new(5);
+        let b = DatasetBuilder::new(&oracle, 5);
+        let (tr, _, _) = split_universe(5);
+        let s1 = b.p1_samples(10, &tr, &tr, 7);
+        let s2 = b.p1_samples(10, &tr, &tr, 7);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.y, b.y);
+        }
+    }
+
+    #[test]
+    fn p2_estimate_inputs_are_informative() {
+        // The stale estimate of a2 must correlate with the target —
+        // otherwise the refinement task would be unlearnable.
+        let oracle = ThroughputOracle::new(5);
+        let b = DatasetBuilder::new(&oracle, 5);
+        let (tr, _, _) = split_universe(5);
+        let s = b.p2_samples(300, &tr, &tr, 0);
+        let xs: Vec<f64> = s.iter().map(|s| s.x[32] as f64).collect(); // est_a2_j1
+        let ys: Vec<f64> = s.iter().map(|s| s.y[0] as f64).collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (mx, my) = (mean(&xs), mean(&ys));
+        let cov: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let vx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+        let vy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+        assert!(cov / (vx.sqrt() * vy.sqrt()) > 0.7);
+    }
+
+    #[test]
+    fn batches_cover_all_samples() {
+        let oracle = ThroughputOracle::new(5);
+        let b = DatasetBuilder::new(&oracle, 5);
+        let (tr, _, _) = split_universe(5);
+        let s = b.p1_samples(25, &tr, &tr, 0);
+        let bs = batches(&s, 8, 0);
+        assert_eq!(bs.iter().map(|(x, _)| x.len()).sum::<usize>(), 25);
+        assert_eq!(bs.len(), 4); // 8+8+8+1
+    }
+
+    #[test]
+    fn psi_dim_used() {
+        assert_eq!(PSI_DIM, 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! PJRT engine: one CPU client, compiled executables per model.
+//!
+//! Follows the HLO-text interchange pattern (see /opt/xla-example and
+//! aot.py): `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile`. Compilation happens once at startup; the request
+//! path only executes.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::Result;
+
+use super::manifest::{Manifest, ModelSpec};
+
+/// The PJRT client + manifest; cheap to clone (Arc inside the xla crate
+/// types is not exposed, so we wrap in Arc ourselves).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+/// One model's compiled executables + spec.
+pub struct CompiledModel {
+    pub spec: ModelSpec,
+    pub key: String,
+    pub init: xla::PjRtLoadedExecutable,
+    pub fwd: xla::PjRtLoadedExecutable,
+    pub train: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Create the CPU client and read the manifest from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        crate::log_info!(
+            "engine up: platform={} devices={} models={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.models.len()
+        );
+        Ok(Arc::new(Self {
+            client,
+            manifest,
+            dir,
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    fn compile_file(&self, fname: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(fname);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))
+    }
+
+    /// Compile all three executables of model `key` (e.g. `"p1_rnn"`).
+    pub fn load_model(&self, key: &str) -> Result<CompiledModel> {
+        let spec = self.manifest.model(key)?.clone();
+        let t0 = std::time::Instant::now();
+        let init = self.compile_file(&spec.files.init)?;
+        let fwd = self.compile_file(&spec.files.fwd)?;
+        let train = self.compile_file(&spec.files.train)?;
+        crate::log_info!("compiled {key} in {} ms", t0.elapsed().as_millis());
+        Ok(CompiledModel {
+            spec,
+            key: key.to_string(),
+            init,
+            fwd,
+            train,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn engine_loads_and_compiles_one_model() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let engine = Engine::load("artifacts").unwrap();
+        let model = engine.load_model("p1_ff").unwrap();
+        assert_eq!(model.spec.input_dim, 32);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        if !artifacts_present() {
+            return;
+        }
+        let engine = Engine::load("artifacts").unwrap();
+        assert!(engine.load_model("p9_mlp").is_err());
+    }
+}

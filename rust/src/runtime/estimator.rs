@@ -1,0 +1,255 @@
+//! Estimator handle: owns a model's mutable flat state (params + Adam
+//! moments + step) and exposes `predict` / `train_step` over plain f32
+//! rows. This is the only boundary between the coordinator's world and
+//! PJRT.
+//!
+//! Shape discipline: PJRT executables are specialized to the fixed
+//! batches recorded in the manifest. `predict` chunks + pads with
+//! repeated rows; `train_step` cycle-pads (repeating real samples keeps
+//! gradients unbiased, unlike zero-padding which would drag predictions
+//! toward 0).
+
+use xla::Literal;
+
+use crate::Result;
+
+use super::engine::{CompiledModel, Engine};
+
+pub struct Estimator {
+    model: CompiledModel,
+    /// flat state, order per manifest (params…, m…, v…, adam_step).
+    state: Vec<Literal>,
+    steps_taken: u64,
+    /// cumulative wall time in execute() for §Perf accounting.
+    pub exec_seconds: f64,
+}
+
+impl Estimator {
+    /// Load + compile the model and materialize its seeded initial state.
+    pub fn new(engine: &Engine, key: &str) -> Result<Self> {
+        let model = engine.load_model(key)?;
+        let t0 = std::time::Instant::now();
+        let out = model
+            .init
+            .execute::<Literal>(&[])
+            .map_err(|e| anyhow::anyhow!("init exec: {e}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("init sync: {e}"))?;
+        let state = tuple.to_tuple().map_err(|e| anyhow::anyhow!("init tuple: {e}"))?;
+        anyhow::ensure!(
+            state.len() == model.spec.n_state(),
+            "init returned {} tensors, manifest says {}",
+            state.len(),
+            model.spec.n_state()
+        );
+        Ok(Self {
+            model,
+            state,
+            steps_taken: 0,
+            exec_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn key(&self) -> &str {
+        &self.model.key
+    }
+
+    pub fn spec(&self) -> &super::manifest::ModelSpec {
+        &self.model.spec
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.steps_taken
+    }
+
+    /// Reset to a freshly initialized state (for repeated experiments
+    /// without recompiling).
+    pub fn reset(&mut self) -> Result<()> {
+        let out = self
+            .model
+            .init
+            .execute::<Literal>(&[])
+            .map_err(|e| anyhow::anyhow!("init exec: {e}"))?;
+        self.state = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("init sync: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("init tuple: {e}"))?;
+        self.steps_taken = 0;
+        Ok(())
+    }
+
+    fn batch_literal(rows: &[&[f32]], batch: usize, dim: usize) -> Result<Literal> {
+        debug_assert!(!rows.is_empty());
+        let mut flat = Vec::with_capacity(batch * dim);
+        for i in 0..batch {
+            let r = rows[i % rows.len()]; // cycle-pad
+            debug_assert_eq!(r.len(), dim);
+            flat.extend_from_slice(r);
+        }
+        Literal::vec1(&flat)
+            .reshape(&[batch as i64, dim as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+    }
+
+    /// Predict (B, out_dim) for arbitrary-many input rows (each of
+    /// `padded_dim` width). Rows beyond multiples of the compiled batch
+    /// are handled by cycle-padding the final chunk.
+    pub fn predict(&mut self, rows: &[Vec<f32>]) -> Result<Vec<[f32; 2]>> {
+        let spec = &self.model.spec;
+        anyhow::ensure!(spec.out_dim == 2, "out_dim != 2");
+        if rows.is_empty() {
+            return Ok(vec![]);
+        }
+        let b = spec.pred_batch;
+        let mut out = Vec::with_capacity(rows.len());
+        let t0 = std::time::Instant::now();
+        let n_params = spec.n_params;
+        for chunk in rows.chunks(b) {
+            let refs: Vec<&[f32]> = chunk.iter().map(|r| r.as_slice()).collect();
+            let x = Self::batch_literal(&refs, b, spec.padded_dim)?;
+            // fwd consumes the parameter tensors only (manifest contract)
+            let mut args: Vec<&Literal> = self.state[..n_params].iter().collect();
+            args.push(&x);
+            let res = self
+                .model
+                .fwd
+                .execute::<&Literal>(&args)
+                .map_err(|e| anyhow::anyhow!("fwd exec: {e}"))?;
+            let yhat = res[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fwd sync: {e}"))?
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("fwd tuple: {e}"))?;
+            let v: Vec<f32> = yhat.to_vec().map_err(|e| anyhow::anyhow!("fwd vec: {e}"))?;
+            for i in 0..chunk.len() {
+                out.push([v[2 * i], v[2 * i + 1]]);
+            }
+        }
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// One Adam step on (x, y) rows; returns (mse_loss, mae). Inputs are
+    /// cycle-padded to the compiled train batch.
+    pub fn train_step(&mut self, xs: &[Vec<f32>], ys: &[[f32; 2]]) -> Result<(f32, f32)> {
+        let spec = &self.model.spec;
+        anyhow::ensure!(!xs.is_empty() && xs.len() == ys.len(), "bad batch");
+        let b = spec.train_batch;
+        let xrefs: Vec<&[f32]> = xs.iter().map(|r| r.as_slice()).collect();
+        let yflat: Vec<Vec<f32>> = ys.iter().map(|y| y.to_vec()).collect();
+        let yrefs: Vec<&[f32]> = yflat.iter().map(|r| r.as_slice()).collect();
+        let x = Self::batch_literal(&xrefs, b, spec.padded_dim)?;
+        let y = Self::batch_literal(&yrefs, b, spec.out_dim)?;
+
+        let t0 = std::time::Instant::now();
+        let mut args: Vec<&Literal> = self.state.iter().collect();
+        args.push(&x);
+        args.push(&y);
+        let res = self
+            .model
+            .train
+            .execute::<&Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("train exec: {e}"))?;
+        let tuple = res[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("train sync: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("train tuple: {e}"))?;
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        let n = self.model.spec.n_state();
+        anyhow::ensure!(tuple.len() == n + 2, "train returned {} tensors", tuple.len());
+        let mut tuple = tuple;
+        let mae_l = tuple.pop().unwrap();
+        let loss_l = tuple.pop().unwrap();
+        self.state = tuple;
+        self.steps_taken += 1;
+        let loss = loss_l
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss elem: {e}"))?;
+        let mae = mae_l
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("mae elem: {e}"))?;
+        Ok((loss, mae))
+    }
+
+    /// Evaluate MAE/MSE of predictions against targets (no training).
+    pub fn evaluate(&mut self, xs: &[Vec<f32>], ys: &[[f32; 2]]) -> Result<(f32, f32)> {
+        let preds = self.predict(xs)?;
+        let mut abs = 0.0f64;
+        let mut sq = 0.0f64;
+        let mut n = 0usize;
+        for (p, y) in preds.iter().zip(ys) {
+            for k in 0..2 {
+                let e = (p[k] - y[k]) as f64;
+                abs += e.abs();
+                sq += e * e;
+                n += 1;
+            }
+        }
+        Ok(((sq / n as f64) as f32, (abs / n as f64) as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn engine() -> Option<std::sync::Arc<Engine>> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some(Engine::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn init_predict_shapes() {
+        let Some(engine) = engine() else { return };
+        let mut est = Estimator::new(&engine, "p1_ff").unwrap();
+        let rows = vec![vec![0.1f32; 32]; 5];
+        let preds = est.predict(&rows).unwrap();
+        assert_eq!(preds.len(), 5);
+        // identical rows → identical predictions
+        assert_eq!(preds[0], preds[1]);
+        assert!(preds[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn train_reduces_loss_on_fixed_batch() {
+        let Some(engine) = engine() else { return };
+        let mut est = Estimator::new(&engine, "p1_ff").unwrap();
+        let mut rng = Rng::seed_from_u64(5);
+        let xs: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..32).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect())
+            .collect();
+        let ys: Vec<[f32; 2]> = (0..64)
+            .map(|_| [rng.f64() as f32, rng.f64() as f32])
+            .collect();
+        let (first, _) = est.train_step(&xs, &ys).unwrap();
+        let mut last = first;
+        for _ in 0..40 {
+            last = est.train_step(&xs, &ys).unwrap().0;
+        }
+        assert!(last < 0.5 * first, "loss {first} -> {last}");
+        assert_eq!(est.steps_taken(), 41);
+    }
+
+    #[test]
+    fn reset_restores_initial_predictions() {
+        let Some(engine) = engine() else { return };
+        let mut est = Estimator::new(&engine, "p2_ff").unwrap();
+        let rows = vec![vec![0.3f32; 40]; 2];
+        let before = est.predict(&rows).unwrap();
+        let xs = vec![vec![0.3f32; 40]; 8];
+        let ys = vec![[1.0f32, 1.0f32]; 8];
+        est.train_step(&xs, &ys).unwrap();
+        let trained = est.predict(&rows).unwrap();
+        assert_ne!(before[0], trained[0]);
+        est.reset().unwrap();
+        let after = est.predict(&rows).unwrap();
+        assert_eq!(before[0], after[0]);
+    }
+}

@@ -1,0 +1,192 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and this
+//! runtime: per-model state tensor list (names/shapes in flat order),
+//! I/O dims, fixed batch sizes, and artifact file names.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub token_dim: usize,
+    pub models: HashMap<String, ModelSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub net: String,
+    pub arch: String,
+    pub input_dim: usize,
+    pub padded_dim: usize,
+    pub tokens: usize,
+    pub out_dim: usize,
+    pub train_batch: usize,
+    pub pred_batch: usize,
+    pub lr: f64,
+    pub param_count: usize,
+    /// Number of parameter tensors (fwd consumes state[..n_params]).
+    pub n_params: usize,
+    pub state: Vec<StateEntry>,
+    pub files: Files,
+}
+
+#[derive(Debug, Clone)]
+pub struct StateEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Files {
+    pub init: String,
+    pub fwd: String,
+    pub train: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!("manifest.json not found in {dir:?} (run `make artifacts`): {e}")
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let version = j.req_f64("version")? as u32;
+        anyhow::ensure!(version == 2, "manifest version {version} unsupported (want 2)");
+        let token_dim = j.req_usize("token_dim")?;
+        let mut models = HashMap::new();
+        for (key, m) in j
+            .req("models")?
+            .as_object()
+            .ok_or_else(|| anyhow::anyhow!("models is not an object"))?
+        {
+            let state = m
+                .req("state")?
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("state is not an array"))?
+                .iter()
+                .map(|e| {
+                    Ok(StateEntry {
+                        name: e.req_str("name")?.to_string(),
+                        shape: e
+                            .req("shape")?
+                            .as_array()
+                            .ok_or_else(|| anyhow::anyhow!("shape not array"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let files = m.req("files")?;
+            models.insert(
+                key.clone(),
+                ModelSpec {
+                    net: m.req_str("net")?.to_string(),
+                    arch: m.req_str("arch")?.to_string(),
+                    input_dim: m.req_usize("input_dim")?,
+                    padded_dim: m.req_usize("padded_dim")?,
+                    tokens: m.req_usize("tokens")?,
+                    out_dim: m.req_usize("out_dim")?,
+                    train_batch: m.req_usize("train_batch")?,
+                    pred_batch: m.req_usize("pred_batch")?,
+                    lr: m.req_f64("lr")?,
+                    param_count: m.req_usize("param_count")?,
+                    n_params: m.req_usize("n_params")?,
+                    state,
+                    files: Files {
+                        init: files.req_str("init")?.to_string(),
+                        fwd: files.req_str("fwd")?.to_string(),
+                        train: files.req_str("train")?.to_string(),
+                    },
+                },
+            );
+        }
+        Ok(Manifest {
+            version,
+            token_dim,
+            models,
+        })
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelSpec> {
+        self.models.get(key).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {key} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl ModelSpec {
+    /// Total number of state tensors (params + Adam m/v + step).
+    pub fn n_state(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Elements in one state tensor.
+    pub fn state_elems(&self, i: usize) -> usize {
+        self.state[i].shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        // artifacts/ is produced by `make artifacts`; skip silently if absent
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.models.len(), 6);
+        let p1 = m.model("p1_rnn").unwrap();
+        assert_eq!(p1.input_dim, 32);
+        assert_eq!(p1.out_dim, 2);
+        assert!(p1.n_state() > 3);
+        // last state tensor is the scalar Adam step
+        assert_eq!(p1.state.last().unwrap().name, "adam_step");
+        assert!(p1.state.last().unwrap().shape.is_empty());
+        assert_eq!(p1.state_elems(p1.n_state() - 1), 1);
+        let p2 = m.model("p2_ff").unwrap();
+        assert_eq!(p2.input_dim, 34);
+        assert_eq!(p2.padded_dim, 40);
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = Manifest {
+            version: 2,
+            token_dim: 8,
+            models: HashMap::new(),
+        };
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let text = r#"{
+            "version": 2, "token_dim": 8,
+            "models": {"p1_ff": {
+                "net": "p1", "arch": "ff", "input_dim": 32, "padded_dim": 32,
+                "tokens": 4, "out_dim": 2, "train_batch": 256, "pred_batch": 256,
+                "lr": 0.001, "param_count": 10, "n_params": 1,
+                "state": [{"name": "w0", "shape": [32, 96]}, {"name": "adam_step", "shape": []}],
+                "files": {"init": "a", "fwd": "b", "train": "c"}
+            }}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        let spec = m.model("p1_ff").unwrap();
+        assert_eq!(spec.state_elems(0), 32 * 96);
+        assert_eq!(spec.files.train, "c");
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT-compiled estimator artifacts (HLO text
+//! produced by `python/compile/aot.py`) and drives them from the
+//! coordinator's hot path. Python never runs here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (the I/O contract).
+//! * [`engine`] — PJRT CPU client; compiles `init` / `fwd` / `train`
+//!   executables per (net × arch).
+//! * [`estimator`] — owns a model's mutable state (params + Adam
+//!   moments), exposing `predict` and `train_step` over f32 rows.
+//! * [`dataset`] — P1/P2 training-tuple builders over the workload
+//!   universe (shared by the figure benches and the online loop).
+
+pub mod dataset;
+pub mod engine;
+pub mod estimator;
+pub mod manifest;
+
+pub use dataset::{split_universe, DatasetBuilder, PipelineItem, Sample, Split};
+pub use engine::{CompiledModel, Engine};
+pub use estimator::Estimator;
+pub use manifest::{Manifest, ModelSpec};

@@ -1,0 +1,10 @@
+//! Self-contained utility substrates (this build is fully offline —
+//! see Cargo.toml): a seeded PRNG, a JSON parser/serializer, and a tiny
+//! leveled logger.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

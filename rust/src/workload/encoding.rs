@@ -1,0 +1,162 @@
+//! Ψ attribute-vector encoding (paper §2.2) and the estimator input
+//! tuple builders for P1 (Eq. 1) and P2 (Eq. 3).
+//!
+//! This module is the single source of truth for the feature layout the
+//! AOT-compiled networks were trained with; it must stay byte-compatible
+//! with `python/compile/model.py` (the layout is asserted in
+//! `rust/tests/runtime_e2e.rs` against `artifacts/manifest.json`).
+
+use super::families::{AccelType, ModelFamily, FAMILIES};
+
+/// Ψ vector width: 5 (family one-hot) + log-batch + replication + bias.
+pub const PSI_DIM: usize = 8;
+/// Accelerator one-hot width.
+pub const ACCEL_DIM: usize = 6;
+/// P1 input width: Ψ_j2 ‖ Ψ_j3 ‖ a ‖ T_{a,j2} ‖ T_{a,j3} ‖ Ψ_j1.
+pub const P1_DIM: usize = 2 * PSI_DIM + ACCEL_DIM + 2 + PSI_DIM; // 32
+/// P2 raw input width (padded to [`P2_PADDED`] for the networks).
+pub const P2_DIM: usize = 2 * PSI_DIM + 2 * ACCEL_DIM + 6; // 34
+/// P2 padded width (5 tokens × 8).
+pub const P2_PADDED: usize = 40;
+
+/// Ψ_j for a job; the synthetic empty job j0 (paper §2.3) is all-zeros.
+pub fn psi(family: ModelFamily, batch_size: u32, replication: u32) -> [f32; PSI_DIM] {
+    let mut v = [0.0f32; PSI_DIM];
+    v[family.index()] = 1.0;
+    v[FAMILIES.len()] = (batch_size as f32).log2() / 13.0; // 2^13 = max batch in Table 2
+    v[FAMILIES.len() + 1] = replication as f32;
+    v[FAMILIES.len() + 2] = 1.0; // bias
+    v
+}
+
+/// Ψ_{j0} — the synthetic empty-slot job (all zeros, throughput 0).
+pub const PSI_EMPTY: [f32; PSI_DIM] = [0.0; PSI_DIM];
+
+/// One-hot accelerator encoding.
+pub fn accel_onehot(a: AccelType) -> [f32; ACCEL_DIM] {
+    let mut v = [0.0f32; ACCEL_DIM];
+    v[a.index()] = 1.0;
+    v
+}
+
+/// Build one P1 input row (Eq. 1):
+/// `(Ψ_j2, Ψ_j3, a, T_{a,j2}^{(j2,j3)}, T_{a,j3}^{(j2,j3)}, Ψ_j1)`.
+/// Throughputs must already be normalized to [0, 1].
+pub fn p1_row(
+    psi_j2: &[f32; PSI_DIM],
+    psi_j3: &[f32; PSI_DIM],
+    a: AccelType,
+    t_j2: f32,
+    t_j3: f32,
+    psi_j1: &[f32; PSI_DIM],
+) -> [f32; P1_DIM] {
+    let mut row = [0.0f32; P1_DIM];
+    let mut o = 0;
+    row[o..o + PSI_DIM].copy_from_slice(psi_j2);
+    o += PSI_DIM;
+    row[o..o + PSI_DIM].copy_from_slice(psi_j3);
+    o += PSI_DIM;
+    row[o..o + ACCEL_DIM].copy_from_slice(&accel_onehot(a));
+    o += ACCEL_DIM;
+    row[o] = t_j2;
+    row[o + 1] = t_j3;
+    o += 2;
+    row[o..o + PSI_DIM].copy_from_slice(psi_j1);
+    row
+}
+
+/// Build one P2 input row (Eq. 3), zero-padded to [`P2_PADDED`]:
+/// `(Ψ_j1, Ψ_j2, a1, a2, T̃_{a1,j1}, T̃_{a1,j2}, T_{a1,j1}, T_{a1,j2},
+///   T̃_{a2,j1}, T̃_{a2,j2})`.
+#[allow(clippy::too_many_arguments)]
+pub fn p2_row(
+    psi_j1: &[f32; PSI_DIM],
+    psi_j2: &[f32; PSI_DIM],
+    a1: AccelType,
+    a2: AccelType,
+    est_a1_j1: f32,
+    est_a1_j2: f32,
+    meas_a1_j1: f32,
+    meas_a1_j2: f32,
+    est_a2_j1: f32,
+    est_a2_j2: f32,
+) -> [f32; P2_PADDED] {
+    let mut row = [0.0f32; P2_PADDED];
+    let mut o = 0;
+    row[o..o + PSI_DIM].copy_from_slice(psi_j1);
+    o += PSI_DIM;
+    row[o..o + PSI_DIM].copy_from_slice(psi_j2);
+    o += PSI_DIM;
+    row[o..o + ACCEL_DIM].copy_from_slice(&accel_onehot(a1));
+    o += ACCEL_DIM;
+    row[o..o + ACCEL_DIM].copy_from_slice(&accel_onehot(a2));
+    o += ACCEL_DIM;
+    for (i, t) in [est_a1_j1, est_a1_j2, meas_a1_j1, meas_a1_j2, est_a2_j1, est_a2_j2]
+        .into_iter()
+        .enumerate()
+    {
+        row[o + i] = t;
+    }
+    row
+}
+
+/// Squared L2 distance between Ψ vectors — the Catalog's similarity
+/// metric (paper §2.3 "based on feature similarity").
+pub fn psi_distance(a: &[f32; PSI_DIM], b: &[f32; PSI_DIM]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn psi_layout() {
+        let v = psi(ModelFamily::Transformer, 128, 1);
+        assert_eq!(v[2], 1.0); // transformer one-hot
+        assert_eq!(v[0], 0.0);
+        assert!((v[5] - 7.0 / 13.0).abs() < 1e-6); // log2(128)/13
+        assert_eq!(v[6], 1.0); // replication
+        assert_eq!(v[7], 1.0); // bias
+    }
+
+    #[test]
+    fn dims_match_manifest_expectations() {
+        assert_eq!(P1_DIM, 32);
+        assert_eq!(P2_DIM, 34);
+        assert_eq!(P2_PADDED, 40);
+    }
+
+    #[test]
+    fn p1_row_layout() {
+        let pa = psi(ModelFamily::ResNet18, 16, 1);
+        let pb = psi(ModelFamily::ResNet50, 32, 1);
+        let pc = psi(ModelFamily::LanguageModel, 5, 1);
+        let row = p1_row(&pa, &pb, AccelType::V100, 0.5, 0.25, &pc);
+        assert_eq!(&row[0..8], &pa);
+        assert_eq!(&row[8..16], &pb);
+        assert_eq!(row[16 + AccelType::V100.index()], 1.0);
+        assert_eq!(row[22], 0.5);
+        assert_eq!(row[23], 0.25);
+        assert_eq!(&row[24..32], &pc);
+    }
+
+    #[test]
+    fn p2_row_padding_is_zero() {
+        let pa = psi(ModelFamily::ResNet18, 16, 1);
+        let row = p2_row(&pa, &PSI_EMPTY, AccelType::K80, AccelType::V100, 0.1, 0.0, 0.2, 0.0, 0.3, 0.0);
+        assert_eq!(&row[34..40], &[0.0; 6]);
+        assert_eq!(row[28], 0.1);
+        assert_eq!(row[30], 0.2);
+        assert_eq!(row[32], 0.3);
+    }
+
+    #[test]
+    fn psi_distance_zero_iff_same_features() {
+        let a = psi(ModelFamily::ResNet18, 64, 1);
+        let b = psi(ModelFamily::ResNet18, 64, 1);
+        let c = psi(ModelFamily::ResNet18, 128, 1);
+        assert_eq!(psi_distance(&a, &b), 0.0);
+        assert!(psi_distance(&a, &c) > 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! The workload taxonomy of Table 2 and the six Gavel accelerator types.
+
+/// Model families of the paper's Table 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelFamily {
+    ResNet18,
+    ResNet50,
+    Transformer,
+    /// Language Model (LM) row of Table 2.
+    LanguageModel,
+    Recommendation,
+}
+
+/// All families, index order == one-hot position in Ψ.
+pub const FAMILIES: [ModelFamily; 5] = [
+    ModelFamily::ResNet18,
+    ModelFamily::ResNet50,
+    ModelFamily::Transformer,
+    ModelFamily::LanguageModel,
+    ModelFamily::Recommendation,
+];
+
+impl ModelFamily {
+    pub fn index(self) -> usize {
+        FAMILIES.iter().position(|&f| f == self).unwrap()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelFamily::ResNet18 => "resnet18",
+            ModelFamily::ResNet50 => "resnet50",
+            ModelFamily::Transformer => "transformer",
+            ModelFamily::LanguageModel => "lm",
+            ModelFamily::Recommendation => "recommendation",
+        }
+    }
+
+    /// Batch-size grid of Table 2.
+    pub fn batch_sizes(self) -> &'static [u32] {
+        match self {
+            ModelFamily::ResNet18 | ModelFamily::ResNet50 => &[16, 32, 64, 128, 256],
+            ModelFamily::Transformer => &[16, 32, 128, 256],
+            ModelFamily::LanguageModel => &[5, 10, 20, 80],
+            ModelFamily::Recommendation => &[512, 1024, 2048, 8192],
+        }
+    }
+
+    /// Resource demand vector `(compute, memory-bandwidth)` in [0, 1] —
+    /// drives the co-location interference model (DESIGN.md): image
+    /// models are compute-heavy, recommendation is memory-heavy, NLP
+    /// sits in between. These shapes mirror Gavel's qualitative
+    /// co-location results.
+    pub fn resource_vector(self) -> (f64, f64) {
+        match self {
+            ModelFamily::ResNet18 => (0.75, 0.35),
+            ModelFamily::ResNet50 => (0.95, 0.45),
+            ModelFamily::Transformer => (0.80, 0.60),
+            ModelFamily::LanguageModel => (0.60, 0.70),
+            ModelFamily::Recommendation => (0.30, 0.95),
+        }
+    }
+}
+
+/// The six accelerator types of the Gavel cluster (§3.1): three GPU
+/// generations plus their `_unconsolidated` variants (fragmented /
+/// partially-utilized placements).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AccelType {
+    K80,
+    P100,
+    V100,
+    K80Unconsolidated,
+    P100Unconsolidated,
+    V100Unconsolidated,
+}
+
+/// All accelerator types, index order == one-hot position in net inputs.
+pub const ACCEL_TYPES: [AccelType; 6] = [
+    AccelType::K80,
+    AccelType::P100,
+    AccelType::V100,
+    AccelType::K80Unconsolidated,
+    AccelType::P100Unconsolidated,
+    AccelType::V100Unconsolidated,
+];
+
+impl AccelType {
+    pub fn index(self) -> usize {
+        ACCEL_TYPES.iter().position(|&a| a == self).unwrap()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AccelType::K80 => "k80",
+            AccelType::P100 => "p100",
+            AccelType::V100 => "v100",
+            AccelType::K80Unconsolidated => "k80_unconsolidated",
+            AccelType::P100Unconsolidated => "p100_unconsolidated",
+            AccelType::V100Unconsolidated => "v100_unconsolidated",
+        }
+    }
+
+    /// The consolidated base generation.
+    pub fn consolidated(self) -> AccelType {
+        match self {
+            AccelType::K80 | AccelType::K80Unconsolidated => AccelType::K80,
+            AccelType::P100 | AccelType::P100Unconsolidated => AccelType::P100,
+            AccelType::V100 | AccelType::V100Unconsolidated => AccelType::V100,
+        }
+    }
+
+    pub fn is_unconsolidated(self) -> bool {
+        self != self.consolidated()
+    }
+
+    /// Relative generation speed (k80 ≈ 1×, p100 ≈ 2.5×, v100 ≈ 5×;
+    /// unconsolidated placements lose ~15% — DESIGN.md §Substitution).
+    pub fn base_speed(self) -> f64 {
+        let gen = match self.consolidated() {
+            AccelType::K80 => 1.0,
+            AccelType::P100 => 2.5,
+            AccelType::V100 => 5.0,
+            _ => unreachable!(),
+        };
+        if self.is_unconsolidated() {
+            gen * 0.85
+        } else {
+            gen
+        }
+    }
+
+    /// Job capacity θ_a: every Gavel type supports at most two
+    /// co-located jobs (paper §2.2).
+    pub fn capacity(self) -> u32 {
+        2
+    }
+
+    /// Power curve parameters `(idle_watts, peak_extra_watts)`; power at
+    /// relative load u ∈ \[0,1\] is `idle + peak_extra · u^0.8` (sublinear,
+    /// as measured GPU power curves are). Newer GPUs burn more peak
+    /// power but far less energy *per unit work*.
+    pub fn power_params(self) -> (f64, f64) {
+        match self.consolidated() {
+            AccelType::K80 => (25.0, 130.0),
+            AccelType::P100 => (30.0, 170.0),
+            AccelType::V100 => (35.0, 215.0),
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_consistent() {
+        for (i, f) in FAMILIES.iter().enumerate() {
+            assert_eq!(f.index(), i);
+        }
+        for (i, a) in ACCEL_TYPES.iter().enumerate() {
+            assert_eq!(a.index(), i);
+        }
+    }
+
+    #[test]
+    fn table2_batch_grids() {
+        assert_eq!(ModelFamily::ResNet18.batch_sizes(), &[16, 32, 64, 128, 256]);
+        assert_eq!(ModelFamily::Transformer.batch_sizes(), &[16, 32, 128, 256]);
+        assert_eq!(ModelFamily::LanguageModel.batch_sizes(), &[5, 10, 20, 80]);
+        assert_eq!(ModelFamily::Recommendation.batch_sizes(), &[512, 1024, 2048, 8192]);
+    }
+
+    #[test]
+    fn speed_ordering_matches_generations() {
+        assert!(AccelType::V100.base_speed() > AccelType::P100.base_speed());
+        assert!(AccelType::P100.base_speed() > AccelType::K80.base_speed());
+        assert!(AccelType::V100Unconsolidated.base_speed() < AccelType::V100.base_speed());
+    }
+
+    #[test]
+    fn capacity_is_two_everywhere() {
+        for a in ACCEL_TYPES {
+            assert_eq!(a.capacity(), 2);
+        }
+    }
+
+    #[test]
+    fn power_increases_with_generation() {
+        let p = |a: AccelType| a.power_params().0 + a.power_params().1;
+        assert!(p(AccelType::V100) > p(AccelType::P100));
+        assert!(p(AccelType::P100) > p(AccelType::K80));
+    }
+}

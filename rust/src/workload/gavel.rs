@@ -1,0 +1,344 @@
+//! Synthetic Gavel-style throughput oracle (DESIGN.md §Substitution).
+//!
+//! Ground-truth throughputs for every (job, accelerator, combination).
+//! The generator is deterministic given a seed and reproduces the three
+//! structural properties the paper's learning loop exploits:
+//!
+//! 1. **Inter-GPU correlation** — a job's throughputs across GPU types
+//!    are a smooth function of generation speed × a per-(family, gen)
+//!    affinity factor, so observing one GPU type is informative about
+//!    the others (what P2 learns, Eq. 3).
+//! 2. **Inter-job similarity** — jobs of the same family with nearby
+//!    batch sizes have nearby throughput profiles (what the Catalog's
+//!    nearest-neighbour step + P1 exploit, Eq. 1).
+//! 3. **Contention-shaped co-location** — pairwise slowdowns follow a
+//!    resource-vector contention model: compute-heavy × compute-heavy
+//!    collide hard, compute × memory mixes co-exist well (the Gavel
+//!    dataset's qualitative shape).
+//!
+//! All throughputs are reported *normalized* to (0, 1]: the scale is the
+//! fastest solo throughput in the universe, mirroring the normalization
+//! the estimator networks train with.
+
+use crate::util::Rng;
+
+use super::families::{AccelType, ModelFamily, ACCEL_TYPES, FAMILIES};
+use super::{Combo, JobSpec};
+use std::collections::HashMap;
+
+/// Deterministic ground-truth throughput model.
+#[derive(Debug, Clone)]
+pub struct ThroughputOracle {
+    /// affinity[(family, consolidated gen index)] ∈ [0.7, 1.3]: how much
+    /// better/worse than the raw generation speed this family does.
+    affinity: HashMap<(usize, usize), f64>,
+    /// per-(family, accel) jitter on the batch curve knee.
+    knee_jitter: HashMap<(usize, usize), f64>,
+    /// contention strength β for the interference model.
+    beta: f64,
+    /// normalization scale (fastest solo throughput, iterations/s).
+    scale: f64,
+    /// measured overrides (the *real* Gavel dataset, when available —
+    /// see gavel_csv.rs); lookups fall back to the synthetic model.
+    table: Option<std::sync::Arc<super::gavel_csv::ThroughputTable>>,
+    seed: u64,
+}
+
+fn gen_index(a: AccelType) -> usize {
+    match a.consolidated() {
+        AccelType::K80 => 0,
+        AccelType::P100 => 1,
+        AccelType::V100 => 2,
+        _ => unreachable!(),
+    }
+}
+
+impl ThroughputOracle {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x60_67_68_00);
+        let mut affinity = HashMap::new();
+        let mut knee_jitter = HashMap::new();
+        for (fi, _f) in FAMILIES.iter().enumerate() {
+            for gi in 0..3 {
+                affinity.insert((fi, gi), rng.range_f64(0.7, 1.3));
+            }
+            for (ai, _a) in ACCEL_TYPES.iter().enumerate() {
+                knee_jitter.insert((fi, ai), rng.range_f64(0.85, 1.15));
+            }
+        }
+        let mut o = Self {
+            affinity,
+            knee_jitter,
+            beta: 0.9,
+            scale: 1.0,
+            table: None,
+            seed,
+        };
+        o.renormalize();
+        o
+    }
+
+    /// Overlay measured throughputs (e.g. the real Gavel dataset parsed
+    /// by [`super::gavel_csv::ThroughputTable`]); unknown entries keep
+    /// the synthetic model. The normalization scale is recomputed so
+    /// all reported values stay in (0, 1].
+    pub fn with_table(mut self, table: super::gavel_csv::ThroughputTable) -> Self {
+        self.table = Some(std::sync::Arc::new(table));
+        self.renormalize();
+        self
+    }
+
+    /// normalize: fastest solo throughput over the whole universe → 1.0
+    fn renormalize(&mut self) {
+        let mut max_t: f64 = 0.0;
+        for f in FAMILIES {
+            for &b in f.batch_sizes() {
+                for a in ACCEL_TYPES {
+                    max_t = max_t.max(self.solo_raw(f, b, a));
+                }
+            }
+        }
+        self.scale = max_t;
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Raw (unnormalized) solo throughput in iterations/s.
+    ///
+    /// Model: `speed(a) · affinity(f, gen) · knee / (knee + batch/ref)`,
+    /// a saturating curve — iterations/s falls as batch grows (larger
+    /// batches do more work per iteration), matching the paper's
+    /// "increasing the batch size … leads to lower predicted throughput".
+    fn solo_raw(&self, family: ModelFamily, batch: u32, a: AccelType) -> f64 {
+        if let Some(t) = self.table.as_ref().and_then(|t| t.solo_of((family, batch), a)) {
+            return t;
+        }
+        let fi = family.index();
+        let speed = a.base_speed();
+        let aff = self.affinity[&(fi, gen_index(a))];
+        let jit = self.knee_jitter[&(fi, a.index())];
+        let batches = family.batch_sizes();
+        let ref_batch = batches[batches.len() / 2] as f64;
+        let knee = 2.0 * jit;
+        // family base rate: normalized so each family's mid-batch k80 solo ≈ O(1)
+        let base = 10.0;
+        base * speed * aff * knee / (knee + (batch as f64) / ref_batch)
+    }
+
+    /// Normalized solo throughput T^{{j}}_{a,j} ∈ (0, 1].
+    pub fn solo(&self, job: &JobSpec, a: AccelType) -> f64 {
+        self.solo_raw(job.family, job.batch_size, a) / self.scale
+    }
+
+    /// Pairwise slowdown factor for `job` when co-located with `other`
+    /// on `a`: `1 / (1 + β · r_job · r_other · pressure(a))`.
+    ///
+    /// Unconsolidated placements suffer slightly more contention (the
+    /// fragmented-resource scenario the `_unconsolidated` variants
+    /// capture).
+    fn slowdown(&self, job: &JobSpec, other: &JobSpec, a: AccelType) -> f64 {
+        let (c1, m1) = job.family.resource_vector();
+        let (c2, m2) = other.family.resource_vector();
+        // batch size raises memory pressure within a family
+        let bscale = |j: &JobSpec| {
+            let bs = j.family.batch_sizes();
+            let pos = bs.iter().position(|&b| b == j.batch_size).unwrap_or(bs.len() / 2);
+            0.9 + 0.2 * (pos as f64) / (bs.len().max(2) - 1) as f64
+        };
+        let contention = c1 * c2 + m1 * m2 * bscale(job) * bscale(other);
+        let pressure = if a.is_unconsolidated() { 1.15 } else { 1.0 };
+        1.0 / (1.0 + self.beta * contention * pressure)
+    }
+
+    /// Normalized co-located throughput of `job` within combination `c`
+    /// (|c| ≤ 2) on accelerator type `a`. `lookup` resolves JobIds to
+    /// specs for the co-runner.
+    pub fn throughput(
+        &self,
+        job: &JobSpec,
+        combo: &Combo,
+        a: AccelType,
+        lookup: &dyn Fn(super::JobId) -> Option<JobSpec>,
+    ) -> f64 {
+        debug_assert!(combo.contains(job.id));
+        match combo.other(job.id) {
+            None => self.solo(job, a),
+            Some(other_id) => {
+                let other = lookup(other_id).expect("co-runner spec must exist");
+                self.pair(job, &other, a).0
+            }
+        }
+    }
+
+    /// Convenience: both throughputs of a pair `(j1, j2)` on `a`.
+    pub fn pair(&self, j1: &JobSpec, j2: &JobSpec, a: AccelType) -> (f64, f64) {
+        if let Some((t1, t2)) = self.table.as_ref().and_then(|t| {
+            t.pair_of((j1.family, j1.batch_size), (j2.family, j2.batch_size), a)
+        }) {
+            return (t1 / self.scale, t2 / self.scale);
+        }
+        (
+            self.solo(j1, a) * self.slowdown(j1, j2, a),
+            self.solo(j2, a) * self.slowdown(j2, j1, a),
+        )
+    }
+
+    /// Normalization scale (iterations/s that maps to 1.0).
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::JobId;
+
+    fn job(id: u32, f: ModelFamily, batch: u32) -> JobSpec {
+        JobSpec {
+            id: JobId(id),
+            family: f,
+            batch_size: batch,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 1,
+            work: 1.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = ThroughputOracle::new(42);
+        let b = ThroughputOracle::new(42);
+        let j = job(0, ModelFamily::ResNet50, 64);
+        assert_eq!(a.solo(&j, AccelType::V100), b.solo(&j, AccelType::V100));
+        let c = ThroughputOracle::new(43);
+        assert_ne!(a.solo(&j, AccelType::V100), c.solo(&j, AccelType::V100));
+    }
+
+    #[test]
+    fn normalized_to_unit_interval() {
+        let o = ThroughputOracle::new(7);
+        let mut max_t: f64 = 0.0;
+        for f in FAMILIES {
+            for &b in f.batch_sizes() {
+                let j = job(0, f, b);
+                for a in ACCEL_TYPES {
+                    let t = o.solo(&j, a);
+                    assert!(t > 0.0 && t <= 1.0 + 1e-12, "{f:?} {b} {a:?} -> {t}");
+                    max_t = max_t.max(t);
+                }
+            }
+        }
+        assert!((max_t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn newer_generations_are_mostly_faster() {
+        // affinity jitter is ±30% but generation gaps are ≥2×, so
+        // v100 > k80 must hold for every family.
+        let o = ThroughputOracle::new(3);
+        for f in FAMILIES {
+            let j = job(0, f, f.batch_sizes()[0]);
+            assert!(o.solo(&j, AccelType::V100) > o.solo(&j, AccelType::K80));
+        }
+    }
+
+    #[test]
+    fn unconsolidated_is_slower() {
+        let o = ThroughputOracle::new(3);
+        let j = job(0, ModelFamily::Transformer, 32);
+        assert!(o.solo(&j, AccelType::V100Unconsolidated) < o.solo(&j, AccelType::V100));
+    }
+
+    #[test]
+    fn iterations_per_second_fall_with_batch_size() {
+        let o = ThroughputOracle::new(3);
+        for f in FAMILIES {
+            let bs = f.batch_sizes();
+            let lo = o.solo(&job(0, f, bs[0]), AccelType::P100);
+            let hi = o.solo(&job(0, f, bs[bs.len() - 1]), AccelType::P100);
+            assert!(lo > hi, "{f:?}: {lo} vs {hi}");
+        }
+    }
+
+    #[test]
+    fn colocation_degrades_but_never_kills() {
+        let o = ThroughputOracle::new(3);
+        let j1 = job(1, ModelFamily::ResNet50, 64);
+        let j2 = job(2, ModelFamily::Recommendation, 1024);
+        let (t1, t2) = o.pair(&j1, &j2, AccelType::V100);
+        assert!(t1 < o.solo(&j1, AccelType::V100));
+        assert!(t2 < o.solo(&j2, AccelType::V100));
+        assert!(t1 > 0.2 * o.solo(&j1, AccelType::V100));
+        assert!(t2 > 0.2 * o.solo(&j2, AccelType::V100));
+    }
+
+    #[test]
+    fn conflicting_pairs_degrade_more_than_complementary() {
+        // compute×compute (two resnet50s) must collide harder than
+        // compute×memory (resnet50 + recommendation).
+        let o = ThroughputOracle::new(3);
+        let cc = job(1, ModelFamily::ResNet50, 64);
+        let cc2 = job(2, ModelFamily::ResNet50, 64);
+        let mem = job(3, ModelFamily::Recommendation, 512);
+        let (t_cc, _) = o.pair(&cc, &cc2, AccelType::V100);
+        let (t_cm, _) = o.pair(&cc, &mem, AccelType::V100);
+        assert!(t_cc < t_cm, "compute-compute {t_cc} should be < compute-mem {t_cm}");
+    }
+
+    #[test]
+    fn table_overrides_synthetic_values() {
+        use crate::workload::gavel_csv::ThroughputTable;
+        let base = ThroughputOracle::new(42);
+        let j = job(0, ModelFamily::ResNet18, 64);
+        let synthetic = base.solo_raw(ModelFamily::ResNet18, 64, AccelType::V100);
+        // override with twice the synthetic rate → it becomes the new max
+        let csv = format!("solo, resnet18, 64, v100, {}", synthetic * 2.0);
+        let o = ThroughputOracle::new(42).with_table(ThroughputTable::from_csv(&csv).unwrap());
+        // raw (denormalized) value equals the table entry exactly
+        assert!(
+            (o.solo(&j, AccelType::V100) * o.scale() - synthetic * 2.0).abs() < 1e-9,
+            "override not applied"
+        );
+        // non-overridden entries still come from the synthetic model
+        let other = job(1, ModelFamily::LanguageModel, 10);
+        assert!(o.solo(&other, AccelType::K80) > 0.0);
+        // pair override is used through throughput()
+        let j2 = job(2, ModelFamily::Transformer, 32);
+        let csv2 = format!(
+            "pair, resnet18, 64, v100, {}, transformer, 32, {}",
+            synthetic * 0.5,
+            synthetic * 0.25
+        );
+        let o2 = ThroughputOracle::new(42).with_table(ThroughputTable::from_csv(&csv2).unwrap());
+        let (t1, t2) = o2.pair(&j, &j2, AccelType::V100);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_gpu_correlation_exists() {
+        // Rank correlation of job throughputs between two GPU types
+        // should be strongly positive — the signal P2 learns.
+        let o = ThroughputOracle::new(3);
+        let mut jobs = vec![];
+        let mut id = 0;
+        for f in FAMILIES {
+            for &b in f.batch_sizes() {
+                jobs.push(job(id, f, b));
+                id += 1;
+            }
+        }
+        let xs: Vec<f64> = jobs.iter().map(|j| o.solo(j, AccelType::K80)).collect();
+        let ys: Vec<f64> = jobs.iter().map(|j| o.solo(j, AccelType::V100)).collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (mx, my) = (mean(&xs), mean(&ys));
+        let cov: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let vx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+        let vy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+        let corr = cov / (vx.sqrt() * vy.sqrt());
+        assert!(corr > 0.8, "cross-GPU correlation too weak: {corr}");
+    }
+}

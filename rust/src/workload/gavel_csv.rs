@@ -1,0 +1,170 @@
+//! Tabulated throughput overrides — plug the *real* Gavel dataset in.
+//!
+//! The synthetic oracle (gavel.rs) reproduces the structure of the
+//! Gavel measurements, but anyone holding the actual dataset \[9\] can
+//! export it to this CSV form and run every experiment on real numbers:
+//!
+//! ```csv
+//! # kind, model, batch, accel, throughput[, model2, batch2, throughput2]
+//! solo, resnet18, 64, v100, 123.4
+//! pair, resnet18, 64, v100, 80.2, transformer, 32, 41.0
+//! ```
+//!
+//! `kind=solo` rows give a job's solo iterations/s on an accelerator;
+//! `kind=pair` rows give both jobs' co-located iterations/s. Unknown
+//! (job, accel) combinations fall back to the synthetic model, so a
+//! partial table is fine. Load with
+//! [`crate::workload::ThroughputOracle::with_table`].
+
+use std::collections::HashMap;
+
+use crate::workload::families::{AccelType, ModelFamily, ACCEL_TYPES, FAMILIES};
+use crate::Result;
+
+/// One workload configuration key.
+pub type CfgKey = (ModelFamily, u32);
+
+/// Parsed table of measured throughputs (raw iterations/s).
+#[derive(Debug, Clone, Default)]
+pub struct ThroughputTable {
+    /// (cfg, accel) -> solo iterations/s
+    pub solo: HashMap<(CfgKey, AccelType), f64>,
+    /// ordered ((cfg1, cfg2), accel) -> (t1, t2); stored with cfg1 ≤ cfg2
+    /// by (family index, batch).
+    pub pairs: HashMap<(CfgKey, CfgKey, AccelType), (f64, f64)>,
+}
+
+fn parse_family(s: &str) -> Result<ModelFamily> {
+    FAMILIES
+        .iter()
+        .copied()
+        .find(|f| f.name() == s.trim())
+        .ok_or_else(|| anyhow::anyhow!("unknown model family {s:?}"))
+}
+
+fn parse_accel(s: &str) -> Result<AccelType> {
+    ACCEL_TYPES
+        .iter()
+        .copied()
+        .find(|a| a.name() == s.trim())
+        .ok_or_else(|| anyhow::anyhow!("unknown accelerator {s:?}"))
+}
+
+fn order(a: CfgKey, b: CfgKey) -> (CfgKey, CfgKey, bool) {
+    if (a.0.index(), a.1) <= (b.0.index(), b.1) {
+        (a, b, false)
+    } else {
+        (b, a, true)
+    }
+}
+
+impl ThroughputTable {
+    /// Parse the CSV format in the module docs. `#`-lines and blank
+    /// lines are ignored.
+    pub fn from_csv(text: &str) -> Result<Self> {
+        let mut table = ThroughputTable::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
+            let ctx = |e: anyhow::Error| anyhow::anyhow!("line {}: {e}", lineno + 1);
+            match fields.as_slice() {
+                ["solo", model, batch, accel, t] => {
+                    let cfg = (parse_family(model).map_err(ctx)?, batch.parse::<u32>()?);
+                    let a = parse_accel(accel).map_err(ctx)?;
+                    table.solo.insert((cfg, a), t.parse::<f64>()?);
+                }
+                ["pair", m1, b1, accel, t1, m2, b2, t2] => {
+                    let c1 = (parse_family(m1).map_err(ctx)?, b1.parse::<u32>()?);
+                    let c2 = (parse_family(m2).map_err(ctx)?, b2.parse::<u32>()?);
+                    let a = parse_accel(accel).map_err(ctx)?;
+                    let (t1, t2) = (t1.parse::<f64>()?, t2.parse::<f64>()?);
+                    let (lo, hi, swapped) = order(c1, c2);
+                    let v = if swapped { (t2, t1) } else { (t1, t2) };
+                    table.pairs.insert((lo, hi, a), v);
+                }
+                _ => anyhow::bail!("line {}: expected solo(5) or pair(8) fields, got {}", lineno + 1, fields.len()),
+            }
+        }
+        Ok(table)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_csv(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn solo_of(&self, cfg: CfgKey, a: AccelType) -> Option<f64> {
+        self.solo.get(&(cfg, a)).copied()
+    }
+
+    /// Pair throughputs, returned in (query, other) order.
+    pub fn pair_of(&self, cfg: CfgKey, other: CfgKey, a: AccelType) -> Option<(f64, f64)> {
+        let (lo, hi, swapped) = order(cfg, other);
+        self.pairs.get(&(lo, hi, a)).map(|&(t1, t2)| {
+            if swapped {
+                (t2, t1)
+            } else {
+                (t1, t2)
+            }
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.solo.is_empty() && self.pairs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.solo.len() + self.pairs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV: &str = "\
+# comment line
+
+solo, resnet18, 64, v100, 123.4
+solo, resnet18, 64, k80, 25.0
+pair, resnet18, 64, v100, 80.2, transformer, 32, 41.0
+";
+
+    #[test]
+    fn parses_solo_and_pair_rows() {
+        let t = ThroughputTable::from_csv(CSV).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(
+            t.solo_of((ModelFamily::ResNet18, 64), AccelType::V100),
+            Some(123.4)
+        );
+        assert_eq!(t.solo_of((ModelFamily::ResNet18, 32), AccelType::V100), None);
+        let p = t
+            .pair_of(
+                (ModelFamily::ResNet18, 64),
+                (ModelFamily::Transformer, 32),
+                AccelType::V100,
+            )
+            .unwrap();
+        assert_eq!(p, (80.2, 41.0));
+        // symmetric lookup flips the tuple
+        let q = t
+            .pair_of(
+                (ModelFamily::Transformer, 32),
+                (ModelFamily::ResNet18, 64),
+                AccelType::V100,
+            )
+            .unwrap();
+        assert_eq!(q, (41.0, 80.2));
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(ThroughputTable::from_csv("solo, resnet18, 64, v100").is_err());
+        assert!(ThroughputTable::from_csv("solo, vgg, 64, v100, 1.0").is_err());
+        assert!(ThroughputTable::from_csv("solo, resnet18, 64, h100, 1.0").is_err());
+        assert!(ThroughputTable::from_csv("solo, resnet18, x, v100, 1.0").is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Workload substrate: job taxonomy, the synthetic Gavel-style
+//! throughput oracle, arrival traces, and the Ψ feature encoding.
+//!
+//! The paper evaluates on the Gavel dataset \[9\]: measured throughputs of
+//! deep-learning jobs (Table 2) on six accelerator types, solo and
+//! pairwise co-located. That dataset is not redistributable here, so
+//! [`gavel`] provides a calibrated synthetic oracle with the same
+//! *structure* (see DESIGN.md §Substitution): per-family × per-GPU
+//! affinity (the inter-GPU correlation P2 exploits), batch-size
+//! throughput curves (the similarity P1's nearest-neighbour step
+//! exploits), and contention-shaped co-location interference.
+
+pub mod encoding;
+pub mod families;
+pub mod gavel;
+pub mod gavel_csv;
+pub mod trace;
+
+pub use encoding::{accel_onehot, psi, ACCEL_DIM, PSI_DIM};
+pub use families::{AccelType, ModelFamily, ACCEL_TYPES, FAMILIES};
+pub use gavel::ThroughputOracle;
+pub use gavel_csv::ThroughputTable;
+pub use trace::{Trace, TraceConfig, TraceEvent};
+
+/// Unique job identifier (monotonic per trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u32);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// A deep-learning job as the scheduler sees it (paper §2.2: the
+/// attribute vector Ψ_j is derived from these fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub family: ModelFamily,
+    pub batch_size: u32,
+    /// Replication factor (fixed at 1 in the paper's study).
+    pub replication: u32,
+    /// Minimum required throughput T̄_j, normalized to [0, 1].
+    pub min_throughput: f64,
+    /// Distributability D_j: max number of accelerators (constraint 2c).
+    pub distributability: u32,
+    /// Remaining work in normalized-throughput · seconds.
+    pub work: f64,
+}
+
+impl JobSpec {
+    /// Ψ_j attribute vector for the estimator networks.
+    pub fn psi(&self) -> [f32; PSI_DIM] {
+        encoding::psi(self.family, self.batch_size, self.replication)
+    }
+}
+
+/// A combination of co-located jobs: the paper restricts |c| ≤ 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Combo {
+    Solo(JobId),
+    Pair(JobId, JobId),
+}
+
+impl Combo {
+    /// Normalized pair constructor (order-independent).
+    pub fn pair(a: JobId, b: JobId) -> Self {
+        if a <= b {
+            Combo::Pair(a, b)
+        } else {
+            Combo::Pair(b, a)
+        }
+    }
+
+    /// |c| — number of jobs in the combination.
+    pub fn len(&self) -> usize {
+        match self {
+            Combo::Solo(_) => 1,
+            Combo::Pair(_, _) => 2,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn jobs(&self) -> Vec<JobId> {
+        match *self {
+            Combo::Solo(j) => vec![j],
+            Combo::Pair(a, b) => vec![a, b],
+        }
+    }
+
+    pub fn contains(&self, j: JobId) -> bool {
+        match *self {
+            Combo::Solo(a) => a == j,
+            Combo::Pair(a, b) => a == j || b == j,
+        }
+    }
+
+    /// The co-runner of `j` in this combination, if any.
+    pub fn other(&self, j: JobId) -> Option<JobId> {
+        match *self {
+            Combo::Solo(_) => None,
+            Combo::Pair(a, b) if a == j => Some(b),
+            Combo::Pair(a, b) if b == j => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combo_pair_is_order_independent() {
+        assert_eq!(Combo::pair(JobId(2), JobId(1)), Combo::pair(JobId(1), JobId(2)));
+    }
+
+    #[test]
+    fn combo_other() {
+        let c = Combo::pair(JobId(1), JobId(2));
+        assert_eq!(c.other(JobId(1)), Some(JobId(2)));
+        assert_eq!(c.other(JobId(2)), Some(JobId(1)));
+        assert_eq!(c.other(JobId(3)), None);
+        assert_eq!(Combo::Solo(JobId(1)).other(JobId(1)), None);
+    }
+
+    #[test]
+    fn combo_len_and_contains() {
+        assert_eq!(Combo::Solo(JobId(0)).len(), 1);
+        let c = Combo::pair(JobId(3), JobId(4));
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(JobId(3)) && c.contains(JobId(4)) && !c.contains(JobId(5)));
+    }
+}

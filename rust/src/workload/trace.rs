@@ -1,0 +1,172 @@
+//! Online job arrival traces: Poisson arrivals over the Table 2
+//! workload grid, with per-job SLOs and durations.
+
+use crate::util::Rng;
+
+use super::families::{ModelFamily, FAMILIES};
+use super::gavel::ThroughputOracle;
+use super::{JobId, JobSpec};
+use crate::workload::families::AccelType;
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Number of jobs to generate.
+    pub n_jobs: usize,
+    /// Mean inter-arrival time in seconds (Poisson process).
+    pub mean_interarrival_s: f64,
+    /// Mean job work in seconds-at-unit-throughput (exponential).
+    pub mean_work_s: f64,
+    /// Fraction of a job's *median-GPU solo throughput* demanded as the
+    /// minimum throughput SLO T̄_j (paper constraint 2e). Values well
+    /// under 1.0 leave the optimizer room to co-locate and down-bin.
+    pub slo_fraction: f64,
+    /// Max accelerators per job D_j (constraint 2c).
+    pub max_distributability: u32,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            n_jobs: 40,
+            mean_interarrival_s: 60.0,
+            mean_work_s: 1800.0,
+            slo_fraction: 0.5,
+            max_distributability: 2,
+            seed: 17,
+        }
+    }
+}
+
+/// A single trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Job arrives at `at` seconds.
+    Arrival { at: f64, job: JobSpec },
+}
+
+/// A generated arrival trace (sorted by time).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    pub config: TraceConfig,
+}
+
+impl Trace {
+    /// Generate a trace. The oracle is used to scale each job's SLO to
+    /// something feasible on the mid-generation GPU (so SLOs are tight
+    /// but satisfiable, as in the paper's setup).
+    pub fn generate(cfg: &TraceConfig, oracle: &ThroughputOracle) -> Self {
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x7ace);
+        let mut events = Vec::with_capacity(cfg.n_jobs);
+        let mut t = 0.0f64;
+        for i in 0..cfg.n_jobs {
+            // exponential inter-arrival
+            t += rng.exponential(cfg.mean_interarrival_s);
+            let family = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+            let batches = family.batch_sizes();
+            let batch = batches[rng.range_usize(0, batches.len())];
+            let mut job = JobSpec {
+                id: JobId(i as u32),
+                family,
+                batch_size: batch,
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: rng.range_u32_inclusive(1, cfg.max_distributability),
+                work: rng.exponential(cfg.mean_work_s),
+            };
+            // SLO: a fraction of the P100 solo throughput for this job.
+            let p100 = oracle.solo(&job, AccelType::P100);
+            job.min_throughput = cfg.slo_fraction * p100 * rng.range_f64(0.6, 1.0);
+            events.push(TraceEvent::Arrival { at: t, job });
+        }
+        Self {
+            events,
+            config: cfg.clone(),
+        }
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &JobSpec> {
+        self.events.iter().map(|TraceEvent::Arrival { job, .. }| job)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Enumerate the full Table 2 job universe (every family × batch size),
+/// used by the dataset builders for the figure benches.
+pub fn table2_universe() -> Vec<(ModelFamily, u32)> {
+    let mut v = vec![];
+    for f in FAMILIES {
+        for &b in f.batch_sizes() {
+            v.push((f, b));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let oracle = ThroughputOracle::new(1);
+        let cfg = TraceConfig::default();
+        let a = Trace::generate(&cfg, &oracle);
+        let b = Trace::generate(&cfg, &oracle);
+        assert_eq!(a.events.len(), cfg.n_jobs);
+        let times: Vec<f64> = a
+            .events
+            .iter()
+            .map(|TraceEvent::Arrival { at, .. }| *at)
+            .collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        for (ea, eb) in a.events.iter().zip(&b.events) {
+            assert_eq!(ea, eb);
+        }
+    }
+
+    #[test]
+    fn slos_are_feasible_on_some_gpu() {
+        // every job's SLO must be below its best solo throughput,
+        // otherwise constraint 2e is unsatisfiable even solo on v100.
+        let oracle = ThroughputOracle::new(1);
+        let trace = Trace::generate(&TraceConfig::default(), &oracle);
+        for job in trace.jobs() {
+            let best = crate::workload::ACCEL_TYPES
+                .iter()
+                .map(|&a| oracle.solo(job, a))
+                .fold(0.0f64, f64::max);
+            assert!(job.min_throughput < best, "{job:?} infeasible");
+        }
+    }
+
+    #[test]
+    fn batch_sizes_come_from_table2() {
+        let oracle = ThroughputOracle::new(5);
+        let trace = Trace::generate(
+            &TraceConfig {
+                n_jobs: 200,
+                ..Default::default()
+            },
+            &oracle,
+        );
+        for job in trace.jobs() {
+            assert!(job.family.batch_sizes().contains(&job.batch_size));
+        }
+    }
+
+    #[test]
+    fn universe_size_matches_table2() {
+        // 5+5+4+4+4 = 22 (resnet18, resnet50: 5 each; others: 4 each)
+        assert_eq!(table2_universe().len(), 22);
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration tests: cross-module behaviour of the full system —
+//! simulator × schedulers × optimizer × catalog, and (when artifacts
+//! are built) the complete GOGH loop over PJRT.
+
+use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
+use gogh::cluster::ClusterSpec;
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::{GoghOptions, GoghScheduler, Scheduler, SimDriver};
+use gogh::runtime::Engine;
+use gogh::workload::{ThroughputOracle, Trace, TraceConfig};
+
+fn small_trace(seed: u64, n: usize) -> (ThroughputOracle, Trace) {
+    let oracle = ThroughputOracle::new(seed);
+    let cfg = TraceConfig {
+        n_jobs: n,
+        mean_interarrival_s: 25.0,
+        mean_work_s: 120.0,
+        seed,
+        ..Default::default()
+    };
+    let trace = Trace::generate(&cfg, &oracle);
+    (oracle, trace)
+}
+
+fn driver(oracle: &ThroughputOracle, trace: Trace, seed: u64) -> SimDriver {
+    SimDriver::new(
+        ClusterSpec::balanced(2),
+        oracle.clone(),
+        trace,
+        0.02,
+        20.0,
+        seed,
+    )
+}
+
+#[test]
+fn all_baselines_complete_the_same_trace() {
+    let (oracle, trace) = small_trace(3, 8);
+    let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(RandomScheduler::new(3)),
+        Box::new(GreedyScheduler::new()),
+        Box::new(OracleScheduler::new(oracle.clone(), Default::default())),
+    ];
+    for s in schedulers.iter_mut() {
+        let mut d = driver(&oracle, trace.clone(), 3);
+        let report = d.run(s.as_mut()).unwrap();
+        assert_eq!(report.jobs_completed, 8, "{} lost jobs", s.name());
+        assert!(report.energy_joules > 0.0);
+        assert!(report.total_energy_joules >= report.energy_joules);
+    }
+}
+
+#[test]
+fn oracle_ilp_meets_slos_at_lower_power_than_greedy() {
+    // Objective (2a) minimizes instantaneous power subject to SLOs — so
+    // the right comparisons are (i) SLO satisfaction vs random (which
+    // ignores SLOs) and (ii) time-averaged busy power vs greedy (which
+    // meets throughput by always grabbing the fastest, power-hungriest
+    // GPUs). Energy-per-job is NOT what the objective optimizes (slower
+    // but thriftier schedules trade JCT for watts).
+    let (oracle, trace) = small_trace(5, 10);
+    let mut d1 = driver(&oracle, trace.clone(), 5);
+    let rand_report = d1.run(&mut RandomScheduler::new(5)).unwrap();
+    let mut d2 = driver(&oracle, trace.clone(), 5);
+    let greedy_report = d2.run(&mut GreedyScheduler::new()).unwrap();
+    let mut d3 = driver(&oracle, trace, 5);
+    let mut oracle_sched = OracleScheduler::new(oracle.clone(), Default::default());
+    let oracle_report = d3.run(&mut oracle_sched).unwrap();
+
+    // (i) SLOs: oracle must not be worse than random
+    assert!(oracle_report.slo_deficit <= rand_report.slo_deficit + 1e-9);
+    // (ii) mean busy power: oracle ≤ greedy (the energy objective)
+    let watts = |r: &gogh::metrics::RunReport| r.energy_joules / r.sim_seconds.max(1e-9);
+    assert!(
+        watts(&oracle_report) <= watts(&greedy_report) * 1.05,
+        "oracle {:.1} W vs greedy {:.1} W",
+        watts(&oracle_report),
+        watts(&greedy_report)
+    );
+}
+
+#[test]
+fn simulation_is_reproducible_across_runs() {
+    let run = || {
+        let (oracle, trace) = small_trace(7, 6);
+        let mut d = driver(&oracle, trace, 7);
+        d.run(&mut GreedyScheduler::new()).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.energy_joules, b.energy_joules);
+    assert_eq!(a.slo_deficit, b.slo_deficit);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.mean_jct, b.mean_jct);
+}
+
+#[test]
+fn config_drives_cluster_size() {
+    let cfg = ExperimentConfig::from_json(
+        r#"{"cluster": {"accel_mix": {"k80": 3, "v100": 1}}, "trace": {"n_jobs": 3}}"#,
+    )
+    .unwrap();
+    let spec = ClusterSpec::mix(&cfg.cluster.accel_mix);
+    assert_eq!(spec.len(), 4);
+}
+
+// ---------------------------------------------------------------------
+// PJRT-dependent tests (skip when artifacts are absent)
+// ---------------------------------------------------------------------
+
+fn engine() -> Option<std::sync::Arc<Engine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load("artifacts").unwrap())
+}
+
+#[test]
+fn gogh_full_loop_completes_and_learns() {
+    let Some(engine) = engine() else { return };
+    let (oracle, trace) = small_trace(11, 6);
+    let mut d = driver(&oracle, trace, 11);
+    let mut sched = GoghScheduler::new(
+        &engine,
+        &oracle,
+        GoghOptions {
+            history_jobs: 12,
+            seed: 11,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = d.run(&mut sched).unwrap();
+    assert_eq!(report.jobs_completed, 6);
+    // the estimator must have been scored against measurements
+    let mae = report.estimation_mae.expect("estimation MAE tracked");
+    assert!(mae.is_finite() && mae >= 0.0);
+    assert!(mae < 0.3, "estimation MAE suspiciously large: {mae}");
+    // catalog accumulated measured + refined records
+    assert!(sched.catalog.n_measured() > 0);
+    assert!(report.mean_solve_ms > 0.0);
+    assert!(report.mean_p1_ms > 0.0);
+}
+
+#[test]
+fn gogh_refinement_improves_estimation_over_p1_only() {
+    let Some(engine) = engine() else { return };
+    let run = |refine: bool| {
+        let (oracle, trace) = small_trace(13, 8);
+        let mut d = driver(&oracle, trace, 13);
+        let mut sched = GoghScheduler::new(
+            &engine,
+            &oracle,
+            GoghOptions {
+                history_jobs: 16,
+                enable_refinement: refine,
+                seed: 13,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        d.run(&mut sched).unwrap().estimation_mae.unwrap()
+    };
+    let with = run(true);
+    let without = run(false);
+    // Eq. 3/4 refinement should not make estimates meaningfully worse;
+    // typically it improves them. Allow slack for noise.
+    assert!(
+        with <= without * 1.15,
+        "refinement hurt: with={with} without={without}"
+    );
+}
+
+#[test]
+fn gogh_with_exploration_still_completes() {
+    let Some(engine) = engine() else { return };
+    let (oracle, trace) = small_trace(17, 6);
+    let mut d = driver(&oracle, trace, 17);
+    let mut sched = GoghScheduler::new(
+        &engine,
+        &oracle,
+        GoghOptions {
+            history_jobs: 12,
+            exploration_epsilon: 1.0, // explore on every allocation round
+            seed: 17,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = d.run(&mut sched).unwrap();
+    assert_eq!(report.jobs_completed, 6);
+    // exploration must not break placement invariants (jobs all finish)
+    assert!(report.estimation_mae.is_some());
+}
+
+#[test]
+fn gogh_from_config_runs() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 4;
+    cfg.trace.mean_work_s = 100.0;
+    cfg.trace.mean_interarrival_s = 20.0;
+    let mut sys = gogh::Gogh::from_config(&cfg).unwrap();
+    let report = sys.run().unwrap();
+    assert_eq!(report.jobs_completed, 4);
+}

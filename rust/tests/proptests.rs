@@ -1,0 +1,351 @@
+//! Property-based tests (seeded random-case loops — the offline
+//! substitute for proptest, see Cargo.toml): solver correctness against
+//! brute force, Problem-1 solution invariants, catalog/placement
+//! algebra, and encoding round-trips, each over hundreds of random
+//! instances.
+
+use std::collections::HashMap;
+
+use gogh::catalog::{Catalog, EstimateKey};
+use gogh::cluster::{AccelId, Placement};
+use gogh::ilp::branch_bound::{solve_ilp, BnbConfig, BnbStatus};
+use gogh::ilp::model::{Model, ObjSense, Sense};
+use gogh::ilp::problem1::{solve_problem1, Problem1Input};
+use gogh::util::Rng;
+use gogh::workload::{
+    encoding, AccelType, Combo, JobId, JobSpec, ModelFamily, ThroughputOracle, ACCEL_TYPES,
+    FAMILIES,
+};
+
+/// Brute-force optimum of a small binary program.
+fn brute_force(model: &Model) -> Option<f64> {
+    let n = model.n_vars();
+    assert!(n <= 14);
+    let mut best: Option<f64> = None;
+    for mask in 0u32..(1 << n) {
+        let x: Vec<f64> = (0..n).map(|i| ((mask >> i) & 1) as f64).collect();
+        if model.is_feasible(&x, 1e-9) {
+            let obj = model.objective_value(&x);
+            best = Some(match (best, model.obj_sense) {
+                (None, _) => obj,
+                (Some(b), ObjSense::Minimize) => b.min(obj),
+                (Some(b), ObjSense::Maximize) => b.max(obj),
+            });
+        }
+    }
+    best
+}
+
+#[test]
+fn prop_bnb_matches_brute_force_on_random_binary_programs() {
+    let mut rng = Rng::seed_from_u64(101);
+    for case in 0..150 {
+        let n = rng.range_usize(2, 9);
+        let sense = if rng.bool(0.5) {
+            ObjSense::Minimize
+        } else {
+            ObjSense::Maximize
+        };
+        let mut m = Model::new(sense);
+        let vars: Vec<_> = (0..n)
+            .map(|i| m.add_binary(format!("x{i}"), rng.range_f64(-5.0, 5.0)))
+            .collect();
+        for c in 0..rng.range_usize(1, 5) {
+            let mut terms: Vec<_> = vec![];
+            for &v in &vars {
+                if rng.bool(0.6) {
+                    terms.push((v, rng.range_f64(-3.0, 3.0)));
+                }
+            }
+            if terms.is_empty() {
+                continue;
+            }
+            let s = match rng.range_usize(0, 3) {
+                0 => Sense::Le,
+                1 => Sense::Ge,
+                _ => Sense::Eq,
+            };
+            // rhs reachable by some assignment to avoid mostly-infeasible cases
+            let lhs_max: f64 = terms.iter().map(|(_, k)| k.max(0.0)).sum();
+            let lhs_min: f64 = terms.iter().map(|(_, k)| k.min(0.0)).sum();
+            let rhs = if s == Sense::Eq {
+                // pick an achievable subset sum
+                let x: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+                terms.iter().map(|&(v, k)| if x[v.0] { k } else { 0.0 }).sum()
+            } else {
+                rng.range_f64(lhs_min, lhs_max.max(lhs_min + 0.1))
+            };
+            m.add_constraint(format!("c{c}"), terms, s, rhs);
+        }
+        let expect = brute_force(&m);
+        let got = solve_ilp(&m, &BnbConfig::default());
+        match expect {
+            None => assert_eq!(
+                got.status,
+                BnbStatus::Infeasible,
+                "case {case}: solver found {:?} but brute force says infeasible",
+                got.objective
+            ),
+            Some(opt) => {
+                assert!(
+                    matches!(got.status, BnbStatus::Optimal | BnbStatus::Feasible),
+                    "case {case}: {:?}",
+                    got.status
+                );
+                assert!(
+                    (got.objective - opt).abs() < 1e-6,
+                    "case {case}: solver {} vs brute force {opt}",
+                    got.objective
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_problem1_solutions_always_satisfy_constraints() {
+    let mut rng = Rng::seed_from_u64(202);
+    for case in 0..40 {
+        let oracle = ThroughputOracle::new(case);
+        let n_jobs = rng.range_usize(2, 10) as u32;
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| {
+                let f = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+                let b = f.batch_sizes()[rng.range_usize(0, f.batch_sizes().len())];
+                let mut j = JobSpec {
+                    id: JobId(i),
+                    family: f,
+                    batch_size: b,
+                    replication: 1,
+                    min_throughput: 0.0,
+                    distributability: rng.range_u32_inclusive(1, 2),
+                    work: 10.0,
+                };
+                j.min_throughput = rng.range_f64(0.1, 0.5) * oracle.solo(&j, AccelType::P100);
+                j
+            })
+            .collect();
+        let per_type = rng.range_u32_inclusive(1, 3);
+        let counts: HashMap<AccelType, u32> =
+            ACCEL_TYPES.iter().map(|&a| (a, per_type)).collect();
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: rng.range_usize(0, 4),
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+        };
+        let sol = solve_problem1(&input, &BnbConfig::default());
+        assert!(
+            matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible),
+            "case {case}: {:?}",
+            sol.status
+        );
+        // (2f aggregated) per-type capacity
+        for &a in ACCEL_TYPES.iter() {
+            let used: u32 = sol
+                .assignments
+                .iter()
+                .filter(|(aa, _, _)| *aa == a)
+                .map(|(_, _, m)| *m)
+                .sum();
+            assert!(used <= counts[&a], "case {case}: type {a:?} over-used");
+        }
+        // (2c) distributability + (2b/2e modulo declared violations)
+        for j in &jobs {
+            let placements: u32 = sol
+                .assignments
+                .iter()
+                .filter(|(_, c, _)| c.contains(j.id))
+                .map(|(_, _, m)| *m)
+                .sum();
+            assert!(
+                placements <= j.distributability,
+                "case {case}: job {} exceeds D_j",
+                j.id
+            );
+            if !sol.violated_jobs.contains(&j.id) {
+                assert!(placements >= 1, "case {case}: job {} uncovered", j.id);
+                let total: f64 = sol
+                    .assignments
+                    .iter()
+                    .filter(|(_, c, _)| c.contains(j.id))
+                    .map(|(a, c, m)| thr(*a, j.id, c) * *m as f64)
+                    .sum();
+                assert!(
+                    total >= j.min_throughput - 1e-6,
+                    "case {case}: job {} SLO unmet without declared violation",
+                    j.id
+                );
+            }
+        }
+        // combos fit capacity θ_a = 2
+        for (_, c, _) in &sol.assignments {
+            assert!(c.len() <= 2);
+        }
+    }
+}
+
+#[test]
+fn prop_catalog_refinement_average_is_mean_of_pushed_values() {
+    let mut rng = Rng::seed_from_u64(303);
+    for _ in 0..100 {
+        let mut catalog = Catalog::new();
+        let key = EstimateKey {
+            accel: ACCEL_TYPES[rng.range_usize(0, 6)],
+            job: JobId(rng.range_u32_inclusive(0, 50)),
+            combo: Combo::Solo(JobId(1)),
+        };
+        let initial = rng.range_f64(0.0, 1.0);
+        catalog.write_initial(key, initial);
+        let mut values = vec![initial];
+        for round in 1..rng.range_usize(2, 12) {
+            let v = rng.range_f64(0.0, 1.0);
+            catalog.push_refinement(key, v, round as u32);
+            values.push(v);
+        }
+        let expect = values.iter().sum::<f64>() / values.len() as f64;
+        assert!((catalog.value(&key).unwrap() - expect).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_placement_never_double_books_a_job_per_accel() {
+    let mut rng = Rng::seed_from_u64(404);
+    for _ in 0..100 {
+        let mut p = Placement::new();
+        let accels: Vec<AccelId> = (0..6)
+            .map(|s| AccelId {
+                server: s,
+                accel: ACCEL_TYPES[rng.range_usize(0, 6)],
+            })
+            .collect();
+        for _ in 0..30 {
+            let a = accels[rng.range_usize(0, accels.len())];
+            match rng.range_usize(0, 3) {
+                0 => p.assign(a, Combo::Solo(JobId(rng.range_u32_inclusive(0, 9)))),
+                1 => {
+                    let j1 = JobId(rng.range_u32_inclusive(0, 9));
+                    let mut j2 = JobId(rng.range_u32_inclusive(0, 9));
+                    if j1 == j2 {
+                        j2 = JobId((j2.0 + 1) % 10);
+                    }
+                    p.assign(a, Combo::pair(j1, j2));
+                }
+                _ => p.remove_job(JobId(rng.range_u32_inclusive(0, 9))),
+            }
+            // invariant: by_job and by_accel agree
+            for (aid, combo) in p.iter() {
+                for j in combo.jobs() {
+                    assert!(p.accels_of(j).contains(aid));
+                }
+            }
+            for j in (0..10).map(JobId) {
+                for aid in p.accels_of(j) {
+                    assert!(p.combo_on(*aid).map_or(false, |c| c.contains(j)));
+                }
+                // a job appears at most once per accel
+                let mut seen = std::collections::HashSet::new();
+                for aid in p.accels_of(j) {
+                    assert!(seen.insert(*aid), "job {j} twice on {aid}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_p1_row_is_injective_in_its_fields() {
+    // distinct (family, batch, accel) tuples must produce distinct rows —
+    // the encoding must not alias information.
+    let mut rng = Rng::seed_from_u64(505);
+    let mut seen: HashMap<Vec<u32>, (ModelFamily, u32, usize)> = Default::default();
+    for _ in 0..300 {
+        let f = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+        let b = f.batch_sizes()[rng.range_usize(0, f.batch_sizes().len())];
+        let ai = rng.range_usize(0, 6);
+        let p = encoding::psi(f, b, 1);
+        let row = encoding::p1_row(&p, &encoding::PSI_EMPTY, ACCEL_TYPES[ai], 0.5, 0.0, &p);
+        let bits: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
+        if let Some(&(f2, b2, ai2)) = seen.get(&bits) {
+            assert_eq!((f2, b2, ai2), (f, b, ai), "row collision");
+        }
+        seen.insert(bits, (f, b, ai));
+    }
+}
+
+#[test]
+fn prop_oracle_pair_is_never_faster_than_solo() {
+    let mut rng = Rng::seed_from_u64(606);
+    for seed in 0..20 {
+        let oracle = ThroughputOracle::new(seed);
+        for _ in 0..20 {
+            let f1 = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+            let f2 = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+            let j1 = JobSpec {
+                id: JobId(1),
+                family: f1,
+                batch_size: f1.batch_sizes()[rng.range_usize(0, f1.batch_sizes().len())],
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: 1,
+                work: 1.0,
+            };
+            let j2 = JobSpec {
+                id: JobId(2),
+                family: f2,
+                batch_size: f2.batch_sizes()[rng.range_usize(0, f2.batch_sizes().len())],
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: 1,
+                work: 1.0,
+            };
+            for &a in ACCEL_TYPES.iter() {
+                let (t1, t2) = oracle.pair(&j1, &j2, a);
+                assert!(t1 <= oracle.solo(&j1, a) + 1e-12);
+                assert!(t2 <= oracle.solo(&j2, a) + 1e-12);
+                assert!(t1 > 0.0 && t2 > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use gogh::util::Json;
+    let mut rng = Rng::seed_from_u64(707);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 {
+            rng.range_usize(0, 4)
+        } else {
+            rng.range_usize(0, 6)
+        } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}-\"q\"\n", rng.next_u32())),
+            4 => Json::Array((0..rng.range_usize(0, 4)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Object(
+                (0..rng.range_usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..200 {
+        let v = gen(&mut rng, 0);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "roundtrip failed for {text}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Runtime end-to-end tests: the AOT artifact contract between
+//! `python/compile` and the rust runtime — manifest ↔ encoding dims,
+//! real training through PJRT reduces validation error, P2 refinement
+//! beats the raw estimates it was given.
+//!
+//! All tests skip (with a notice) when `artifacts/` is absent.
+
+use gogh::runtime::{DatasetBuilder, Engine, Estimator};
+use gogh::workload::encoding;
+use gogh::workload::ThroughputOracle;
+
+fn engine() -> Option<std::sync::Arc<Engine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load("artifacts").unwrap())
+}
+
+#[test]
+fn manifest_dims_match_rust_encoding() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest();
+    assert_eq!(m.token_dim, 8);
+    for arch in ["ff", "rnn", "transformer"] {
+        let p1 = m.model(&format!("p1_{arch}")).unwrap();
+        assert_eq!(p1.input_dim, encoding::P1_DIM);
+        assert_eq!(p1.padded_dim, encoding::P1_DIM);
+        assert_eq!(p1.out_dim, 2);
+        let p2 = m.model(&format!("p2_{arch}")).unwrap();
+        assert_eq!(p2.input_dim, encoding::P2_DIM);
+        assert_eq!(p2.padded_dim, encoding::P2_PADDED);
+        // n_params < n_state (Adam adds m, v, step)
+        assert!(p2.n_params * 3 + 1 == p2.n_state(), "{arch}");
+    }
+}
+
+#[test]
+fn every_model_initializes_and_predicts_finite() {
+    let Some(engine) = engine() else { return };
+    for net in ["p1", "p2"] {
+        for arch in ["ff", "rnn", "transformer"] {
+            let key = format!("{net}_{arch}");
+            let mut est = Estimator::new(&engine, &key).unwrap();
+            let dim = est.spec().padded_dim;
+            let rows = vec![vec![0.25f32; dim]; 3];
+            let preds = est.predict(&rows).unwrap();
+            assert_eq!(preds.len(), 3, "{key}");
+            assert!(preds[0].iter().all(|v| v.is_finite()), "{key}");
+        }
+    }
+}
+
+#[test]
+fn training_through_pjrt_reduces_validation_mae() {
+    let Some(engine) = engine() else { return };
+    let oracle = ThroughputOracle::new(3);
+    let builder = DatasetBuilder::new(&oracle, 3);
+    let split = builder.build_split("p1", 2000, 400);
+    let mut est = Estimator::new(&engine, "p1_ff").unwrap();
+    let xs: Vec<Vec<f32>> = split.val.iter().map(|s| s.x.clone()).collect();
+    let ys: Vec<[f32; 2]> = split.val.iter().map(|s| s.y).collect();
+    let (_, mae_before) = est.evaluate(&xs, &ys).unwrap();
+    for (bx, by) in gogh::runtime::dataset::batches(&split.train, est.spec().train_batch, 1) {
+        est.train_step(&bx, &by).unwrap();
+    }
+    let (_, mae_after) = est.evaluate(&xs, &ys).unwrap();
+    assert!(
+        mae_after < 0.6 * mae_before,
+        "val MAE {mae_before} -> {mae_after}"
+    );
+    assert!(mae_after < 0.15, "val MAE too high after an epoch: {mae_after}");
+}
+
+#[test]
+fn p2_refinement_beats_raw_estimates() {
+    // Train P2 briefly, then verify its refined cross-GPU estimates have
+    // lower MAE than the stale estimates it consumes — the Eq. 3 claim.
+    let Some(engine) = engine() else { return };
+    let oracle = ThroughputOracle::new(5);
+    let builder = DatasetBuilder::new(&oracle, 5);
+    let split = builder.build_split("p2", 6000, 600);
+    let mut est = Estimator::new(&engine, "p2_ff").unwrap();
+    // ~400 Adam steps (fig2b's budget) — undertrained P2 cannot beat
+    // its stale inputs yet.
+    for epoch in 0..18u64 {
+        for (bx, by) in
+            gogh::runtime::dataset::batches(&split.train, est.spec().train_batch, epoch)
+        {
+            est.train_step(&bx, &by).unwrap();
+        }
+    }
+    let xs: Vec<Vec<f32>> = split.val.iter().map(|s| s.x.clone()).collect();
+    let preds = est.predict(&xs).unwrap();
+    let mut mae_refined = 0.0f64;
+    let mut mae_stale = 0.0f64;
+    for (s, p) in split.val.iter().zip(&preds) {
+        // x[32] is the stale estimate of (a2, j1) — see encoding::p2_row
+        mae_refined += (p[0] - s.y[0]).abs() as f64;
+        mae_stale += (s.x[32] - s.y[0]).abs() as f64;
+    }
+    mae_refined /= split.val.len() as f64;
+    mae_stale /= split.val.len() as f64;
+    assert!(
+        mae_refined < mae_stale,
+        "P2 refined MAE {mae_refined} not better than stale {mae_stale}"
+    );
+}
+
+#[test]
+fn predict_is_pure_and_batch_invariant() {
+    let Some(engine) = engine() else { return };
+    let mut est = Estimator::new(&engine, "p1_transformer").unwrap();
+    let mut rows = vec![];
+    for i in 0..7 {
+        rows.push(vec![0.1 * i as f32; 32]);
+    }
+    let a = est.predict(&rows).unwrap();
+    let b = est.predict(&rows).unwrap();
+    assert_eq!(a, b, "predict must not mutate state");
+    // a subset must yield the same per-row outputs
+    let c = est.predict(&rows[..3].to_vec()).unwrap();
+    for i in 0..3 {
+        assert_eq!(a[i], c[i]);
+    }
+}
