@@ -15,12 +15,25 @@ use gogh::workload::{AccelType, ThroughputOracle, Trace};
 fn mixes() -> Vec<(&'static str, Vec<(AccelType, u32)>)> {
     use AccelType::*;
     vec![
-        ("legacy-heavy", vec![(K80, 5), (K80Unconsolidated, 3), (P100, 2), (V100, 1)]),
+        (
+            "legacy-heavy",
+            vec![(K80, 5), (K80Unconsolidated, 3), (P100, 2), (V100, 1)],
+        ),
         (
             "balanced",
-            vec![(K80, 2), (K80Unconsolidated, 2), (P100, 2), (P100Unconsolidated, 2), (V100, 2), (V100Unconsolidated, 2)],
+            vec![
+                (K80, 2),
+                (K80Unconsolidated, 2),
+                (P100, 2),
+                (P100Unconsolidated, 2),
+                (V100, 2),
+                (V100Unconsolidated, 2),
+            ],
         ),
-        ("modern-heavy", vec![(V100, 5), (V100Unconsolidated, 3), (P100, 2), (K80, 1)]),
+        (
+            "modern-heavy",
+            vec![(V100, 5), (V100Unconsolidated, 3), (P100, 2), (K80, 1)],
+        ),
     ]
 }
 

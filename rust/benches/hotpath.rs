@@ -6,13 +6,19 @@
 
 include!("bench_util.rs");
 
+use std::collections::HashMap;
+
 use gogh::catalog::{Catalog, EstimateKey, SimilarityIndex};
+use gogh::ilp::branch_bound::BnbConfig;
 use gogh::ilp::model::{Model, ObjSense, Sense, VarKind};
-use gogh::ilp::simplex::solve_lp;
+use gogh::ilp::problem1::{solve_problem1, Problem1Input};
+use gogh::ilp::simplex::{solve_lp, SimplexWorkspace};
 use gogh::runtime::{Engine, Estimator};
 use gogh::util::Rng;
 use gogh::workload::encoding::{p1_row, psi};
-use gogh::workload::{AccelType, Combo, JobId, ModelFamily};
+use gogh::workload::{
+    AccelType, Combo, JobId, JobSpec, ModelFamily, ThroughputOracle, ACCEL_TYPES, FAMILIES,
+};
 
 fn bench<F: FnMut()>(name: &str, per_call: usize, iters: usize, f: F) {
     let t = median_time(f, iters);
@@ -74,7 +80,10 @@ fn main() -> gogh::Result<()> {
     let mut model = Model::new(ObjSense::Minimize);
     let mut lp_rng = Rng::seed_from_u64(2);
     let vars: Vec<_> = (0..60)
-        .map(|i| model.add_var(format!("x{i}"), 0.0, 10.0, VarKind::Continuous, lp_rng.range_f64(1.0, 5.0)))
+        .map(|i| {
+            let obj = lp_rng.range_f64(1.0, 5.0);
+            model.add_var(format!("x{i}"), 0.0, 10.0, VarKind::Continuous, obj)
+        })
         .collect();
     for r in 0..40 {
         let mut terms: Vec<_> = vec![];
@@ -87,9 +96,73 @@ fn main() -> gogh::Result<()> {
             model.add_constraint(format!("c{r}"), terms, Sense::Ge, lp_rng.range_f64(1.0, 8.0));
         }
     }
-    bench("simplex 60x40 LP", 1, 20, || {
+    bench("simplex 60x40 LP (fresh alloc)", 1, 20, || {
         std::hint::black_box(solve_lp(&model, None));
     });
+    let mut ws = SimplexWorkspace::new();
+    ws.solve(&model, None); // prime the buffers
+    bench("simplex 60x40 LP (reused ws)", 1, 20, || {
+        std::hint::black_box(ws.solve(&model, None));
+    });
+
+    // ---- Problem 1 B&B on the decision path (|J| = 8, 12 instances):
+    // warm = greedy incumbent from baselines::greedy, cold = no incumbent.
+    let oracle = ThroughputOracle::new(41);
+    let jobs: Vec<JobSpec> = (0..8u32)
+        .map(|i| {
+            let f = FAMILIES[i as usize % FAMILIES.len()];
+            let b = f.batch_sizes()[i as usize % f.batch_sizes().len()];
+            let mut j = JobSpec {
+                id: JobId(i),
+                family: f,
+                batch_size: b,
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: 2,
+                work: 100.0,
+            };
+            j.min_throughput = 0.35 * oracle.solo(&j, AccelType::P100);
+            j
+        })
+        .collect();
+    let jobs_c = jobs.clone();
+    let oracle_c = oracle.clone();
+    let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+        let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+        let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+        oracle_c.throughput(spec, c, a, &lookup)
+    };
+    let cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+    let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+    let input = Problem1Input {
+        jobs: &jobs,
+        accel_counts: &counts,
+        throughput: &thr,
+        solo_capability: &cap,
+        max_pairs_per_job: 3,
+        slack_penalty: Some(2000.0),
+        throughput_bonus: 300.0,
+    };
+    let warm_cfg = BnbConfig::default();
+    let cold_cfg = BnbConfig {
+        auto_warm_start: false,
+        ..Default::default()
+    };
+    bench("problem1 B&B |J|=8 warm", 1, 10, || {
+        std::hint::black_box(solve_problem1(&input, &warm_cfg));
+    });
+    bench("problem1 B&B |J|=8 cold", 1, 10, || {
+        std::hint::black_box(solve_problem1(&input, &cold_cfg));
+    });
+    let warm = solve_problem1(&input, &warm_cfg);
+    let cold = solve_problem1(&input, &cold_cfg);
+    println!(
+        "problem1 nodes: warm {} ({:.1} pivots/node) vs cold {} ({:.1} pivots/node)",
+        warm.nodes,
+        warm.lp_pivots as f64 / warm.nodes.max(1) as f64,
+        cold.nodes,
+        cold.lp_pivots as f64 / cold.nodes.max(1) as f64
+    );
 
     // ---- PJRT paths (skip when artifacts absent)
     if std::path::Path::new("artifacts/manifest.json").exists() {

@@ -1,7 +1,14 @@
 //! Optimizer (Problem 1) solve-time scaling — the §2.4 discussion: the
 //! paper uses a general-purpose solver and defers faster algorithms to
 //! future work; this bench quantifies where the in-tree B&B solver
-//! stands as |J| and the cluster grow.
+//! stands as |J| and the cluster grow, and how much the greedy warm
+//! start (baselines::greedy) and workspace-reuse simplex buy:
+//!
+//! * `nodes_w` / `nodes_c` — branch-and-bound nodes explored with the
+//!   warm-started vs cold-started search (same instance, same budgets);
+//! * `piv/node` — mean simplex pivots per explored node (the per-node
+//!   cost that workspace reuse keeps allocation-free);
+//! * `ms_w` / `ms_c` — wall-clock per solve.
 //!
 //!     cargo bench --bench ilp_scaling
 
@@ -35,11 +42,13 @@ fn mk_jobs(n: u32, oracle: &ThroughputOracle) -> Vec<JobSpec> {
 
 fn main() {
     let oracle = ThroughputOracle::new(41);
-    println!("# Problem 1 (GPU-allocation ILP) solve-time scaling");
+    println!("# Problem 1 (GPU-allocation ILP) solve-time scaling, warm vs cold start");
     println!(
-        "{:>5} {:>10} {:>7} {:>8} {:>8} {:>8} {:>12} {:>10}",
-        "jobs", "instances", "vars", "cons", "nodes", "gap%", "solve_ms", "status"
+        "{:>5} {:>10} {:>7} {:>8} {:>8} {:>8} {:>9} {:>10} {:>10} {:>8} {:>10}",
+        "jobs", "instances", "vars", "cons", "nodes_w", "nodes_c", "piv/node", "ms_w", "ms_c", "gap%", "status"
     );
+    let mut total_warm_nodes = 0usize;
+    let mut total_cold_nodes = 0usize;
     for &per_type in &[1u32, 2, 4] {
         for &n_jobs in &[4u32, 8, 12, 16, 24] {
             let jobs = mk_jobs(n_jobs, &oracle);
@@ -62,26 +71,44 @@ fn main() {
                 slack_penalty: Some(2000.0),
                 throughput_bonus: 300.0,
             };
-            let bnb = BnbConfig {
+            let warm_cfg = BnbConfig {
                 max_nodes: 8_000,
                 time_limit_s: 10.0,
                 ..Default::default()
             };
-            let (model, _, _) = build_problem1(&input, &bnb);
+            let cold_cfg = BnbConfig {
+                auto_warm_start: false,
+                ..warm_cfg.clone()
+            };
+            let (model, _, _) = build_problem1(&input, &warm_cfg);
             let t0 = std::time::Instant::now();
-            let sol = solve_problem1(&input, &bnb);
-            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let warm = solve_problem1(&input, &warm_cfg);
+            let ms_w = t0.elapsed().as_secs_f64() * 1e3;
+            let t1 = std::time::Instant::now();
+            let cold = solve_problem1(&input, &cold_cfg);
+            let ms_c = t1.elapsed().as_secs_f64() * 1e3;
+            total_warm_nodes += warm.nodes;
+            total_cold_nodes += cold.nodes;
+            let piv_per_node = warm.lp_pivots as f64 / warm.nodes.max(1) as f64;
             println!(
-                "{:>5} {:>10} {:>7} {:>8} {:>8} {:>8.2} {:>12.1} {:>10?}",
+                "{:>5} {:>10} {:>7} {:>8} {:>8} {:>8} {:>9.1} {:>10.1} {:>10.1} {:>8.2} {:>10?}",
                 n_jobs,
                 per_type * 6,
                 model.n_vars(),
                 model.n_constraints(),
-                sol.nodes,
-                sol.gap * 100.0,
-                ms,
-                sol.status
+                warm.nodes,
+                cold.nodes,
+                piv_per_node,
+                ms_w,
+                ms_c,
+                warm.gap * 100.0,
+                warm.status
             );
         }
     }
+    println!(
+        "# total nodes explored: warm {total_warm_nodes} vs cold {total_cold_nodes} \
+         ({:.1}% saved by the greedy incumbent)",
+        100.0 * (1.0 - total_warm_nodes as f64 / total_cold_nodes.max(1) as f64)
+    );
 }

@@ -3,10 +3,18 @@
 //! throughput estimates), pairing onto the fastest solo host once the
 //! cluster fills. This is the heterogeneity-aware-but-energy-oblivious
 //! policy a throughput-maximizing scheduler approximates.
+//!
+//! This module also hosts [`greedy_incumbent`]: the energy-aware greedy
+//! packing that seeds the ILP's branch-and-bound with its first
+//! incumbent (the warm start of `ilp::problem1::solve_problem1`).
+
+use std::collections::HashMap;
 
 use crate::cluster::{AccelId, Cluster, Placement};
 use crate::coordinator::Scheduler;
-use crate::workload::Combo;
+use crate::ilp::model::{Model, VarId};
+use crate::ilp::problem1::Problem1Input;
+use crate::workload::{AccelType, Combo, JobId, JobSpec};
 use crate::Result;
 
 #[derive(Default)]
@@ -56,11 +64,65 @@ impl Scheduler for GreedyScheduler {
     }
 }
 
+/// Greedy warm start for Problem 1: each job solo on the
+/// cheapest-energy instance type that still has capacity and meets its
+/// SLO (falling back to the fastest remaining type, then to slack).
+/// Seeds B&B with an incumbent so pruning bites immediately.
+///
+/// Returns `None` when no feasible greedy assignment exists — in the
+/// hard formulation (no slack variables) that happens whenever some job
+/// cannot meet its SLO solo, and the solver then starts cold.
+pub fn greedy_incumbent(
+    input: &Problem1Input,
+    model: &Model,
+    cols: &[(AccelType, Combo, VarId)],
+    slacks: &HashMap<JobId, (Option<VarId>, Option<VarId>)>,
+) -> Option<Vec<f64>> {
+    let mut x = vec![0.0f64; model.n_vars()];
+    let mut remaining: HashMap<AccelType, u32> = input.accel_counts.clone();
+    // hardest SLOs first
+    let mut jobs: Vec<&JobSpec> = input.jobs.iter().collect();
+    jobs.sort_by(|a, b| b.min_throughput.partial_cmp(&a.min_throughput).unwrap());
+    for j in jobs {
+        let solo = Combo::Solo(j.id);
+        // candidate types sorted by the energy coefficient of the solo col
+        let mut cands: Vec<(f64, AccelType, VarId, f64)> = cols
+            .iter()
+            .filter(|(a, c, _)| *c == solo && remaining.get(a).copied().unwrap_or(0) > 0)
+            .map(|(a, c, v)| {
+                let t = (input.throughput)(*a, j.id, c);
+                (model.vars[v.0].obj, *a, *v, t)
+            })
+            .collect();
+        cands.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        let pick = cands
+            .iter()
+            .find(|(_, _, _, t)| *t >= j.min_throughput)
+            .or_else(|| cands.iter().max_by(|a, b| a.3.partial_cmp(&b.3).unwrap()));
+        match pick {
+            Some(&(_, a, v, t)) => {
+                x[v.0] = 1.0;
+                *remaining.get_mut(&a).unwrap() -= 1;
+                if t < j.min_throughput {
+                    let (_, st) = slacks[&j.id];
+                    x[st?.0] = (j.min_throughput - t).min(model.vars[st?.0].ub);
+                }
+            }
+            None => {
+                let (sc, st) = slacks[&j.id];
+                x[sc?.0] = 1.0;
+                x[st?.0] = model.vars[st?.0].ub;
+            }
+        }
+    }
+    model.is_feasible(&x, 1e-6).then_some(x)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::ClusterSpec;
-    use crate::workload::{AccelType, JobId, JobSpec, ModelFamily};
+    use crate::workload::ModelFamily;
 
     fn job(id: u32) -> JobSpec {
         JobSpec {

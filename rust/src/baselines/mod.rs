@@ -12,6 +12,6 @@ pub mod greedy;
 pub mod oracle;
 pub mod random;
 
-pub use greedy::GreedyScheduler;
+pub use greedy::{greedy_incumbent, GreedyScheduler};
 pub use oracle::OracleScheduler;
 pub use random::RandomScheduler;

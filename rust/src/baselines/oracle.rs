@@ -63,7 +63,8 @@ mod tests {
             },
             &oracle,
         );
-        let mut driver = SimDriver::new(ClusterSpec::balanced(1), oracle.clone(), trace, 0.0, 15.0, 2);
+        let mut driver =
+            SimDriver::new(ClusterSpec::balanced(1), oracle.clone(), trace, 0.0, 15.0, 2);
         let mut sched = OracleScheduler::new(oracle, OptimizerConfig::default());
         let report = driver.run(&mut sched).unwrap();
         assert_eq!(report.jobs_completed, 5);

@@ -96,13 +96,22 @@ impl Default for EstimatorConfig {
 #[derive(Debug, Clone)]
 pub struct OptimizerConfig {
     pub max_pairs_per_job: usize,
+    /// Branch-and-bound node budget (anytime cutoff; the search degrades
+    /// gracefully to the warm-start incumbent when it trips).
     pub max_nodes: usize,
+    /// Branch-and-bound wall-clock budget in seconds.
     pub time_limit_s: f64,
     /// SLO slack penalty (soft constraints; see problem1.rs).
     pub slack_penalty: f64,
     /// Lagrangian throughput bonus λ (see problem1.rs; 0 = the paper's
     /// literal instantaneous-power objective).
     pub throughput_bonus: f64,
+    /// Seed branch-and-bound with the greedy incumbent from
+    /// `baselines::greedy` (strictly fewer explored nodes; disable only
+    /// for solver benchmarking).
+    pub warm_start: bool,
+    /// Node-selection strategy for the branch-and-bound frontier.
+    pub node_selection: crate::ilp::NodeSelection,
 }
 
 impl Default for OptimizerConfig {
@@ -118,6 +127,8 @@ impl Default for OptimizerConfig {
             time_limit_s: 2.0,
             slack_penalty: 2000.0,
             throughput_bonus: 300.0,
+            warm_start: true,
+            node_selection: crate::ilp::NodeSelection::BestBound,
         }
     }
 }
@@ -231,6 +242,14 @@ impl ExperimentConfig {
             if let Some(v) = o.get("throughput_bonus") {
                 cfg.optimizer.throughput_bonus = v.as_f64().unwrap_or(300.0);
             }
+            if let Some(v) = o.get("warm_start") {
+                cfg.optimizer.warm_start = v.as_bool().unwrap_or(true);
+            }
+            if let Some(v) = o.get("node_selection") {
+                let key = v.as_str().unwrap_or("best-bound");
+                cfg.optimizer.node_selection = crate::ilp::NodeSelection::from_key(key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown node_selection {key:?}"))?;
+            }
         }
         if let Some(v) = j.get("monitor_interval_s") {
             cfg.monitor_interval_s = v.as_f64().unwrap_or(30.0);
@@ -295,6 +314,8 @@ impl ExperimentConfig {
                     ("time_limit_s", self.optimizer.time_limit_s.into()),
                     ("slack_penalty", self.optimizer.slack_penalty.into()),
                     ("throughput_bonus", self.optimizer.throughput_bonus.into()),
+                    ("warm_start", self.optimizer.warm_start.into()),
+                    ("node_selection", self.optimizer.node_selection.key().into()),
                 ]),
             ),
             ("monitor_interval_s", self.monitor_interval_s.into()),
@@ -355,6 +376,23 @@ mod tests {
         assert_eq!(Arch::Ff.key(), "ff");
         assert_eq!(Arch::from_key("transformer").unwrap(), Arch::Transformer);
         assert!(Arch::from_key("mlp").is_err());
+    }
+
+    #[test]
+    fn optimizer_solver_knobs_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.warm_start = false;
+        cfg.optimizer.node_selection = crate::ilp::NodeSelection::DepthFirst;
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert!(!back.optimizer.warm_start);
+        assert_eq!(back.optimizer.node_selection, crate::ilp::NodeSelection::DepthFirst);
+        // defaults survive omission; junk strategy names are rejected
+        let d = ExperimentConfig::from_json("{}").unwrap();
+        assert!(d.optimizer.warm_start);
+        assert_eq!(d.optimizer.node_selection, crate::ilp::NodeSelection::BestBound);
+        assert!(
+            ExperimentConfig::from_json(r#"{"optimizer": {"node_selection": "bogus"}}"#).is_err()
+        );
     }
 
     #[test]

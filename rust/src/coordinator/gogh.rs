@@ -86,7 +86,11 @@ pub struct GoghScheduler {
 impl GoghScheduler {
     /// Build over an engine, seeding history + bootstrap-training the
     /// estimators from the Catalog.
-    pub fn new(engine: &Engine, oracle_for_history: &ThroughputOracle, options: GoghOptions) -> Result<Self> {
+    pub fn new(
+        engine: &Engine,
+        oracle_for_history: &ThroughputOracle,
+        options: GoghOptions,
+    ) -> Result<Self> {
         let p1 = Estimator::new(engine, &format!("p1_{}", options.estimator.p1_arch.key()))?;
         let p2 = Estimator::new(engine, &format!("p2_{}", options.estimator.p2_arch.key()))?;
         let mut s = Self {

@@ -181,7 +181,12 @@ pub fn p1_samples_from_catalog(catalog: &Catalog, n: usize, seed: u64) -> Vec<Sa
 /// accel types yields a transfer tuple (observe a1 → predict a2), with
 /// synthetic stale estimates perturbing the measured values (the
 /// estimate-error distribution a deployed P1 produces).
-pub fn p2_samples_from_catalog(catalog: &Catalog, n: usize, est_sigma: f64, seed: u64) -> Vec<Sample> {
+pub fn p2_samples_from_catalog(
+    catalog: &Catalog,
+    n: usize,
+    est_sigma: f64,
+    seed: u64,
+) -> Vec<Sample> {
     let mut rng = Rng::seed_from_u64(seed ^ 0x92);
     let jobs: Vec<JobId> = {
         let mut v: Vec<JobId> = catalog.known_jobs().copied().collect();

@@ -18,6 +18,10 @@ pub struct Optimizer {
     pub solves: usize,
     pub solve_seconds: f64,
     pub total_nodes: usize,
+    /// cumulative simplex pivots across every solve (per-node cost)
+    pub total_lp_pivots: u64,
+    /// solves that started from a greedy/explicit incumbent
+    pub warm_started_solves: usize,
 }
 
 impl Optimizer {
@@ -27,6 +31,8 @@ impl Optimizer {
             solves: 0,
             solve_seconds: 0.0,
             total_nodes: 0,
+            total_lp_pivots: 0,
+            warm_started_solves: 0,
         }
     }
 
@@ -35,6 +41,16 @@ impl Optimizer {
             0.0
         } else {
             1000.0 * self.solve_seconds / self.solves as f64
+        }
+    }
+
+    /// Mean simplex pivots per explored branch-and-bound node — the
+    /// per-node cost metric the §Perf benches track.
+    pub fn mean_pivots_per_node(&self) -> f64 {
+        if self.total_nodes == 0 {
+            0.0
+        } else {
+            self.total_lp_pivots as f64 / self.total_nodes as f64
         }
     }
 
@@ -67,6 +83,8 @@ impl Optimizer {
         let bnb = BnbConfig {
             max_nodes: self.cfg.max_nodes,
             time_limit_s: self.cfg.time_limit_s,
+            auto_warm_start: self.cfg.warm_start,
+            node_selection: self.cfg.node_selection,
             ..Default::default()
         };
         let t0 = std::time::Instant::now();
@@ -74,6 +92,8 @@ impl Optimizer {
         self.solve_seconds += t0.elapsed().as_secs_f64();
         self.solves += 1;
         self.total_nodes += sol.nodes;
+        self.total_lp_pivots += sol.lp_pivots;
+        self.warm_started_solves += sol.warm_started as usize;
 
         let placement = bind_instances(cluster, &sol)?;
         Ok((placement, sol))
@@ -178,6 +198,9 @@ mod tests {
             assert!(p.is_placed(JobId(i)));
         }
         assert!(opt.mean_solve_ms() > 0.0);
+        // solver stats: greedy incumbent seeded (soft mode), pivots tracked
+        assert_eq!(opt.warm_started_solves, opt.solves);
+        assert!(opt.mean_pivots_per_node() > 0.0);
     }
 
     #[test]

@@ -1,18 +1,56 @@
-//! Best-first branch-and-bound for integer programs.
+//! Branch-and-bound for integer programs.
 //!
 //! Bounds come from the simplex LP relaxation; branching is
-//! most-fractional; a floor/ceil rounding heuristic seeds incumbents
-//! early so the gap closes fast on the allocation problems GOGH emits
-//! (which have strong LP relaxations — most x are integral at the root).
+//! most-fractional; a floor/ceil rounding heuristic tightens incumbents
+//! at every node. Two node-selection strategies are available
+//! ([`NodeSelection`]): best-bound (default — minimal proved-optimality
+//! tree) and depth-first (fast feasible points under tight budgets).
+//!
+//! All node LPs run through one shared [`SimplexWorkspace`], so a solve
+//! allocates the dense tableau once and every node after the root costs
+//! only pivots. Seeding the incumbent (via [`BnbConfig::warm_start`], or
+//! the greedy seed `problem1::solve_problem1` derives from
+//! `baselines::greedy`) lets pruning bite from the first node — the
+//! difference is measured by `benches/ilp_scaling.rs` and asserted by
+//! `tests/warm_start.rs`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use super::model::{Model, ObjSense, VarKind};
-use super::simplex::{solve_lp, LpStatus};
+use super::simplex::{LpStatus, SimplexWorkspace};
 
 const INT_TOL: f64 = 1e-6;
+
+/// Node-selection strategy for the search frontier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeSelection {
+    /// Expand the open node with the best LP bound first (default):
+    /// minimizes the tree needed to *prove* optimality.
+    #[default]
+    BestBound,
+    /// LIFO dive: reaches integer-feasible leaves quickly, useful when a
+    /// node budget cuts the search and any good incumbent is the goal.
+    DepthFirst,
+}
+
+impl NodeSelection {
+    pub fn key(self) -> &'static str {
+        match self {
+            NodeSelection::BestBound => "best-bound",
+            NodeSelection::DepthFirst => "depth-first",
+        }
+    }
+
+    pub fn from_key(k: &str) -> Option<Self> {
+        match k {
+            "best-bound" => Some(NodeSelection::BestBound),
+            "depth-first" => Some(NodeSelection::DepthFirst),
+            _ => None,
+        }
+    }
+}
 
 /// Solver limits / options.
 #[derive(Debug, Clone)]
@@ -24,6 +62,10 @@ pub struct BnbConfig {
     /// optional warm-start assignment (must be feasible) used as the
     /// initial incumbent.
     pub warm_start: Option<Vec<f64>>,
+    /// allow the problem layer (`solve_problem1`) to derive a greedy
+    /// incumbent automatically when `warm_start` is `None`.
+    pub auto_warm_start: bool,
+    pub node_selection: NodeSelection,
 }
 
 impl Default for BnbConfig {
@@ -33,6 +75,8 @@ impl Default for BnbConfig {
             time_limit_s: 10.0,
             rel_gap: 1e-6,
             warm_start: None,
+            auto_warm_start: true,
+            node_selection: NodeSelection::BestBound,
         }
     }
 }
@@ -58,6 +102,10 @@ pub struct BnbResult {
     pub bound: f64,
     pub nodes: usize,
     pub lp_iterations: usize,
+    /// total simplex pivots across every node LP (per-node cost metric)
+    pub lp_pivots: u64,
+    /// whether a feasible warm-start incumbent seeded the search
+    pub warm_started: bool,
 }
 
 impl BnbResult {
@@ -71,7 +119,7 @@ impl BnbResult {
 }
 
 struct Node {
-    bound: f64, // LP relaxation objective (min-sense)
+    bound: f64, // LP relaxation objective of the parent (min-sense)
     bounds: Vec<(f64, f64)>,
     depth: usize,
 }
@@ -98,6 +146,46 @@ impl Ord for Node {
     }
 }
 
+/// Open-node container: a heap for best-bound, a stack for depth-first.
+enum Frontier {
+    Best(BinaryHeap<Node>),
+    Dfs(Vec<Node>),
+}
+
+impl Frontier {
+    fn new(sel: NodeSelection) -> Self {
+        match sel {
+            NodeSelection::BestBound => Frontier::Best(BinaryHeap::new()),
+            NodeSelection::DepthFirst => Frontier::Dfs(vec![]),
+        }
+    }
+
+    fn push(&mut self, n: Node) {
+        match self {
+            Frontier::Best(h) => h.push(n),
+            Frontier::Dfs(v) => v.push(n),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Node> {
+        match self {
+            Frontier::Best(h) => h.pop(),
+            Frontier::Dfs(v) => v.pop(),
+        }
+    }
+
+    /// Smallest stored bound among open nodes (min-sense).
+    fn min_bound(&self) -> Option<f64> {
+        match self {
+            Frontier::Best(h) => h.peek().map(|n| n.bound),
+            Frontier::Dfs(v) => v
+                .iter()
+                .map(|n| n.bound)
+                .min_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal)),
+        }
+    }
+}
+
 /// Solve `model` to integrality.
 pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
     let start = Instant::now();
@@ -105,18 +193,20 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
     // Internally work with min-sense objective values.
     let to_min = |v: f64| if min_sense { v } else { -v };
 
+    let mut ws = SimplexWorkspace::new();
     let mut lp_iterations = 0usize;
     let mut nodes = 0usize;
 
     let mut incumbent: Option<(Vec<f64>, f64)> = None; // (x, min-sense obj)
-    if let Some(ws) = &cfg.warm_start {
-        if model.is_feasible(ws, 1e-6) {
-            incumbent = Some((ws.clone(), to_min(model.objective_value(ws))));
+    if let Some(w) = &cfg.warm_start {
+        if model.is_feasible(w, 1e-6) {
+            incumbent = Some((w.clone(), to_min(model.objective_value(w))));
         }
     }
+    let warm_started = incumbent.is_some();
 
     let root_bounds: Vec<(f64, f64)> = model.vars.iter().map(|v| (v.lb, v.ub)).collect();
-    let root = solve_lp(model, Some(&root_bounds));
+    let root = ws.solve(model, Some(&root_bounds));
     lp_iterations += root.iterations;
     match root.status {
         LpStatus::Infeasible => {
@@ -127,6 +217,8 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
                 bound: f64::INFINITY,
                 nodes: 1,
                 lp_iterations,
+                lp_pivots: ws.total_pivots(),
+                warm_started,
             }
         }
         LpStatus::Unbounded => {
@@ -137,13 +229,16 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
                 bound: f64::NEG_INFINITY,
                 nodes: 1,
                 lp_iterations,
+                lp_pivots: ws.total_pivots(),
+                warm_started,
             }
         }
         LpStatus::Optimal => {}
     }
 
-    let mut heap = BinaryHeap::new();
-    heap.push(Node {
+    let best_first = cfg.node_selection == NodeSelection::BestBound;
+    let mut frontier = Frontier::new(cfg.node_selection);
+    frontier.push(Node {
         bound: to_min(root.objective),
         bounds: root_bounds,
         depth: 0,
@@ -152,28 +247,41 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
     let mut best_bound = to_min(root.objective);
     let mut hit_limit = false;
 
-    while let Some(node) = heap.pop() {
+    while let Some(node) = frontier.pop() {
         nodes += 1;
-        best_bound = node.bound;
+        if best_first {
+            // heap pop order makes this the global lower bound
+            best_bound = node.bound;
+        }
 
         // prune against incumbent
         if let Some((_, inc)) = &incumbent {
             if node.bound >= *inc - INT_TOL {
-                best_bound = *inc;
-                break; // best-first: all remaining nodes are worse
+                if best_first {
+                    best_bound = *inc;
+                    break; // best-first: all remaining nodes are worse
+                }
+                continue; // depth-first: other open nodes may still matter
             }
             let gap = (inc - node.bound).abs() / inc.abs().max(1e-9);
-            if gap < cfg.rel_gap {
+            if best_first && gap < cfg.rel_gap {
                 best_bound = node.bound;
                 break;
             }
         }
         if nodes > cfg.max_nodes || start.elapsed().as_secs_f64() > cfg.time_limit_s {
+            if !best_first {
+                // global bound = the node being discarded ∪ the open set
+                // (computed only here — a per-pop scan would be O(n²))
+                best_bound = frontier
+                    .min_bound()
+                    .map_or(node.bound, |b| b.min(node.bound));
+            }
             hit_limit = true;
             break;
         }
 
-        let lp = solve_lp(model, Some(&node.bounds));
+        let lp = ws.solve(model, Some(&node.bounds));
         lp_iterations += lp.iterations;
         if lp.status != LpStatus::Optimal {
             continue; // infeasible subtree
@@ -242,7 +350,7 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
                 hi[bi].0 = xi.ceil();
                 for child in [lo, hi] {
                     if child[bi].0 <= child[bi].1 + INT_TOL {
-                        heap.push(Node {
+                        frontier.push(Node {
                             bound: lp_obj,
                             bounds: child,
                             depth: node.depth + 1,
@@ -255,9 +363,16 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
 
     match incumbent {
         Some((x, obj_min)) => {
-            let proved = heap
-                .peek()
-                .map_or(true, |n| n.bound >= obj_min - INT_TOL)
+            // On a budget break the popped-but-unprocessed node is no
+            // longer in the frontier, so its bound must come from
+            // `best_bound` — otherwise a truncated search with an empty
+            // frontier would be misreported as proved optimal.
+            let open_bound = if hit_limit {
+                Some(best_bound)
+            } else {
+                frontier.min_bound()
+            };
+            let proved = open_bound.map_or(true, |b| b >= obj_min - INT_TOL)
                 || (obj_min - best_bound).abs() / obj_min.abs().max(1e-9) < cfg.rel_gap;
             let objective = if min_sense { obj_min } else { -obj_min };
             let bound = if min_sense { best_bound } else { -best_bound };
@@ -268,6 +383,8 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
                 bound,
                 nodes,
                 lp_iterations,
+                lp_pivots: ws.total_pivots(),
+                warm_started,
             }
         }
         None => BnbResult {
@@ -284,6 +401,8 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
             bound: if min_sense { best_bound } else { -best_bound },
             nodes,
             lp_iterations,
+            lp_pivots: ws.total_pivots(),
+            warm_started,
         },
     }
 }
@@ -306,6 +425,8 @@ mod tests {
         assert_eq!(r.status, BnbStatus::Optimal);
         assert!((r.objective - 20.0).abs() < 1e-6, "{}", r.objective);
         assert_eq!(r.x, vec![0.0, 1.0, 1.0]);
+        assert!(r.lp_pivots > 0);
+        assert!(!r.warm_started);
     }
 
     #[test]
@@ -361,6 +482,23 @@ mod tests {
         };
         let r = solve_ilp(&m, &cfg);
         assert!(r.objective >= 1.0 - 1e-9);
+        assert!(r.warm_started);
+    }
+
+    #[test]
+    fn infeasible_warm_start_is_rejected() {
+        let mut m = Model::new(ObjSense::Maximize);
+        let a = m.add_binary("a", 1.0);
+        let b = m.add_binary("b", 1.0);
+        m.add_constraint("c", vec![(a, 1.0), (b, 1.0)], Sense::Le, 1.0);
+        let cfg = BnbConfig {
+            warm_start: Some(vec![1.0, 1.0]), // violates the constraint
+            ..Default::default()
+        };
+        let r = solve_ilp(&m, &cfg);
+        assert!(!r.warm_started);
+        assert_eq!(r.status, BnbStatus::Optimal);
+        assert!((r.objective - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -374,5 +512,42 @@ mod tests {
         assert_eq!(r.status, BnbStatus::Optimal);
         assert!((r.objective - 2.0).abs() < 1e-6);
         assert!((r.x[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depth_first_finds_the_same_optimum() {
+        for sense in [ObjSense::Minimize, ObjSense::Maximize] {
+            let mut m = Model::new(sense);
+            let vars: Vec<_> = (0..6)
+                .map(|i| m.add_binary(format!("x{i}"), (i as f64) - 2.5))
+                .collect();
+            let terms: Vec<_> = vars.iter().map(|&v| (v, 2.0)).collect();
+            m.add_constraint("w", terms.clone(), Sense::Le, 7.0);
+            m.add_constraint("lo", terms, Sense::Ge, 2.0);
+            let best = solve_ilp(&m, &BnbConfig::default());
+            let dfs = solve_ilp(
+                &m,
+                &BnbConfig {
+                    node_selection: NodeSelection::DepthFirst,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(best.status, BnbStatus::Optimal);
+            assert_eq!(dfs.status, BnbStatus::Optimal);
+            assert!(
+                (best.objective - dfs.objective).abs() < 1e-9,
+                "{} vs {}",
+                best.objective,
+                dfs.objective
+            );
+        }
+    }
+
+    #[test]
+    fn node_selection_keys_roundtrip() {
+        for sel in [NodeSelection::BestBound, NodeSelection::DepthFirst] {
+            assert_eq!(NodeSelection::from_key(sel.key()), Some(sel));
+        }
+        assert_eq!(NodeSelection::from_key("breadth-first"), None);
     }
 }

@@ -5,10 +5,14 @@
 //!   integrality, linear constraints with ≤ / ≥ / = senses, min/max
 //!   objective.
 //! * [`simplex`] — dense two-phase primal simplex for the LP
-//!   relaxations (Dantzig pricing with Bland anti-cycling fallback).
-//! * [`branch_bound`] — best-first branch-and-bound for the integer
-//!   program, with LP bounding, most-fractional branching, a rounding
-//!   primal heuristic, and node/gap limits.
+//!   relaxations (Dantzig pricing with Bland anti-cycling fallback);
+//!   [`SimplexWorkspace`] reuses every scratch buffer across the
+//!   thousands of bound-only-differing LPs a B&B solve issues.
+//! * [`branch_bound`] — branch-and-bound for the integer program, with
+//!   LP bounding, most-fractional branching, a rounding primal
+//!   heuristic, configurable node selection ([`NodeSelection`]),
+//!   warm-start incumbent seeding, and node/time/gap budgets that
+//!   degrade gracefully to the incumbent.
 //! * [`problem1`] — builds the paper's Problem 1 (objective 2a,
 //!   constraints 2b–2f) over the combination universe 𝒞.
 
@@ -17,7 +21,7 @@ pub mod model;
 pub mod problem1;
 pub mod simplex;
 
-pub use branch_bound::{solve_ilp, BnbConfig, BnbResult, BnbStatus};
+pub use branch_bound::{solve_ilp, BnbConfig, BnbResult, BnbStatus, NodeSelection};
 pub use model::{Constraint, Model, ObjSense, Sense, VarId, VarKind};
 pub use problem1::{build_problem1, AllocationSolution, Problem1Input};
-pub use simplex::{solve_lp, LpResult, LpStatus};
+pub use simplex::{solve_lp, LpResult, LpStatus, SimplexWorkspace};

@@ -24,8 +24,9 @@ pub enum Sense {
 }
 
 /// Objective direction.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ObjSense {
+    #[default]
     Minimize,
     Maximize,
 }
@@ -56,12 +57,6 @@ pub struct Model {
     pub obj_sense: ObjSense,
 }
 
-impl Default for ObjSense {
-    fn default() -> Self {
-        ObjSense::Minimize
-    }
-}
-
 impl Model {
     pub fn new(sense: ObjSense) -> Self {
         Self {
@@ -72,7 +67,14 @@ impl Model {
     }
 
     /// Add a variable; returns its handle.
-    pub fn add_var(&mut self, name: impl Into<String>, lb: f64, ub: f64, kind: VarKind, obj: f64) -> VarId {
+    pub fn add_var(
+        &mut self,
+        name: impl Into<String>,
+        lb: f64,
+        ub: f64,
+        kind: VarKind,
+        obj: f64,
+    ) -> VarId {
         assert!(lb <= ub, "inconsistent bounds");
         self.vars.push(Variable {
             name: name.into(),

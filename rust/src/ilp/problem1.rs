@@ -71,6 +71,10 @@ pub struct AllocationSolution {
     pub nodes: usize,
     /// relative optimality gap at termination (0 = proved optimal)
     pub gap: f64,
+    /// total simplex pivots across every node LP (per-node cost metric)
+    pub lp_pivots: u64,
+    /// whether a greedy/explicit incumbent seeded the search
+    pub warm_started: bool,
 }
 
 /// Build the candidate combination universe 𝒞 (solos + pruned pairs).
@@ -108,7 +112,14 @@ pub fn candidate_combos(
 
 /// Build and solve Problem 1. Returns `None` only if the hard
 /// formulation is infeasible (use `slack_penalty` to avoid that).
-pub fn build_problem1(input: &Problem1Input, bnb: &BnbConfig) -> (Model, Vec<(AccelType, Combo, VarId)>, HashMap<JobId, (Option<VarId>, Option<VarId>)>) {
+pub fn build_problem1(
+    input: &Problem1Input,
+    bnb: &BnbConfig,
+) -> (
+    Model,
+    Vec<(AccelType, Combo, VarId)>,
+    HashMap<JobId, (Option<VarId>, Option<VarId>)>,
+) {
     let combos = candidate_combos(input.jobs, input.throughput, input.max_pairs_per_job);
     let mut model = Model::new(ObjSense::Minimize);
     let _ = bnb;
@@ -146,7 +157,13 @@ pub fn build_problem1(input: &Problem1Input, bnb: &BnbConfig) -> (Model, Vec<(Ac
     for j in input.jobs {
         let (mut cover_s, mut thr_s) = (None, None);
         if let Some(p) = input.slack_penalty {
-            cover_s = Some(model.add_var(format!("sc[{}]", j.id), 0.0, 1.0, VarKind::Continuous, 4.0 * p));
+            cover_s = Some(model.add_var(
+                format!("sc[{}]", j.id),
+                0.0,
+                1.0,
+                VarKind::Continuous,
+                4.0 * p,
+            ));
             thr_s = Some(model.add_var(
                 format!("st[{}]", j.id),
                 0.0,
@@ -207,68 +224,21 @@ pub fn build_problem1(input: &Problem1Input, bnb: &BnbConfig) -> (Model, Vec<(Ac
     (model, cols, slacks)
 }
 
-/// Greedy warm start: each job solo on the cheapest-energy instance
-/// type that still has capacity and meets its SLO (falling back to the
-/// fastest remaining type, then to slack). Seeds B&B with an incumbent
-/// so pruning bites immediately — without it the allocation trees at
-/// |J| ≥ 12 explore tens of thousands of nodes before the first
-/// feasible point (EXPERIMENTS.md §Perf).
-fn greedy_warm_start(
-    input: &Problem1Input,
-    model: &Model,
-    cols: &[(AccelType, Combo, VarId)],
-    slacks: &HashMap<JobId, (Option<VarId>, Option<VarId>)>,
-) -> Option<Vec<f64>> {
-    let mut x = vec![0.0f64; model.n_vars()];
-    let mut remaining: HashMap<AccelType, u32> = input.accel_counts.clone();
-    // hardest SLOs first
-    let mut jobs: Vec<&JobSpec> = input.jobs.iter().collect();
-    jobs.sort_by(|a, b| b.min_throughput.partial_cmp(&a.min_throughput).unwrap());
-    for j in jobs {
-        let solo = Combo::Solo(j.id);
-        // candidate types sorted by the energy coefficient of the solo col
-        let mut cands: Vec<(f64, AccelType, VarId, f64)> = cols
-            .iter()
-            .filter(|(a, c, _)| *c == solo && remaining.get(a).copied().unwrap_or(0) > 0)
-            .map(|(a, c, v)| {
-                let t = (input.throughput)(*a, j.id, c);
-                (model.vars[v.0].obj, *a, *v, t)
-            })
-            .collect();
-        cands.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
-        let pick = cands
-            .iter()
-            .find(|(_, _, _, t)| *t >= j.min_throughput)
-            .or_else(|| {
-                cands
-                    .iter()
-                    .max_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
-            });
-        match pick {
-            Some(&(_, a, v, t)) => {
-                x[v.0] = 1.0;
-                *remaining.get_mut(&a).unwrap() -= 1;
-                if t < j.min_throughput {
-                    let (_, st) = slacks[&j.id];
-                    x[st?.0] = (j.min_throughput - t).min(model.vars[st?.0].ub);
-                }
-            }
-            None => {
-                let (sc, st) = slacks[&j.id];
-                x[sc?.0] = 1.0;
-                x[st?.0] = model.vars[st?.0].ub;
-            }
-        }
-    }
-    model.is_feasible(&x, 1e-6).then_some(x)
-}
-
 /// Solve Problem 1 end-to-end and decode the solution.
+///
+/// When `bnb.auto_warm_start` is set (the default) and no explicit
+/// incumbent was supplied, the search is seeded from
+/// [`crate::baselines::greedy::greedy_incumbent`] — the energy-aware
+/// greedy packing of the `baselines` layer — so pruning bites from the
+/// first node. Without it the allocation trees at |J| ≥ 12 explore tens
+/// of thousands of nodes before the first feasible point (measured by
+/// `benches/ilp_scaling.rs`, asserted by `tests/warm_start.rs`).
 pub fn solve_problem1(input: &Problem1Input, bnb: &BnbConfig) -> AllocationSolution {
     let (model, cols, slacks) = build_problem1(input, bnb);
     let mut bnb = bnb.clone();
-    if bnb.warm_start.is_none() && input.slack_penalty.is_some() {
-        bnb.warm_start = greedy_warm_start(input, &model, &cols, &slacks);
+    if bnb.warm_start.is_none() && bnb.auto_warm_start {
+        bnb.warm_start =
+            crate::baselines::greedy::greedy_incumbent(input, &model, &cols, &slacks);
     }
     let r: BnbResult = solve_ilp(&model, &bnb);
     decode(&r, &cols, &slacks)
@@ -304,6 +274,8 @@ fn decode(
         status: r.status,
         nodes: r.nodes,
         gap: r.gap(),
+        lp_pivots: r.lp_pivots,
+        warm_started: r.warm_started,
     }
 }
 

@@ -10,6 +10,15 @@
 //! few hundred variables × a few hundred rows, where dense pivots are
 //! cache-friendly and beat a naive sparse implementation. The §Perf pass
 //! benchmarks pivot cost in `benches/ilp_scaling.rs`.
+//!
+//! ## Workspace reuse
+//!
+//! Branch-and-bound solves thousands of structurally identical LPs that
+//! differ only in variable bounds. [`SimplexWorkspace`] keeps every
+//! scratch buffer (tableau, basis, reduced-cost row, presolve maps, row
+//! build area) alive across solves, so the per-node cost is pivots, not
+//! allocator traffic. [`solve_lp`] remains the one-shot convenience
+//! wrapper over a throwaway workspace.
 
 use super::model::{Model, ObjSense, Sense};
 
@@ -33,266 +42,345 @@ pub struct LpResult {
     pub iterations: usize,
 }
 
-/// Solve the LP relaxation of `model`, with optional per-variable bound
-/// overrides (used by branch-and-bound to fix/branch variables).
+/// Flat-row metadata: coefficients live in `SimplexWorkspace::coefs`
+/// at `start..start + len` (one shared buffer, no per-row allocation).
+#[derive(Debug, Clone, Copy)]
+struct RowMeta {
+    start: usize,
+    len: usize,
+    sense: Sense,
+    rhs: f64,
+}
+
+/// Reusable scratch space for repeated LP solves (see module docs).
+#[derive(Debug, Default)]
+pub struct SimplexWorkspace {
+    /// dense tableau, `m × width`, row-major
+    t: Vec<f64>,
+    basis: Vec<usize>,
+    /// reduced-cost row (phase 1, then rebuilt for phase 2)
+    z: Vec<f64>,
+    /// original variable index -> compact column (usize::MAX = fixed)
+    compact: Vec<usize>,
+    /// compact column -> original variable index
+    originals: Vec<usize>,
+    /// phase-2 costs over compact columns
+    cost: Vec<f64>,
+    /// flat row-coefficient buffer (indexed by `RowMeta`)
+    coefs: Vec<(usize, f64)>,
+    rows: Vec<RowMeta>,
+    art_rows: Vec<usize>,
+    total_pivots: u64,
+    solves: u64,
+}
+
+impl SimplexWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cumulative pivot count over every solve through this workspace —
+    /// the per-node cost metric `benches/ilp_scaling.rs` reports.
+    pub fn total_pivots(&self) -> u64 {
+        self.total_pivots
+    }
+
+    /// Number of LP solves performed through this workspace.
+    pub fn solves(&self) -> u64 {
+        self.solves
+    }
+
+    /// Solve the LP relaxation of `model`, with optional per-variable
+    /// bound overrides (used by branch-and-bound to fix/branch
+    /// variables). Identical semantics to [`solve_lp`]; buffers are
+    /// reused across calls.
+    pub fn solve(&mut self, model: &Model, bounds: Option<&[(f64, f64)]>) -> LpResult {
+        self.solves += 1;
+        let n = model.n_vars();
+        let get_bounds = |i: usize| -> (f64, f64) {
+            match bounds {
+                Some(b) => b[i],
+                None => (model.vars[i].lb, model.vars[i].ub),
+            }
+        };
+
+        // Quick inconsistency check (branching can cross bounds).
+        for i in 0..n {
+            let (lb, ub) = get_bounds(i);
+            if lb > ub + EPS {
+                return infeasible(0);
+            }
+        }
+
+        // Shift x_i = lb_i + x'_i with x' >= 0; finite ub becomes a row.
+        // Objective: always minimize internally.
+        let obj_sign = match model.obj_sense {
+            ObjSense::Minimize => 1.0,
+            ObjSense::Maximize => -1.0,
+        };
+
+        // Presolve: variables with lb == ub are FIXED — they contribute
+        // only constants. Eliminating them (no column, no bound row) is
+        // the single biggest lever for branch-and-bound performance:
+        // deep B&B nodes fix many integers, and before this presolve
+        // each one cost an equality row + an artificial + phase-1 pivots.
+        self.compact.clear();
+        self.originals.clear();
+        for i in 0..n {
+            let (lb, ub) = get_bounds(i);
+            if ub.is_finite() && ub - lb <= EPS {
+                self.compact.push(usize::MAX);
+            } else {
+                self.compact.push(self.originals.len());
+                self.originals.push(i);
+            }
+        }
+        let nf = self.originals.len(); // free (non-fixed) variable count
+        self.cost.clear();
+        for &i in &self.originals {
+            self.cost.push(obj_sign * model.vars[i].obj);
+        }
+
+        // Build rows over compact columns: (coefs, sense, rhs) after the
+        // shift. Fixed variables' contributions fold into the rhs.
+        self.coefs.clear();
+        self.rows.clear();
+        for c in &model.constraints {
+            let mut rhs = c.rhs;
+            let start = self.coefs.len();
+            for &(v, coef) in &c.terms {
+                rhs -= coef * get_bounds(v.0).0;
+                if self.compact[v.0] != usize::MAX {
+                    self.coefs.push((self.compact[v.0], coef));
+                }
+            }
+            let len = self.coefs.len() - start;
+            // constraint over only-fixed variables: check it directly
+            if len == 0 {
+                let ok = match c.sense {
+                    Sense::Le => 0.0 <= rhs + EPS,
+                    Sense::Ge => 0.0 >= rhs - EPS,
+                    Sense::Eq => rhs.abs() <= EPS,
+                };
+                if !ok {
+                    return infeasible(0);
+                }
+                continue;
+            }
+            self.rows.push(RowMeta {
+                start,
+                len,
+                sense: c.sense,
+                rhs,
+            });
+        }
+        for ci in 0..nf {
+            let (lb, ub) = get_bounds(self.originals[ci]);
+            if ub.is_finite() {
+                let start = self.coefs.len();
+                self.coefs.push((ci, 1.0));
+                self.rows.push(RowMeta {
+                    start,
+                    len: 1,
+                    sense: Sense::Le,
+                    rhs: ub - lb,
+                });
+            }
+        }
+        let n = nf; // from here on, work in the compact space
+
+        let m = self.rows.len();
+        // Column layout: [structural 0..n | slack/surplus | artificials]
+        // + RHS. Count extras.
+        let mut n_slack = 0;
+        let mut n_art = 0;
+        for r in &self.rows {
+            let rhs_neg = r.rhs < -EPS;
+            match effective_sense(r.sense, rhs_neg) {
+                Sense::Le => n_slack += 1,
+                Sense::Ge => {
+                    n_slack += 1;
+                    n_art += 1;
+                }
+                Sense::Eq => n_art += 1,
+            }
+        }
+        let total = n + n_slack + n_art;
+        let width = total + 1; // + RHS column
+        self.t.clear();
+        self.t.resize(m * width, 0.0);
+        self.basis.clear();
+        self.basis.resize(m, 0);
+        self.art_rows.clear();
+
+        let mut slack_col = n;
+        let mut art_col = n + n_slack;
+        for ri in 0..m {
+            let r = self.rows[ri];
+            let neg = r.rhs < -EPS;
+            let sgn = if neg { -1.0 } else { 1.0 };
+            for k in r.start..r.start + r.len {
+                let (ci, coef) = self.coefs[k];
+                self.t[ri * width + ci] += sgn * coef;
+            }
+            self.t[ri * width + total] = sgn * r.rhs;
+            match effective_sense(r.sense, neg) {
+                Sense::Le => {
+                    self.t[ri * width + slack_col] = 1.0;
+                    self.basis[ri] = slack_col;
+                    slack_col += 1;
+                }
+                Sense::Ge => {
+                    self.t[ri * width + slack_col] = -1.0;
+                    slack_col += 1;
+                    self.t[ri * width + art_col] = 1.0;
+                    self.basis[ri] = art_col;
+                    art_col += 1;
+                    self.art_rows.push(ri);
+                }
+                Sense::Eq => {
+                    self.t[ri * width + art_col] = 1.0;
+                    self.basis[ri] = art_col;
+                    art_col += 1;
+                    self.art_rows.push(ri);
+                }
+            }
+        }
+
+        let mut iterations = 0usize;
+
+        // ---- Phase 1: minimize sum of artificials.
+        if n_art > 0 {
+            // reduced costs z for the phase-1 objective (Σ artificial rows)
+            self.z.clear();
+            self.z.resize(width, 0.0);
+            for &ri in &self.art_rows {
+                for c in 0..width {
+                    self.z[c] += self.t[ri * width + c];
+                }
+            }
+            // artificial columns have cost 1 → track z_j - c_j
+            for a in (n + n_slack)..total {
+                self.z[a] -= 1.0;
+            }
+            let status = optimize(
+                &mut self.t,
+                &mut self.basis,
+                &mut self.z,
+                m,
+                total,
+                width,
+                &mut iterations,
+                Some(n + n_slack),
+                &mut self.total_pivots,
+            );
+            if status == LpStatus::Unbounded {
+                // phase-1 objective is bounded below by 0; cannot happen
+                unreachable!("phase 1 unbounded");
+            }
+            if self.z[total] > 1e-7 {
+                // Σ artificials > 0 at the phase-1 optimum → infeasible
+                // (z[total] carries c_B'B⁻¹b = the current objective value)
+                return infeasible(iterations);
+            }
+            // Drive any artificial still in the basis out (degenerate rows).
+            for ri in 0..m {
+                if self.basis[ri] >= n + n_slack {
+                    // find a non-artificial column with nonzero coef here;
+                    // a fully-zero row is redundant — leave the artificial
+                    // basic at 0.
+                    let col = (0..(n + n_slack)).find(|&c| self.t[ri * width + c].abs() > 1e-7);
+                    if let Some(c) = col {
+                        pivot(
+                            &mut self.t,
+                            &mut self.basis,
+                            ri,
+                            c,
+                            m,
+                            width,
+                            &mut self.z,
+                            &mut self.total_pivots,
+                        );
+                    }
+                }
+            }
+        }
+
+        // ---- Phase 2: minimize the real objective (artificials barred).
+        self.z.clear();
+        self.z.resize(width, 0.0);
+        // z_j = c_B' B^-1 A_j - c_j  computed from the current tableau:
+        for c in 0..width {
+            let mut acc = 0.0;
+            for ri in 0..m {
+                let b = self.basis[ri];
+                let cb = if b < n { self.cost[b] } else { 0.0 };
+                acc += cb * self.t[ri * width + c];
+            }
+            self.z[c] = acc;
+        }
+        for j in 0..n {
+            self.z[j] -= self.cost[j];
+        }
+        let status = optimize(
+            &mut self.t,
+            &mut self.basis,
+            &mut self.z,
+            m,
+            total,
+            width,
+            &mut iterations,
+            Some(n + n_slack),
+            &mut self.total_pivots,
+        );
+        if status == LpStatus::Unbounded {
+            return LpResult {
+                status,
+                x: vec![],
+                objective: f64::NEG_INFINITY,
+                iterations,
+            };
+        }
+
+        // Extract structural solution (un-shift; fixed vars sit at lb).
+        let mut x = vec![0.0f64; model.n_vars()];
+        for (i, xi) in x.iter_mut().enumerate() {
+            *xi = get_bounds(i).0;
+        }
+        for ri in 0..m {
+            if self.basis[ri] < n {
+                x[self.originals[self.basis[ri]]] += self.t[ri * width + total];
+            }
+        }
+        for xi in x.iter_mut() {
+            // clean numerical dust
+            if xi.abs() < 1e-11 {
+                *xi = 0.0;
+            }
+        }
+        let objective = model.objective_value(&x);
+        LpResult {
+            status: LpStatus::Optimal,
+            x,
+            objective,
+            iterations,
+        }
+    }
+}
+
+/// Solve the LP relaxation of `model` with a throwaway workspace.
 ///
 /// `bounds`: if `Some`, `bounds[i] = (lb, ub)` replaces the model's
 /// bounds for variable `i`.
 pub fn solve_lp(model: &Model, bounds: Option<&[(f64, f64)]>) -> LpResult {
-    let n = model.n_vars();
-    let get_bounds = |i: usize| -> (f64, f64) {
-        match bounds {
-            Some(b) => b[i],
-            None => (model.vars[i].lb, model.vars[i].ub),
-        }
-    };
+    SimplexWorkspace::new().solve(model, bounds)
+}
 
-    // Quick inconsistency check (branching can cross bounds).
-    for i in 0..n {
-        let (lb, ub) = get_bounds(i);
-        if lb > ub + EPS {
-            return LpResult {
-                status: LpStatus::Infeasible,
-                x: vec![],
-                objective: f64::INFINITY,
-                iterations: 0,
-            };
-        }
-    }
-
-    // Shift x_i = lb_i + x'_i with x' >= 0; finite ub becomes a row.
-    // Objective: always minimize internally.
-    let obj_sign = match model.obj_sense {
-        ObjSense::Minimize => 1.0,
-        ObjSense::Maximize => -1.0,
-    };
-
-    // Presolve: variables with lb == ub are FIXED — they contribute only
-    // constants. Eliminating them (no column, no bound row) is the
-    // single biggest lever for branch-and-bound performance: deep B&B
-    // nodes fix many integers, and before this presolve each one cost an
-    // equality row + an artificial + phase-1 pivots (EXPERIMENTS.md
-    // §Perf records the before/after).
-    let mut compact: Vec<usize> = Vec::with_capacity(n); // original -> compact (or usize::MAX)
-    let mut originals: Vec<usize> = Vec::with_capacity(n); // compact -> original
-    for i in 0..n {
-        let (lb, ub) = get_bounds(i);
-        if ub.is_finite() && ub - lb <= EPS {
-            compact.push(usize::MAX);
-        } else {
-            compact.push(originals.len());
-            originals.push(i);
-        }
-    }
-    let nf = originals.len(); // free (non-fixed) variable count
-    let cost: Vec<f64> = originals
-        .iter()
-        .map(|&i| obj_sign * model.vars[i].obj)
-        .collect();
-
-    // Build rows over compact columns: (coefs, sense, rhs) after shift.
-    // Fixed variables' contributions fold into the rhs via the lb shift.
-    struct Row {
-        coefs: Vec<(usize, f64)>,
-        sense: Sense,
-        rhs: f64,
-    }
-    let mut rows: Vec<Row> = Vec::with_capacity(model.n_constraints() + nf);
-    for c in &model.constraints {
-        let mut rhs = c.rhs;
-        let mut coefs = Vec::with_capacity(c.terms.len());
-        for &(v, coef) in &c.terms {
-            rhs -= coef * get_bounds(v.0).0;
-            if compact[v.0] != usize::MAX {
-                coefs.push((compact[v.0], coef));
-            }
-        }
-        // constraint over only-fixed variables: check it directly
-        if coefs.is_empty() {
-            let ok = match c.sense {
-                Sense::Le => 0.0 <= rhs + EPS,
-                Sense::Ge => 0.0 >= rhs - EPS,
-                Sense::Eq => rhs.abs() <= EPS,
-            };
-            if !ok {
-                return LpResult {
-                    status: LpStatus::Infeasible,
-                    x: vec![],
-                    objective: f64::INFINITY,
-                    iterations: 0,
-                };
-            }
-            continue;
-        }
-        rows.push(Row {
-            coefs,
-            sense: c.sense,
-            rhs,
-        });
-    }
-    for (ci, &i) in originals.iter().enumerate() {
-        let (lb, ub) = get_bounds(i);
-        if ub.is_finite() {
-            rows.push(Row {
-                coefs: vec![(ci, 1.0)],
-                sense: Sense::Le,
-                rhs: ub - lb,
-            });
-        }
-    }
-    let n = nf; // from here on, work in the compact space
-
-    let m = rows.len();
-    // Column layout: [structural 0..n | slack/surplus | artificials] + RHS.
-    // Count extras.
-    let mut n_slack = 0;
-    let mut n_art = 0;
-    for r in &rows {
-        let rhs_neg = r.rhs < -EPS;
-        let sense = effective_sense(r.sense, rhs_neg);
-        match sense {
-            Sense::Le => n_slack += 1,
-            Sense::Ge => {
-                n_slack += 1;
-                n_art += 1;
-            }
-            Sense::Eq => n_art += 1,
-        }
-    }
-    let total = n + n_slack + n_art;
-    let width = total + 1; // + RHS column
-    let mut t = vec![0.0f64; m * width]; // tableau
-    let mut basis = vec![0usize; m];
-
-    let mut slack_col = n;
-    let mut art_col = n + n_slack;
-    let mut art_rows: Vec<usize> = vec![];
-    for (ri, r) in rows.iter().enumerate() {
-        let neg = r.rhs < -EPS;
-        let sgn = if neg { -1.0 } else { 1.0 };
-        let row = &mut t[ri * width..(ri + 1) * width];
-        for &(ci, k) in &r.coefs {
-            row[ci] += sgn * k;
-        }
-        row[total] = sgn * r.rhs;
-        match effective_sense(r.sense, neg) {
-            Sense::Le => {
-                row[slack_col] = 1.0;
-                basis[ri] = slack_col;
-                slack_col += 1;
-            }
-            Sense::Ge => {
-                row[slack_col] = -1.0;
-                slack_col += 1;
-                row[art_col] = 1.0;
-                basis[ri] = art_col;
-                art_col += 1;
-                art_rows.push(ri);
-            }
-            Sense::Eq => {
-                row[art_col] = 1.0;
-                basis[ri] = art_col;
-                art_col += 1;
-                art_rows.push(ri);
-            }
-        }
-    }
-
-    let mut iterations = 0usize;
-
-    // ---- Phase 1: minimize sum of artificials.
-    if n_art > 0 {
-        // reduced costs z for phase-1 objective (sum of artificial rows)
-        let mut z = vec![0.0f64; width];
-        for &ri in &art_rows {
-            for c in 0..width {
-                z[c] += t[ri * width + c];
-            }
-        }
-        // artificial columns have cost 1 → their reduced cost is z - 1... we
-        // track z_j - c_j: for artificials subtract 1.
-        for a in (n + n_slack)..total {
-            z[a] -= 1.0;
-        }
-        let status = optimize(&mut t, &mut basis, &mut z, m, total, width, &mut iterations, Some(n + n_slack));
-        if status == LpStatus::Unbounded {
-            // phase-1 objective is bounded below by 0; cannot happen
-            unreachable!("phase 1 unbounded");
-        }
-        if z[total] > 1e-7 {
-            // Σ artificials > 0 at the phase-1 optimum → infeasible
-            // (z[total] carries c_B'B⁻¹b = the current objective value)
-            return LpResult {
-                status: LpStatus::Infeasible,
-                x: vec![],
-                objective: f64::INFINITY,
-                iterations,
-            };
-        }
-        // Drive any artificial still in the basis out (degenerate rows).
-        for ri in 0..m {
-            if basis[ri] >= n + n_slack {
-                // find a non-artificial column with nonzero coef in this row
-                let mut pivoted = false;
-                for c in 0..(n + n_slack) {
-                    if t[ri * width + c].abs() > 1e-7 {
-                        pivot(&mut t, &mut basis, ri, c, m, width, &mut z);
-                        pivoted = true;
-                        break;
-                    }
-                }
-                if !pivoted {
-                    // redundant row; leave the artificial basic at 0
-                }
-            }
-        }
-    }
-
-    // ---- Phase 2: minimize the real objective (artificial cols barred).
-    let mut z = vec![0.0f64; width];
-    // z_j = c_B' B^-1 A_j - c_j  computed from the current tableau:
-    for c in 0..width {
-        let mut acc = 0.0;
-        for ri in 0..m {
-            let cb = if basis[ri] < n { cost[basis[ri]] } else { 0.0 };
-            acc += cb * t[ri * width + c];
-        }
-        z[c] = acc;
-    }
-    for (j, cj) in cost.iter().enumerate() {
-        z[j] -= cj;
-    }
-    let status = optimize(&mut t, &mut basis, &mut z, m, total, width, &mut iterations, Some(n + n_slack));
-    if status == LpStatus::Unbounded {
-        return LpResult {
-            status,
-            x: vec![],
-            objective: f64::NEG_INFINITY,
-            iterations,
-        };
-    }
-
-    // Extract structural solution (un-shift; fixed vars sit at lb).
-    let mut x = vec![0.0f64; model.n_vars()];
-    for (i, xi) in x.iter_mut().enumerate() {
-        *xi = get_bounds(i).0;
-    }
-    for ri in 0..m {
-        if basis[ri] < n {
-            x[originals[basis[ri]]] += t[ri * width + total];
-        }
-    }
-    for xi in x.iter_mut() {
-        // clean numerical dust
-        if xi.abs() < 1e-11 {
-            *xi = 0.0;
-        }
-    }
-    let objective = model.objective_value(&x);
+fn infeasible(iterations: usize) -> LpResult {
     LpResult {
-        status: LpStatus::Optimal,
-        x,
-        objective,
+        status: LpStatus::Infeasible,
+        x: vec![],
+        objective: f64::INFINITY,
         iterations,
     }
 }
@@ -312,7 +400,6 @@ fn effective_sense(s: Sense, rhs_negated: bool) -> Sense {
 /// columns have z_j - c_j > 0 for a minimization), `z[width-1]` holds
 /// `-objective`. `barred_from` bars columns ≥ that index (artificials in
 /// phase 2).
-#[allow(clippy::too_many_arguments)]
 fn optimize(
     t: &mut [f64],
     basis: &mut [usize],
@@ -322,6 +409,7 @@ fn optimize(
     width: usize,
     iterations: &mut usize,
     barred_from: Option<usize>,
+    pivots: &mut u64,
 ) -> LpStatus {
     let bar = barred_from.unwrap_or(total);
     let mut degenerate_streak = 0usize;
@@ -361,8 +449,7 @@ fn optimize(
             if a > EPS {
                 let ratio = t[ri * width + total] / a;
                 if ratio < best_ratio - EPS
-                    || (ratio < best_ratio + EPS
-                        && leave.map_or(true, |l| basis[ri] < basis[l]))
+                    || (ratio < best_ratio + EPS && leave.map_or(true, |l| basis[ri] < basis[l]))
                 {
                     best_ratio = ratio;
                     leave = Some(ri);
@@ -377,12 +464,22 @@ fn optimize(
         } else {
             degenerate_streak = 0;
         }
-        pivot(t, basis, l, e, m, width, z);
+        pivot(t, basis, l, e, m, width, z, pivots);
     }
 }
 
 /// Pivot on (row `l`, col `e`), updating tableau, basis, and the z-row.
-fn pivot(t: &mut [f64], basis: &mut [usize], l: usize, e: usize, m: usize, width: usize, z: &mut [f64]) {
+fn pivot(
+    t: &mut [f64],
+    basis: &mut [usize],
+    l: usize,
+    e: usize,
+    m: usize,
+    width: usize,
+    z: &mut [f64],
+    pivots: &mut u64,
+) {
+    *pivots += 1;
     let piv = t[l * width + e];
     debug_assert!(piv.abs() > 1e-12);
     let inv = 1.0 / piv;
@@ -522,5 +619,72 @@ mod tests {
         let r = solve_lp(&m, None);
         assert_eq!(r.status, LpStatus::Optimal);
         assert!(r.objective <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_solves() {
+        // One workspace across differently-shaped models must give
+        // bit-identical results to fresh solves (same arithmetic path).
+        let mut ws = SimplexWorkspace::new();
+        let mut rng = crate::util::Rng::seed_from_u64(99);
+        for case in 0..30 {
+            let nv = rng.range_usize(2, 12);
+            let sense = if rng.bool(0.5) {
+                ObjSense::Minimize
+            } else {
+                ObjSense::Maximize
+            };
+            let mut m = Model::new(sense);
+            let vars: Vec<_> = (0..nv)
+                .map(|i| {
+                    m.add_var(
+                        format!("x{i}"),
+                        0.0,
+                        rng.range_f64(1.0, 10.0),
+                        VarKind::Continuous,
+                        rng.range_f64(-4.0, 4.0),
+                    )
+                })
+                .collect();
+            for ci in 0..rng.range_usize(1, 6) {
+                let mut terms = vec![];
+                for &v in &vars {
+                    if rng.bool(0.5) {
+                        terms.push((v, rng.range_f64(-2.0, 2.0)));
+                    }
+                }
+                if terms.is_empty() {
+                    continue;
+                }
+                let s = match rng.range_usize(0, 3) {
+                    0 => Sense::Le,
+                    1 => Sense::Ge,
+                    _ => Sense::Eq,
+                };
+                m.add_constraint(format!("c{ci}"), terms, s, rng.range_f64(-3.0, 6.0));
+            }
+            let fresh = solve_lp(&m, None);
+            let reused = ws.solve(&m, None);
+            assert_eq!(fresh.status, reused.status, "case {case}");
+            if fresh.status == LpStatus::Optimal {
+                assert_eq!(fresh.objective, reused.objective, "case {case}");
+                assert_eq!(fresh.x, reused.x, "case {case}");
+            }
+        }
+        assert!(ws.solves() == 30 && ws.total_pivots() > 0);
+    }
+
+    #[test]
+    fn workspace_counts_pivots() {
+        let mut ws = SimplexWorkspace::new();
+        let mut m = Model::new(ObjSense::Maximize);
+        let x = var(&mut m, "x", 3.0);
+        let y = var(&mut m, "y", 5.0);
+        m.add_constraint("c1", vec![(x, 1.0)], Sense::Le, 4.0);
+        m.add_constraint("c2", vec![(y, 2.0)], Sense::Le, 12.0);
+        m.add_constraint("c3", vec![(x, 3.0), (y, 2.0)], Sense::Le, 18.0);
+        let before = ws.total_pivots();
+        ws.solve(&m, None);
+        assert!(ws.total_pivots() > before);
     }
 }

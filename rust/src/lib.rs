@@ -28,6 +28,23 @@
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/`
 //! for the harnesses that regenerate every figure of the paper.
+//!
+//! ## Building
+//!
+//! The workspace manifest lives at the repository root and builds fully
+//! offline (`vendor/` holds an `anyhow` shim and a build-only `xla`
+//! PJRT stub as path dependencies):
+//!
+//! ```sh
+//! cargo build --release   # library + `gogh` CLI + examples
+//! cargo test -q           # tier-1 gate (PJRT suites skip without artifacts/)
+//! cargo bench --no-run    # compile every bench harness
+//! ```
+//!
+//! The allocator hot path — every arrival solves Problem 1 — is kept
+//! fast by the workspace-reuse simplex ([`ilp::SimplexWorkspace`]) and
+//! the greedy warm start ([`baselines::greedy::greedy_incumbent`]);
+//! `benches/ilp_scaling.rs` measures both.
 
 pub mod baselines;
 pub mod catalog;

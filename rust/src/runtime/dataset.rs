@@ -42,7 +42,9 @@ impl Split {
 
 /// Assign the 22 Table 2 configs to train/val/test (70/15/15 by count:
 /// 16/3/3), deterministically per seed.
-pub fn split_universe(seed: u64) -> (Vec<(ModelFamily, u32)>, Vec<(ModelFamily, u32)>, Vec<(ModelFamily, u32)>) {
+type ConfigPool = Vec<(ModelFamily, u32)>;
+
+pub fn split_universe(seed: u64) -> (ConfigPool, ConfigPool, ConfigPool) {
     let mut univ = table2_universe();
     let mut rng = Rng::seed_from_u64(seed ^ 0x5b117);
     rng.shuffle(&mut univ);
@@ -143,7 +145,8 @@ impl<'a> DatasetBuilder<'a> {
             let a = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
             let j1 = mk_job(3 * i as u32, j1_cfg);
             let j2 = mk_job(3 * i as u32 + 1, j2_cfg);
-            let (x, y) = self.p1_tuple(&j1, &j2, j3_cfg.map(|c| mk_job(3 * i as u32 + 2, c)), a, &mut rng);
+            let j3 = j3_cfg.map(|c| mk_job(3 * i as u32 + 2, c));
+            let (x, y) = self.p1_tuple(&j1, &j2, j3, a, &mut rng);
             out.push(Sample { x, y });
         }
         out

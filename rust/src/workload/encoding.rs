@@ -144,7 +144,18 @@ mod tests {
     #[test]
     fn p2_row_padding_is_zero() {
         let pa = psi(ModelFamily::ResNet18, 16, 1);
-        let row = p2_row(&pa, &PSI_EMPTY, AccelType::K80, AccelType::V100, 0.1, 0.0, 0.2, 0.0, 0.3, 0.0);
+        let row = p2_row(
+            &pa,
+            &PSI_EMPTY,
+            AccelType::K80,
+            AccelType::V100,
+            0.1,
+            0.0,
+            0.2,
+            0.0,
+            0.3,
+            0.0,
+        );
         assert_eq!(&row[34..40], &[0.0; 6]);
         assert_eq!(row[28], 0.1);
         assert_eq!(row[30], 0.2);

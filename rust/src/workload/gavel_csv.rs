@@ -85,7 +85,11 @@ impl ThroughputTable {
                     let v = if swapped { (t2, t1) } else { (t1, t2) };
                     table.pairs.insert((lo, hi, a), v);
                 }
-                _ => anyhow::bail!("line {}: expected solo(5) or pair(8) fields, got {}", lineno + 1, fields.len()),
+                _ => anyhow::bail!(
+                    "line {}: expected solo(5) or pair(8) fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                ),
             }
         }
         Ok(table)

@@ -1,0 +1,240 @@
+//! Warm-started branch-and-bound: the greedy incumbent from
+//! `baselines::greedy` must (a) be a valid feasible upper bound,
+//! (b) never change the optimum the solver returns, (c) strictly shrink
+//! the explored tree at scale, and (d) make node-budget cutoffs degrade
+//! gracefully to the incumbent instead of failing.
+
+use std::collections::HashMap;
+
+use gogh::baselines::greedy_incumbent;
+use gogh::ilp::branch_bound::{solve_ilp, BnbConfig, BnbStatus};
+use gogh::ilp::problem1::{build_problem1, solve_problem1, Problem1Input};
+use gogh::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, ACCEL_TYPES, FAMILIES};
+
+fn mk_jobs(n: u32, oracle: &ThroughputOracle, slo_frac: f64) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| {
+            let f = FAMILIES[i as usize % FAMILIES.len()];
+            let b = f.batch_sizes()[i as usize % f.batch_sizes().len()];
+            let mut j = JobSpec {
+                id: JobId(i),
+                family: f,
+                batch_size: b,
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: 2,
+                work: 100.0,
+            };
+            j.min_throughput = slo_frac * oracle.solo(&j, AccelType::P100);
+            j
+        })
+        .collect()
+}
+
+/// Oracle-backed throughput closure over a fixed job set.
+fn thr_fn(
+    jobs: Vec<JobSpec>,
+    oracle: ThroughputOracle,
+) -> impl Fn(AccelType, JobId, &Combo) -> f64 {
+    move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+        let spec = jobs.iter().find(|s| s.id == j).unwrap();
+        let lookup = |id: JobId| jobs.iter().find(|s| s.id == id).cloned();
+        oracle.throughput(spec, c, a, &lookup)
+    }
+}
+
+fn solo_cap(a: AccelType) -> f64 {
+    a.base_speed() / AccelType::V100.base_speed()
+}
+
+#[test]
+fn greedy_incumbent_is_feasible_and_bounds_the_optimum() {
+    for seed in 0..5u64 {
+        let oracle = ThroughputOracle::new(seed);
+        let jobs = mk_jobs(6, &oracle, 0.35);
+        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let thr = thr_fn(jobs.clone(), oracle.clone());
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &solo_cap,
+            max_pairs_per_job: 2,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+        };
+        let cfg = BnbConfig::default();
+        let (model, cols, slacks) = build_problem1(&input, &cfg);
+        let x = greedy_incumbent(&input, &model, &cols, &slacks)
+            .expect("soft-mode greedy must always produce an incumbent");
+        assert!(model.is_feasible(&x, 1e-6), "seed {seed}: infeasible incumbent");
+        let sol = solve_problem1(&input, &cfg);
+        assert!(matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible));
+        // minimization: any feasible point is an upper bound on the optimum
+        assert!(
+            model.objective_value(&x) >= sol.objective - 1e-6,
+            "seed {seed}: incumbent {} below optimum {}",
+            model.objective_value(&x),
+            sol.objective
+        );
+    }
+}
+
+#[test]
+fn warm_and_cold_reach_identical_optima() {
+    // Randomized small/mid instances where both runs prove optimality:
+    // the warm start must never change the returned optimum, and over
+    // the batch it must save nodes (strictly, in aggregate).
+    let mut total_warm = 0usize;
+    let mut total_cold = 0usize;
+    for seed in 0..6u64 {
+        let oracle = ThroughputOracle::new(seed * 7 + 1);
+        let n = 4 + (seed % 2) as u32 * 2; // 4, 6, 4, 6, 4, 6
+        let jobs = mk_jobs(n, &oracle, 0.4);
+        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let thr = thr_fn(jobs.clone(), oracle.clone());
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &solo_cap,
+            max_pairs_per_job: 2,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+        };
+        let warm_cfg = BnbConfig {
+            max_nodes: 100_000,
+            time_limit_s: 60.0,
+            ..Default::default()
+        };
+        let cold_cfg = BnbConfig {
+            auto_warm_start: false,
+            ..warm_cfg.clone()
+        };
+        let warm = solve_problem1(&input, &warm_cfg);
+        let cold = solve_problem1(&input, &cold_cfg);
+        assert!(warm.warm_started, "seed {seed}: greedy incumbent missing");
+        assert!(!cold.warm_started);
+        assert_eq!(warm.status, BnbStatus::Optimal, "seed {seed}");
+        assert_eq!(cold.status, BnbStatus::Optimal, "seed {seed}");
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-6,
+            "seed {seed}: warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+        total_warm += warm.nodes;
+        total_cold += cold.nodes;
+    }
+    // pruning can only remove work; the strict comparison lives in
+    // warm_start_explores_strictly_fewer_nodes_at_scale
+    assert!(
+        total_warm <= total_cold,
+        "warm start cost nodes: warm {total_warm} vs cold {total_cold}"
+    );
+}
+
+#[test]
+fn warm_start_explores_strictly_fewer_nodes_at_scale() {
+    // The largest ilp_scaling-style configuration that still proves
+    // optimality in test budgets. Cold start burns nodes discovering its
+    // first incumbent; warm start prunes from node one.
+    let mut total_warm = 0usize;
+    let mut total_cold = 0usize;
+    for seed in [41u64, 42, 43] {
+        let oracle = ThroughputOracle::new(seed);
+        let jobs = mk_jobs(10, &oracle, 0.35);
+        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let thr = thr_fn(jobs.clone(), oracle.clone());
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &solo_cap,
+            max_pairs_per_job: 2,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+        };
+        let warm_cfg = BnbConfig {
+            max_nodes: 150_000,
+            time_limit_s: 120.0,
+            ..Default::default()
+        };
+        let cold_cfg = BnbConfig {
+            auto_warm_start: false,
+            ..warm_cfg.clone()
+        };
+        let warm = solve_problem1(&input, &warm_cfg);
+        let cold = solve_problem1(&input, &cold_cfg);
+        // warm is never worse, and when both prove optimality the optima
+        // are identical (the incumbent only prunes, never cuts the optimum)
+        assert!(matches!(warm.status, BnbStatus::Optimal | BnbStatus::Feasible));
+        assert!(
+            warm.objective <= cold.objective + 1e-6,
+            "seed {seed}: warm {} worse than cold {}",
+            warm.objective,
+            cold.objective
+        );
+        if warm.status == BnbStatus::Optimal && cold.status == BnbStatus::Optimal {
+            assert!(
+                (warm.objective - cold.objective).abs() < 1e-6,
+                "seed {seed}: optima diverge"
+            );
+        }
+        total_warm += warm.nodes;
+        total_cold += cold.nodes;
+    }
+    assert!(
+        total_warm < total_cold,
+        "warm start must explore strictly fewer nodes: warm {total_warm} vs cold {total_cold}"
+    );
+}
+
+#[test]
+fn node_budget_degrades_gracefully_to_the_incumbent() {
+    let oracle = ThroughputOracle::new(9);
+    let jobs = mk_jobs(8, &oracle, 0.4);
+    let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+    let thr = thr_fn(jobs.clone(), oracle.clone());
+    let input = Problem1Input {
+        jobs: &jobs,
+        accel_counts: &counts,
+        throughput: &thr,
+        solo_capability: &solo_cap,
+        max_pairs_per_job: 2,
+        slack_penalty: Some(2000.0),
+        throughput_bonus: 300.0,
+    };
+    let cfg = BnbConfig::default();
+    let (model, cols, slacks) = build_problem1(&input, &cfg);
+    let incumbent = greedy_incumbent(&input, &model, &cols, &slacks).unwrap();
+    let inc_obj = model.objective_value(&incumbent);
+
+    // max_nodes = 0: the search may not expand anything — it must come
+    // back with exactly the warm-start incumbent, not an error.
+    let strangled = BnbConfig {
+        max_nodes: 0,
+        warm_start: Some(incumbent.clone()),
+        ..Default::default()
+    };
+    let r = solve_ilp(&model, &strangled);
+    assert!(r.warm_started);
+    assert!(matches!(r.status, BnbStatus::Optimal | BnbStatus::Feasible), "{:?}", r.status);
+    assert_eq!(r.x, incumbent);
+    assert!((r.objective - inc_obj).abs() < 1e-9);
+    // an Optimal claim from a strangled search must be backed by a
+    // genuinely closed gap, never by a discarded frontier
+    if r.status == BnbStatus::Optimal {
+        assert!(r.gap() < 1e-6, "optimal without a closed gap: {}", r.gap());
+    }
+
+    // and the budget is monotone: more nodes never worsen the objective
+    let generous = solve_ilp(
+        &model,
+        &BnbConfig {
+            warm_start: Some(incumbent.clone()),
+            ..Default::default()
+        },
+    );
+    assert!(generous.objective <= r.objective + 1e-9);
+}

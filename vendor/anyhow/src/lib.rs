@@ -1,0 +1,168 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The GOGH workspace builds in environments with no crates.io access,
+//! so this shim is vendored as a path dependency under the same crate
+//! name. It covers exactly the surface the repo uses:
+//!
+//! * [`Error`] / [`Result`] — a String-backed error with a preserved
+//!   `Display` chain,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros,
+//! * a blanket `From<E: std::error::Error>` so `?` converts std errors,
+//! * [`Context`] for `.context(..)` / `.with_context(..)` on results
+//!   and options.
+//!
+//! Like real `anyhow`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` (that would conflict with the blanket `From`).
+//! Swapping back to the registry crate is a one-line change in the
+//! workspace manifest.
+
+use std::fmt;
+
+/// A catch-all error: formatted message plus optional source chain text.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend context, keeping the original message in the chain.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(&format!(": {s}"));
+            src = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+/// `.context(..)` / `.with_context(..)` on results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} ({})", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing (7)");
+        let r: Result<()> = (|| {
+            ensure!(1 + 1 == 2, "math works");
+            bail!("stop {}", "here");
+        })();
+        assert_eq!(r.unwrap_err().to_string(), "stop here");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        let r: Result<()> = (|| {
+            ensure!(false);
+            Ok(())
+        })();
+        assert!(r.unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: Result<u32> = None.context("missing value");
+        assert_eq!(r.unwrap_err().to_string(), "missing value");
+        let r: Result<()> = io_fail().context("loading config");
+        assert!(r.unwrap_err().to_string().starts_with("loading config: "));
+    }
+}

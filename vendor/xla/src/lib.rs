@@ -1,0 +1,172 @@
+//! Build-only stub of the `xla-rs` PJRT bindings.
+//!
+//! The GOGH runtime layer (`gogh::runtime`) drives AOT-compiled HLO
+//! through a PJRT CPU client. The real `xla` crate links libxla, which
+//! is not available in offline/CI environments — this stub provides the
+//! exact API surface the repo compiles against, with every runtime
+//! entry point failing fast at [`PjRtClient::cpu`].
+//!
+//! Because `Engine::load` creates the client before anything else, no
+//! other stub method is ever reached: tests and benches that need PJRT
+//! already skip themselves when `artifacts/manifest.json` is absent.
+//! Swapping in the real bindings is a one-line change in the workspace
+//! manifest; no `gogh` source changes are needed.
+
+use std::fmt;
+
+/// Error type matching the shape `gogh` formats with `{e}`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_unreachable() -> Error {
+    Error(
+        "PJRT stub: executable paths are unreachable without a client \
+         (vendor/xla is a build-only stub)"
+            .to_string(),
+    )
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always errors in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error(
+            "PJRT runtime not linked: this build uses the in-tree stub crate \
+             (vendor/xla). Point the workspace at a real PJRT-backed `xla` \
+             crate to execute AOT artifacts"
+                .to_string(),
+        ))
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        "stub"
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_unreachable())
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(stub_unreachable())
+    }
+}
+
+/// An XLA computation built from a parsed HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host arguments (`Literal` or `&Literal`), returning
+    /// per-device, per-output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_unreachable())
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_unreachable())
+    }
+}
+
+/// A host tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Self {
+        Self { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Self { _private: () })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(stub_unreachable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_unreachable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(stub_unreachable())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(stub_unreachable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_fast_with_actionable_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_construction_is_usable_pre_execute() {
+        // Estimator::batch_literal builds literals before executing;
+        // construction and reshape must therefore succeed in the stub.
+        let l = Literal::vec1(&[0.0f32; 8]).reshape(&[2, 4]);
+        assert!(l.is_ok());
+    }
+}
