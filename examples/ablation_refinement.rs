@@ -44,7 +44,7 @@ fn main() -> gogh::Result<()> {
             cfg.noise_sigma,
             cfg.monitor_interval_s,
             cfg.seed,
-        );
+        )?;
         let mut est_cfg = cfg.estimator.clone();
         est_cfg.online_steps_per_round = online;
         let mut sched = GoghScheduler::new(
@@ -53,10 +53,9 @@ fn main() -> gogh::Result<()> {
             GoghOptions {
                 estimator: est_cfg,
                 optimizer: cfg.optimizer.clone(),
-                history_jobs: 24,
                 enable_refinement: refine,
-                exploration_epsilon: 0.0,
                 seed: cfg.seed,
+                ..Default::default()
             },
         )?;
         let report = driver.run(&mut sched)?;

@@ -70,7 +70,7 @@ fn main() -> gogh::Result<()> {
             cfg.noise_sigma,
             cfg.monitor_interval_s,
             cfg.seed,
-        );
+        )?;
         let report = match policy {
             "random" => driver.run(&mut RandomScheduler::new(cfg.seed))?,
             "greedy" => driver.run(&mut GreedyScheduler::new())?,
@@ -81,10 +81,8 @@ fn main() -> gogh::Result<()> {
                 let mut opts = GoghOptions {
                     estimator: cfg.estimator.clone(),
                     optimizer: cfg.optimizer.clone(),
-                    history_jobs: 24,
-                    enable_refinement: true,
-                    exploration_epsilon: 0.0,
                     seed: cfg.seed,
+                    ..Default::default()
                 };
                 if name == "gogh-frozen" {
                     // ablation: no online learning after bootstrap

@@ -1,7 +1,8 @@
 //! End-to-end scheduling comparison (EXPERIMENTS.md §E2E): energy, SLO
-//! satisfaction, completion time and migrations for GOGH vs baselines
-//! on identical traces, plus GOGH's online estimation MAE (the paper's
-//! "prediction errors as low as 5%" headline).
+//! satisfaction, completion time, migrations and per-event decision
+//! latency for GOGH vs baselines on identical traces, plus GOGH's
+//! online estimation MAE (the paper's "prediction errors as low as 5%"
+//! headline) and the incremental-vs-full arrival-path solver cost.
 //!
 //!     cargo bench --bench e2e_scheduling
 
@@ -40,7 +41,7 @@ fn main() -> gogh::Result<()> {
                 cfg.noise_sigma,
                 cfg.monitor_interval_s,
                 seed,
-            );
+            )?;
             let report = match policy {
                 "random" => driver.run(&mut RandomScheduler::new(seed))?,
                 "greedy" => driver.run(&mut GreedyScheduler::new())?,
@@ -54,10 +55,8 @@ fn main() -> gogh::Result<()> {
                         GoghOptions {
                             estimator: cfg.estimator.clone(),
                             optimizer: cfg.optimizer.clone(),
-                            history_jobs: 24,
-                            enable_refinement: true,
-                            exploration_epsilon: 0.0,
                             seed,
+                            ..Default::default()
                         },
                     )?;
                     driver.run(&mut sched)?
@@ -86,7 +85,10 @@ fn main() -> gogh::Result<()> {
             mean.mean_jct += r.mean_jct / n;
             mean.sim_seconds += r.sim_seconds / n;
             mean.mean_solve_ms += r.mean_solve_ms / n;
+            mean.mean_decision_ms += r.mean_decision_ms / n;
+            mean.mean_queue_s += r.mean_queue_s / n;
         }
+        mean.events = reports.iter().map(|r| r.events).sum::<usize>() / reports.len();
         mean.estimation_mae = {
             let maes: Vec<f64> = reports.iter().filter_map(|r| r.estimation_mae).collect();
             (!maes.is_empty()).then(|| maes.iter().sum::<f64>() / maes.len() as f64)
@@ -98,6 +100,13 @@ fn main() -> gogh::Result<()> {
     for (name, ratio) in table.energy_ratios() {
         println!("  {name:<12} {ratio:.3}x");
     }
+    println!("per-event decision latency:");
+    for r in &table.reports {
+        println!(
+            "  {:<12} {:>8.3} ms/event over {} events",
+            r.scheduler, r.mean_decision_ms, r.events
+        );
+    }
     for r in &table.reports {
         if let Some(mae) = r.estimation_mae {
             println!("{} estimation MAE: {:.4}", r.scheduler, mae);
@@ -106,5 +115,69 @@ fn main() -> gogh::Result<()> {
             println!("{} mean ILP solve: {:.1} ms", r.scheduler, r.mean_solve_ms);
         }
     }
+
+    // ---- incremental arrival path vs full re-solve -------------------
+    // At |J| ≥ 16 the bounded neighborhood ILP must explore no more
+    // nodes per arrival solve than the full Problem-1 re-solve.
+    println!("\n# GOGH incremental arrival path vs full re-solve (|J| = 16)");
+    let mut icfg = ExperimentConfig::default();
+    icfg.trace.n_jobs = 16;
+    icfg.trace.mean_interarrival_s = 25.0;
+    icfg.trace.mean_work_s = 1200.0;
+    icfg.seed = 11;
+    icfg.trace.seed = 11;
+    let mut mean_nodes = [0.0f64; 2];
+    for (slot, (label, full_every, neighborhood)) in
+        [("incremental", 8usize, 4usize), ("full-resolve", 1, 0)].iter().enumerate()
+    {
+        let oracle = ThroughputOracle::new(icfg.seed);
+        let trace = Trace::generate(&icfg.trace, &oracle);
+        let mut driver = SimDriver::new(
+            ClusterSpec::mix(&icfg.cluster.accel_mix),
+            oracle.clone(),
+            trace,
+            icfg.noise_sigma,
+            icfg.monitor_interval_s,
+            icfg.seed,
+        )?;
+        let mut sched = GoghScheduler::new(
+            &engine,
+            &oracle,
+            GoghOptions {
+                estimator: icfg.estimator.clone(),
+                optimizer: icfg.optimizer.clone(),
+                full_resolve_every: *full_every,
+                neighborhood: *neighborhood,
+                seed: icfg.seed,
+                ..Default::default()
+            },
+        )?;
+        let report = driver.run(&mut sched)?;
+        let stats = sched.solver_stats();
+        mean_nodes[slot] = if *neighborhood > 0 {
+            stats.mean_incremental_nodes()
+        } else {
+            stats.mean_full_nodes()
+        };
+        println!(
+            "  {label:<13} {:>3} incremental solves ({:>7.1} nodes/solve), \
+             {:>3} full solves ({:>7.1} nodes/solve), {:>7.3} ms/event",
+            stats.incremental_solves,
+            stats.mean_incremental_nodes(),
+            stats.full_solves,
+            stats.mean_full_nodes(),
+            report.mean_decision_ms,
+        );
+    }
+    assert!(
+        mean_nodes[0] <= mean_nodes[1],
+        "incremental path explored MORE nodes per solve than full re-solve: {} vs {}",
+        mean_nodes[0],
+        mean_nodes[1]
+    );
+    println!(
+        "incremental/full nodes per solve: {:.1}/{:.1}",
+        mean_nodes[0], mean_nodes[1]
+    );
     Ok(())
 }

@@ -11,7 +11,7 @@
 use std::collections::HashMap;
 
 use crate::cluster::{AccelId, Cluster, Placement};
-use crate::coordinator::Scheduler;
+use crate::coordinator::{ClusterEvent, Decision, Scheduler};
 use crate::ilp::model::{Model, VarId};
 use crate::ilp::problem1::Problem1Input;
 use crate::workload::{AccelType, Combo, JobId, JobSpec};
@@ -24,17 +24,14 @@ impl GreedyScheduler {
     pub fn new() -> Self {
         Self
     }
-}
 
-impl Scheduler for GreedyScheduler {
-    fn name(&self) -> &str {
-        "greedy"
-    }
-
-    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
+    /// Fastest-free-GPU-first packing of every active job (full-rebuild
+    /// policy; the driver applies it as a delta).
+    fn rebuild(&self, cluster: &Cluster) -> Placement {
         let mut p = Placement::new();
-        // fastest instances first (stable order for determinism)
-        let mut free: Vec<AccelId> = cluster.spec.accels.clone();
+        // fastest in-service instances first (stable order for
+        // determinism)
+        let mut free: Vec<AccelId> = cluster.available_accels();
         free.sort_by(|a, b| {
             b.accel
                 .base_speed()
@@ -60,7 +57,24 @@ impl Scheduler for GreedyScheduler {
                 p.assign(a, Combo::pair(existing, j));
             }
         }
-        Ok(p)
+        p
+    }
+}
+
+impl Scheduler for GreedyScheduler {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+        match event {
+            ClusterEvent::MonitorTick { .. } => Ok(Decision::none()),
+            _ if cluster.n_jobs() == 0 => Ok(Decision::none()),
+            _ => {
+                let target = self.rebuild(cluster);
+                Ok(Decision::replace(&cluster.placement, &target))
+            }
+        }
     }
 }
 
@@ -140,7 +154,7 @@ mod tests {
     fn first_job_gets_fastest_gpu() {
         let mut c = Cluster::new(ClusterSpec::balanced(1));
         c.add_job(job(0));
-        let p = GreedyScheduler::new().allocate(&c).unwrap();
+        let p = GreedyScheduler::new().rebuild(&c);
         let (aid, _) = p.iter().next().unwrap();
         assert_eq!(aid.accel, AccelType::V100);
     }
@@ -151,12 +165,23 @@ mod tests {
         for i in 0..3 {
             c.add_job(job(i));
         }
-        let p = GreedyScheduler::new().allocate(&c).unwrap();
+        let p = GreedyScheduler::new().rebuild(&c);
         // 2 instances, 3 jobs: the v100 must host a pair
         let v100 = c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
         assert_eq!(p.combo_on(*v100).unwrap().len(), 2);
         for i in 0..3 {
             assert!(p.is_placed(JobId(i)));
         }
+    }
+
+    #[test]
+    fn rebuild_skips_down_accels() {
+        let mut c = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 1), (AccelType::K80, 1)]));
+        c.add_job(job(0));
+        let v100 = *c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
+        c.set_accel_down(v100);
+        let p = GreedyScheduler::new().rebuild(&c);
+        let (aid, _) = p.iter().next().unwrap();
+        assert_eq!(aid.accel, AccelType::K80, "down v100 must not be used");
     }
 }

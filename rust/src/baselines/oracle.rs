@@ -2,9 +2,9 @@
 //! throughputs. This is the energy lower bound GOGH approaches as its
 //! estimates converge — labelled "oracle" in the e2e table.
 
-use crate::cluster::{Cluster, Placement};
+use crate::cluster::Cluster;
 use crate::config::OptimizerConfig;
-use crate::coordinator::{Optimizer, Scheduler};
+use crate::coordinator::{ClusterEvent, Decision, Optimizer, Scheduler};
 use crate::workload::{AccelType, Combo, JobId, ThroughputOracle};
 use crate::Result;
 
@@ -27,7 +27,10 @@ impl Scheduler for OracleScheduler {
         "oracle-ilp"
     }
 
-    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
+    fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+        if matches!(event, ClusterEvent::MonitorTick { .. }) || cluster.n_jobs() == 0 {
+            return Ok(Decision::none());
+        }
         let oracle = self.oracle.clone();
         let jobs: Vec<_> = cluster.jobs().cloned().collect();
         let thr = move |a: AccelType, j: JobId, c: &Combo| {
@@ -35,8 +38,8 @@ impl Scheduler for OracleScheduler {
             let lookup = |id: JobId| jobs.iter().find(|s| s.id == id).cloned();
             oracle.throughput(spec, c, a, &lookup)
         };
-        let (p, _) = self.opt.allocate(cluster, &thr)?;
-        Ok(p)
+        let (target, _) = self.opt.allocate(cluster, &thr)?;
+        Ok(Decision::replace(&cluster.placement, &target))
     }
 
     fn decision_latencies(&self) -> (f64, f64) {
@@ -64,7 +67,8 @@ mod tests {
             &oracle,
         );
         let mut driver =
-            SimDriver::new(ClusterSpec::balanced(1), oracle.clone(), trace, 0.0, 15.0, 2);
+            SimDriver::new(ClusterSpec::balanced(1), oracle.clone(), trace, 0.0, 15.0, 2)
+                .unwrap();
         let mut sched = OracleScheduler::new(oracle, OptimizerConfig::default());
         let report = driver.run(&mut sched).unwrap();
         assert_eq!(report.jobs_completed, 5);

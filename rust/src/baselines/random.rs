@@ -6,7 +6,7 @@
 use crate::util::Rng;
 
 use crate::cluster::{Cluster, Placement};
-use crate::coordinator::Scheduler;
+use crate::coordinator::{ClusterEvent, Decision, Scheduler};
 use crate::workload::Combo;
 use crate::Result;
 
@@ -20,16 +20,12 @@ impl RandomScheduler {
             rng: Rng::seed_from_u64(seed ^ 0xbadd),
         }
     }
-}
 
-impl Scheduler for RandomScheduler {
-    fn name(&self) -> &str {
-        "random"
-    }
-
-    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
+    /// Fresh random placement of every active job (full-rebuild policy;
+    /// the driver applies it as a delta against the current placement).
+    fn rebuild(&mut self, cluster: &Cluster) -> Placement {
         let mut p = Placement::new();
-        let mut accels = cluster.spec.accels.clone();
+        let mut accels = cluster.available_accels();
         self.rng.shuffle(&mut accels);
         let mut jobs = cluster.active_job_ids();
         self.rng.shuffle(&mut jobs);
@@ -51,7 +47,24 @@ impl Scheduler for RandomScheduler {
             }
             // else: cluster totally full (2 jobs everywhere) → job waits
         }
-        Ok(p)
+        p
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+        match event {
+            ClusterEvent::MonitorTick { .. } => Ok(Decision::none()),
+            _ if cluster.n_jobs() == 0 => Ok(Decision::none()),
+            _ => {
+                let target = self.rebuild(cluster);
+                Ok(Decision::replace(&cluster.placement, &target))
+            }
+        }
     }
 }
 
@@ -81,7 +94,7 @@ mod tests {
             c.add_job(job(i)); // 9 jobs > 6 instances → pairing needed
         }
         let mut s = RandomScheduler::new(1);
-        let p = s.allocate(&c).unwrap();
+        let p = s.rebuild(&c);
         for i in 0..9 {
             assert!(p.is_placed(JobId(i)), "job {i} unplaced");
         }
@@ -97,8 +110,27 @@ mod tests {
         for i in 0..4 {
             c.add_job(job(i));
         }
-        let p1 = RandomScheduler::new(7).allocate(&c).unwrap();
-        let p2 = RandomScheduler::new(7).allocate(&c).unwrap();
+        let p1 = RandomScheduler::new(7).rebuild(&c);
+        let p2 = RandomScheduler::new(7).rebuild(&c);
         assert_eq!(p1.diff_count(&p2), 0);
+    }
+
+    #[test]
+    fn decision_is_a_delta_against_current_placement() {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        for i in 0..3 {
+            c.add_job(job(i));
+        }
+        let mut s = RandomScheduler::new(9);
+        let ev = ClusterEvent::JobArrived { job: JobId(2) };
+        let d = s.on_event(&ev, &c).unwrap();
+        assert!(!d.delta.is_empty());
+        c.apply_delta(&d.delta).unwrap();
+        for i in 0..3 {
+            assert!(c.placement.is_placed(JobId(i)));
+        }
+        // a monitor tick changes nothing
+        let tick = ClusterEvent::MonitorTick { measurements: vec![] };
+        assert!(s.on_event(&tick, &c).unwrap().delta.is_empty());
     }
 }

@@ -13,9 +13,10 @@ pub mod monitor;
 pub use energy::{power_watts, EnergyMeter};
 pub use monitor::{Measurement, Monitor};
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::workload::{AccelType, Combo, JobId, JobSpec};
+use crate::Result;
 
 /// Identifies one accelerator instance: (server, accel type).
 /// The ILP's x^c_{a,s} variables range over these (constraint 2f: each
@@ -168,13 +169,95 @@ impl Placement {
     }
 }
 
-/// The simulated cluster: spec + placement + job registry + clock.
+/// One typed placement mutation. Policies return these inside a
+/// [`PlacementDelta`]; [`Cluster::apply_delta`] validates and applies
+/// them transactionally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementOp {
+    /// Host `combo` on `accel`. The instance must currently be empty
+    /// (evict first — implicit replacement hides policy bugs).
+    Assign { accel: AccelId, combo: Combo },
+    /// Remove whatever runs on `accel` (must be occupied).
+    Evict { accel: AccelId },
+    /// Move `job` off `from` (a co-runner, if any, stays behind solo)
+    /// and re-host it solo on the empty instance `to`.
+    Migrate { job: JobId, from: AccelId, to: AccelId },
+}
+
+/// An incremental placement change: the unit every [`crate::coordinator::Scheduler`]
+/// decision carries. Applying the delta produced by [`PlacementDelta::diff`]
+/// is exactly equivalent to replacing the placement wholesale (property
+/// tested in `tests/proptests.rs`), but lets the cluster count and
+/// charge migrations per touched job.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PlacementDelta {
+    pub ops: Vec<PlacementOp>,
+}
+
+impl PlacementDelta {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, op: PlacementOp) {
+        self.ops.push(op);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The delta that turns `current` into `target`: evictions first
+    /// (freeing every instance whose combo changes), then assignments.
+    /// Unchanged instances produce no ops — stable placements are free.
+    pub fn diff(current: &Placement, target: &Placement) -> Self {
+        let mut evicts: Vec<AccelId> = vec![];
+        let mut assigns: Vec<(AccelId, Combo)> = vec![];
+        for (a, c) in current.iter() {
+            if target.by_accel.get(a) != Some(c) {
+                evicts.push(*a);
+            }
+        }
+        for (a, c) in target.iter() {
+            if current.by_accel.get(a) != Some(c) {
+                assigns.push((*a, *c));
+            }
+        }
+        evicts.sort();
+        assigns.sort();
+        let mut ops: Vec<PlacementOp> =
+            evicts.into_iter().map(|accel| PlacementOp::Evict { accel }).collect();
+        ops.extend(assigns.into_iter().map(|(accel, combo)| PlacementOp::Assign { accel, combo }));
+        Self { ops }
+    }
+}
+
+/// What applying a delta actually changed.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaOutcome {
+    /// instance-level placement moves (same metric as [`Placement::diff_count`])
+    pub moves: usize,
+    /// jobs that were running before AND after but on a different accel
+    /// set — these pay the migration/restart penalty.
+    pub migrated_jobs: Vec<JobId>,
+}
+
+/// The simulated cluster: spec + placement + job registry + clock +
+/// accelerator availability (maintenance/failure churn).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub spec: ClusterSpec,
     pub placement: Placement,
     jobs: HashMap<JobId, JobSpec>,
     now: f64,
+    /// instances currently out of service (AccelDown events).
+    down: BTreeSet<AccelId>,
+    /// restart penalty: jobs make no progress until this simulated time.
+    stalled_until: HashMap<JobId, f64>,
 }
 
 impl Cluster {
@@ -184,6 +267,8 @@ impl Cluster {
             placement: Placement::new(),
             jobs: HashMap::new(),
             now: 0.0,
+            down: BTreeSet::new(),
+            stalled_until: HashMap::new(),
         }
     }
 
@@ -202,7 +287,162 @@ impl Cluster {
 
     pub fn remove_job(&mut self, j: JobId) -> Option<JobSpec> {
         self.placement.remove_job(j);
+        self.stalled_until.remove(&j);
         self.jobs.remove(&j)
+    }
+
+    /// Instances currently in service, in spec order.
+    pub fn available_accels(&self) -> Vec<AccelId> {
+        self.spec
+            .accels
+            .iter()
+            .filter(|a| !self.down.contains(a))
+            .copied()
+            .collect()
+    }
+
+    pub fn is_accel_down(&self, a: AccelId) -> bool {
+        self.down.contains(&a)
+    }
+
+    /// Take an instance out of service, evicting whatever ran there.
+    /// Returns the jobs that lost that instance (sorted).
+    pub fn set_accel_down(&mut self, a: AccelId) -> Vec<JobId> {
+        let mut evicted: Vec<JobId> =
+            self.placement.combo_on(a).map(|c| c.jobs()).unwrap_or_default();
+        evicted.sort();
+        self.placement.clear_accel(a);
+        self.down.insert(a);
+        evicted
+    }
+
+    /// Return an instance to service.
+    pub fn set_accel_up(&mut self, a: AccelId) {
+        self.down.remove(&a);
+    }
+
+    /// Charge a restart penalty: `j` makes no progress before `until`.
+    /// Returns the stall seconds actually added — overlapping penalties
+    /// extend the stall window instead of double-charging it.
+    pub fn stall_job(&mut self, j: JobId, until: f64) -> f64 {
+        let cur = self.stalled_until.get(&j).copied().unwrap_or(0.0).max(self.now);
+        let e = self.stalled_until.entry(j).or_insert(0.0);
+        *e = e.max(until);
+        (until - cur).max(0.0)
+    }
+
+    /// Simulated time before which `j` is restarting (0 when not stalled).
+    pub fn stalled_until(&self, j: JobId) -> f64 {
+        self.stalled_until.get(&j).copied().unwrap_or(0.0)
+    }
+
+    /// Validate and apply an incremental placement change atomically:
+    /// either every op applies, or the placement is left untouched.
+    ///
+    /// Invariants enforced per op (the "delta never double-books"
+    /// property of `tests/proptests.rs`): assignments and migration
+    /// targets must be empty in-service instances, combos may only name
+    /// registered distinct jobs, evictions/migration sources must hit
+    /// live state, and no job may end up on more instances than its
+    /// distributability D_j allows.
+    pub fn apply_delta(&mut self, delta: &PlacementDelta) -> Result<DeltaOutcome> {
+        let mut next = self.placement.clone();
+        for op in &delta.ops {
+            self.apply_op(&mut next, op)?;
+        }
+        for (j, accels) in next.by_job.iter() {
+            let d = self
+                .jobs
+                .get(j)
+                .map(|s| s.distributability as usize)
+                .unwrap_or(usize::MAX);
+            anyhow::ensure!(
+                accels.len() <= d,
+                "delta places {j} on {} instances (distributability {d})",
+                accels.len()
+            );
+        }
+        // outcome: moves + which running jobs changed instances
+        let moves = self.placement.diff_count(&next);
+        let mut migrated: Vec<JobId> = self
+            .jobs
+            .keys()
+            .filter(|j| {
+                let before = self.placement.by_job.get(j);
+                let after = next.by_job.get(j);
+                match (before, after) {
+                    (Some(b), Some(a)) => {
+                        let mut b = b.clone();
+                        let mut a = a.clone();
+                        b.sort();
+                        a.sort();
+                        b != a
+                    }
+                    _ => false,
+                }
+            })
+            .copied()
+            .collect();
+        migrated.sort();
+        self.placement = next;
+        Ok(DeltaOutcome {
+            moves,
+            migrated_jobs: migrated,
+        })
+    }
+
+    fn apply_op(&self, next: &mut Placement, op: &PlacementOp) -> Result<()> {
+        let check_target = |accel: AccelId, next: &Placement| -> Result<()> {
+            anyhow::ensure!(
+                self.spec.accels.contains(&accel),
+                "unknown accelerator {accel}"
+            );
+            anyhow::ensure!(!self.down.contains(&accel), "accelerator {accel} is down");
+            anyhow::ensure!(
+                next.combo_on(accel).is_none(),
+                "accelerator {accel} already hosts a combo (evict first)"
+            );
+            Ok(())
+        };
+        match *op {
+            PlacementOp::Assign { accel, combo } => {
+                check_target(accel, next)?;
+                let js = combo.jobs();
+                anyhow::ensure!(
+                    js.len() < 2 || js[0] != js[1],
+                    "combo pairs {0} with itself",
+                    js[0]
+                );
+                for j in &js {
+                    anyhow::ensure!(self.jobs.contains_key(j), "unregistered job {j}");
+                    anyhow::ensure!(
+                        !next.accels_of(*j).contains(&accel),
+                        "job {j} already on {accel}"
+                    );
+                }
+                next.assign(accel, combo);
+            }
+            PlacementOp::Evict { accel } => {
+                anyhow::ensure!(
+                    next.combo_on(accel).is_some(),
+                    "evicting empty accelerator {accel}"
+                );
+                next.clear_accel(accel);
+            }
+            PlacementOp::Migrate { job, from, to } => {
+                let combo = *next
+                    .combo_on(from)
+                    .ok_or_else(|| anyhow::anyhow!("migrate source {from} is empty"))?;
+                anyhow::ensure!(combo.contains(job), "job {job} is not on {from}");
+                check_target(to, next)?;
+                next.clear_accel(from);
+                if let Some(peer) = combo.other(job) {
+                    next.assign(from, Combo::Solo(peer));
+                }
+                next.assign(to, Combo::Solo(job));
+            }
+        }
+        Ok(())
     }
 
     pub fn job(&self, j: JobId) -> Option<&JobSpec> {
@@ -312,5 +552,136 @@ mod tests {
         let removed = c.remove_job(JobId(1));
         assert!(removed.is_some());
         assert_eq!(c.placement.busy_accels(), 0);
+    }
+
+    fn delta_cluster() -> Cluster {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        for i in 0..3 {
+            c.add_job(job(i));
+        }
+        c
+    }
+
+    #[test]
+    fn apply_delta_assign_evict_migrate() {
+        let mut c = delta_cluster();
+        let a0 = c.spec.accels[0];
+        let a1 = c.spec.accels[1];
+        let mut d = PlacementDelta::new();
+        d.push(PlacementOp::Assign {
+            accel: a0,
+            combo: Combo::pair(JobId(0), JobId(1)),
+        });
+        let out = c.apply_delta(&d).unwrap();
+        assert_eq!(out.moves, 1);
+        assert!(out.migrated_jobs.is_empty(), "first placement is not a migration");
+
+        // migrate job 0 off the pair: peer stays behind solo
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Migrate {
+                job: JobId(0),
+                from: a0,
+                to: a1,
+            }],
+        };
+        let out = c.apply_delta(&d).unwrap();
+        assert_eq!(c.placement.combo_on(a0), Some(&Combo::Solo(JobId(1))));
+        assert_eq!(c.placement.combo_on(a1), Some(&Combo::Solo(JobId(0))));
+        // job 1 kept its instance (pair → solo on a0): only job 0 migrated
+        assert_eq!(out.migrated_jobs, vec![JobId(0)]);
+
+        // evict
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Evict { accel: a1 }],
+        };
+        c.apply_delta(&d).unwrap();
+        assert!(!c.placement.is_placed(JobId(0)));
+    }
+
+    #[test]
+    fn apply_delta_is_transactional_and_validates() {
+        let mut c = delta_cluster();
+        let a0 = c.spec.accels[0];
+        c.placement.assign(a0, Combo::Solo(JobId(0)));
+        let before = c.placement.clone();
+        // second op targets an occupied instance → whole delta rejected
+        let d = PlacementDelta {
+            ops: vec![
+                PlacementOp::Assign {
+                    accel: c.spec.accels[1],
+                    combo: Combo::Solo(JobId(1)),
+                },
+                PlacementOp::Assign {
+                    accel: a0,
+                    combo: Combo::Solo(JobId(2)),
+                },
+            ],
+        };
+        assert!(c.apply_delta(&d).is_err());
+        assert_eq!(c.placement.diff_count(&before), 0, "partial apply leaked");
+        // unregistered job
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Assign {
+                accel: c.spec.accels[1],
+                combo: Combo::Solo(JobId(99)),
+            }],
+        };
+        assert!(c.apply_delta(&d).is_err());
+        // distributability: job(…) has D_j = 2, a third instance is too many
+        let mut d = PlacementDelta::new();
+        for accel in c.spec.accels.iter().skip(1).take(3) {
+            d.push(PlacementOp::Assign {
+                accel: *accel,
+                combo: Combo::Solo(JobId(1)),
+            });
+        }
+        assert!(c.apply_delta(&d).is_err());
+    }
+
+    #[test]
+    fn accel_down_evicts_and_blocks_assignment() {
+        let mut c = delta_cluster();
+        let a0 = c.spec.accels[0];
+        c.placement.assign(a0, Combo::pair(JobId(0), JobId(1)));
+        let evicted = c.set_accel_down(a0);
+        assert_eq!(evicted, vec![JobId(0), JobId(1)]);
+        assert!(c.placement.combo_on(a0).is_none());
+        assert_eq!(c.available_accels().len(), c.spec.len() - 1);
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Assign {
+                accel: a0,
+                combo: Combo::Solo(JobId(0)),
+            }],
+        };
+        assert!(c.apply_delta(&d).is_err(), "down accel must reject work");
+        c.set_accel_up(a0);
+        assert!(c.apply_delta(&d).is_ok());
+    }
+
+    #[test]
+    fn diff_delta_equals_replacement() {
+        let mut c = delta_cluster();
+        c.placement.assign(c.spec.accels[0], Combo::Solo(JobId(0)));
+        c.placement.assign(c.spec.accels[1], Combo::Solo(JobId(1)));
+        let mut target = Placement::new();
+        target.assign(c.spec.accels[1], Combo::pair(JobId(1), JobId(2)));
+        target.assign(c.spec.accels[2], Combo::Solo(JobId(0)));
+        let d = PlacementDelta::diff(&c.placement, &target);
+        let out = c.apply_delta(&d).unwrap();
+        assert_eq!(c.placement.diff_count(&target), 0);
+        assert_eq!(out.migrated_jobs, vec![JobId(0)]);
+    }
+
+    #[test]
+    fn stall_tracking() {
+        let mut c = delta_cluster();
+        assert_eq!(c.stalled_until(JobId(0)), 0.0);
+        assert_eq!(c.stall_job(JobId(0), 42.0), 42.0);
+        // overlapping penalty: only the extension beyond 42 is charged
+        assert_eq!(c.stall_job(JobId(0), 30.0), 0.0); // never shortens
+        assert_eq!(c.stall_job(JobId(0), 50.0), 8.0);
+        assert_eq!(c.stalled_until(JobId(0)), 50.0);
+        c.remove_job(JobId(0));
+        assert_eq!(c.stalled_until(JobId(0)), 0.0);
     }
 }

@@ -133,6 +133,38 @@ impl Default for OptimizerConfig {
     }
 }
 
+/// GOGH policy knobs (the coordinator's own behaviour, as opposed to
+/// the estimator or optimizer subsystems).
+#[derive(Debug, Clone)]
+pub struct GoghPolicyConfig {
+    /// Historical jobs seeded into the catalog at startup.
+    pub history_jobs: usize,
+    /// Apply P2 cross-GPU refinement (Eq. 3/4); disabling it is the
+    /// "P1-only" ablation.
+    pub enable_refinement: bool,
+    /// Active-exploration probability per full allocation round.
+    pub exploration_epsilon: f64,
+    /// Escape hatch for the incremental arrival path: force a full
+    /// Problem-1 re-solve every K events (1 = always full re-solve).
+    pub full_resolve_every: usize,
+    /// Neighborhood size of the incremental arrival path: the bounded
+    /// local ILP re-solves the new job plus up to this many co-location
+    /// candidates (0 disables the incremental path entirely).
+    pub neighborhood: usize,
+}
+
+impl Default for GoghPolicyConfig {
+    fn default() -> Self {
+        Self {
+            history_jobs: 24,
+            enable_refinement: true,
+            exploration_epsilon: 0.0,
+            full_resolve_every: 8,
+            neighborhood: 4,
+        }
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -140,10 +172,14 @@ pub struct ExperimentConfig {
     pub trace: TraceConfig,
     pub estimator: EstimatorConfig,
     pub optimizer: OptimizerConfig,
-    /// Monitoring interval (seconds of simulated time).
+    pub gogh: GoghPolicyConfig,
+    /// Monitoring interval (seconds of simulated time). Must be > 0;
+    /// validated by `SimDriver::new`.
     pub monitor_interval_s: f64,
     /// Measurement noise sigma.
     pub noise_sigma: f64,
+    /// Restart penalty charged to every migrated job (seconds of stall).
+    pub migration_cost_s: f64,
     /// Ground-truth / trace seed.
     pub seed: u64,
     /// Optional CSV of measured throughputs (the real Gavel dataset —
@@ -158,8 +194,10 @@ impl Default for ExperimentConfig {
             trace: Default::default(),
             estimator: Default::default(),
             optimizer: Default::default(),
+            gogh: Default::default(),
             monitor_interval_s: 30.0,
             noise_sigma: 0.03,
+            migration_cost_s: 0.0,
             seed: 17,
             gavel_csv: None,
         }
@@ -201,6 +239,12 @@ impl ExperimentConfig {
             }
             if let Some(v) = t.get("max_distributability") {
                 cfg.trace.max_distributability = v.as_f64().unwrap_or(2.0) as u32;
+            }
+            if let Some(v) = t.get("cancel_rate") {
+                cfg.trace.cancel_rate = v.as_f64().unwrap_or(cfg.trace.cancel_rate);
+            }
+            if let Some(v) = t.get("accel_churn") {
+                cfg.trace.accel_churn = v.as_f64().unwrap_or(cfg.trace.accel_churn);
             }
             if let Some(v) = t.get("seed") {
                 cfg.trace.seed = v.as_u64().unwrap_or(cfg.trace.seed);
@@ -251,11 +295,33 @@ impl ExperimentConfig {
                     .ok_or_else(|| anyhow::anyhow!("unknown node_selection {key:?}"))?;
             }
         }
+        if let Some(g) = j.get("gogh") {
+            if let Some(v) = g.get("history_jobs") {
+                cfg.gogh.history_jobs = v.as_usize().unwrap_or(cfg.gogh.history_jobs);
+            }
+            if let Some(v) = g.get("enable_refinement") {
+                cfg.gogh.enable_refinement = v.as_bool().unwrap_or(cfg.gogh.enable_refinement);
+            }
+            if let Some(v) = g.get("exploration_epsilon") {
+                cfg.gogh.exploration_epsilon =
+                    v.as_f64().unwrap_or(cfg.gogh.exploration_epsilon);
+            }
+            if let Some(v) = g.get("full_resolve_every") {
+                cfg.gogh.full_resolve_every =
+                    v.as_usize().unwrap_or(cfg.gogh.full_resolve_every).max(1);
+            }
+            if let Some(v) = g.get("neighborhood") {
+                cfg.gogh.neighborhood = v.as_usize().unwrap_or(cfg.gogh.neighborhood);
+            }
+        }
         if let Some(v) = j.get("monitor_interval_s") {
             cfg.monitor_interval_s = v.as_f64().unwrap_or(30.0);
         }
         if let Some(v) = j.get("noise_sigma") {
             cfg.noise_sigma = v.as_f64().unwrap_or(0.03);
+        }
+        if let Some(v) = j.get("migration_cost_s") {
+            cfg.migration_cost_s = v.as_f64().unwrap_or(0.0);
         }
         if let Some(v) = j.get("seed") {
             cfg.seed = v.as_u64().unwrap_or(17);
@@ -289,6 +355,8 @@ impl ExperimentConfig {
                     ("mean_work_s", self.trace.mean_work_s.into()),
                     ("slo_fraction", self.trace.slo_fraction.into()),
                     ("max_distributability", self.trace.max_distributability.into()),
+                    ("cancel_rate", self.trace.cancel_rate.into()),
+                    ("accel_churn", self.trace.accel_churn.into()),
                     ("seed", self.trace.seed.into()),
                 ]),
             ),
@@ -318,8 +386,19 @@ impl ExperimentConfig {
                     ("node_selection", self.optimizer.node_selection.key().into()),
                 ]),
             ),
+            (
+                "gogh",
+                Json::obj(vec![
+                    ("history_jobs", self.gogh.history_jobs.into()),
+                    ("enable_refinement", self.gogh.enable_refinement.into()),
+                    ("exploration_epsilon", self.gogh.exploration_epsilon.into()),
+                    ("full_resolve_every", self.gogh.full_resolve_every.into()),
+                    ("neighborhood", self.gogh.neighborhood.into()),
+                ]),
+            ),
             ("monitor_interval_s", self.monitor_interval_s.into()),
             ("noise_sigma", self.noise_sigma.into()),
+            ("migration_cost_s", self.migration_cost_s.into()),
             ("seed", self.seed.into()),
             (
                 "gavel_csv",
@@ -400,5 +479,38 @@ mod tests {
         assert!(
             ExperimentConfig::from_json(r#"{"cluster": {"accel_mix": {"h100": 2}}}"#).is_err()
         );
+    }
+
+    #[test]
+    fn gogh_policy_knobs_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.gogh.history_jobs = 7;
+        cfg.gogh.enable_refinement = false;
+        cfg.gogh.exploration_epsilon = 0.25;
+        cfg.gogh.full_resolve_every = 3;
+        cfg.gogh.neighborhood = 2;
+        cfg.migration_cost_s = 45.0;
+        cfg.trace.cancel_rate = 0.2;
+        cfg.trace.accel_churn = 1.5;
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.gogh.history_jobs, 7);
+        assert!(!back.gogh.enable_refinement);
+        assert_eq!(back.gogh.exploration_epsilon, 0.25);
+        assert_eq!(back.gogh.full_resolve_every, 3);
+        assert_eq!(back.gogh.neighborhood, 2);
+        assert_eq!(back.migration_cost_s, 45.0);
+        assert_eq!(back.trace.cancel_rate, 0.2);
+        assert_eq!(back.trace.accel_churn, 1.5);
+        // defaults survive omission
+        let d = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(d.gogh.history_jobs, 24);
+        assert!(d.gogh.enable_refinement);
+        assert_eq!(d.gogh.exploration_epsilon, 0.0);
+        assert_eq!(d.gogh.full_resolve_every, 8);
+        assert_eq!(d.migration_cost_s, 0.0);
+        assert_eq!(d.trace.cancel_rate, 0.0);
+        // full_resolve_every is clamped to ≥ 1 (0 would never re-solve)
+        let z = ExperimentConfig::from_json(r#"{"gogh": {"full_resolve_every": 0}}"#).unwrap();
+        assert_eq!(z.gogh.full_resolve_every, 1);
     }
 }

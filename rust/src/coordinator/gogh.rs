@@ -17,21 +17,27 @@
 //! simulator, with catalog history seeding and estimator bootstrap
 //! training.
 
-use std::collections::HashSet;
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 use crate::catalog::{Catalog, EstimateKey, SimilarityIndex};
-use crate::cluster::{Cluster, ClusterSpec, Measurement, Placement};
+use crate::cluster::{AccelId, Cluster, ClusterSpec, Measurement, Placement, PlacementDelta};
 use crate::config::ExperimentConfig;
 use crate::coordinator::history;
-use crate::coordinator::optimizer::Optimizer;
+use crate::coordinator::optimizer::{self, Optimizer};
 use crate::coordinator::refinement::{self, catalog_value};
-use crate::coordinator::scheduler::{Scheduler, SimDriver};
+use crate::coordinator::scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};
+use crate::ilp::branch_bound::{BnbConfig, BnbStatus};
+use crate::ilp::problem1::{solve_problem1, Problem1Input};
 use crate::metrics::{ErrorTracker, RunReport};
 use crate::runtime::dataset::Sample;
 use crate::runtime::{Engine, Estimator};
 use crate::workload::encoding::p1_row;
-use crate::workload::{AccelType, Combo, JobId, ThroughputOracle, Trace, ACCEL_TYPES};
+use crate::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, ACCEL_TYPES};
 use crate::Result;
+
+/// Node budget of the bounded local ILP on the incremental arrival path
+/// (the full re-solve budget is `OptimizerConfig::max_nodes`).
+const LOCAL_NODE_BUDGET: usize = 400;
 
 /// Knobs for the scheduler (subset of [`ExperimentConfig`] plus history
 /// size; see config.rs for field docs).
@@ -50,6 +56,12 @@ pub struct GoghOptions {
     /// type, feeding P2 with cross-GPU observations it would otherwise
     /// never get. 0 disables (the paper's baseline behaviour).
     pub exploration_epsilon: f64,
+    /// Escape hatch for the incremental arrival path: a full Problem-1
+    /// re-solve is forced every K non-tick events (1 = always full).
+    pub full_resolve_every: usize,
+    /// Neighborhood size of the incremental arrival path (0 disables
+    /// incremental solving — every arrival re-solves the full ILP).
+    pub neighborhood: usize,
     pub seed: u64,
 }
 
@@ -61,7 +73,38 @@ impl Default for GoghOptions {
             history_jobs: 24,
             enable_refinement: true,
             exploration_epsilon: 0.0,
+            full_resolve_every: 8,
+            neighborhood: 4,
             seed: 17,
+        }
+    }
+}
+
+/// Decision-path solver statistics split by path (reported by the e2e
+/// bench: the incremental neighborhood ILP must explore fewer nodes per
+/// solve than the full re-solve).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolverPathStats {
+    pub full_solves: usize,
+    pub full_nodes: usize,
+    pub incremental_solves: usize,
+    pub incremental_nodes: usize,
+}
+
+impl SolverPathStats {
+    pub fn mean_full_nodes(&self) -> f64 {
+        if self.full_solves == 0 {
+            0.0
+        } else {
+            self.full_nodes as f64 / self.full_solves as f64
+        }
+    }
+
+    pub fn mean_incremental_nodes(&self) -> f64 {
+        if self.incremental_solves == 0 {
+            0.0
+        } else {
+            self.incremental_nodes as f64 / self.incremental_solves as f64
         }
     }
 }
@@ -81,6 +124,11 @@ pub struct GoghScheduler {
     rng: crate::util::Rng,
     p1_calls: usize,
     p1_seconds: f64,
+    /// non-tick events since the last full re-solve (escape hatch).
+    events_since_full: usize,
+    inc_solves: usize,
+    inc_nodes: usize,
+    inc_seconds: f64,
 }
 
 impl GoghScheduler {
@@ -106,6 +154,10 @@ impl GoghScheduler {
             rng: crate::util::Rng::seed_from_u64(options.seed ^ 0x6064),
             p1_calls: 0,
             p1_seconds: 0.0,
+            events_since_full: 0,
+            inc_solves: 0,
+            inc_nodes: 0,
+            inc_seconds: 0.0,
             options,
         };
         if s.options.history_jobs > 0 {
@@ -331,10 +383,9 @@ impl GoghScheduler {
             .collect();
         counts.sort_by_key(|&(n, a)| (n, a.index()));
         for (_, target) in counts {
-            // a free instance of that type?
-            let free = cluster
-                .spec
-                .accels
+            // a free in-service instance of that type?
+            let accels = cluster.available_accels();
+            let free = accels
                 .iter()
                 .find(|aid| aid.accel == target && placement.combo_on(**aid).is_none());
             if let Some(&aid) = free {
@@ -379,20 +430,20 @@ impl GoghScheduler {
     }
 }
 
-impl Scheduler for GoghScheduler {
-    fn name(&self) -> &str {
-        "gogh"
+impl GoghScheduler {
+    /// Decision-path solver statistics, split by full vs incremental.
+    pub fn solver_stats(&self) -> SolverPathStats {
+        SolverPathStats {
+            full_solves: self.opt.solves,
+            full_nodes: self.opt.total_nodes,
+            incremental_solves: self.inc_solves,
+            incremental_nodes: self.inc_nodes,
+        }
     }
 
-    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
-        // round-0 estimates for any job we haven't seen
-        let ids = cluster.active_job_ids();
-        for j in &ids {
-            if !self.initialized.contains(j) {
-                self.initial_estimates(cluster, *j)?;
-            }
-        }
-        // Problem 1 over current catalog values
+    /// Full Problem-1 re-solve over every active job (the escape hatch
+    /// and the pre-redesign behaviour), returned as a delta.
+    fn full_allocate(&mut self, cluster: &Cluster) -> Result<Decision> {
         let catalog = &self.catalog;
         let thr = move |a: AccelType, j: JobId, c: &Combo| catalog_value(catalog, a, j, c);
         let (mut placement, _sol) = self.opt.allocate(cluster, &thr)?;
@@ -402,10 +453,113 @@ impl Scheduler for GoghScheduler {
         {
             self.explore(cluster, &mut placement);
         }
-        Ok(placement)
+        self.events_since_full = 0;
+        Ok(Decision::replace(&cluster.placement, &placement))
     }
 
-    fn observe(&mut self, measurements: &[Measurement], _cluster: &Cluster) -> Result<()> {
+    /// Bounded local re-solve for one arrival: only the new job and its
+    /// best co-location neighborhood enter the ILP; every other running
+    /// job keeps its instances untouched. Returns `None` whenever the
+    /// local problem is not cleanly solvable (caller falls back to the
+    /// full re-solve).
+    fn incremental_arrival(
+        &mut self,
+        cluster: &Cluster,
+        j1: JobId,
+    ) -> Result<Option<PlacementDelta>> {
+        let k = self.options.neighborhood;
+        if k == 0 {
+            return Ok(None);
+        }
+        // older unplaced jobs need global capacity — go full
+        let active = cluster.active_job_ids();
+        if active.iter().any(|&j| j != j1 && !cluster.placement.is_placed(j)) {
+            return Ok(None);
+        }
+        // rank co-location partners by estimated pair synergy
+        let mut scored: Vec<(f64, JobId)> = active
+            .iter()
+            .filter(|&&j| j != j1)
+            .map(|&j| {
+                let c = Combo::pair(j1, j);
+                let s = catalog_value(&self.catalog, AccelType::V100, j1, &c)
+                    + catalog_value(&self.catalog, AccelType::V100, j, &c);
+                (s, j)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut nbr: BTreeSet<JobId> = scored.iter().take(k).map(|&(_, j)| j).collect();
+        nbr.insert(j1);
+        // close under co-location: drop members paired with outsiders
+        loop {
+            let victim = nbr.iter().copied().find(|&j| {
+                cluster.placement.accels_of(j).iter().any(|aid| {
+                    cluster
+                        .placement
+                        .combo_on(*aid)
+                        .map_or(false, |c| c.jobs().iter().any(|x| !nbr.contains(x)))
+                })
+            });
+            match victim {
+                Some(j) => {
+                    nbr.remove(&j);
+                }
+                None => break,
+            }
+        }
+        // instance pool: free in-service instances + instances wholly
+        // owned by the neighborhood
+        let pool: Vec<AccelId> = cluster
+            .available_accels()
+            .into_iter()
+            .filter(|aid| match cluster.placement.combo_on(*aid) {
+                None => true,
+                Some(c) => c.jobs().iter().all(|j| nbr.contains(j)),
+            })
+            .collect();
+        if pool.is_empty() {
+            return Ok(None);
+        }
+        let jobs: Vec<JobSpec> = nbr.iter().filter_map(|j| cluster.job(*j).cloned()).collect();
+        let mut counts: HashMap<AccelType, u32> = HashMap::new();
+        for a in &pool {
+            *counts.entry(a.accel).or_default() += 1;
+        }
+        let ocfg = self.options.optimizer.clone();
+        let catalog = &self.catalog;
+        let thr = move |a: AccelType, j: JobId, c: &Combo| catalog_value(catalog, a, j, c);
+        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &solo_cap,
+            max_pairs_per_job: ocfg.max_pairs_per_job,
+            slack_penalty: Some(ocfg.slack_penalty),
+            throughput_bonus: ocfg.throughput_bonus,
+        };
+        let bnb = BnbConfig {
+            max_nodes: ocfg.max_nodes.min(LOCAL_NODE_BUDGET),
+            time_limit_s: ocfg.time_limit_s,
+            auto_warm_start: ocfg.warm_start,
+            node_selection: ocfg.node_selection,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let sol = solve_problem1(&input, &bnb);
+        self.inc_seconds += t0.elapsed().as_secs_f64();
+        self.inc_solves += 1;
+        self.inc_nodes += sol.nodes;
+        let solved = matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible);
+        if !solved || !sol.violated_jobs.is_empty() {
+            return Ok(None);
+        }
+        Ok(optimizer::bind_pool(cluster, &pool, &sol))
+    }
+
+    /// Monitoring round: score estimates, record measurements, run P2
+    /// refinement and take online training steps.
+    fn on_monitor_tick(&mut self, measurements: &[Measurement]) -> Result<()> {
         self.round += 1;
         // score pre-measurement estimates, then record measurements
         for m in measurements {
@@ -443,18 +597,82 @@ impl Scheduler for GoghScheduler {
         }
         Ok(())
     }
+}
+
+impl Scheduler for GoghScheduler {
+    fn name(&self) -> &str {
+        "gogh"
+    }
+
+    fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+        match event {
+            ClusterEvent::JobArrived { job } => {
+                // round-0 estimates for any job we haven't seen
+                for j in cluster.active_job_ids() {
+                    if !self.initialized.contains(&j) {
+                        self.initial_estimates(cluster, j)?;
+                    }
+                }
+                self.events_since_full += 1;
+                if self.events_since_full < self.options.full_resolve_every.max(1) {
+                    if let Some(delta) = self.incremental_arrival(cluster, *job)? {
+                        return Ok(Decision::apply(delta));
+                    }
+                }
+                self.full_allocate(cluster)
+            }
+            ClusterEvent::JobCompleted { .. } | ClusterEvent::JobCancelled { .. } => {
+                // departures free capacity in place (co-runners are
+                // re-hosted solo); compaction happens on the periodic
+                // full re-solve. Queued (unplaced) jobs force a re-solve
+                // now — the freed capacity may be their only chance to
+                // run before the event stream dries up.
+                self.events_since_full += 1;
+                if cluster.n_jobs() == 0 {
+                    return Ok(Decision::none());
+                }
+                let unplaced = cluster
+                    .active_job_ids()
+                    .iter()
+                    .any(|&j| !cluster.placement.is_placed(j));
+                if unplaced || self.events_since_full >= self.options.full_resolve_every.max(1) {
+                    return self.full_allocate(cluster);
+                }
+                Ok(Decision::none())
+            }
+            ClusterEvent::AccelDown { .. } | ClusterEvent::AccelUp { .. } => {
+                // capacity changed (possibly stranding evicted jobs):
+                // re-solve globally
+                self.events_since_full += 1;
+                if cluster.n_jobs() == 0 {
+                    return Ok(Decision::none());
+                }
+                self.full_allocate(cluster)
+            }
+            ClusterEvent::MonitorTick { measurements } => {
+                self.on_monitor_tick(measurements)?;
+                Ok(Decision::none())
+            }
+        }
+    }
 
     fn estimation_mae(&self) -> Option<f64> {
         (self.errors.n() > 0).then(|| self.errors.mae())
     }
 
     fn decision_latencies(&self) -> (f64, f64) {
+        let solves = self.opt.solves + self.inc_solves;
+        let solve_ms = if solves == 0 {
+            0.0
+        } else {
+            1000.0 * (self.opt.solve_seconds + self.inc_seconds) / solves as f64
+        };
         let p1_ms = if self.p1_calls == 0 {
             0.0
         } else {
             1000.0 * self.p1_seconds / self.p1_calls as f64
         };
-        (self.opt.mean_solve_ms(), p1_ms)
+        (solve_ms, p1_ms)
     }
 }
 
@@ -475,28 +693,27 @@ impl Gogh {
         let oracle = cfg.build_oracle()?;
         let trace = Trace::generate(&cfg.trace, &oracle);
         let spec = ClusterSpec::mix(&cfg.cluster.accel_mix);
-        let monitor_interval = if cfg.monitor_interval_s > 0.0 {
-            cfg.monitor_interval_s
-        } else {
-            30.0
-        };
+        // monitor_interval_s is validated (once) by SimDriver::new
         let driver = SimDriver::new(
             spec,
             oracle.clone(),
             trace,
             cfg.noise_sigma,
-            monitor_interval,
+            cfg.monitor_interval_s,
             cfg.seed,
-        );
+        )?
+        .with_migration_cost(cfg.migration_cost_s);
         let scheduler = GoghScheduler::new(
             engine,
             &oracle,
             GoghOptions {
                 estimator: cfg.estimator.clone(),
                 optimizer: cfg.optimizer.clone(),
-                history_jobs: 24,
-                enable_refinement: true,
-                exploration_epsilon: 0.0,
+                history_jobs: cfg.gogh.history_jobs,
+                enable_refinement: cfg.gogh.enable_refinement,
+                exploration_epsilon: cfg.gogh.exploration_epsilon,
+                full_resolve_every: cfg.gogh.full_resolve_every,
+                neighborhood: cfg.gogh.neighborhood,
                 seed: cfg.seed,
             },
         )?;

@@ -11,6 +11,6 @@ pub mod optimizer;
 pub mod refinement;
 pub mod scheduler;
 
-pub use gogh::{Gogh, GoghOptions, GoghScheduler};
+pub use gogh::{Gogh, GoghOptions, GoghScheduler, SolverPathStats};
 pub use optimizer::Optimizer;
-pub use scheduler::{Scheduler, SimDriver};
+pub use scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};

@@ -3,9 +3,9 @@
 //! (type-level) solution onto concrete accelerator instances with
 //! migration-minimizing stability.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use crate::cluster::{AccelId, Cluster, Placement};
+use crate::cluster::{AccelId, Cluster, Placement, PlacementDelta};
 use crate::config::OptimizerConfig;
 use crate::ilp::branch_bound::BnbConfig;
 use crate::ilp::problem1::{solve_problem1, AllocationSolution, Problem1Input};
@@ -66,8 +66,9 @@ impl Optimizer {
             v.sort_by_key(|j| j.id);
             v
         };
+        // capacity = in-service instances only (AccelDown churn)
         let mut counts: HashMap<AccelType, u32> = HashMap::new();
-        for a in &cluster.spec.accels {
+        for a in cluster.available_accels() {
             *counts.entry(a.accel).or_default() += 1;
         }
         let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
@@ -105,10 +106,10 @@ impl Optimizer {
 /// migrations).
 fn bind_instances(cluster: &Cluster, sol: &AllocationSolution) -> Result<Placement> {
     let mut placement = Placement::new();
-    // instances per type, stable order
+    // in-service instances per type, stable order
     let mut by_type: HashMap<AccelType, Vec<AccelId>> = HashMap::new();
-    for a in &cluster.spec.accels {
-        by_type.entry(a.accel).or_default().push(*a);
+    for a in cluster.available_accels() {
+        by_type.entry(a.accel).or_default().push(a);
     }
     for v in by_type.values_mut() {
         v.sort();
@@ -153,6 +154,83 @@ fn bind_instances(cluster: &Cluster, sol: &AllocationSolution) -> Result<Placeme
         anyhow::ensure!(left == 0, "solution over-subscribes {a:?} (leftover {left})");
     }
     Ok(placement)
+}
+
+/// Bind a (local) allocation solution onto a restricted instance pool
+/// as an incremental delta against the current placement. Combos that
+/// already run on a pool instance stay put (no ops); everything else in
+/// the pool is evicted and re-assigned. Instances outside the pool are
+/// untouched — this is the delta the GOGH incremental arrival path
+/// applies after its bounded neighborhood ILP.
+///
+/// Returns `None` when the pool cannot host the solution (the caller
+/// falls back to a full re-solve).
+pub(crate) fn bind_pool(
+    cluster: &Cluster,
+    pool: &[AccelId],
+    sol: &AllocationSolution,
+) -> Option<PlacementDelta> {
+    let mut by_type: HashMap<AccelType, Vec<AccelId>> = HashMap::new();
+    for a in pool {
+        by_type.entry(a.accel).or_default().push(*a);
+    }
+    for v in by_type.values_mut() {
+        v.sort();
+    }
+    let mut target: HashMap<AccelId, Combo> = HashMap::new();
+    let mut used: HashSet<AccelId> = HashSet::new();
+    // pass 1: keep combos where they already run
+    let mut remaining: Vec<(AccelType, Combo, u32)> = vec![];
+    for &(a, combo, mult) in &sol.assignments {
+        let mut left = mult;
+        for aid in by_type.get(&a).map(|v| v.as_slice()).unwrap_or(&[]) {
+            if left == 0 {
+                break;
+            }
+            if used.contains(aid) {
+                continue;
+            }
+            if cluster.placement.combo_on(*aid) == Some(&combo) {
+                target.insert(*aid, combo);
+                used.insert(*aid);
+                left -= 1;
+            }
+        }
+        if left > 0 {
+            remaining.push((a, combo, left));
+        }
+    }
+    // pass 2: fill the rest
+    for (a, combo, mult) in remaining {
+        let mut left = mult;
+        for aid in by_type.get(&a).map(|v| v.as_slice()).unwrap_or(&[]) {
+            if left == 0 {
+                break;
+            }
+            if used.contains(aid) {
+                continue;
+            }
+            target.insert(*aid, combo);
+            used.insert(*aid);
+            left -= 1;
+        }
+        if left > 0 {
+            return None;
+        }
+    }
+    // pool-scoped delta: restrict both sides to the pool and reuse the
+    // canonical evict-before-assign diff
+    let mut current_pool = Placement::new();
+    let mut target_pool = Placement::new();
+    for aid in pool {
+        if let Some(c) = cluster.placement.combo_on(*aid) {
+            current_pool.assign(*aid, *c);
+        }
+        if let Some(c) = target.get(aid) {
+            target_pool.assign(*aid, *c);
+        }
+    }
+    Some(PlacementDelta::diff(&current_pool, &target_pool))
 }
 
 #[cfg(test)]

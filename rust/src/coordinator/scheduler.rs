@@ -1,32 +1,94 @@
-//! Scheduler trait + the shared discrete-event simulation driver.
+//! Event-driven scheduler API + the shared discrete-event simulation
+//! driver.
 //!
-//! Every policy (GOGH and the baselines) implements [`Scheduler`]; the
-//! [`SimDriver`] replays a trace against a policy, integrating energy,
-//! SLO deficit, migrations and completion times into a
+//! Every policy (GOGH and the baselines) implements [`Scheduler`]: the
+//! driver dispatches one [`ClusterEvent`] at a time (arrival,
+//! completion, cancellation, monitor tick, accelerator churn) from a
+//! time-ordered event queue, and the policy answers with a [`Decision`]
+//! carrying an incremental [`PlacementDelta`] that the cluster validates
+//! and applies atomically. The [`SimDriver`] replays a trace against a
+//! policy, integrating energy, SLO deficit, migrations (with a
+//! configurable restart penalty) and completion times into a
 //! [`crate::metrics::RunReport`]. Using one driver for all policies is
 //! what makes the e2e comparison table apples-to-apples.
 
-use std::collections::HashMap;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::energy::{placement_loads, EnergyMeter};
-use crate::cluster::{Cluster, ClusterSpec, Measurement, Monitor, Placement};
+use crate::cluster::{
+    AccelId, Cluster, ClusterSpec, Measurement, Monitor, Placement, PlacementDelta, PlacementOp,
+};
 use crate::metrics::RunReport;
-use crate::workload::{AccelType, JobId, ThroughputOracle, Trace, TraceEvent};
+use crate::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, TraceEvent};
 use crate::Result;
 
-/// A placement policy.
+/// One event in the life of the cluster, dispatched to the policy.
+///
+/// State transitions (job registration, eviction on `AccelDown`) happen
+/// *before* dispatch, so the policy always sees the post-event cluster
+/// and only has to answer with a placement delta.
+#[derive(Debug, Clone)]
+pub enum ClusterEvent {
+    /// `job` is registered and waiting for its first placement.
+    JobArrived { job: JobId },
+    /// `job` finished and was removed (a co-runner, if any, was
+    /// re-hosted solo on the same instance).
+    JobCompleted { job: JobId },
+    /// `job` was cancelled by its owner and removed.
+    JobCancelled { job: JobId },
+    /// Periodic monitoring round: noisy throughput measurements of the
+    /// current placement (learning schedulers refine estimates here).
+    MonitorTick { measurements: Vec<Measurement> },
+    /// `accel` went out of service; any jobs it hosted are now unplaced.
+    AccelDown { accel: AccelId },
+    /// `accel` came back into service.
+    AccelUp { accel: AccelId },
+}
+
+/// A policy's answer to one event: the placement ops to apply now.
+#[derive(Debug, Clone, Default)]
+pub struct Decision {
+    pub delta: PlacementDelta,
+}
+
+impl Decision {
+    /// Change nothing.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Apply an explicit delta.
+    pub fn apply(delta: PlacementDelta) -> Self {
+        Self { delta }
+    }
+
+    /// Single-op convenience: host `combo` on `accel`.
+    pub fn assign(accel: AccelId, combo: Combo) -> Self {
+        Self {
+            delta: PlacementDelta {
+                ops: vec![PlacementOp::Assign { accel, combo }],
+            },
+        }
+    }
+
+    /// Compatibility shim for full-placement policies: the delta that
+    /// turns `current` into `target` (unchanged instances cost nothing).
+    pub fn replace(current: &Placement, target: &Placement) -> Self {
+        Self {
+            delta: PlacementDelta::diff(current, target),
+        }
+    }
+}
+
+/// A placement policy reacting to the cluster event stream.
 pub trait Scheduler {
     fn name(&self) -> &str;
 
-    /// Produce a (full) placement for the currently active jobs.
-    /// Called on every arrival and departure.
-    fn allocate(&mut self, cluster: &Cluster) -> Result<Placement>;
-
-    /// Digest monitoring data (learning schedulers refine estimates and
-    /// train here; baselines ignore it).
-    fn observe(&mut self, _measurements: &[Measurement], _cluster: &Cluster) -> Result<()> {
-        Ok(())
-    }
+    /// React to one event with an incremental placement decision. The
+    /// cluster already reflects the event (see [`ClusterEvent`]); the
+    /// returned delta is validated and applied by the driver.
+    fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision>;
 
     /// Estimation MAE vs ground truth, if this scheduler estimates.
     fn estimation_mae(&self) -> Option<f64> {
@@ -39,6 +101,78 @@ pub trait Scheduler {
     }
 }
 
+/// Internal queue payloads (trace events + self-scheduling ticks).
+#[derive(Debug, Clone)]
+enum SimEvent {
+    Arrival(JobSpec),
+    Cancel(JobId),
+    MonitorTick,
+    AccelDown(AccelId),
+    AccelUp(AccelId),
+}
+
+struct QueueEntry {
+    at: f64,
+    seq: u64,
+    ev: SimEvent,
+}
+
+impl PartialEq for QueueEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for QueueEntry {}
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueueEntry {
+    /// `BinaryHeap` is a max-heap: earliest time pops first, ties break
+    /// by insertion order (lower seq first) for determinism.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Time-ordered event queue with deterministic FIFO tie-breaking.
+#[derive(Default)]
+struct EventQueue {
+    heap: BinaryHeap<QueueEntry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn push(&mut self, at: f64, ev: SimEvent) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(QueueEntry { at, seq, ev });
+    }
+
+    fn pop(&mut self) -> Option<QueueEntry> {
+        self.heap.pop()
+    }
+}
+
+/// Per-run bookkeeping (JCT, queueing delay, decision latency).
+#[derive(Default)]
+struct RunState {
+    jct_sum: f64,
+    arrival_time: HashMap<JobId, f64>,
+    first_place: HashMap<JobId, f64>,
+    queue_wait_sum: f64,
+    queue_waits: usize,
+    decision_s: f64,
+    /// jobs evicted by an AccelDown; they pay the restart penalty when
+    /// re-placed (the eviction happens outside `apply_delta`, so
+    /// `DeltaOutcome::migrated_jobs` cannot see them).
+    failure_evicted: std::collections::BTreeSet<JobId>,
+}
+
 /// Discrete-event simulation of a trace under a policy.
 pub struct SimDriver {
     pub cluster: Cluster,
@@ -47,11 +181,17 @@ pub struct SimDriver {
     meter_total: EnergyMeter,
     trace: Trace,
     monitor_interval_s: f64,
+    /// restart penalty charged to every migrated job (seconds of stall).
+    migration_cost_s: f64,
     /// max simulated seconds after the last arrival (safety stop)
     pub drain_limit_s: f64,
 }
 
 impl SimDriver {
+    /// Build a driver. Fails if `monitor_interval_s` is not strictly
+    /// positive — a zero interval would spin the event loop forever at
+    /// t = 0 (this is the single validation point; callers must not
+    /// patch the interval themselves).
     pub fn new(
         spec: ClusterSpec,
         oracle: ThroughputOracle,
@@ -59,68 +199,125 @@ impl SimDriver {
         noise_sigma: f64,
         monitor_interval_s: f64,
         seed: u64,
-    ) -> Self {
-        Self {
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            monitor_interval_s > 0.0 && monitor_interval_s.is_finite(),
+            "monitor_interval_s must be > 0 (got {monitor_interval_s})"
+        );
+        Ok(Self {
             cluster: Cluster::new(spec),
             monitor: Monitor::new(oracle, noise_sigma, seed),
             meter_busy: EnergyMeter::new(),
             meter_total: EnergyMeter::new(),
             trace,
             monitor_interval_s,
+            migration_cost_s: 0.0,
             drain_limit_s: 24.0 * 3600.0,
-        }
+        })
+    }
+
+    /// Charge every migrated job `cost_s` seconds of restart stall
+    /// (integrated into energy, SLO and JCT accounting).
+    pub fn with_migration_cost(mut self, cost_s: f64) -> Self {
+        self.migration_cost_s = cost_s.max(0.0);
+        self
     }
 
     /// Run the full trace; returns the report.
     pub fn run(&mut self, policy: &mut dyn Scheduler) -> Result<RunReport> {
         let mut report = RunReport {
             scheduler: policy.name().to_string(),
-            jobs_total: self.trace.len(),
+            jobs_total: self.trace.n_jobs(),
             ..Default::default()
         };
-        let mut arrivals: Vec<(f64, crate::workload::JobSpec)> = self
-            .trace
-            .events
-            .iter()
-            .map(|TraceEvent::Arrival { at, job }| (*at, job.clone()))
-            .collect();
-        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut next_arrival = 0usize;
-        let mut arrival_time: HashMap<JobId, f64> = HashMap::new();
-        let mut jct_sum = 0.0f64;
-        let last_arrival_t = arrivals.last().map(|(t, _)| *t).unwrap_or(0.0);
-        let mut next_tick = self.monitor_interval_s;
+        let mut state = RunState::default();
+        let mut queue = EventQueue::default();
+        let mut arrivals_pending = 0usize;
+        let mut last_arrival_t = 0.0f64;
+        let n_accels = self.cluster.spec.len();
+        for ev in &self.trace.events {
+            match ev {
+                TraceEvent::Arrival { at, job } => {
+                    queue.push(*at, SimEvent::Arrival(job.clone()));
+                    arrivals_pending += 1;
+                    last_arrival_t = last_arrival_t.max(*at);
+                }
+                TraceEvent::Cancel { at, job } => queue.push(*at, SimEvent::Cancel(*job)),
+                TraceEvent::AccelChurn { at, accel_index, up } if n_accels > 0 => {
+                    let aid = self.cluster.spec.accels[accel_index % n_accels];
+                    let ev = if *up {
+                        SimEvent::AccelUp(aid)
+                    } else {
+                        SimEvent::AccelDown(aid)
+                    };
+                    queue.push(*at, ev);
+                }
+                TraceEvent::AccelChurn { .. } => {} // no accelerators to churn
+            }
+        }
+        queue.push(self.monitor_interval_s, SimEvent::MonitorTick);
+        // Distinct trace cycles can collide on one physical instance
+        // (accel_index is taken modulo the cluster size), so outages are
+        // reference-counted: an instance is down while any cycle holds it.
+        let mut down_votes: HashMap<AccelId, u32> = HashMap::new();
 
-        loop {
+        while let Some(entry) = queue.pop() {
             let now = self.cluster.now();
-            // next event: arrival or monitor tick
-            let t_arr = arrivals.get(next_arrival).map(|(t, _)| *t);
-            let t_next = match t_arr {
-                Some(ta) if ta <= next_tick => ta,
-                _ => next_tick,
-            };
-
-            // ---- integrate the interval [now, t_next]
-            self.integrate(now, t_next, &mut report, &mut jct_sum, &arrival_time, policy)?;
-            self.cluster.advance_to(t_next);
+            let t = entry.at.max(now);
+            // ---- integrate [now, t] (detects + dispatches completions)
+            self.integrate(now, t, policy, &mut report, &mut state)?;
+            self.cluster.advance_to(t);
 
             // ---- dispatch the event
-            if t_arr == Some(t_next) {
-                let (_, job) = arrivals[next_arrival].clone();
-                next_arrival += 1;
-                arrival_time.insert(job.id, t_next);
-                self.cluster.add_job(job);
-                let new_placement = policy.allocate(&self.cluster)?;
-                report.migrations += self.cluster.placement.diff_count(&new_placement);
-                self.cluster.placement = new_placement;
-            } else {
-                next_tick = t_next + self.monitor_interval_s;
-                let measurements = self.monitor.sample(&self.cluster);
-                policy.observe(&measurements, &self.cluster)?;
+            match entry.ev {
+                SimEvent::Arrival(job) => {
+                    arrivals_pending -= 1;
+                    let id = job.id;
+                    state.arrival_time.insert(id, t);
+                    self.cluster.add_job(job);
+                    let ev = ClusterEvent::JobArrived { job: id };
+                    self.dispatch(policy, ev, &mut report, &mut state)?;
+                }
+                SimEvent::Cancel(j) => {
+                    // ignore cancellations racing a completed/unknown job
+                    if self.cluster.job(j).is_some() {
+                        self.cluster.remove_job(j);
+                        report.jobs_cancelled += 1;
+                        let ev = ClusterEvent::JobCancelled { job: j };
+                        self.dispatch(policy, ev, &mut report, &mut state)?;
+                    }
+                }
+                SimEvent::MonitorTick => {
+                    let measurements = self.monitor.sample(&self.cluster);
+                    let ev = ClusterEvent::MonitorTick { measurements };
+                    self.dispatch(policy, ev, &mut report, &mut state)?;
+                    queue.push(t + self.monitor_interval_s, SimEvent::MonitorTick);
+                }
+                SimEvent::AccelDown(a) => {
+                    let votes = down_votes.entry(a).or_insert(0);
+                    *votes += 1;
+                    if *votes == 1 {
+                        let evicted = self.cluster.set_accel_down(a);
+                        state.failure_evicted.extend(evicted);
+                        let ev = ClusterEvent::AccelDown { accel: a };
+                        self.dispatch(policy, ev, &mut report, &mut state)?;
+                    }
+                }
+                SimEvent::AccelUp(a) => {
+                    let votes = down_votes.entry(a).or_insert(0);
+                    if *votes > 0 {
+                        *votes -= 1;
+                        if *votes == 0 {
+                            self.cluster.set_accel_up(a);
+                            let ev = ClusterEvent::AccelUp { accel: a };
+                            self.dispatch(policy, ev, &mut report, &mut state)?;
+                        }
+                    }
+                }
             }
 
             // ---- termination
-            let drained = next_arrival >= arrivals.len() && self.cluster.n_jobs() == 0;
+            let drained = arrivals_pending == 0 && self.cluster.n_jobs() == 0;
             let timed_out = self.cluster.now() > last_arrival_t + self.drain_limit_s;
             if drained || timed_out {
                 break;
@@ -131,9 +328,19 @@ impl SimDriver {
         report.energy_joules = self.meter_busy.total_joules();
         report.total_energy_joules = self.meter_total.total_joules();
         report.mean_jct = if report.jobs_completed > 0 {
-            jct_sum / report.jobs_completed as f64
+            state.jct_sum / report.jobs_completed as f64
         } else {
             f64::NAN
+        };
+        report.mean_queue_s = if state.queue_waits > 0 {
+            state.queue_wait_sum / state.queue_waits as f64
+        } else {
+            0.0
+        };
+        report.mean_decision_ms = if report.events > 0 {
+            1000.0 * state.decision_s / report.events as f64
+        } else {
+            0.0
         };
         report.estimation_mae = policy.estimation_mae();
         let (solve_ms, p1_ms) = policy.decision_latencies();
@@ -142,37 +349,85 @@ impl SimDriver {
         Ok(report)
     }
 
+    /// Ask the policy for a decision, apply + validate its delta, and
+    /// account migrations, restart penalties and queueing delays.
+    fn dispatch(
+        &mut self,
+        policy: &mut dyn Scheduler,
+        event: ClusterEvent,
+        report: &mut RunReport,
+        state: &mut RunState,
+    ) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let decision = policy.on_event(&event, &self.cluster)?;
+        state.decision_s += t0.elapsed().as_secs_f64();
+        report.events += 1;
+        let outcome = self.cluster.apply_delta(&decision.delta)?;
+        report.migrations += outcome.moves;
+        // jobs restarting from scratch: migrated by this delta, plus any
+        // failure-evicted job re-placed now (unplaced when the delta
+        // applied, so migrated_jobs cannot see it — the sets are disjoint)
+        let mut restarted = outcome.migrated_jobs;
+        let replaced: Vec<JobId> = state
+            .failure_evicted
+            .iter()
+            .copied()
+            .filter(|j| self.cluster.placement.is_placed(*j))
+            .collect();
+        for j in &replaced {
+            state.failure_evicted.remove(j);
+        }
+        restarted.extend(replaced);
+        if self.migration_cost_s > 0.0 {
+            let until = self.cluster.now() + self.migration_cost_s;
+            for j in restarted {
+                // stall_job returns the stall actually added, so
+                // overlapping penalties extend rather than double-charge
+                report.migration_stall_s += self.cluster.stall_job(j, until);
+            }
+        }
+        // queueing delay: record the first time each job gets capacity
+        let now = self.cluster.now();
+        for j in self.cluster.active_job_ids() {
+            if self.cluster.placement.is_placed(j) && !state.first_place.contains_key(&j) {
+                state.first_place.insert(j, now);
+                let arrived = state.arrival_time.get(&j).copied().unwrap_or(now);
+                state.queue_wait_sum += now - arrived;
+                state.queue_waits += 1;
+            }
+        }
+        Ok(())
+    }
+
     /// Advance work, energy and SLO accounting over [t0, t1] using the
     /// ground-truth throughputs of the current placement (the substrate
     /// "runs" the jobs; schedulers only ever see monitor samples).
+    /// Jobs inside their migration-restart window make no progress.
     fn integrate(
         &mut self,
         t0: f64,
         t1: f64,
-        report: &mut RunReport,
-        jct_sum: &mut f64,
-        arrival_time: &HashMap<JobId, f64>,
         policy: &mut dyn Scheduler,
+        report: &mut RunReport,
+        state: &mut RunState,
     ) -> Result<()> {
         let dt = t1 - t0;
         if dt <= 0.0 {
             return Ok(());
         }
-        // ground-truth throughput per (job, accel)
+        // ground-truth throughput per job
         let oracle = self.monitor.oracle().clone();
         let mut per_job: HashMap<JobId, f64> = HashMap::new();
-        let mut per_accel: HashMap<crate::cluster::AccelId, f64> = HashMap::new();
         for (aid, combo) in self.cluster.placement.iter() {
             for j in combo.jobs() {
                 let spec = self.cluster.job(j).expect("placed job registered");
                 let lookup = |id: JobId| self.cluster.job(id).cloned();
                 let t = oracle.throughput(spec, combo, aid.accel, &lookup);
                 *per_job.entry(j).or_default() += t;
-                *per_accel.entry(*aid).or_default() += t;
             }
         }
 
-        // energy: busy = only instances hosting work; total = whole cluster
+        // energy: busy = only instances hosting work; total = in-service
         let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
         let loads = placement_loads(
             &self.cluster.placement,
@@ -184,24 +439,28 @@ impl SimDriver {
             },
             &|aid| solo_cap(aid.accel),
         );
-        let busy: Vec<crate::cluster::AccelId> = loads.keys().copied().collect();
+        let busy: Vec<AccelId> = loads.keys().copied().collect();
         self.meter_busy.accrue(t1, &busy, &loads);
-        self.meter_total.accrue(t1, &self.cluster.spec.accels, &loads);
+        let in_service = self.cluster.available_accels();
+        self.meter_total.accrue(t1, &in_service, &loads);
 
-        // SLO + progress + completion
+        // SLO + progress + completion (stalled jobs make no progress)
         let mut slo_violated = false;
         let ids = self.cluster.active_job_ids();
         let mut completed: Vec<JobId> = vec![];
         for id in ids {
             let achieved = per_job.get(&id).copied().unwrap_or(0.0);
+            let stalled_until = self.cluster.stalled_until(id);
+            let run_dt = (t1 - stalled_until.max(t0)).clamp(0.0, dt);
+            let avg = achieved * run_dt / dt;
             let spec = self.cluster.job(id).unwrap();
-            let deficit = (spec.min_throughput - achieved).max(0.0);
+            let deficit = (spec.min_throughput - avg).max(0.0);
             if deficit > 1e-9 {
                 report.slo_deficit += deficit * dt;
                 slo_violated = true;
             }
             let j = self.cluster.job_mut(id).unwrap();
-            j.work -= achieved * dt;
+            j.work -= achieved * run_dt;
             if j.work <= 0.0 {
                 completed.push(id);
             }
@@ -210,15 +469,12 @@ impl SimDriver {
             report.slo_violations += 1;
         }
         if !completed.is_empty() {
+            self.cluster.advance_to(t1);
             for id in completed {
                 self.cluster.remove_job(id);
                 report.jobs_completed += 1;
-                *jct_sum += t1 - arrival_time.get(&id).copied().unwrap_or(0.0);
-            }
-            if self.cluster.n_jobs() > 0 {
-                let new_placement = policy.allocate(&self.cluster)?;
-                report.migrations += self.cluster.placement.diff_count(&new_placement);
-                self.cluster.placement = new_placement;
+                state.jct_sum += t1 - state.arrival_time.get(&id).copied().unwrap_or(0.0);
+                self.dispatch(policy, ClusterEvent::JobCompleted { job: id }, report, state)?;
             }
         }
         Ok(())
@@ -228,23 +484,48 @@ impl SimDriver {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::{Combo, TraceConfig};
+    use crate::workload::TraceConfig;
 
-    /// Trivial policy: first free accelerator, solo.
+    /// Trivial incremental policy: place every waiting job solo on the
+    /// first free in-service accelerator, retrying on every event.
     struct FirstFit;
     impl Scheduler for FirstFit {
         fn name(&self) -> &str {
             "firstfit"
         }
-        fn allocate(&mut self, cluster: &Cluster) -> Result<Placement> {
-            let mut p = Placement::new();
-            let mut free: Vec<_> = cluster.spec.accels.clone();
-            for id in cluster.active_job_ids() {
-                if let Some(a) = free.pop() {
-                    p.assign(a, Combo::Solo(id));
+        fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+            if matches!(event, ClusterEvent::MonitorTick { .. }) {
+                return Ok(Decision::none());
+            }
+            let mut delta = PlacementDelta::new();
+            let mut free: Vec<AccelId> = cluster
+                .available_accels()
+                .into_iter()
+                .filter(|a| cluster.placement.combo_on(*a).is_none())
+                .collect();
+            for j in cluster.active_job_ids() {
+                if !cluster.placement.is_placed(j) {
+                    if let Some(a) = free.pop() {
+                        delta.push(PlacementOp::Assign {
+                            accel: a,
+                            combo: Combo::Solo(j),
+                        });
+                    }
                 }
             }
-            Ok(p)
+            Ok(Decision::apply(delta))
+        }
+    }
+
+    fn job(id: u32, work: f64) -> JobSpec {
+        JobSpec {
+            id: JobId(id),
+            family: crate::workload::ModelFamily::ResNet18,
+            batch_size: 32,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 1,
+            work,
         }
     }
 
@@ -258,13 +539,17 @@ mod tests {
             ..Default::default()
         };
         let trace = Trace::generate(&cfg, &oracle);
-        let mut driver = SimDriver::new(ClusterSpec::balanced(2), oracle, trace, 0.0, 15.0, 1);
+        let mut driver =
+            SimDriver::new(ClusterSpec::balanced(2), oracle, trace, 0.0, 15.0, 1).unwrap();
         let report = driver.run(&mut FirstFit).unwrap();
         assert_eq!(report.jobs_completed, 6);
+        assert_eq!(report.jobs_total, 6);
+        assert_eq!(report.jobs_cancelled, 0);
         assert!(report.energy_joules > 0.0);
         assert!(report.total_energy_joules >= report.energy_joules);
         assert!(report.mean_jct > 0.0);
         assert!(report.sim_seconds > 0.0);
+        assert!(report.events > 0);
     }
 
     #[test]
@@ -278,7 +563,8 @@ mod tests {
                 ..Default::default()
             };
             let trace = Trace::generate(&cfg, &oracle);
-            let mut d = SimDriver::new(ClusterSpec::balanced(1), oracle, trace, 0.01, 10.0, 3);
+            let mut d =
+                SimDriver::new(ClusterSpec::balanced(1), oracle, trace, 0.01, 10.0, 3).unwrap();
             d.run(&mut FirstFit).unwrap()
         };
         let a = mk();
@@ -286,5 +572,154 @@ mod tests {
         assert_eq!(a.energy_joules, b.energy_joules);
         assert_eq!(a.slo_violations, b.slo_violations);
         assert_eq!(a.mean_jct, b.mean_jct);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn zero_monitor_interval_is_rejected() {
+        let oracle = ThroughputOracle::new(1);
+        let trace = Trace::generate(&TraceConfig::default(), &oracle);
+        assert!(SimDriver::new(ClusterSpec::balanced(1), oracle, trace, 0.0, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn cancellation_frees_capacity_and_is_reported() {
+        // one instance; a huge job blocks it, a small job waits; the
+        // cancellation frees the instance and the small job completes.
+        let oracle = ThroughputOracle::new(4);
+        let trace = Trace {
+            events: vec![
+                TraceEvent::Arrival {
+                    at: 1.0,
+                    job: job(0, 1.0e9),
+                },
+                TraceEvent::Arrival {
+                    at: 2.0,
+                    job: job(1, 50.0),
+                },
+                TraceEvent::Cancel {
+                    at: 100.0,
+                    job: JobId(0),
+                },
+            ],
+            config: TraceConfig {
+                n_jobs: 2,
+                ..Default::default()
+            },
+        };
+        let spec = ClusterSpec::mix(&[(AccelType::V100, 1)]);
+        let mut driver = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1).unwrap();
+        let report = driver.run(&mut FirstFit).unwrap();
+        assert_eq!(report.jobs_total, 2);
+        assert_eq!(report.jobs_cancelled, 1);
+        assert_eq!(report.jobs_completed, 1);
+        // the small job queued from t=2 until the cancellation at t=100
+        assert!(report.mean_queue_s > 0.0, "queueing delay not tracked");
+        assert!(report.sim_seconds < driver.drain_limit_s, "run failed to drain");
+    }
+
+    #[test]
+    fn accel_churn_reroutes_work() {
+        // two instances; one goes down mid-run and comes back — FirstFit
+        // re-places the evicted job and everything still completes.
+        let oracle = ThroughputOracle::new(5);
+        let trace = Trace {
+            events: vec![
+                TraceEvent::Arrival {
+                    at: 1.0,
+                    job: job(0, 200.0),
+                },
+                TraceEvent::Arrival {
+                    at: 2.0,
+                    job: job(1, 200.0),
+                },
+                TraceEvent::AccelChurn {
+                    at: 10.0,
+                    accel_index: 0,
+                    up: false,
+                },
+                TraceEvent::AccelChurn {
+                    at: 400.0,
+                    accel_index: 0,
+                    up: true,
+                },
+            ],
+            config: TraceConfig {
+                n_jobs: 2,
+                ..Default::default()
+            },
+        };
+        let spec = ClusterSpec::mix(&[(AccelType::V100, 2)]);
+        let mut driver = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1).unwrap();
+        let report = driver.run(&mut FirstFit).unwrap();
+        assert_eq!(report.jobs_completed, 2);
+    }
+
+    /// Places arrivals on the first free instance, then migrates the
+    /// job once at the first monitor tick (exercises the restart cost).
+    struct MigrateOnce {
+        done: bool,
+    }
+    impl Scheduler for MigrateOnce {
+        fn name(&self) -> &str {
+            "migrate-once"
+        }
+        fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+            match event {
+                ClusterEvent::JobArrived { job } => {
+                    Ok(Decision::assign(cluster.available_accels()[0], Combo::Solo(*job)))
+                }
+                ClusterEvent::MonitorTick { .. } if !self.done && cluster.n_jobs() > 0 => {
+                    self.done = true;
+                    let j = cluster.active_job_ids()[0];
+                    let from = cluster.placement.accels_of(j)[0];
+                    let to = cluster
+                        .available_accels()
+                        .into_iter()
+                        .find(|a| cluster.placement.combo_on(*a).is_none())
+                        .expect("a free instance");
+                    Ok(Decision::apply(PlacementDelta {
+                        ops: vec![PlacementOp::Migrate { job: j, from, to }],
+                    }))
+                }
+                _ => Ok(Decision::none()),
+            }
+        }
+    }
+
+    #[test]
+    fn migration_cost_stalls_progress() {
+        // same single-job run with and without a restart penalty on the
+        // mid-run migration: the penalized run finishes later.
+        let run = |cost: f64| {
+            let oracle = ThroughputOracle::new(6);
+            let trace = Trace {
+                events: vec![TraceEvent::Arrival {
+                    at: 1.0,
+                    job: job(0, 300.0),
+                }],
+                config: TraceConfig {
+                    n_jobs: 1,
+                    ..Default::default()
+                },
+            };
+            let spec = ClusterSpec::mix(&[(AccelType::V100, 2)]);
+            let mut d = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1)
+                .unwrap()
+                .with_migration_cost(cost);
+            d.run(&mut MigrateOnce { done: false }).unwrap()
+        };
+        let free = run(0.0);
+        let penalized = run(120.0);
+        assert_eq!(free.migration_stall_s, 0.0);
+        assert_eq!(penalized.migration_stall_s, 120.0);
+        assert!(free.migrations >= 2, "migrate op must count as moves");
+        assert!(
+            penalized.mean_jct > free.mean_jct + 60.0,
+            "restart penalty had no effect: {} vs {}",
+            penalized.mean_jct,
+            free.mean_jct
+        );
     }
 }

@@ -59,6 +59,7 @@ const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in hetero
 USAGE:
   gogh simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S]
                 [--config cfg.json] [--save-catalog catalog.json] [--gavel-csv data.csv]
+                [--cancel-rate P] [--accel-churn N] [--migration-cost-s S]
   gogh info [--workloads]
   gogh solve [--jobs N] [--servers-per-type K] [--seed S]
   gogh config
@@ -101,6 +102,15 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
     if let Some(p) = args.get("gavel-csv") {
         cfg.gavel_csv = Some(p.to_string());
     }
+    if let Some(r) = args.get_parse::<f64>("cancel-rate") {
+        cfg.trace.cancel_rate = r;
+    }
+    if let Some(n) = args.get_parse::<f64>("accel-churn") {
+        cfg.trace.accel_churn = n;
+    }
+    if let Some(s) = args.get_parse::<f64>("migration-cost-s") {
+        cfg.migration_cost_s = s;
+    }
     Ok(cfg)
 }
 
@@ -122,6 +132,7 @@ fn simulate(args: &Args) -> Result<()> {
             let oracle = cfg.build_oracle()?;
             let trace = Trace::generate(&cfg.trace, &oracle);
             let spec = gogh::cluster::ClusterSpec::mix(&cfg.cluster.accel_mix);
+            // monitor_interval_s is validated (once) by SimDriver::new
             let mut driver = SimDriver::new(
                 spec,
                 oracle.clone(),
@@ -129,7 +140,8 @@ fn simulate(args: &Args) -> Result<()> {
                 cfg.noise_sigma,
                 cfg.monitor_interval_s,
                 cfg.seed,
-            );
+            )?
+            .with_migration_cost(cfg.migration_cost_s);
             let mut sched: Box<dyn Scheduler> = match other {
                 "random" => Box::new(RandomScheduler::new(cfg.seed)),
                 "greedy" => Box::new(GreedyScheduler::new()),
@@ -145,8 +157,17 @@ fn simulate(args: &Args) -> Result<()> {
         println!("estimation MAE vs measured: {mae:.4}");
     }
     println!(
-        "decision path: ILP {:.2} ms, P1 {:.2} ms",
-        report.mean_solve_ms, report.mean_p1_ms
+        "decision path: ILP {:.2} ms, P1 {:.2} ms, {:.3} ms/event over {} events",
+        report.mean_solve_ms, report.mean_p1_ms, report.mean_decision_ms, report.events
+    );
+    println!(
+        "completed {}/{} jobs ({} cancelled, mean queue {:.1} s, \
+         migration stall {:.0} s)",
+        report.jobs_completed,
+        report.jobs_total,
+        report.jobs_cancelled,
+        report.mean_queue_s,
+        report.migration_stall_s
     );
     Ok(())
 }

@@ -13,12 +13,22 @@ pub struct RunReport {
     /// completed / total jobs
     pub jobs_completed: usize,
     pub jobs_total: usize,
+    /// jobs cancelled by their owner before completing
+    pub jobs_cancelled: usize,
     /// time-integral of unmet SLO (Σ max(0, T̄_j − T_j) dt)
     pub slo_deficit: f64,
     /// rounds in which ≥1 job was below its SLO
     pub slo_violations: usize,
     /// placement moves applied over the run (migration cost)
     pub migrations: usize,
+    /// total restart-stall seconds charged for migrations
+    pub migration_stall_s: f64,
+    /// mean queueing delay: arrival → first placement (s)
+    pub mean_queue_s: f64,
+    /// cluster events dispatched to the policy
+    pub events: usize,
+    /// mean wall-clock policy latency per dispatched event (ms)
+    pub mean_decision_ms: f64,
     /// mean job completion time (s)
     pub mean_jct: f64,
     /// throughput-estimation MAE vs ground truth, if an estimator ran
@@ -42,23 +52,34 @@ impl RunReport {
     /// One row of the comparison table.
     pub fn row(&self) -> String {
         format!(
-            "{:<14} {:>10.0} {:>12.0} {:>7}/{:<4} {:>9.3} {:>6} {:>7.1} {:>9}",
+            "{:<14} {:>10.0} {:>12.0} {:>7}/{:<4} {:>6} {:>9.3} {:>6} {:>7.1} {:>9} {:>7.1}",
             self.scheduler,
             self.energy_joules,
             self.total_energy_joules,
             self.jobs_completed,
             self.jobs_total,
+            self.jobs_cancelled,
             self.slo_deficit,
             self.slo_violations,
             self.mean_jct,
             self.migrations,
+            self.mean_queue_s,
         )
     }
 
     pub fn header() -> String {
         format!(
-            "{:<14} {:>10} {:>12} {:>12} {:>9} {:>6} {:>7} {:>9}",
-            "scheduler", "busy_J", "total_J", "done/total", "slo_def", "viols", "jct_s", "moves"
+            "{:<14} {:>10} {:>12} {:>12} {:>6} {:>9} {:>6} {:>7} {:>9} {:>7}",
+            "scheduler",
+            "busy_J",
+            "total_J",
+            "done/total",
+            "cancel",
+            "slo_def",
+            "viols",
+            "jct_s",
+            "moves",
+            "queue_s"
         )
     }
 }

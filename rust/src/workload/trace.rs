@@ -1,5 +1,7 @@
-//! Online job arrival traces: Poisson arrivals over the Table 2
-//! workload grid, with per-job SLOs and durations.
+//! Online job traces: Poisson arrivals over the Table 2 workload grid
+//! with per-job SLOs and durations, plus optional cancellation and
+//! accelerator-churn (maintenance/failure) events for the richer
+//! scenarios the event-driven driver replays.
 
 use crate::util::Rng;
 
@@ -23,6 +25,13 @@ pub struct TraceConfig {
     pub slo_fraction: f64,
     /// Max accelerators per job D_j (constraint 2c).
     pub max_distributability: u32,
+    /// Probability that a job is cancelled by its owner some time after
+    /// arriving (0 disables; the cancellation may still race the job's
+    /// natural completion, in which case it is a no-op).
+    pub cancel_rate: f64,
+    /// Expected number of accelerator down/up maintenance cycles over
+    /// the arrival horizon (0 disables).
+    pub accel_churn: f64,
     pub seed: u64,
 }
 
@@ -34,6 +43,8 @@ impl Default for TraceConfig {
             mean_work_s: 1800.0,
             slo_fraction: 0.5,
             max_distributability: 2,
+            cancel_rate: 0.0,
+            accel_churn: 0.0,
             seed: 17,
         }
     }
@@ -44,6 +55,22 @@ impl Default for TraceConfig {
 pub enum TraceEvent {
     /// Job arrives at `at` seconds.
     Arrival { at: f64, job: JobSpec },
+    /// Job `job` is cancelled by its owner at `at` seconds.
+    Cancel { at: f64, job: JobId },
+    /// Accelerator instance `accel_index` (modulo the cluster size at
+    /// replay time — traces are cluster-agnostic) goes down (`up ==
+    /// false`) or returns to service (`up == true`).
+    AccelChurn { at: f64, accel_index: usize, up: bool },
+}
+
+impl TraceEvent {
+    pub fn at(&self) -> f64 {
+        match self {
+            TraceEvent::Arrival { at, .. }
+            | TraceEvent::Cancel { at, .. }
+            | TraceEvent::AccelChurn { at, .. } => *at,
+        }
+    }
 }
 
 /// A generated arrival trace (sorted by time).
@@ -81,16 +108,76 @@ impl Trace {
             job.min_throughput = cfg.slo_fraction * p100 * rng.range_f64(0.6, 1.0);
             events.push(TraceEvent::Arrival { at: t, job });
         }
+        // Cancellations / accel churn draw from their own streams so the
+        // arrival trace stays byte-identical for a given seed whether or
+        // not these scenario knobs are on.
+        let horizon = t.max(1.0);
+        if cfg.cancel_rate > 0.0 {
+            let mut crng = Rng::seed_from_u64(cfg.seed ^ 0xca9c_e1);
+            let arrivals: Vec<(f64, JobId)> = events
+                .iter()
+                .filter_map(|e| match e {
+                    TraceEvent::Arrival { at, job } => Some((*at, job.id)),
+                    _ => None,
+                })
+                .collect();
+            for (at, job) in arrivals {
+                if crng.bool(cfg.cancel_rate.clamp(0.0, 1.0)) {
+                    let delay = crng.exponential(0.5 * cfg.mean_work_s).max(1.0);
+                    events.push(TraceEvent::Cancel { at: at + delay, job });
+                }
+            }
+        }
+        if cfg.accel_churn > 0.0 {
+            let mut arng = Rng::seed_from_u64(cfg.seed ^ 0xac41);
+            let cycles = cfg.accel_churn.round().max(1.0) as usize;
+            // per-index end of the previous outage: cycles on the same
+            // instance must not overlap (the driver ignores a Down on an
+            // already-down accel, which would silently shrink the outage)
+            let mut busy_until: std::collections::HashMap<usize, f64> = Default::default();
+            for _ in 0..cycles {
+                let accel_index = arng.range_usize(0, 4096);
+                let mut down_at = arng.range_f64(0.0, horizon);
+                if let Some(&free_at) = busy_until.get(&accel_index) {
+                    down_at = down_at.max(free_at + 1.0);
+                }
+                let outage = arng.exponential(4.0 * cfg.mean_interarrival_s).max(1.0);
+                busy_until.insert(accel_index, down_at + outage);
+                events.push(TraceEvent::AccelChurn {
+                    at: down_at,
+                    accel_index,
+                    up: false,
+                });
+                events.push(TraceEvent::AccelChurn {
+                    at: down_at + outage,
+                    accel_index,
+                    up: true,
+                });
+            }
+        }
+        // stable sort: same-time events keep generation order (a job's
+        // arrival always precedes its own cancellation).
+        events.sort_by(|a, b| a.at().total_cmp(&b.at()));
         Self {
             events,
             config: cfg.clone(),
         }
     }
 
+    /// Arriving job specs, in arrival order.
     pub fn jobs(&self) -> impl Iterator<Item = &JobSpec> {
-        self.events.iter().map(|TraceEvent::Arrival { job, .. }| job)
+        self.events.iter().filter_map(|e| match e {
+            TraceEvent::Arrival { job, .. } => Some(job),
+            _ => None,
+        })
     }
 
+    /// Number of job arrivals in the trace (the driver's `jobs_total`).
+    pub fn n_jobs(&self) -> usize {
+        self.jobs().count()
+    }
+
+    /// Total number of trace events (arrivals + cancels + churn).
     pub fn len(&self) -> usize {
         self.events.len()
     }
@@ -123,15 +210,76 @@ mod tests {
         let a = Trace::generate(&cfg, &oracle);
         let b = Trace::generate(&cfg, &oracle);
         assert_eq!(a.events.len(), cfg.n_jobs);
-        let times: Vec<f64> = a
-            .events
-            .iter()
-            .map(|TraceEvent::Arrival { at, .. }| *at)
-            .collect();
+        assert_eq!(a.n_jobs(), cfg.n_jobs);
+        let times: Vec<f64> = a.events.iter().map(|e| e.at()).collect();
         assert!(times.windows(2).all(|w| w[0] <= w[1]));
         for (ea, eb) in a.events.iter().zip(&b.events) {
             assert_eq!(ea, eb);
         }
+    }
+
+    #[test]
+    fn scenario_knobs_do_not_perturb_arrivals() {
+        let oracle = ThroughputOracle::new(1);
+        let plain = Trace::generate(&TraceConfig::default(), &oracle);
+        let rich = Trace::generate(
+            &TraceConfig {
+                cancel_rate: 0.5,
+                accel_churn: 3.0,
+                ..Default::default()
+            },
+            &oracle,
+        );
+        // identical arrival stream; extra events appended + time-sorted
+        let plain_jobs: Vec<_> = plain.jobs().collect();
+        let rich_jobs: Vec<_> = rich.jobs().collect();
+        assert_eq!(plain_jobs, rich_jobs);
+        assert!(rich.len() > plain.len());
+        let times: Vec<f64> = rich.events.iter().map(|e| e.at()).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(rich.n_jobs(), plain.n_jobs());
+    }
+
+    #[test]
+    fn cancellations_follow_their_arrival_and_churn_pairs_up() {
+        let oracle = ThroughputOracle::new(2);
+        let trace = Trace::generate(
+            &TraceConfig {
+                n_jobs: 60,
+                cancel_rate: 0.7,
+                accel_churn: 4.0,
+                ..Default::default()
+            },
+            &oracle,
+        );
+        let mut cancels = 0;
+        for e in &trace.events {
+            if let TraceEvent::Cancel { at, job } = e {
+                cancels += 1;
+                let arrival = trace
+                    .events
+                    .iter()
+                    .find_map(|e| match e {
+                        TraceEvent::Arrival { at, job: j } if j.id == *job => Some(*at),
+                        _ => None,
+                    })
+                    .expect("cancel references an arriving job");
+                assert!(*at > arrival, "cancel before arrival");
+            }
+        }
+        assert!(cancels > 0, "cancel_rate=0.7 over 60 jobs produced none");
+        let downs = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::AccelChurn { up: false, .. }))
+            .count();
+        let ups = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::AccelChurn { up: true, .. }))
+            .count();
+        assert_eq!(downs, ups);
+        assert!(downs >= 1);
     }
 
     #[test]

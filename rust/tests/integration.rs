@@ -31,6 +31,7 @@ fn driver(oracle: &ThroughputOracle, trace: Trace, seed: u64) -> SimDriver {
         20.0,
         seed,
     )
+    .unwrap()
 }
 
 #[test]
@@ -102,6 +103,66 @@ fn config_drives_cluster_size() {
     .unwrap();
     let spec = ClusterSpec::mix(&cfg.cluster.accel_mix);
     assert_eq!(spec.len(), 4);
+}
+
+#[test]
+fn cancellations_and_churn_drain_through_every_baseline() {
+    // a trace with owner cancellations and accelerator maintenance
+    // cycles: every baseline must drain it (completed + cancelled =
+    // arrivals) through the event-driven driver.
+    let oracle = ThroughputOracle::new(21);
+    let cfg = TraceConfig {
+        n_jobs: 10,
+        mean_interarrival_s: 25.0,
+        mean_work_s: 120.0,
+        cancel_rate: 0.4,
+        accel_churn: 2.0,
+        seed: 21,
+        ..Default::default()
+    };
+    let trace = Trace::generate(&cfg, &oracle);
+    assert_eq!(trace.n_jobs(), 10);
+    assert!(trace.len() > 10, "scenario events missing from the trace");
+    let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(RandomScheduler::new(21)),
+        Box::new(GreedyScheduler::new()),
+        Box::new(OracleScheduler::new(oracle.clone(), Default::default())),
+    ];
+    for s in schedulers.iter_mut() {
+        let mut d = driver(&oracle, trace.clone(), 21);
+        let report = d.run(s.as_mut()).unwrap();
+        assert_eq!(
+            report.jobs_completed + report.jobs_cancelled,
+            report.jobs_total,
+            "{} lost jobs",
+            s.name()
+        );
+        assert!(report.sim_seconds < d.drain_limit_s, "{} timed out", s.name());
+    }
+}
+
+#[test]
+fn migration_cost_is_integrated_into_the_report() {
+    let (oracle, trace) = small_trace(9, 8);
+    let run = |cost: f64| {
+        let mut d = SimDriver::new(
+            ClusterSpec::balanced(1), // tight: 6 instances, forced moves
+            oracle.clone(),
+            trace.clone(),
+            0.0,
+            20.0,
+            9,
+        )
+        .unwrap()
+        .with_migration_cost(cost);
+        d.run(&mut RandomScheduler::new(9)).unwrap()
+    };
+    let free = run(0.0);
+    let charged = run(30.0);
+    assert_eq!(free.migration_stall_s, 0.0);
+    // the random policy reshuffles on every event → some job migrated
+    assert!(charged.migration_stall_s > 0.0, "no restart penalty charged");
+    assert_eq!(charged.jobs_completed, 8);
 }
 
 // ---------------------------------------------------------------------

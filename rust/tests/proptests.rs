@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 
 use gogh::catalog::{Catalog, EstimateKey};
-use gogh::cluster::{AccelId, Placement};
+use gogh::cluster::{AccelId, Cluster, ClusterSpec, Placement, PlacementDelta, PlacementOp};
 use gogh::ilp::branch_bound::{solve_ilp, BnbConfig, BnbStatus};
 use gogh::ilp::model::{Model, ObjSense, Sense};
 use gogh::ilp::problem1::{solve_problem1, Problem1Input};
@@ -260,6 +260,144 @@ fn prop_placement_never_double_books_a_job_per_accel() {
                     assert!(seen.insert(*aid), "job {j} twice on {aid}");
                 }
             }
+        }
+    }
+}
+
+/// Shared helpers for the placement-delta properties.
+fn delta_test_cluster(n_jobs: u32) -> Cluster {
+    let mut c = Cluster::new(ClusterSpec::balanced(1)); // 6 instances
+    for i in 0..n_jobs {
+        c.add_job(JobSpec {
+            id: JobId(i),
+            family: FAMILIES[i as usize % FAMILIES.len()],
+            batch_size: FAMILIES[i as usize % FAMILIES.len()].batch_sizes()[0],
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 2,
+            work: 100.0,
+        });
+    }
+    c
+}
+
+/// Valid-by-construction random placement: every job on ≤ 2 instances,
+/// each instance hosting at most one solo/pair combo.
+fn random_placement(rng: &mut Rng, accels: &[AccelId], n_jobs: u32) -> Placement {
+    let mut p = Placement::new();
+    let mut usage: HashMap<JobId, u32> = HashMap::new();
+    for &a in accels {
+        let mut free: Vec<JobId> = (0..n_jobs)
+            .map(JobId)
+            .filter(|j| usage.get(j).copied().unwrap_or(0) < 2)
+            .collect();
+        match rng.range_usize(0, 3) {
+            0 => {} // leave empty
+            1 if !free.is_empty() => {
+                let j = free.swap_remove(rng.range_usize(0, free.len()));
+                *usage.entry(j).or_default() += 1;
+                p.assign(a, Combo::Solo(j));
+            }
+            _ if free.len() >= 2 => {
+                let j1 = free.swap_remove(rng.range_usize(0, free.len()));
+                let j2 = free.swap_remove(rng.range_usize(0, free.len()));
+                *usage.entry(j1).or_default() += 1;
+                *usage.entry(j2).or_default() += 1;
+                p.assign(a, Combo::pair(j1, j2));
+            }
+            _ => {}
+        }
+    }
+    p
+}
+
+/// Placement sanity: by_accel/by_job agree, no job twice on one accel,
+/// distributability respected, nothing on a down accelerator.
+fn assert_placement_invariants(c: &Cluster, n_jobs: u32) {
+    for (aid, combo) in c.placement.iter() {
+        assert!(combo.len() <= 2);
+        assert!(!c.is_accel_down(*aid), "combo on down accel {aid}");
+        for j in combo.jobs() {
+            assert!(c.placement.accels_of(j).contains(aid));
+        }
+    }
+    for j in (0..n_jobs).map(JobId) {
+        let accels = c.placement.accels_of(j);
+        let mut seen = std::collections::HashSet::new();
+        for aid in accels {
+            assert!(seen.insert(*aid), "job {j} double-booked on {aid}");
+            assert!(c.placement.combo_on(*aid).map_or(false, |cb| cb.contains(j)));
+        }
+        let d = c.job(j).map(|s| s.distributability as usize).unwrap_or(2);
+        assert!(accels.len() <= d, "job {j} on {} > D_j instances", accels.len());
+    }
+}
+
+#[test]
+fn prop_delta_diff_apply_equals_full_replacement() {
+    let mut rng = Rng::seed_from_u64(808);
+    for case in 0..150 {
+        let n_jobs = rng.range_u32_inclusive(1, 10);
+        let mut c = delta_test_cluster(n_jobs);
+        let accels = c.spec.accels.clone();
+        c.placement = random_placement(&mut rng, &accels, n_jobs);
+        let target = random_placement(&mut rng, &accels, n_jobs);
+        let delta = PlacementDelta::diff(&c.placement, &target);
+        let outcome = c
+            .apply_delta(&delta)
+            .unwrap_or_else(|e| panic!("case {case}: valid diff rejected: {e}"));
+        assert_eq!(
+            c.placement.diff_count(&target),
+            0,
+            "case {case}: delta apply != replacement"
+        );
+        // an instance whose combo changes costs one move but two ops
+        // (evict + assign), so moves ≤ ops, with equality on emptiness
+        assert!(outcome.moves <= delta.len(), "case {case}: moves > ops");
+        assert_eq!(delta.is_empty(), outcome.moves == 0, "case {case}");
+        assert_placement_invariants(&c, n_jobs);
+        // a second diff against the reached state is empty (idempotence)
+        assert!(PlacementDelta::diff(&c.placement, &target).is_empty());
+    }
+}
+
+#[test]
+fn prop_random_op_sequences_never_double_book() {
+    let mut rng = Rng::seed_from_u64(909);
+    for _case in 0..60 {
+        let n_jobs = rng.range_u32_inclusive(2, 10);
+        let mut c = delta_test_cluster(n_jobs);
+        let accels = c.spec.accels.clone();
+        for _step in 0..40 {
+            let a = accels[rng.range_usize(0, accels.len())];
+            let j1 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+            let j2 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+            let op = match rng.range_usize(0, 4) {
+                0 => PlacementOp::Assign {
+                    accel: a,
+                    combo: Combo::Solo(j1),
+                },
+                1 => PlacementOp::Assign {
+                    accel: a,
+                    combo: Combo::pair(j1, j2),
+                },
+                2 => PlacementOp::Evict { accel: a },
+                _ => PlacementOp::Migrate {
+                    job: j1,
+                    from: accels[rng.range_usize(0, accels.len())],
+                    to: a,
+                },
+            };
+            let before = c.placement.clone();
+            let delta = PlacementDelta { ops: vec![op] };
+            match c.apply_delta(&delta) {
+                Ok(_) => {}
+                Err(_) => {
+                    // rejected deltas must not leak partial state
+                    assert_eq!(c.placement.diff_count(&before), 0);
+                }
+            }
+            assert_placement_invariants(&c, n_jobs);
         }
     }
 }
