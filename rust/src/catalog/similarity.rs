@@ -40,7 +40,7 @@ impl<'a> SimilarityIndex<'a> {
             if exclude.contains(&id) {
                 continue;
             }
-            if require_measured && self.catalog.measured_records_of(id).is_empty() {
+            if require_measured && !self.catalog.has_measurements(id) {
                 continue;
             }
             let d = psi_distance(psi, self.catalog.psi(id).unwrap());

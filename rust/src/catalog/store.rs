@@ -64,6 +64,17 @@ pub struct Catalog {
     /// Ψ vectors of every job ever seen (for similarity lookups, the
     /// paper's "historical data from previously executed jobs").
     psis: HashMap<JobId, [f32; crate::workload::PSI_DIM]>,
+    /// Measured keys per job: keeps `measured_records_of` (the hottest
+    /// catalog query — similarity filtering + Eq. 1 inputs run it per
+    /// arrival) O(own records) instead of O(all records), which is the
+    /// difference between linear and quadratic decision cost at
+    /// 1000-accelerator scale.
+    measured_keys: HashMap<JobId, Vec<EstimateKey>>,
+    /// Unmeasured-estimate keys touching each job, for O(own keys)
+    /// cleanup when the job departs ([`Catalog::evict_job_estimates`]).
+    /// A key appears under every job of its combo; entries whose record
+    /// was since measured or already removed are skipped at evict time.
+    estimate_keys: HashMap<JobId, Vec<EstimateKey>>,
 }
 
 impl Catalog {
@@ -84,9 +95,18 @@ impl Catalog {
         self.psis.keys()
     }
 
+    fn index_new_estimate(&mut self, key: EstimateKey) {
+        for j in key.combo.jobs() {
+            self.estimate_keys.entry(j).or_default().push(key);
+        }
+    }
+
     /// Record an initial P1 estimate (round 0): starts a fresh
     /// refinement set for the key.
     pub fn write_initial(&mut self, key: EstimateKey, value: f64) {
+        if !self.records.contains_key(&key) {
+            self.index_new_estimate(key);
+        }
         let r = self.records.entry(key).or_default();
         r.sum = value;
         r.count = 1;
@@ -96,6 +116,9 @@ impl Catalog {
     /// Push a P2 refinement into 𝒯 (Eq. 4): the estimate becomes the
     /// running average of all refinements.
     pub fn push_refinement(&mut self, key: EstimateKey, value: f64, round: u32) {
+        if !self.records.contains_key(&key) {
+            self.index_new_estimate(key);
+        }
         let r = self.records.entry(key).or_default();
         r.sum += value;
         r.count += 1;
@@ -105,7 +128,39 @@ impl Catalog {
     /// Record a measurement (dominates estimates for this key).
     pub fn record_measurement(&mut self, key: EstimateKey, value: f64) {
         let r = self.records.entry(key).or_default();
+        if r.measured.is_none() {
+            self.measured_keys.entry(key.job).or_default().push(key);
+        }
         r.measured = Some(value);
+    }
+
+    /// Drop every *unmeasured pair* record involving `j` (as the keyed
+    /// job or as a combo partner). Called when a job departs: a pairing
+    /// with a finished job can never recur, so those estimates are dead
+    /// weight — without this the matrix grows O(jobs × active × types)
+    /// over a trace. *Solo* estimates survive (O(types) per job): a
+    /// departed job stays a similarity source, and Eq. 1's transfer
+    /// inputs keep reading its solo values. Measured records always
+    /// stay as the cluster's history.
+    pub fn evict_job_estimates(&mut self, j: JobId) {
+        let Some(keys) = self.estimate_keys.remove(&j) else {
+            return;
+        };
+        for key in keys {
+            if key.combo.len() == 1 {
+                continue; // solo estimates remain queryable transfer history
+            }
+            let measured = self.records.get(&key).map_or(true, |r| r.is_measured());
+            if !measured {
+                self.records.remove(&key);
+            }
+        }
+    }
+
+    /// Whether `j` has at least one measured record (O(1); the
+    /// similarity index's `require_measured` filter).
+    pub fn has_measurements(&self, j: JobId) -> bool {
+        self.measured_keys.get(&j).map_or(false, |v| !v.is_empty())
     }
 
     /// Current value (measured > averaged estimate > None).
@@ -121,11 +176,14 @@ impl Catalog {
     /// co-location evidence P1's Eq. 1 inputs are drawn from.
     pub fn measured_records_of(&self, j: JobId) -> Vec<(EstimateKey, f64)> {
         let mut v: Vec<(EstimateKey, f64)> = self
-            .records
-            .iter()
-            .filter(|(k, r)| k.job == j && r.is_measured())
-            .map(|(k, r)| (*k, r.value().unwrap()))
-            .collect();
+            .measured_keys
+            .get(&j)
+            .map(|keys| {
+                keys.iter()
+                    .map(|k| (*k, self.records[k].value().unwrap()))
+                    .collect()
+            })
+            .unwrap_or_default();
         v.sort_by_key(|(k, _)| (k.accel.index(), k.combo));
         v
     }
@@ -242,11 +300,18 @@ impl Catalog {
                 job: JobId(rec.req_f64("job")? as u32),
                 combo: Self::combo_from_json(rec.req("combo")?)?,
             };
+            let measured = rec.get("measured").and_then(|m| m.as_f64());
+            // rebuild the secondary indices the serialized form omits
+            if measured.is_some() {
+                c.measured_keys.entry(key.job).or_default().push(key);
+            } else if !c.records.contains_key(&key) {
+                c.index_new_estimate(key);
+            }
             let r = c.records.entry(key).or_default();
             r.sum = rec.req_f64("sum")?;
             r.count = rec.req_f64("count")? as u32;
             r.last_round = rec.req_f64("last_round")? as u32;
-            r.measured = rec.get("measured").and_then(|m| m.as_f64());
+            r.measured = measured;
         }
         Ok(c)
     }
@@ -333,6 +398,65 @@ mod tests {
     }
 
     #[test]
+    fn evict_job_estimates_drops_pairs_but_keeps_history() {
+        let mut c = Catalog::new();
+        let solo1 = key(AccelType::K80, 1);
+        let solo1_v = key(AccelType::V100, 1);
+        let pair12 = EstimateKey {
+            accel: AccelType::V100,
+            job: JobId(1),
+            combo: Combo::pair(JobId(1), JobId(2)),
+        };
+        let partner21 = EstimateKey {
+            accel: AccelType::V100,
+            job: JobId(2),
+            combo: Combo::pair(JobId(1), JobId(2)),
+        };
+        let solo2 = key(AccelType::K80, 2);
+        c.write_initial(solo1, 0.4);
+        c.write_initial(solo1_v, 0.6);
+        c.push_refinement(pair12, 0.3, 1);
+        c.write_initial(partner21, 0.2);
+        c.write_initial(solo2, 0.5);
+        c.record_measurement(solo1, 0.45); // measured → survives eviction
+        c.evict_job_estimates(JobId(1));
+        assert_eq!(c.value(&solo1), Some(0.45), "measured history must survive");
+        // solo estimates survive too: Eq. 1 transfer keeps reading them
+        assert_eq!(c.value(&solo1_v), Some(0.6));
+        assert_eq!(c.value(&pair12), None);
+        // the partner's estimate for the pairing with job 1 is dead too
+        assert_eq!(c.value(&partner21), None);
+        // records not involving job 1 are untouched
+        assert_eq!(c.value(&solo2), Some(0.5));
+        // idempotent, and re-registering later works
+        c.evict_job_estimates(JobId(1));
+        c.write_initial(pair12, 0.33);
+        assert_eq!(c.value(&pair12), Some(0.33));
+    }
+
+    #[test]
+    fn measured_index_matches_full_scan() {
+        let mut c = Catalog::new();
+        assert!(!c.has_measurements(JobId(1)));
+        let k1 = key(AccelType::K80, 1);
+        let k2 = EstimateKey {
+            accel: AccelType::V100,
+            job: JobId(1),
+            combo: Combo::pair(JobId(1), JobId(2)),
+        };
+        c.write_initial(k1, 0.4);
+        assert!(!c.has_measurements(JobId(1)), "estimate is not a measurement");
+        c.record_measurement(k1, 0.5);
+        c.record_measurement(k1, 0.6); // repeated: must not duplicate
+        c.record_measurement(k2, 0.7);
+        assert!(c.has_measurements(JobId(1)));
+        let recs = c.measured_records_of(JobId(1));
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0], (k1, 0.6));
+        assert_eq!(recs[1], (k2, 0.7));
+    }
+
+    #[test]
     fn json_persistence_roundtrip() {
         let mut c = Catalog::new();
         c.register_job(JobId(1), [0.5; crate::workload::PSI_DIM]);
@@ -355,5 +479,20 @@ mod tests {
         assert_eq!(back.psi(JobId(2)), c.psi(JobId(2)));
         // serialization is deterministic
         assert_eq!(c.to_json().to_string(), back.to_json().to_string());
+        // secondary indices are rebuilt on load
+        assert!(back.has_measurements(JobId(1)));
+        assert_eq!(back.measured_records_of(JobId(1)), c.measured_records_of(JobId(1)));
+        let pair13 = EstimateKey {
+            accel: AccelType::K80,
+            job: JobId(1),
+            combo: Combo::pair(JobId(1), JobId(3)),
+        };
+        let mut back = back;
+        back.push_refinement(pair13, 0.5, 4);
+        let mut reload = Catalog::from_json(&back.to_json()).unwrap();
+        reload.evict_job_estimates(JobId(1));
+        assert_eq!(reload.value(&pair13), None, "estimate index not rebuilt");
+        assert_eq!(reload.value(&k1), back.value(&k1), "solo estimates survive");
+        assert_eq!(reload.value(&k2), Some(0.77));
     }
 }

@@ -23,11 +23,16 @@ pub fn power_watts(a: AccelType, u: f64) -> f64 {
     idle + extra * u.powf(0.8)
 }
 
-/// Piecewise-linear upper envelope of `power_watts` for the ILP: the
-/// paper notes γ_a can be linearized; since each instance hosts at most
-/// one combination (constraint 2f), the objective is evaluated per-combo
-/// and needs no explicit linearization — this helper exists for the
-/// ablation bench that solves the "linearized-γ" variant instead.
+/// Piecewise-linear (chord) approximation of `power_watts` for the ILP:
+/// each segment interpolates between the curve's knot values. Since
+/// `u ↦ u^0.8` is concave, the chord is a *lower* bound on the true
+/// power within each segment (exact at the knots) — not an upper
+/// envelope; tangent lines, not secants, would over-approximate a
+/// concave curve. The paper notes γ_a can be linearized; since each
+/// instance hosts at most one combination (constraint 2f), the
+/// objective is evaluated per-combo and needs no explicit linearization
+/// — this helper exists for the ablation bench that solves the
+/// "linearized-γ" variant instead.
 pub fn power_linearized(a: AccelType, u: f64, segments: usize) -> f64 {
     let (idle, extra) = a.power_params();
     let u = u.clamp(0.0, 1.0);
@@ -57,13 +62,20 @@ impl EnergyMeter {
     /// Accrue energy for the interval `[last_t, t]` given the placement
     /// and each hosted job's current *measured* normalized throughput.
     /// `loads` maps accelerator instance → relative load u.
-    pub fn accrue(&mut self, t: f64, spec_accels: &[AccelId], loads: &HashMap<AccelId, f64>) {
+    ///
+    /// `accels_in_service` must be the cluster's *available* set (e.g.
+    /// [`crate::cluster::Cluster::available_accels`]), never the raw
+    /// spec: an accelerator that is down draws nothing, and billing its
+    /// idle watts through an `AccelDown` window would inflate total
+    /// joules for every policy (asserted by the churn regression test in
+    /// `coordinator/scheduler.rs`).
+    pub fn accrue(&mut self, t: f64, accels_in_service: &[AccelId], loads: &HashMap<AccelId, f64>) {
         let dt = (t - self.last_t).max(0.0);
         self.last_t = t;
         if dt == 0.0 {
             return;
         }
-        for aid in spec_accels {
+        for aid in accels_in_service {
             let u = loads.get(aid).copied().unwrap_or(0.0);
             let p = power_watts(aid.accel, u);
             self.total_joules += p * dt;

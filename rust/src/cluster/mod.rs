@@ -75,6 +75,44 @@ impl ClusterSpec {
     pub fn is_empty(&self) -> bool {
         self.accels.is_empty()
     }
+
+    /// Partition the cluster into `p` server-pool shards for the
+    /// shard-parallel decision path. Instances are dealt round-robin
+    /// over spec order; since [`ClusterSpec::mix`] lists each type as a
+    /// contiguous run, every shard receives a near-equal slice of every
+    /// accelerator type. Deterministic, covers each instance exactly
+    /// once, and `p` is clamped to [1, len].
+    pub fn shards(&self, p: usize) -> Vec<ShardSpec> {
+        let p = p.clamp(1, self.accels.len().max(1));
+        (0..p)
+            .map(|index| ShardSpec {
+                index,
+                accels: self
+                    .accels
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % p == index)
+                    .map(|(_, a)| *a)
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+/// One server-pool shard: a deterministic slice of the cluster spec that
+/// the parallel arrival path treats as an independent placement domain
+/// (cross-shard moves happen only on the periodic full re-solve).
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    pub index: usize,
+    /// Member instances, in spec order.
+    pub accels: Vec<AccelId>,
+}
+
+impl ShardSpec {
+    pub fn contains(&self, a: AccelId) -> bool {
+        self.accels.contains(&a)
+    }
 }
 
 /// Live placement state of the cluster.
@@ -305,6 +343,18 @@ impl Cluster {
         self.down.contains(&a)
     }
 
+    /// In-service instances of one shard, in spec order — the
+    /// availability filtering every shard worker's instance pool starts
+    /// from (a down accelerator must never enter a local ILP).
+    pub fn shard_available_accels(&self, shard: &ShardSpec) -> Vec<AccelId> {
+        shard
+            .accels
+            .iter()
+            .filter(|a| !self.down.contains(a))
+            .copied()
+            .collect()
+    }
+
     /// Take an instance out of service, evicting whatever ran there.
     /// Returns the jobs that lost that instance (sorted).
     pub fn set_accel_down(&mut self, a: AccelId) -> Vec<JobId> {
@@ -498,6 +548,43 @@ mod tests {
         assert_eq!(spec.len(), 12);
         let types: std::collections::HashSet<_> = spec.accels.iter().map(|a| a.accel).collect();
         assert_eq!(types.len(), 6);
+    }
+
+    #[test]
+    fn shards_partition_exactly_once_and_balance_types() {
+        let spec = ClusterSpec::balanced(4); // 24 instances, 6 types
+        for p in [1, 2, 3, 4, 8] {
+            let shards = spec.shards(p);
+            assert_eq!(shards.len(), p);
+            let mut seen: Vec<AccelId> = shards.iter().flat_map(|s| s.accels.clone()).collect();
+            seen.sort();
+            let mut all = spec.accels.clone();
+            all.sort();
+            assert_eq!(seen, all, "p={p}: shards must cover each instance exactly once");
+        }
+        // round-robin over the contiguous type runs spreads each type
+        let shards = spec.shards(4);
+        for s in &shards {
+            let types: std::collections::HashSet<_> = s.accels.iter().map(|a| a.accel).collect();
+            assert_eq!(types.len(), 6, "shard {} missing types", s.index);
+        }
+        // p is clamped to the instance count (and to ≥ 1)
+        assert_eq!(spec.shards(100).len(), 24);
+        assert_eq!(spec.shards(0).len(), 1);
+    }
+
+    #[test]
+    fn shard_available_accels_filters_down_instances() {
+        let mut c = delta_cluster();
+        let shards = c.spec.shards(2);
+        let victim = shards[0].accels[0];
+        c.set_accel_down(victim);
+        let avail = c.shard_available_accels(&shards[0]);
+        assert_eq!(avail.len(), shards[0].accels.len() - 1);
+        assert!(!avail.contains(&victim));
+        // the other shard is untouched
+        assert_eq!(c.shard_available_accels(&shards[1]), shards[1].accels);
+        assert!(shards[0].contains(victim) && !shards[1].contains(victim));
     }
 
     #[test]

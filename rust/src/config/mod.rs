@@ -151,6 +151,19 @@ pub struct GoghPolicyConfig {
     /// local ILP re-solves the new job plus up to this many co-location
     /// candidates (0 disables the incremental path entirely).
     pub neighborhood: usize,
+    /// Server-pool shards of the parallel decision path: each arrival is
+    /// solved per shard on scoped worker threads and routed to the shard
+    /// with the lowest marginal energy; the periodic full re-solve stays
+    /// global as the cross-shard rebalance. 1 (the default) keeps the
+    /// single-threaded pre-shard path.
+    pub shards: usize,
+    /// Memoize estimate-matrix lookups between catalog mutations
+    /// (value-transparent; disable only for cache benchmarking).
+    pub estimate_cache: bool,
+    /// Cap on P1 co-runner candidates per arrival (0 = every active
+    /// job); large clusters need the cap to keep the round-0 estimate
+    /// fan-out O(active) instead of O(active²).
+    pub p1_candidates: usize,
 }
 
 impl Default for GoghPolicyConfig {
@@ -161,6 +174,9 @@ impl Default for GoghPolicyConfig {
             exploration_epsilon: 0.0,
             full_resolve_every: 8,
             neighborhood: 4,
+            shards: 1,
+            estimate_cache: true,
+            p1_candidates: 0,
         }
     }
 }
@@ -213,6 +229,38 @@ fn accel_from_name(n: &str) -> Result<AccelType> {
 }
 
 impl ExperimentConfig {
+    /// Named experiment presets (`gogh simulate --preset <name>`).
+    pub fn preset(name: &str) -> Result<Self> {
+        match name {
+            "default" => Ok(Self::default()),
+            "large" => Ok(Self::large_scale()),
+            other => anyhow::bail!("unknown preset {other:?} (want default|large)"),
+        }
+    }
+
+    /// The `large` scale scenario: ≥ 1024 accelerator instances and a
+    /// ≥ 50k-event trace ([`TraceConfig::large`]), with solver budgets
+    /// tuned so the periodic full re-solve stays an off-path rebalance
+    /// and the sharded incremental path carries the arrival load.
+    pub fn large_scale() -> Self {
+        let mut cfg = Self::default();
+        // 6 types × 172 = 1032 instances
+        cfg.cluster.accel_mix = ACCEL_TYPES.iter().map(|&a| (a, 172)).collect();
+        cfg.trace = TraceConfig::large();
+        cfg.seed = 42;
+        // fewer, coarser monitoring rounds: ~320 ticks over the horizon
+        cfg.monitor_interval_s = 300.0;
+        // a ~450-job full ILP is seconds even warm-started: keep it rare
+        // and tightly budgeted; the local solves carry the decision path
+        cfg.optimizer.max_pairs_per_job = 1;
+        cfg.optimizer.max_nodes = 200;
+        cfg.optimizer.time_limit_s = 1.0;
+        cfg.gogh.full_resolve_every = 5000;
+        cfg.gogh.shards = 4;
+        cfg.gogh.p1_candidates = 8;
+        cfg
+    }
+
     pub fn from_json(text: &str) -> Result<Self> {
         let j = Json::parse(text)?;
         let mut cfg = ExperimentConfig::default();
@@ -313,6 +361,15 @@ impl ExperimentConfig {
             if let Some(v) = g.get("neighborhood") {
                 cfg.gogh.neighborhood = v.as_usize().unwrap_or(cfg.gogh.neighborhood);
             }
+            if let Some(v) = g.get("shards") {
+                cfg.gogh.shards = v.as_usize().unwrap_or(cfg.gogh.shards).max(1);
+            }
+            if let Some(v) = g.get("estimate_cache") {
+                cfg.gogh.estimate_cache = v.as_bool().unwrap_or(cfg.gogh.estimate_cache);
+            }
+            if let Some(v) = g.get("p1_candidates") {
+                cfg.gogh.p1_candidates = v.as_usize().unwrap_or(cfg.gogh.p1_candidates);
+            }
         }
         if let Some(v) = j.get("monitor_interval_s") {
             cfg.monitor_interval_s = v.as_f64().unwrap_or(30.0);
@@ -394,6 +451,9 @@ impl ExperimentConfig {
                     ("exploration_epsilon", self.gogh.exploration_epsilon.into()),
                     ("full_resolve_every", self.gogh.full_resolve_every.into()),
                     ("neighborhood", self.gogh.neighborhood.into()),
+                    ("shards", self.gogh.shards.into()),
+                    ("estimate_cache", self.gogh.estimate_cache.into()),
+                    ("p1_candidates", self.gogh.p1_candidates.into()),
                 ]),
             ),
             ("monitor_interval_s", self.monitor_interval_s.into()),
@@ -489,6 +549,9 @@ mod tests {
         cfg.gogh.exploration_epsilon = 0.25;
         cfg.gogh.full_resolve_every = 3;
         cfg.gogh.neighborhood = 2;
+        cfg.gogh.shards = 6;
+        cfg.gogh.estimate_cache = false;
+        cfg.gogh.p1_candidates = 12;
         cfg.migration_cost_s = 45.0;
         cfg.trace.cancel_rate = 0.2;
         cfg.trace.accel_churn = 1.5;
@@ -498,6 +561,9 @@ mod tests {
         assert_eq!(back.gogh.exploration_epsilon, 0.25);
         assert_eq!(back.gogh.full_resolve_every, 3);
         assert_eq!(back.gogh.neighborhood, 2);
+        assert_eq!(back.gogh.shards, 6);
+        assert!(!back.gogh.estimate_cache);
+        assert_eq!(back.gogh.p1_candidates, 12);
         assert_eq!(back.migration_cost_s, 45.0);
         assert_eq!(back.trace.cancel_rate, 0.2);
         assert_eq!(back.trace.accel_churn, 1.5);
@@ -512,5 +578,26 @@ mod tests {
         // full_resolve_every is clamped to ≥ 1 (0 would never re-solve)
         let z = ExperimentConfig::from_json(r#"{"gogh": {"full_resolve_every": 0}}"#).unwrap();
         assert_eq!(z.gogh.full_resolve_every, 1);
+        // shards clamp to ≥ 1, defaults keep the unsharded path + cache
+        let z = ExperimentConfig::from_json(r#"{"gogh": {"shards": 0}}"#).unwrap();
+        assert_eq!(z.gogh.shards, 1);
+        assert_eq!(d.gogh.shards, 1);
+        assert!(d.gogh.estimate_cache);
+        assert_eq!(d.gogh.p1_candidates, 0);
+    }
+
+    #[test]
+    fn large_preset_is_cluster_scale_and_roundtrips() {
+        let cfg = ExperimentConfig::preset("large").unwrap();
+        let total: u32 = cfg.cluster.accel_mix.iter().map(|(_, n)| n).sum();
+        assert!(total >= 1024, "large preset has only {total} accels");
+        assert!(cfg.trace.n_jobs >= 40_000);
+        assert_eq!(cfg.gogh.shards, 4);
+        assert!(cfg.gogh.p1_candidates > 0);
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.gogh.shards, cfg.gogh.shards);
+        assert_eq!(back.trace.n_jobs, cfg.trace.n_jobs);
+        assert!(ExperimentConfig::preset("huge").is_err());
+        assert_eq!(ExperimentConfig::preset("default").unwrap().gogh.shards, 1);
     }
 }

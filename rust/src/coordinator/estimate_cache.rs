@@ -1,0 +1,235 @@
+//! Memoized estimate matrix for the decision path.
+//!
+//! [`super::refinement::catalog_value`] is pure given a Catalog
+//! snapshot, but the solver evaluates it on every branch-and-bound
+//! node: pair scoring, column builds and instance binding re-resolve the
+//! same (accelerator type, job, combination) keys thousands of times per
+//! decision. The cache stores each resolved value until a catalog
+//! mutation invalidates it: monitoring rounds (measurement batches + P2
+//! refinements) clear the whole matrix, while job-scoped mutations
+//! (round-0 estimate writes, departures) drop only the involved job's
+//! keys — so the hot path resolves each key once per round instead of
+//! once per solver node.
+//!
+//! The cache is shared by the shard workers of the parallel arrival path
+//! (an `RwLock` guards the map — hits dominate after warm-up, so workers
+//! mostly take the shared read path; values are deterministic, so
+//! concurrent insertion order cannot change results) and is strictly
+//! value-transparent: a hit returns exactly what `catalog_value` would.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::catalog::{Catalog, EstimateKey};
+use crate::coordinator::refinement::catalog_value;
+use crate::workload::{AccelType, Combo, JobId};
+
+/// Map + reverse index, guarded together. The per-job index keeps
+/// [`EstimateCache::drop_job`] O(own keys) — a whole-map retain per
+/// arrival/departure would reintroduce the quadratic scan this PR
+/// removed from the Catalog. A pair key lands in both jobs' lists;
+/// entries whose key was already removed are skipped on drop.
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<EstimateKey, f64>,
+    by_job: HashMap<JobId, Vec<EstimateKey>>,
+}
+
+/// Shared memo of resolved `catalog_value` lookups.
+#[derive(Debug, Default)]
+pub struct EstimateCache {
+    inner: RwLock<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+/// Counters for the §Perf report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EstimateCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// rounds the matrix was cleared (catalog mutations)
+    pub invalidations: u64,
+    pub entries: usize,
+}
+
+impl EstimateCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl EstimateCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve (a, j, c), memoizing the result until the next
+    /// [`EstimateCache::invalidate`].
+    pub fn value(&self, catalog: &Catalog, a: AccelType, j: JobId, c: &Combo) -> f64 {
+        let key = EstimateKey {
+            accel: a,
+            job: j,
+            combo: *c,
+        };
+        if let Some(v) = self.inner.read().unwrap().map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        // compute outside any lock (the resolution is the expensive
+        // part); a racing worker computing the same key inserts the
+        // same deterministic value
+        let v = catalog_value(catalog, a, j, c);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.write().unwrap();
+        if inner.map.insert(key, v).is_none() {
+            for job in key.combo.jobs() {
+                inner.by_job.entry(job).or_default().push(key);
+            }
+        }
+        v
+    }
+
+    /// Clear the whole matrix. Called after catalog mutations that may
+    /// touch many jobs at once (a monitoring round's measurement batch +
+    /// P2 refinements); job-scoped mutations use [`EstimateCache::drop_job`]
+    /// instead. The coordinator owns that discipline.
+    pub fn invalidate(&self) {
+        let mut inner = self.inner.write().unwrap();
+        inner.map.clear();
+        inner.by_job.clear();
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drop the cached keys involving one job — used when a job departs
+    /// (its estimates can never be queried again) and after round-0
+    /// estimate writes for an arrival (which only touch combos
+    /// containing it). O(own keys) via the reverse index.
+    pub fn drop_job(&self, j: JobId) {
+        let mut inner = self.inner.write().unwrap();
+        let Some(keys) = inner.by_job.remove(&j) else {
+            return;
+        };
+        for key in keys {
+            inner.map.remove(&key);
+        }
+    }
+
+    pub fn stats(&self) -> EstimateCacheStats {
+        EstimateCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            entries: self.inner.read().unwrap().map.len(),
+        }
+    }
+}
+
+/// Resolve through the cache when one is plumbed, else directly — the
+/// single call-site helper the decision path funnels through.
+pub(crate) fn value_via(
+    catalog: &Catalog,
+    cache: Option<&EstimateCache>,
+    a: AccelType,
+    j: JobId,
+    c: &Combo,
+) -> f64 {
+    match cache {
+        Some(cache) => cache.value(catalog, a, j, c),
+        None => catalog_value(catalog, a, j, c),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(j: u32) -> (AccelType, JobId, Combo) {
+        (AccelType::V100, JobId(j), Combo::Solo(JobId(j)))
+    }
+
+    #[test]
+    fn cache_is_value_transparent() {
+        let mut catalog = Catalog::new();
+        let cache = EstimateCache::new();
+        let (a, j, c) = key(1);
+        catalog.write_initial(
+            EstimateKey {
+                accel: a,
+                job: j,
+                combo: c,
+            },
+            0.42,
+        );
+        for _ in 0..3 {
+            assert_eq!(cache.value(&catalog, a, j, &c), catalog_value(&catalog, a, j, &c));
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalidation_tracks_catalog_mutations() {
+        let mut catalog = Catalog::new();
+        let cache = EstimateCache::new();
+        let (a, j, c) = key(2);
+        let ek = EstimateKey {
+            accel: a,
+            job: j,
+            combo: c,
+        };
+        catalog.write_initial(ek, 0.3);
+        assert_eq!(cache.value(&catalog, a, j, &c), 0.3);
+        // a refinement changes the average: without invalidation the
+        // cache would (deliberately) serve the stale 0.3 until the round
+        // boundary clears it
+        catalog.push_refinement(ek, 0.5, 1);
+        assert_eq!(cache.value(&catalog, a, j, &c), 0.3);
+        cache.invalidate();
+        assert_eq!(cache.value(&catalog, a, j, &c), 0.4);
+        assert_eq!(cache.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn drop_job_evicts_all_involved_keys() {
+        let catalog = Catalog::new();
+        let cache = EstimateCache::new();
+        let pair = Combo::pair(JobId(1), JobId(2));
+        cache.value(&catalog, AccelType::K80, JobId(1), &Combo::Solo(JobId(1)));
+        cache.value(&catalog, AccelType::K80, JobId(2), &pair);
+        cache.value(&catalog, AccelType::K80, JobId(3), &Combo::Solo(JobId(3)));
+        assert_eq!(cache.stats().entries, 3);
+        cache.drop_job(JobId(1));
+        // solo(1) and the pair involving 1 go; solo(3) stays
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let catalog = Catalog::new();
+        let cache = EstimateCache::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cache = &cache;
+                let catalog = &catalog;
+                s.spawn(move || {
+                    for i in 0..16 {
+                        let j = JobId((t * 16 + i) % 8);
+                        cache.value(catalog, AccelType::P100, j, &Combo::Solo(j));
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.entries, 8);
+        assert_eq!(s.hits + s.misses, 64);
+    }
+}

@@ -17,21 +17,24 @@
 //! simulator, with catalog history seeding and estimator bootstrap
 //! training.
 
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeSet, HashSet};
 
 use crate::catalog::{Catalog, EstimateKey, SimilarityIndex};
-use crate::cluster::{AccelId, Cluster, ClusterSpec, Measurement, Placement, PlacementDelta};
+use crate::cluster::{
+    AccelId, Cluster, ClusterSpec, Measurement, Placement, PlacementDelta, ShardSpec,
+};
 use crate::config::ExperimentConfig;
+use crate::coordinator::estimate_cache::{value_via, EstimateCache, EstimateCacheStats};
 use crate::coordinator::history;
 use crate::coordinator::optimizer::{self, Optimizer};
 use crate::coordinator::refinement::{self, catalog_value};
 use crate::coordinator::scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};
 use crate::ilp::branch_bound::{BnbConfig, BnbStatus};
-use crate::ilp::problem1::{solve_problem1, Problem1Input};
+use crate::ilp::problem1::{pool_accel_counts, solve_problem1, Problem1Input};
 use crate::metrics::{ErrorTracker, RunReport};
 use crate::runtime::dataset::Sample;
 use crate::runtime::{Engine, Estimator};
-use crate::workload::encoding::p1_row;
+use crate::workload::encoding::{p1_row, psi_distance};
 use crate::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, ACCEL_TYPES};
 use crate::Result;
 
@@ -62,6 +65,20 @@ pub struct GoghOptions {
     /// Neighborhood size of the incremental arrival path (0 disables
     /// incremental solving — every arrival re-solves the full ILP).
     pub neighborhood: usize,
+    /// Server-pool shards of the parallel decision path: arrivals are
+    /// solved per shard on scoped worker threads and routed to the shard
+    /// with the lowest marginal energy. 1 (the default) keeps the
+    /// single-threaded pre-shard path bit-for-bit.
+    pub shards: usize,
+    /// Memoize `catalog_value` lookups in the [`EstimateCache`]
+    /// (invalidated per refinement round). Value-transparent: disabling
+    /// it changes wall-clock only, never placements.
+    pub estimate_cache: bool,
+    /// Cap on P1 co-runner candidates per arrival (0 = every active
+    /// job). At 1000-accelerator scale the uncapped estimate fan-out is
+    /// O(active² × types) over a trace; the cap keeps the most similar
+    /// candidates (the ones P1's transfer is most reliable for).
+    pub p1_candidates: usize,
     pub seed: u64,
 }
 
@@ -75,7 +92,29 @@ impl Default for GoghOptions {
             exploration_epsilon: 0.0,
             full_resolve_every: 8,
             neighborhood: 4,
+            shards: 1,
+            estimate_cache: true,
+            p1_candidates: 0,
             seed: 17,
+        }
+    }
+}
+
+impl GoghOptions {
+    /// The scheduler knobs an [`ExperimentConfig`] describes.
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        Self {
+            estimator: cfg.estimator.clone(),
+            optimizer: cfg.optimizer.clone(),
+            history_jobs: cfg.gogh.history_jobs,
+            enable_refinement: cfg.gogh.enable_refinement,
+            exploration_epsilon: cfg.gogh.exploration_epsilon,
+            full_resolve_every: cfg.gogh.full_resolve_every,
+            neighborhood: cfg.gogh.neighborhood,
+            shards: cfg.gogh.shards,
+            estimate_cache: cfg.gogh.estimate_cache,
+            p1_candidates: cfg.gogh.p1_candidates,
+            seed: cfg.seed,
         }
     }
 }
@@ -109,12 +148,46 @@ impl SolverPathStats {
     }
 }
 
+/// Per-shard decision-path statistics of the parallel arrival path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardStats {
+    /// local arrival solves attempted by this shard's worker
+    pub solves: usize,
+    /// branch-and-bound nodes those solves explored
+    pub nodes: usize,
+    /// wall-clock seconds inside this shard's local solves
+    pub seconds: f64,
+    /// jobs whose winning placement this shard hosted
+    pub routed: usize,
+}
+
+impl ShardStats {
+    pub fn mean_nodes(&self) -> f64 {
+        if self.solves == 0 {
+            0.0
+        } else {
+            self.nodes as f64 / self.solves as f64
+        }
+    }
+}
+
 pub struct GoghScheduler {
     pub catalog: Catalog,
-    p1: Estimator,
-    p2: Estimator,
+    /// P1/P2 estimators; `None` runs the coordinator estimator-free
+    /// (catalog priors + measurements only — the degraded mode used
+    /// when no PJRT artifacts are available, e.g. CI and scale benches).
+    p1: Option<Estimator>,
+    p2: Option<Estimator>,
     opt: Optimizer,
     options: GoghOptions,
+    /// memoized estimate matrix (invalidated on catalog mutation)
+    cache: EstimateCache,
+    /// shard partition of the current cluster spec (computed lazily on
+    /// the first sharded arrival, reused for the rest of the run)
+    partition: Option<ShardPartition>,
+    /// per-shard decision-path stats (index 0 doubles as the unsharded
+    /// incremental path's slot)
+    shard_stats: Vec<ShardStats>,
     /// jobs whose round-0 estimates were already produced
     initialized: HashSet<JobId>,
     replay_p1: Vec<Sample>,
@@ -141,11 +214,35 @@ impl GoghScheduler {
     ) -> Result<Self> {
         let p1 = Estimator::new(engine, &format!("p1_{}", options.estimator.p1_arch.key()))?;
         let p2 = Estimator::new(engine, &format!("p2_{}", options.estimator.p2_arch.key()))?;
+        Self::from_parts(Some(p1), Some(p2), oracle_for_history, options)
+    }
+
+    /// Build without a PJRT engine: the coordinator runs estimator-free
+    /// on catalog priors, similarity transfer and live measurements (no
+    /// P1/P2 networks, no online training). This is the degraded mode
+    /// for environments without AOT artifacts — CI smokes and the scale
+    /// benches exercise the full decision path through it.
+    pub fn without_engine(
+        oracle_for_history: &ThroughputOracle,
+        options: GoghOptions,
+    ) -> Result<Self> {
+        Self::from_parts(None, None, oracle_for_history, options)
+    }
+
+    fn from_parts(
+        p1: Option<Estimator>,
+        p2: Option<Estimator>,
+        oracle_for_history: &ThroughputOracle,
+        options: GoghOptions,
+    ) -> Result<Self> {
         let mut s = Self {
             catalog: Catalog::new(),
             p1,
             p2,
             opt: Optimizer::new(options.optimizer.clone()),
+            cache: EstimateCache::new(),
+            partition: None,
+            shard_stats: vec![ShardStats::default(); options.shards.max(1)],
             initialized: HashSet::new(),
             replay_p1: vec![],
             replay_p2: vec![],
@@ -176,7 +273,7 @@ impl GoghScheduler {
     /// Pre-train P1/P2 on catalog history (build-time data only).
     fn bootstrap(&mut self) -> Result<()> {
         let steps = self.options.estimator.bootstrap_steps;
-        if steps == 0 {
+        if steps == 0 || (self.p1.is_none() && self.p2.is_none()) {
             return Ok(());
         }
         let n = (steps * 64).min(self.options.estimator.replay_capacity * 4);
@@ -205,9 +302,10 @@ impl GoghScheduler {
     /// One Adam step for each network on a random replay batch.
     fn train_once(&mut self) -> Result<()> {
         for (est, replay) in [
-            (&mut self.p1, &self.replay_p1),
-            (&mut self.p2, &self.replay_p2),
+            (self.p1.as_mut(), &self.replay_p1),
+            (self.p2.as_mut(), &self.replay_p2),
         ] {
+            let Some(est) = est else { continue };
             if replay.len() < 8 {
                 continue;
             }
@@ -223,7 +321,9 @@ impl GoghScheduler {
 
     /// Round-0 estimation for a new job (paper §2.3): Eq. 1 rows over
     /// every accel type × (solo + each active co-runner), one batched P1
-    /// call, estimates written into the Catalog.
+    /// call, estimates written into the Catalog. Estimator-free mode
+    /// writes the similarity-transfer inputs themselves as the round-0
+    /// estimates (the Eq. 1 identity prior: j1 behaves like j2).
     fn initial_estimates(&mut self, cluster: &Cluster, j1: JobId) -> Result<()> {
         let spec = cluster.job(j1).expect("job registered").clone();
         let psi_j1 = spec.psi();
@@ -248,6 +348,9 @@ impl GoghScheduler {
                 );
             }
             self.initialized.insert(j1);
+            // round-0 writes only touch keys involving j1 — a targeted
+            // drop keeps the rest of the memoized matrix warm
+            self.cache.drop_job(j1);
             return Ok(());
         };
         let psi_j2 = *self.catalog.psi(j2).unwrap();
@@ -259,23 +362,48 @@ impl GoghScheduler {
             .filter(|&j| j != j1)
             .collect();
         others.sort();
+        // at scale, cap the fan-out to the most similar candidates (the
+        // pairings the optimizer is most likely to propose first)
+        let cap = self.options.p1_candidates;
+        if cap > 0 && others.len() > cap {
+            let mut scored: Vec<(f32, JobId)> = others
+                .iter()
+                .map(|&j| {
+                    let d = self
+                        .catalog
+                        .psi(j)
+                        .map(|p| psi_distance(&psi_j1, p))
+                        .unwrap_or(f32::INFINITY);
+                    (d, j)
+                })
+                .collect();
+            scored.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            others = scored.into_iter().take(cap).map(|(_, j)| j).collect();
+            others.sort();
+        }
 
         let mut rows: Vec<Vec<f32>> = vec![];
         let mut keys: Vec<(EstimateKey, Option<EstimateKey>)> = vec![];
+        // similarity-transfer inputs, doubling as the estimator-free
+        // round-0 estimates
+        let mut priors: Vec<[f64; 2]> = vec![];
+        let build_rows = self.p1.is_some();
         for &a in ACCEL_TYPES.iter() {
             // solo row (j3 = j0)
             let t_j2_solo = catalog_value(&self.catalog, a, j2, &Combo::Solo(j2));
-            rows.push(
-                p1_row(
-                    &psi_j2,
-                    &crate::workload::encoding::PSI_EMPTY,
-                    a,
-                    t_j2_solo as f32,
-                    0.0,
-                    &psi_j1,
-                )
-                .to_vec(),
-            );
+            if build_rows {
+                rows.push(
+                    p1_row(
+                        &psi_j2,
+                        &crate::workload::encoding::PSI_EMPTY,
+                        a,
+                        t_j2_solo as f32,
+                        0.0,
+                        &psi_j1,
+                    )
+                    .to_vec(),
+                );
+            }
             keys.push((
                 EstimateKey {
                     accel: a,
@@ -284,6 +412,7 @@ impl GoghScheduler {
                 },
                 None,
             ));
+            priors.push([t_j2_solo, 0.0]);
             // pair rows
             for &j3 in &others {
                 let Some(psi_j3) = self.catalog.psi(j3).copied() else {
@@ -293,7 +422,11 @@ impl GoghScheduler {
                 // measured pair with the peer most similar to j3, falling
                 // back to solo values (documented Eq. 1 approximation).
                 let (t_j2, t_j3) = self.historical_pair_inputs(a, j2, j3);
-                rows.push(p1_row(&psi_j2, &psi_j3, a, t_j2 as f32, t_j3 as f32, &psi_j1).to_vec());
+                if build_rows {
+                    rows.push(
+                        p1_row(&psi_j2, &psi_j3, a, t_j2 as f32, t_j3 as f32, &psi_j1).to_vec(),
+                    );
+                }
                 let combo = Combo::pair(j1, j3);
                 keys.push((
                     EstimateKey {
@@ -307,13 +440,20 @@ impl GoghScheduler {
                         combo,
                     }),
                 ));
+                priors.push([t_j2, t_j3]);
             }
         }
 
-        let t0 = std::time::Instant::now();
-        let preds = self.p1.predict(&rows)?;
-        self.p1_seconds += t0.elapsed().as_secs_f64();
-        self.p1_calls += 1;
+        let preds: Vec<[f32; 2]> = match self.p1.as_mut() {
+            Some(p1) => {
+                let t0 = std::time::Instant::now();
+                let preds = p1.predict(&rows)?;
+                self.p1_seconds += t0.elapsed().as_secs_f64();
+                self.p1_calls += 1;
+                preds
+            }
+            None => priors.iter().map(|p| [p[0] as f32, p[1] as f32]).collect(),
+        };
 
         for ((k1, k3), pred) in keys.iter().zip(&preds) {
             self.catalog
@@ -328,6 +468,10 @@ impl GoghScheduler {
             }
         }
         self.initialized.insert(j1);
+        // every key written above has j1 in its combo, so a targeted
+        // drop is value-equivalent to a full invalidation and keeps the
+        // rest of the memoized matrix warm across arrivals
+        self.cache.drop_job(j1);
         Ok(())
     }
 
@@ -430,6 +574,179 @@ impl GoghScheduler {
     }
 }
 
+/// Outcome of one bounded local arrival solve (one shard worker, or the
+/// whole-cluster pool on the unsharded path).
+struct LocalSolve {
+    delta: Option<PlacementDelta>,
+    /// objective minus the pool's current estimated cost: the marginal
+    /// energy of hosting the arrival here (the shard-routing score)
+    marginal: f64,
+    nodes: usize,
+    seconds: f64,
+    /// whether an ILP actually ran (early-outs must not count as solves)
+    attempted: bool,
+}
+
+impl LocalSolve {
+    fn skipped() -> Self {
+        Self {
+            delta: None,
+            marginal: f64::INFINITY,
+            nodes: 0,
+            seconds: 0.0,
+            attempted: false,
+        }
+    }
+}
+
+/// The shard partition of one cluster spec, computed once per run and
+/// reused on every sharded arrival (the partition depends only on the
+/// immutable spec and the shard count; rebuilding the `ShardSpec`s and
+/// membership sets per event was measurable on the 1000-accel hot path).
+struct ShardPartition {
+    /// the spec accels this partition was computed from (staleness key)
+    spec: Vec<AccelId>,
+    p: usize,
+    shards: Vec<ShardSpec>,
+    /// per-shard membership sets for O(1) `within_shard` checks
+    sets: Vec<HashSet<AccelId>>,
+}
+
+/// Bounded local re-solve for one arrival over one instance pool: only
+/// the new job and its best co-location neighborhood enter the ILP;
+/// every other running job keeps its instances untouched. With
+/// `shard: Some(_)` the neighborhood is restricted to jobs placed wholly
+/// inside the shard and the pool to the shard's in-service instances —
+/// this is the worker body of the shard-parallel decision path, pure
+/// w.r.t. scheduler state so `std::thread::scope` can fan it out.
+fn local_arrival_solve(
+    catalog: &Catalog,
+    cache: Option<&EstimateCache>,
+    cluster: &Cluster,
+    j1: JobId,
+    shard: Option<(&ShardSpec, &HashSet<AccelId>)>,
+    neighborhood: usize,
+    ocfg: &crate::config::OptimizerConfig,
+) -> LocalSolve {
+    if neighborhood == 0 {
+        return LocalSolve::skipped();
+    }
+    let within_shard = |j: JobId| -> bool {
+        let Some((_, set)) = shard else { return true };
+        let accels = cluster.placement.accels_of(j);
+        !accels.is_empty() && accels.iter().all(|a| set.contains(a))
+    };
+    // rank co-location partners by estimated pair synergy
+    let active = cluster.active_job_ids();
+    let mut scored: Vec<(f64, JobId)> = active
+        .iter()
+        .filter(|&&j| j != j1 && (shard.is_none() || within_shard(j)))
+        .map(|&j| {
+            let c = Combo::pair(j1, j);
+            let s = value_via(catalog, cache, AccelType::V100, j1, &c)
+                + value_via(catalog, cache, AccelType::V100, j, &c);
+            (s, j)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut nbr: BTreeSet<JobId> = scored.iter().take(neighborhood).map(|&(_, j)| j).collect();
+    nbr.insert(j1);
+    // close under co-location: drop members paired with outsiders
+    loop {
+        let victim = nbr.iter().copied().find(|&j| {
+            cluster.placement.accels_of(j).iter().any(|aid| {
+                cluster
+                    .placement
+                    .combo_on(*aid)
+                    .map_or(false, |c| c.jobs().iter().any(|x| !nbr.contains(x)))
+            })
+        });
+        match victim {
+            Some(j) => {
+                nbr.remove(&j);
+            }
+            None => break,
+        }
+    }
+    // instance pool: free in-service instances + instances wholly owned
+    // by the neighborhood (shard workers start from their own pool)
+    let avail = match shard {
+        Some((s, _)) => cluster.shard_available_accels(s),
+        None => cluster.available_accels(),
+    };
+    let pool: Vec<AccelId> = avail
+        .into_iter()
+        .filter(|aid| match cluster.placement.combo_on(*aid) {
+            None => true,
+            Some(c) => c.jobs().iter().all(|j| nbr.contains(j)),
+        })
+        .collect();
+    if pool.is_empty() {
+        return LocalSolve::skipped();
+    }
+    let jobs: Vec<JobSpec> = nbr.iter().filter_map(|j| cluster.job(*j).cloned()).collect();
+    let counts = pool_accel_counts(&pool);
+    let thr = move |a: AccelType, j: JobId, c: &Combo| value_via(catalog, cache, a, j, c);
+    let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+    let input = Problem1Input {
+        jobs: &jobs,
+        accel_counts: &counts,
+        throughput: &thr,
+        solo_capability: &solo_cap,
+        max_pairs_per_job: ocfg.max_pairs_per_job,
+        slack_penalty: Some(ocfg.slack_penalty),
+        throughput_bonus: ocfg.throughput_bonus,
+    };
+    let bnb = BnbConfig {
+        max_nodes: ocfg.max_nodes.min(LOCAL_NODE_BUDGET),
+        // deterministic budget only: a wall-clock cutoff would make the
+        // incumbent — and thus shard routing and placements — depend on
+        // host load, breaking the path's bit-reproducibility guarantee
+        // (the tiny node-bounded local problems don't need an anytime
+        // escape; the full re-solve keeps its time limit)
+        time_limit_s: f64::INFINITY,
+        auto_warm_start: ocfg.warm_start,
+        node_selection: ocfg.node_selection,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let sol = solve_problem1(&input, &bnb);
+    let seconds = t0.elapsed().as_secs_f64();
+    let solved = matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible)
+        && sol.violated_jobs.is_empty();
+    let delta = if solved {
+        optimizer::bind_pool(cluster, &pool, &sol)
+    } else {
+        None
+    };
+    // routing score: subtract the pool's current estimated column cost,
+    // so shards compete on the *marginal* energy of accepting j1 (a
+    // busier shard's absolute objective is higher through no fault of
+    // the arrival). Only the sharded path routes, and only feasible
+    // solves compete — skip the pool sweep otherwise.
+    let marginal = if shard.is_some() && delta.is_some() {
+        let baseline: f64 = pool
+            .iter()
+            .filter_map(|aid| cluster.placement.combo_on(*aid).map(|c| (*aid, *c)))
+            .map(|(aid, c)| {
+                let total_t: f64 = c.jobs().iter().map(|&j| thr(aid.accel, j, &c)).sum();
+                let u = (total_t / solo_cap(aid.accel).max(1e-9)).clamp(0.0, 1.0);
+                crate::cluster::power_watts(aid.accel, u) - ocfg.throughput_bonus * total_t
+            })
+            .sum();
+        sol.objective - baseline
+    } else {
+        f64::INFINITY
+    };
+    LocalSolve {
+        marginal,
+        delta,
+        nodes: sol.nodes,
+        seconds,
+        attempted: true,
+    }
+}
+
 impl GoghScheduler {
     /// Decision-path solver statistics, split by full vs incremental.
     pub fn solver_stats(&self) -> SolverPathStats {
@@ -441,11 +758,23 @@ impl GoghScheduler {
         }
     }
 
-    /// Full Problem-1 re-solve over every active job (the escape hatch
-    /// and the pre-redesign behaviour), returned as a delta.
+    /// Per-shard decision-path statistics (one slot when unsharded).
+    pub fn shard_stats(&self) -> &[ShardStats] {
+        &self.shard_stats
+    }
+
+    /// Estimate-matrix cache counters.
+    pub fn cache_stats(&self) -> EstimateCacheStats {
+        self.cache.stats()
+    }
+
+    /// Full Problem-1 re-solve over every active job (the escape hatch,
+    /// the pre-redesign behaviour, and — when sharded — the periodic
+    /// cross-shard rebalance), returned as a delta.
     fn full_allocate(&mut self, cluster: &Cluster) -> Result<Decision> {
         let catalog = &self.catalog;
-        let thr = move |a: AccelType, j: JobId, c: &Combo| catalog_value(catalog, a, j, c);
+        let cache = self.options.estimate_cache.then_some(&self.cache);
+        let thr = move |a: AccelType, j: JobId, c: &Combo| value_via(catalog, cache, a, j, c);
         let (mut placement, _sol) = self.opt.allocate(cluster, &thr)?;
         // active exploration (see GoghOptions::exploration_epsilon)
         if self.options.exploration_epsilon > 0.0
@@ -457,18 +786,16 @@ impl GoghScheduler {
         Ok(Decision::replace(&cluster.placement, &placement))
     }
 
-    /// Bounded local re-solve for one arrival: only the new job and its
-    /// best co-location neighborhood enter the ILP; every other running
-    /// job keeps its instances untouched. Returns `None` whenever the
-    /// local problem is not cleanly solvable (caller falls back to the
-    /// full re-solve).
+    /// Unsharded bounded local re-solve for one arrival (the P = 1
+    /// decision path, bit-for-bit the pre-shard behaviour). Returns
+    /// `None` whenever the local problem is not cleanly solvable
+    /// (caller falls back to the full re-solve).
     fn incremental_arrival(
         &mut self,
         cluster: &Cluster,
         j1: JobId,
     ) -> Result<Option<PlacementDelta>> {
-        let k = self.options.neighborhood;
-        if k == 0 {
+        if self.options.neighborhood == 0 {
             return Ok(None);
         }
         // older unplaced jobs need global capacity — go full
@@ -476,85 +803,209 @@ impl GoghScheduler {
         if active.iter().any(|&j| j != j1 && !cluster.placement.is_placed(j)) {
             return Ok(None);
         }
-        // rank co-location partners by estimated pair synergy
-        let mut scored: Vec<(f64, JobId)> = active
-            .iter()
-            .filter(|&&j| j != j1)
-            .map(|&j| {
-                let c = Combo::pair(j1, j);
-                let s = catalog_value(&self.catalog, AccelType::V100, j1, &c)
-                    + catalog_value(&self.catalog, AccelType::V100, j, &c);
-                (s, j)
-            })
-            .collect();
-        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-        let mut nbr: BTreeSet<JobId> = scored.iter().take(k).map(|&(_, j)| j).collect();
-        nbr.insert(j1);
-        // close under co-location: drop members paired with outsiders
-        loop {
-            let victim = nbr.iter().copied().find(|&j| {
-                cluster.placement.accels_of(j).iter().any(|aid| {
-                    cluster
-                        .placement
-                        .combo_on(*aid)
-                        .map_or(false, |c| c.jobs().iter().any(|x| !nbr.contains(x)))
-                })
+        let ls = local_arrival_solve(
+            &self.catalog,
+            self.options.estimate_cache.then_some(&self.cache),
+            cluster,
+            j1,
+            None,
+            self.options.neighborhood,
+            &self.options.optimizer,
+        );
+        self.record_local_solve(0, &ls);
+        Ok(ls.delta)
+    }
+
+    fn record_local_solve(&mut self, shard: usize, ls: &LocalSolve) {
+        if !ls.attempted {
+            return;
+        }
+        self.inc_seconds += ls.seconds;
+        self.inc_solves += 1;
+        self.inc_nodes += ls.nodes;
+        if let Some(s) = self.shard_stats.get_mut(shard) {
+            s.solves += 1;
+            s.nodes += ls.nodes;
+            s.seconds += ls.seconds;
+        }
+    }
+
+    /// Recompute the cached shard partition if the spec or shard count
+    /// changed (within one run they never do — this is a lazy init).
+    fn refresh_partition(&mut self, cluster: &Cluster) {
+        let p = self.options.shards;
+        let stale = self
+            .partition
+            .as_ref()
+            .map_or(true, |c| c.p != p || c.spec != cluster.spec.accels);
+        if stale {
+            let shards = cluster.spec.shards(p);
+            let sets = shards.iter().map(|s| s.accels.iter().copied().collect()).collect();
+            self.partition = Some(ShardPartition {
+                spec: cluster.spec.accels.clone(),
+                p,
+                shards,
+                sets,
             });
-            match victim {
-                Some(j) => {
-                    nbr.remove(&j);
-                }
-                None => break,
+        }
+    }
+
+    /// Fan one arrival out to every shard on scoped worker threads and
+    /// route it to the shard whose local solve has the lowest marginal
+    /// energy (deterministic: ties break toward the lower shard index).
+    /// Returns the winning (shard index, delta) — the caller bumps that
+    /// shard's `routed` count only when the delta is actually committed
+    /// (a multi-straggler batch may abort to the full re-solve; the
+    /// solve/node counters still record work genuinely performed).
+    fn sharded_arrival_once(
+        &mut self,
+        cluster: &Cluster,
+        j1: JobId,
+    ) -> Result<Option<(usize, PlacementDelta)>> {
+        self.refresh_partition(cluster);
+        let n_shards = self.partition.as_ref().map_or(1, |c| c.shards.len());
+        if self.shard_stats.len() < n_shards {
+            self.shard_stats.resize(n_shards, ShardStats::default());
+        }
+        let solves: Vec<LocalSolve> = {
+            let part = self.partition.as_ref().expect("partition refreshed");
+            let catalog = &self.catalog;
+            let cache = self.options.estimate_cache.then_some(&self.cache);
+            let k = self.options.neighborhood;
+            let ocfg = &self.options.optimizer;
+            // Scoped threads let workers borrow the catalog/cache
+            // directly (a persistent pool would need 'static captures
+            // or unsafe lifetime erasure); the per-arrival spawn cost
+            // (~tens of µs × P) is small against the local ILP solves,
+            // but it IS the fixed overhead of the sharded path — if the
+            // scale bench margin ever thins, a channel-fed worker pool
+            // over Arc snapshots is the next step.
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = part
+                    .shards
+                    .iter()
+                    .zip(&part.sets)
+                    .map(|(shard, set)| {
+                        scope.spawn(move || {
+                            local_arrival_solve(
+                                catalog,
+                                cache,
+                                cluster,
+                                j1,
+                                Some((shard, set)),
+                                k,
+                                ocfg,
+                            )
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard worker panicked"))
+                    .collect()
+            })
+        };
+        let mut best: Option<usize> = None;
+        for (i, ls) in solves.iter().enumerate() {
+            if ls.delta.is_some() && best.map_or(true, |b| ls.marginal < solves[b].marginal) {
+                best = Some(i);
             }
         }
-        // instance pool: free in-service instances + instances wholly
-        // owned by the neighborhood
-        let pool: Vec<AccelId> = cluster
-            .available_accels()
+        for (i, ls) in solves.iter().enumerate() {
+            self.record_local_solve(i, ls);
+        }
+        let Some(b) = best else { return Ok(None) };
+        let mut solves = solves;
+        Ok(solves.swap_remove(b).delta.map(|d| (b, d)))
+    }
+
+    /// Route every currently-unplaced job through the shard workers.
+    /// The common single-job case (a fresh arrival) solves directly
+    /// against the live cluster; with several stragglers the jobs go one
+    /// at a time against a scratch clone so later placements see earlier
+    /// ones. Covers fresh arrivals, churn-evicted jobs and queued jobs
+    /// unblocked by a departure. Returns `None` — caller falls back to
+    /// the full re-solve — as soon as any job has no feasible shard.
+    fn sharded_place_unplaced(&mut self, cluster: &Cluster) -> Result<Option<PlacementDelta>> {
+        if self.options.neighborhood == 0 {
+            return Ok(None);
+        }
+        let unplaced: Vec<JobId> = cluster
+            .active_job_ids()
             .into_iter()
-            .filter(|aid| match cluster.placement.combo_on(*aid) {
-                None => true,
-                Some(c) => c.jobs().iter().all(|j| nbr.contains(j)),
-            })
+            .filter(|&j| !cluster.placement.is_placed(j))
             .collect();
-        if pool.is_empty() {
-            return Ok(None);
+        match unplaced.as_slice() {
+            [] => Ok(Some(PlacementDelta::new())),
+            // common case (one fresh arrival): no scratch clone needed
+            &[j] => Ok(self.sharded_arrival_once(cluster, j)?.map(|(b, delta)| {
+                self.shard_stats[b].routed += 1;
+                delta
+            })),
+            _ => {
+                let mut scratch = cluster.clone();
+                let mut combined = PlacementDelta::new();
+                // routed counts commit only if the whole batch lands
+                let mut routed_to: Vec<usize> = vec![];
+                for j in unplaced {
+                    match self.sharded_arrival_once(&scratch, j)? {
+                        Some((b, delta)) => {
+                            scratch.apply_delta(&delta)?;
+                            combined.ops.extend(delta.ops);
+                            routed_to.push(b);
+                        }
+                        None => return Ok(None),
+                    }
+                }
+                for b in routed_to {
+                    self.shard_stats[b].routed += 1;
+                }
+                Ok(Some(combined))
+            }
         }
-        let jobs: Vec<JobSpec> = nbr.iter().filter_map(|j| cluster.job(*j).cloned()).collect();
-        let mut counts: HashMap<AccelType, u32> = HashMap::new();
-        for a in &pool {
-            *counts.entry(a.accel).or_default() += 1;
+    }
+
+    /// Whether any *placed* job's estimated delivered throughput is
+    /// below its SLO — the repair signal for the sharded churn path: a
+    /// distributed job can lose one of its instances to an `AccelDown`
+    /// and remain "placed" (so no shard worker ever revisits it) while
+    /// under-delivering. Cheap (O(active × D_j) catalog lookups) and
+    /// only consulted on churn events.
+    fn any_estimated_slo_gap(&self, cluster: &Cluster) -> bool {
+        cluster.jobs().any(|spec| {
+            let j = spec.id;
+            let accels = cluster.placement.accels_of(j);
+            if accels.is_empty() {
+                return false; // unplaced jobs are re-placed shard-locally
+            }
+            let est: f64 = accels
+                .iter()
+                .map(|aid| {
+                    let c = cluster
+                        .placement
+                        .combo_on(*aid)
+                        .copied()
+                        .unwrap_or(Combo::Solo(j));
+                    catalog_value(&self.catalog, aid.accel, j, &c)
+                })
+                .sum();
+            est + 1e-9 < spec.min_throughput
+        })
+    }
+
+    /// The sharded fallback ladder shared by every non-tick event arm:
+    /// shard-local placement of whatever is unplaced while the periodic
+    /// re-solve is not yet due; the global re-solve otherwise (and
+    /// whenever any job has no feasible shard) — it remains the
+    /// cross-shard rebalance, including onto capacity an `AccelUp` just
+    /// returned.
+    fn sharded_or_full(&mut self, cluster: &Cluster) -> Result<Decision> {
+        if self.events_since_full < self.options.full_resolve_every.max(1) {
+            if let Some(delta) = self.sharded_place_unplaced(cluster)? {
+                return Ok(Decision::apply(delta));
+            }
         }
-        let ocfg = self.options.optimizer.clone();
-        let catalog = &self.catalog;
-        let thr = move |a: AccelType, j: JobId, c: &Combo| catalog_value(catalog, a, j, c);
-        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
-        let input = Problem1Input {
-            jobs: &jobs,
-            accel_counts: &counts,
-            throughput: &thr,
-            solo_capability: &solo_cap,
-            max_pairs_per_job: ocfg.max_pairs_per_job,
-            slack_penalty: Some(ocfg.slack_penalty),
-            throughput_bonus: ocfg.throughput_bonus,
-        };
-        let bnb = BnbConfig {
-            max_nodes: ocfg.max_nodes.min(LOCAL_NODE_BUDGET),
-            time_limit_s: ocfg.time_limit_s,
-            auto_warm_start: ocfg.warm_start,
-            node_selection: ocfg.node_selection,
-            ..Default::default()
-        };
-        let t0 = std::time::Instant::now();
-        let sol = solve_problem1(&input, &bnb);
-        self.inc_seconds += t0.elapsed().as_secs_f64();
-        self.inc_solves += 1;
-        self.inc_nodes += sol.nodes;
-        let solved = matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible);
-        if !solved || !sol.violated_jobs.is_empty() {
-            return Ok(None);
-        }
-        Ok(optimizer::bind_pool(cluster, &pool, &sol))
+        self.full_allocate(cluster)
     }
 
     /// Monitoring round: score estimates, record measurements, run P2
@@ -577,23 +1028,32 @@ impl GoghScheduler {
             }
             self.catalog.record_measurement(key, m.throughput);
         }
-        // P2 refinement toward unobserved accel types (Eq. 3/4)
-        let queries = if self.options.enable_refinement {
+        // P2 refinement toward unobserved accel types (Eq. 3/4);
+        // estimator-free mode keeps measurements and skips the transfer
+        let queries = if self.options.enable_refinement && self.p2.is_some() {
             refinement::build_refine_queries(&self.catalog, measurements)
         } else {
             vec![]
         };
         if !queries.is_empty() {
             let rows: Vec<Vec<f32>> = queries.iter().map(|q| q.x.clone()).collect();
-            let preds = self.p2.predict(&rows)?;
+            let preds = self.p2.as_mut().unwrap().predict(&rows)?;
             refinement::apply_refinements(&mut self.catalog, &queries, &preds, self.round);
         }
         // continuous learning
-        if self.options.estimator.online_steps_per_round > 0 && !measurements.is_empty() {
+        if self.options.estimator.online_steps_per_round > 0
+            && !measurements.is_empty()
+            && (self.p1.is_some() || self.p2.is_some())
+        {
             self.harvest_samples(measurements);
             for _ in 0..self.options.estimator.online_steps_per_round {
                 self.train_once()?;
             }
+        }
+        // measurements + refinements mutated the estimate matrix: the
+        // cache's per-round invalidation point
+        if !measurements.is_empty() {
+            self.cache.invalidate();
         }
         Ok(())
     }
@@ -605,6 +1065,7 @@ impl Scheduler for GoghScheduler {
     }
 
     fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+        let sharded = self.options.shards > 1;
         match event {
             ClusterEvent::JobArrived { job } => {
                 // round-0 estimates for any job we haven't seen
@@ -614,6 +1075,9 @@ impl Scheduler for GoghScheduler {
                     }
                 }
                 self.events_since_full += 1;
+                if sharded {
+                    return self.sharded_or_full(cluster);
+                }
                 if self.events_since_full < self.options.full_resolve_every.max(1) {
                     if let Some(delta) = self.incremental_arrival(cluster, *job)? {
                         return Ok(Decision::apply(delta));
@@ -621,12 +1085,17 @@ impl Scheduler for GoghScheduler {
                 }
                 self.full_allocate(cluster)
             }
-            ClusterEvent::JobCompleted { .. } | ClusterEvent::JobCancelled { .. } => {
+            ClusterEvent::JobCompleted { job } | ClusterEvent::JobCancelled { job } => {
                 // departures free capacity in place (co-runners are
                 // re-hosted solo); compaction happens on the periodic
                 // full re-solve. Queued (unplaced) jobs force a re-solve
                 // now — the freed capacity may be their only chance to
                 // run before the event stream dries up.
+                // Estimates for the departed job (and for pairings with
+                // it) are dead: evict them so the matrix stays O(active)
+                // instead of O(every job ever seen).
+                self.catalog.evict_job_estimates(*job);
+                self.cache.drop_job(*job);
                 self.events_since_full += 1;
                 if cluster.n_jobs() == 0 {
                     return Ok(Decision::none());
@@ -635,17 +1104,33 @@ impl Scheduler for GoghScheduler {
                     .active_job_ids()
                     .iter()
                     .any(|&j| !cluster.placement.is_placed(j));
+                if unplaced && sharded {
+                    // sharded: place the stragglers locally before
+                    // resorting to the global re-solve
+                    return self.sharded_or_full(cluster);
+                }
                 if unplaced || self.events_since_full >= self.options.full_resolve_every.max(1) {
                     return self.full_allocate(cluster);
                 }
                 Ok(Decision::none())
             }
             ClusterEvent::AccelDown { .. } | ClusterEvent::AccelUp { .. } => {
-                // capacity changed (possibly stranding evicted jobs):
-                // re-solve globally
+                // capacity changed (possibly stranding evicted jobs)
                 self.events_since_full += 1;
                 if cluster.n_jobs() == 0 {
                     return Ok(Decision::none());
+                }
+                if sharded {
+                    // shard-local re-placement of whatever the churn
+                    // stranded (a 1000-accel global ILP per churn event
+                    // is exactly what sharding avoids) — but a partially
+                    // evicted distributed job stays "placed" while
+                    // under-delivering its SLO, and only the global
+                    // re-solve can restore its cross-shard coverage
+                    if self.any_estimated_slo_gap(cluster) {
+                        return self.full_allocate(cluster);
+                    }
+                    return self.sharded_or_full(cluster);
                 }
                 self.full_allocate(cluster)
             }
@@ -690,6 +1175,20 @@ impl Gogh {
 
     /// Build reusing an existing engine (benches construct many systems).
     pub fn with_engine(engine: &Engine, cfg: &ExperimentConfig) -> Result<Self> {
+        let (driver, oracle) = Self::build_driver(cfg)?;
+        let scheduler = GoghScheduler::new(engine, &oracle, GoghOptions::from_config(cfg))?;
+        Ok(Self { driver, scheduler })
+    }
+
+    /// Build without PJRT artifacts: the estimator-free degraded mode
+    /// (see [`GoghScheduler::without_engine`]).
+    pub fn without_engine(cfg: &ExperimentConfig) -> Result<Self> {
+        let (driver, oracle) = Self::build_driver(cfg)?;
+        let scheduler = GoghScheduler::without_engine(&oracle, GoghOptions::from_config(cfg))?;
+        Ok(Self { driver, scheduler })
+    }
+
+    fn build_driver(cfg: &ExperimentConfig) -> Result<(SimDriver, ThroughputOracle)> {
         let oracle = cfg.build_oracle()?;
         let trace = Trace::generate(&cfg.trace, &oracle);
         let spec = ClusterSpec::mix(&cfg.cluster.accel_mix);
@@ -703,21 +1202,7 @@ impl Gogh {
             cfg.seed,
         )?
         .with_migration_cost(cfg.migration_cost_s);
-        let scheduler = GoghScheduler::new(
-            engine,
-            &oracle,
-            GoghOptions {
-                estimator: cfg.estimator.clone(),
-                optimizer: cfg.optimizer.clone(),
-                history_jobs: cfg.gogh.history_jobs,
-                enable_refinement: cfg.gogh.enable_refinement,
-                exploration_epsilon: cfg.gogh.exploration_epsilon,
-                full_resolve_every: cfg.gogh.full_resolve_every,
-                neighborhood: cfg.gogh.neighborhood,
-                seed: cfg.seed,
-            },
-        )?;
-        Ok(Self { driver, scheduler })
+        Ok((driver, oracle))
     }
 
     /// Run the configured trace to completion.

@@ -5,12 +5,14 @@
 //! monitoring → P2 refinement across unobserved GPU types (Eq. 3/4) →
 //! online training of both networks from measured data.
 
+pub mod estimate_cache;
 pub mod gogh;
 pub mod history;
 pub mod optimizer;
 pub mod refinement;
 pub mod scheduler;
 
-pub use gogh::{Gogh, GoghOptions, GoghScheduler, SolverPathStats};
+pub use estimate_cache::{EstimateCache, EstimateCacheStats};
+pub use gogh::{Gogh, GoghOptions, GoghScheduler, ShardStats, SolverPathStats};
 pub use optimizer::Optimizer;
 pub use scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};

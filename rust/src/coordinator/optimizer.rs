@@ -67,10 +67,7 @@ impl Optimizer {
             v
         };
         // capacity = in-service instances only (AccelDown churn)
-        let mut counts: HashMap<AccelType, u32> = HashMap::new();
-        for a in cluster.available_accels() {
-            *counts.entry(a.accel).or_default() += 1;
-        }
+        let counts = crate::ilp::problem1::pool_accel_counts(&cluster.available_accels());
         let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
         let input = Problem1Input {
             jobs: &jobs,

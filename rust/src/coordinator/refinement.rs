@@ -14,8 +14,7 @@ use crate::workload::{AccelType, Combo, JobId, ACCEL_TYPES};
 pub const PAIR_PRIOR: f64 = 0.7;
 
 /// Resolve the Catalog's best current value for (a, j, c), falling back
-/// to `solo × PAIR_PRIOR` for unseen pairs and a generation-speed prior
-/// for totally unknown jobs.
+/// to the [`prior_value`] chain when the key was never seen.
 pub fn catalog_value(catalog: &Catalog, a: AccelType, j: JobId, c: &Combo) -> f64 {
     let key = EstimateKey {
         accel: a,
@@ -25,6 +24,16 @@ pub fn catalog_value(catalog: &Catalog, a: AccelType, j: JobId, c: &Combo) -> f6
     if let Some(v) = catalog.value(&key) {
         return v;
     }
+    prior_value(catalog, a, j, c)
+}
+
+/// Prior for (a, j, c) that never reads the (a, j, c) record itself:
+/// `solo × PAIR_PRIOR` for unseen pairs, else the generation-speed cold
+/// prior — which is *also* discounted by `PAIR_PRIOR` for pairs.
+/// Co-location interference is never free, least of all when nothing
+/// about the pairing is measured; without the discount the optimizer
+/// saw unknown jobs as interference-free exactly where it knew least.
+pub fn prior_value(catalog: &Catalog, a: AccelType, j: JobId, c: &Combo) -> f64 {
     if c.len() == 2 {
         let solo = EstimateKey {
             accel: a,
@@ -36,7 +45,29 @@ pub fn catalog_value(catalog: &Catalog, a: AccelType, j: JobId, c: &Combo) -> f6
         }
     }
     // cold prior: scaled generation speed (≈ mid-range job)
-    0.4 * a.base_speed() / AccelType::V100.base_speed()
+    let cold = 0.4 * a.base_speed() / AccelType::V100.base_speed();
+    if c.len() == 2 {
+        cold * PAIR_PRIOR
+    } else {
+        cold
+    }
+}
+
+/// The Catalog's estimate for (a, j, c) *excluding* any measurement of
+/// that key: the refinement-set average when one exists, else the
+/// [`prior_value`] chain. This is the "estimate before measurement"
+/// feature P2's Eq. 3 rows require — falling back to the measured value
+/// itself would leak the current round's label into the query features.
+pub fn estimate_before_measurement(catalog: &Catalog, a: AccelType, j: JobId, c: &Combo) -> f64 {
+    let key = EstimateKey {
+        accel: a,
+        job: j,
+        combo: *c,
+    };
+    if let Some(e) = catalog.record(&key).and_then(|r| r.estimate_only()) {
+        return e;
+    }
+    prior_value(catalog, a, j, c)
 }
 
 /// A P2 query: refine (j1, j2?) in combo `c`, observed on `a1`, toward
@@ -69,39 +100,37 @@ pub fn build_refine_queries(
         let psi_j2: [f32; PSI_DIM] = j2
             .and_then(|j| catalog.psi(j).copied())
             .unwrap_or(crate::workload::encoding::PSI_EMPTY);
-        // this-round measurement of the co-runner (same combo + accel)
-        let meas_j2 = j2
-            .and_then(|j| {
-                measurements
-                    .iter()
-                    .find(|o| o.job == j && o.combo == combo && o.accel == m.accel)
-            })
-            .map(|o| o.throughput)
-            .unwrap_or(0.0);
-        // estimates *before* this measurement (refinement-set averages)
-        let est_key = |a: AccelType, j: JobId| EstimateKey {
-            accel: a,
-            job: j,
-            combo,
+        // this-round measurement of the co-runner (same combo + accel).
+        // A co-runner whose measurement is missing from the round is
+        // encoded as its prior, NOT 0.0 — zero is indistinguishable from
+        // "no co-runner" (the Ψ_EMPTY slot) and would teach P2 that the
+        // pair behaves like a solo.
+        let meas_j2 = match j2 {
+            None => 0.0,
+            Some(j) => measurements
+                .iter()
+                .find(|o| o.job == j && o.combo == combo && o.accel == m.accel)
+                .map(|o| o.throughput)
+                .unwrap_or_else(|| estimate_before_measurement(catalog, a1, j, &combo)),
         };
-        let est_a1_j1 = catalog
-            .record(&est_key(a1, j1))
-            .and_then(|r| r.estimate_only())
-            .unwrap_or(m.throughput);
+        // estimates *before* this measurement: refinement-set averages,
+        // with the prior chain as fallback (never this round's labels)
+        let est_a1_j1 = estimate_before_measurement(catalog, a1, j1, &combo);
         let est_a1_j2 = j2
-            .map(|j| {
-                catalog
-                    .record(&est_key(a1, j))
-                    .and_then(|r| r.estimate_only())
-                    .unwrap_or(meas_j2)
-            })
+            .map(|j| estimate_before_measurement(catalog, a1, j, &combo))
             .unwrap_or(0.0);
         for &a2 in ACCEL_TYPES.iter() {
             if a2 == a1 {
                 continue;
             }
-            let est_a2_j1 = catalog_value(catalog, a2, j1, &combo);
-            let est_a2_j2 = j2.map(|j| catalog_value(catalog, a2, j, &combo)).unwrap_or(0.0);
+            // Eq. 3's T̃_{a2,·} is the refinement-set average, so the
+            // target-side slots also exclude measurements: a distributed
+            // job measured on BOTH a1 and a2 this round would otherwise
+            // leak its fresh a2 label into the query features.
+            let est_a2_j1 = estimate_before_measurement(catalog, a2, j1, &combo);
+            let est_a2_j2 = j2
+                .map(|j| estimate_before_measurement(catalog, a2, j, &combo))
+                .unwrap_or(0.0);
             let x = p2_row(
                 &psi_j1,
                 &psi_j2,
@@ -228,6 +257,98 @@ mod tests {
         assert!(r.refinements() >= 2);
         let v = c.value(&k).unwrap();
         assert!(v > 0.3 && v <= 0.5, "{v}");
+    }
+
+    #[test]
+    fn cold_pair_prior_is_discounted() {
+        // an unknown job in a pair must NOT get the interference-free
+        // solo-scale prior: the cold prior is discounted by PAIR_PRIOR.
+        let c = Catalog::new();
+        let solo = catalog_value(&c, AccelType::V100, JobId(7), &Combo::Solo(JobId(7)));
+        let pair = catalog_value(&c, AccelType::V100, JobId(7), &Combo::pair(JobId(7), JobId(8)));
+        assert!((solo - 0.4).abs() < 1e-12, "{solo}");
+        assert!((pair - solo * PAIR_PRIOR).abs() < 1e-12, "{pair} vs {solo}·{PAIR_PRIOR}");
+    }
+
+    #[test]
+    fn refine_queries_do_not_leak_round_labels() {
+        // Fresh catalog, no prior estimates: record the round's
+        // measurements first (the coordinator's order), then build the
+        // queries — no estimate feature may carry a measured target.
+        let mut c = Catalog::new();
+        c.register_job(JobId(1), psi(ModelFamily::ResNet18, 32, 1));
+        c.register_job(JobId(2), psi(ModelFamily::LanguageModel, 10, 1));
+        let combo = Combo::pair(JobId(1), JobId(2));
+        let aid = AccelId {
+            server: 0,
+            accel: AccelType::K80,
+        };
+        // distinctive labels far outside any prior's range (< 1.05)
+        let ms = vec![
+            Measurement {
+                job: JobId(1),
+                combo,
+                accel: aid,
+                throughput: 2.25,
+                at: 1.0,
+            },
+            Measurement {
+                job: JobId(2),
+                combo,
+                accel: aid,
+                throughput: 2.5,
+                at: 1.0,
+            },
+        ];
+        for m in &ms {
+            c.record_measurement(
+                EstimateKey {
+                    accel: m.accel.accel,
+                    job: m.job,
+                    combo: m.combo,
+                },
+                m.throughput,
+            );
+        }
+        let qs = build_refine_queries(&c, &ms);
+        assert!(!qs.is_empty());
+        for q in &qs {
+            // layout (encoding::p2_row): 28,29 = est_a1; 30,31 = meas_a1;
+            // 32,33 = est_a2 — the estimate slots must hold priors
+            for slot in [28usize, 29, 32, 33] {
+                assert!(
+                    q.x[slot] < 2.0,
+                    "estimate slot {slot} leaked a label: {}",
+                    q.x[slot]
+                );
+            }
+            assert!(q.x[30] >= 2.0 && q.x[31] >= 2.0, "measured slots lost");
+        }
+    }
+
+    #[test]
+    fn missing_corunner_measurement_is_encoded_as_prior() {
+        // the pair ran, but only j1 was measured this round: the
+        // co-runner slot must carry j2's prior, not 0.0 (which would be
+        // indistinguishable from "no co-runner").
+        let (mut c, ms) = setup();
+        let only_j1 = vec![ms[0].clone()];
+        c.record_measurement(
+            EstimateKey {
+                accel: ms[0].accel.accel,
+                job: ms[0].job,
+                combo: ms[0].combo,
+            },
+            ms[0].throughput,
+        );
+        let qs = build_refine_queries(&c, &only_j1);
+        assert_eq!(qs.len(), 5);
+        for q in &qs {
+            assert_eq!(q.j2, Some(JobId(2)));
+            // setup wrote a 0.3 prior estimate for (k80, j2, pair)
+            assert!((q.x[31] - 0.3).abs() < 1e-6, "meas_j2 slot: {}", q.x[31]);
+            assert!(q.x[31] != 0.0);
+        }
     }
 
     #[test]

@@ -656,6 +656,54 @@ mod tests {
         assert_eq!(report.jobs_completed, 2);
     }
 
+    #[test]
+    fn down_accelerator_is_not_billed_during_outage() {
+        // one job busy on the k80; the idle v100 goes down for
+        // [10, 1000] — the outage must remove exactly the v100's idle
+        // draw from total energy and leave busy energy untouched.
+        let run = |churn: bool| {
+            let oracle = ThroughputOracle::new(7);
+            let mut events = vec![TraceEvent::Arrival {
+                at: 1.0,
+                job: job(0, 2000.0),
+            }];
+            if churn {
+                events.push(TraceEvent::AccelChurn {
+                    at: 10.0,
+                    accel_index: 0,
+                    up: false,
+                });
+                events.push(TraceEvent::AccelChurn {
+                    at: 1000.0,
+                    accel_index: 0,
+                    up: true,
+                });
+            }
+            let trace = Trace {
+                events,
+                config: TraceConfig {
+                    n_jobs: 1,
+                    ..Default::default()
+                },
+            };
+            // FirstFit pops the LAST free instance → the k80 hosts the job
+            let spec = ClusterSpec::mix(&[(AccelType::V100, 1), (AccelType::K80, 1)]);
+            let mut d = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1).unwrap();
+            d.run(&mut FirstFit).unwrap()
+        };
+        let with = run(true);
+        let without = run(false);
+        assert_eq!(with.jobs_completed, 1);
+        assert_eq!(with.sim_seconds, without.sim_seconds);
+        assert!((with.energy_joules - without.energy_joules).abs() < 1e-6);
+        let expected_saving = crate::cluster::power_watts(AccelType::V100, 0.0) * 990.0;
+        let saving = without.total_energy_joules - with.total_energy_joules;
+        assert!(
+            (saving - expected_saving).abs() < 1e-3 * expected_saving,
+            "outage saved {saving} J, expected {expected_saving} J"
+        );
+    }
+
     /// Places arrivals on the first free instance, then migrates the
     /// job once at the first monitor tick (exercises the restart cost).
     struct MigrateOnce {

@@ -77,6 +77,18 @@ pub struct AllocationSolution {
     pub warm_started: bool,
 }
 
+/// Aggregate a concrete instance pool into the per-type capacity map of
+/// [`Problem1Input::accel_counts`] — the pool-scoped problem build used
+/// by the shard workers, the incremental arrival path and the full
+/// re-solve (whose pool is the whole in-service cluster).
+pub fn pool_accel_counts(pool: &[crate::cluster::AccelId]) -> HashMap<AccelType, u32> {
+    let mut counts: HashMap<AccelType, u32> = HashMap::new();
+    for a in pool {
+        *counts.entry(a.accel).or_default() += 1;
+    }
+    counts
+}
+
 /// Build the candidate combination universe 𝒞 (solos + pruned pairs).
 pub fn candidate_combos(
     jobs: &[JobSpec],

@@ -58,11 +58,17 @@ const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in hetero
 
 USAGE:
   gogh simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S]
-                [--config cfg.json] [--save-catalog catalog.json] [--gavel-csv data.csv]
+                [--config cfg.json] [--preset default|large] [--shards P]
+                [--save-catalog catalog.json] [--gavel-csv data.csv]
                 [--cancel-rate P] [--accel-churn N] [--migration-cost-s S]
   gogh info [--workloads]
   gogh solve [--jobs N] [--servers-per-type K] [--seed S]
-  gogh config
+  gogh config [--preset default|large]
+
+The `large` preset is the scale scenario: ≥1024 accelerator instances,
+a ≥50k-event trace, and the shard-parallel decision path (--shards
+overrides the shard count; 1 = the single-threaded path). Without PJRT
+artifacts the gogh policy runs estimator-free on catalog priors.
 ";
 
 fn main() -> Result<()> {
@@ -77,7 +83,8 @@ fn main() -> Result<()> {
         "info" => info(&args),
         "solve" => solve(&args),
         "config" => {
-            println!("{}", ExperimentConfig::default().to_json());
+            let cfg = ExperimentConfig::preset(args.get("preset").unwrap_or("default"))?;
+            println!("{}", cfg.to_json());
             Ok(())
         }
         _ => {
@@ -88,12 +95,17 @@ fn main() -> Result<()> {
 }
 
 fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
-    let mut cfg = match args.get("config") {
-        Some(p) => ExperimentConfig::load(std::path::Path::new(p))?,
-        None => ExperimentConfig::default(),
+    let mut cfg = match (args.get("config"), args.get("preset")) {
+        (Some(_), Some(_)) => anyhow::bail!("--config and --preset are mutually exclusive"),
+        (Some(p), None) => ExperimentConfig::load(std::path::Path::new(p))?,
+        (None, Some(name)) => ExperimentConfig::preset(name)?,
+        (None, None) => ExperimentConfig::default(),
     };
     if let Some(n) = args.get_parse::<usize>("jobs") {
         cfg.trace.n_jobs = n;
+    }
+    if let Some(p) = args.get_parse::<usize>("shards") {
+        cfg.gogh.shards = p.max(1);
     }
     if let Some(s) = args.get_parse::<u64>("seed") {
         cfg.seed = s;
@@ -119,8 +131,48 @@ fn simulate(args: &Args) -> Result<()> {
     let policy = args.get("policy").unwrap_or("gogh");
     let report = match policy {
         "gogh" => {
-            let mut sys = Gogh::from_config(&cfg)?;
+            // degrade gracefully when no PJRT artifacts are available:
+            // the decision path (sharding, ILP, catalog) runs the same,
+            // estimates come from priors + measurements instead of P1/P2
+            let mut sys = match Engine::load(&cfg.estimator.artifacts_dir) {
+                Ok(engine) => Gogh::with_engine(&engine, &cfg)?,
+                Err(err) => {
+                    eprintln!(
+                        "warning: PJRT engine unavailable ({err}); \
+                         running gogh estimator-free (catalog priors only)"
+                    );
+                    Gogh::without_engine(&cfg)?
+                }
+            };
             let report = sys.run()?;
+            let stats = sys.scheduler().solver_stats();
+            let cache = sys.scheduler().cache_stats();
+            println!(
+                "solver paths: {} full ({:.1} nodes/solve), {} incremental \
+                 ({:.1} nodes/solve); estimate cache {:.1}% hit over {} lookups",
+                stats.full_solves,
+                stats.mean_full_nodes(),
+                stats.incremental_solves,
+                stats.mean_incremental_nodes(),
+                100.0 * cache.hit_rate(),
+                cache.hits + cache.misses,
+            );
+            if cfg.gogh.shards > 1 {
+                // stats are sized by the requested shard count; the
+                // partition clamps to the cluster size, so skip slots
+                // that never solved
+                for (i, s) in sys.scheduler().shard_stats().iter().enumerate() {
+                    if s.solves == 0 {
+                        continue;
+                    }
+                    println!(
+                        "  shard {i}: {} solves ({:.1} nodes/solve), {} jobs routed",
+                        s.solves,
+                        s.mean_nodes(),
+                        s.routed
+                    );
+                }
+            }
             // checkpoint the learned catalog for later sessions
             if let Some(path) = args.get("save-catalog") {
                 sys.scheduler().catalog.save(std::path::Path::new(path))?;

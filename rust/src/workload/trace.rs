@@ -50,6 +50,27 @@ impl Default for TraceConfig {
     }
 }
 
+impl TraceConfig {
+    /// The `large` scale preset: ≥ 50k trace events for the
+    /// ≥ 1024-accelerator scenario (`ExperimentConfig::large_scale`).
+    /// 48k arrivals at a 2 s mean inter-arrival plus ~6% owner
+    /// cancellations and a dozen maintenance cycles; mean work of 900
+    /// normalized-seconds keeps the steady-state active-job count a few
+    /// hundred — heavily loaded but placeable on 1032 instances.
+    pub fn large() -> Self {
+        Self {
+            n_jobs: 48_000,
+            mean_interarrival_s: 2.0,
+            mean_work_s: 900.0,
+            slo_fraction: 0.35,
+            max_distributability: 2,
+            cancel_rate: 0.06,
+            accel_churn: 12.0,
+            seed: 42,
+        }
+    }
+}
+
 /// A single trace event.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TraceEvent {
@@ -310,6 +331,20 @@ mod tests {
         for job in trace.jobs() {
             assert!(job.family.batch_sizes().contains(&job.batch_size));
         }
+    }
+
+    #[test]
+    fn large_preset_reaches_event_floor() {
+        let cfg = TraceConfig::large();
+        let oracle = ThroughputOracle::new(cfg.seed);
+        let trace = Trace::generate(&cfg, &oracle);
+        assert!(trace.len() >= 50_000, "only {} events", trace.len());
+        assert_eq!(trace.n_jobs(), cfg.n_jobs);
+        // cancellations and churn both present, times sorted
+        assert!(trace.events.iter().any(|e| matches!(e, TraceEvent::Cancel { .. })));
+        assert!(trace.events.iter().any(|e| matches!(e, TraceEvent::AccelChurn { .. })));
+        let times: Vec<f64> = trace.events.iter().map(|e| e.at()).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

@@ -166,6 +166,141 @@ fn migration_cost_is_integrated_into_the_report() {
 }
 
 // ---------------------------------------------------------------------
+// Estimator-free GOGH: the full decision path (sharding, estimate
+// cache, ILP, catalog learning loop) without PJRT artifacts — these run
+// everywhere, including CI.
+// ---------------------------------------------------------------------
+
+fn free_gogh(seed: u64, options: GoghOptions) -> (SimDriver, GoghScheduler) {
+    let (oracle, trace) = small_trace(seed, 8);
+    let d = driver(&oracle, trace, seed);
+    let sched = GoghScheduler::without_engine(&oracle, options).unwrap();
+    (d, sched)
+}
+
+#[test]
+fn gogh_estimator_free_completes_and_tracks_errors() {
+    let (mut d, mut sched) = free_gogh(
+        19,
+        GoghOptions {
+            history_jobs: 12,
+            seed: 19,
+            ..Default::default()
+        },
+    );
+    let report = d.run(&mut sched).unwrap();
+    assert_eq!(report.jobs_completed, 8);
+    // priors were scored against measurements even without P1/P2
+    let mae = report.estimation_mae.expect("estimation MAE tracked");
+    assert!(mae.is_finite() && mae >= 0.0);
+    assert!(sched.catalog.n_measured() > 0);
+    assert!(report.mean_solve_ms > 0.0);
+    // estimate cache was exercised on the decision path
+    let cache = sched.cache_stats();
+    assert!(cache.hits > 0, "no cache hits: {cache:?}");
+    assert!(cache.invalidations > 0, "cache never invalidated");
+}
+
+#[test]
+fn estimate_cache_is_value_transparent_end_to_end() {
+    // the memoized estimate matrix must never change a decision: cached
+    // and uncached runs of the same trace are bit-identical
+    let run = |cache: bool| {
+        let (mut d, mut sched) = free_gogh(
+            23,
+            GoghOptions {
+                history_jobs: 12,
+                estimate_cache: cache,
+                seed: 23,
+                ..Default::default()
+            },
+        );
+        d.run(&mut sched).unwrap()
+    };
+    let cached = run(true);
+    let direct = run(false);
+    assert_eq!(cached.energy_joules, direct.energy_joules);
+    assert_eq!(cached.total_energy_joules, direct.total_energy_joules);
+    assert_eq!(cached.migrations, direct.migrations);
+    assert_eq!(cached.mean_jct, direct.mean_jct);
+    assert_eq!(cached.slo_deficit, direct.slo_deficit);
+    assert_eq!(cached.events, direct.events);
+}
+
+#[test]
+fn sharded_decision_path_is_deterministic_and_drains() {
+    for shards in [2usize, 4] {
+        let run = || {
+            let (mut d, mut sched) = free_gogh(
+                29,
+                GoghOptions {
+                    history_jobs: 12,
+                    shards,
+                    seed: 29,
+                    ..Default::default()
+                },
+            );
+            let report = d.run(&mut sched).unwrap();
+            let routed: usize = sched.shard_stats().iter().map(|s| s.routed).sum();
+            (report, routed)
+        };
+        let (a, routed_a) = run();
+        let (b, routed_b) = run();
+        assert_eq!(a.jobs_completed, 8, "P={shards} lost jobs");
+        assert_eq!(a.energy_joules, b.energy_joules, "P={shards} nondeterministic");
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.mean_jct, b.mean_jct);
+        assert_eq!(routed_a, routed_b);
+        assert!(routed_a > 0, "P={shards}: no arrival was shard-routed");
+    }
+}
+
+#[test]
+fn sharded_gogh_survives_churn_and_cancellations() {
+    let oracle = ThroughputOracle::new(31);
+    let cfg = TraceConfig {
+        n_jobs: 10,
+        mean_interarrival_s: 25.0,
+        mean_work_s: 120.0,
+        cancel_rate: 0.3,
+        accel_churn: 2.0,
+        seed: 31,
+        ..Default::default()
+    };
+    let trace = Trace::generate(&cfg, &oracle);
+    let mut d = driver(&oracle, trace, 31);
+    let mut sched = GoghScheduler::without_engine(
+        &oracle,
+        GoghOptions {
+            history_jobs: 12,
+            shards: 3,
+            seed: 31,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = d.run(&mut sched).unwrap();
+    assert_eq!(
+        report.jobs_completed + report.jobs_cancelled,
+        report.jobs_total,
+        "sharded gogh lost jobs under churn"
+    );
+    assert!(report.sim_seconds < d.drain_limit_s, "run failed to drain");
+}
+
+#[test]
+fn gogh_without_artifacts_from_config() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 4;
+    cfg.trace.mean_work_s = 100.0;
+    cfg.trace.mean_interarrival_s = 20.0;
+    cfg.gogh.shards = 2;
+    let mut sys = gogh::Gogh::without_engine(&cfg).unwrap();
+    let report = sys.run().unwrap();
+    assert_eq!(report.jobs_completed, 4);
+}
+
+// ---------------------------------------------------------------------
 // PJRT-dependent tests (skip when artifacts are absent)
 // ---------------------------------------------------------------------
 

@@ -459,6 +459,163 @@ fn prop_oracle_pair_is_never_faster_than_solo() {
 }
 
 #[test]
+fn prop_refine_queries_never_contain_round_labels() {
+    // Random catalogs + random measurement rounds: no P2 query row may
+    // carry any of the round's measured targets in an *estimate* slot
+    // (p2_row layout: 28,29 = est_a1, 32,33 = est_a2; 30,31 are the
+    // measurement features and legitimately carry this round's labels).
+    // Prior estimates are drawn below 0.7 and every prior chain tops out
+    // near 1.05, while measured targets live in [2, 3] — disjoint ranges
+    // make leakage unambiguous.
+    use gogh::cluster::Measurement;
+    use gogh::coordinator::refinement::build_refine_queries;
+    let mut rng = Rng::seed_from_u64(1313);
+    for case in 0..60 {
+        let mut catalog = Catalog::new();
+        let n_jobs = rng.range_u32_inclusive(2, 8);
+        for j in 0..n_jobs {
+            let f = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+            let b = f.batch_sizes()[rng.range_usize(0, f.batch_sizes().len())];
+            catalog.register_job(JobId(j), encoding::psi(f, b, 1));
+        }
+        // random prior estimates (never ≥ 0.7)
+        for _ in 0..rng.range_usize(0, 12) {
+            let a = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            let j1 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+            let combo = if rng.bool(0.5) {
+                Combo::Solo(j1)
+            } else {
+                let j2 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+                if j2 == j1 {
+                    Combo::Solo(j1)
+                } else {
+                    Combo::pair(j1, j2)
+                }
+            };
+            catalog.write_initial(
+                EstimateKey {
+                    accel: a,
+                    job: j1,
+                    combo,
+                },
+                rng.range_f64(0.05, 0.69),
+            );
+        }
+        // the round: distinct jobs, solo or paired; distributed jobs
+        // (distributability 2) occasionally host the SAME combo on a
+        // second instance of a different accel type — the case where a
+        // fresh measurement exists on the query's target type a2 and
+        // must still not surface in the estimate slots
+        let mut free: Vec<JobId> = (0..n_jobs).map(JobId).collect();
+        let mut ms: Vec<Measurement> = vec![];
+        let mut server = 0;
+        while free.len() >= 2 {
+            let a = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+            let aid = AccelId { server, accel: a };
+            server += 1;
+            let second_aid = if rng.bool(0.4) {
+                let a2 = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+                let aid2 = AccelId {
+                    server,
+                    accel: a2,
+                };
+                server += 1;
+                Some(aid2)
+            } else {
+                None
+            };
+            if rng.bool(0.5) {
+                let j = free.swap_remove(rng.range_usize(0, free.len()));
+                for aid in std::iter::once(aid).chain(second_aid) {
+                    ms.push(Measurement {
+                        job: j,
+                        combo: Combo::Solo(j),
+                        accel: aid,
+                        throughput: rng.range_f64(2.0, 3.0),
+                        at: 1.0,
+                    });
+                }
+            } else {
+                let j1 = free.swap_remove(rng.range_usize(0, free.len()));
+                let j2 = free.swap_remove(rng.range_usize(0, free.len()));
+                let combo = Combo::pair(j1, j2);
+                for aid in std::iter::once(aid).chain(second_aid) {
+                    for j in [j1, j2] {
+                        // occasionally drop a co-runner's measurement:
+                        // the missing slot must be encoded as a prior
+                        if j == j2 && rng.bool(0.2) {
+                            continue;
+                        }
+                        ms.push(Measurement {
+                            job: j,
+                            combo,
+                            accel: aid,
+                            throughput: rng.range_f64(2.0, 3.0),
+                            at: 1.0,
+                        });
+                    }
+                }
+            }
+        }
+        if ms.is_empty() {
+            continue;
+        }
+        // the coordinator records the round's measurements first
+        for m in &ms {
+            catalog.record_measurement(
+                EstimateKey {
+                    accel: m.accel.accel,
+                    job: m.job,
+                    combo: m.combo,
+                },
+                m.throughput,
+            );
+        }
+        let queries = build_refine_queries(&catalog, &ms);
+        for (qi, q) in queries.iter().enumerate() {
+            for slot in [28usize, 29, 32, 33] {
+                assert!(
+                    q.x[slot] < 2.0,
+                    "case {case} query {qi}: estimate slot {slot} carries a \
+                     measured label ({})",
+                    q.x[slot]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shards_partition_and_filter_availability() {
+    use gogh::cluster::ClusterSpec as Spec;
+    let mut rng = Rng::seed_from_u64(1414);
+    for _case in 0..80 {
+        let per_type = rng.range_u32_inclusive(1, 6);
+        let spec = Spec::balanced(per_type);
+        let p = rng.range_usize(1, 12);
+        let shards = spec.shards(p);
+        assert_eq!(shards.len(), p.min(spec.len()));
+        let mut seen: Vec<AccelId> = shards.iter().flat_map(|s| s.accels.clone()).collect();
+        seen.sort();
+        let mut all = spec.accels.clone();
+        all.sort();
+        assert_eq!(seen, all, "shards must cover each instance exactly once");
+        // availability filtering never leaks a down instance into a pool
+        let mut c = Cluster::new(spec);
+        for _ in 0..rng.range_usize(0, 4) {
+            let a = c.spec.accels[rng.range_usize(0, c.spec.accels.len())];
+            c.set_accel_down(a);
+        }
+        for s in &shards {
+            for a in c.shard_available_accels(s) {
+                assert!(!c.is_accel_down(a));
+                assert!(s.contains(a));
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_json_roundtrip_random_values() {
     use gogh::util::Json;
     let mut rng = Rng::seed_from_u64(707);
