@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare a fresh BENCH_<name>.json against the
+committed baseline and fail when mean decision latency regresses more
+than the tolerance.
+
+Usage: bench_gate.py <measured.json> <baseline.json> [tolerance]
+
+The tolerance is a fraction on top of the baseline (default 0.25, i.e.
+fail above baseline * 1.25). Stdlib only — runs anywhere python3 does.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        measured = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+    tolerance = float(sys.argv[3]) if len(sys.argv) > 3 else 0.25
+
+    if measured.get("bench") != baseline.get("bench"):
+        print(
+            f"bench mismatch: measured {measured.get('bench')!r} "
+            f"vs baseline {baseline.get('bench')!r}"
+        )
+        return 2
+    if measured.get("jobs") != baseline.get("jobs"):
+        print(
+            f"warning: trace sizes differ (measured {measured.get('jobs')} "
+            f"vs baseline {baseline.get('jobs')}) — latency compare may be apples/oranges"
+        )
+
+    mean = float(measured["mean_decision_ms"])
+    base = float(baseline["mean_decision_ms"])
+    limit = base * (1.0 + tolerance)
+    print(
+        f"mean decision latency: measured {mean:.3f} ms, baseline {base:.3f} ms, "
+        f"limit {limit:.3f} ms (+{tolerance:.0%})"
+    )
+    print(
+        f"context: explored_nodes={measured.get('explored_nodes')}, "
+        f"peak_rss_bytes={measured.get('peak_rss_bytes')}"
+    )
+    if mean > limit:
+        print(f"FAIL: mean decision latency regressed >{tolerance:.0%} vs the committed baseline")
+        return 1
+    print("OK: within the regression budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,16 +3,16 @@
 
 use std::time::Instant;
 
-/// Train an estimator on `samples` for `steps` Adam steps; returns the
-/// final (loss, mae) pair.
+/// Train an estimator backend (PJRT or native) on `samples` for
+/// `steps` Adam steps; returns the final (loss, mae) pair.
 #[allow(dead_code)]
 pub fn train_estimator(
-    est: &mut gogh::runtime::Estimator,
+    est: &mut dyn gogh::runtime::Backend,
     samples: &[gogh::runtime::Sample],
     steps: usize,
     seed: u64,
 ) -> gogh::Result<(f32, f32)> {
-    let batch = est.spec().train_batch;
+    let batch = est.train_batch();
     #[allow(unused_assignments)]
     let mut last = (f32::NAN, f32::NAN);
     let mut step = 0;
@@ -30,10 +30,39 @@ pub fn train_estimator(
     Ok(last)
 }
 
-/// Evaluate (mse, mae) of an estimator on samples.
+/// Train + evaluate one estimator backend over a split and print one
+/// row of the fig2a/fig2b table (arch, train/val/test MAE, final train
+/// loss, per-step time).
+#[allow(dead_code)]
+pub fn bench_row(
+    label: &str,
+    est: &mut dyn gogh::runtime::Backend,
+    split: &gogh::runtime::Split,
+    steps: usize,
+    seed: u64,
+) -> gogh::Result<()> {
+    let t0 = Instant::now();
+    let (final_loss, _) = train_estimator(est, &split.train, steps, seed)?;
+    let step_time = t0.elapsed().as_secs_f64() / steps as f64;
+    let (_, train_mae) = eval_estimator(est, &split.train)?;
+    let (_, val_mae) = eval_estimator(est, &split.val)?;
+    let (_, test_mae) = eval_estimator(est, &split.test)?;
+    println!(
+        "{:<14} {:>11.4} {:>11.4} {:>11.4} {:>11.5} {:>12}",
+        label,
+        train_mae,
+        val_mae,
+        test_mae,
+        final_loss,
+        fmt_time(step_time)
+    );
+    Ok(())
+}
+
+/// Evaluate (mse, mae) of an estimator backend on samples.
 #[allow(dead_code)]
 pub fn eval_estimator(
-    est: &mut gogh::runtime::Estimator,
+    est: &mut dyn gogh::runtime::Backend,
     samples: &[gogh::runtime::Sample],
 ) -> gogh::Result<(f32, f32)> {
     let xs: Vec<Vec<f32>> = samples.iter().map(|s| s.x.clone()).collect();

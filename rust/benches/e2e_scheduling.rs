@@ -7,6 +7,11 @@
 //! ≥50k trace events; set GOGH_SCALE_JOBS=N for a truncated dry run).
 //!
 //!     cargo bench --bench e2e_scheduling
+//!
+//! Set GOGH_BENCH_JSON=<path> to emit a machine-readable
+//! `BENCH_e2e.json` record (mean decision ms on the P=1 leg, explored
+//! B&B nodes, peak RSS) — CI uploads it as an artifact and gates mean
+//! decision latency against `.github/bench_baseline_e2e.json`.
 
 include!("bench_util.rs");
 
@@ -43,6 +48,13 @@ fn scale_bench() -> gogh::Result<()> {
         n_jobs
     );
     let mut latency: Vec<(usize, f64)> = vec![];
+    // the P=1 leg's numbers are the gated record: single-threaded, so
+    // nodes are deterministic and the latency is host-load-insensitive
+    let mut gated = gogh::metrics::BenchRecord {
+        bench: "e2e_scheduling".to_string(),
+        jobs: n_jobs,
+        ..Default::default()
+    };
     for shards in [1usize, 2, 4, 8] {
         let mut cfg = base.clone();
         cfg.gogh.shards = shards;
@@ -92,7 +104,16 @@ fn scale_bench() -> gogh::Result<()> {
             }
         }
         assert!(report.jobs_completed > 0, "P={shards}: nothing completed");
+        if shards == 1 {
+            gated.mean_decision_ms = report.mean_decision_ms;
+            gated.explored_nodes = stats.full_nodes + stats.incremental_nodes;
+        }
         latency.push((shards, report.mean_decision_ms));
+    }
+    if let Ok(path) = std::env::var("GOGH_BENCH_JSON") {
+        gated.peak_rss_bytes = gogh::metrics::peak_rss_bytes();
+        gated.write(std::path::Path::new(&path))?;
+        println!("bench record written to {path}: {}", gated.to_json());
     }
     let unsharded = latency[0].1;
     let best_wide = latency
@@ -106,17 +127,22 @@ fn scale_bench() -> gogh::Result<()> {
         best_wide,
         unsharded / best_wide.max(1e-12)
     );
-    // the acceptance assertion needs real parallelism: on a 1-3 core
-    // host, oversubscribed shard workers can't beat the single-threaded
-    // path, so report the numbers instead of panicking after a long run
+    // The acceptance assertion needs real parallelism AND the full-size
+    // trace: on a 1-3 core host oversubscribed shard workers can't beat
+    // the single-threaded path, and on a GOGH_SCALE_JOBS-truncated run
+    // (e.g. the CI bench gate's 300-job smoke) per-arrival thread-spawn
+    // overhead can dominate the tiny solves — report instead of
+    // panicking in both cases.
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    if cores >= 4 {
+    if jobs_override.is_some() {
+        println!("(latency assertion skipped: GOGH_SCALE_JOBS-truncated run)");
+    } else if cores < 4 {
+        println!("(latency assertion skipped: only {cores} cores available)");
+    } else {
         assert!(
             best_wide < unsharded,
             "sharded (P>=4) decision path is not faster: {best_wide} vs {unsharded} ms/event"
         );
-    } else {
-        println!("(latency assertion skipped: only {cores} cores available)");
     }
     Ok(())
 }

@@ -5,10 +5,14 @@
 //!
 //! Paper shape: RNN best on train+val; Transformer generalizes best on
 //! the unseen test configs. Absolute values differ (synthetic dataset).
+//!
+//! Without PJRT artifacts the bench does not skip: it runs the same
+//! dataset through the native pure-Rust backend (one `native-mlp` row),
+//! so the P1 estimation task stays exercised in every environment.
 
 include!("bench_util.rs");
 
-use gogh::runtime::{DatasetBuilder, Engine, Estimator};
+use gogh::runtime::{DatasetBuilder, Engine, Estimator, NativeBackend};
 use gogh::workload::ThroughputOracle;
 
 const SEED: u64 = 29;
@@ -17,7 +21,6 @@ const N_EVAL: usize = 1500;
 const STEPS: usize = 400;
 
 fn main() -> gogh::Result<()> {
-    let engine = Engine::load("artifacts")?;
     let oracle = ThroughputOracle::new(SEED);
     let builder = DatasetBuilder::new(&oracle, SEED);
     let split = builder.build_split("p1", N_TRAIN, N_EVAL);
@@ -28,23 +31,18 @@ fn main() -> gogh::Result<()> {
         "{:<14} {:>11} {:>11} {:>11} {:>11} {:>12}",
         "arch", "train_mae", "val_mae", "test_mae", "train_loss", "step_time"
     );
-    for arch in ["ff", "rnn", "transformer"] {
-        let mut est = Estimator::new(&engine, &format!("p1_{arch}"))?;
-        let t0 = std::time::Instant::now();
-        let (final_loss, _) = train_estimator(&mut est, &split.train, STEPS, SEED)?;
-        let step_time = t0.elapsed().as_secs_f64() / STEPS as f64;
-        let (_, train_mae) = eval_estimator(&mut est, &split.train)?;
-        let (_, val_mae) = eval_estimator(&mut est, &split.val)?;
-        let (_, test_mae) = eval_estimator(&mut est, &split.test)?;
-        println!(
-            "{:<14} {:>11.4} {:>11.4} {:>11.4} {:>11.5} {:>12}",
-            arch,
-            train_mae,
-            val_mae,
-            test_mae,
-            final_loss,
-            fmt_time(step_time)
-        );
+    match Engine::load("artifacts") {
+        Ok(engine) => {
+            for arch in ["ff", "rnn", "transformer"] {
+                let mut est = Estimator::new(&engine, &format!("p1_{arch}"))?;
+                bench_row(arch, &mut est, &split, STEPS, SEED)?;
+            }
+        }
+        Err(err) => {
+            println!("# (no PJRT artifacts: {err}; running the native pure-Rust backend)");
+            let mut est = NativeBackend::p1(SEED);
+            bench_row("native-mlp", &mut est, &split, STEPS, SEED)?;
+        }
     }
     Ok(())
 }

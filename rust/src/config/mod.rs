@@ -46,6 +46,51 @@ impl std::fmt::Display for Arch {
     }
 }
 
+/// Which estimator backend drives the P1/P2 networks (`gogh.backend`
+/// in config JSON, `--backend` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Resolve at startup: pjrt if artifacts load, else native (a
+    /// warning names the backend actually used).
+    #[default]
+    Auto,
+    /// AOT-compiled PJRT artifacts; a missing artifact dir is a hard
+    /// error, never a silent fallback.
+    Pjrt,
+    /// The pure-Rust in-crate MLP engine (`runtime::native`) — zero
+    /// external artifacts, bit-reproducible from the seed.
+    Native,
+    /// Estimator-free: catalog priors + measurements only.
+    None,
+}
+
+impl BackendKind {
+    pub fn key(self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+            BackendKind::None => "none",
+        }
+    }
+
+    pub fn from_key(k: &str) -> Result<Self> {
+        Ok(match k {
+            "auto" => BackendKind::Auto,
+            "pjrt" => BackendKind::Pjrt,
+            "native" => BackendKind::Native,
+            "none" => BackendKind::None,
+            other => anyhow::bail!("unknown backend {other:?} (want auto|pjrt|native|none)"),
+        })
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
 /// Cluster composition.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -137,6 +182,8 @@ impl Default for OptimizerConfig {
 /// the estimator or optimizer subsystems).
 #[derive(Debug, Clone)]
 pub struct GoghPolicyConfig {
+    /// Estimator backend (`auto` resolves pjrt → native at startup).
+    pub backend: BackendKind,
     /// Historical jobs seeded into the catalog at startup.
     pub history_jobs: usize,
     /// Apply P2 cross-GPU refinement (Eq. 3/4); disabling it is the
@@ -169,6 +216,7 @@ pub struct GoghPolicyConfig {
 impl Default for GoghPolicyConfig {
     fn default() -> Self {
         Self {
+            backend: BackendKind::Auto,
             history_jobs: 24,
             enable_refinement: true,
             exploration_epsilon: 0.0,
@@ -344,6 +392,9 @@ impl ExperimentConfig {
             }
         }
         if let Some(g) = j.get("gogh") {
+            if let Some(v) = g.get("backend") {
+                cfg.gogh.backend = BackendKind::from_key(v.as_str().unwrap_or("auto"))?;
+            }
             if let Some(v) = g.get("history_jobs") {
                 cfg.gogh.history_jobs = v.as_usize().unwrap_or(cfg.gogh.history_jobs);
             }
@@ -446,6 +497,7 @@ impl ExperimentConfig {
             (
                 "gogh",
                 Json::obj(vec![
+                    ("backend", self.gogh.backend.key().into()),
                     ("history_jobs", self.gogh.history_jobs.into()),
                     ("enable_refinement", self.gogh.enable_refinement.into()),
                     ("exploration_epsilon", self.gogh.exploration_epsilon.into()),
@@ -539,6 +591,31 @@ mod tests {
         assert!(
             ExperimentConfig::from_json(r#"{"cluster": {"accel_mix": {"h100": 2}}}"#).is_err()
         );
+    }
+
+    #[test]
+    fn backend_kind_roundtrips_and_rejects_junk() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.gogh.backend, BackendKind::Auto);
+        cfg.gogh.backend = BackendKind::Native;
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.gogh.backend, BackendKind::Native);
+        for (key, kind) in [
+            ("auto", BackendKind::Auto),
+            ("pjrt", BackendKind::Pjrt),
+            ("native", BackendKind::Native),
+            ("none", BackendKind::None),
+        ] {
+            assert_eq!(BackendKind::from_key(key).unwrap(), kind);
+            assert_eq!(kind.key(), key);
+            let j = format!(r#"{{"gogh": {{"backend": "{key}"}}}}"#);
+            assert_eq!(ExperimentConfig::from_json(&j).unwrap().gogh.backend, kind);
+        }
+        assert!(BackendKind::from_key("tpu").is_err());
+        assert!(ExperimentConfig::from_json(r#"{"gogh": {"backend": "tpu"}}"#).is_err());
+        // omission keeps the auto ladder
+        let d = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(d.gogh.backend, BackendKind::Auto);
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::ilp::branch_bound::{BnbConfig, BnbStatus};
 use crate::ilp::problem1::{pool_accel_counts, solve_problem1, Problem1Input};
 use crate::metrics::{ErrorTracker, RunReport};
 use crate::runtime::dataset::Sample;
-use crate::runtime::{Engine, Estimator};
+use crate::runtime::{Backend, Engine, Estimator, NativeBackend};
 use crate::workload::encoding::{p1_row, psi_distance};
 use crate::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, ACCEL_TYPES};
 use crate::Result;
@@ -171,13 +171,33 @@ impl ShardStats {
     }
 }
 
+/// Learning-loop counters (the CI smoke greps these off the `simulate`
+/// summary line, so the learning path can never silently degrade back
+/// to estimator-free).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LearningStats {
+    /// monitoring rounds in which ≥1 P2 refinement query was applied
+    pub refinement_rounds: usize,
+    /// Adam steps taken by P1 (bootstrap + online)
+    pub p1_train_steps: u64,
+    /// Adam steps taken by P2 (bootstrap + online)
+    pub p2_train_steps: u64,
+    /// P1 Adam steps taken *after* bootstrap (the continuous-learning
+    /// half of the paper's loop — gated separately so a dead monitor
+    /// path can't hide behind construction-time training)
+    pub p1_online_steps: u64,
+    /// P2 Adam steps taken after bootstrap
+    pub p2_online_steps: u64,
+}
+
 pub struct GoghScheduler {
     pub catalog: Catalog,
-    /// P1/P2 estimators; `None` runs the coordinator estimator-free
-    /// (catalog priors + measurements only — the degraded mode used
-    /// when no PJRT artifacts are available, e.g. CI and scale benches).
-    p1: Option<Estimator>,
-    p2: Option<Estimator>,
+    /// P1/P2 estimator backends (PJRT artifacts or the pure-Rust native
+    /// MLP — see [`crate::runtime::Backend`]); `None` runs the
+    /// coordinator estimator-free (catalog priors + measurements only —
+    /// the degraded mode for `backend = "none"`).
+    p1: Option<Box<dyn Backend>>,
+    p2: Option<Box<dyn Backend>>,
     opt: Optimizer,
     options: GoghOptions,
     /// memoized estimate matrix (invalidated on catalog mutation)
@@ -193,6 +213,13 @@ pub struct GoghScheduler {
     replay_p1: Vec<Sample>,
     replay_p2: Vec<Sample>,
     errors: ErrorTracker,
+    /// monitoring rounds in which ≥1 P2 refinement query was applied
+    refine_rounds: usize,
+    /// Adam steps taken during construction-time bootstrap, per network
+    /// (splits the `steps_taken` counters into bootstrap vs online so
+    /// the CI smoke can gate the *online* half of the learning loop).
+    p1_bootstrap_steps: u64,
+    p2_bootstrap_steps: u64,
     round: u32,
     rng: crate::util::Rng,
     p1_calls: usize,
@@ -214,24 +241,43 @@ impl GoghScheduler {
     ) -> Result<Self> {
         let p1 = Estimator::new(engine, &format!("p1_{}", options.estimator.p1_arch.key()))?;
         let p2 = Estimator::new(engine, &format!("p2_{}", options.estimator.p2_arch.key()))?;
-        Self::from_parts(Some(p1), Some(p2), oracle_for_history, options)
+        Self::with_backends(Some(Box::new(p1)), Some(Box::new(p2)), oracle_for_history, options)
     }
 
-    /// Build without a PJRT engine: the coordinator runs estimator-free
+    /// Build over the pure-Rust native backend: the full learning loop
+    /// (P1 priors, P2 refinement, online Adam steps) with zero external
+    /// artifacts. Seeded from `options.seed`, so runs are bit
+    /// reproducible.
+    pub fn with_native_backend(
+        oracle_for_history: &ThroughputOracle,
+        options: GoghOptions,
+    ) -> Result<Self> {
+        let p1 = NativeBackend::p1(options.seed ^ 0x7031); // "p1"
+        let p2 = NativeBackend::p2(options.seed ^ 0x7032); // "p2"
+        Self::with_backends(Some(Box::new(p1)), Some(Box::new(p2)), oracle_for_history, options)
+    }
+
+    /// Build without any estimator: the coordinator runs estimator-free
     /// on catalog priors, similarity transfer and live measurements (no
-    /// P1/P2 networks, no online training). This is the degraded mode
-    /// for environments without AOT artifacts — CI smokes and the scale
-    /// benches exercise the full decision path through it.
+    /// P1/P2 networks, no online training). This is `backend = "none"`,
+    /// the degraded mode the scale benches use to isolate decision-path
+    /// cost from estimator cost.
     pub fn without_engine(
         oracle_for_history: &ThroughputOracle,
         options: GoghOptions,
     ) -> Result<Self> {
-        Self::from_parts(None, None, oracle_for_history, options)
+        Self::with_backends(None, None, oracle_for_history, options)
     }
 
-    fn from_parts(
-        p1: Option<Estimator>,
-        p2: Option<Estimator>,
+    /// Build from explicit estimator [`Backend`]s (the general form
+    /// behind [`GoghScheduler::new`], [`with_native_backend`] and
+    /// [`without_engine`]; custom backends plug in here).
+    ///
+    /// [`with_native_backend`]: GoghScheduler::with_native_backend
+    /// [`without_engine`]: GoghScheduler::without_engine
+    pub fn with_backends(
+        p1: Option<Box<dyn Backend>>,
+        p2: Option<Box<dyn Backend>>,
         oracle_for_history: &ThroughputOracle,
         options: GoghOptions,
     ) -> Result<Self> {
@@ -247,6 +293,9 @@ impl GoghScheduler {
             replay_p1: vec![],
             replay_p2: vec![],
             errors: ErrorTracker::new(),
+            refine_rounds: 0,
+            p1_bootstrap_steps: 0,
+            p2_bootstrap_steps: 0,
             round: 0,
             rng: crate::util::Rng::seed_from_u64(options.seed ^ 0x6064),
             p1_calls: 0,
@@ -267,6 +316,8 @@ impl GoghScheduler {
             );
             s.bootstrap()?;
         }
+        s.p1_bootstrap_steps = s.p1.as_ref().map_or(0, |b| b.steps_taken());
+        s.p2_bootstrap_steps = s.p2.as_ref().map_or(0, |b| b.steps_taken());
         Ok(s)
     }
 
@@ -309,7 +360,7 @@ impl GoghScheduler {
             if replay.len() < 8 {
                 continue;
             }
-            let b = est.spec().train_batch.min(replay.len());
+            let b = est.train_batch().min(replay.len());
             let mut idx: Vec<usize> = (0..replay.len()).collect();
             self.rng.shuffle(&mut idx);
             let xs: Vec<Vec<f32>> = idx[..b].iter().map(|&i| replay[i].x.clone()).collect();
@@ -768,6 +819,20 @@ impl GoghScheduler {
         self.cache.stats()
     }
 
+    /// Learning-loop counters: refinement rounds + per-network Adam
+    /// steps (zero across the board when running estimator-free).
+    pub fn learning_stats(&self) -> LearningStats {
+        let p1_steps = self.p1.as_ref().map_or(0, |b| b.steps_taken());
+        let p2_steps = self.p2.as_ref().map_or(0, |b| b.steps_taken());
+        LearningStats {
+            refinement_rounds: self.refine_rounds,
+            p1_train_steps: p1_steps,
+            p2_train_steps: p2_steps,
+            p1_online_steps: p1_steps.saturating_sub(self.p1_bootstrap_steps),
+            p2_online_steps: p2_steps.saturating_sub(self.p2_bootstrap_steps),
+        }
+    }
+
     /// Full Problem-1 re-solve over every active job (the escape hatch,
     /// the pre-redesign behaviour, and — when sharded — the periodic
     /// cross-shard rebalance), returned as a delta.
@@ -1028,17 +1093,17 @@ impl GoghScheduler {
             }
             self.catalog.record_measurement(key, m.throughput);
         }
-        // P2 refinement toward unobserved accel types (Eq. 3/4);
-        // estimator-free mode keeps measurements and skips the transfer
-        let queries = if self.options.enable_refinement && self.p2.is_some() {
-            refinement::build_refine_queries(&self.catalog, measurements)
-        } else {
-            vec![]
-        };
-        if !queries.is_empty() {
-            let rows: Vec<Vec<f32>> = queries.iter().map(|q| q.x.clone()).collect();
-            let preds = self.p2.as_mut().unwrap().predict(&rows)?;
-            refinement::apply_refinements(&mut self.catalog, &queries, &preds, self.round);
+        // P2 refinement toward unobserved accel types (Eq. 3/4), via
+        // whichever backend is mounted (PJRT or native); estimator-free
+        // mode keeps measurements and skips the transfer
+        if self.options.enable_refinement {
+            if let Some(p2) = self.p2.as_deref_mut() {
+                let applied =
+                    refinement::refine_round(&mut self.catalog, p2, measurements, self.round)?;
+                if applied > 0 {
+                    self.refine_rounds += 1;
+                }
+            }
         }
         // continuous learning
         if self.options.estimator.online_steps_per_round > 0
@@ -1161,31 +1226,98 @@ impl Scheduler for GoghScheduler {
     }
 }
 
-/// The full GOGH system: engine + scheduler + simulator from one config.
+/// The full GOGH system: backend + scheduler + simulator from one
+/// config.
 pub struct Gogh {
     driver: SimDriver,
     scheduler: GoghScheduler,
+    /// which estimator backend actually got mounted ("pjrt" / "native"
+    /// / "none") — may differ from the configured kind under `auto`.
+    backend: &'static str,
 }
 
 impl Gogh {
+    /// Build the system the config describes, resolving
+    /// `cfg.gogh.backend`:
+    ///
+    /// * `pjrt` — requires loadable AOT artifacts; a missing artifact
+    ///   dir is a hard error (no silent fallback).
+    /// * `native` — the pure-Rust MLP backend, zero artifacts.
+    /// * `none` — estimator-free (catalog priors + measurements only).
+    /// * `auto` — the fallback ladder pjrt → native → none, logging a
+    ///   warning that names the backend actually used (native init is
+    ///   infallible, so the terminal `none` rung is never reached in
+    ///   practice).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
-        let engine = Engine::load(&cfg.estimator.artifacts_dir)?;
-        Self::with_engine(&engine, cfg)
+        match cfg.gogh.backend {
+            crate::config::BackendKind::Pjrt => {
+                let engine = Engine::load(&cfg.estimator.artifacts_dir).map_err(|e| {
+                    anyhow::anyhow!(
+                        "backend pjrt requested but the PJRT engine failed to load from {:?} \
+                         ({e}); build artifacts with `make artifacts` or use --backend native",
+                        cfg.estimator.artifacts_dir
+                    )
+                })?;
+                Self::with_engine(&engine, cfg)
+            }
+            crate::config::BackendKind::Native => Self::with_native(cfg),
+            crate::config::BackendKind::None => Self::without_engine(cfg),
+            crate::config::BackendKind::Auto => {
+                match Engine::load(&cfg.estimator.artifacts_dir) {
+                    Ok(engine) => Self::with_engine(&engine, cfg),
+                    Err(err) => {
+                        crate::log_warn!(
+                            "PJRT engine unavailable ({err}); using the native pure-Rust \
+                             estimator backend instead"
+                        );
+                        Self::with_native(cfg)
+                    }
+                }
+            }
+        }
     }
 
     /// Build reusing an existing engine (benches construct many systems).
     pub fn with_engine(engine: &Engine, cfg: &ExperimentConfig) -> Result<Self> {
         let (driver, oracle) = Self::build_driver(cfg)?;
         let scheduler = GoghScheduler::new(engine, &oracle, GoghOptions::from_config(cfg))?;
-        Ok(Self { driver, scheduler })
+        Ok(Self {
+            driver,
+            scheduler,
+            backend: "pjrt",
+        })
     }
 
-    /// Build without PJRT artifacts: the estimator-free degraded mode
+    /// Build over the native pure-Rust backend (see
+    /// [`GoghScheduler::with_native_backend`]): the full learning loop
+    /// with zero external artifacts.
+    pub fn with_native(cfg: &ExperimentConfig) -> Result<Self> {
+        let (driver, oracle) = Self::build_driver(cfg)?;
+        let scheduler =
+            GoghScheduler::with_native_backend(&oracle, GoghOptions::from_config(cfg))?;
+        Ok(Self {
+            driver,
+            scheduler,
+            backend: "native",
+        })
+    }
+
+    /// Build without any estimator: the estimator-free degraded mode
     /// (see [`GoghScheduler::without_engine`]).
     pub fn without_engine(cfg: &ExperimentConfig) -> Result<Self> {
         let (driver, oracle) = Self::build_driver(cfg)?;
         let scheduler = GoghScheduler::without_engine(&oracle, GoghOptions::from_config(cfg))?;
-        Ok(Self { driver, scheduler })
+        Ok(Self {
+            driver,
+            scheduler,
+            backend: "none",
+        })
+    }
+
+    /// The estimator backend actually mounted ("pjrt" / "native" /
+    /// "none") — under `auto` this names the fallback that won.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
     }
 
     fn build_driver(cfg: &ExperimentConfig) -> Result<(SimDriver, ThroughputOracle)> {

@@ -13,6 +13,6 @@ pub mod refinement;
 pub mod scheduler;
 
 pub use estimate_cache::{EstimateCache, EstimateCacheStats};
-pub use gogh::{Gogh, GoghOptions, GoghScheduler, ShardStats, SolverPathStats};
+pub use gogh::{Gogh, GoghOptions, GoghScheduler, LearningStats, ShardStats, SolverPathStats};
 pub use optimizer::Optimizer;
 pub use scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};

@@ -6,8 +6,10 @@
 
 use crate::catalog::{Catalog, EstimateKey};
 use crate::cluster::Measurement;
+use crate::runtime::Backend;
 use crate::workload::encoding::{p2_row, PSI_DIM};
 use crate::workload::{AccelType, Combo, JobId, ACCEL_TYPES};
+use crate::Result;
 
 /// Default pair-interference prior used when a pair estimate is missing
 /// (a solo estimate exists but the combination was never seen).
@@ -181,6 +183,27 @@ pub fn apply_refinements(
     }
 }
 
+/// One full P2 refinement round over any [`Backend`] (PJRT or native):
+/// build the Eq. 3 query rows for this round's measurements, run the
+/// refinement network, and push its predictions into the Catalog's
+/// refinement sets 𝒯 (Eq. 4). Returns the number of queries applied
+/// (0 when the round produced nothing refinable).
+pub fn refine_round(
+    catalog: &mut Catalog,
+    p2: &mut dyn Backend,
+    measurements: &[Measurement],
+    round: u32,
+) -> Result<usize> {
+    let queries = build_refine_queries(catalog, measurements);
+    if queries.is_empty() {
+        return Ok(0);
+    }
+    let rows: Vec<Vec<f32>> = queries.iter().map(|q| q.x.clone()).collect();
+    let preds = p2.predict(&rows)?;
+    apply_refinements(catalog, &queries, &preds, round);
+    Ok(queries.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +280,24 @@ mod tests {
         assert!(r.refinements() >= 2);
         let v = c.value(&k).unwrap();
         assert!(v > 0.3 && v <= 0.5, "{v}");
+    }
+
+    #[test]
+    fn refine_round_runs_over_any_backend() {
+        // the backend-agnostic round: native P2 predictions land in the
+        // refinement sets of every unobserved accel type
+        let (mut c, ms) = setup();
+        let mut p2 = crate::runtime::NativeBackend::p2(3);
+        let n = refine_round(&mut c, &mut p2, &ms, 1).unwrap();
+        assert_eq!(n, 10); // 2 measurements × 5 other accel types
+        let k = EstimateKey {
+            accel: AccelType::V100,
+            job: JobId(1),
+            combo: Combo::pair(JobId(1), JobId(2)),
+        };
+        assert!(c.record(&k).unwrap().refinements() >= 2);
+        // a measurement-free round refines nothing
+        assert_eq!(refine_round(&mut c, &mut p2, &[], 2).unwrap(), 0);
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //! * **L2/L1 (build-time python)** — the P1/P2 estimator networks
 //!   (FF/RNN/Transformer) with Pallas kernels, AOT-lowered to HLO text in
 //!   `artifacts/`; the [`runtime`] module loads and drives them through
-//!   the PJRT CPU client. Python never runs on the request path.
+//!   the PJRT CPU client. Python never runs on the request path. Without
+//!   artifacts, the dependency-free pure-Rust backend
+//!   ([`runtime::native`]) runs the same learning loop behind the same
+//!   [`runtime::Backend`] trait — `gogh.backend = "native"` / `--backend
+//!   native`.
 //!
 //! ## Quick start
 //!

@@ -9,7 +9,7 @@
 //! (Argument parsing is hand-rolled — offline build, see Cargo.toml.)
 
 use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
-use gogh::config::ExperimentConfig;
+use gogh::config::{BackendKind, ExperimentConfig};
 use gogh::coordinator::{Gogh, Scheduler, SimDriver};
 use gogh::runtime::Engine;
 use gogh::workload::{ThroughputOracle, Trace};
@@ -59,6 +59,7 @@ const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in hetero
 USAGE:
   gogh simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S]
                 [--config cfg.json] [--preset default|large] [--shards P]
+                [--backend auto|pjrt|native|none]
                 [--save-catalog catalog.json] [--gavel-csv data.csv]
                 [--cancel-rate P] [--accel-churn N] [--migration-cost-s S]
   gogh info [--workloads]
@@ -67,11 +68,24 @@ USAGE:
 
 The `large` preset is the scale scenario: ≥1024 accelerator instances,
 a ≥50k-event trace, and the shard-parallel decision path (--shards
-overrides the shard count; 1 = the single-threaded path). Without PJRT
-artifacts the gogh policy runs estimator-free on catalog priors.
+overrides the shard count; 1 = the single-threaded path).
+
+--backend picks the P1/P2 estimator engine: `pjrt` (AOT artifacts,
+errors if absent), `native` (pure-Rust MLP, zero artifacts), `none`
+(estimator-free catalog priors), or `auto` (default: pjrt when
+artifacts load, else native, with a warning naming the one used).
 ";
 
-fn main() -> Result<()> {
+fn main() {
+    if let Err(e) = run() {
+        // one clear line, never a panic/backtrace (e.g. `--backend
+        // pjrt` without an artifact dir)
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         print!("{USAGE}");
@@ -107,6 +121,9 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
     if let Some(p) = args.get_parse::<usize>("shards") {
         cfg.gogh.shards = p.max(1);
     }
+    if let Some(b) = args.get("backend") {
+        cfg.gogh.backend = BackendKind::from_key(b)?;
+    }
     if let Some(s) = args.get_parse::<u64>("seed") {
         cfg.seed = s;
         cfg.trace.seed = s;
@@ -131,22 +148,25 @@ fn simulate(args: &Args) -> Result<()> {
     let policy = args.get("policy").unwrap_or("gogh");
     let report = match policy {
         "gogh" => {
-            // degrade gracefully when no PJRT artifacts are available:
-            // the decision path (sharding, ILP, catalog) runs the same,
-            // estimates come from priors + measurements instead of P1/P2
-            let mut sys = match Engine::load(&cfg.estimator.artifacts_dir) {
-                Ok(engine) => Gogh::with_engine(&engine, &cfg)?,
-                Err(err) => {
-                    eprintln!(
-                        "warning: PJRT engine unavailable ({err}); \
-                         running gogh estimator-free (catalog priors only)"
-                    );
-                    Gogh::without_engine(&cfg)?
-                }
-            };
+            // backend resolution (pjrt/native/none, or the auto ladder
+            // with its fallback warning) lives in Gogh::from_config;
+            // explicit `--backend pjrt` without artifacts errors out
+            let mut sys = Gogh::from_config(&cfg)?;
+            let backend_used = sys.backend_name();
             let report = sys.run()?;
             let stats = sys.scheduler().solver_stats();
             let cache = sys.scheduler().cache_stats();
+            let learn = sys.scheduler().learning_stats();
+            println!(
+                "learning loop: backend {}, {} refinement rounds, \
+                 {} P1 train steps ({} online), {} P2 train steps ({} online)",
+                backend_used,
+                learn.refinement_rounds,
+                learn.p1_train_steps,
+                learn.p1_online_steps,
+                learn.p2_train_steps,
+                learn.p2_online_steps
+            );
             println!(
                 "solver paths: {} full ({:.1} nodes/solve), {} incremental \
                  ({:.1} nodes/solve); estimate cache {:.1}% hit over {} lookups",

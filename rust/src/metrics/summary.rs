@@ -1,4 +1,6 @@
-//! Run reports and scheduler-comparison tables (the e2e bench output).
+//! Run reports, scheduler-comparison tables (the e2e bench output),
+//! and the machine-readable bench record the CI regression gate
+//! consumes.
 
 /// Summary of one simulated run.
 #[derive(Debug, Clone, Default)]
@@ -84,6 +86,58 @@ impl RunReport {
     }
 }
 
+/// One bench measurement in the `BENCH_<name>.json` schema: CI uploads
+/// it as an artifact and fails the build when `mean_decision_ms`
+/// regresses more than the gate's tolerance vs the committed baseline
+/// (see `.github/scripts/bench_gate.py`).
+#[derive(Debug, Clone, Default)]
+pub struct BenchRecord {
+    /// bench name, e.g. `"e2e_scheduling"`
+    pub bench: String,
+    /// trace size the measurement was taken at
+    pub jobs: usize,
+    /// mean per-event decision latency (ms) — the gated number
+    pub mean_decision_ms: f64,
+    /// total branch-and-bound nodes explored across the run
+    pub explored_nodes: usize,
+    /// peak resident set of the bench process (bytes; 0 off-Linux)
+    pub peak_rss_bytes: u64,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> crate::util::Json {
+        crate::util::Json::obj(vec![
+            ("bench", self.bench.as_str().into()),
+            ("jobs", self.jobs.into()),
+            ("mean_decision_ms", self.mean_decision_ms.into()),
+            ("explored_nodes", self.explored_nodes.into()),
+            ("peak_rss_bytes", self.peak_rss_bytes.into()),
+        ])
+    }
+
+    /// Write the record to `path` as JSON.
+    pub fn write(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+}
+
+/// Peak resident set size of the current process in bytes, read from
+/// `/proc/self/status` (`VmHWM`). Returns 0 on platforms without procfs
+/// — callers must treat 0 as "unknown", not "tiny".
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
 /// Multiple runs side by side.
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerComparison {
@@ -129,6 +183,31 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(r.joules_per_job(), 25.0);
+    }
+
+    #[test]
+    fn bench_record_serializes_every_gated_field() {
+        let r = BenchRecord {
+            bench: "e2e_scheduling".into(),
+            jobs: 300,
+            mean_decision_ms: 1.25,
+            explored_nodes: 42,
+            peak_rss_bytes: 4096,
+        };
+        let j = crate::util::Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.req_str("bench").unwrap(), "e2e_scheduling");
+        assert_eq!(j.req_usize("jobs").unwrap(), 300);
+        assert!((j.req_f64("mean_decision_ms").unwrap() - 1.25).abs() < 1e-12);
+        assert_eq!(j.req_usize("explored_nodes").unwrap(), 42);
+        assert_eq!(j.req_usize("peak_rss_bytes").unwrap(), 4096);
+    }
+
+    #[test]
+    fn peak_rss_reads_procfs_where_available() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            assert!(rss > 0, "VmHWM should be readable on Linux");
+        }
     }
 
     #[test]

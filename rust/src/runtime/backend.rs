@@ -1,0 +1,163 @@
+//! The estimator [`Backend`] abstraction: everything the coordinator
+//! needs from a P1/P2 network, implemented by both the PJRT path
+//! ([`Estimator`], compiled AOT artifacts) and the dependency-free
+//! [`crate::runtime::NativeBackend`] (pure-Rust MLP). The coordinator
+//! holds `Option<Box<dyn Backend>>`, so the whole
+//! P1-estimate → monitor-measure → P2-refine learning loop is backend
+//! agnostic — and CI runs it natively with zero external artifacts.
+//!
+//! | backend  | engine                  | artifacts | seeded init          |
+//! |----------|-------------------------|-----------|----------------------|
+//! | `pjrt`   | XLA PJRT CPU client     | required  | AOT `init` exec      |
+//! | `native` | in-crate MLP (`native`) | none      | [`crate::util::Rng`] |
+//! | `none`   | estimator-free priors   | none      | n/a                  |
+//!
+//! Shared contract (documented in `runtime/estimator.rs`, upheld by
+//! both implementations and asserted in the native unit tests):
+//! `predict` chunks rows by `pred_batch` and cycle-pads the final
+//! chunk with repeated rows; `train_step` cycle-pads up to
+//! `train_batch` (repeating real samples keeps gradients unbiased,
+//! unlike zero-padding); the mutable state is the flat
+//! `params…, m…, v…, adam_step` vector.
+
+use crate::Result;
+
+use super::estimator::Estimator;
+
+/// A PJRT-backed estimator — the [`Estimator`] type itself; the alias
+/// names the role it plays next to [`crate::runtime::NativeBackend`].
+pub type PjrtBackend = Estimator;
+
+/// One P1/P2 estimation network: seeded-initialized mutable model state
+/// plus `predict` / `train_step` over plain f32 rows.
+///
+/// Construction is per-implementation (`Estimator::new` compiles AOT
+/// artifacts; `NativeBackend::p1`/`p2` seed a pure-Rust MLP from
+/// [`crate::util::Rng`]); everything after construction goes through
+/// this trait.
+pub trait Backend {
+    /// Model key (e.g. `"p1_rnn"` for PJRT, `"p1_native"` for native).
+    fn key(&self) -> &str;
+
+    /// Input row width (`padded_dim` of the manifest / native spec).
+    fn input_dim(&self) -> usize;
+
+    /// Output width (2: the job slot + the co-runner slot).
+    fn out_dim(&self) -> usize;
+
+    /// Fixed training batch; smaller batches are cycle-padded up.
+    fn train_batch(&self) -> usize;
+
+    /// Prediction chunk size; longer row sets are chunked.
+    fn pred_batch(&self) -> usize;
+
+    /// Total f32 elements of the flat mutable state
+    /// (`params…, m…, v…, adam_step`).
+    fn state_dim(&self) -> usize;
+
+    /// Adam steps taken since construction / [`Backend::reset`].
+    fn steps_taken(&self) -> u64;
+
+    /// Predict `[f32; 2]` outputs for arbitrarily many input rows.
+    fn predict(&mut self, rows: &[Vec<f32>]) -> Result<Vec<[f32; 2]>>;
+
+    /// One Adam step on `(x, y)` rows; returns `(mse_loss, mae)`.
+    fn train_step(&mut self, xs: &[Vec<f32>], ys: &[[f32; 2]]) -> Result<(f32, f32)>;
+
+    /// Restore the freshly initialized state (same seed ⇒ same state).
+    fn reset(&mut self) -> Result<()>;
+
+    /// Evaluate `(mse, mae)` of predictions against targets, without
+    /// training.
+    fn evaluate(&mut self, xs: &[Vec<f32>], ys: &[[f32; 2]]) -> Result<(f32, f32)> {
+        let preds = self.predict(xs)?;
+        let mut abs = 0.0f64;
+        let mut sq = 0.0f64;
+        let mut n = 0usize;
+        for (p, y) in preds.iter().zip(ys) {
+            for k in 0..2 {
+                let e = (p[k] - y[k]) as f64;
+                abs += e.abs();
+                sq += e * e;
+                n += 1;
+            }
+        }
+        Ok(((sq / n.max(1) as f64) as f32, (abs / n.max(1) as f64) as f32))
+    }
+}
+
+impl Backend for Estimator {
+    fn key(&self) -> &str {
+        Estimator::key(self)
+    }
+
+    fn input_dim(&self) -> usize {
+        self.spec().padded_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.spec().out_dim
+    }
+
+    fn train_batch(&self) -> usize {
+        self.spec().train_batch
+    }
+
+    fn pred_batch(&self) -> usize {
+        self.spec().pred_batch
+    }
+
+    fn state_dim(&self) -> usize {
+        let spec = self.spec();
+        (0..spec.n_state()).map(|i| spec.state_elems(i)).sum()
+    }
+
+    fn steps_taken(&self) -> u64 {
+        Estimator::steps_taken(self)
+    }
+
+    fn predict(&mut self, rows: &[Vec<f32>]) -> Result<Vec<[f32; 2]>> {
+        Estimator::predict(self, rows)
+    }
+
+    fn train_step(&mut self, xs: &[Vec<f32>], ys: &[[f32; 2]]) -> Result<(f32, f32)> {
+        Estimator::train_step(self, xs, ys)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        Estimator::reset(self)
+    }
+
+    fn evaluate(&mut self, xs: &[Vec<f32>], ys: &[[f32; 2]]) -> Result<(f32, f32)> {
+        Estimator::evaluate(self, xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn native_backend_is_object_safe_and_usable_boxed() {
+        let mut be: Box<dyn Backend> = Box::new(NativeBackend::p1(5));
+        assert_eq!(be.key(), "p1_native");
+        let rows = vec![vec![0.25f32; be.input_dim()]; 3];
+        let preds = be.predict(&rows).unwrap();
+        assert_eq!(preds.len(), 3);
+        let ys = vec![[0.5f32, 0.0f32]; 3];
+        let (loss, mae) = be.train_step(&rows, &ys).unwrap();
+        assert!(loss.is_finite() && mae.is_finite());
+        assert_eq!(be.steps_taken(), 1);
+        let (mse, mae2) = be.evaluate(&rows, &ys).unwrap();
+        assert!(mse >= 0.0 && mae2 >= 0.0);
+    }
+
+    #[test]
+    fn state_dim_matches_flat_layout() {
+        let be = NativeBackend::p2(5);
+        // params…, m…, v…, adam_step
+        assert_eq!(be.state_dim() % 3, 1);
+        assert_eq!(Backend::state_dim(&be), be.state().len());
+    }
+}

@@ -1,21 +1,31 @@
-//! PJRT runtime: loads the AOT-compiled estimator artifacts (HLO text
-//! produced by `python/compile/aot.py`) and drives them from the
-//! coordinator's hot path. Python never runs here.
+//! Estimator runtime: the P1/P2 networks behind the [`Backend`]
+//! abstraction — either AOT-compiled PJRT artifacts (HLO text produced
+//! by `python/compile/aot.py`; Python never runs here) or the
+//! dependency-free pure-Rust [`native`] engine.
 //!
+//! * [`backend`] — the [`Backend`] trait the coordinator programs
+//!   against (`predict` / `train_step` / flat Adam state).
 //! * [`manifest`] — parses `artifacts/manifest.json` (the I/O contract).
 //! * [`engine`] — PJRT CPU client; compiles `init` / `fwd` / `train`
 //!   executables per (net × arch).
-//! * [`estimator`] — owns a model's mutable state (params + Adam
-//!   moments), exposing `predict` and `train_step` over f32 rows.
+//! * [`estimator`] — the PJRT [`Backend`]: owns a model's mutable state
+//!   (params + Adam moments), exposing `predict` and `train_step` over
+//!   f32 rows.
+//! * [`native`] — the pure-Rust [`Backend`]: row-major matmul MLP,
+//!   manual backprop, Adam over the same flat state layout, seeded init.
 //! * [`dataset`] — P1/P2 training-tuple builders over the workload
 //!   universe (shared by the figure benches and the online loop).
 
+pub mod backend;
 pub mod dataset;
 pub mod engine;
 pub mod estimator;
 pub mod manifest;
+pub mod native;
 
+pub use backend::{Backend, PjrtBackend};
 pub use dataset::{split_universe, DatasetBuilder, PipelineItem, Sample, Split};
 pub use engine::{CompiledModel, Engine};
 pub use estimator::Estimator;
 pub use manifest::{Manifest, ModelSpec};
+pub use native::{NativeBackend, NativeSpec};

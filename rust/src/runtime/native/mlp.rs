@@ -1,0 +1,438 @@
+//! Pure-Rust MLP with manual backprop and Adam, over ONE flat f32 state
+//! vector laid out exactly like the PJRT path's state tuple:
+//! `params…, m…, v…, adam_step` (see `runtime/manifest.rs` — the flat
+//! order the AOT `train` executable threads through every step).
+//!
+//! The network is deliberately tiny and boring: row-major matmuls from
+//! [`super::tensor`], ReLU hidden layers, a linear 2-wide output head,
+//! MSE loss with an MAE side-metric — the same contract the compiled
+//! P1/P2 artifacts expose. Everything is seeded through
+//! [`crate::util::Rng`], so two models built from the same
+//! [`NativeSpec`] are bit-identical forever.
+
+use crate::util::Rng;
+use crate::Result;
+
+use super::tensor;
+
+/// Adam hyper-parameters (the values `python/compile/model.py` bakes
+/// into the AOT `train` executables).
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+/// Shape + training spec of one native model — the manifest-compatible
+/// description of a network (`input_dim`/`out_dim`/`train_batch`/
+/// `pred_batch`/`lr` mirror the fields of
+/// [`crate::runtime::manifest::ModelSpec`]; `hidden` replaces the HLO
+/// files, and `seed` replaces the AOT `init` executable).
+#[derive(Debug, Clone)]
+pub struct NativeSpec {
+    /// Model key, e.g. `"p1_native"` (reported by `Backend::key`).
+    pub key: String,
+    /// Input row width — P1 rows are [`crate::workload::encoding::P1_DIM`]
+    /// wide, P2 rows [`crate::workload::encoding::P2_PADDED`].
+    pub input_dim: usize,
+    /// Hidden-layer widths (ReLU); the output head is linear.
+    pub hidden: Vec<usize>,
+    /// Output width (always 2 for P1/P2: the job + co-runner slots).
+    pub out_dim: usize,
+    /// Training batch the flat state was tuned for; smaller batches are
+    /// cycle-padded up to this size (PJRT padding semantics).
+    pub train_batch: usize,
+    /// Prediction chunk size; longer row sets are chunked, the final
+    /// chunk cycle-padded (PJRT padding semantics).
+    pub pred_batch: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Seed of the Glorot-uniform parameter init.
+    pub seed: u64,
+}
+
+impl NativeSpec {
+    /// The P1 (initial estimation, Eq. 1) native model: 32 input
+    /// features ([`crate::workload::encoding::P1_DIM`]).
+    pub fn p1(seed: u64) -> Self {
+        Self {
+            key: "p1_native".to_string(),
+            input_dim: crate::workload::encoding::P1_DIM,
+            hidden: vec![64, 32],
+            out_dim: 2,
+            train_batch: 64,
+            pred_batch: 64,
+            lr: 1e-3,
+            seed,
+        }
+    }
+
+    /// The P2 (refinement, Eq. 3) native model: 40 input features
+    /// ([`crate::workload::encoding::P2_PADDED`]).
+    pub fn p2(seed: u64) -> Self {
+        Self {
+            key: "p2_native".to_string(),
+            input_dim: crate::workload::encoding::P2_PADDED,
+            hidden: vec![64, 32],
+            out_dim: 2,
+            train_batch: 64,
+            pred_batch: 64,
+            lr: 1e-3,
+            seed,
+        }
+    }
+
+    /// Layer dimension pairs `(fan_in, fan_out)` from input to output.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![self.input_dim];
+        dims.extend_from_slice(&self.hidden);
+        dims.push(self.out_dim);
+        dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn n_params(&self) -> usize {
+        self.layer_dims().iter().map(|(i, o)| i * o + o).sum()
+    }
+
+    /// Length of the flat state vector: `params…, m…, v…, adam_step`.
+    pub fn state_dim(&self) -> usize {
+        3 * self.n_params() + 1
+    }
+
+    /// Manifest-style state entries `(name, shape)` in flat order —
+    /// `w0/b0…`, `m_*`, `v_*`, then the scalar `adam_step` last, the
+    /// same discipline `artifacts/manifest.json` records for the PJRT
+    /// state tuple.
+    pub fn state_entries(&self) -> Vec<(String, Vec<usize>)> {
+        let mut entries = vec![];
+        for prefix in ["", "m_", "v_"] {
+            for (l, (fi, fo)) in self.layer_dims().iter().enumerate() {
+                entries.push((format!("{prefix}w{l}"), vec![*fi, *fo]));
+                entries.push((format!("{prefix}b{l}"), vec![*fo]));
+            }
+        }
+        entries.push(("adam_step".to_string(), vec![]));
+        entries
+    }
+}
+
+/// The network itself: a [`NativeSpec`] plus its flat mutable state.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    spec: NativeSpec,
+    /// `params…, m…, v…, adam_step` — see the module doc.
+    state: Vec<f32>,
+}
+
+impl Mlp {
+    /// Build with Glorot-uniform seeded init (deterministic per spec).
+    pub fn new(spec: NativeSpec) -> Self {
+        let n = spec.n_params();
+        let mut state = vec![0.0f32; 3 * n + 1];
+        let mut rng = Rng::seed_from_u64(spec.seed ^ 0x6e61_7469); // "nati"
+        let mut off = 0;
+        for (fan_in, fan_out) in spec.layer_dims() {
+            let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            for w in state[off..off + fan_in * fan_out].iter_mut() {
+                *w = rng.range_f64(-limit, limit) as f32;
+            }
+            off += fan_in * fan_out + fan_out; // biases stay 0
+        }
+        debug_assert_eq!(off, n);
+        Self { spec, state }
+    }
+
+    pub fn spec(&self) -> &NativeSpec {
+        &self.spec
+    }
+
+    /// The flat `params…, m…, v…, adam_step` state vector.
+    pub fn state(&self) -> &[f32] {
+        &self.state
+    }
+
+    /// Restore a previously exported flat state (length-checked).
+    pub fn set_state(&mut self, state: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            state.len() == self.state.len(),
+            "state length {} != expected {}",
+            state.len(),
+            self.state.len()
+        );
+        self.state.copy_from_slice(state);
+        Ok(())
+    }
+
+    /// Adam step counter (the scalar tail of the flat state).
+    pub fn adam_step(&self) -> u64 {
+        self.state[self.state.len() - 1] as u64
+    }
+
+    /// Forward pass over a flat `[batch × input_dim]` row-major input;
+    /// returns `[batch × out_dim]` predictions.
+    pub fn forward(&self, xs: &[f32], batch: usize) -> Vec<f32> {
+        self.forward_cached(xs, batch).pop().expect("≥1 layer")
+    }
+
+    /// Forward pass keeping every layer's post-activation (index 0 is
+    /// the input itself) — the cache backprop consumes.
+    fn forward_cached(&self, xs: &[f32], batch: usize) -> Vec<Vec<f32>> {
+        debug_assert_eq!(xs.len(), batch * self.spec.input_dim);
+        let dims = self.spec.layer_dims();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.len() + 1);
+        acts.push(xs.to_vec());
+        let mut off = 0;
+        for (l, &(fi, fo)) in dims.iter().enumerate() {
+            let w = &self.state[off..off + fi * fo];
+            let b = &self.state[off + fi * fo..off + fi * fo + fo];
+            off += fi * fo + fo;
+            let mut z = vec![0.0f32; batch * fo];
+            tensor::matmul(&acts[l], w, batch, fi, fo, &mut z);
+            tensor::add_bias(&mut z, b, batch, fo);
+            if l + 1 < dims.len() {
+                tensor::relu(&mut z);
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// MSE loss + MAE of the predictions against `[batch × out_dim]`
+    /// targets (both means over `batch * out_dim` elements — the PJRT
+    /// `train`/`evaluate` reduction).
+    pub fn loss(&self, xs: &[f32], ys: &[f32], batch: usize) -> (f32, f32) {
+        let yhat = self.forward(xs, batch);
+        Self::mse_mae(&yhat, ys)
+    }
+
+    fn mse_mae(yhat: &[f32], ys: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(yhat.len(), ys.len());
+        let mut sq = 0.0f64;
+        let mut abs = 0.0f64;
+        for (p, y) in yhat.iter().zip(ys) {
+            let e = (p - y) as f64;
+            sq += e * e;
+            abs += e.abs();
+        }
+        let n = yhat.len().max(1) as f64;
+        ((sq / n) as f32, (abs / n) as f32)
+    }
+
+    /// Backprop: parameter gradients of the MSE loss on one batch, plus
+    /// the (loss, mae) pair of that forward pass.
+    pub fn gradients(&self, xs: &[f32], ys: &[f32], batch: usize) -> (Vec<f32>, f32, f32) {
+        let dims = self.spec.layer_dims();
+        let acts = self.forward_cached(xs, batch);
+        let yhat = &acts[dims.len()];
+        let (loss, mae) = Self::mse_mae(yhat, ys);
+
+        let mut grads = vec![0.0f32; self.spec.n_params()];
+        // dL/dyhat for the mean-over-(batch·out) MSE
+        let scale = 2.0 / (batch * self.spec.out_dim) as f32;
+        let mut delta: Vec<f32> = yhat.iter().zip(ys).map(|(p, y)| scale * (p - y)).collect();
+
+        // walk layers backward; param offsets are easiest recomputed
+        let mut offsets = Vec::with_capacity(dims.len());
+        let mut off = 0;
+        for &(fi, fo) in &dims {
+            offsets.push(off);
+            off += fi * fo + fo;
+        }
+        for l in (0..dims.len()).rev() {
+            let (fi, fo) = dims[l];
+            let off = offsets[l];
+            // ∇W_l = acts[l]ᵀ · δ
+            tensor::matmul_at_b(&acts[l], &delta, batch, fi, fo, &mut grads[off..off + fi * fo]);
+            // ∇b_l = column sums of δ
+            for r in 0..batch {
+                for j in 0..fo {
+                    grads[off + fi * fo + j] += delta[r * fo + j];
+                }
+            }
+            if l > 0 {
+                // δ_prev = δ · W_lᵀ, masked by the ReLU of layer l-1
+                let w = &self.state[off..off + fi * fo];
+                let mut prev = vec![0.0f32; batch * fi];
+                tensor::matmul_a_bt(&delta, w, batch, fo, fi, &mut prev);
+                tensor::relu_backward(&mut prev, &acts[l]);
+                delta = prev;
+            }
+        }
+        (grads, loss, mae)
+    }
+
+    /// One Adam update from precomputed gradients (advances `adam_step`).
+    pub fn adam_update(&mut self, grads: &[f32]) {
+        let n = self.spec.n_params();
+        debug_assert_eq!(grads.len(), n);
+        let t = self.state[3 * n] as i32 + 1;
+        let bc1 = 1.0 - BETA1.powi(t);
+        let bc2 = 1.0 - BETA2.powi(t);
+        let lr = self.spec.lr;
+        for i in 0..n {
+            let g = grads[i];
+            let m = BETA1 * self.state[n + i] + (1.0 - BETA1) * g;
+            let v = BETA2 * self.state[2 * n + i] + (1.0 - BETA2) * g * g;
+            self.state[n + i] = m;
+            self.state[2 * n + i] = v;
+            self.state[i] -= lr * (m / bc1) / ((v / bc2).sqrt() + EPS);
+        }
+        self.state[3 * n] = t as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(seed: u64) -> NativeSpec {
+        NativeSpec {
+            key: "tiny".to_string(),
+            input_dim: 3,
+            hidden: vec![5],
+            out_dim: 2,
+            train_batch: 4,
+            pred_batch: 4,
+            lr: 1e-2,
+            seed,
+        }
+    }
+
+    #[test]
+    fn param_counts_and_state_layout() {
+        let spec = tiny_spec(1);
+        // 3·5+5 + 5·2+2 = 32 params
+        assert_eq!(spec.n_params(), 32);
+        assert_eq!(spec.state_dim(), 3 * 32 + 1);
+        let entries = spec.state_entries();
+        assert_eq!(entries.first().unwrap().0, "w0");
+        // the scalar Adam step is LAST with an empty shape, exactly like
+        // the PJRT manifest's state tuple
+        let (name, shape) = entries.last().unwrap();
+        assert_eq!(name, "adam_step");
+        assert!(shape.is_empty());
+        let elems: usize = entries
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>().max(1))
+            .sum();
+        assert_eq!(elems, spec.state_dim());
+    }
+
+    #[test]
+    fn seeded_init_is_deterministic_and_seed_sensitive() {
+        let a = Mlp::new(tiny_spec(7));
+        let b = Mlp::new(tiny_spec(7));
+        let c = Mlp::new(tiny_spec(8));
+        assert_eq!(a.state(), b.state());
+        assert_ne!(a.state(), c.state());
+        // moments and step start at zero
+        let n = a.spec().n_params();
+        assert!(a.state()[n..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn finite_difference_gradient_check() {
+        // Backprop vs central finite differences on a tiny MLP; rel err
+        // < 1e-3 on every parameter. The state is crafted so every
+        // hidden pre-activation sits far from the ReLU kink (two units
+        // pinned strictly negative ≈ -0.8, three strictly positive
+        // ≥ 0.5, perturbations move z by ≤ 9e-3): the loss is smooth
+        // around the test point AND the dead-unit masking is exercised
+        // (their weight gradients must be exactly 0 both ways).
+        let mut mlp = Mlp::new(tiny_spec(3));
+        let n = mlp.spec().n_params();
+        let mut st = vec![0.0f32; mlp.state().len()];
+        // W0 [3×5]: small positive weights; b0 pins units 0-1 dead
+        for k in 0..15 {
+            st[k] = 0.02 + 0.01 * (k % 7) as f32;
+        }
+        for (j, b) in [-1.0f32, -1.0, 0.5, 0.5, 0.5].into_iter().enumerate() {
+            st[15 + j] = b;
+        }
+        // W1 [5×2] mixed signs; b1 small
+        for k in 0..10 {
+            st[20 + k] = ((k % 3) as f32 - 1.0) * 0.3;
+        }
+        st[30] = 0.1;
+        st[31] = -0.1;
+        mlp.set_state(&st).unwrap();
+        let batch = 4;
+        // strictly positive inputs keep the z-margins computed above
+        let xs: Vec<f32> = (0..batch * 3).map(|k| 0.1 + 0.08 * (k % 10) as f32).collect();
+        let ys: Vec<f32> = (0..batch * 2).map(|k| (k % 2) as f32 * 0.5 - 0.25).collect();
+        let (grads, loss, _) = mlp.gradients(&xs, &ys, batch);
+        assert!(loss > 0.0);
+        // dead units contribute nothing: their W0/b0 grads are exactly 0
+        for j in [0usize, 1] {
+            for i in 0..3 {
+                assert_eq!(grads[i * 5 + j], 0.0, "dead unit {j} got a W grad");
+            }
+            assert_eq!(grads[15 + j], 0.0, "dead unit {j} got a b grad");
+        }
+        let h = 1e-2f32;
+        for i in 0..n {
+            let orig = st[i];
+            let wp = orig + h;
+            let wm = orig - h;
+            st[i] = wp;
+            mlp.set_state(&st).unwrap();
+            let (lp, _) = mlp.loss(&xs, &ys, batch);
+            st[i] = wm;
+            mlp.set_state(&st).unwrap();
+            let (lm, _) = mlp.loss(&xs, &ys, batch);
+            st[i] = orig;
+            let numeric = ((lp as f64) - (lm as f64)) / ((wp - wm) as f64);
+            let analytic = grads[i] as f64;
+            let tol = 1e-3 * analytic.abs().max(numeric.abs()).max(0.05);
+            assert!(
+                (numeric - analytic).abs() <= tol,
+                "param {i}: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+        mlp.set_state(&st).unwrap();
+    }
+
+    #[test]
+    fn adam_reduces_loss_on_a_fixed_batch() {
+        let mut mlp = Mlp::new(tiny_spec(5));
+        let batch = 4;
+        let xs: Vec<f32> = (0..batch * 3).map(|i| (i as f32 * 0.13).sin()).collect();
+        let ys: Vec<f32> = (0..batch * 2).map(|i| 0.1 + 0.05 * i as f32).collect();
+        let (first, _) = mlp.loss(&xs, &ys, batch);
+        for _ in 0..200 {
+            let (g, _, _) = mlp.gradients(&xs, &ys, batch);
+            mlp.adam_update(&g);
+        }
+        let (last, _) = mlp.loss(&xs, &ys, batch);
+        assert!(last < 0.1 * first, "loss {first} -> {last}");
+        assert_eq!(mlp.adam_step(), 200);
+    }
+
+    #[test]
+    fn state_roundtrip_restores_the_optimizer_exactly() {
+        // export mid-training, keep training, re-import: the continued
+        // trajectory must replay bit-for-bit (params AND Adam moments
+        // AND the step counter all live in the one flat vector).
+        let mut mlp = Mlp::new(tiny_spec(9));
+        let batch = 4;
+        let xs: Vec<f32> = (0..batch * 3).map(|i| (i as f32 * 0.31).cos()).collect();
+        let ys: Vec<f32> = (0..batch * 2).map(|i| 0.2 * i as f32).collect();
+        let step = |m: &mut Mlp| {
+            let (g, loss, _) = m.gradients(&xs, &ys, batch);
+            m.adam_update(&g);
+            loss
+        };
+        for _ in 0..5 {
+            step(&mut mlp);
+        }
+        let snapshot = mlp.state().to_vec();
+        assert_eq!(mlp.adam_step(), 5);
+        let after: Vec<f32> = (0..3).map(|_| step(&mut mlp)).collect();
+        mlp.set_state(&snapshot).unwrap();
+        assert_eq!(mlp.adam_step(), 5);
+        let replay: Vec<f32> = (0..3).map(|_| step(&mut mlp)).collect();
+        assert_eq!(after, replay);
+        assert_eq!(mlp.adam_step(), 8);
+        // wrong length is rejected
+        assert!(mlp.set_state(&snapshot[1..]).is_err());
+    }
+}

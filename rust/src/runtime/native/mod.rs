@@ -1,0 +1,268 @@
+//! Native pure-Rust estimator backend: a dependency-free tensor + MLP
+//! engine that stands in for the PJRT artifacts, so the full GOGH
+//! learning loop (P1 priors → deployment → monitoring → P2 refinement →
+//! online Adam steps) runs — and is CI-gated — with zero external
+//! artifacts.
+//!
+//! * [`tensor`] — row-major matmul kernels + ReLU forward/backward.
+//! * [`mlp`] — the network: manual backprop, MSE loss, Adam over the
+//!   same flat `params…, m…, v…, adam_step` state layout the PJRT path
+//!   threads through its `train` executable.
+//! * [`NativeBackend`] — the [`crate::runtime::Backend`] implementation:
+//!   seeded init from [`crate::util::Rng`], and the exact chunk /
+//!   cycle-pad batching discipline `runtime/estimator.rs` documents
+//!   (predict chunks + repeats rows into the fixed batch; train
+//!   cycle-pads so gradients stay unbiased, unlike zero-padding).
+
+pub mod mlp;
+pub mod tensor;
+
+pub use mlp::{Mlp, NativeSpec};
+
+use crate::Result;
+
+use super::backend::Backend;
+
+/// The native estimator handle: owns an [`Mlp`] plus the step/latency
+/// accounting the coordinator reads (mirrors
+/// [`crate::runtime::Estimator`]'s surface).
+pub struct NativeBackend {
+    mlp: Mlp,
+    steps_taken: u64,
+    /// cumulative wall time inside forward/backward for §Perf accounting.
+    pub exec_seconds: f64,
+}
+
+impl NativeBackend {
+    /// Build from a spec (deterministic: same spec ⇒ same model).
+    pub fn new(spec: NativeSpec) -> Self {
+        Self {
+            mlp: Mlp::new(spec),
+            steps_taken: 0,
+            exec_seconds: 0.0,
+        }
+    }
+
+    /// Seeded P1 (initial-estimation) model over Eq. 1 rows.
+    pub fn p1(seed: u64) -> Self {
+        Self::new(NativeSpec::p1(seed))
+    }
+
+    /// Seeded P2 (refinement) model over Eq. 3 rows.
+    pub fn p2(seed: u64) -> Self {
+        Self::new(NativeSpec::p2(seed))
+    }
+
+    /// The model spec (shapes, batches, seed).
+    pub fn spec(&self) -> &NativeSpec {
+        self.mlp.spec()
+    }
+
+    /// The flat `params…, m…, v…, adam_step` state (tests + checkpoints).
+    pub fn state(&self) -> &[f32] {
+        self.mlp.state()
+    }
+
+    /// Restore an exported flat state (length-checked).
+    pub fn set_state(&mut self, state: &[f32]) -> Result<()> {
+        self.mlp.set_state(state)
+    }
+
+    /// Cycle-pad `rows` into one flat `[batch × dim]` buffer — the same
+    /// repetition rule as `Estimator::batch_literal`.
+    fn batch_flat(rows: &[&[f32]], batch: usize, dim: usize) -> Vec<f32> {
+        debug_assert!(!rows.is_empty());
+        let mut flat = Vec::with_capacity(batch * dim);
+        for i in 0..batch {
+            let r = rows[i % rows.len()]; // cycle-pad
+            debug_assert_eq!(r.len(), dim);
+            flat.extend_from_slice(r);
+        }
+        flat
+    }
+}
+
+impl Backend for NativeBackend {
+    fn key(&self) -> &str {
+        &self.mlp.spec().key
+    }
+
+    fn input_dim(&self) -> usize {
+        self.mlp.spec().input_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.mlp.spec().out_dim
+    }
+
+    fn train_batch(&self) -> usize {
+        self.mlp.spec().train_batch
+    }
+
+    fn pred_batch(&self) -> usize {
+        self.mlp.spec().pred_batch
+    }
+
+    fn state_dim(&self) -> usize {
+        self.mlp.spec().state_dim()
+    }
+
+    fn steps_taken(&self) -> u64 {
+        self.steps_taken
+    }
+
+    fn predict(&mut self, rows: &[Vec<f32>]) -> Result<Vec<[f32; 2]>> {
+        let spec = self.mlp.spec();
+        anyhow::ensure!(spec.out_dim == 2, "out_dim != 2");
+        if rows.is_empty() {
+            return Ok(vec![]);
+        }
+        let dim = spec.input_dim;
+        anyhow::ensure!(
+            rows.iter().all(|r| r.len() == dim),
+            "predict row width != input_dim {dim}"
+        );
+        let b = spec.pred_batch;
+        let mut out = Vec::with_capacity(rows.len());
+        let t0 = std::time::Instant::now();
+        for chunk in rows.chunks(b) {
+            let refs: Vec<&[f32]> = chunk.iter().map(|r| r.as_slice()).collect();
+            let flat = Self::batch_flat(&refs, b, dim);
+            let y = self.mlp.forward(&flat, b);
+            for i in 0..chunk.len() {
+                out.push([y[2 * i], y[2 * i + 1]]);
+            }
+        }
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn train_step(&mut self, xs: &[Vec<f32>], ys: &[[f32; 2]]) -> Result<(f32, f32)> {
+        let spec = self.mlp.spec();
+        anyhow::ensure!(!xs.is_empty() && xs.len() == ys.len(), "bad batch");
+        let dim = spec.input_dim;
+        anyhow::ensure!(
+            xs.iter().all(|r| r.len() == dim),
+            "train row width != input_dim {dim}"
+        );
+        let b = spec.train_batch;
+        let xrefs: Vec<&[f32]> = xs.iter().map(|r| r.as_slice()).collect();
+        let x = Self::batch_flat(&xrefs, b, dim);
+        let yflat: Vec<Vec<f32>> = ys.iter().map(|y| y.to_vec()).collect();
+        let yrefs: Vec<&[f32]> = yflat.iter().map(|r| r.as_slice()).collect();
+        let y = Self::batch_flat(&yrefs, b, spec.out_dim);
+
+        let t0 = std::time::Instant::now();
+        let (grads, loss, mae) = self.mlp.gradients(&x, &y, b);
+        self.mlp.adam_update(&grads);
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.steps_taken += 1;
+        Ok((loss, mae))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.mlp = Mlp::new(self.mlp.spec().clone());
+        self.steps_taken = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeBackend {
+        NativeBackend::new(NativeSpec {
+            key: "tiny".to_string(),
+            input_dim: 4,
+            hidden: vec![6],
+            out_dim: 2,
+            train_batch: 8,
+            pred_batch: 4,
+            lr: 1e-2,
+            seed: 21,
+        })
+    }
+
+    fn row(i: usize) -> Vec<f32> {
+        (0..4).map(|j| ((i * 4 + j) as f32 * 0.37).sin()).collect()
+    }
+
+    #[test]
+    fn predict_chunking_and_cycle_padding_match_per_row_results() {
+        // 5 rows over pred_batch 4: the final chunk is cycle-padded.
+        // Padding must be invisible — every row's prediction equals the
+        // prediction of that row alone (bit-for-bit: row-major matmul
+        // accumulates per row, independent of its batch neighbours).
+        let mut be = tiny();
+        let rows: Vec<Vec<f32>> = (0..5).map(row).collect();
+        let batched = be.predict(&rows).unwrap();
+        assert_eq!(batched.len(), 5);
+        for (i, r) in rows.iter().enumerate() {
+            let solo = be.predict(std::slice::from_ref(r)).unwrap();
+            assert_eq!(batched[i], solo[0], "row {i} changed under padding");
+        }
+        // identical rows → identical predictions (estimator contract)
+        let same_rows = vec![row(0); 3];
+        let same = be.predict(&same_rows).unwrap();
+        assert_eq!(same[0], same[1]);
+        assert!(same[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn train_cycle_padding_equals_explicit_padding() {
+        // train_step on 3 rows (cycle-padded internally to train_batch
+        // 8) must leave the model in exactly the state of training on
+        // the explicitly repeated batch [r0 r1 r2 r0 r1 r2 r0 r1] — the
+        // documented PJRT padding semantics (repeating real samples
+        // keeps gradients unbiased; zero-padding would not).
+        let mut short = tiny();
+        let mut padded = tiny();
+        assert_eq!(short.state(), padded.state());
+        let xs: Vec<Vec<f32>> = (0..3).map(row).collect();
+        let ys: Vec<[f32; 2]> = (0..3).map(|i| [0.1 * i as f32, 0.5]).collect();
+        let xs_pad: Vec<Vec<f32>> = (0..8).map(|i| xs[i % 3].clone()).collect();
+        let ys_pad: Vec<[f32; 2]> = (0..8).map(|i| ys[i % 3]).collect();
+        let (l1, m1) = short.train_step(&xs, &ys).unwrap();
+        let (l2, m2) = padded.train_step(&xs_pad, &ys_pad).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(m1, m2);
+        assert_eq!(short.state(), padded.state());
+    }
+
+    #[test]
+    fn reset_restores_initial_predictions() {
+        let mut be = tiny();
+        let rows = vec![row(1); 2];
+        let before = be.predict(&rows).unwrap();
+        let xs = vec![row(1); 4];
+        let ys = vec![[1.0f32, 1.0f32]; 4];
+        be.train_step(&xs, &ys).unwrap();
+        assert_eq!(be.steps_taken(), 1);
+        let trained = be.predict(&rows).unwrap();
+        assert_ne!(before[0], trained[0]);
+        be.reset().unwrap();
+        assert_eq!(be.steps_taken(), 0);
+        let after = be.predict(&rows).unwrap();
+        assert_eq!(before[0], after[0]);
+    }
+
+    #[test]
+    fn p1_p2_shapes_follow_the_encoding_layout() {
+        let p1 = NativeBackend::p1(3);
+        assert_eq!(p1.input_dim(), crate::workload::encoding::P1_DIM);
+        let p2 = NativeBackend::p2(3);
+        assert_eq!(p2.input_dim(), crate::workload::encoding::P2_PADDED);
+        assert_eq!(p2.out_dim(), 2);
+        assert_eq!(p2.state_dim(), p2.spec().state_dim());
+        assert_eq!(p2.state().len(), p2.state_dim());
+    }
+
+    #[test]
+    fn empty_and_malformed_batches() {
+        let mut be = tiny();
+        assert!(be.predict(&[]).unwrap().is_empty());
+        assert!(be.train_step(&[], &[]).is_err());
+        assert!(be.predict(&[vec![0.0; 3]]).is_err()); // wrong width
+    }
+}

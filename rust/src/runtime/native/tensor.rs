@@ -1,0 +1,171 @@
+//! Row-major f32 tensor kernels for the native backend: the three
+//! matmul variants an MLP's forward + backward passes need, written as
+//! plain loops over flat slices (no allocation inside the kernels, no
+//! SIMD intrinsics — the models are a few thousand parameters, so the
+//! autovectorized scalar loops are already far off the hot path).
+//!
+//! Layout convention (shared with [`super::mlp`]): a matrix of shape
+//! `[rows, cols]` is a flat slice of `rows * cols` f32 in row-major
+//! order, i.e. element `(r, c)` lives at `r * cols + c`.
+
+/// `c[m×n] = a[m×k] · b[k×n]`. `c` is overwritten.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for r in 0..m {
+        for p in 0..k {
+            let av = a[r * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[r * n..(r + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `c[k×n] = aᵀ · b` with `a[m×k]`, `b[m×n]` — the weight-gradient
+/// contraction `∇W = hᵀ · δ` of backprop. `c` is overwritten.
+pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    c.fill(0.0);
+    for r in 0..m {
+        let brow = &b[r * n..(r + 1) * n];
+        for p in 0..k {
+            let av = a[r * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `c[m×k] = a · bᵀ` with `a[m×n]`, `b[k×n]` — the input-gradient
+/// contraction `δ_prev = δ · Wᵀ` of backprop (W stored `[k_in × n_out]`,
+/// so `b = W` viewed as `[k×n]` with k = fan-in). `c` is overwritten.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    for r in 0..m {
+        let arow = &a[r * n..(r + 1) * n];
+        for p in 0..k {
+            let brow = &b[p * n..(p + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += arow[j] * brow[j];
+            }
+            c[r * k + p] = acc;
+        }
+    }
+}
+
+/// Add row-vector `bias[n]` to every row of `x[m×n]` in place.
+pub fn add_bias(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    debug_assert_eq!(bias.len(), n);
+    for r in 0..m {
+        let row = &mut x[r * n..(r + 1) * n];
+        for j in 0..n {
+            row[j] += bias[j];
+        }
+    }
+}
+
+/// ReLU in place.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Mask `d` by the ReLU derivative of the matching pre-activation `z`
+/// (`d[i] = 0` wherever `z[i] <= 0`) in place — the backward half of
+/// [`relu`]. Uses the post-activation convention `z > 0.0` so the
+/// subgradient at exactly 0 is 0, matching what XLA's
+/// `select(gt(z, 0), d, 0)` lowering produces.
+pub fn relu_backward(d: &mut [f32], z: &[f32]) {
+    debug_assert_eq!(d.len(), z.len());
+    for (dv, &zv) in d.iter_mut().zip(z) {
+        if zv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // [1 0 2] (1×3) · [[1 1],[2 2],[3 3]] (3×2) = [7 7]
+        let a = [1.0, 0.0, 2.0];
+        let b = [1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        let mut c = [0.0f32; 2];
+        matmul(&a, &b, 1, 3, 2, &mut c);
+        assert_eq!(c, [7.0, 7.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_explicit_transpose() {
+        // random-ish fixed matrices, checked against matmul on the
+        // explicitly transposed operand
+        let a = [0.5, -1.0, 2.0, 1.5, 0.25, -0.75]; // 2×3
+        let b = [1.0, 2.0, -1.0, 0.5, 3.0, -2.0]; // 2×3
+        // aᵀ·b : (3×2)·(2×3) = 3×3
+        let mut c1 = [0.0f32; 9];
+        matmul_at_b(&a, &b, 2, 3, 3, &mut c1);
+        let at = [0.5, 1.5, -1.0, 0.25, 2.0, -0.75]; // 3×2
+        let mut c2 = [0.0f32; 9];
+        matmul(&at, &b, 3, 2, 3, &mut c2);
+        assert_eq!(c1, c2);
+        // a·bᵀ : (2×3)·(3×2) = 2×2
+        let mut c3 = [0.0f32; 4];
+        matmul_a_bt(&a, &b, 2, 3, 2, &mut c3);
+        let bt = [1.0, 0.5, 2.0, 3.0, -1.0, -2.0]; // 3×2
+        let mut c4 = [0.0f32; 4];
+        matmul(&a, &bt, 2, 3, 2, &mut c4);
+        assert_eq!(c3, c4);
+    }
+
+    #[test]
+    fn bias_and_relu() {
+        let mut x = [1.0, -2.0, 3.0, -4.0];
+        add_bias(&mut x, &[1.0, 1.0], 2, 2);
+        assert_eq!(x, [2.0, -1.0, 4.0, -3.0]);
+        relu(&mut x);
+        assert_eq!(x, [2.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn relu_backward_masks_nonpositive() {
+        let z = [1.0, 0.0, -3.0, 2.0];
+        let mut d = [5.0, 5.0, 5.0, 5.0];
+        relu_backward(&mut d, &z);
+        assert_eq!(d, [5.0, 0.0, 0.0, 5.0]);
+    }
+}
