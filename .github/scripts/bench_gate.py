@@ -1,16 +1,100 @@
 #!/usr/bin/env python3
 """Bench regression gate: compare a fresh BENCH_<name>.json against the
-committed baseline and fail when mean decision latency regresses more
-than the tolerance.
+committed baseline and fail on regressions beyond the tolerance.
 
 Usage: bench_gate.py <measured.json> <baseline.json> [tolerance]
 
+Gated fields:
+  * mean_decision_ms  — required in both files; fail above
+                        baseline * (1 + tolerance).
+  * explored_nodes    — gated the same way when the baseline carries a
+                        nonzero value (solver-work regression).
+  * peak_rss_bytes    — gated when both sides carry a nonzero value
+                        (0 means "unknown platform", never "tiny").
+
 The tolerance is a fraction on top of the baseline (default 0.25, i.e.
 fail above baseline * 1.25). Stdlib only — runs anywhere python3 does.
+Importable for tests: `gate(measured, baseline, tolerance)` returns the
+exit code (0 ok, 1 regression, 2 malformed input).
 """
 
 import json
 import sys
+
+
+def _check(name, measured, baseline, tolerance, required):
+    """Gate one field. Returns 0 (ok/skipped), 1 (regression), 2 (malformed)."""
+    if name not in measured:
+        if required:
+            print(f"malformed measurement: missing required field {name!r}")
+            return 2
+        # the measured record is always freshly emitted by HEAD: a gated
+        # field vanishing from it while the baseline still carries one
+        # means the gate just got silently disabled — fail loudly
+        try:
+            baseline_gates = float(baseline.get(name, 0.0)) > 0.0
+        except (TypeError, ValueError):
+            baseline_gates = False
+        if baseline_gates:
+            print(f"malformed measurement: gated field {name!r} vanished from the record")
+            return 2
+        print(f"{name}: absent from measurement and baseline — skipped")
+        return 0
+    if name not in baseline:
+        if required:
+            print(f"malformed baseline: missing required field {name!r}")
+            return 2
+        print(f"{name}: no baseline value — skipped")
+        return 0
+    try:
+        meas = float(measured[name])
+        base = float(baseline[name])
+    except (TypeError, ValueError):
+        print(f"malformed input: non-numeric {name!r}")
+        return 2
+    if base <= 0.0:
+        if required:
+            print(f"malformed baseline: non-positive {name!r} ({base}) disables the gate")
+            return 2
+        print(f"{name}: no usable baseline ({base}) — skipped")
+        return 0
+    if name == "peak_rss_bytes" and meas == 0.0:
+        print(f"{name}: unmeasurable on this platform (measured 0) — skipped")
+        return 0
+    limit = base * (1.0 + tolerance)
+    verdict = "FAIL" if meas > limit else "ok"
+    print(f"{name}: measured {meas:.3f}, baseline {base:.3f}, limit {limit:.3f} -> {verdict}")
+    return 1 if meas > limit else 0
+
+
+def gate(measured, baseline, tolerance=0.25):
+    """Gate a measured record dict against a baseline dict."""
+    if measured.get("bench") != baseline.get("bench"):
+        print(
+            f"bench mismatch: measured {measured.get('bench')!r} "
+            f"vs baseline {baseline.get('bench')!r}"
+        )
+        return 2
+    if measured.get("jobs") != baseline.get("jobs"):
+        print(
+            f"warning: trace sizes differ (measured {measured.get('jobs')} "
+            f"vs baseline {baseline.get('jobs')}) — compare may be apples/oranges"
+        )
+    worst = 0
+    for name, required in [
+        ("mean_decision_ms", True),
+        ("explored_nodes", False),
+        ("peak_rss_bytes", False),
+    ]:
+        rc = _check(name, measured, baseline, tolerance, required)
+        if rc == 2:
+            return 2
+        worst = max(worst, rc)
+    if worst:
+        print(f"FAIL: regression >{tolerance:.0%} vs the committed baseline")
+    else:
+        print("OK: within the regression budget")
+    return worst
 
 
 def main() -> int:
@@ -22,35 +106,7 @@ def main() -> int:
     with open(sys.argv[2]) as f:
         baseline = json.load(f)
     tolerance = float(sys.argv[3]) if len(sys.argv) > 3 else 0.25
-
-    if measured.get("bench") != baseline.get("bench"):
-        print(
-            f"bench mismatch: measured {measured.get('bench')!r} "
-            f"vs baseline {baseline.get('bench')!r}"
-        )
-        return 2
-    if measured.get("jobs") != baseline.get("jobs"):
-        print(
-            f"warning: trace sizes differ (measured {measured.get('jobs')} "
-            f"vs baseline {baseline.get('jobs')}) — latency compare may be apples/oranges"
-        )
-
-    mean = float(measured["mean_decision_ms"])
-    base = float(baseline["mean_decision_ms"])
-    limit = base * (1.0 + tolerance)
-    print(
-        f"mean decision latency: measured {mean:.3f} ms, baseline {base:.3f} ms, "
-        f"limit {limit:.3f} ms (+{tolerance:.0%})"
-    )
-    print(
-        f"context: explored_nodes={measured.get('explored_nodes')}, "
-        f"peak_rss_bytes={measured.get('peak_rss_bytes')}"
-    )
-    if mean > limit:
-        print(f"FAIL: mean decision latency regressed >{tolerance:.0%} vs the committed baseline")
-        return 1
-    print("OK: within the regression budget")
-    return 0
+    return gate(measured, baseline, tolerance)
 
 
 if __name__ == "__main__":

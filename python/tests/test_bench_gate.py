@@ -1,0 +1,124 @@
+"""Unit tests for the CI bench regression gate (.github/scripts/bench_gate.py).
+
+Stdlib + pytest only — these run in the advisory python job and keep the
+gate script itself from rotting (it fails builds, so it must be right).
+"""
+
+import importlib.util
+import json
+import pathlib
+import subprocess
+import sys
+
+SCRIPT = pathlib.Path(__file__).resolve().parents[2] / ".github" / "scripts" / "bench_gate.py"
+
+spec = importlib.util.spec_from_file_location("bench_gate", SCRIPT)
+bench_gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_gate)
+
+
+def record(**overrides):
+    base = {
+        "bench": "e2e_scheduling",
+        "jobs": 300,
+        "mean_decision_ms": 10.0,
+        "explored_nodes": 1000,
+        "peak_rss_bytes": 100_000_000,
+    }
+    base.update(overrides)
+    return base
+
+
+def test_within_budget_passes():
+    assert bench_gate.gate(record(), record(), 0.25) == 0
+
+
+def test_improvement_passes():
+    measured = record(mean_decision_ms=4.0, explored_nodes=500, peak_rss_bytes=50_000_000)
+    assert bench_gate.gate(measured, record(), 0.25) == 0
+
+
+def test_latency_regression_fails():
+    assert bench_gate.gate(record(mean_decision_ms=13.0), record(), 0.25) == 1
+
+
+def test_node_regression_fails():
+    assert bench_gate.gate(record(explored_nodes=2000), record(), 0.25) == 1
+
+
+def test_rss_regression_fails():
+    assert bench_gate.gate(record(peak_rss_bytes=300_000_000), record(), 0.25) == 1
+
+
+def test_rss_unmeasurable_is_skipped():
+    # peak_rss_bytes == 0 means "no procfs", never "tiny"
+    assert bench_gate.gate(record(peak_rss_bytes=0), record(), 0.25) == 0
+
+
+def test_missing_required_field_is_malformed():
+    measured = record()
+    del measured["mean_decision_ms"]
+    assert bench_gate.gate(measured, record(), 0.25) == 2
+
+
+def test_broken_baseline_cannot_silently_disable_the_gate():
+    # a baseline typo or a zeroed value must fail loudly, never skip
+    baseline = record()
+    del baseline["mean_decision_ms"]
+    assert bench_gate.gate(record(), baseline, 0.25) == 2
+    assert bench_gate.gate(record(), record(mean_decision_ms=0.0), 0.25) == 2
+    # optional fields with broken baselines still just skip
+    assert bench_gate.gate(record(), record(explored_nodes=0), 0.25) == 0
+
+
+def test_pre_extension_baselines_skip_the_new_fields():
+    # baselines predating the extended gate carry only the latency field
+    old_baseline = {"bench": "e2e_scheduling", "jobs": 300, "mean_decision_ms": 10.0}
+    assert bench_gate.gate(record(), old_baseline, 0.25) == 0
+
+
+def test_gated_field_vanishing_from_the_record_is_malformed():
+    # the measured record is freshly emitted by HEAD: a gated field
+    # disappearing while the baseline still carries one means a refactor
+    # silently disabled that gate — must fail, not skip
+    measured = record()
+    del measured["explored_nodes"]
+    assert bench_gate.gate(measured, record(), 0.25) == 2
+    # ...but if the baseline never gated it either, skipping is fine
+    old_baseline = {"bench": "e2e_scheduling", "jobs": 300, "mean_decision_ms": 10.0}
+    assert bench_gate.gate(measured, old_baseline, 0.25) == 0
+
+
+def test_bench_name_mismatch_is_malformed():
+    assert bench_gate.gate(record(bench="other"), record(), 0.25) == 2
+
+
+def test_non_numeric_field_is_malformed():
+    assert bench_gate.gate(record(mean_decision_ms="fast"), record(), 0.25) == 2
+
+
+def test_exact_limit_is_not_a_regression():
+    assert bench_gate.gate(record(mean_decision_ms=12.5), record(), 0.25) == 0
+
+
+def test_cli_end_to_end(tmp_path):
+    measured = tmp_path / "measured.json"
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(record()))
+
+    measured.write_text(json.dumps(record(mean_decision_ms=9.0)))
+    ok = subprocess.run(
+        [sys.executable, str(SCRIPT), str(measured), str(baseline), "0.25"],
+        capture_output=True,
+        text=True,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+    measured.write_text(json.dumps(record(mean_decision_ms=99.0)))
+    bad = subprocess.run(
+        [sys.executable, str(SCRIPT), str(measured), str(baseline), "0.25"],
+        capture_output=True,
+        text=True,
+    )
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "FAIL" in bad.stdout

@@ -30,7 +30,68 @@ fn main() -> gogh::Result<()> {
         Ok(engine) => comparison(&engine)?,
         Err(err) => println!("# skipping the estimator-backed comparison (no PJRT engine: {err})"),
     }
-    scale_bench()
+    scale_bench()?;
+    mixed_bench()
+}
+
+/// Mixed train+infer decision path on the `mixed` preset (estimator-free
+/// GOGH, like the scale bench — this leg gates the latency-ILP and
+/// autoscaler cost, not the estimators). GOGH_MIXED_JOBS=N truncates;
+/// GOGH_BENCH_JSON_MIXED=<path> emits the gated BENCH record.
+fn mixed_bench() -> gogh::Result<()> {
+    let mut cfg = ExperimentConfig::preset("mixed")?;
+    if let Some(n) = std::env::var("GOGH_MIXED_JOBS").ok().and_then(|s| s.parse().ok()) {
+        cfg.trace.n_jobs = n;
+    }
+    println!(
+        "\n# Mixed: train+infer decision path, {} jobs ({}% inference, estimator-free GOGH)",
+        cfg.trace.n_jobs,
+        (100.0 * cfg.trace.inference_fraction) as u32
+    );
+    let oracle = cfg.build_oracle()?;
+    let trace = Trace::generate(&cfg.trace, &oracle);
+    let mut driver = SimDriver::new(
+        ClusterSpec::mix(&cfg.cluster.accel_mix),
+        oracle.clone(),
+        trace,
+        cfg.noise_sigma,
+        cfg.monitor_interval_s,
+        cfg.seed,
+    )?
+    .with_migration_cost(cfg.migration_cost_s);
+    let mut sched = GoghScheduler::without_engine(&oracle, GoghOptions::from_config(&cfg))?;
+    let t0 = Instant::now();
+    let report = driver.run(&mut sched)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = sched.solver_stats();
+    println!(
+        "  {:.3} ms/event over {} events; completed {}/{}; inference {}/{} met SLO \
+         (attainment {:.3}, {} scale-ups, {} scale-downs); wall {:.0} s",
+        report.mean_decision_ms,
+        report.events,
+        report.jobs_completed,
+        report.jobs_total,
+        report.inference_slo_met,
+        report.inference_total,
+        report.inference_attainment,
+        report.scale_ups,
+        report.scale_downs,
+        wall,
+    );
+    assert!(report.jobs_completed > 0, "mixed leg completed nothing");
+    assert!(report.inference_total > 0, "mixed leg generated no inference jobs");
+    if let Ok(path) = std::env::var("GOGH_BENCH_JSON_MIXED") {
+        let record = gogh::metrics::BenchRecord {
+            bench: "e2e_mixed".to_string(),
+            jobs: report.jobs_total,
+            mean_decision_ms: report.mean_decision_ms,
+            explored_nodes: stats.full_nodes + stats.incremental_nodes,
+            peak_rss_bytes: gogh::metrics::peak_rss_bytes(),
+        };
+        record.write(std::path::Path::new(&path))?;
+        println!("bench record written to {path}: {}", record.to_json());
+    }
+    Ok(())
 }
 
 /// Shard-parallel decision path on the `large` preset: identical trace

@@ -120,6 +120,7 @@ fn main() -> gogh::Result<()> {
                 min_throughput: 0.0,
                 distributability: 2,
                 work: 100.0,
+                inference: None,
             };
             j.min_throughput = 0.35 * oracle.solo(&j, AccelType::P100);
             j
@@ -142,6 +143,7 @@ fn main() -> gogh::Result<()> {
         max_pairs_per_job: 3,
         slack_penalty: Some(2000.0),
         throughput_bonus: 300.0,
+        now_s: 0.0,
     };
     let warm_cfg = BnbConfig::default();
     let cold_cfg = BnbConfig {

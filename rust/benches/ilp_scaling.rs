@@ -33,6 +33,7 @@ fn mk_jobs(n: u32, oracle: &ThroughputOracle) -> Vec<JobSpec> {
                 min_throughput: 0.0,
                 distributability: 2,
                 work: 100.0,
+                inference: None,
             };
             j.min_throughput = 0.35 * oracle.solo(&j, AccelType::P100);
             j
@@ -70,6 +71,7 @@ fn main() {
                 max_pairs_per_job: 3,
                 slack_penalty: Some(2000.0),
                 throughput_bonus: 300.0,
+                now_s: 0.0,
             };
             let warm_cfg = BnbConfig {
                 max_nodes: 8_000,

@@ -26,7 +26,11 @@ impl GreedyScheduler {
     }
 
     /// Fastest-free-GPU-first packing of every active job (full-rebuild
-    /// policy; the driver applies it as a delta).
+    /// policy; the driver applies it as a delta). After every job has an
+    /// instance, leftover capacity goes to inference jobs as extra
+    /// replicas (fastest-first, round-robin, up to each job's replica
+    /// cap) — throughput-maximizing serving, as energy-oblivious as the
+    /// rest of this baseline.
     fn rebuild(&self, cluster: &Cluster) -> Placement {
         let mut p = Placement::new();
         // fastest in-service instances first (stable order for
@@ -55,6 +59,32 @@ impl GreedyScheduler {
                     _ => unreachable!(),
                 };
                 p.assign(a, Combo::pair(existing, j));
+            }
+        }
+        // inference replica pass over whatever capacity is left
+        let serving: Vec<(JobId, u32)> = {
+            let mut v: Vec<_> = cluster
+                .jobs()
+                .filter(|s| s.is_inference())
+                .map(|s| (s.id, s.distributability))
+                .collect();
+            v.sort(); // arrival order
+            v
+        };
+        loop {
+            let mut granted = false;
+            for &(j, cap) in &serving {
+                if i >= free.len() {
+                    break;
+                }
+                if (p.accels_of(j).len() as u32) < cap && p.is_placed(j) {
+                    p.assign(free[i], Combo::Solo(j));
+                    i += 1;
+                    granted = true;
+                }
+            }
+            if !granted || i >= free.len() {
+                break;
             }
         }
         p
@@ -147,6 +177,7 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work: 10.0,
+            inference: None,
         }
     }
 
@@ -172,6 +203,50 @@ mod tests {
         for i in 0..3 {
             assert!(p.is_placed(JobId(i)));
         }
+    }
+
+    #[test]
+    fn leftover_capacity_becomes_inference_replicas() {
+        // 1 training + 2 serving jobs on 6 instances: after everyone has
+        // an instance, the 3 spares go to the serving jobs round-robin,
+        // capped by each job's replica cap (2 and 3 → caps bind at 2+3,
+        // but only 3 spares exist → 2 and 2... fastest-first order).
+        let mut c = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 4), (AccelType::K80, 2)]));
+        c.add_job(job(0)); // training, never replicated
+        for (id, cap) in [(1u32, 2u32), (2, 3)] {
+            let mut s = job(id);
+            s.distributability = cap;
+            s.inference = Some(crate::workload::InferenceSpec {
+                base_rate: 5.0,
+                diurnal_amplitude: 0.0,
+                diurnal_phase_s: 0.0,
+                latency_slo_s: 0.5,
+            });
+            c.add_job(s);
+        }
+        let p = GreedyScheduler::new().rebuild(&c);
+        assert_eq!(p.accels_of(JobId(0)).len(), 1, "training job must stay solo");
+        let r1 = p.accels_of(JobId(1)).len();
+        let r2 = p.accels_of(JobId(2)).len();
+        // every instance used, caps respected, round-robin fairness
+        assert_eq!(r1 + r2, 5, "spare capacity left idle: {r1}+{r2}");
+        assert!(r1 as u32 <= 2 && r2 as u32 <= 3);
+        assert_eq!(r1, 2);
+        assert_eq!(r2, 3);
+        // replica caps bind even with capacity to spare: 1 serving job
+        // with cap 2 on 6 instances gets exactly 2 replicas
+        let mut c = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 6)]));
+        let mut s = job(0);
+        s.distributability = 2;
+        s.inference = Some(crate::workload::InferenceSpec {
+            base_rate: 5.0,
+            diurnal_amplitude: 0.0,
+            diurnal_phase_s: 0.0,
+            latency_slo_s: 0.5,
+        });
+        c.add_job(s);
+        let p = GreedyScheduler::new().rebuild(&c);
+        assert_eq!(p.accels_of(JobId(0)).len(), 2);
     }
 
     #[test]

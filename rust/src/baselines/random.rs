@@ -23,6 +23,9 @@ impl RandomScheduler {
 
     /// Fresh random placement of every active job (full-rebuild policy;
     /// the driver applies it as a delta against the current placement).
+    /// Inference jobs receive a uniformly random replica count up to
+    /// their cap — rate- and latency-oblivious, like everything else
+    /// this baseline does (training-only traces draw exactly as before).
     fn rebuild(&mut self, cluster: &Cluster) -> Placement {
         let mut p = Placement::new();
         let mut accels = cluster.available_accels();
@@ -35,6 +38,18 @@ impl RandomScheduler {
             if let Some(a) = free.pop() {
                 p.assign(a, Combo::Solo(j));
                 solos.push(a);
+                let replica_cap = cluster
+                    .job(j)
+                    .filter(|s| s.is_inference())
+                    .map_or(1, |s| s.distributability.max(1));
+                if replica_cap > 1 {
+                    let extra = self.rng.range_u32_inclusive(0, replica_cap - 1);
+                    for _ in 0..extra {
+                        let Some(a) = free.pop() else { break };
+                        p.assign(a, Combo::Solo(j));
+                        solos.push(a);
+                    }
+                }
             } else if !solos.is_empty() {
                 // out of free instances: pair with a random solo host
                 let idx = (self.rng.next_u32() as usize) % solos.len();
@@ -84,6 +99,7 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work: 10.0,
+            inference: None,
         }
     }
 

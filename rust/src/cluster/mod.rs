@@ -280,7 +280,11 @@ pub struct DeltaOutcome {
     /// instance-level placement moves (same metric as [`Placement::diff_count`])
     pub moves: usize,
     /// jobs that were running before AND after but on a different accel
-    /// set — these pay the migration/restart penalty.
+    /// set — these pay the migration/restart penalty. Exception: an
+    /// *inference* job that purely gained or purely lost replicas (one
+    /// accel set contains the other) is NOT a migration — its surviving
+    /// replicas never stop serving, so the autoscaler's grow/shrink
+    /// actions must not stall the whole job.
     pub migrated_jobs: Vec<JobId>,
 }
 
@@ -412,26 +416,33 @@ impl Cluster {
                 accels.len()
             );
         }
-        // outcome: moves + which running jobs changed instances
+        // outcome: moves + which running jobs changed instances.
+        // Inference jobs scale replicas up/down in place: a pure grow or
+        // pure shrink (one accel set containing the other) leaves every
+        // surviving replica untouched and is not a restart.
         let moves = self.placement.diff_count(&next);
         let mut migrated: Vec<JobId> = self
             .jobs
-            .keys()
-            .filter(|j| {
+            .iter()
+            .filter(|(j, spec)| {
                 let before = self.placement.by_job.get(j);
                 let after = next.by_job.get(j);
                 match (before, after) {
                     (Some(b), Some(a)) => {
-                        let mut b = b.clone();
-                        let mut a = a.clone();
-                        b.sort();
-                        a.sort();
-                        b != a
+                        let b: BTreeSet<AccelId> = b.iter().copied().collect();
+                        let a: BTreeSet<AccelId> = a.iter().copied().collect();
+                        if b == a {
+                            false
+                        } else if spec.is_inference() {
+                            !(b.is_subset(&a) || a.is_subset(&b))
+                        } else {
+                            true
+                        }
                     }
                     _ => false,
                 }
             })
-            .copied()
+            .map(|(j, _)| *j)
             .collect();
         migrated.sort();
         self.placement = next;
@@ -532,6 +543,7 @@ mod tests {
             min_throughput: 0.1,
             distributability: 2,
             work: 100.0,
+            inference: None,
         }
     }
 
@@ -723,6 +735,61 @@ mod tests {
             });
         }
         assert!(c.apply_delta(&d).is_err());
+    }
+
+    #[test]
+    fn replica_grow_and_shrink_are_not_migrations() {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        let mut serving = job(0);
+        serving.distributability = 3;
+        serving.inference = Some(crate::workload::InferenceSpec {
+            base_rate: 5.0,
+            diurnal_amplitude: 0.0,
+            diurnal_phase_s: 0.0,
+            latency_slo_s: 0.5,
+        });
+        c.add_job(serving);
+        let a = [c.spec.accels[0], c.spec.accels[1], c.spec.accels[2]];
+        c.placement.assign(a[0], Combo::Solo(JobId(0)));
+        // scale-up (pure grow): surviving replica keeps serving → free
+        let grow = PlacementDelta {
+            ops: vec![PlacementOp::Assign {
+                accel: a[1],
+                combo: Combo::Solo(JobId(0)),
+            }],
+        };
+        let out = c.apply_delta(&grow).unwrap();
+        assert!(out.migrated_jobs.is_empty(), "scale-up billed as migration");
+        // scale-down (pure shrink) → free
+        let shrink = PlacementDelta {
+            ops: vec![PlacementOp::Evict { accel: a[0] }],
+        };
+        let out = c.apply_delta(&shrink).unwrap();
+        assert!(out.migrated_jobs.is_empty(), "scale-down billed as migration");
+        // an actual replica MOVE still restarts the job
+        let mv = PlacementDelta {
+            ops: vec![PlacementOp::Migrate {
+                job: JobId(0),
+                from: a[1],
+                to: a[2],
+            }],
+        };
+        let out = c.apply_delta(&mv).unwrap();
+        assert_eq!(out.migrated_jobs, vec![JobId(0)]);
+        // training jobs keep the strict PR-2 semantics: any set change
+        // (including a pure grow) is a restart
+        let mut t = job(1);
+        t.distributability = 2;
+        c.add_job(t);
+        c.placement.assign(a[0], Combo::Solo(JobId(1)));
+        let grow = PlacementDelta {
+            ops: vec![PlacementOp::Assign {
+                accel: a[1],
+                combo: Combo::Solo(JobId(1)),
+            }],
+        };
+        let out = c.apply_delta(&grow).unwrap();
+        assert_eq!(out.migrated_jobs, vec![JobId(1)]);
     }
 
     #[test]

@@ -89,6 +89,7 @@ mod tests {
             min_throughput: 0.1,
             distributability: 1,
             work: 10.0,
+            inference: None,
         });
         c.add_job(JobSpec {
             id: JobId(2),
@@ -98,6 +99,7 @@ mod tests {
             min_throughput: 0.1,
             distributability: 1,
             work: 10.0,
+            inference: None,
         });
         let aid = c.spec.accels[2]; // a v100
         c.placement.assign(aid, Combo::pair(JobId(1), JobId(2)));

@@ -282,7 +282,9 @@ impl ExperimentConfig {
         match name {
             "default" => Ok(Self::default()),
             "large" => Ok(Self::large_scale()),
-            other => anyhow::bail!("unknown preset {other:?} (want default|large)"),
+            "mixed" => Ok(Self::mixed_workload()),
+            "serving" => Ok(Self::serving_heavy()),
+            other => anyhow::bail!("unknown preset {other:?} (want default|large|mixed|serving)"),
         }
     }
 
@@ -306,6 +308,33 @@ impl ExperimentConfig {
         cfg.gogh.full_resolve_every = 5000;
         cfg.gogh.shards = 4;
         cfg.gogh.p1_candidates = 8;
+        cfg
+    }
+
+    /// The `mixed` train+infer scenario ([`TraceConfig::mixed`]): a
+    /// 48-instance heterogeneous cluster where roughly a third of the
+    /// arrivals are latency-SLO serving jobs — the CI mixed-workload
+    /// smoke runs this end to end with the native backend.
+    pub fn mixed_workload() -> Self {
+        let mut cfg = Self::default();
+        // 6 types × 8 = 48 instances: enough headroom for replicas
+        cfg.cluster.accel_mix = ACCEL_TYPES.iter().map(|&a| (a, 8)).collect();
+        cfg.trace = TraceConfig::mixed();
+        cfg.seed = 77;
+        cfg.monitor_interval_s = 60.0;
+        cfg.optimizer.max_pairs_per_job = 2;
+        cfg.optimizer.max_nodes = 600;
+        cfg.gogh.full_resolve_every = 12;
+        cfg.gogh.p1_candidates = 8;
+        cfg
+    }
+
+    /// The `serving` scenario ([`TraceConfig::serving_heavy`]): the same
+    /// cluster under a serving-dominated (80% inference) arrival mix.
+    pub fn serving_heavy() -> Self {
+        let mut cfg = Self::mixed_workload();
+        cfg.trace = TraceConfig::serving_heavy();
+        cfg.seed = 78;
         cfg
     }
 
@@ -341,6 +370,10 @@ impl ExperimentConfig {
             }
             if let Some(v) = t.get("accel_churn") {
                 cfg.trace.accel_churn = v.as_f64().unwrap_or(cfg.trace.accel_churn);
+            }
+            if let Some(v) = t.get("inference_fraction") {
+                cfg.trace.inference_fraction =
+                    v.as_f64().unwrap_or(cfg.trace.inference_fraction).clamp(0.0, 1.0);
             }
             if let Some(v) = t.get("seed") {
                 cfg.trace.seed = v.as_u64().unwrap_or(cfg.trace.seed);
@@ -465,6 +498,7 @@ impl ExperimentConfig {
                     ("max_distributability", self.trace.max_distributability.into()),
                     ("cancel_rate", self.trace.cancel_rate.into()),
                     ("accel_churn", self.trace.accel_churn.into()),
+                    ("inference_fraction", self.trace.inference_fraction.into()),
                     ("seed", self.trace.seed.into()),
                 ]),
             ),
@@ -661,6 +695,34 @@ mod tests {
         assert_eq!(d.gogh.shards, 1);
         assert!(d.gogh.estimate_cache);
         assert_eq!(d.gogh.p1_candidates, 0);
+    }
+
+    #[test]
+    fn inference_fraction_roundtrips_and_clamps() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.trace.inference_fraction, 0.0);
+        cfg.trace.inference_fraction = 0.35;
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.trace.inference_fraction, 0.35);
+        let j = r#"{"trace": {"inference_fraction": 7.0}}"#;
+        assert_eq!(ExperimentConfig::from_json(j).unwrap().trace.inference_fraction, 1.0);
+        // omission keeps training-only
+        let d = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(d.trace.inference_fraction, 0.0);
+    }
+
+    #[test]
+    fn mixed_and_serving_presets_resolve() {
+        let m = ExperimentConfig::preset("mixed").unwrap();
+        assert!(m.trace.inference_fraction > 0.0);
+        let total: u32 = m.cluster.accel_mix.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, 48);
+        let back = ExperimentConfig::from_json(&m.to_json().to_string()).unwrap();
+        assert_eq!(back.trace.inference_fraction, m.trace.inference_fraction);
+        let s = ExperimentConfig::preset("serving").unwrap();
+        assert!(s.trace.inference_fraction > m.trace.inference_fraction);
+        // training presets stay training-only
+        assert_eq!(ExperimentConfig::preset("large").unwrap().trace.inference_fraction, 0.0);
     }
 
     #[test]

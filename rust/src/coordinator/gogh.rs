@@ -21,7 +21,7 @@ use std::collections::{BTreeSet, HashSet};
 
 use crate::catalog::{Catalog, EstimateKey, SimilarityIndex};
 use crate::cluster::{
-    AccelId, Cluster, ClusterSpec, Measurement, Placement, PlacementDelta, ShardSpec,
+    AccelId, Cluster, ClusterSpec, Measurement, Placement, PlacementDelta, PlacementOp, ShardSpec,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::estimate_cache::{value_via, EstimateCache, EstimateCacheStats};
@@ -35,12 +35,19 @@ use crate::metrics::{ErrorTracker, RunReport};
 use crate::runtime::dataset::Sample;
 use crate::runtime::{Backend, Engine, Estimator, NativeBackend};
 use crate::workload::encoding::{p1_row, psi_distance};
-use crate::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, ACCEL_TYPES};
+use crate::workload::{
+    serving, AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, ACCEL_TYPES,
+};
 use crate::Result;
 
 /// Node budget of the bounded local ILP on the incremental arrival path
 /// (the full re-solve budget is `OptimizerConfig::max_nodes`).
 const LOCAL_NODE_BUDGET: usize = 400;
+
+/// Replica scale-down hysteresis: a replica is released only when the
+/// predicted post-removal latency still clears this fraction of the
+/// SLO, so the autoscaler never oscillates around the breach boundary.
+const SCALE_DOWN_MARGIN: f64 = 0.6;
 
 /// Knobs for the scheduler (subset of [`ExperimentConfig`] plus history
 /// size; see config.rs for field docs).
@@ -188,6 +195,11 @@ pub struct LearningStats {
     pub p1_online_steps: u64,
     /// P2 Adam steps taken after bootstrap
     pub p2_online_steps: u64,
+    /// monitor measurements of *inference* jobs recorded into the
+    /// catalog (and, when refinement is on, transferred cross-GPU by
+    /// P2) — the CI mixed-workload smoke greps this to prove the
+    /// learning loop ingests serving measurements, not just training
+    pub inference_measurements: u64,
 }
 
 pub struct GoghScheduler {
@@ -210,6 +222,13 @@ pub struct GoghScheduler {
     shard_stats: Vec<ShardStats>,
     /// jobs whose round-0 estimates were already produced
     initialized: HashSet<JobId>,
+    /// live inference jobs (autoscaler + learning-stats attribution)
+    inference_jobs: HashSet<JobId>,
+    /// replica autoscaling events applied on monitor ticks
+    scale_ups: u64,
+    scale_downs: u64,
+    /// monitor measurements of inference jobs seen so far
+    inference_measurements: u64,
     replay_p1: Vec<Sample>,
     replay_p2: Vec<Sample>,
     errors: ErrorTracker,
@@ -290,6 +309,10 @@ impl GoghScheduler {
             partition: None,
             shard_stats: vec![ShardStats::default(); options.shards.max(1)],
             initialized: HashSet::new(),
+            inference_jobs: HashSet::new(),
+            scale_ups: 0,
+            scale_downs: 0,
+            inference_measurements: 0,
             replay_p1: vec![],
             replay_p2: vec![],
             errors: ErrorTracker::new(),
@@ -379,6 +402,9 @@ impl GoghScheduler {
         let spec = cluster.job(j1).expect("job registered").clone();
         let psi_j1 = spec.psi();
         self.catalog.register_job(j1, psi_j1);
+        if spec.is_inference() {
+            self.inference_jobs.insert(j1);
+        }
 
         // most similar job with measured history
         let j2 = {
@@ -747,6 +773,7 @@ fn local_arrival_solve(
         max_pairs_per_job: ocfg.max_pairs_per_job,
         slack_penalty: Some(ocfg.slack_penalty),
         throughput_bonus: ocfg.throughput_bonus,
+        now_s: cluster.now(),
     };
     let bnb = BnbConfig {
         max_nodes: ocfg.max_nodes.min(LOCAL_NODE_BUDGET),
@@ -830,7 +857,112 @@ impl GoghScheduler {
             p2_train_steps: p2_steps,
             p1_online_steps: p1_steps.saturating_sub(self.p1_bootstrap_steps),
             p2_online_steps: p2_steps.saturating_sub(self.p2_bootstrap_steps),
+            inference_measurements: self.inference_measurements,
         }
+    }
+
+    /// Replica autoscaler for inference jobs, run on every monitor tick
+    /// after measurements and P2 refinement have updated the catalog:
+    ///
+    /// * **scale-up** — a placed serving job whose estimated M/M/c
+    ///   latency (over its current replicas, at the headroom-adjusted
+    ///   diurnal rate λ(t)) breaches its SLO gains one replica on the
+    ///   estimated-fastest free in-service instance, up to its replica
+    ///   cap R_j.
+    /// * **scale-down** — an over-provisioned job releases its weakest
+    ///   solo-hosted replica, but only when the predicted post-removal
+    ///   latency still clears `SCALE_DOWN_MARGIN · SLO` (hysteresis) and
+    ///   never below one replica; paired replicas are never broken.
+    ///
+    /// Each op is emitted as a [`PlacementDelta`] entry (one scaling
+    /// action per job per tick), validated transactionally by
+    /// `Cluster::apply_delta` like every other decision. Public so the
+    /// invariant proptests can drive it against arbitrary clusters.
+    pub fn autoscale(&mut self, cluster: &Cluster) -> PlacementDelta {
+        let now = cluster.now();
+        let mut delta = PlacementDelta::new();
+        let mut ups = 0u64;
+        let mut downs = 0u64;
+        {
+            let catalog = &self.catalog;
+            let cache = self.options.estimate_cache.then_some(&self.cache);
+            // free in-service instances, spec order (deterministic)
+            let mut free: Vec<AccelId> = cluster
+                .available_accels()
+                .into_iter()
+                .filter(|a| cluster.placement.combo_on(*a).is_none())
+                .collect();
+            let mut jobs: Vec<JobSpec> =
+                cluster.jobs().filter(|s| s.is_inference()).cloned().collect();
+            jobs.sort_by_key(|s| s.id);
+            for spec in &jobs {
+                let Some(inf) = spec.inference else { continue };
+                let replicas = cluster.placement.accels_of(spec.id).to_vec();
+                if replicas.is_empty() {
+                    continue; // unplaced: the arrival/repair paths own it
+                }
+                let mu_of = |aid: AccelId| {
+                    let c = cluster
+                        .placement
+                        .combo_on(aid)
+                        .copied()
+                        .unwrap_or(Combo::Solo(spec.id));
+                    serving::service_rate(value_via(catalog, cache, aid.accel, spec.id, &c))
+                };
+                let mus: Vec<f64> = replicas.iter().map(|a| mu_of(*a)).collect();
+                let lam = spec.request_rate_at(now) * serving::LOAD_HEADROOM;
+                let lat = serving::mmc_sojourn(lam, &mus);
+                if lat > inf.latency_slo_s && (replicas.len() as u32) < spec.distributability {
+                    // scale up onto the estimated-fastest free instance
+                    let mut best: Option<(f64, usize)> = None;
+                    for (i, a) in free.iter().enumerate() {
+                        let v = value_via(catalog, cache, a.accel, spec.id, &Combo::Solo(spec.id));
+                        if best.map_or(true, |(bv, _)| v > bv) {
+                            best = Some((v, i));
+                        }
+                    }
+                    if let Some((_, i)) = best {
+                        let aid = free.remove(i);
+                        delta.push(PlacementOp::Assign {
+                            accel: aid,
+                            combo: Combo::Solo(spec.id),
+                        });
+                        ups += 1;
+                    }
+                } else if replicas.len() >= 2 && lat.is_finite() {
+                    // weakest replica this job holds solo (pairs stay)
+                    let mut weakest: Option<(f64, AccelId)> = None;
+                    for &aid in &replicas {
+                        if cluster.placement.combo_on(aid).map_or(false, |c| c.len() == 1) {
+                            let mu = mu_of(aid);
+                            let better = weakest.map_or(true, |(wmu, waid)| {
+                                mu.total_cmp(&wmu).then(aid.cmp(&waid)).is_lt()
+                            });
+                            if better {
+                                weakest = Some((mu, aid));
+                            }
+                        }
+                    }
+                    if let Some((_, victim)) = weakest {
+                        let rest: Vec<f64> = replicas
+                            .iter()
+                            .filter(|&&a| a != victim)
+                            .map(|a| mu_of(*a))
+                            .collect();
+                        if serving::mmc_sojourn(lam, &rest)
+                            <= SCALE_DOWN_MARGIN * inf.latency_slo_s
+                        {
+                            delta.push(PlacementOp::Evict { accel: victim });
+                            downs += 1;
+                            free.push(victim);
+                        }
+                    }
+                }
+            }
+        }
+        self.scale_ups += ups;
+        self.scale_downs += downs;
+        delta
     }
 
     /// Full Problem-1 re-solve over every active job (the escape hatch,
@@ -1077,6 +1209,12 @@ impl GoghScheduler {
     /// refinement and take online training steps.
     fn on_monitor_tick(&mut self, measurements: &[Measurement]) -> Result<()> {
         self.round += 1;
+        // attribution for the learning stats: serving measurements flow
+        // through the catalog → P2 exactly like training ones
+        self.inference_measurements += measurements
+            .iter()
+            .filter(|m| self.inference_jobs.contains(&m.job))
+            .count() as u64;
         // score pre-measurement estimates, then record measurements
         for m in measurements {
             let key = EstimateKey {
@@ -1161,6 +1299,7 @@ impl Scheduler for GoghScheduler {
                 // instead of O(every job ever seen).
                 self.catalog.evict_job_estimates(*job);
                 self.cache.drop_job(*job);
+                self.inference_jobs.remove(job);
                 self.events_since_full += 1;
                 if cluster.n_jobs() == 0 {
                     return Ok(Decision::none());
@@ -1201,13 +1340,19 @@ impl Scheduler for GoghScheduler {
             }
             ClusterEvent::MonitorTick { measurements } => {
                 self.on_monitor_tick(measurements)?;
-                Ok(Decision::none())
+                // fresh measurements (and refinements) just landed:
+                // react to measured serving latency with replica scaling
+                Ok(Decision::apply(self.autoscale(cluster)))
             }
         }
     }
 
     fn estimation_mae(&self) -> Option<f64> {
         (self.errors.n() > 0).then(|| self.errors.mae())
+    }
+
+    fn autoscale_counts(&self) -> (u64, u64) {
+        (self.scale_ups, self.scale_downs)
     }
 
     fn decision_latencies(&self) -> (f64, f64) {

@@ -40,6 +40,7 @@ pub fn seed_catalog(
             min_throughput: 0.0,
             distributability: 1,
             work: 0.0,
+            inference: None,
         };
         catalog.register_job(job.id, job.psi());
         for &a in ACCEL_TYPES.iter() {

@@ -77,6 +77,9 @@ impl Optimizer {
             max_pairs_per_job: self.cfg.max_pairs_per_job,
             slack_penalty: Some(self.cfg.slack_penalty),
             throughput_bonus: self.cfg.throughput_bonus,
+            // inference latency floors (2e′) are sized at the cluster's
+            // current simulated time
+            now_s: cluster.now(),
         };
         let bnb = BnbConfig {
             max_nodes: self.cfg.max_nodes,
@@ -250,6 +253,7 @@ mod tests {
                 min_throughput: 0.0,
                 distributability: 1,
                 work: 100.0,
+                inference: None,
             };
             j.min_throughput = 0.3 * oracle.solo(&j, AccelType::P100);
             c.add_job(j);

@@ -19,8 +19,10 @@ use crate::cluster::energy::{placement_loads, EnergyMeter};
 use crate::cluster::{
     AccelId, Cluster, ClusterSpec, Measurement, Monitor, Placement, PlacementDelta, PlacementOp,
 };
-use crate::metrics::RunReport;
-use crate::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, TraceEvent};
+use crate::metrics::{LatencyHistogram, RunReport};
+use crate::workload::{
+    serving, AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, TraceEvent,
+};
 use crate::Result;
 
 /// One event in the life of the cluster, dispatched to the policy.
@@ -99,6 +101,13 @@ pub trait Scheduler {
     fn decision_latencies(&self) -> (f64, f64) {
         (0.0, 0.0)
     }
+
+    /// Replica autoscaling events this policy applied over the run, as
+    /// `(scale_ups, scale_downs)`. Policies without an inference
+    /// autoscaler report zeros.
+    fn autoscale_counts(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Internal queue payloads (trace events + self-scheduling ticks).
@@ -171,6 +180,14 @@ struct RunState {
     /// re-placed (the eviction happens outside `apply_delta`, so
     /// `DeltaOutcome::migrated_jobs` cannot see them).
     failure_evicted: std::collections::BTreeSet<JobId>,
+    /// time-weighted serving-latency distribution over all inference jobs
+    inf_hist: LatencyHistogram,
+    /// seconds of inference serving-time inside the latency SLO
+    inf_attained_s: f64,
+    /// total seconds of inference serving-time observed
+    inf_total_s: f64,
+    /// per-job (attained, total) serving seconds, for the SLO-met count
+    inf_job_time: HashMap<JobId, (f64, f64)>,
 }
 
 /// Discrete-event simulation of a trace under a policy.
@@ -228,6 +245,7 @@ impl SimDriver {
         let mut report = RunReport {
             scheduler: policy.name().to_string(),
             jobs_total: self.trace.n_jobs(),
+            inference_total: self.trace.jobs().filter(|j| j.is_inference()).count(),
             ..Default::default()
         };
         let mut state = RunState::default();
@@ -346,6 +364,18 @@ impl SimDriver {
         let (solve_ms, p1_ms) = policy.decision_latencies();
         report.mean_solve_ms = solve_ms;
         report.mean_p1_ms = p1_ms;
+        report.inference_attainment = if state.inf_total_s > 0.0 {
+            state.inf_attained_s / state.inf_total_s
+        } else {
+            0.0
+        };
+        if state.inf_hist.total_weight() > 0.0 {
+            report.inference_p50_latency_s = state.inf_hist.quantile(0.5);
+            report.inference_p99_latency_s = state.inf_hist.quantile(0.99);
+        }
+        let (scale_ups, scale_downs) = policy.autoscale_counts();
+        report.scale_ups = scale_ups;
+        report.scale_downs = scale_downs;
         Ok(report)
     }
 
@@ -415,15 +445,20 @@ impl SimDriver {
         if dt <= 0.0 {
             return Ok(());
         }
-        // ground-truth throughput per job
+        // ground-truth throughput per job; inference jobs additionally
+        // keep their per-replica rates for the M/M/c latency model
         let oracle = self.monitor.oracle().clone();
         let mut per_job: HashMap<JobId, f64> = HashMap::new();
+        let mut replica_mus: HashMap<JobId, Vec<f64>> = HashMap::new();
         for (aid, combo) in self.cluster.placement.iter() {
             for j in combo.jobs() {
                 let spec = self.cluster.job(j).expect("placed job registered");
                 let lookup = |id: JobId| self.cluster.job(id).cloned();
                 let t = oracle.throughput(spec, combo, aid.accel, &lookup);
                 *per_job.entry(j).or_default() += t;
+                if spec.is_inference() {
+                    replica_mus.entry(j).or_default().push(serving::service_rate(t));
+                }
             }
         }
 
@@ -444,7 +479,10 @@ impl SimDriver {
         let in_service = self.cluster.available_accels();
         self.meter_total.accrue(t1, &in_service, &loads);
 
-        // SLO + progress + completion (stalled jobs make no progress)
+        // SLO + progress + completion (stalled jobs make no progress).
+        // Training jobs burn work at their achieved throughput against a
+        // throughput floor; inference jobs burn serving lifetime while
+        // placed and are scored on M/M/c latency vs their SLO.
         let mut slo_violated = false;
         let ids = self.cluster.active_job_ids();
         let mut completed: Vec<JobId> = vec![];
@@ -452,17 +490,48 @@ impl SimDriver {
             let achieved = per_job.get(&id).copied().unwrap_or(0.0);
             let stalled_until = self.cluster.stalled_until(id);
             let run_dt = (t1 - stalled_until.max(t0)).clamp(0.0, dt);
-            let avg = achieved * run_dt / dt;
             let spec = self.cluster.job(id).unwrap();
-            let deficit = (spec.min_throughput - avg).max(0.0);
-            if deficit > 1e-9 {
-                report.slo_deficit += deficit * dt;
-                slo_violated = true;
-            }
-            let j = self.cluster.job_mut(id).unwrap();
-            j.work -= achieved * run_dt;
-            if j.work <= 0.0 {
-                completed.push(id);
+            if let Some(inf) = spec.inference {
+                // serving capacity over the interval, de-rated by the
+                // stalled fraction (a restarting replica serves nothing);
+                // unplaced jobs have no replicas → infinite latency
+                let mus = replica_mus.get(&id).cloned().unwrap_or_default();
+                let frac = run_dt / dt;
+                let eff: Vec<f64> = mus.iter().map(|m| m * frac).collect();
+                let lam = spec.request_rate_at(t0);
+                let lat = serving::mmc_sojourn(lam, &eff);
+                let ok = lat <= inf.latency_slo_s;
+                state.inf_total_s += dt;
+                if ok {
+                    state.inf_attained_s += dt;
+                }
+                let e = state.inf_job_time.entry(id).or_insert((0.0, 0.0));
+                e.1 += dt;
+                if ok {
+                    e.0 += dt;
+                }
+                state.inf_hist.record(lat, dt);
+                report.replica_seconds += mus.len() as f64 * dt;
+                let placed = !mus.is_empty();
+                let j = self.cluster.job_mut(id).unwrap();
+                if placed {
+                    j.work -= run_dt;
+                }
+                if j.work <= 0.0 {
+                    completed.push(id);
+                }
+            } else {
+                let avg = achieved * run_dt / dt;
+                let deficit = (spec.min_throughput - avg).max(0.0);
+                if deficit > 1e-9 {
+                    report.slo_deficit += deficit * dt;
+                    slo_violated = true;
+                }
+                let j = self.cluster.job_mut(id).unwrap();
+                j.work -= achieved * run_dt;
+                if j.work <= 0.0 {
+                    completed.push(id);
+                }
             }
         }
         if slo_violated {
@@ -471,8 +540,17 @@ impl SimDriver {
         if !completed.is_empty() {
             self.cluster.advance_to(t1);
             for id in completed {
+                let was_inference = self.cluster.job(id).map_or(false, |s| s.is_inference());
                 self.cluster.remove_job(id);
                 report.jobs_completed += 1;
+                if was_inference {
+                    report.inference_completed += 1;
+                    if let Some(&(attained, total)) = state.inf_job_time.get(&id) {
+                        if total > 0.0 && attained / total >= serving::SLO_MET_FRACTION {
+                            report.inference_slo_met += 1;
+                        }
+                    }
+                }
                 state.jct_sum += t1 - state.arrival_time.get(&id).copied().unwrap_or(0.0);
                 self.dispatch(policy, ClusterEvent::JobCompleted { job: id }, report, state)?;
             }
@@ -526,7 +604,19 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work,
+            inference: None,
         }
+    }
+
+    fn serving_job(id: u32, lifetime_s: f64, base_rate: f64, slo_s: f64) -> JobSpec {
+        let mut j = job(id, lifetime_s);
+        j.inference = Some(crate::workload::InferenceSpec {
+            base_rate,
+            diurnal_amplitude: 0.0,
+            diurnal_phase_s: 0.0,
+            latency_slo_s: slo_s,
+        });
+        j
     }
 
     #[test]
@@ -581,6 +671,70 @@ mod tests {
         let oracle = ThroughputOracle::new(1);
         let trace = Trace::generate(&TraceConfig::default(), &oracle);
         assert!(SimDriver::new(ClusterSpec::balanced(1), oracle, trace, 0.0, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn driver_scores_inference_latency_and_burns_lifetime() {
+        // A lightly-loaded serving job placed immediately: every
+        // interval clears the SLO (attainment 1.0), the lifetime burns
+        // in placed wall-clock seconds, and replica-seconds accrue.
+        let oracle = ThroughputOracle::new(8);
+        let probe = serving_job(0, 100.0, 1.0, 1.0);
+        let mu = crate::workload::serving::service_rate(
+            oracle.solo(&probe, AccelType::V100),
+        );
+        let trace = Trace {
+            events: vec![TraceEvent::Arrival {
+                at: 1.0,
+                job: serving_job(0, 100.0, 0.3 * mu, 10.0 / mu),
+            }],
+            config: TraceConfig {
+                n_jobs: 1,
+                ..Default::default()
+            },
+        };
+        let spec = ClusterSpec::mix(&[(AccelType::V100, 1)]);
+        let mut driver = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1).unwrap();
+        let report = driver.run(&mut FirstFit).unwrap();
+        assert_eq!(report.jobs_completed, 1);
+        assert_eq!(report.inference_total, 1);
+        assert_eq!(report.inference_completed, 1);
+        assert_eq!(report.inference_slo_met, 1);
+        assert!((report.inference_attainment - 1.0).abs() < 1e-9);
+        assert!(report.inference_p99_latency_s.is_finite());
+        // one replica held for the ~100 s lifetime
+        assert!(report.replica_seconds >= 100.0, "{}", report.replica_seconds);
+        // mean JCT ≈ lifetime, rounded up to the next event boundary
+        assert!(report.mean_jct >= 100.0 && report.mean_jct < 130.0, "{}", report.mean_jct);
+        // training SLO machinery untouched: no throughput deficit
+        assert_eq!(report.slo_deficit, 0.0);
+    }
+
+    #[test]
+    fn unplaced_serving_job_breaches_its_slo() {
+        // No capacity at all: the serving job never places, every
+        // interval is a breach (infinite latency), nothing completes.
+        let oracle = ThroughputOracle::new(8);
+        let trace = Trace {
+            events: vec![TraceEvent::Arrival {
+                at: 1.0,
+                job: serving_job(0, 50.0, 1.0, 0.5),
+            }],
+            config: TraceConfig {
+                n_jobs: 1,
+                ..Default::default()
+            },
+        };
+        let spec = ClusterSpec::mix(&[]);
+        let mut driver = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1).unwrap();
+        driver.drain_limit_s = 200.0;
+        let report = driver.run(&mut FirstFit).unwrap();
+        assert_eq!(report.jobs_completed, 0);
+        assert_eq!(report.inference_completed, 0);
+        assert_eq!(report.inference_slo_met, 0);
+        assert_eq!(report.inference_attainment, 0.0);
+        assert_eq!(report.inference_p99_latency_s, f64::INFINITY);
+        assert_eq!(report.replica_seconds, 0.0);
     }
 
     #[test]

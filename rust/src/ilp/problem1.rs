@@ -21,6 +21,15 @@
 //! than capacity). `slack_penalty` adds per-job slack on (2b)/(2e) with
 //! a large objective penalty, so the optimizer degrades gracefully and
 //! the coordinator reports the violation instead of failing.
+//!
+//! Inference jobs (constraint 2e′): for a serving job the `n_{a,c}`
+//! multiplicities are its **replica counts** — coverage (2b) keeps ≥ 1
+//! replica, the distributability bound (2c) is the replica cap R_j, and
+//! the throughput row (2e) carries the latency SLO linearized by
+//! [`latency_adjusted_jobs`]: the M/M/c sojourn target becomes an
+//! aggregate-capacity floor via the pooled-server bound of
+//! [`crate::workload::serving::effective_min_throughput`]. The same
+//! soft-slack machinery covers transient latency infeasibility.
 
 use std::collections::HashMap;
 
@@ -57,6 +66,10 @@ pub struct Problem1Input<'a> {
     /// `benches/e2e_scheduling.rs` quantifies the difference; λ = 0
     /// reproduces the paper's literal objective.
     pub throughput_bonus: f64,
+    /// Simulated time the solve happens at — evaluates each inference
+    /// job's diurnal request rate λ(t) for the latency-feasibility
+    /// constraint 2e′ (irrelevant to pure-training pools; pass 0.0).
+    pub now_s: f64,
 }
 
 /// Decoded solution.
@@ -87,6 +100,22 @@ pub fn pool_accel_counts(pool: &[crate::cluster::AccelId]) -> HashMap<AccelType,
         *counts.entry(a.accel).or_default() += 1;
     }
     counts
+}
+
+/// Constraint 2e′ — the latency-feasibility pre-pass: every inference
+/// job's throughput row carries the capacity floor its latency SLO
+/// implies at time `now_s` (pooled-server bound + utilization cap, see
+/// [`crate::workload::serving`]); training jobs pass through untouched.
+/// [`solve_problem1`] applies this automatically; callers of
+/// [`build_problem1`] that host inference jobs should apply it first.
+pub fn latency_adjusted_jobs(jobs: &[JobSpec], now_s: f64) -> Vec<JobSpec> {
+    jobs.iter()
+        .map(|j| {
+            let mut j = j.clone();
+            j.min_throughput = crate::workload::serving::effective_min_throughput(&j, now_s);
+            j
+        })
+        .collect()
 }
 
 /// Build the candidate combination universe 𝒞 (solos + pruned pairs).
@@ -246,6 +275,18 @@ pub fn build_problem1(
 /// of thousands of nodes before the first feasible point (measured by
 /// `benches/ilp_scaling.rs`, asserted by `tests/warm_start.rs`).
 pub fn solve_problem1(input: &Problem1Input, bnb: &BnbConfig) -> AllocationSolution {
+    // 2e′: fold each inference job's latency SLO into its throughput
+    // row before the model is built (no-op — and no clone — for the
+    // common pure-training pool).
+    let adjusted: Option<Vec<JobSpec>> = input
+        .jobs
+        .iter()
+        .any(|j| j.is_inference())
+        .then(|| latency_adjusted_jobs(input.jobs, input.now_s));
+    let input = &Problem1Input {
+        jobs: adjusted.as_deref().unwrap_or(input.jobs),
+        ..*input
+    };
     let (model, cols, slacks) = build_problem1(input, bnb);
     let mut bnb = bnb.clone();
     if bnb.warm_start.is_none() && bnb.auto_warm_start {
@@ -316,6 +357,7 @@ mod tests {
                     min_throughput: 0.0,
                     distributability: 2,
                     work: 100.0,
+                    inference: None,
                 };
                 j.min_throughput = 0.4 * oracle.solo(&j, AccelType::P100);
                 j
@@ -338,6 +380,7 @@ mod tests {
             max_pairs_per_job: 3,
             slack_penalty: None,
             throughput_bonus: 0.0,
+            now_s: 0.0,
         }
         .with(oracle)
     }
@@ -427,6 +470,7 @@ mod tests {
             max_pairs_per_job: 2,
             slack_penalty: None,
             throughput_bonus: 0.0,
+            now_s: 0.0,
         };
         let sol = solve_problem1(&hard, &BnbConfig::default());
         assert_eq!(sol.status, BnbStatus::Infeasible);
@@ -464,6 +508,7 @@ mod tests {
             max_pairs_per_job: 0,
             slack_penalty: None,
             throughput_bonus: 0.0,
+            now_s: 0.0,
         };
         let sol = solve_problem1(&input, &BnbConfig::default());
         assert_eq!(sol.assignments.len(), 1);
@@ -501,6 +546,7 @@ mod tests {
             max_pairs_per_job: 0,
             slack_penalty: None,
             throughput_bonus: 0.0,
+            now_s: 0.0,
         };
         let sol = solve_problem1(&input, &BnbConfig::default());
         assert!(matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible));
@@ -533,6 +579,7 @@ mod tests {
                 max_pairs_per_job: 0,
                 slack_penalty: None,
                 throughput_bonus: bonus,
+                now_s: 0.0,
             };
             solve_problem1(&input, &BnbConfig::default())
         };
@@ -540,6 +587,67 @@ mod tests {
         let bonus = solve(300.0);
         assert_ne!(literal.assignments[0].0.consolidated(), AccelType::V100);
         assert_eq!(bonus.assignments[0].0.consolidated(), AccelType::V100);
+    }
+
+    #[test]
+    fn latency_slo_provisions_replicas() {
+        // A serving job whose latency floor exceeds any single GPU's
+        // capability must receive several replicas (constraint 2e′ on
+        // the replica-count variables), while a relaxed SLO needs one.
+        let oracle = ThroughputOracle::new(11);
+        let mut jobs = mk_jobs(1, &oracle);
+        let best = ACCEL_TYPES
+            .iter()
+            .map(|&a| oracle.solo(&jobs[0], a))
+            .fold(0.0f64, f64::max);
+        let lam = crate::workload::serving::service_rate(1.4 * best);
+        jobs[0].min_throughput = 0.0;
+        jobs[0].distributability = 3;
+        jobs[0].inference = Some(crate::workload::InferenceSpec {
+            base_rate: lam,
+            diurnal_amplitude: 0.0,
+            diurnal_phase_s: 0.0,
+            latency_slo_s: 10.0 / lam.max(1e-9),
+        });
+        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 3)).collect();
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let solve = |jobs: &[JobSpec]| {
+            let input = Problem1Input {
+                jobs,
+                accel_counts: &counts,
+                throughput: &thr,
+                solo_capability: &cap,
+                max_pairs_per_job: 0,
+                slack_penalty: None,
+                throughput_bonus: 0.0,
+                now_s: 0.0,
+            };
+            solve_problem1(&input, &BnbConfig::default())
+        };
+        let tight = solve(&jobs);
+        assert!(matches!(tight.status, BnbStatus::Optimal | BnbStatus::Feasible));
+        let replicas: u32 = tight.assignments.iter().map(|(_, _, m)| m).sum();
+        assert!(replicas >= 2, "tight SLO got only {replicas} replica(s)");
+        assert!(replicas <= jobs[0].distributability);
+
+        // a very relaxed SLO and tiny rate needs a single replica
+        let mut loose = jobs.clone();
+        loose[0].inference = Some(crate::workload::InferenceSpec {
+            base_rate: 0.05 * lam,
+            diurnal_amplitude: 0.0,
+            diurnal_phase_s: 0.0,
+            latency_slo_s: 1000.0 / lam.max(1e-9),
+        });
+        let sol = solve(&loose);
+        let replicas: u32 = sol.assignments.iter().map(|(_, _, m)| m).sum();
+        assert_eq!(replicas, 1, "{:?}", sol.assignments);
     }
 
     #[test]

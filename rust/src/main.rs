@@ -58,17 +58,23 @@ const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in hetero
 
 USAGE:
   gogh simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S]
-                [--config cfg.json] [--preset default|large] [--shards P]
-                [--backend auto|pjrt|native|none]
+                [--config cfg.json] [--preset default|large|mixed|serving]
+                [--shards P] [--backend auto|pjrt|native|none]
                 [--save-catalog catalog.json] [--gavel-csv data.csv]
                 [--cancel-rate P] [--accel-churn N] [--migration-cost-s S]
+                [--inference-fraction F]
   gogh info [--workloads]
   gogh solve [--jobs N] [--servers-per-type K] [--seed S]
-  gogh config [--preset default|large]
+  gogh config [--preset default|large|mixed|serving]
 
 The `large` preset is the scale scenario: ≥1024 accelerator instances,
 a ≥50k-event trace, and the shard-parallel decision path (--shards
 overrides the shard count; 1 = the single-threaded path).
+
+The `mixed` and `serving` presets add the inference workload class:
+a fraction of arrivals (--inference-fraction overrides it) are
+latency-SLO serving jobs scaled across 1..R replicas, with GOGH
+autoscaling replicas on monitor ticks.
 
 --backend picks the P1/P2 estimator engine: `pjrt` (AOT artifacts,
 errors if absent), `native` (pure-Rust MLP, zero artifacts), `none`
@@ -134,6 +140,9 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
     if let Some(r) = args.get_parse::<f64>("cancel-rate") {
         cfg.trace.cancel_rate = r;
     }
+    if let Some(f) = args.get_parse::<f64>("inference-fraction") {
+        cfg.trace.inference_fraction = f.clamp(0.0, 1.0);
+    }
     if let Some(n) = args.get_parse::<f64>("accel-churn") {
         cfg.trace.accel_churn = n;
     }
@@ -167,6 +176,13 @@ fn simulate(args: &Args) -> Result<()> {
                 learn.p2_train_steps,
                 learn.p2_online_steps
             );
+            if learn.inference_measurements > 0 {
+                println!(
+                    "inference learning: {} inference measurements fed the \
+                     P2 refinement loop",
+                    learn.inference_measurements
+                );
+            }
             println!(
                 "solver paths: {} full ({:.1} nodes/solve), {} incremental \
                  ({:.1} nodes/solve); estimate cache {:.1}% hit over {} lookups",
@@ -241,6 +257,21 @@ fn simulate(args: &Args) -> Result<()> {
         report.mean_queue_s,
         report.migration_stall_s
     );
+    if report.inference_total > 0 {
+        println!(
+            "inference: {}/{} jobs met latency SLO (attainment {:.3}, \
+             p50 {:.3} s, p99 {:.3} s, {} scale-ups, {} scale-downs, \
+             {:.0} replica-seconds)",
+            report.inference_slo_met,
+            report.inference_total,
+            report.inference_attainment,
+            report.inference_p50_latency_s,
+            report.inference_p99_latency_s,
+            report.scale_ups,
+            report.scale_downs,
+            report.replica_seconds
+        );
+    }
     Ok(())
 }
 
@@ -298,6 +329,7 @@ fn solve(args: &Args) -> Result<()> {
             min_throughput: 0.0,
             distributability: 2,
             work: 100.0,
+            inference: None,
         };
         j.min_throughput = 0.4 * oracle.solo(&j, gogh::workload::AccelType::P100);
         cluster.add_job(j);

@@ -5,4 +5,4 @@ pub mod mae;
 pub mod summary;
 
 pub use mae::ErrorTracker;
-pub use summary::{peak_rss_bytes, BenchRecord, RunReport, SchedulerComparison};
+pub use summary::{peak_rss_bytes, BenchRecord, LatencyHistogram, RunReport, SchedulerComparison};

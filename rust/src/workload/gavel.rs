@@ -205,6 +205,7 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work: 1.0,
+            inference: None,
         }
     }
 

@@ -14,6 +14,7 @@ pub mod encoding;
 pub mod families;
 pub mod gavel;
 pub mod gavel_csv;
+pub mod serving;
 pub mod trace;
 
 pub use encoding::{accel_onehot, psi, ACCEL_DIM, PSI_DIM};
@@ -32,6 +33,44 @@ impl std::fmt::Display for JobId {
     }
 }
 
+/// Which half of the paper's workload space a job belongs to: batch
+/// training (throughput-SLO, finite work) or online inference serving
+/// (request-rate + latency-SLO, replica-scaled). The paper's system
+/// "allocates resources to incoming training or inference requests";
+/// this enum is how the rest of the stack branches on that.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum JobKind {
+    /// Batch training: a throughput floor T̄_j and finite remaining work.
+    #[default]
+    Training,
+    /// Latency-SLO serving: a diurnal request rate served by 1..R
+    /// replicas; see [`InferenceSpec`] and [`serving`].
+    Inference,
+}
+
+/// Serving profile of an inference job ([`JobKind::Inference`]): the
+/// request-arrival process and the latency SLO. Request rates follow a
+/// diurnal sine, `λ(t) = base_rate · (1 + A · sin(2π (t + φ) / 86400))`,
+/// the shape production inference traffic overwhelmingly has.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferenceSpec {
+    /// Mean request arrival rate λ̄ in requests/second.
+    pub base_rate: f64,
+    /// Diurnal modulation amplitude A ∈ [0, 1).
+    pub diurnal_amplitude: f64,
+    /// Diurnal phase offset φ in seconds.
+    pub diurnal_phase_s: f64,
+    /// Latency SLO: target mean sojourn (queueing + service) seconds.
+    pub latency_slo_s: f64,
+}
+
+impl InferenceSpec {
+    /// Peak request rate over the diurnal cycle, `λ̄ · (1 + A)`.
+    pub fn peak_rate(&self) -> f64 {
+        self.base_rate * (1.0 + self.diurnal_amplitude)
+    }
+}
+
 /// A deep-learning job as the scheduler sees it (paper §2.2: the
 /// attribute vector Ψ_j is derived from these fields).
 #[derive(Debug, Clone, PartialEq)]
@@ -41,18 +80,49 @@ pub struct JobSpec {
     pub batch_size: u32,
     /// Replication factor (fixed at 1 in the paper's study).
     pub replication: u32,
-    /// Minimum required throughput T̄_j, normalized to [0, 1].
+    /// Minimum required throughput T̄_j, normalized to [0, 1]. Zero for
+    /// inference jobs — their requirement is the latency SLO instead.
     pub min_throughput: f64,
     /// Distributability D_j: max number of accelerators (constraint 2c).
+    /// For inference jobs this is the replica cap R_j.
     pub distributability: u32,
-    /// Remaining work in normalized-throughput · seconds.
+    /// Remaining work in normalized-throughput · seconds. For inference
+    /// jobs: remaining serving lifetime in *placed* seconds.
     pub work: f64,
+    /// Serving profile when this is an inference job; `None` = training.
+    pub inference: Option<InferenceSpec>,
 }
 
 impl JobSpec {
     /// Ψ_j attribute vector for the estimator networks.
     pub fn psi(&self) -> [f32; PSI_DIM] {
         encoding::psi(self.family, self.batch_size, self.replication)
+    }
+
+    /// Training or inference (see [`JobKind`]).
+    pub fn kind(&self) -> JobKind {
+        if self.inference.is_some() {
+            JobKind::Inference
+        } else {
+            JobKind::Training
+        }
+    }
+
+    /// Whether this job is a latency-SLO serving job.
+    pub fn is_inference(&self) -> bool {
+        self.inference.is_some()
+    }
+
+    /// Instantaneous request-arrival rate λ(t) in requests/second
+    /// (0 for training jobs).
+    pub fn request_rate_at(&self, t_s: f64) -> f64 {
+        match self.inference {
+            None => 0.0,
+            Some(inf) => {
+                let phase = std::f64::consts::TAU * (t_s + inf.diurnal_phase_s) / 86_400.0;
+                (inf.base_rate * (1.0 + inf.diurnal_amplitude * phase.sin())).max(0.0)
+            }
+        }
     }
 }
 
@@ -126,6 +196,37 @@ mod tests {
         assert_eq!(c.other(JobId(2)), Some(JobId(1)));
         assert_eq!(c.other(JobId(3)), None);
         assert_eq!(Combo::Solo(JobId(1)).other(JobId(1)), None);
+    }
+
+    #[test]
+    fn job_kind_and_diurnal_rate() {
+        let mut j = JobSpec {
+            id: JobId(1),
+            family: ModelFamily::ResNet18,
+            batch_size: 32,
+            replication: 1,
+            min_throughput: 0.2,
+            distributability: 1,
+            work: 10.0,
+            inference: None,
+        };
+        assert_eq!(j.kind(), JobKind::Training);
+        assert_eq!(j.request_rate_at(0.0), 0.0);
+        j.inference = Some(InferenceSpec {
+            base_rate: 10.0,
+            diurnal_amplitude: 0.5,
+            diurnal_phase_s: 0.0,
+            latency_slo_s: 0.2,
+        });
+        assert_eq!(j.kind(), JobKind::Inference);
+        assert!(j.is_inference());
+        // sine peaks a quarter-day in: λ(21600) = 10 · 1.5
+        let peak = j.request_rate_at(21_600.0);
+        assert!((peak - 15.0).abs() < 1e-9, "{peak}");
+        assert!((j.inference.unwrap().peak_rate() - 15.0).abs() < 1e-12);
+        // trough: 10 · 0.5
+        assert!((j.request_rate_at(3.0 * 21_600.0) - 5.0).abs() < 1e-9);
+        assert_eq!(JobKind::default(), JobKind::Training);
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Queueing model for inference serving ([`super::JobKind::Inference`]):
+//! replicas of a serving job form an M/M/c-style system — requests
+//! arrive at the diurnal rate λ(t) and each replica serves at a rate
+//! proportional to its measured/estimated normalized throughput.
+//!
+//! Two views of the same model live here:
+//!
+//! * the **closed form** ([`mmc_sojourn`], Erlang-C) — the ground truth
+//!   the simulator integrates and the autoscaler reacts to;
+//! * the **linearization** ([`effective_min_throughput`]) — the pooled
+//!   single-server lower bound `W ≥ 1/(Σμ − λ)` plus a utilization cap,
+//!   which turns the latency SLO into an aggregate-capacity floor the
+//!   allocation ILP can carry on its existing throughput constraint
+//!   (2e′ in `ilp/problem1.rs`). The bound under-states M/M/c waiting,
+//!   which is exactly why the monitor-tick autoscaler exists: it closes
+//!   the gap with measured latencies.
+
+use super::JobSpec;
+
+/// Requests/second served by one replica at normalized throughput 1.0
+/// (the unit bridge between the catalog's throughput currency and
+/// request rates).
+pub const REQS_PER_UNIT_THROUGHPUT: f64 = 50.0;
+
+/// Utilization cap ρ_max of the ILP linearization: aggregate service
+/// capacity must keep λ/Σμ below this even when the 1/SLO term is slack.
+pub const RHO_MAX: f64 = 0.85;
+
+/// Multiplicative headroom applied to λ(t) when sizing capacity (absorbs
+/// rate drift between allocation events).
+pub const LOAD_HEADROOM: f64 = 1.15;
+
+/// Fraction of its placed lifetime an inference job must spend inside
+/// its latency SLO to count as "met" in the run report.
+pub const SLO_MET_FRACTION: f64 = 0.9;
+
+/// Requests/second one replica serves at the given normalized
+/// throughput.
+pub fn service_rate(throughput: f64) -> f64 {
+    (throughput * REQS_PER_UNIT_THROUGHPUT).max(0.0)
+}
+
+/// Erlang-C: probability an arriving request queues in an M/M/c system
+/// with `c` equal servers and offered load `a = λ/μ` Erlangs. Returns
+/// 1.0 when the system is saturated (`a ≥ c`). Computed through the
+/// numerically stable Erlang-B recurrence.
+pub fn erlang_c(c: usize, a: f64) -> f64 {
+    if c == 0 || a >= c as f64 {
+        return 1.0;
+    }
+    if a <= 0.0 {
+        return 0.0;
+    }
+    let mut b = 1.0; // Erlang-B with zero servers
+    for k in 1..=c {
+        b = a * b / (k as f64 + a * b);
+    }
+    let rho = a / c as f64;
+    b / (1.0 - rho * (1.0 - b))
+}
+
+/// Expected sojourn time (queueing + service, seconds) of an M/M/c
+/// system with arrival rate `lambda` (requests/s) and per-replica
+/// service rates `mus` (requests/s). Heterogeneous replicas are
+/// approximated by `c` equal servers at the mean rate — the standard
+/// closed-form surrogate. Returns `INFINITY` when unplaced (`mus`
+/// empty) or saturated (`λ ≥ Σμ`).
+pub fn mmc_sojourn(lambda: f64, mus: &[f64]) -> f64 {
+    let total: f64 = mus.iter().sum();
+    if mus.is_empty() || total <= 0.0 {
+        return f64::INFINITY;
+    }
+    let c = mus.len();
+    let mu = total / c as f64;
+    if lambda <= 0.0 {
+        return 1.0 / mu;
+    }
+    if lambda >= total {
+        return f64::INFINITY;
+    }
+    let a = lambda / mu;
+    erlang_c(c, a) / (total - lambda) + 1.0 / mu
+}
+
+/// The latency-feasibility constraint 2e′ as a throughput floor: the
+/// normalized aggregate capability an inference job needs at time
+/// `now_s` so that (i) the pooled-server bound `1/(Σμ − λ)` meets the
+/// SLO and (ii) utilization stays below [`RHO_MAX`]. Training jobs pass
+/// through unchanged (their T̄_j). Linear in the ILP's `n_{a,c}`
+/// variables, so Problem 1 stays an ILP.
+pub fn effective_min_throughput(spec: &JobSpec, now_s: f64) -> f64 {
+    let Some(inf) = spec.inference else {
+        return spec.min_throughput;
+    };
+    let lam = spec.request_rate_at(now_s) * LOAD_HEADROOM;
+    let req = (lam / RHO_MAX).max(lam + 1.0 / inf.latency_slo_s.max(1e-6));
+    req / REQS_PER_UNIT_THROUGHPUT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{InferenceSpec, JobId, ModelFamily};
+
+    fn inf_job(base_rate: f64, slo: f64) -> JobSpec {
+        JobSpec {
+            id: JobId(1),
+            family: ModelFamily::ResNet50,
+            batch_size: 64,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: 4,
+            work: 100.0,
+            inference: Some(InferenceSpec {
+                base_rate,
+                diurnal_amplitude: 0.0,
+                diurnal_phase_s: 0.0,
+                latency_slo_s: slo,
+            }),
+        }
+    }
+
+    #[test]
+    fn mm1_matches_textbook_closed_form() {
+        // M/M/1 sojourn is exactly 1/(μ − λ)
+        for (lam, mu) in [(5.0, 10.0), (0.5, 2.0), (9.0, 10.0)] {
+            let w = mmc_sojourn(lam, &[mu]);
+            assert!((w - 1.0 / (mu - lam)).abs() < 1e-12, "λ={lam} μ={mu}: {w}");
+        }
+    }
+
+    #[test]
+    fn erlang_c_known_values() {
+        // c=1: queueing probability equals ρ
+        assert!((erlang_c(1, 0.5) - 0.5).abs() < 1e-12);
+        // empty and saturated edges
+        assert_eq!(erlang_c(0, 0.5), 1.0);
+        assert_eq!(erlang_c(2, 2.0), 1.0);
+        assert_eq!(erlang_c(3, 0.0), 0.0);
+        // more servers at the same offered load queue less
+        assert!(erlang_c(4, 1.5) < erlang_c(2, 1.5));
+    }
+
+    #[test]
+    fn more_replicas_never_raise_latency() {
+        let lam = 12.0;
+        let mut prev = f64::INFINITY;
+        for c in 1..=6 {
+            let w = mmc_sojourn(lam, &vec![5.0; c]);
+            assert!(w <= prev + 1e-12, "c={c}: {w} > {prev}");
+            prev = w;
+        }
+        // c = 1..2 saturated (λ ≥ Σμ), c = 3 finite
+        assert_eq!(mmc_sojourn(lam, &[5.0, 5.0]), f64::INFINITY);
+        assert!(mmc_sojourn(lam, &[5.0, 5.0, 5.0]).is_finite());
+    }
+
+    #[test]
+    fn unplaced_and_idle_edges() {
+        assert_eq!(mmc_sojourn(1.0, &[]), f64::INFINITY);
+        // no load: sojourn is just the mean service time
+        assert!((mmc_sojourn(0.0, &[4.0]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn effective_floor_meets_the_pooled_bound() {
+        let j = inf_job(20.0, 0.25);
+        let floor = effective_min_throughput(&j, 0.0);
+        // capacity at the floor satisfies the pooled bound with headroom
+        let mu_total = service_rate(floor);
+        let lam = 20.0 * LOAD_HEADROOM;
+        assert!(mu_total >= lam + 1.0 / 0.25 - 1e-9);
+        assert!(lam / mu_total <= RHO_MAX + 1e-9);
+        // training jobs pass through their T̄_j untouched
+        let mut t = inf_job(20.0, 0.25);
+        t.inference = None;
+        t.min_throughput = 0.37;
+        assert_eq!(effective_min_throughput(&t, 0.0), 0.37);
+    }
+
+    #[test]
+    fn effective_floor_tracks_the_diurnal_wave() {
+        let mut j = inf_job(20.0, 0.25);
+        j.inference.as_mut().unwrap().diurnal_amplitude = 0.4;
+        let peak = effective_min_throughput(&j, 21_600.0); // sine max
+        let trough = effective_min_throughput(&j, 3.0 * 21_600.0);
+        assert!(peak > trough, "peak {peak} vs trough {trough}");
+    }
+}

@@ -7,7 +7,7 @@ use crate::util::Rng;
 
 use super::families::{ModelFamily, FAMILIES};
 use super::gavel::ThroughputOracle;
-use super::{JobId, JobSpec};
+use super::{serving, InferenceSpec, JobId, JobSpec};
 use crate::workload::families::AccelType;
 
 /// Trace generation parameters.
@@ -32,6 +32,11 @@ pub struct TraceConfig {
     /// Expected number of accelerator down/up maintenance cycles over
     /// the arrival horizon (0 disables).
     pub accel_churn: f64,
+    /// Probability that an arriving job is an inference-serving job
+    /// (latency SLO + diurnal request rate) instead of a training job.
+    /// Inference fields draw from their own RNG stream, so 0 keeps the
+    /// arrival trace byte-identical to the pre-inference generator.
+    pub inference_fraction: f64,
     pub seed: u64,
 }
 
@@ -45,6 +50,7 @@ impl Default for TraceConfig {
             max_distributability: 2,
             cancel_rate: 0.0,
             accel_churn: 0.0,
+            inference_fraction: 0.0,
             seed: 17,
         }
     }
@@ -66,7 +72,38 @@ impl TraceConfig {
             max_distributability: 2,
             cancel_rate: 0.06,
             accel_churn: 12.0,
+            inference_fraction: 0.0,
             seed: 42,
+        }
+    }
+
+    /// The `mixed` preset: roughly one third of arrivals are
+    /// latency-SLO inference jobs, the rest training — the smallest
+    /// trace that exercises the full train+infer decision path (the CI
+    /// mixed-workload smoke runs it at 200 jobs).
+    pub fn mixed() -> Self {
+        Self {
+            n_jobs: 300,
+            mean_interarrival_s: 30.0,
+            mean_work_s: 900.0,
+            slo_fraction: 0.4,
+            max_distributability: 2,
+            cancel_rate: 0.02,
+            accel_churn: 0.0,
+            inference_fraction: 0.35,
+            seed: 77,
+        }
+    }
+
+    /// The `serving` preset: a serving-dominated cluster (80% inference
+    /// arrivals) — stresses replica autoscaling and the latency ILP
+    /// constraint rather than batch packing.
+    pub fn serving_heavy() -> Self {
+        Self {
+            inference_fraction: 0.8,
+            n_jobs: 200,
+            seed: 78,
+            ..Self::mixed()
         }
     }
 }
@@ -107,6 +144,12 @@ impl Trace {
     /// but satisfiable, as in the paper's setup).
     pub fn generate(cfg: &TraceConfig, oracle: &ThroughputOracle) -> Self {
         let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x7ace);
+        // Inference fields draw from their own stream (like cancels and
+        // churn below): training-only traces stay byte-identical for a
+        // given seed, and mixing in inference never perturbs the shared
+        // arrival-stream draws (times, families, batches, work).
+        let mut irng =
+            (cfg.inference_fraction > 0.0).then(|| Rng::seed_from_u64(cfg.seed ^ 0x1f5e));
         let mut events = Vec::with_capacity(cfg.n_jobs);
         let mut t = 0.0f64;
         for i in 0..cfg.n_jobs {
@@ -123,10 +166,30 @@ impl Trace {
                 min_throughput: 0.0,
                 distributability: rng.range_u32_inclusive(1, cfg.max_distributability),
                 work: rng.exponential(cfg.mean_work_s),
+                inference: None,
             };
             // SLO: a fraction of the P100 solo throughput for this job.
             let p100 = oracle.solo(&job, AccelType::P100);
             job.min_throughput = cfg.slo_fraction * p100 * rng.range_f64(0.6, 1.0);
+            if let Some(irng) = irng.as_mut() {
+                if irng.bool(cfg.inference_fraction.clamp(0.0, 1.0)) {
+                    // Serving job: rate sized against the job's own P100
+                    // service capability (feasible with ≤ 2 mid-range
+                    // replicas), SLO a few mean service times, and a
+                    // replica cap of 2..4. `work` (drawn above from the
+                    // shared stream) becomes the serving lifetime; the
+                    // throughput floor moves to the latency SLO.
+                    let mu_p100 = serving::service_rate(p100);
+                    job.min_throughput = 0.0;
+                    job.distributability = irng.range_u32_inclusive(2, 4);
+                    job.inference = Some(InferenceSpec {
+                        base_rate: mu_p100 * irng.range_f64(0.35, 0.8),
+                        diurnal_amplitude: irng.range_f64(0.15, 0.45),
+                        diurnal_phase_s: irng.range_f64(0.0, 86_400.0),
+                        latency_slo_s: irng.range_f64(4.0, 12.0) / mu_p100.max(1e-9),
+                    });
+                }
+            }
             events.push(TraceEvent::Arrival { at: t, job });
         }
         // Cancellations / accel churn draw from their own streams so the
@@ -345,6 +408,82 @@ mod tests {
         assert!(trace.events.iter().any(|e| matches!(e, TraceEvent::AccelChurn { .. })));
         let times: Vec<f64> = trace.events.iter().map(|e| e.at()).collect();
         assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn inference_fraction_only_retypes_jobs() {
+        // Mixing in inference never perturbs the shared arrival-stream
+        // draws: times, families, batches and work are identical to the
+        // training-only trace; only kind-specific fields differ.
+        let oracle = ThroughputOracle::new(1);
+        let plain = Trace::generate(&TraceConfig::default(), &oracle);
+        let mixed = Trace::generate(
+            &TraceConfig {
+                inference_fraction: 0.5,
+                ..Default::default()
+            },
+            &oracle,
+        );
+        let plain_jobs: Vec<_> = plain.jobs().collect();
+        let mixed_jobs: Vec<_> = mixed.jobs().collect();
+        assert_eq!(plain_jobs.len(), mixed_jobs.len());
+        let mut inference = 0;
+        for (p, m) in plain_jobs.iter().zip(&mixed_jobs) {
+            assert_eq!(p.id, m.id);
+            assert_eq!(p.family, m.family);
+            assert_eq!(p.batch_size, m.batch_size);
+            assert_eq!(p.work, m.work);
+            if m.is_inference() {
+                inference += 1;
+            } else {
+                assert_eq!(p.min_throughput, m.min_throughput);
+                assert_eq!(p.distributability, m.distributability);
+            }
+        }
+        assert!(inference > 5, "only {inference} inference jobs at fraction 0.5");
+        assert!(inference < 40, "every job became inference");
+    }
+
+    #[test]
+    fn inference_jobs_are_feasibly_specified() {
+        // Every generated serving job must be satisfiable within its
+        // replica cap on the best GPU: peak-load pooled capacity from
+        // `distributability` v100-class replicas clears the 2e′ floor.
+        let oracle = ThroughputOracle::new(3);
+        let trace = Trace::generate(&TraceConfig::mixed(), &oracle);
+        let mut seen = 0;
+        for job in trace.jobs().filter(|j| j.is_inference()) {
+            seen += 1;
+            let inf = job.inference.unwrap();
+            assert!(inf.base_rate > 0.0 && inf.latency_slo_s > 0.0);
+            assert!((0.0..1.0).contains(&inf.diurnal_amplitude));
+            assert!(job.min_throughput == 0.0, "serving job kept a throughput floor");
+            assert!((2..=4).contains(&job.distributability));
+            let v100 = oracle.solo(job, AccelType::V100);
+            let replicas = job.distributability as usize;
+            let mus = vec![crate::workload::serving::service_rate(v100); replicas];
+            let peak = inf.peak_rate();
+            let w = crate::workload::serving::mmc_sojourn(peak, &mus);
+            assert!(
+                w <= inf.latency_slo_s,
+                "{}: {replicas} v100 replicas give {w:.3} s > SLO {:.3} s",
+                job.id,
+                inf.latency_slo_s
+            );
+        }
+        assert!(seen > 20, "mixed preset produced only {seen} inference jobs");
+    }
+
+    #[test]
+    fn mixed_and_serving_presets() {
+        let m = TraceConfig::mixed();
+        assert!(m.inference_fraction > 0.0 && m.inference_fraction < 0.5);
+        let s = TraceConfig::serving_heavy();
+        assert!(s.inference_fraction > m.inference_fraction);
+        let oracle = ThroughputOracle::new(s.seed);
+        let t = Trace::generate(&s, &oracle);
+        let inf = t.jobs().filter(|j| j.is_inference()).count();
+        assert!(inf * 2 > t.n_jobs(), "serving preset is not serving-heavy: {inf}");
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Inference-serving workload class, end to end: golden-trace
+//! byte-stability of the training-only generator, the latency ILP
+//! floor, deterministic replica-autoscaler behaviour, and the mixed
+//! train+infer acceptance runs (GOGH-native completes the mixed preset
+//! with serving SLOs met and beats the random baseline on attainment).
+
+use gogh::baselines::RandomScheduler;
+use gogh::cluster::{Cluster, ClusterSpec, PlacementOp};
+use gogh::config::ExperimentConfig;
+use gogh::coordinator::{GoghOptions, GoghScheduler, Scheduler, SimDriver};
+use gogh::ilp::problem1::latency_adjusted_jobs;
+use gogh::util::Rng;
+use gogh::workload::{
+    serving, AccelType, Combo, InferenceSpec, JobId, JobKind, JobSpec, ThroughputOracle, Trace,
+    TraceConfig, TraceEvent, FAMILIES,
+};
+
+// ---------------------------------------------------------------------
+// Golden-trace regression: the PR-2/3 arrival generator, reimplemented
+// verbatim. Any change to the shared RNG draw order in Trace::generate
+// (e.g. an inference field drawn from the wrong stream) breaks this.
+// ---------------------------------------------------------------------
+
+fn pr3_arrival_stream(cfg: &TraceConfig, oracle: &ThroughputOracle) -> Vec<(f64, JobSpec)> {
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x7ace);
+    let mut out = Vec::with_capacity(cfg.n_jobs);
+    let mut t = 0.0f64;
+    for i in 0..cfg.n_jobs {
+        t += rng.exponential(cfg.mean_interarrival_s);
+        let family = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+        let batches = family.batch_sizes();
+        let batch = batches[rng.range_usize(0, batches.len())];
+        let mut job = JobSpec {
+            id: JobId(i as u32),
+            family,
+            batch_size: batch,
+            replication: 1,
+            min_throughput: 0.0,
+            distributability: rng.range_u32_inclusive(1, cfg.max_distributability),
+            work: rng.exponential(cfg.mean_work_s),
+            inference: None,
+        };
+        let p100 = oracle.solo(&job, AccelType::P100);
+        job.min_throughput = cfg.slo_fraction * p100 * rng.range_f64(0.6, 1.0);
+        out.push((t, job));
+    }
+    out
+}
+
+#[test]
+fn training_only_traces_match_the_pr3_generator_byte_for_byte() {
+    let configs = [
+        TraceConfig::default(),
+        TraceConfig {
+            n_jobs: 250,
+            mean_interarrival_s: 7.0,
+            seed: 42,
+            cancel_rate: 0.2,
+            accel_churn: 3.0,
+            ..Default::default()
+        },
+        TraceConfig {
+            n_jobs: 120,
+            max_distributability: 4,
+            slo_fraction: 0.3,
+            seed: 9,
+            ..Default::default()
+        },
+    ];
+    for cfg in configs {
+        assert_eq!(cfg.inference_fraction, 0.0);
+        let oracle = ThroughputOracle::new(cfg.seed);
+        let golden = pr3_arrival_stream(&cfg, &oracle);
+        let trace = Trace::generate(&cfg, &oracle);
+        let arrivals: Vec<(f64, &JobSpec)> = trace
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Arrival { at, job } => Some((*at, job)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(arrivals.len(), golden.len());
+        for ((gt, gj), (at, aj)) in golden.iter().zip(&arrivals) {
+            assert!(gt.to_bits() == at.to_bits(), "arrival time drifted: {gt} vs {at}");
+            assert_eq!(gj, *aj, "job spec drifted at {}", gj.id);
+            assert_eq!(aj.kind(), JobKind::Training);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Latency ILP floor (constraint 2e′)
+// ---------------------------------------------------------------------
+
+#[test]
+fn latency_adjustment_touches_only_inference_jobs() {
+    let training = JobSpec {
+        id: JobId(0),
+        family: FAMILIES[0],
+        batch_size: 32,
+        replication: 1,
+        min_throughput: 0.33,
+        distributability: 2,
+        work: 100.0,
+        inference: None,
+    };
+    let mut inference = training.clone();
+    inference.id = JobId(1);
+    inference.min_throughput = 0.0;
+    inference.inference = Some(InferenceSpec {
+        base_rate: 10.0,
+        diurnal_amplitude: 0.2,
+        diurnal_phase_s: 0.0,
+        latency_slo_s: 0.25,
+    });
+    let adjusted = latency_adjusted_jobs(&[training.clone(), inference.clone()], 5_000.0);
+    assert_eq!(adjusted[0], training, "training job must pass through untouched");
+    let floor = adjusted[1].min_throughput;
+    assert!(floor > 0.0, "inference job got no capacity floor");
+    assert_eq!(
+        floor,
+        serving::effective_min_throughput(&inference, 5_000.0),
+        "floor must come from the serving linearization"
+    );
+    // everything but the floor is preserved (id, replica cap, profile)
+    assert_eq!(adjusted[1].inference, inference.inference);
+    assert_eq!(adjusted[1].distributability, inference.distributability);
+}
+
+// ---------------------------------------------------------------------
+// Deterministic autoscaler behaviour
+// ---------------------------------------------------------------------
+
+fn serving_job(id: u32, base_rate: f64, slo_s: f64, replica_cap: u32) -> JobSpec {
+    JobSpec {
+        id: JobId(id),
+        family: FAMILIES[1],
+        batch_size: 64,
+        replication: 1,
+        min_throughput: 0.0,
+        distributability: replica_cap,
+        work: 1000.0,
+        inference: Some(InferenceSpec {
+            base_rate,
+            diurnal_amplitude: 0.0,
+            diurnal_phase_s: 0.0,
+            latency_slo_s: slo_s,
+        }),
+    }
+}
+
+fn fresh_scheduler(seed: u64) -> GoghScheduler {
+    let oracle = ThroughputOracle::new(seed);
+    GoghScheduler::without_engine(
+        &oracle,
+        GoghOptions {
+            history_jobs: 0,
+            seed,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn autoscaler_adds_a_replica_on_latency_breach() {
+    // Cold catalog: a v100 replica is estimated at throughput 0.4 →
+    // μ = 20 req/s. λ = 15 (17.25 with headroom) on ONE replica gives a
+    // ~0.36 s M/M/1 sojourn; an SLO of 0.2 s breaches → scale up.
+    let mut cluster = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 4)]));
+    let job = serving_job(0, 15.0, 0.2, 3);
+    cluster.add_job(job);
+    cluster.placement.assign(cluster.spec.accels[0], Combo::Solo(JobId(0)));
+    let mut sched = fresh_scheduler(1);
+    let delta = sched.autoscale(&cluster);
+    assert_eq!(delta.ops.len(), 1, "{:?}", delta.ops);
+    assert!(
+        matches!(delta.ops[0], PlacementOp::Assign { combo: Combo::Solo(JobId(0)), .. }),
+        "{:?}",
+        delta.ops[0]
+    );
+    cluster.apply_delta(&delta).unwrap();
+    assert_eq!(cluster.placement.accels_of(JobId(0)).len(), 2);
+    assert_eq!(Scheduler::autoscale_counts(&sched), (1, 0));
+}
+
+#[test]
+fn autoscaler_releases_an_over_provisioned_replica() {
+    // Three v100 replicas (μ = 60 req/s aggregate) serving λ = 0.5
+    // against a 2 s SLO: dropping one still clears the hysteresis
+    // margin comfortably → exactly one Evict.
+    let mut cluster = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 4)]));
+    let job = serving_job(0, 0.5, 2.0, 3);
+    cluster.add_job(job);
+    for i in 0..3 {
+        cluster.placement.assign(cluster.spec.accels[i], Combo::Solo(JobId(0)));
+    }
+    let mut sched = fresh_scheduler(2);
+    let delta = sched.autoscale(&cluster);
+    assert_eq!(delta.ops.len(), 1, "{:?}", delta.ops);
+    assert!(matches!(delta.ops[0], PlacementOp::Evict { .. }));
+    cluster.apply_delta(&delta).unwrap();
+    assert_eq!(cluster.placement.accels_of(JobId(0)).len(), 2);
+    assert_eq!(Scheduler::autoscale_counts(&sched), (0, 1));
+}
+
+#[test]
+fn autoscaler_never_scales_below_one_replica_or_breaks_pairs() {
+    // One idle-ish replica: over-provisioned by any measure, but a solo
+    // replica is the floor — no op may be emitted.
+    let mut cluster = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 2)]));
+    cluster.add_job(serving_job(0, 0.1, 5.0, 3));
+    cluster.placement.assign(cluster.spec.accels[0], Combo::Solo(JobId(0)));
+    let mut sched = fresh_scheduler(3);
+    assert!(sched.autoscale(&cluster).is_empty());
+
+    // Paired replicas are never broken: both replicas co-located with a
+    // training job → no solo victim exists, even over-provisioned.
+    let mut cluster = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 3)]));
+    cluster.add_job(serving_job(0, 0.1, 5.0, 3));
+    let mut t1 = serving_job(1, 0.0, 1.0, 1);
+    t1.inference = None;
+    let mut t2 = t1.clone();
+    t2.id = JobId(2);
+    cluster.add_job(t1);
+    cluster.add_job(t2);
+    cluster.placement.assign(cluster.spec.accels[0], Combo::pair(JobId(0), JobId(1)));
+    cluster.placement.assign(cluster.spec.accels[1], Combo::pair(JobId(0), JobId(2)));
+    let mut sched = fresh_scheduler(4);
+    let delta = sched.autoscale(&cluster);
+    assert!(
+        !delta.ops.iter().any(|op| matches!(op, PlacementOp::Evict { .. })),
+        "paired replica evicted: {:?}",
+        delta.ops
+    );
+}
+
+// ---------------------------------------------------------------------
+// Mixed-preset acceptance runs
+// ---------------------------------------------------------------------
+
+fn mixed_cfg(n_jobs: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("mixed").unwrap();
+    cfg.trace.n_jobs = n_jobs;
+    // keep the native bootstrap cheap in test budgets
+    cfg.estimator.bootstrap_steps = 60;
+    cfg
+}
+
+fn run_random(cfg: &ExperimentConfig) -> gogh::metrics::RunReport {
+    let oracle = cfg.build_oracle().unwrap();
+    let trace = Trace::generate(&cfg.trace, &oracle);
+    let mut driver = SimDriver::new(
+        ClusterSpec::mix(&cfg.cluster.accel_mix),
+        oracle,
+        trace,
+        cfg.noise_sigma,
+        cfg.monitor_interval_s,
+        cfg.seed,
+    )
+    .unwrap();
+    driver.run(&mut RandomScheduler::new(cfg.seed)).unwrap()
+}
+
+fn run_gogh_native(cfg: &ExperimentConfig) -> (gogh::metrics::RunReport, GoghScheduler) {
+    let oracle = cfg.build_oracle().unwrap();
+    let trace = Trace::generate(&cfg.trace, &oracle);
+    let mut driver = SimDriver::new(
+        ClusterSpec::mix(&cfg.cluster.accel_mix),
+        oracle.clone(),
+        trace,
+        cfg.noise_sigma,
+        cfg.monitor_interval_s,
+        cfg.seed,
+    )
+    .unwrap();
+    let mut sched =
+        GoghScheduler::with_native_backend(&oracle, GoghOptions::from_config(cfg)).unwrap();
+    let report = driver.run(&mut sched).unwrap();
+    (report, sched)
+}
+
+#[test]
+fn gogh_native_serves_the_mixed_preset_within_slos() {
+    let cfg = mixed_cfg(30);
+    let (report, sched) = run_gogh_native(&cfg);
+    assert!(report.inference_total > 0, "mixed preset produced no inference jobs");
+    assert_eq!(
+        report.jobs_completed + report.jobs_cancelled,
+        report.jobs_total,
+        "mixed run lost jobs"
+    );
+    assert!(
+        report.inference_slo_met > 0,
+        "no inference job met its latency SLO: attainment {:.3}, {} completed",
+        report.inference_attainment,
+        report.inference_completed
+    );
+    assert!(report.replica_seconds > 0.0);
+    // serving measurements flowed into the learning loop
+    let learn = sched.learning_stats();
+    assert!(
+        learn.inference_measurements > 0,
+        "no inference measurement reached the catalog"
+    );
+}
+
+#[test]
+fn gogh_native_beats_random_on_inference_slo_attainment() {
+    let cfg = mixed_cfg(40);
+    let random = run_random(&cfg);
+    let (gogh_report, _) = run_gogh_native(&cfg);
+    assert!(gogh_report.inference_total > 0);
+    assert_eq!(gogh_report.inference_total, random.inference_total);
+    assert!(
+        gogh_report.inference_attainment > random.inference_attainment,
+        "gogh attainment {:.3} does not beat random {:.3}",
+        gogh_report.inference_attainment,
+        random.inference_attainment
+    );
+}

@@ -54,6 +54,7 @@ fn eval_jobs() -> Vec<JobSpec> {
             min_throughput: 0.0,
             distributability: 1,
             work: 1.0,
+            inference: None,
         })
         .collect()
 }

@@ -120,6 +120,7 @@ fn prop_problem1_solutions_always_satisfy_constraints() {
                     min_throughput: 0.0,
                     distributability: rng.range_u32_inclusive(1, 2),
                     work: 10.0,
+                    inference: None,
                 };
                 j.min_throughput = rng.range_f64(0.1, 0.5) * oracle.solo(&j, AccelType::P100);
                 j
@@ -144,6 +145,7 @@ fn prop_problem1_solutions_always_satisfy_constraints() {
             max_pairs_per_job: rng.range_usize(0, 4),
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
+            now_s: 0.0,
         };
         let sol = solve_problem1(&input, &BnbConfig::default());
         assert!(
@@ -276,6 +278,7 @@ fn delta_test_cluster(n_jobs: u32) -> Cluster {
             min_throughput: 0.0,
             distributability: 2,
             work: 100.0,
+            inference: None,
         });
     }
     c
@@ -438,6 +441,7 @@ fn prop_oracle_pair_is_never_faster_than_solo() {
                 min_throughput: 0.0,
                 distributability: 1,
                 work: 1.0,
+                inference: None,
             };
             let j2 = JobSpec {
                 id: JobId(2),
@@ -447,6 +451,7 @@ fn prop_oracle_pair_is_never_faster_than_solo() {
                 min_throughput: 0.0,
                 distributability: 1,
                 work: 1.0,
+                inference: None,
             };
             for &a in ACCEL_TYPES.iter() {
                 let (t1, t2) = oracle.pair(&j1, &j2, a);
@@ -580,6 +585,121 @@ fn prop_refine_queries_never_contain_round_labels() {
                      measured label ({})",
                     q.x[slot]
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_autoscaling_deltas_preserve_cluster_invariants() {
+    // Random mixed clusters with random valid placements: whatever the
+    // replica autoscaler emits must apply cleanly (no double-booked
+    // instance, no distributability overshoot) and never drop a live
+    // placed serving job below one replica.
+    use gogh::coordinator::{GoghOptions, GoghScheduler};
+    use gogh::workload::InferenceSpec;
+    let mut rng = Rng::seed_from_u64(2025);
+    for case in 0..40 {
+        let per_type = rng.range_u32_inclusive(1, 3);
+        let mut c = Cluster::new(ClusterSpec::balanced(per_type));
+        let n_jobs = rng.range_u32_inclusive(1, 8);
+        for i in 0..n_jobs {
+            let f = FAMILIES[rng.range_usize(0, FAMILIES.len())];
+            let mut j = JobSpec {
+                id: JobId(i),
+                family: f,
+                batch_size: f.batch_sizes()[rng.range_usize(0, f.batch_sizes().len())],
+                replication: 1,
+                min_throughput: 0.0,
+                distributability: rng.range_u32_inclusive(2, 4),
+                work: 500.0,
+                inference: None,
+            };
+            if rng.bool(0.7) {
+                j.inference = Some(InferenceSpec {
+                    base_rate: rng.range_f64(0.5, 40.0),
+                    diurnal_amplitude: rng.range_f64(0.0, 0.4),
+                    diurnal_phase_s: rng.range_f64(0.0, 86_400.0),
+                    latency_slo_s: rng.range_f64(0.05, 2.0),
+                });
+            } else {
+                j.min_throughput = 0.1;
+            }
+            c.add_job(j);
+        }
+        // random valid placement: each job on 1..=D_j instances, solo or
+        // paired, never twice on one instance
+        let accels = c.spec.accels.clone();
+        let mut free: Vec<AccelId> = accels.clone();
+        rng.shuffle(&mut free);
+        for i in 0..n_jobs {
+            let d = c.job(JobId(i)).unwrap().distributability;
+            let want = rng.range_u32_inclusive(0, d.min(3));
+            for _ in 0..want {
+                let Some(a) = free.pop() else { break };
+                c.placement.assign(a, Combo::Solo(JobId(i)));
+            }
+        }
+        // sprinkle a few pairs among placed jobs
+        if n_jobs >= 2 {
+            for _ in 0..rng.range_usize(0, 3) {
+                let (Some(a), j1, j2) = (
+                    free.pop(),
+                    JobId(rng.range_u32_inclusive(0, n_jobs - 1)),
+                    JobId(rng.range_u32_inclusive(0, n_jobs - 1)),
+                ) else {
+                    break;
+                };
+                if j1 == j2 {
+                    continue;
+                }
+                let room = |j: JobId| {
+                    (c.placement.accels_of(j).len() as u32)
+                        < c.job(j).map_or(0, |s| s.distributability)
+                };
+                if room(j1) && room(j2) {
+                    c.placement.assign(a, Combo::pair(j1, j2));
+                }
+            }
+        }
+        let placed_before: Vec<JobId> = (0..n_jobs)
+            .map(JobId)
+            .filter(|&j| c.placement.is_placed(j))
+            .collect();
+        let oracle = ThroughputOracle::new(case as u64);
+        let mut sched = GoghScheduler::without_engine(
+            &oracle,
+            GoghOptions {
+                history_jobs: 0,
+                seed: case as u64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // several consecutive ticks: the delta must stay valid as the
+        // placement evolves under the autoscaler's own actions
+        for tick in 0..3 {
+            let delta = sched.autoscale(&c);
+            c.apply_delta(&delta).unwrap_or_else(|e| {
+                panic!("case {case} tick {tick}: autoscale delta rejected: {e}")
+            });
+            for &j in &placed_before {
+                assert!(
+                    !c.placement.accels_of(j).is_empty(),
+                    "case {case} tick {tick}: job {j} scaled to zero replicas"
+                );
+                let d = c.job(j).unwrap().distributability as usize;
+                assert!(
+                    c.placement.accels_of(j).len() <= d,
+                    "case {case} tick {tick}: job {j} exceeds its replica cap"
+                );
+            }
+            // no double-booking anywhere
+            for &j in &placed_before {
+                let mut seen = std::collections::HashSet::new();
+                for aid in c.placement.accels_of(j) {
+                    assert!(seen.insert(*aid), "job {j} double-booked on {aid}");
+                }
             }
         }
     }

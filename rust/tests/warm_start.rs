@@ -24,6 +24,7 @@ fn mk_jobs(n: u32, oracle: &ThroughputOracle, slo_frac: f64) -> Vec<JobSpec> {
                 min_throughput: 0.0,
                 distributability: 2,
                 work: 100.0,
+                inference: None,
             };
             j.min_throughput = slo_frac * oracle.solo(&j, AccelType::P100);
             j
@@ -62,6 +63,7 @@ fn greedy_incumbent_is_feasible_and_bounds_the_optimum() {
             max_pairs_per_job: 2,
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
+            now_s: 0.0,
         };
         let cfg = BnbConfig::default();
         let (model, cols, slacks) = build_problem1(&input, &cfg);
@@ -101,6 +103,7 @@ fn warm_and_cold_reach_identical_optima() {
             max_pairs_per_job: 2,
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
+            now_s: 0.0,
         };
         let warm_cfg = BnbConfig {
             max_nodes: 100_000,
@@ -154,6 +157,7 @@ fn warm_start_explores_strictly_fewer_nodes_at_scale() {
             max_pairs_per_job: 2,
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
+            now_s: 0.0,
         };
         let warm_cfg = BnbConfig {
             max_nodes: 150_000,
@@ -204,6 +208,7 @@ fn node_budget_degrades_gracefully_to_the_incumbent() {
         max_pairs_per_job: 2,
         slack_penalty: Some(2000.0),
         throughput_bonus: 300.0,
+        now_s: 0.0,
     };
     let cfg = BnbConfig::default();
     let (model, cols, slacks) = build_problem1(&input, &cfg);
