@@ -1,0 +1,48 @@
+#!/usr/bin/env python3
+"""Fail CI if a CLI flag read by the binaries is missing from docs/CLI.md.
+
+The binaries read flags exclusively through the `Args` accessors
+(`get` / `get_parse` / `has`), so a regex over the two entry points is
+a complete inventory. Every flag found there must appear in
+docs/CLI.md spelled `--flag`, which keeps the CLI reference from
+silently rotting as flags are added.
+
+Usage: python3 .github/scripts/docs_freshness.py  (run from repo root)
+"""
+
+import re
+import sys
+from pathlib import Path
+
+SOURCES = [
+    Path("rust/src/main.rs"),
+    Path("rust/src/bin/goghd.rs"),
+]
+DOC = Path("docs/CLI.md")
+
+FLAG_RE = re.compile(r'args\.(?:get|get_parse|has)(?:::<[^>]+>)?\s*\(\s*"([a-z0-9-]+)"\s*\)')
+
+
+def main() -> int:
+    flags: dict[str, list[str]] = {}
+    for src in SOURCES:
+        for flag in FLAG_RE.findall(src.read_text()):
+            flags.setdefault(flag, []).append(str(src))
+    if not flags:
+        print("docs_freshness: no flags found — the extraction regex is stale", file=sys.stderr)
+        return 1
+
+    doc = DOC.read_text()
+    missing = sorted(f for f in flags if f"--{f}" not in doc)
+    if missing:
+        for f in missing:
+            print(f"docs_freshness: --{f} (read by {', '.join(flags[f])}) "
+                  f"is not documented in {DOC}", file=sys.stderr)
+        return 1
+
+    print(f"docs_freshness: all {len(flags)} flags documented in {DOC}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+//! `goghd` — the long-lived GOGH scheduling daemon.
+//!
+//! Listens on a TCP or Unix socket for newline-delimited JSON requests
+//! (`docs/PROTOCOL.md`), schedules submitted jobs with the same policy
+//! core the simulator uses, and checkpoints its state — including the
+//! learned throughput catalog — to a snapshot file (`docs/SNAPSHOT.md`)
+//! so a restart resumes where it left off.
+
+use gogh::config::{BackendKind, ExperimentConfig};
+use gogh::daemon::{serve, DaemonOptions, Endpoint};
+use gogh::util::Args;
+use gogh::Result;
+
+const USAGE: &str = "goghd — long-lived GOGH scheduling daemon
+
+USAGE:
+  goghd [--config cfg.json | --preset default|large|mixed|serving]
+        [--backend auto|pjrt|native|none] [--seed S] [--gavel-csv data.csv]
+        [--addr HOST:PORT | --socket PATH] [--port-file PATH]
+        [--state snapshot.json] [--snapshot-every SECONDS] [--fresh]
+        [--time-scale X]
+
+Defaults: --addr 127.0.0.1:7411, --snapshot-every 30, --time-scale 1.
+Use `--addr 127.0.0.1:0 --port-file p.txt` for an ephemeral port.
+Submit work with the `gogh submit|queue|cancel|status|drain` client
+subcommands, or speak the one-line-JSON protocol directly over nc.
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.iter().any(|a| a == "--help" || a == "-h" || a == "help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv);
+
+    let mut cfg = match (args.get("config"), args.get("preset")) {
+        (Some(_), Some(_)) => anyhow::bail!("--config and --preset are mutually exclusive"),
+        (Some(p), None) => ExperimentConfig::load(std::path::Path::new(p))?,
+        (None, Some(name)) => ExperimentConfig::preset(name)?,
+        (None, None) => ExperimentConfig::default(),
+    };
+    if let Some(b) = args.get("backend") {
+        cfg.gogh.backend = BackendKind::from_key(b)?;
+    }
+    if let Some(s) = args.get_parse::<u64>("seed") {
+        cfg.seed = s;
+    }
+    if let Some(p) = args.get("gavel-csv") {
+        cfg.gavel_csv = Some(p.to_string());
+    }
+
+    let endpoint = match (args.get("socket"), args.get("addr")) {
+        (Some(_), Some(_)) => anyhow::bail!("--socket and --addr are mutually exclusive"),
+        (Some(path), None) => Endpoint::Unix(path.into()),
+        (None, addr) => Endpoint::Tcp(addr.unwrap_or("127.0.0.1:7411").to_string()),
+    };
+
+    serve(DaemonOptions {
+        cfg,
+        endpoint,
+        state: args.get("state").map(Into::into),
+        snapshot_every_s: args.get_parse("snapshot-every").unwrap_or(30.0),
+        time_scale: args.get_parse("time-scale").unwrap_or(1.0),
+        port_file: args.get("port-file").map(Into::into),
+        fresh: args.has("fresh"),
+    })
+}

@@ -347,6 +347,11 @@ impl Cluster {
         self.down.contains(&a)
     }
 
+    /// Every out-of-service instance, in sorted order (snapshot capture).
+    pub fn down_accels(&self) -> Vec<AccelId> {
+        self.down.iter().copied().collect()
+    }
+
     /// In-service instances of one shard, in spec order — the
     /// availability filtering every shard worker's instance pool starts
     /// from (a down accelerator must never enter a local ILP).

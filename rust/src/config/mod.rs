@@ -276,6 +276,35 @@ fn accel_from_name(n: &str) -> Result<AccelType> {
         .ok_or_else(|| anyhow::anyhow!("unknown accel type {n:?}"))
 }
 
+// Typed field readers with dotted-path context. A key that is *absent*
+// keeps its default (partial configs are fine); a key that is present
+// with the wrong JSON type is a hard error naming the offending field —
+// previously such typos silently fell back to the default value.
+fn expect_f64(v: &Json, path: &str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow::anyhow!("config field {path}: expected a number, got {v}"))
+}
+
+fn expect_u64(v: &Json, path: &str) -> Result<u64> {
+    v.as_u64()
+        .ok_or_else(|| anyhow::anyhow!("config field {path}: expected an integer, got {v}"))
+}
+
+fn expect_usize(v: &Json, path: &str) -> Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| anyhow::anyhow!("config field {path}: expected an integer, got {v}"))
+}
+
+fn expect_bool(v: &Json, path: &str) -> Result<bool> {
+    v.as_bool()
+        .ok_or_else(|| anyhow::anyhow!("config field {path}: expected a boolean, got {v}"))
+}
+
+fn expect_str<'j>(v: &'j Json, path: &str) -> Result<&'j str> {
+    v.as_str()
+        .ok_or_else(|| anyhow::anyhow!("config field {path}: expected a string, got {v}"))
+}
+
 impl ExperimentConfig {
     /// Named experiment presets (`gogh simulate --preset <name>`).
     pub fn preset(name: &str) -> Result<Self> {
@@ -338,137 +367,157 @@ impl ExperimentConfig {
         cfg
     }
 
+    /// Parse a config, overlaying the given fields on the defaults.
+    /// Errors carry a pointer to the offending input: parse failures
+    /// name the line/column, type mismatches and unknown enum values
+    /// name the dotted field path (e.g. `trace.n_jobs`).
     pub fn from_json(text: &str) -> Result<Self> {
-        let j = Json::parse(text)?;
+        use anyhow::Context as _;
+        let j = Json::parse(text).context("invalid config JSON")?;
         let mut cfg = ExperimentConfig::default();
         if let Some(c) = j.get("cluster") {
             if let Some(mix) = c.get("accel_mix").and_then(|m| m.as_object()) {
                 cfg.cluster.accel_mix = mix
                     .iter()
-                    .map(|(k, v)| Ok((accel_from_name(k)?, v.as_f64().unwrap_or(0.0) as u32)))
+                    .map(|(k, v)| {
+                        let n = expect_f64(v, &format!("cluster.accel_mix.{k}"))?;
+                        Ok((accel_from_name(k)?, n as u32))
+                    })
                     .collect::<Result<Vec<_>>>()?;
             }
         }
         if let Some(t) = j.get("trace") {
             if let Some(v) = t.get("n_jobs") {
-                cfg.trace.n_jobs = v.as_usize().unwrap_or(cfg.trace.n_jobs);
+                cfg.trace.n_jobs = expect_usize(v, "trace.n_jobs")?;
             }
             if let Some(v) = t.get("mean_interarrival_s") {
-                cfg.trace.mean_interarrival_s = v.as_f64().unwrap_or(cfg.trace.mean_interarrival_s);
+                cfg.trace.mean_interarrival_s = expect_f64(v, "trace.mean_interarrival_s")?;
             }
             if let Some(v) = t.get("mean_work_s") {
-                cfg.trace.mean_work_s = v.as_f64().unwrap_or(cfg.trace.mean_work_s);
+                cfg.trace.mean_work_s = expect_f64(v, "trace.mean_work_s")?;
             }
             if let Some(v) = t.get("slo_fraction") {
-                cfg.trace.slo_fraction = v.as_f64().unwrap_or(cfg.trace.slo_fraction);
+                cfg.trace.slo_fraction = expect_f64(v, "trace.slo_fraction")?;
             }
             if let Some(v) = t.get("max_distributability") {
-                cfg.trace.max_distributability = v.as_f64().unwrap_or(2.0) as u32;
+                cfg.trace.max_distributability =
+                    expect_f64(v, "trace.max_distributability")? as u32;
             }
             if let Some(v) = t.get("cancel_rate") {
-                cfg.trace.cancel_rate = v.as_f64().unwrap_or(cfg.trace.cancel_rate);
+                cfg.trace.cancel_rate = expect_f64(v, "trace.cancel_rate")?;
             }
             if let Some(v) = t.get("accel_churn") {
-                cfg.trace.accel_churn = v.as_f64().unwrap_or(cfg.trace.accel_churn);
+                cfg.trace.accel_churn = expect_f64(v, "trace.accel_churn")?;
             }
             if let Some(v) = t.get("inference_fraction") {
                 cfg.trace.inference_fraction =
-                    v.as_f64().unwrap_or(cfg.trace.inference_fraction).clamp(0.0, 1.0);
+                    expect_f64(v, "trace.inference_fraction")?.clamp(0.0, 1.0);
             }
             if let Some(v) = t.get("seed") {
-                cfg.trace.seed = v.as_u64().unwrap_or(cfg.trace.seed);
+                cfg.trace.seed = expect_u64(v, "trace.seed")?;
             }
         }
         if let Some(e) = j.get("estimator") {
             if let Some(v) = e.get("p1_arch") {
-                cfg.estimator.p1_arch = Arch::from_key(v.as_str().unwrap_or("rnn"))?;
+                cfg.estimator.p1_arch = Arch::from_key(expect_str(v, "estimator.p1_arch")?)
+                    .context("config field estimator.p1_arch")?;
             }
             if let Some(v) = e.get("p2_arch") {
-                cfg.estimator.p2_arch = Arch::from_key(v.as_str().unwrap_or("ff"))?;
+                cfg.estimator.p2_arch = Arch::from_key(expect_str(v, "estimator.p2_arch")?)
+                    .context("config field estimator.p2_arch")?;
             }
             if let Some(v) = e.get("artifacts_dir") {
-                cfg.estimator.artifacts_dir = v.as_str().unwrap_or("artifacts").to_string();
+                cfg.estimator.artifacts_dir =
+                    expect_str(v, "estimator.artifacts_dir")?.to_string();
             }
             if let Some(v) = e.get("online_steps_per_round") {
-                cfg.estimator.online_steps_per_round = v.as_usize().unwrap_or(4);
+                cfg.estimator.online_steps_per_round =
+                    expect_usize(v, "estimator.online_steps_per_round")?;
             }
             if let Some(v) = e.get("bootstrap_steps") {
-                cfg.estimator.bootstrap_steps = v.as_usize().unwrap_or(300);
+                cfg.estimator.bootstrap_steps = expect_usize(v, "estimator.bootstrap_steps")?;
             }
             if let Some(v) = e.get("replay_capacity") {
-                cfg.estimator.replay_capacity = v.as_usize().unwrap_or(8192);
+                cfg.estimator.replay_capacity = expect_usize(v, "estimator.replay_capacity")?;
             }
         }
         if let Some(o) = j.get("optimizer") {
             if let Some(v) = o.get("max_pairs_per_job") {
-                cfg.optimizer.max_pairs_per_job = v.as_usize().unwrap_or(3);
+                cfg.optimizer.max_pairs_per_job = expect_usize(v, "optimizer.max_pairs_per_job")?;
             }
             if let Some(v) = o.get("max_nodes") {
-                cfg.optimizer.max_nodes = v.as_usize().unwrap_or(4000);
+                cfg.optimizer.max_nodes = expect_usize(v, "optimizer.max_nodes")?;
             }
             if let Some(v) = o.get("time_limit_s") {
-                cfg.optimizer.time_limit_s = v.as_f64().unwrap_or(5.0);
+                cfg.optimizer.time_limit_s = expect_f64(v, "optimizer.time_limit_s")?;
             }
             if let Some(v) = o.get("slack_penalty") {
-                cfg.optimizer.slack_penalty = v.as_f64().unwrap_or(2000.0);
+                cfg.optimizer.slack_penalty = expect_f64(v, "optimizer.slack_penalty")?;
             }
             if let Some(v) = o.get("throughput_bonus") {
-                cfg.optimizer.throughput_bonus = v.as_f64().unwrap_or(300.0);
+                cfg.optimizer.throughput_bonus = expect_f64(v, "optimizer.throughput_bonus")?;
             }
             if let Some(v) = o.get("warm_start") {
-                cfg.optimizer.warm_start = v.as_bool().unwrap_or(true);
+                cfg.optimizer.warm_start = expect_bool(v, "optimizer.warm_start")?;
             }
             if let Some(v) = o.get("node_selection") {
-                let key = v.as_str().unwrap_or("best-bound");
-                cfg.optimizer.node_selection = crate::ilp::NodeSelection::from_key(key)
-                    .ok_or_else(|| anyhow::anyhow!("unknown node_selection {key:?}"))?;
+                let key = expect_str(v, "optimizer.node_selection")?;
+                cfg.optimizer.node_selection =
+                    crate::ilp::NodeSelection::from_key(key).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "config field optimizer.node_selection: unknown strategy {key:?}"
+                        )
+                    })?;
             }
         }
         if let Some(g) = j.get("gogh") {
             if let Some(v) = g.get("backend") {
-                cfg.gogh.backend = BackendKind::from_key(v.as_str().unwrap_or("auto"))?;
+                cfg.gogh.backend = BackendKind::from_key(expect_str(v, "gogh.backend")?)
+                    .context("config field gogh.backend")?;
             }
             if let Some(v) = g.get("history_jobs") {
-                cfg.gogh.history_jobs = v.as_usize().unwrap_or(cfg.gogh.history_jobs);
+                cfg.gogh.history_jobs = expect_usize(v, "gogh.history_jobs")?;
             }
             if let Some(v) = g.get("enable_refinement") {
-                cfg.gogh.enable_refinement = v.as_bool().unwrap_or(cfg.gogh.enable_refinement);
+                cfg.gogh.enable_refinement = expect_bool(v, "gogh.enable_refinement")?;
             }
             if let Some(v) = g.get("exploration_epsilon") {
-                cfg.gogh.exploration_epsilon =
-                    v.as_f64().unwrap_or(cfg.gogh.exploration_epsilon);
+                cfg.gogh.exploration_epsilon = expect_f64(v, "gogh.exploration_epsilon")?;
             }
             if let Some(v) = g.get("full_resolve_every") {
                 cfg.gogh.full_resolve_every =
-                    v.as_usize().unwrap_or(cfg.gogh.full_resolve_every).max(1);
+                    expect_usize(v, "gogh.full_resolve_every")?.max(1);
             }
             if let Some(v) = g.get("neighborhood") {
-                cfg.gogh.neighborhood = v.as_usize().unwrap_or(cfg.gogh.neighborhood);
+                cfg.gogh.neighborhood = expect_usize(v, "gogh.neighborhood")?;
             }
             if let Some(v) = g.get("shards") {
-                cfg.gogh.shards = v.as_usize().unwrap_or(cfg.gogh.shards).max(1);
+                cfg.gogh.shards = expect_usize(v, "gogh.shards")?.max(1);
             }
             if let Some(v) = g.get("estimate_cache") {
-                cfg.gogh.estimate_cache = v.as_bool().unwrap_or(cfg.gogh.estimate_cache);
+                cfg.gogh.estimate_cache = expect_bool(v, "gogh.estimate_cache")?;
             }
             if let Some(v) = g.get("p1_candidates") {
-                cfg.gogh.p1_candidates = v.as_usize().unwrap_or(cfg.gogh.p1_candidates);
+                cfg.gogh.p1_candidates = expect_usize(v, "gogh.p1_candidates")?;
             }
         }
         if let Some(v) = j.get("monitor_interval_s") {
-            cfg.monitor_interval_s = v.as_f64().unwrap_or(30.0);
+            cfg.monitor_interval_s = expect_f64(v, "monitor_interval_s")?;
         }
         if let Some(v) = j.get("noise_sigma") {
-            cfg.noise_sigma = v.as_f64().unwrap_or(0.03);
+            cfg.noise_sigma = expect_f64(v, "noise_sigma")?;
         }
         if let Some(v) = j.get("migration_cost_s") {
-            cfg.migration_cost_s = v.as_f64().unwrap_or(0.0);
+            cfg.migration_cost_s = expect_f64(v, "migration_cost_s")?;
         }
         if let Some(v) = j.get("seed") {
-            cfg.seed = v.as_u64().unwrap_or(17);
+            cfg.seed = expect_u64(v, "seed")?;
         }
         if let Some(v) = j.get("gavel_csv") {
-            cfg.gavel_csv = v.as_str().map(|s| s.to_string());
+            cfg.gavel_csv = match v {
+                Json::Null => None,
+                other => Some(expect_str(other, "gavel_csv")?.to_string()),
+            };
         }
         Ok(cfg)
     }
@@ -618,6 +667,30 @@ mod tests {
         assert!(
             ExperimentConfig::from_json(r#"{"optimizer": {"node_selection": "bogus"}}"#).is_err()
         );
+    }
+
+    #[test]
+    fn type_mismatch_names_the_field_path() {
+        let err = ExperimentConfig::from_json(r#"{"trace": {"n_jobs": "many"}}"#).unwrap_err();
+        assert!(err.to_string().contains("trace.n_jobs"), "{err}");
+        let err = ExperimentConfig::from_json(r#"{"gogh": {"shards": true}}"#).unwrap_err();
+        assert!(err.to_string().contains("gogh.shards"), "{err}");
+        let err = ExperimentConfig::from_json(r#"{"optimizer": {"warm_start": 3}}"#).unwrap_err();
+        assert!(err.to_string().contains("optimizer.warm_start"), "{err}");
+        let err = ExperimentConfig::from_json(r#"{"gogh": {"backend": "tpu"}}"#).unwrap_err();
+        assert!(err.to_string().contains("gogh.backend"), "{err}");
+        let err =
+            ExperimentConfig::from_json(r#"{"cluster": {"accel_mix": {"v100": "two"}}}"#)
+                .unwrap_err();
+        assert!(err.to_string().contains("cluster.accel_mix.v100"), "{err}");
+    }
+
+    #[test]
+    fn parse_failure_names_line_and_column() {
+        let err = ExperimentConfig::from_json("{\n  \"seed\": }\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("invalid config JSON"), "{msg}");
+        assert!(msg.contains("line 2"), "{msg}");
     }
 
     #[test]

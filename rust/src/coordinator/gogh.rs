@@ -344,6 +344,18 @@ impl GoghScheduler {
         Ok(s)
     }
 
+    /// Replace the catalog with one restored from a daemon snapshot.
+    /// Every job the restored catalog knows is marked as already
+    /// initialized (its round-0 estimates *are* the restored records —
+    /// re-running P1 would overwrite learned P2 refinements), and the
+    /// estimate cache is invalidated so the next solve reads the
+    /// restored values.
+    pub fn restore_catalog(&mut self, catalog: Catalog) {
+        self.initialized.extend(catalog.known_jobs().copied());
+        self.catalog = catalog;
+        self.cache.invalidate();
+    }
+
     /// Pre-train P1/P2 on catalog history (build-time data only).
     fn bootstrap(&mut self) -> Result<()> {
         let steps = self.options.estimator.bootstrap_steps;
@@ -1394,32 +1406,13 @@ impl Gogh {
     ///   infallible, so the terminal `none` rung is never reached in
     ///   practice).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
-        match cfg.gogh.backend {
-            crate::config::BackendKind::Pjrt => {
-                let engine = Engine::load(&cfg.estimator.artifacts_dir).map_err(|e| {
-                    anyhow::anyhow!(
-                        "backend pjrt requested but the PJRT engine failed to load from {:?} \
-                         ({e}); build artifacts with `make artifacts` or use --backend native",
-                        cfg.estimator.artifacts_dir
-                    )
-                })?;
-                Self::with_engine(&engine, cfg)
-            }
-            crate::config::BackendKind::Native => Self::with_native(cfg),
-            crate::config::BackendKind::None => Self::without_engine(cfg),
-            crate::config::BackendKind::Auto => {
-                match Engine::load(&cfg.estimator.artifacts_dir) {
-                    Ok(engine) => Self::with_engine(&engine, cfg),
-                    Err(err) => {
-                        crate::log_warn!(
-                            "PJRT engine unavailable ({err}); using the native pure-Rust \
-                             estimator backend instead"
-                        );
-                        Self::with_native(cfg)
-                    }
-                }
-            }
-        }
+        let (driver, oracle) = Self::build_driver(cfg)?;
+        let (scheduler, backend) = build_scheduler(cfg, &oracle)?;
+        Ok(Self {
+            driver,
+            scheduler,
+            backend,
+        })
     }
 
     /// Build reusing an existing engine (benches construct many systems).
@@ -1493,5 +1486,45 @@ impl Gogh {
 
     pub fn scheduler_mut(&mut self) -> &mut GoghScheduler {
         &mut self.scheduler
+    }
+}
+
+/// Resolve `cfg.gogh.backend` into a ready [`GoghScheduler`] — the
+/// fallback ladder behind [`Gogh::from_config`], shared with the `goghd`
+/// daemon (which owns a [`crate::engine::GoghCore`] instead of a
+/// [`SimDriver`]). Returns the scheduler plus the backend name actually
+/// mounted ("pjrt" / "native" / "none").
+pub fn build_scheduler(
+    cfg: &ExperimentConfig,
+    oracle: &ThroughputOracle,
+) -> Result<(GoghScheduler, &'static str)> {
+    let options = GoghOptions::from_config(cfg);
+    match cfg.gogh.backend {
+        crate::config::BackendKind::Pjrt => {
+            let engine = Engine::load(&cfg.estimator.artifacts_dir).map_err(|e| {
+                anyhow::anyhow!(
+                    "backend pjrt requested but the PJRT engine failed to load from {:?} \
+                     ({e}); build artifacts with `make artifacts` or use --backend native",
+                    cfg.estimator.artifacts_dir
+                )
+            })?;
+            Ok((GoghScheduler::new(&engine, oracle, options)?, "pjrt"))
+        }
+        crate::config::BackendKind::Native => {
+            Ok((GoghScheduler::with_native_backend(oracle, options)?, "native"))
+        }
+        crate::config::BackendKind::None => {
+            Ok((GoghScheduler::without_engine(oracle, options)?, "none"))
+        }
+        crate::config::BackendKind::Auto => match Engine::load(&cfg.estimator.artifacts_dir) {
+            Ok(engine) => Ok((GoghScheduler::new(&engine, oracle, options)?, "pjrt")),
+            Err(err) => {
+                crate::log_warn!(
+                    "PJRT engine unavailable ({err}); using the native pure-Rust \
+                     estimator backend instead"
+                );
+                Ok((GoghScheduler::with_native_backend(oracle, options)?, "native"))
+            }
+        },
     }
 }

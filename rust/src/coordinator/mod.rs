@@ -13,6 +13,8 @@ pub mod refinement;
 pub mod scheduler;
 
 pub use estimate_cache::{EstimateCache, EstimateCacheStats};
-pub use gogh::{Gogh, GoghOptions, GoghScheduler, LearningStats, ShardStats, SolverPathStats};
+pub use gogh::{
+    build_scheduler, Gogh, GoghOptions, GoghScheduler, LearningStats, ShardStats, SolverPathStats,
+};
 pub use optimizer::Optimizer;
 pub use scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};

@@ -1,28 +1,24 @@
-//! Event-driven scheduler API + the shared discrete-event simulation
-//! driver.
+//! Event-driven scheduler API + the trace-replay simulation frontend.
 //!
 //! Every policy (GOGH and the baselines) implements [`Scheduler`]: the
-//! driver dispatches one [`ClusterEvent`] at a time (arrival,
+//! engine dispatches one [`ClusterEvent`] at a time (arrival,
 //! completion, cancellation, monitor tick, accelerator churn) from a
 //! time-ordered event queue, and the policy answers with a [`Decision`]
 //! carrying an incremental [`PlacementDelta`] that the cluster validates
-//! and applies atomically. The [`SimDriver`] replays a trace against a
-//! policy, integrating energy, SLO deficit, migrations (with a
-//! configurable restart penalty) and completion times into a
-//! [`crate::metrics::RunReport`]. Using one driver for all policies is
-//! what makes the e2e comparison table apples-to-apples.
+//! and applies atomically. The event loop itself lives in
+//! [`crate::engine::GoghCore`], shared with the `goghd` daemon;
+//! [`SimDriver`] is the simulator frontend — it loads a trace into the
+//! core, drives the virtual clock to drain, and returns the
+//! [`crate::metrics::RunReport`]. Using one engine for all policies and
+//! both frontends is what makes the e2e comparison table
+//! apples-to-apples.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
-
-use crate::cluster::energy::{placement_loads, EnergyMeter};
 use crate::cluster::{
     AccelId, Cluster, ClusterSpec, Measurement, Monitor, Placement, PlacementDelta, PlacementOp,
 };
-use crate::metrics::{LatencyHistogram, RunReport};
-use crate::workload::{
-    serving, AccelType, Combo, JobId, JobSpec, ThroughputOracle, Trace, TraceEvent,
-};
+use crate::engine::GoghCore;
+use crate::metrics::RunReport;
+use crate::workload::{Combo, JobId, ThroughputOracle, Trace};
 use crate::Result;
 
 /// One event in the life of the cluster, dispatched to the policy.
@@ -110,96 +106,13 @@ pub trait Scheduler {
     }
 }
 
-/// Internal queue payloads (trace events + self-scheduling ticks).
-#[derive(Debug, Clone)]
-enum SimEvent {
-    Arrival(JobSpec),
-    Cancel(JobId),
-    MonitorTick,
-    AccelDown(AccelId),
-    AccelUp(AccelId),
-}
-
-struct QueueEntry {
-    at: f64,
-    seq: u64,
-    ev: SimEvent,
-}
-
-impl PartialEq for QueueEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-impl Eq for QueueEntry {}
-impl PartialOrd for QueueEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for QueueEntry {
-    /// `BinaryHeap` is a max-heap: earliest time pops first, ties break
-    /// by insertion order (lower seq first) for determinism.
-    fn cmp(&self, other: &Self) -> Ordering {
-        other
-            .at
-            .total_cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// Time-ordered event queue with deterministic FIFO tie-breaking.
-#[derive(Default)]
-struct EventQueue {
-    heap: BinaryHeap<QueueEntry>,
-    seq: u64,
-}
-
-impl EventQueue {
-    fn push(&mut self, at: f64, ev: SimEvent) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(QueueEntry { at, seq, ev });
-    }
-
-    fn pop(&mut self) -> Option<QueueEntry> {
-        self.heap.pop()
-    }
-}
-
-/// Per-run bookkeeping (JCT, queueing delay, decision latency).
-#[derive(Default)]
-struct RunState {
-    jct_sum: f64,
-    arrival_time: HashMap<JobId, f64>,
-    first_place: HashMap<JobId, f64>,
-    queue_wait_sum: f64,
-    queue_waits: usize,
-    decision_s: f64,
-    /// jobs evicted by an AccelDown; they pay the restart penalty when
-    /// re-placed (the eviction happens outside `apply_delta`, so
-    /// `DeltaOutcome::migrated_jobs` cannot see them).
-    failure_evicted: std::collections::BTreeSet<JobId>,
-    /// time-weighted serving-latency distribution over all inference jobs
-    inf_hist: LatencyHistogram,
-    /// seconds of inference serving-time inside the latency SLO
-    inf_attained_s: f64,
-    /// total seconds of inference serving-time observed
-    inf_total_s: f64,
-    /// per-job (attained, total) serving seconds, for the SLO-met count
-    inf_job_time: HashMap<JobId, (f64, f64)>,
-}
-
-/// Discrete-event simulation of a trace under a policy.
+/// Discrete-event simulation of a trace under a policy: a thin frontend
+/// over [`GoghCore`] that owns the trace and the drain policy, while the
+/// core owns the event loop (the daemon drives the very same loop in
+/// wall-clock time).
 pub struct SimDriver {
-    pub cluster: Cluster,
-    pub monitor: Monitor,
-    meter_busy: EnergyMeter,
-    meter_total: EnergyMeter,
+    core: GoghCore,
     trace: Trace,
-    monitor_interval_s: f64,
-    /// restart penalty charged to every migrated job (seconds of stall).
-    migration_cost_s: f64,
     /// max simulated seconds after the last arrival (safety stop)
     pub drain_limit_s: f64,
 }
@@ -207,7 +120,7 @@ pub struct SimDriver {
 impl SimDriver {
     /// Build a driver. Fails if `monitor_interval_s` is not strictly
     /// positive — a zero interval would spin the event loop forever at
-    /// t = 0 (this is the single validation point; callers must not
+    /// t = 0 (validated once, in [`GoghCore::new`]; callers must not
     /// patch the interval themselves).
     pub fn new(
         spec: ClusterSpec,
@@ -217,18 +130,9 @@ impl SimDriver {
         monitor_interval_s: f64,
         seed: u64,
     ) -> Result<Self> {
-        anyhow::ensure!(
-            monitor_interval_s > 0.0 && monitor_interval_s.is_finite(),
-            "monitor_interval_s must be > 0 (got {monitor_interval_s})"
-        );
         Ok(Self {
-            cluster: Cluster::new(spec),
-            monitor: Monitor::new(oracle, noise_sigma, seed),
-            meter_busy: EnergyMeter::new(),
-            meter_total: EnergyMeter::new(),
+            core: GoghCore::new(spec, oracle, noise_sigma, monitor_interval_s, seed)?,
             trace,
-            monitor_interval_s,
-            migration_cost_s: 0.0,
             drain_limit_s: 24.0 * 3600.0,
         })
     }
@@ -236,333 +140,37 @@ impl SimDriver {
     /// Charge every migrated job `cost_s` seconds of restart stall
     /// (integrated into energy, SLO and JCT accounting).
     pub fn with_migration_cost(mut self, cost_s: f64) -> Self {
-        self.migration_cost_s = cost_s.max(0.0);
+        self.core = self.core.with_migration_cost(cost_s);
         self
     }
 
-    /// Run the full trace; returns the report.
+    /// The simulated cluster (read access for tests and tooling).
+    pub fn cluster(&self) -> &Cluster {
+        self.core.cluster()
+    }
+
+    /// The monitoring subsystem feeding the policy noisy measurements.
+    pub fn monitor(&self) -> &Monitor {
+        self.core.monitor()
+    }
+
+    /// Run the full trace; returns the report. Single-shot: the trace is
+    /// loaded into the core's event queue and driven to drain (or to the
+    /// drain timeout after the last arrival).
     pub fn run(&mut self, policy: &mut dyn Scheduler) -> Result<RunReport> {
-        let mut report = RunReport {
-            scheduler: policy.name().to_string(),
-            jobs_total: self.trace.n_jobs(),
-            inference_total: self.trace.jobs().filter(|j| j.is_inference()).count(),
-            ..Default::default()
-        };
-        let mut state = RunState::default();
-        let mut queue = EventQueue::default();
-        let mut arrivals_pending = 0usize;
-        let mut last_arrival_t = 0.0f64;
-        let n_accels = self.cluster.spec.len();
-        for ev in &self.trace.events {
-            match ev {
-                TraceEvent::Arrival { at, job } => {
-                    queue.push(*at, SimEvent::Arrival(job.clone()));
-                    arrivals_pending += 1;
-                    last_arrival_t = last_arrival_t.max(*at);
-                }
-                TraceEvent::Cancel { at, job } => queue.push(*at, SimEvent::Cancel(*job)),
-                TraceEvent::AccelChurn { at, accel_index, up } if n_accels > 0 => {
-                    let aid = self.cluster.spec.accels[accel_index % n_accels];
-                    let ev = if *up {
-                        SimEvent::AccelUp(aid)
-                    } else {
-                        SimEvent::AccelDown(aid)
-                    };
-                    queue.push(*at, ev);
-                }
-                TraceEvent::AccelChurn { .. } => {} // no accelerators to churn
-            }
-        }
-        queue.push(self.monitor_interval_s, SimEvent::MonitorTick);
-        // Distinct trace cycles can collide on one physical instance
-        // (accel_index is taken modulo the cluster size), so outages are
-        // reference-counted: an instance is down while any cycle holds it.
-        let mut down_votes: HashMap<AccelId, u32> = HashMap::new();
-
-        while let Some(entry) = queue.pop() {
-            let now = self.cluster.now();
-            let t = entry.at.max(now);
-            // ---- integrate [now, t] (detects + dispatches completions)
-            self.integrate(now, t, policy, &mut report, &mut state)?;
-            self.cluster.advance_to(t);
-
-            // ---- dispatch the event
-            match entry.ev {
-                SimEvent::Arrival(job) => {
-                    arrivals_pending -= 1;
-                    let id = job.id;
-                    state.arrival_time.insert(id, t);
-                    self.cluster.add_job(job);
-                    let ev = ClusterEvent::JobArrived { job: id };
-                    self.dispatch(policy, ev, &mut report, &mut state)?;
-                }
-                SimEvent::Cancel(j) => {
-                    // ignore cancellations racing a completed/unknown job
-                    if self.cluster.job(j).is_some() {
-                        self.cluster.remove_job(j);
-                        report.jobs_cancelled += 1;
-                        let ev = ClusterEvent::JobCancelled { job: j };
-                        self.dispatch(policy, ev, &mut report, &mut state)?;
-                    }
-                }
-                SimEvent::MonitorTick => {
-                    let measurements = self.monitor.sample(&self.cluster);
-                    let ev = ClusterEvent::MonitorTick { measurements };
-                    self.dispatch(policy, ev, &mut report, &mut state)?;
-                    queue.push(t + self.monitor_interval_s, SimEvent::MonitorTick);
-                }
-                SimEvent::AccelDown(a) => {
-                    let votes = down_votes.entry(a).or_insert(0);
-                    *votes += 1;
-                    if *votes == 1 {
-                        let evicted = self.cluster.set_accel_down(a);
-                        state.failure_evicted.extend(evicted);
-                        let ev = ClusterEvent::AccelDown { accel: a };
-                        self.dispatch(policy, ev, &mut report, &mut state)?;
-                    }
-                }
-                SimEvent::AccelUp(a) => {
-                    let votes = down_votes.entry(a).or_insert(0);
-                    if *votes > 0 {
-                        *votes -= 1;
-                        if *votes == 0 {
-                            self.cluster.set_accel_up(a);
-                            let ev = ClusterEvent::AccelUp { accel: a };
-                            self.dispatch(policy, ev, &mut report, &mut state)?;
-                        }
-                    }
-                }
-            }
-
-            // ---- termination
-            let drained = arrivals_pending == 0 && self.cluster.n_jobs() == 0;
-            let timed_out = self.cluster.now() > last_arrival_t + self.drain_limit_s;
-            if drained || timed_out {
-                break;
-            }
-        }
-
-        report.sim_seconds = self.cluster.now();
-        report.energy_joules = self.meter_busy.total_joules();
-        report.total_energy_joules = self.meter_total.total_joules();
-        report.mean_jct = if report.jobs_completed > 0 {
-            state.jct_sum / report.jobs_completed as f64
-        } else {
-            f64::NAN
-        };
-        report.mean_queue_s = if state.queue_waits > 0 {
-            state.queue_wait_sum / state.queue_waits as f64
-        } else {
-            0.0
-        };
-        report.mean_decision_ms = if report.events > 0 {
-            1000.0 * state.decision_s / report.events as f64
-        } else {
-            0.0
-        };
-        report.estimation_mae = policy.estimation_mae();
-        let (solve_ms, p1_ms) = policy.decision_latencies();
-        report.mean_solve_ms = solve_ms;
-        report.mean_p1_ms = p1_ms;
-        report.inference_attainment = if state.inf_total_s > 0.0 {
-            state.inf_attained_s / state.inf_total_s
-        } else {
-            0.0
-        };
-        if state.inf_hist.total_weight() > 0.0 {
-            report.inference_p50_latency_s = state.inf_hist.quantile(0.5);
-            report.inference_p99_latency_s = state.inf_hist.quantile(0.99);
-        }
-        let (scale_ups, scale_downs) = policy.autoscale_counts();
-        report.scale_ups = scale_ups;
-        report.scale_downs = scale_downs;
-        Ok(report)
-    }
-
-    /// Ask the policy for a decision, apply + validate its delta, and
-    /// account migrations, restart penalties and queueing delays.
-    fn dispatch(
-        &mut self,
-        policy: &mut dyn Scheduler,
-        event: ClusterEvent,
-        report: &mut RunReport,
-        state: &mut RunState,
-    ) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        let decision = policy.on_event(&event, &self.cluster)?;
-        state.decision_s += t0.elapsed().as_secs_f64();
-        report.events += 1;
-        let outcome = self.cluster.apply_delta(&decision.delta)?;
-        report.migrations += outcome.moves;
-        // jobs restarting from scratch: migrated by this delta, plus any
-        // failure-evicted job re-placed now (unplaced when the delta
-        // applied, so migrated_jobs cannot see it — the sets are disjoint)
-        let mut restarted = outcome.migrated_jobs;
-        let replaced: Vec<JobId> = state
-            .failure_evicted
-            .iter()
-            .copied()
-            .filter(|j| self.cluster.placement.is_placed(*j))
-            .collect();
-        for j in &replaced {
-            state.failure_evicted.remove(j);
-        }
-        restarted.extend(replaced);
-        if self.migration_cost_s > 0.0 {
-            let until = self.cluster.now() + self.migration_cost_s;
-            for j in restarted {
-                // stall_job returns the stall actually added, so
-                // overlapping penalties extend rather than double-charge
-                report.migration_stall_s += self.cluster.stall_job(j, until);
-            }
-        }
-        // queueing delay: record the first time each job gets capacity
-        let now = self.cluster.now();
-        for j in self.cluster.active_job_ids() {
-            if self.cluster.placement.is_placed(j) && !state.first_place.contains_key(&j) {
-                state.first_place.insert(j, now);
-                let arrived = state.arrival_time.get(&j).copied().unwrap_or(now);
-                state.queue_wait_sum += now - arrived;
-                state.queue_waits += 1;
-            }
-        }
-        Ok(())
-    }
-
-    /// Advance work, energy and SLO accounting over [t0, t1] using the
-    /// ground-truth throughputs of the current placement (the substrate
-    /// "runs" the jobs; schedulers only ever see monitor samples).
-    /// Jobs inside their migration-restart window make no progress.
-    fn integrate(
-        &mut self,
-        t0: f64,
-        t1: f64,
-        policy: &mut dyn Scheduler,
-        report: &mut RunReport,
-        state: &mut RunState,
-    ) -> Result<()> {
-        let dt = t1 - t0;
-        if dt <= 0.0 {
-            return Ok(());
-        }
-        // ground-truth throughput per job; inference jobs additionally
-        // keep their per-replica rates for the M/M/c latency model
-        let oracle = self.monitor.oracle().clone();
-        let mut per_job: HashMap<JobId, f64> = HashMap::new();
-        let mut replica_mus: HashMap<JobId, Vec<f64>> = HashMap::new();
-        for (aid, combo) in self.cluster.placement.iter() {
-            for j in combo.jobs() {
-                let spec = self.cluster.job(j).expect("placed job registered");
-                let lookup = |id: JobId| self.cluster.job(id).cloned();
-                let t = oracle.throughput(spec, combo, aid.accel, &lookup);
-                *per_job.entry(j).or_default() += t;
-                if spec.is_inference() {
-                    replica_mus.entry(j).or_default().push(serving::service_rate(t));
-                }
-            }
-        }
-
-        // energy: busy = only instances hosting work; total = in-service
-        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
-        let loads = placement_loads(
-            &self.cluster.placement,
-            &|j, aid| {
-                let spec = self.cluster.job(j).unwrap();
-                let combo = self.cluster.placement.combo_on(aid).unwrap();
-                let lookup = |id: JobId| self.cluster.job(id).cloned();
-                oracle.throughput(spec, combo, aid.accel, &lookup)
-            },
-            &|aid| solo_cap(aid.accel),
-        );
-        let busy: Vec<AccelId> = loads.keys().copied().collect();
-        self.meter_busy.accrue(t1, &busy, &loads);
-        let in_service = self.cluster.available_accels();
-        self.meter_total.accrue(t1, &in_service, &loads);
-
-        // SLO + progress + completion (stalled jobs make no progress).
-        // Training jobs burn work at their achieved throughput against a
-        // throughput floor; inference jobs burn serving lifetime while
-        // placed and are scored on M/M/c latency vs their SLO.
-        let mut slo_violated = false;
-        let ids = self.cluster.active_job_ids();
-        let mut completed: Vec<JobId> = vec![];
-        for id in ids {
-            let achieved = per_job.get(&id).copied().unwrap_or(0.0);
-            let stalled_until = self.cluster.stalled_until(id);
-            let run_dt = (t1 - stalled_until.max(t0)).clamp(0.0, dt);
-            let spec = self.cluster.job(id).unwrap();
-            if let Some(inf) = spec.inference {
-                // serving capacity over the interval, de-rated by the
-                // stalled fraction (a restarting replica serves nothing);
-                // unplaced jobs have no replicas → infinite latency
-                let mus = replica_mus.get(&id).cloned().unwrap_or_default();
-                let frac = run_dt / dt;
-                let eff: Vec<f64> = mus.iter().map(|m| m * frac).collect();
-                let lam = spec.request_rate_at(t0);
-                let lat = serving::mmc_sojourn(lam, &eff);
-                let ok = lat <= inf.latency_slo_s;
-                state.inf_total_s += dt;
-                if ok {
-                    state.inf_attained_s += dt;
-                }
-                let e = state.inf_job_time.entry(id).or_insert((0.0, 0.0));
-                e.1 += dt;
-                if ok {
-                    e.0 += dt;
-                }
-                state.inf_hist.record(lat, dt);
-                report.replica_seconds += mus.len() as f64 * dt;
-                let placed = !mus.is_empty();
-                let j = self.cluster.job_mut(id).unwrap();
-                if placed {
-                    j.work -= run_dt;
-                }
-                if j.work <= 0.0 {
-                    completed.push(id);
-                }
-            } else {
-                let avg = achieved * run_dt / dt;
-                let deficit = (spec.min_throughput - avg).max(0.0);
-                if deficit > 1e-9 {
-                    report.slo_deficit += deficit * dt;
-                    slo_violated = true;
-                }
-                let j = self.cluster.job_mut(id).unwrap();
-                j.work -= achieved * run_dt;
-                if j.work <= 0.0 {
-                    completed.push(id);
-                }
-            }
-        }
-        if slo_violated {
-            report.slo_violations += 1;
-        }
-        if !completed.is_empty() {
-            self.cluster.advance_to(t1);
-            for id in completed {
-                let was_inference = self.cluster.job(id).map_or(false, |s| s.is_inference());
-                self.cluster.remove_job(id);
-                report.jobs_completed += 1;
-                if was_inference {
-                    report.inference_completed += 1;
-                    if let Some(&(attained, total)) = state.inf_job_time.get(&id) {
-                        if total > 0.0 && attained / total >= serving::SLO_MET_FRACTION {
-                            report.inference_slo_met += 1;
-                        }
-                    }
-                }
-                state.jct_sum += t1 - state.arrival_time.get(&id).copied().unwrap_or(0.0);
-                self.dispatch(policy, ClusterEvent::JobCompleted { job: id }, report, state)?;
-            }
-        }
-        Ok(())
+        self.core.load_trace(&self.trace);
+        // the first monitor tick enqueues after the trace so event-queue
+        // tie-breaking (and thus every report) stays byte-stable
+        self.core.start_monitor();
+        self.core.run(policy, self.drain_limit_s)?;
+        Ok(self.core.report(policy))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::TraceConfig;
+    use crate::workload::{AccelType, InferenceSpec, JobSpec, TraceConfig, TraceEvent};
 
     /// Trivial incremental policy: place every waiting job solo on the
     /// first free in-service accelerator, retrying on every event.
@@ -610,7 +218,7 @@ mod tests {
 
     fn serving_job(id: u32, lifetime_s: f64, base_rate: f64, slo_s: f64) -> JobSpec {
         let mut j = job(id, lifetime_s);
-        j.inference = Some(crate::workload::InferenceSpec {
+        j.inference = Some(InferenceSpec {
             base_rate,
             diurnal_amplitude: 0.0,
             diurnal_phase_s: 0.0,

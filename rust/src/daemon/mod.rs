@@ -1,0 +1,23 @@
+//! `goghd` — the long-lived service frontend over the shared
+//! [`engine::GoghCore`](crate::engine::GoghCore).
+//!
+//! Three layers, one per module:
+//!
+//! - [`protocol`] — the newline-delimited JSON wire format clients
+//!   speak (`gogh submit|queue|cancel|status|drain`, or raw `nc`).
+//! - [`server`] — the single-threaded accept/advance loop mapping wall
+//!   clock onto the core's simulated clock.
+//! - [`snapshot`] — versioned crash-safe persistence of jobs,
+//!   placements, and the learned catalog across daemon restarts.
+//!
+//! The simulator and the daemon are peers: both drive the same core
+//! and policy code, differing only in where events come from (trace
+//! file vs socket) and what the clock is (virtual vs wall).
+
+pub mod protocol;
+pub mod server;
+pub mod snapshot;
+
+pub use protocol::{JobRequest, ProtoError, Request, PROTOCOL_VERSION};
+pub use server::{serve, DaemonOptions, Endpoint};
+pub use snapshot::{Snapshot, SNAPSHOT_VERSION};

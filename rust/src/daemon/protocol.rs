@@ -1,0 +1,377 @@
+//! `goghd` wire protocol: newline-delimited JSON over a TCP or Unix
+//! socket (see `docs/PROTOCOL.md` for the full message reference and a
+//! transcript).
+//!
+//! One request per line, one response line per request. Requests carry
+//! an optional protocol version `v` (absent ⇒ 1); responses always
+//! carry `"ok"` plus the version, and failures use the same error
+//! envelope the CLI config loader uses: an error `code` from a small
+//! closed set and a human `message` with position/field context.
+
+use crate::util::Json;
+use crate::workload::{InferenceSpec, JobId, JobSpec, ModelFamily, FAMILIES};
+
+/// Version of the request/response schema. The daemon answers requests
+/// with `v` ≤ this; larger values are rejected with
+/// `unsupported_version` (clients must not assume newer fields degrade
+/// gracefully).
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// A protocol-level failure: one of the closed set of error codes plus
+/// a human-readable message (the `error` object of the envelope).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    /// `bad_request` | `unknown_cmd` | `unknown_job` | `draining` |
+    /// `unsupported_version` | `internal`
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ProtoError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> Self {
+        Self {
+            code,
+            message: message.into(),
+        }
+    }
+
+    /// Malformed or type-mismatched request content.
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self::new("bad_request", message)
+    }
+}
+
+/// A job as submitted over the wire (the daemon assigns the [`JobId`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRequest {
+    pub family: ModelFamily,
+    pub batch_size: u32,
+    pub min_throughput: f64,
+    pub distributability: u32,
+    /// Remaining work (training) or serving lifetime (inference), in
+    /// seconds of normalized-throughput / placed time.
+    pub work: f64,
+    pub inference: Option<InferenceSpec>,
+}
+
+impl JobRequest {
+    /// Materialize the cluster-side job spec under a daemon-assigned id.
+    pub fn into_spec(self, id: JobId) -> JobSpec {
+        JobSpec {
+            id,
+            family: self.family,
+            batch_size: self.batch_size,
+            replication: 1,
+            min_throughput: self.min_throughput,
+            distributability: self.distributability,
+            work: self.work,
+            inference: self.inference,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("family", Json::from(self.family.name())),
+            ("batch_size", self.batch_size.into()),
+            ("min_throughput", self.min_throughput.into()),
+            ("distributability", self.distributability.into()),
+            ("work", self.work.into()),
+        ];
+        if let Some(inf) = self.inference {
+            let inf_json = Json::obj(vec![
+                ("base_rate", inf.base_rate.into()),
+                ("diurnal_amplitude", inf.diurnal_amplitude.into()),
+                ("diurnal_phase_s", inf.diurnal_phase_s.into()),
+                ("latency_slo_s", inf.latency_slo_s.into()),
+            ]);
+            kv.push(("inference", inf_json));
+        }
+        Json::obj(kv)
+    }
+
+    /// Parse a job object; unknown fields are ignored (forward
+    /// compatibility), wrong types and unknown family names are
+    /// `bad_request` with the field named.
+    pub fn from_json(j: &Json) -> Result<Self, ProtoError> {
+        let family_name = req_str(j, "job.family")?;
+        let family = FAMILIES
+            .iter()
+            .copied()
+            .find(|f| f.name() == family_name)
+            .ok_or_else(|| {
+                ProtoError::bad_request(format!("job.family: unknown family {family_name:?}"))
+            })?;
+        let work = req_f64(j, "job.work")?;
+        if !(work > 0.0 && work.is_finite()) {
+            return Err(ProtoError::bad_request(format!(
+                "job.work: must be a positive finite number of seconds, got {work}"
+            )));
+        }
+        let inference = match j.get("inference") {
+            None | Some(Json::Null) => None,
+            Some(inf) => Some(InferenceSpec {
+                base_rate: req_f64(inf, "job.inference.base_rate")?,
+                diurnal_amplitude: opt_f64(inf, "diurnal_amplitude", 0.0, "job.inference")?,
+                diurnal_phase_s: opt_f64(inf, "diurnal_phase_s", 0.0, "job.inference")?,
+                latency_slo_s: req_f64(inf, "job.inference.latency_slo_s")?,
+            }),
+        };
+        Ok(Self {
+            family,
+            batch_size: opt_f64(j, "batch_size", 32.0, "job")? as u32,
+            min_throughput: opt_f64(j, "min_throughput", 0.0, "job")?,
+            distributability: (opt_f64(j, "distributability", 1.0, "job")? as u32).max(1),
+            work,
+            inference,
+        })
+    }
+}
+
+/// One client request (the `cmd` discriminant on the wire).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit a new job; the response carries the assigned job id.
+    Submit { job: JobRequest },
+    /// List active jobs (queued + running) with their placement state.
+    Queue,
+    /// Cancel an active job by daemon-assigned id.
+    Cancel { job: u32 },
+    /// Cluster + run-report summary (placements, counters, catalog).
+    Status,
+    /// Stop accepting submissions; the daemon snapshots and exits once
+    /// the last active job finishes.
+    Drain,
+}
+
+impl Request {
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![("v", Json::from(PROTOCOL_VERSION))];
+        match self {
+            Request::Submit { job } => {
+                kv.push(("cmd", "submit".into()));
+                kv.push(("job", job.to_json()));
+            }
+            Request::Queue => kv.push(("cmd", "queue".into())),
+            Request::Cancel { job } => {
+                kv.push(("cmd", "cancel".into()));
+                kv.push(("job", (*job).into()));
+            }
+            Request::Status => kv.push(("cmd", "status".into())),
+            Request::Drain => kv.push(("cmd", "drain".into())),
+        }
+        Json::obj(kv)
+    }
+
+    /// Parse one request line. Absent `v` means version 1; versions
+    /// above [`PROTOCOL_VERSION`] are rejected. Unknown fields anywhere
+    /// are tolerated; unknown `cmd` values are not.
+    pub fn parse(line: &str) -> Result<Self, ProtoError> {
+        let j = Json::parse(line)
+            .map_err(|e| ProtoError::bad_request(format!("invalid request JSON: {e}")))?;
+        let v = match j.get("v") {
+            None => 1,
+            Some(v) => match v.as_f64() {
+                Some(n) => n as u32,
+                None => {
+                    let msg = format!("v: expected an integer, got {v}");
+                    return Err(ProtoError::bad_request(msg));
+                }
+            },
+        };
+        if v > PROTOCOL_VERSION {
+            return Err(ProtoError::new(
+                "unsupported_version",
+                format!("protocol version {v} not supported (max {PROTOCOL_VERSION})"),
+            ));
+        }
+        let cmd = req_str(&j, "cmd")?;
+        match cmd {
+            "submit" => match j.get("job") {
+                None => Err(ProtoError::bad_request("missing field \"job\" for cmd submit")),
+                Some(job) => {
+                    let job = JobRequest::from_json(job)?;
+                    Ok(Request::Submit { job })
+                }
+            },
+            "queue" => Ok(Request::Queue),
+            "cancel" => {
+                let job = req_f64(&j, "job")? as u32;
+                Ok(Request::Cancel { job })
+            }
+            "status" => Ok(Request::Status),
+            "drain" => Ok(Request::Drain),
+            other => Err(ProtoError::new(
+                "unknown_cmd",
+                format!("unknown cmd {other:?} (want submit|queue|cancel|status|drain)"),
+            )),
+        }
+    }
+}
+
+/// Success envelope: `{"ok":true,"v":1,`…body…`}`.
+pub fn ok_envelope(body: Vec<(&str, Json)>) -> Json {
+    let mut kv = vec![("ok", Json::from(true)), ("v", Json::from(PROTOCOL_VERSION))];
+    kv.extend(body);
+    Json::obj(kv)
+}
+
+/// Error envelope: `{"ok":false,"v":1,"error":{"code":…,"message":…}}`.
+pub fn error_envelope(e: &ProtoError) -> Json {
+    let err = Json::obj(vec![("code", e.code.into()), ("message", e.message.as_str().into())]);
+    Json::obj(vec![("ok", false.into()), ("v", PROTOCOL_VERSION.into()), ("error", err)])
+}
+
+fn req_str<'j>(j: &'j Json, path: &str) -> Result<&'j str, ProtoError> {
+    match j.get(field_name(path)) {
+        None => Err(ProtoError::bad_request(format!("missing field {path:?}"))),
+        Some(v) => v.as_str().ok_or_else(|| {
+            ProtoError::bad_request(format!("{path}: expected a string, got {v}"))
+        }),
+    }
+}
+
+fn req_f64(j: &Json, path: &str) -> Result<f64, ProtoError> {
+    match j.get(field_name(path)) {
+        None => Err(ProtoError::bad_request(format!("missing field {path:?}"))),
+        Some(v) => v.as_f64().ok_or_else(|| {
+            ProtoError::bad_request(format!("{path}: expected a number, got {v}"))
+        }),
+    }
+}
+
+fn opt_f64(j: &Json, key: &str, default: f64, parent: &str) -> Result<f64, ProtoError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| {
+            ProtoError::bad_request(format!("{parent}.{key}: expected a number, got {v}"))
+        }),
+    }
+}
+
+/// Last segment of a dotted error path (the actual JSON key).
+fn field_name(path: &str) -> &str {
+    path.rsplit('.').next().unwrap_or(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn train_job() -> JobRequest {
+        JobRequest {
+            family: ModelFamily::ResNet50,
+            batch_size: 64,
+            min_throughput: 0.25,
+            distributability: 2,
+            work: 1800.0,
+            inference: None,
+        }
+    }
+
+    fn serve_job() -> JobRequest {
+        JobRequest {
+            inference: Some(InferenceSpec {
+                base_rate: 12.0,
+                diurnal_amplitude: 0.4,
+                diurnal_phase_s: 3600.0,
+                latency_slo_s: 0.25,
+            }),
+            ..train_job()
+        }
+    }
+
+    #[test]
+    fn every_request_round_trips() {
+        let requests = vec![
+            Request::Submit { job: train_job() },
+            Request::Submit { job: serve_job() },
+            Request::Queue,
+            Request::Cancel { job: 7 },
+            Request::Status,
+            Request::Drain,
+        ];
+        for r in requests {
+            let line = r.to_json().to_string();
+            let back = Request::parse(&line).unwrap_or_else(|e| panic!("{line}: {e:?}"));
+            assert_eq!(back, r, "{line}");
+        }
+    }
+
+    #[test]
+    fn unknown_fields_are_tolerated() {
+        let line = r#"{"v":1,"cmd":"cancel","job":3,"reason":"tired","extra":{"a":1}}"#;
+        assert_eq!(Request::parse(line).unwrap(), Request::Cancel { job: 3 });
+        let line = r#"{"cmd":"submit","job":{"family":"lm","work":60,"future_knob":true}}"#;
+        match Request::parse(line).unwrap() {
+            Request::Submit { job } => {
+                assert_eq!(job.family.name(), "lm");
+                assert_eq!(job.batch_size, 32); // default
+                assert_eq!(job.distributability, 1); // default
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_rules() {
+        // absent v ⇒ version 1
+        assert_eq!(Request::parse(r#"{"cmd":"queue"}"#).unwrap(), Request::Queue);
+        // same version accepted
+        assert_eq!(Request::parse(r#"{"v":1,"cmd":"queue"}"#).unwrap(), Request::Queue);
+        // newer versions rejected with the dedicated code
+        let e = Request::parse(r#"{"v":2,"cmd":"queue"}"#).unwrap_err();
+        assert_eq!(e.code, "unsupported_version");
+    }
+
+    #[test]
+    fn bad_requests_name_the_problem() {
+        let e = Request::parse("{nope").unwrap_err();
+        assert_eq!(e.code, "bad_request");
+        assert!(e.message.contains("line 1"), "{}", e.message);
+
+        let e = Request::parse(r#"{"cmd":"fly"}"#).unwrap_err();
+        assert_eq!(e.code, "unknown_cmd");
+
+        let e =
+            Request::parse(r#"{"cmd":"submit","job":{"family":"gpt9","work":60}}"#).unwrap_err();
+        assert_eq!(e.code, "bad_request");
+        assert!(e.message.contains("job.family"), "{}", e.message);
+
+        let e = Request::parse(r#"{"cmd":"submit","job":{"family":"lm"}}"#).unwrap_err();
+        assert!(e.message.contains("job.work"), "{}", e.message);
+
+        let e = Request::parse(r#"{"cmd":"submit","job":{"family":"lm","work":-5}}"#).unwrap_err();
+        assert!(e.message.contains("positive"), "{}", e.message);
+
+        let e = Request::parse(r#"{"cmd":"cancel"}"#).unwrap_err();
+        assert!(e.message.contains("job"), "{}", e.message);
+    }
+
+    #[test]
+    fn envelopes_have_the_documented_shape() {
+        let ok = ok_envelope(vec![("id", 4u32.into())]);
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(ok.get("v").and_then(Json::as_u64), Some(1));
+        assert_eq!(ok.get("id").and_then(Json::as_u64), Some(4));
+
+        let err = error_envelope(&ProtoError::new("unknown_job", "no job j9"));
+        assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+        let e = err.get("error").unwrap();
+        assert_eq!(e.req_str("code").unwrap(), "unknown_job");
+        assert_eq!(e.req_str("message").unwrap(), "no job j9");
+        // and it parses back as one wire line
+        let line = err.to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(Json::parse(&line).unwrap(), err);
+    }
+
+    #[test]
+    fn job_request_spec_materialization() {
+        let spec = serve_job().into_spec(JobId(41));
+        assert_eq!(spec.id, JobId(41));
+        assert_eq!(spec.replication, 1);
+        assert!(spec.is_inference());
+        assert_eq!(spec.work, 1800.0);
+    }
+}

@@ -1,0 +1,402 @@
+//! The `goghd` daemon: a long-lived, wall-clock-driven frontend over
+//! [`GoghCore`].
+//!
+//! Where the simulator replays a trace against a virtual clock, the
+//! daemon maps real elapsed time (`std::time::Instant`, optionally
+//! sped up by `--time-scale`) onto the core's simulated clock and
+//! feeds it submissions arriving over a TCP or Unix socket, one JSON
+//! request per line (see `docs/PROTOCOL.md`). State is periodically
+//! checkpointed to a versioned snapshot file (see `docs/SNAPSHOT.md`)
+//! and restored on restart, so a bounced daemon keeps its learned
+//! catalog and placements.
+//!
+//! The server is deliberately single-threaded: one nonblocking accept
+//! loop owns the core, the scheduler, and every connection, so request
+//! handling needs no locking and stays deterministic under test.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{Cluster, ClusterSpec};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{build_scheduler, GoghScheduler};
+use crate::daemon::protocol::{error_envelope, ok_envelope, ProtoError, Request};
+use crate::daemon::snapshot::Snapshot;
+use crate::engine::GoghCore;
+use crate::util::Json;
+use crate::workload::{JobId, JobSpec};
+use crate::Result;
+use anyhow::Context as _;
+
+/// Where the daemon listens.
+#[derive(Debug, Clone)]
+pub enum Endpoint {
+    /// `host:port`; port 0 binds an ephemeral port (pair with
+    /// `port_file` so clients can find it).
+    Tcp(String),
+    /// Filesystem path; any stale socket file is removed before bind.
+    Unix(PathBuf),
+}
+
+/// Everything `goghd` needs to run (built from CLI flags in
+/// `bin/goghd.rs`).
+#[derive(Debug, Clone)]
+pub struct DaemonOptions {
+    pub cfg: ExperimentConfig,
+    pub endpoint: Endpoint,
+    /// Snapshot file; `None` disables persistence entirely.
+    pub state: Option<PathBuf>,
+    /// Seconds of *wall* time between periodic snapshots (0 = every
+    /// loop iteration; only sensible in tests).
+    pub snapshot_every_s: f64,
+    /// Simulated seconds per wall second (1 = real time).
+    pub time_scale: f64,
+    /// When set, the bound TCP port is written here after listen.
+    pub port_file: Option<PathBuf>,
+    /// Ignore an existing snapshot and start from empty state.
+    pub fresh: bool,
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+
+    /// Blocking-ish write of one small response line: retries
+    /// `WouldBlock` briefly rather than buffering, since responses are
+    /// a few hundred bytes against an OS-level send buffer.
+    fn write_line(&mut self, line: &str) -> std::io::Result<()> {
+        let mut data = line.as_bytes().to_vec();
+        data.push(b'\n');
+        let mut off = 0;
+        while off < data.len() {
+            let r = match self {
+                Stream::Tcp(s) => s.write(&data[off..]),
+                Stream::Unix(s) => s.write(&data[off..]),
+            };
+            match r {
+                Ok(n) => off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One client connection and its partial-line read buffer.
+struct Conn {
+    stream: Stream,
+    buf: Vec<u8>,
+}
+
+/// Hard cap on a single request line; longer input drops the
+/// connection instead of growing the buffer without bound.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// The daemon's mutable world: the shared policy/event core plus the
+/// pieces the simulator doesn't have (id allocator, drain flag).
+struct DaemonState {
+    core: GoghCore,
+    scheduler: GoghScheduler,
+    backend: &'static str,
+    next_job_id: u32,
+    draining: bool,
+}
+
+impl DaemonState {
+    fn handle(&mut self, req: Request, sim_now: f64) -> std::result::Result<Json, ProtoError> {
+        match req {
+            Request::Submit { job } => {
+                if self.draining {
+                    return Err(ProtoError::new(
+                        "draining",
+                        "daemon is draining; new submissions are refused",
+                    ));
+                }
+                let id = self.next_job_id;
+                self.next_job_id += 1;
+                self.core.submit(sim_now, job.into_spec(JobId(id)));
+                Ok(ok_envelope(vec![("id", id.into()), ("at", sim_now.into())]))
+            }
+            Request::Queue => {
+                let cluster = self.core.cluster();
+                let mut jobs: Vec<&JobSpec> = cluster.jobs().collect();
+                jobs.sort_by_key(|j| j.id);
+                let rows: Vec<Json> = jobs.iter().map(|j| queue_row(cluster, j)).collect();
+                Ok(ok_envelope(vec![
+                    ("jobs", Json::Array(rows)),
+                    ("pending", self.core.pending_arrivals().into()),
+                    ("draining", self.draining.into()),
+                ]))
+            }
+            Request::Cancel { job } => {
+                let id = JobId(job);
+                if self.core.cluster().job(id).is_none() {
+                    return Err(ProtoError::new(
+                        "unknown_job",
+                        format!("job {id} is not active on this daemon"),
+                    ));
+                }
+                self.core.cancel(sim_now, id);
+                Ok(ok_envelope(vec![("id", job.into()), ("cancelled", true.into())]))
+            }
+            Request::Status => Ok(self.status(sim_now)),
+            Request::Drain => {
+                self.draining = true;
+                Ok(ok_envelope(vec![
+                    ("draining", true.into()),
+                    ("active", self.core.cluster().n_jobs().into()),
+                ]))
+            }
+        }
+    }
+
+    fn status(&self, sim_now: f64) -> Json {
+        let report = self.core.report(&self.scheduler);
+        let cluster = self.core.cluster();
+        let mut placements: Vec<Json> = Vec::new();
+        let mut placed: Vec<_> = cluster.placement.iter().collect();
+        placed.sort_by_key(|(a, _)| **a);
+        for (a, combo) in placed {
+            let ids = Json::Array(combo.jobs().iter().map(|j| Json::from(j.0)).collect());
+            placements.push(Json::obj(vec![("accel", a.to_string().into()), ("jobs", ids)]));
+        }
+        let jobs = Json::obj(vec![
+            ("total", report.jobs_total.into()),
+            ("completed", report.jobs_completed.into()),
+            ("cancelled", report.jobs_cancelled.into()),
+            ("active", cluster.n_jobs().into()),
+        ]);
+        let catalog = Json::obj(vec![
+            ("records", self.scheduler.catalog.len().into()),
+            ("measured", self.scheduler.catalog.n_measured().into()),
+        ]);
+        ok_envelope(vec![
+            ("backend", self.backend.into()),
+            ("draining", self.draining.into()),
+            ("sim_seconds", sim_now.into()),
+            ("jobs", jobs),
+            ("placements", Json::Array(placements)),
+            ("catalog", catalog),
+            ("energy_joules", report.energy_joules.into()),
+        ])
+    }
+}
+
+/// One `queue` response row for an active job.
+fn queue_row(cluster: &Cluster, j: &JobSpec) -> Json {
+    let accels: Vec<Json> =
+        cluster.placement.accels_of(j.id).iter().map(|a| Json::from(a.to_string())).collect();
+    let kind = if j.is_inference() { "inference" } else { "training" };
+    Json::obj(vec![
+        ("id", j.id.0.into()),
+        ("family", j.family.name().into()),
+        ("kind", kind.into()),
+        ("placed", (!accels.is_empty()).into()),
+        ("accels", Json::Array(accels)),
+        ("work_remaining", j.work.into()),
+    ])
+}
+
+/// Run the daemon until it drains (after a `drain` request) or the
+/// process is killed. Blocks the calling thread.
+pub fn serve(opts: DaemonOptions) -> Result<()> {
+    anyhow::ensure!(
+        opts.time_scale > 0.0 && opts.time_scale.is_finite(),
+        "time-scale must be a positive number (got {})",
+        opts.time_scale
+    );
+    let oracle = opts.cfg.build_oracle()?;
+    let (mut scheduler, backend) = build_scheduler(&opts.cfg, &oracle)?;
+    let mut core = GoghCore::new(
+        ClusterSpec::mix(&opts.cfg.cluster.accel_mix),
+        oracle,
+        opts.cfg.noise_sigma,
+        opts.cfg.monitor_interval_s,
+        opts.cfg.seed,
+    )?
+    .with_migration_cost(opts.cfg.migration_cost_s);
+
+    let mut next_job_id = 0;
+    let mut draining = false;
+    let mut base_sim_t = 0.0;
+    if let Some(path) = opts.state.as_ref().filter(|p| p.exists() && !opts.fresh) {
+        let snap = Snapshot::load(path)?;
+        snap.restore_into(&mut core, &mut scheduler)?;
+        next_job_id = snap.next_job_id;
+        draining = snap.draining;
+        base_sim_t = snap.now_s;
+        println!(
+            "goghd: restored snapshot ({} jobs, {} placements, {} catalog records) from {}",
+            snap.jobs.len(),
+            snap.placements.len(),
+            scheduler.catalog.len(),
+            path.display()
+        );
+    }
+    core.start_monitor();
+
+    let listener = match &opts.endpoint {
+        Endpoint::Tcp(addr) => {
+            let l = TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))?;
+            l.set_nonblocking(true)?;
+            let local = l.local_addr()?;
+            if let Some(pf) = &opts.port_file {
+                std::fs::write(pf, local.port().to_string())
+                    .with_context(|| format!("writing port file {}", pf.display()))?;
+            }
+            println!(
+                "goghd: listening on {local} (backend {backend}, time-scale {})",
+                opts.time_scale
+            );
+            Listener::Tcp(l)
+        }
+        Endpoint::Unix(path) => {
+            if path.exists() {
+                std::fs::remove_file(path).ok();
+            }
+            let l = UnixListener::bind(path)
+                .with_context(|| format!("binding unix socket {}", path.display()))?;
+            l.set_nonblocking(true)?;
+            println!(
+                "goghd: listening on {} (backend {backend}, time-scale {})",
+                path.display(),
+                opts.time_scale
+            );
+            Listener::Unix(l)
+        }
+    };
+
+    let mut state = DaemonState {
+        core,
+        scheduler,
+        backend,
+        next_job_id,
+        draining,
+    };
+    let started = Instant::now();
+    let mut last_snapshot = Instant::now();
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        // accept any newly connected clients
+        loop {
+            let accepted = match &listener {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                    s.set_nonblocking(true).ok();
+                    Stream::Tcp(s)
+                }),
+                Listener::Unix(l) => l.accept().map(|(s, _)| {
+                    s.set_nonblocking(true).ok();
+                    Stream::Unix(s)
+                }),
+            };
+            match accepted {
+                Ok(stream) => conns.push(Conn {
+                    stream,
+                    buf: Vec::new(),
+                }),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+        }
+
+        let sim_now = base_sim_t + started.elapsed().as_secs_f64() * opts.time_scale;
+
+        // service every connection: read what's available, answer
+        // complete lines, drop closed or misbehaving clients
+        let mut i = 0;
+        while i < conns.len() {
+            match service_conn(&mut conns[i], &mut state, sim_now) {
+                Ok(true) => i += 1,
+                Ok(false) | Err(_) => {
+                    conns.swap_remove(i);
+                }
+            }
+        }
+
+        // advance the shared core to wall-derived simulated time
+        state.core.advance_to(sim_now, &mut state.scheduler).context("advancing the core")?;
+
+        // periodic checkpoint
+        if let Some(path) = &opts.state {
+            if last_snapshot.elapsed().as_secs_f64() >= state_snapshot_period(&opts) {
+                Snapshot::capture(&state.core, &state.scheduler, state.next_job_id, state.draining)
+                    .save(path)?;
+                last_snapshot = Instant::now();
+            }
+        }
+
+        // drain exit: everything submitted has finished
+        if state.draining && state.core.drained() {
+            if let Some(path) = &opts.state {
+                Snapshot::capture(&state.core, &state.scheduler, state.next_job_id, true)
+                    .save(path)?;
+                println!("goghd: final snapshot saved to {}", path.display());
+            }
+            println!("goghd: drained; exiting");
+            return Ok(());
+        }
+
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn state_snapshot_period(opts: &DaemonOptions) -> f64 {
+    opts.snapshot_every_s.max(0.0)
+}
+
+/// Read and answer whatever complete request lines `conn` has buffered.
+/// Returns `Ok(false)` when the peer closed the connection.
+fn service_conn(conn: &mut Conn, state: &mut DaemonState, sim_now: f64) -> Result<bool> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => return Ok(false),
+            Ok(n) => {
+                conn.buf.extend_from_slice(&chunk[..n]);
+                if conn.buf.len() > MAX_LINE_BYTES {
+                    anyhow::bail!("request line exceeds {MAX_LINE_BYTES} bytes");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading request"),
+        }
+    }
+    while let Some(nl) = conn.buf.iter().position(|&b| b == b'\n') {
+        let line: Vec<u8> = conn.buf.drain(..=nl).collect();
+        let line = String::from_utf8_lossy(&line[..nl]).into_owned();
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Ok(req) => match state.handle(req, sim_now) {
+                Ok(ok) => ok,
+                Err(proto) => error_envelope(&proto),
+            },
+            Err(proto) => error_envelope(&proto),
+        };
+        conn.stream.write_line(&response.to_string()).context("writing response")?;
+    }
+    Ok(true)
+}

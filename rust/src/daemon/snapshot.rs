@@ -1,0 +1,482 @@
+#![doc = include_str!("../../../docs/SNAPSHOT.md")]
+
+use std::path::Path;
+
+use crate::catalog::Catalog;
+use crate::cluster::AccelId;
+use crate::coordinator::GoghScheduler;
+use crate::engine::{CoreEvent, GoghCore};
+use crate::util::Json;
+use crate::workload::{
+    AccelType, Combo, InferenceSpec, JobId, JobSpec, ModelFamily, ACCEL_TYPES, FAMILIES,
+};
+use crate::Result;
+use anyhow::Context as _;
+
+/// Version stamp written into (and required from) every state file.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// In-memory form of one state file (format: module docs above).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Simulated clock at capture.
+    pub now_s: f64,
+    /// Daemon job-id allocator cursor.
+    pub next_job_id: u32,
+    /// Whether a drain was in progress at capture.
+    pub draining: bool,
+    pub jobs_total: usize,
+    pub jobs_completed: usize,
+    pub jobs_cancelled: usize,
+    /// Active jobs as `(arrived_at, spec)`, sorted by job id.
+    pub jobs: Vec<(f64, JobSpec)>,
+    /// Busy accelerators and their co-location combos, sorted.
+    pub placements: Vec<(AccelId, Combo)>,
+    /// Out-of-service accelerators, sorted.
+    pub down: Vec<AccelId>,
+    /// Undelivered queue events in dispatch order (no monitor tick).
+    pub queue: Vec<(f64, CoreEvent)>,
+    /// Learned state, embedded in the catalog store's own format.
+    pub catalog: Json,
+}
+
+impl Snapshot {
+    /// Capture the daemon's full resumable state.
+    pub fn capture(
+        core: &GoghCore,
+        scheduler: &GoghScheduler,
+        next_job_id: u32,
+        draining: bool,
+    ) -> Snapshot {
+        let report = core.report(scheduler);
+        let cluster = core.cluster();
+        let now = cluster.now();
+        let mut jobs: Vec<(f64, JobSpec)> = cluster
+            .jobs()
+            .map(|j| (core.arrival_time(j.id).unwrap_or(now), j.clone()))
+            .collect();
+        jobs.sort_by_key(|(_, j)| j.id);
+        let mut placements: Vec<(AccelId, Combo)> =
+            cluster.placement.iter().map(|(a, c)| (*a, *c)).collect();
+        placements.sort();
+        Snapshot {
+            now_s: now,
+            next_job_id,
+            draining,
+            jobs_total: report.jobs_total,
+            jobs_completed: report.jobs_completed,
+            jobs_cancelled: report.jobs_cancelled,
+            jobs,
+            placements,
+            down: cluster.down_accels(),
+            queue: core.pending_events(),
+            catalog: scheduler.catalog.to_json(),
+        }
+    }
+
+    /// Rebuild daemon state from this snapshot: accelerator health
+    /// first, then jobs (with their original arrival times), then the
+    /// placement map, then the clock, counters, pending events, and
+    /// finally the learned catalog. The caller starts the monitor tick
+    /// afterwards.
+    pub fn restore_into(&self, core: &mut GoghCore, scheduler: &mut GoghScheduler) -> Result<()> {
+        for a in &self.down {
+            core.cluster_mut().set_accel_down(*a);
+        }
+        for (arrived_at, spec) in &self.jobs {
+            core.restore_job(spec.clone(), *arrived_at);
+        }
+        for (accel, combo) in &self.placements {
+            for j in combo.jobs() {
+                anyhow::ensure!(
+                    core.cluster().job(j).is_some(),
+                    "snapshot places unknown job {j} on {accel}"
+                );
+            }
+            core.cluster_mut().placement.assign(*accel, *combo);
+        }
+        core.cluster_mut().advance_to(self.now_s);
+        core.restore_counters(self.jobs_total, self.jobs_completed, self.jobs_cancelled);
+        for (at, ev) in &self.queue {
+            core.restore_event(*at, ev.clone());
+        }
+        let catalog = Catalog::from_json(&self.catalog).context("snapshot catalog section")?;
+        scheduler.restore_catalog(catalog);
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::obj(vec![
+            ("jobs_total", self.jobs_total.into()),
+            ("jobs_completed", self.jobs_completed.into()),
+            ("jobs_cancelled", self.jobs_cancelled.into()),
+        ]);
+        let jobs: Vec<Json> = self.jobs.iter().map(|(t, s)| job_entry_json(*t, s)).collect();
+        let placements: Vec<Json> =
+            self.placements.iter().map(|(a, c)| placement_entry_json(*a, c)).collect();
+        let down: Vec<Json> = self.down.iter().map(|a| accel_to_json(*a)).collect();
+        let queue: Vec<Json> = self.queue.iter().map(|(t, e)| event_to_json(*t, e)).collect();
+        Json::obj(vec![
+            ("version", SNAPSHOT_VERSION.into()),
+            ("now_s", self.now_s.into()),
+            ("next_job_id", self.next_job_id.into()),
+            ("draining", self.draining.into()),
+            ("counters", counters),
+            ("jobs", Json::Array(jobs)),
+            ("placements", Json::Array(placements)),
+            ("down", Json::Array(down)),
+            ("queue", Json::Array(queue)),
+            ("catalog", self.catalog.clone()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Snapshot> {
+        let version = v.req_f64("version").context("snapshot")? as u32;
+        anyhow::ensure!(
+            version == SNAPSHOT_VERSION,
+            "snapshot version {version} unsupported (this build reads version {SNAPSHOT_VERSION})"
+        );
+        let counters = v.get("counters").context("snapshot: missing counters")?;
+        let mut jobs = Vec::new();
+        for (i, e) in req_array(v, "jobs")?.iter().enumerate() {
+            let spec = e.get("spec").with_context(|| format!("jobs[{i}]: missing spec"))?;
+            jobs.push((
+                e.req_f64("arrived_at").with_context(|| format!("jobs[{i}]"))?,
+                job_spec_from_json(spec).with_context(|| format!("jobs[{i}].spec"))?,
+            ));
+        }
+        let mut placements = Vec::new();
+        for (i, e) in req_array(v, "placements")?.iter().enumerate() {
+            let ctx = || format!("placements[{i}]");
+            let accel = accel_from_json(e.get("accel").with_context(ctx)?).with_context(ctx)?;
+            let mut ids = Vec::new();
+            for j in req_array(e, "jobs").with_context(ctx)? {
+                let n = j.as_u64().with_context(|| format!("{}: bad job id {j}", ctx()))?;
+                ids.push(JobId(n as u32));
+            }
+            let combo = match ids[..] {
+                [a] => Combo::Solo(a),
+                [a, b] => Combo::pair(a, b),
+                _ => anyhow::bail!("{}: combo must hold 1 or 2 jobs, got {}", ctx(), ids.len()),
+            };
+            placements.push((accel, combo));
+        }
+        let mut down = Vec::new();
+        for (i, e) in req_array(v, "down")?.iter().enumerate() {
+            down.push(accel_from_json(e).with_context(|| format!("down[{i}]"))?);
+        }
+        let mut queue = Vec::new();
+        for (i, e) in req_array(v, "queue")?.iter().enumerate() {
+            queue.push(event_from_json(e).with_context(|| format!("queue[{i}]"))?);
+        }
+        Ok(Snapshot {
+            now_s: v.req_f64("now_s").context("snapshot")?,
+            next_job_id: v.req_f64("next_job_id").context("snapshot")? as u32,
+            draining: v.get("draining").and_then(Json::as_bool).unwrap_or(false),
+            jobs_total: counters.req_usize("jobs_total").context("counters")?,
+            jobs_completed: counters.req_usize("jobs_completed").context("counters")?,
+            jobs_cancelled: counters.req_usize("jobs_cancelled").context("counters")?,
+            jobs,
+            placements,
+            down,
+            queue,
+            catalog: v.get("catalog").context("snapshot: missing catalog")?.clone(),
+        })
+    }
+
+    /// Atomic write: serialize to `<path>.tmp`, then rename over `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing snapshot to {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming snapshot into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("snapshot {}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+fn req_array<'j>(j: &'j Json, key: &str) -> Result<&'j [Json]> {
+    j.get(key)
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("snapshot: missing array {key:?}"))
+}
+
+fn job_entry_json(arrived_at: f64, spec: &JobSpec) -> Json {
+    Json::obj(vec![("arrived_at", arrived_at.into()), ("spec", job_spec_to_json(spec))])
+}
+
+fn placement_entry_json(a: AccelId, c: &Combo) -> Json {
+    let ids: Vec<Json> = c.jobs().iter().map(|j| Json::from(j.0)).collect();
+    Json::obj(vec![("accel", accel_to_json(a)), ("jobs", Json::Array(ids))])
+}
+
+fn accel_to_json(a: AccelId) -> Json {
+    Json::obj(vec![("server", a.server.into()), ("type", a.accel.name().into())])
+}
+
+fn accel_from_json(v: &Json) -> Result<AccelId> {
+    let name = v.req_str("type")?;
+    let accel = ACCEL_TYPES
+        .iter()
+        .copied()
+        .find(|a: &AccelType| a.name() == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown accelerator type {name:?}"))?;
+    Ok(AccelId {
+        server: v.req_f64("server")? as u32,
+        accel,
+    })
+}
+
+fn job_spec_to_json(j: &JobSpec) -> Json {
+    let inference = match j.inference {
+        None => Json::Null,
+        Some(inf) => Json::obj(vec![
+            ("base_rate", inf.base_rate.into()),
+            ("diurnal_amplitude", inf.diurnal_amplitude.into()),
+            ("diurnal_phase_s", inf.diurnal_phase_s.into()),
+            ("latency_slo_s", inf.latency_slo_s.into()),
+        ]),
+    };
+    Json::obj(vec![
+        ("id", j.id.0.into()),
+        ("family", j.family.name().into()),
+        ("batch_size", j.batch_size.into()),
+        ("replication", j.replication.into()),
+        ("min_throughput", j.min_throughput.into()),
+        ("distributability", j.distributability.into()),
+        ("work", j.work.into()),
+        ("inference", inference),
+    ])
+}
+
+fn job_spec_from_json(v: &Json) -> Result<JobSpec> {
+    let family_name = v.req_str("family")?;
+    let family = FAMILIES
+        .iter()
+        .copied()
+        .find(|f: &ModelFamily| f.name() == family_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model family {family_name:?}"))?;
+    let inference = match v.get("inference") {
+        None | Some(Json::Null) => None,
+        Some(inf) => Some(InferenceSpec {
+            base_rate: inf.req_f64("base_rate")?,
+            diurnal_amplitude: inf.req_f64("diurnal_amplitude")?,
+            diurnal_phase_s: inf.req_f64("diurnal_phase_s")?,
+            latency_slo_s: inf.req_f64("latency_slo_s")?,
+        }),
+    };
+    Ok(JobSpec {
+        id: JobId(v.req_f64("id")? as u32),
+        family,
+        batch_size: v.req_f64("batch_size")? as u32,
+        replication: v.req_f64("replication")? as u32,
+        min_throughput: v.req_f64("min_throughput")?,
+        distributability: v.req_f64("distributability")? as u32,
+        work: v.req_f64("work")?,
+        inference,
+    })
+}
+
+fn event_to_json(at: f64, ev: &CoreEvent) -> Json {
+    let mut kv = vec![("at", Json::from(at))];
+    match ev {
+        CoreEvent::Arrival(spec) => {
+            kv.push(("kind", "arrival".into()));
+            kv.push(("spec", job_spec_to_json(spec)));
+        }
+        CoreEvent::Cancel(j) => {
+            kv.push(("kind", "cancel".into()));
+            kv.push(("job", j.0.into()));
+        }
+        CoreEvent::AccelDown(a) => {
+            kv.push(("kind", "accel_down".into()));
+            kv.push(("accel", accel_to_json(*a)));
+        }
+        CoreEvent::AccelUp(a) => {
+            kv.push(("kind", "accel_up".into()));
+            kv.push(("accel", accel_to_json(*a)));
+        }
+        // excluded by `pending_events`; unreachable on the capture path
+        CoreEvent::MonitorTick => kv.push(("kind", "monitor_tick".into())),
+    }
+    Json::obj(kv)
+}
+
+fn event_from_json(v: &Json) -> Result<(f64, CoreEvent)> {
+    let at = v.req_f64("at")?;
+    let spec = || v.get("spec").context("missing spec");
+    let accel = || v.get("accel").context("missing accel");
+    let ev = match v.req_str("kind")? {
+        "arrival" => CoreEvent::Arrival(job_spec_from_json(spec()?)?),
+        "cancel" => CoreEvent::Cancel(JobId(v.req_f64("job")? as u32)),
+        "accel_down" => CoreEvent::AccelDown(accel_from_json(accel()?)?),
+        "accel_up" => CoreEvent::AccelUp(accel_from_json(accel()?)?),
+        other => anyhow::bail!("unknown event kind {other:?}"),
+    };
+    Ok((at, ev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::build_scheduler;
+    use crate::workload::ThroughputOracle;
+
+    fn training_job(id: u32, work: f64) -> JobSpec {
+        JobSpec {
+            id: JobId(id),
+            family: ModelFamily::ResNet50,
+            batch_size: 32,
+            replication: 1,
+            min_throughput: 0.1,
+            distributability: 1,
+            work,
+            inference: None,
+        }
+    }
+
+    fn serving_job(id: u32) -> JobSpec {
+        JobSpec {
+            family: ModelFamily::LanguageModel,
+            inference: Some(InferenceSpec {
+                base_rate: 9.0,
+                diurnal_amplitude: 0.3,
+                diurnal_phase_s: 600.0,
+                latency_slo_s: 0.4,
+            }),
+            ..training_job(id, 3600.0)
+        }
+    }
+
+    /// Drive a tiny daemon-shaped run, capture, serialize, reload, and
+    /// require the reloaded snapshot to serialize bit-identically —
+    /// catalog included.
+    #[test]
+    fn save_load_round_trip_is_bit_identical() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.gogh.backend = crate::config::BackendKind::Native;
+        let oracle = ThroughputOracle::new(7);
+        let (mut sched, _backend) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        core.submit(0.0, training_job(0, 500.0));
+        core.submit(1.0, serving_job(1));
+        core.start_monitor();
+        core.advance_to(30.0, &mut sched).unwrap();
+        // leave one event pending so the queue section is exercised
+        core.cancel(99.0, JobId(0));
+
+        let snap = Snapshot::capture(&core, &sched, 2, false);
+        assert_eq!(snap.jobs.len(), 2, "both jobs should still be active");
+        assert!(!snap.placements.is_empty(), "jobs should be placed by t=30");
+        assert_eq!(snap.queue.len(), 1);
+
+        let text = snap.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.to_json().to_string(), text, "serialization is stable");
+        assert_eq!(back.catalog, snap.catalog, "catalog survives bit-identically");
+    }
+
+    #[test]
+    fn restore_rebuilds_cluster_and_catalog() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.gogh.backend = crate::config::BackendKind::Native;
+        let oracle = ThroughputOracle::new(7);
+        let (mut sched, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        core.submit(0.0, training_job(0, 500.0));
+        core.submit(1.0, training_job(1, 800.0));
+        core.start_monitor();
+        core.advance_to(45.0, &mut sched).unwrap();
+        let snap = Snapshot::capture(&core, &sched, 2, false);
+
+        // a "restarted process": fresh core + scheduler, then restore
+        let (mut sched2, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core2 = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        snap.restore_into(&mut core2, &mut sched2).unwrap();
+
+        assert_eq!(core2.cluster().now(), snap.now_s);
+        assert_eq!(core2.cluster().n_jobs(), snap.jobs.len());
+        let restored: Vec<(AccelId, Combo)> = {
+            let mut v: Vec<_> = core2.cluster().placement.iter().map(|(a, c)| (*a, *c)).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(restored, snap.placements);
+        assert_eq!(sched2.catalog.to_json(), snap.catalog, "learned state restored");
+        // counters carried over
+        let report = core2.report(&sched2);
+        assert_eq!(report.jobs_total, snap.jobs_total);
+
+        // the restored pair keeps scheduling: run to completion
+        core2.start_monitor();
+        core2.run(&mut sched2, 24.0 * 3600.0).unwrap();
+        let done = core2.report(&sched2);
+        assert_eq!(done.jobs_completed, 2);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let err = Snapshot::from_json(&Json::parse(r#"{"version": 9}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("version 9"), "{err}");
+    }
+
+    #[test]
+    fn save_is_atomic_and_loadable() {
+        let oracle = ThroughputOracle::new(7);
+        let cfg = {
+            let mut c = ExperimentConfig::default();
+            c.gogh.backend = crate::config::BackendKind::Native;
+            c
+        };
+        let (sched, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let core = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        let snap = Snapshot::capture(&core, &sched, 0, true);
+        let dir = std::env::temp_dir().join(format!("gogh_snap_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.json");
+        snap.save(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "tmp renamed away");
+        let back = Snapshot::load(&path).unwrap();
+        assert_eq!(back, snap);
+        assert!(back.draining);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -55,6 +55,8 @@ pub mod catalog;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
+pub mod engine;
 pub mod ilp;
 pub mod metrics;
 pub mod runtime;

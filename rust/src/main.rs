@@ -1,58 +1,22 @@
 //! `gogh` — CLI for the GOGH heterogeneous-cluster orchestrator.
 //!
-//! Subcommands:
+//! Subcommands (full flag reference: docs/CLI.md):
 //!   * `simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S] [--config cfg.json]`
 //!   * `info [--workloads]`   — workload universe / accelerators / artifacts
 //!   * `solve [--jobs N] [--servers-per-type K] [--seed S]` — one-shot Problem 1
 //!   * `config`               — dump the default config JSON
+//!   * `submit|queue|cancel|status|drain` — clients for a running `goghd`
 //!
 //! (Argument parsing is hand-rolled — offline build, see Cargo.toml.)
 
 use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
 use gogh::config::{BackendKind, ExperimentConfig};
 use gogh::coordinator::{Gogh, Scheduler, SimDriver};
+use gogh::daemon::{JobRequest, Request};
 use gogh::runtime::Engine;
-use gogh::workload::{ThroughputOracle, Trace};
+use gogh::util::{Args, Json};
+use gogh::workload::{InferenceSpec, ThroughputOracle, Trace, FAMILIES};
 use gogh::Result;
-
-struct Args {
-    flags: std::collections::HashMap<String, String>,
-    bools: std::collections::HashSet<String>,
-}
-
-impl Args {
-    fn parse(argv: &[String]) -> Self {
-        let mut flags = std::collections::HashMap::new();
-        let mut bools = std::collections::HashSet::new();
-        let mut i = 0;
-        while i < argv.len() {
-            if let Some(name) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(name.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    bools.insert(name.to_string());
-                    i += 1;
-                }
-            } else {
-                i += 1;
-            }
-        }
-        Self { flags, bools }
-    }
-
-    fn get(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
-    }
-
-    fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
-        self.get(name).and_then(|v| v.parse().ok())
-    }
-
-    fn has(&self, name: &str) -> bool {
-        self.bools.contains(name) || self.flags.contains_key(name)
-    }
-}
 
 const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in heterogeneous clusters
 
@@ -66,6 +30,16 @@ USAGE:
   gogh info [--workloads]
   gogh solve [--jobs N] [--servers-per-type K] [--seed S]
   gogh config [--preset default|large|mixed|serving]
+
+Daemon clients (talk to a running goghd; see docs/PROTOCOL.md):
+  gogh submit --family NAME --work S [--batch N] [--min-throughput F]
+              [--distributability N] [--rate R --latency-slo S]
+              [--diurnal-amplitude A] [--diurnal-phase-s P]
+  gogh submit --file jobs.json        (a JSON array of job objects)
+  gogh queue | status | drain
+  gogh cancel --job N
+All five accept --addr HOST:PORT (default 127.0.0.1:7411) or
+--socket PATH to pick the daemon endpoint.
 
 The `large` preset is the scale scenario: ≥1024 accelerator instances,
 a ≥50k-event trace, and the shard-parallel decision path (--shards
@@ -107,6 +81,11 @@ fn run() -> Result<()> {
             println!("{}", cfg.to_json());
             Ok(())
         }
+        "submit" => submit(&args),
+        "queue" => queue(&args),
+        "cancel" => cancel(&args),
+        "status" => status(&args),
+        "drain" => drain(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -311,7 +290,7 @@ fn info(args: &Args) -> Result<()> {
 
 fn solve(args: &Args) -> Result<()> {
     use gogh::cluster::{Cluster, ClusterSpec};
-    use gogh::workload::{JobId, JobSpec, FAMILIES};
+    use gogh::workload::{JobId, JobSpec};
     let jobs: u32 = args.get_parse("jobs").unwrap_or(8);
     let servers_per_type: u32 = args.get_parse("servers-per-type").unwrap_or(2);
     let seed: u64 = args.get_parse("seed").unwrap_or(17);
@@ -362,5 +341,192 @@ fn solve(args: &Args) -> Result<()> {
     for r in rows {
         println!("{r}");
     }
+    Ok(())
+}
+
+// ---- goghd clients -----------------------------------------------------
+
+/// Send one request line to the daemon named by --addr/--socket and
+/// return the parsed response body, turning protocol-level errors
+/// (`"ok": false`) into CLI errors.
+fn daemon_request(args: &Args, req: &Request) -> Result<Json> {
+    use std::io::{BufRead as _, BufReader, Write as _};
+    let line = req.to_json().to_string();
+    let mut response = String::new();
+    match (args.get("socket"), args.get("addr")) {
+        (Some(_), Some(_)) => anyhow::bail!("--socket and --addr are mutually exclusive"),
+        (Some(path), None) => {
+            let mut s = std::os::unix::net::UnixStream::connect(path)
+                .map_err(|e| anyhow::anyhow!("connecting to goghd at {path}: {e}"))?;
+            writeln!(s, "{line}")?;
+            BufReader::new(s).read_line(&mut response)?;
+        }
+        (None, addr) => {
+            let addr = addr.unwrap_or("127.0.0.1:7411");
+            let mut s = std::net::TcpStream::connect(addr)
+                .map_err(|e| anyhow::anyhow!("connecting to goghd at {addr}: {e}"))?;
+            writeln!(s, "{line}")?;
+            BufReader::new(s).read_line(&mut response)?;
+        }
+    }
+    anyhow::ensure!(!response.trim().is_empty(), "goghd closed the connection mid-request");
+    let v = Json::parse(response.trim())?;
+    if v.get("ok").and_then(Json::as_bool) == Some(true) {
+        Ok(v)
+    } else {
+        let err = v.get("error");
+        let code = err.and_then(|e| e.get("code")).and_then(Json::as_str).unwrap_or("internal");
+        let msg = err
+            .and_then(|e| e.get("message"))
+            .and_then(Json::as_str)
+            .unwrap_or("malformed error response");
+        anyhow::bail!("goghd refused the request ({code}): {msg}")
+    }
+}
+
+/// Build one job from `gogh submit` flags (--family/--work plus
+/// optional shape and serving flags).
+fn job_from_flags(args: &Args) -> Result<JobRequest> {
+    let family_name = args
+        .get("family")
+        .ok_or_else(|| anyhow::anyhow!("--family is required (see `gogh info --workloads`)"))?;
+    let family = FAMILIES
+        .iter()
+        .copied()
+        .find(|f| f.name() == family_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model family {family_name:?}"))?;
+    let work = args
+        .get_parse::<f64>("work")
+        .ok_or_else(|| anyhow::anyhow!("--work SECONDS is required"))?;
+    let inference = match (args.get_parse::<f64>("rate"), args.get_parse::<f64>("latency-slo")) {
+        (None, None) => None,
+        (Some(base_rate), Some(latency_slo_s)) => Some(InferenceSpec {
+            base_rate,
+            diurnal_amplitude: args.get_parse("diurnal-amplitude").unwrap_or(0.0),
+            diurnal_phase_s: args.get_parse("diurnal-phase-s").unwrap_or(0.0),
+            latency_slo_s,
+        }),
+        _ => anyhow::bail!("inference jobs need both --rate and --latency-slo"),
+    };
+    Ok(JobRequest {
+        family,
+        batch_size: args.get_parse("batch").unwrap_or(32),
+        min_throughput: args.get_parse("min-throughput").unwrap_or(0.0),
+        distributability: args.get_parse::<u32>("distributability").unwrap_or(1).max(1),
+        work,
+        inference,
+    })
+}
+
+fn submit(args: &Args) -> Result<()> {
+    let jobs: Vec<JobRequest> = match args.get("file") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: invalid JSON: {e}"))?;
+            let arr = v.as_array().ok_or_else(|| anyhow::anyhow!("{path}: not a JSON array"))?;
+            arr.iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    JobRequest::from_json(j)
+                        .map_err(|e| anyhow::anyhow!("{path}[{i}]: {}", e.message))
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+        None => vec![job_from_flags(args)?],
+    };
+    for job in jobs {
+        let family = job.family.name();
+        let kind = if job.inference.is_some() { "inference" } else { "training" };
+        let resp = daemon_request(args, &Request::Submit { job })?;
+        println!(
+            "submitted job {} ({family}, {kind}) at t={:.1} s",
+            resp.req_f64("id")? as u64,
+            resp.req_f64("at")?
+        );
+    }
+    Ok(())
+}
+
+fn queue(args: &Args) -> Result<()> {
+    let resp = daemon_request(args, &Request::Queue)?;
+    let jobs = resp.get("jobs").and_then(Json::as_array).unwrap_or(&[]);
+    println!(
+        "queue: {} active jobs ({} pending arrivals, draining: {})",
+        jobs.len(),
+        resp.get("pending").and_then(Json::as_u64).unwrap_or(0),
+        resp.get("draining").and_then(Json::as_bool).unwrap_or(false)
+    );
+    for j in jobs {
+        let accels: Vec<&str> = j
+            .get("accels")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_str)
+            .collect();
+        println!(
+            "  j{} {} {} placed={} work={:.1}",
+            j.req_f64("id")? as u64,
+            j.req_str("family")?,
+            j.req_str("kind")?,
+            if accels.is_empty() { "-".to_string() } else { accels.join("+") },
+            j.req_f64("work_remaining")?
+        );
+    }
+    Ok(())
+}
+
+fn cancel(args: &Args) -> Result<()> {
+    let job = args.get_parse::<u32>("job").ok_or_else(|| anyhow::anyhow!("--job N is required"))?;
+    daemon_request(args, &Request::Cancel { job })?;
+    println!("cancelled job {job}");
+    Ok(())
+}
+
+fn status(args: &Args) -> Result<()> {
+    let resp = daemon_request(args, &Request::Status)?;
+    println!(
+        "daemon: backend {}, draining {}, sim t={:.1} s",
+        resp.req_str("backend")?,
+        resp.get("draining").and_then(Json::as_bool).unwrap_or(false),
+        resp.req_f64("sim_seconds")?
+    );
+    let jobs = resp.get("jobs").ok_or_else(|| anyhow::anyhow!("status response missing jobs"))?;
+    println!(
+        "jobs: {} total, {} active, {} completed, {} cancelled",
+        jobs.req_f64("total")? as u64,
+        jobs.req_f64("active")? as u64,
+        jobs.req_f64("completed")? as u64,
+        jobs.req_f64("cancelled")? as u64
+    );
+    let catalog =
+        resp.get("catalog").ok_or_else(|| anyhow::anyhow!("status response missing catalog"))?;
+    println!(
+        "catalog: {} records ({} measured)",
+        catalog.req_f64("records")? as u64,
+        catalog.req_f64("measured")? as u64
+    );
+    let placements = resp.get("placements").and_then(Json::as_array).unwrap_or(&[]);
+    println!("placements: {} busy accelerators", placements.len());
+    for p in placements {
+        let ids: Vec<String> = p
+            .get("jobs")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|j| j.as_u64().map(|n| format!("j{n}")))
+            .collect();
+        println!("  {} <- [{}]", p.req_str("accel")?, ids.join(", "));
+    }
+    println!("energy: {:.0} J", resp.req_f64("energy_joules")?);
+    Ok(())
+}
+
+fn drain(args: &Args) -> Result<()> {
+    let resp = daemon_request(args, &Request::Drain)?;
+    println!(
+        "drain requested; {} active jobs remain (goghd exits when they finish)",
+        resp.req_f64("active")? as u64
+    );
     Ok(())
 }

@@ -1,0 +1,70 @@
+//! Hand-rolled `--flag value` CLI parsing shared by the `gogh` and
+//! `goghd` binaries (this build is fully offline — see Cargo.toml).
+//!
+//! A `--name` followed by a non-`--` token is a valued flag; a bare
+//! `--name` is boolean. Positional tokens are ignored by this layer
+//! (the binaries pull the subcommand off `argv` before parsing).
+
+use std::collections::{HashMap, HashSet};
+
+/// Parsed flags: valued (`--jobs 40`) and boolean (`--fresh`).
+pub struct Args {
+    flags: HashMap<String, String>,
+    bools: HashSet<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut bools = HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.insert(name.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags, bools }
+    }
+
+    /// The raw value of `--name value`, if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// The value of `--name value` parsed as `T` (None if absent or
+    /// unparseable).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    /// Whether `--name` appeared at all (valued or boolean).
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.contains(name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valued_boolean_and_missing_flags() {
+        let argv: Vec<String> =
+            ["--jobs", "40", "--fresh", "--preset", "serving"].map(String::from).to_vec();
+        let a = Args::parse(&argv);
+        assert_eq!(a.get("jobs"), Some("40"));
+        assert_eq!(a.get_parse::<usize>("jobs"), Some(40));
+        assert!(a.has("fresh"));
+        assert!(a.has("preset"));
+        assert_eq!(a.get("fresh"), None, "boolean flags carry no value");
+        assert!(!a.has("seed"));
+    }
+}

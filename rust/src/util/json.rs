@@ -29,7 +29,7 @@ impl Json {
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            bail!("trailing characters at byte {}", p.i);
+            bail!("trailing characters at {}", p.pos());
         }
         Ok(v)
     }
@@ -157,6 +157,15 @@ struct Parser<'a> {
 }
 
 impl<'a> Parser<'a> {
+    /// Human position of the current byte: 1-based line and column
+    /// (parse errors point here instead of at a raw byte offset).
+    fn pos(&self) -> String {
+        let upto = &self.b[..self.i.min(self.b.len())];
+        let line = upto.iter().filter(|&&c| c == b'\n').count() + 1;
+        let col = upto.iter().rev().take_while(|&&c| c != b'\n').count() + 1;
+        format!("line {line} column {col}")
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -172,7 +181,7 @@ impl<'a> Parser<'a> {
             self.i += 1;
             Ok(())
         } else {
-            bail!("expected {:?} at byte {}", c as char, self.i)
+            bail!("expected {:?} at {}", c as char, self.pos())
         }
     }
 
@@ -186,7 +195,7 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.i),
+            other => bail!("unexpected {:?} at {}", other.map(|c| c as char), self.pos()),
         }
     }
 
@@ -195,7 +204,7 @@ impl<'a> Parser<'a> {
             self.i += s.len();
             Ok(v)
         } else {
-            bail!("bad literal at byte {}", self.i)
+            bail!("bad literal at {}", self.pos())
         }
     }
 
@@ -223,7 +232,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Object(kv));
                 }
-                _ => bail!("expected ',' or '}}' at byte {}", self.i),
+                _ => bail!("expected ',' or '}}' at {}", self.pos()),
             }
         }
     }
@@ -247,7 +256,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Array(v));
                 }
-                _ => bail!("expected ',' or ']' at byte {}", self.i),
+                _ => bail!("expected ',' or ']' at {}", self.pos()),
             }
         }
     }
@@ -257,7 +266,7 @@ impl<'a> Parser<'a> {
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => bail!("unterminated string"),
+                None => bail!("unterminated string at {}", self.pos()),
                 Some(b'"') => {
                     self.i += 1;
                     return Ok(s);
@@ -274,12 +283,17 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
+                            // bounds-checked: a truncated \uXXXX (e.g. a
+                            // cut-off network line) is an error, not a panic
+                            if self.i + 5 > self.b.len() {
+                                bail!("truncated \\u escape at {}", self.pos());
+                            }
                             let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])?;
                             let code = u32::from_str_radix(hex, 16)?;
                             s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                             self.i += 4;
                         }
-                        _ => bail!("bad escape at byte {}", self.i),
+                        _ => bail!("bad escape at {}", self.pos()),
                     }
                     self.i += 1;
                 }
@@ -397,6 +411,16 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("{} x").is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_and_column() {
+        let err = Json::parse("{\n  \"a\": ,\n}").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = Json::parse("[1, 2").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        // truncated \u escape is a clean error, not a slice panic
+        assert!(Json::parse("\"\\u12").is_err());
     }
 
     #[test]

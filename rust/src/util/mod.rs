@@ -1,10 +1,12 @@
 //! Self-contained utility substrates (this build is fully offline —
-//! see Cargo.toml): a seeded PRNG, a JSON parser/serializer, and a tiny
-//! leveled logger.
+//! see Cargo.toml): a seeded PRNG, a JSON parser/serializer, CLI flag
+//! parsing, and a tiny leveled logger.
 
+pub mod args;
 pub mod json;
 pub mod logging;
 pub mod rng;
 
+pub use args::Args;
 pub use json::Json;
 pub use rng::Rng;

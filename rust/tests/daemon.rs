@@ -1,0 +1,267 @@
+//! End-to-end tests for `goghd`: protocol smoke over a Unix socket,
+//! and crash-safety (SIGKILL + restart restores jobs, placements, and
+//! the learned catalog from the snapshot file).
+//!
+//! Both tests spawn the real binary (`CARGO_BIN_EXE_goghd`) and speak
+//! the newline-delimited JSON protocol over raw sockets, exactly as an
+//! external client would.
+
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use gogh::util::Json;
+
+/// Kills the daemon on drop so a failing assert can't leak a process.
+struct Daemon(Child);
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+fn spawn_daemon(args: &[&str]) -> Daemon {
+    Daemon(
+        Command::new(env!("CARGO_BIN_EXE_goghd"))
+            .args(args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning goghd"),
+    )
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("goghd_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Wait (max 30 s) until `f` returns Some.
+fn poll<T>(what: &str, mut f: impl FnMut() -> Option<T>) -> T {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Some(v) = f() {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// One request/response exchange over a fresh Unix-socket connection.
+fn request_unix(sock: &Path, line: &str) -> Json {
+    let mut s = std::os::unix::net::UnixStream::connect(sock).expect("connect");
+    writeln!(s, "{line}").unwrap();
+    let mut resp = String::new();
+    BufReader::new(s).read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).expect("response is JSON")
+}
+
+/// One request/response exchange over a fresh TCP connection.
+fn request_tcp(addr: &str, line: &str) -> Json {
+    let mut s = std::net::TcpStream::connect(addr).expect("connect");
+    writeln!(s, "{line}").unwrap();
+    let mut resp = String::new();
+    BufReader::new(s).read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).expect("response is JSON")
+}
+
+fn is_ok(v: &Json) -> bool {
+    v.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+fn error_code(v: &Json) -> &str {
+    v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str).unwrap_or("")
+}
+
+#[test]
+fn daemon_smoke_submit_status_cancel_drain() {
+    let dir = fresh_dir("smoke");
+    let sock = dir.join("goghd.sock");
+    // time-scale 60: one 30-sim-second monitor interval ≈ 0.5 wall s
+    let daemon = spawn_daemon(&[
+        "--backend",
+        "native",
+        "--socket",
+        sock.to_str().unwrap(),
+        "--time-scale",
+        "60",
+    ]);
+    poll("socket to appear", || sock.exists().then_some(()));
+
+    // submit two training jobs over the wire (work is large enough that
+    // neither can finish before the cancels below, even at 60x)
+    let r = request_unix(&sock, r#"{"cmd":"submit","job":{"family":"resnet50","work":1e6}}"#);
+    assert!(is_ok(&r), "{r}");
+    assert_eq!(r.get("id").and_then(Json::as_u64), Some(0));
+    let r = request_unix(&sock, r#"{"cmd":"submit","job":{"family":"lm","work":1e6}}"#);
+    assert!(is_ok(&r), "{r}");
+    assert_eq!(r.get("id").and_then(Json::as_u64), Some(1));
+
+    // queue lists both
+    let q = poll("both jobs active", || {
+        let q = request_unix(&sock, r#"{"cmd":"queue"}"#);
+        (q.get("jobs").and_then(Json::as_array).map(<[Json]>::len) == Some(2)).then_some(q)
+    });
+    assert!(is_ok(&q), "{q}");
+
+    // the GOGH policy places them (visible via status)
+    let s = poll("placements in status", || {
+        let s = request_unix(&sock, r#"{"cmd":"status"}"#);
+        (!s.get("placements").and_then(Json::as_array).unwrap_or(&[]).is_empty()).then_some(s)
+    });
+    let catalog_records =
+        s.get("catalog").and_then(|c| c.get("records")).and_then(Json::as_u64).unwrap();
+    assert!(catalog_records > 0, "learned estimates should exist: {s}");
+
+    // protocol errors use the envelope
+    let r = request_unix(&sock, r#"{"cmd":"cancel","job":99}"#);
+    assert!(!is_ok(&r));
+    assert_eq!(error_code(&r), "unknown_job");
+    let r = request_unix(&sock, r#"{"cmd":"warp"}"#);
+    assert_eq!(error_code(&r), "unknown_cmd");
+    let r = request_unix(&sock, "{broken");
+    assert_eq!(error_code(&r), "bad_request");
+    let r = request_unix(&sock, r#"{"v":99,"cmd":"queue"}"#);
+    assert_eq!(error_code(&r), "unsupported_version");
+
+    // cancel one, drain, and the daemon must refuse new work
+    let r = request_unix(&sock, r#"{"cmd":"cancel","job":0}"#);
+    assert!(is_ok(&r), "{r}");
+    let r = request_unix(&sock, r#"{"cmd":"drain"}"#);
+    assert!(is_ok(&r), "{r}");
+    let r = request_unix(&sock, r#"{"cmd":"submit","job":{"family":"lm","work":60}}"#);
+    assert_eq!(error_code(&r), "draining");
+
+    // cancel the last job → the daemon drains and exits cleanly
+    let r = request_unix(&sock, r#"{"cmd":"cancel","job":1}"#);
+    assert!(is_ok(&r), "{r}");
+    let mut daemon = daemon;
+    let status = poll("clean exit after drain", || daemon.0.try_wait().unwrap());
+    assert!(status.success(), "goghd should exit 0 after draining, got {status}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn daemon_kill_and_resume_restores_state() {
+    let dir = fresh_dir("resume");
+    let state = dir.join("state.json");
+    let port_file = dir.join("port");
+    let flags = |pf: &Path| {
+        vec![
+            "--backend".to_string(),
+            "native".to_string(),
+            "--addr".to_string(),
+            "127.0.0.1:0".to_string(),
+            "--port-file".to_string(),
+            pf.to_str().unwrap().to_string(),
+            "--state".to_string(),
+            state.to_str().unwrap().to_string(),
+            "--snapshot-every".to_string(),
+            "0.2".to_string(),
+        ]
+    };
+    let args: Vec<String> = flags(&port_file);
+    let daemon = Daemon(
+        Command::new(env!("CARGO_BIN_EXE_goghd"))
+            .args(&args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap(),
+    );
+    let addr = poll("port file", || {
+        std::fs::read_to_string(&port_file).ok().map(|p| format!("127.0.0.1:{}", p.trim()))
+    });
+
+    // two effectively-endless jobs so state is nontrivial at kill time
+    let r = request_tcp(&addr, r#"{"cmd":"submit","job":{"family":"resnet18","work":1e9}}"#);
+    assert!(is_ok(&r), "{r}");
+    let r = request_tcp(&addr, r#"{"cmd":"submit","job":{"family":"transformer","work":1e9}}"#);
+    assert!(is_ok(&r), "{r}");
+
+    // wait until a snapshot on disk shows both jobs placed
+    let snap = poll("snapshot with both jobs placed", || {
+        let text = std::fs::read_to_string(&state).ok()?;
+        let v = Json::parse(&text).ok()?;
+        let jobs = v.get("jobs")?.as_array()?.len();
+        let placements = v.get("placements")?.as_array()?.len();
+        (jobs == 2 && placements > 0).then_some(v)
+    });
+    let snap_records = snap
+        .get("catalog")
+        .and_then(|c| c.get("records"))
+        .and_then(Json::as_array)
+        .map(<[Json]>::len)
+        .unwrap();
+    assert!(snap_records > 0, "snapshot should carry learned estimates");
+
+    // SIGKILL: no clean-shutdown path runs
+    drop(daemon);
+
+    // restart on a new ephemeral port, same state file
+    let port_file2 = dir.join("port2");
+    std::fs::remove_file(&port_file).ok();
+    let args2: Vec<String> = flags(&port_file2);
+    let _daemon2 = Daemon(
+        Command::new(env!("CARGO_BIN_EXE_goghd"))
+            .args(&args2)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap(),
+    );
+    let addr2 = poll("port file after restart", || {
+        std::fs::read_to_string(&port_file2).ok().map(|p| format!("127.0.0.1:{}", p.trim()))
+    });
+
+    let status = request_tcp(&addr2, r#"{"cmd":"status"}"#);
+    assert!(is_ok(&status), "{status}");
+
+    // same active jobs and catalog record count as the snapshot file
+    let active = status.get("jobs").and_then(|j| j.get("active")).and_then(Json::as_u64).unwrap();
+    assert_eq!(active, 2, "both jobs survive the restart: {status}");
+    let restored_records = status
+        .get("catalog")
+        .and_then(|c| c.get("records"))
+        .and_then(Json::as_u64)
+        .unwrap() as usize;
+    assert_eq!(restored_records, snap_records, "catalog restored verbatim");
+
+    // same placements: compare (accel, jobs) pairs to the snapshot
+    let mut snap_placements: Vec<String> = snap
+        .get("placements")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .map(|p| {
+            let a = p.get("accel").unwrap();
+            let server = a.req_f64("server").unwrap() as u64;
+            let ty = a.req_str("type").unwrap();
+            format!("s{server}/{ty} {}", p.get("jobs").unwrap())
+        })
+        .collect();
+    snap_placements.sort();
+    let mut restored_placements: Vec<String> = status
+        .get("placements")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .map(|p| format!("{} {}", p.req_str("accel").unwrap(), p.get("jobs").unwrap()))
+        .collect();
+    restored_placements.sort();
+    assert_eq!(restored_placements, snap_placements);
+
+    // a restarted daemon keeps allocating fresh ids (no collisions)
+    let r = request_tcp(&addr2, r#"{"cmd":"submit","job":{"family":"lm","work":60}}"#);
+    assert!(is_ok(&r), "{r}");
+    assert_eq!(r.get("id").and_then(Json::as_u64), Some(2));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
