@@ -144,6 +144,7 @@ fn main() -> gogh::Result<()> {
         slack_penalty: Some(2000.0),
         throughput_bonus: 300.0,
         now_s: 0.0,
+        power: Default::default(),
     };
     let warm_cfg = BnbConfig::default();
     let cold_cfg = BnbConfig {

@@ -72,6 +72,7 @@ fn main() {
                 slack_penalty: Some(2000.0),
                 throughput_bonus: 300.0,
                 now_s: 0.0,
+                power: Default::default(),
             };
             let warm_cfg = BnbConfig {
                 max_nodes: 8_000,

@@ -6,7 +6,7 @@
 //! learned throughput catalog — to a snapshot file (`docs/SNAPSHOT.md`)
 //! so a restart resumes where it left off.
 
-use gogh::config::{BackendKind, ExperimentConfig};
+use gogh::config::{BackendKind, CarbonConfig, ExperimentConfig};
 use gogh::daemon::{serve, DaemonOptions, Endpoint};
 use gogh::util::Args;
 use gogh::Result;
@@ -14,11 +14,12 @@ use gogh::Result;
 const USAGE: &str = "goghd — long-lived GOGH scheduling daemon
 
 USAGE:
-  goghd [--config cfg.json | --preset default|large|mixed|serving]
+  goghd [--config cfg.json | --preset default|large|mixed|serving|powercap|carbon]
         [--backend auto|pjrt|native|none] [--seed S] [--gavel-csv data.csv]
         [--addr HOST:PORT | --socket PATH] [--port-file PATH]
         [--state snapshot.json] [--snapshot-every SECONDS] [--fresh]
-        [--time-scale X]
+        [--time-scale X] [--power-cap W] [--power-dvfs true|false]
+        [--carbon-trace signal.json]
 
 Defaults: --addr 127.0.0.1:7411, --snapshot-every 30, --time-scale 1.
 Use `--addr 127.0.0.1:0 --port-file p.txt` for an ephemeral port.
@@ -55,6 +56,17 @@ fn run() -> Result<()> {
     }
     if let Some(p) = args.get("gavel-csv") {
         cfg.gavel_csv = Some(p.to_string());
+    }
+    if let Some(w) = args.get_parse::<f64>("power-cap") {
+        cfg.power.cap_w = Some(w);
+    }
+    if let Some(d) = args.get_parse::<bool>("power-dvfs") {
+        cfg.power.dvfs = d;
+    }
+    if let Some(p) = args.get("carbon-trace") {
+        let text = std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+        cfg.power.carbon =
+            CarbonConfig::from_json(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
     }
 
     let endpoint = match (args.get("socket"), args.get("addr")) {

@@ -10,6 +10,7 @@
 use std::collections::HashMap;
 
 use super::{AccelId, Placement};
+use crate::power::{state_power_watts, PowerState};
 use crate::workload::{AccelType, JobId};
 
 /// Instantaneous power (watts) of accelerator type `a` at load `u`.
@@ -51,6 +52,10 @@ pub struct EnergyMeter {
     total_joules: f64,
     /// per-accelerator-type cumulative joules (for the breakdown table)
     by_type: HashMap<AccelType, f64>,
+    /// per-DVFS-state cumulative joules, indexed by [`PowerState::index`]
+    by_state: [f64; 3],
+    /// cumulative grams of CO₂ (0 unless a carbon signal is configured)
+    grams_co2: f64,
     last_t: f64,
 }
 
@@ -68,8 +73,27 @@ impl EnergyMeter {
     /// spec: an accelerator that is down draws nothing, and billing its
     /// idle watts through an `AccelDown` window would inflate total
     /// joules for every policy (asserted by the churn regression test in
-    /// `coordinator/scheduler.rs`).
+    /// `coordinator/scheduler.rs`). This holds *regardless of DVFS
+    /// state*: a down instance may still carry a remembered non-nominal
+    /// state, but because billing walks the in-service list — never the
+    /// state map — it accrues zero until it returns (the down+re-state
+    /// regression test next to the churn test pins this).
     pub fn accrue(&mut self, t: f64, accels_in_service: &[AccelId], loads: &HashMap<AccelId, f64>) {
+        self.accrue_states(t, accels_in_service, &|_| PowerState::Nominal, loads, 0.0);
+    }
+
+    /// State- and carbon-aware accrual: like [`EnergyMeter::accrue`] but
+    /// each instance bills its DVFS state's power curve, joules are also
+    /// bucketed per state, and `gco2_per_kwh` (the carbon signal's
+    /// intensity over this interval; 0 = no signal) accrues emissions.
+    pub fn accrue_states(
+        &mut self,
+        t: f64,
+        accels_in_service: &[AccelId],
+        state_of: &dyn Fn(AccelId) -> PowerState,
+        loads: &HashMap<AccelId, f64>,
+        gco2_per_kwh: f64,
+    ) {
         let dt = (t - self.last_t).max(0.0);
         self.last_t = t;
         if dt == 0.0 {
@@ -77,9 +101,12 @@ impl EnergyMeter {
         }
         for aid in accels_in_service {
             let u = loads.get(aid).copied().unwrap_or(0.0);
-            let p = power_watts(aid.accel, u);
-            self.total_joules += p * dt;
-            *self.by_type.entry(aid.accel).or_default() += p * dt;
+            let s = state_of(*aid);
+            let joules = state_power_watts(aid.accel, s, u) * dt;
+            self.total_joules += joules;
+            *self.by_type.entry(aid.accel).or_default() += joules;
+            self.by_state[s.index()] += joules;
+            self.grams_co2 += gco2_per_kwh * joules / 3.6e6;
         }
     }
 
@@ -89,6 +116,16 @@ impl EnergyMeter {
 
     pub fn joules_by_type(&self) -> &HashMap<AccelType, f64> {
         &self.by_type
+    }
+
+    /// Cumulative joules per DVFS state, `[low, nominal, turbo]`.
+    pub fn joules_by_state(&self) -> [f64; 3] {
+        self.by_state
+    }
+
+    /// Cumulative emissions (grams of CO₂); 0 without a carbon signal.
+    pub fn grams_co2(&self) -> f64 {
+        self.grams_co2
     }
 
     pub fn reset_clock(&mut self, t: f64) {
@@ -157,6 +194,47 @@ mod tests {
         m.accrue(10.0, &accels, &HashMap::new());
         // 10 s at k80 idle (25 W) = 250 J
         assert!((m.total_joules() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn state_aware_accrual_buckets_joules_and_carbon() {
+        let mut m = EnergyMeter::new();
+        let k80 = AccelId {
+            server: 0,
+            accel: AccelType::K80,
+        };
+        let v100 = AccelId {
+            server: 1,
+            accel: AccelType::V100,
+        };
+        let accels = vec![k80, v100];
+        let state_of = |a: AccelId| if a == k80 { PowerState::Low } else { PowerState::Nominal };
+        m.accrue_states(10.0, &accels, &state_of, &HashMap::new(), 360.0);
+        // 10 s idle: k80 low 21.25 W → 212.5 J, v100 nominal 35 W → 350 J
+        assert!((m.total_joules() - 562.5).abs() < 1e-9);
+        let by = m.joules_by_state();
+        assert!((by[PowerState::Low.index()] - 212.5).abs() < 1e-9);
+        assert!((by[PowerState::Nominal.index()] - 350.0).abs() < 1e-9);
+        assert_eq!(by[PowerState::Turbo.index()], 0.0);
+        // 360 gCO₂/kWh = 1e-4 g/J → 562.5 J = 0.05625 g
+        assert!((m.grams_co2() - 0.05625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn legacy_accrue_is_nominal_and_carbon_free() {
+        let accels = vec![AccelId {
+            server: 0,
+            accel: AccelType::P100,
+        }];
+        let mut loads = HashMap::new();
+        loads.insert(accels[0], 0.7);
+        let mut legacy = EnergyMeter::new();
+        legacy.accrue(25.0, &accels, &loads);
+        let mut stated = EnergyMeter::new();
+        stated.accrue_states(25.0, &accels, &|_| PowerState::Nominal, &loads, 0.0);
+        assert_eq!(legacy.total_joules(), stated.total_joules());
+        assert_eq!(legacy.grams_co2(), 0.0);
+        assert_eq!(legacy.joules_by_state()[PowerState::Nominal.index()], legacy.total_joules());
     }
 
     #[test]

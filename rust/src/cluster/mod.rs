@@ -15,6 +15,7 @@ pub use monitor::{Measurement, Monitor};
 
 use std::collections::{BTreeSet, HashMap};
 
+use crate::power::{state_power_watts, PowerState};
 use crate::workload::{AccelType, Combo, JobId, JobSpec};
 use crate::Result;
 
@@ -220,6 +221,11 @@ pub enum PlacementOp {
     /// Move `job` off `from` (a co-runner, if any, stays behind solo)
     /// and re-host it solo on the empty instance `to`.
     Migrate { job: JobId, from: AccelId, to: AccelId },
+    /// Re-state `accel` to the DVFS point `state` without touching its
+    /// hosted combo. Cheap (no migration, no placement move); legal on a
+    /// *down* instance — the state is remembered for when it returns,
+    /// and a down instance bills zero joules regardless.
+    SetPowerState { accel: AccelId, state: PowerState },
 }
 
 /// An incremental placement change: the unit every [`crate::coordinator::Scheduler`]
@@ -300,6 +306,12 @@ pub struct Cluster {
     down: BTreeSet<AccelId>,
     /// restart penalty: jobs make no progress until this simulated time.
     stalled_until: HashMap<JobId, f64>,
+    /// DVFS states; absent = [`PowerState::Nominal`] (the map stays
+    /// sparse so a never-restated cluster costs nothing).
+    power_states: HashMap<AccelId, PowerState>,
+    /// cluster power cap (worst-case watts); deltas breaching it are
+    /// rejected transactionally.
+    power_cap_w: Option<f64>,
 }
 
 impl Cluster {
@@ -311,6 +323,8 @@ impl Cluster {
             now: 0.0,
             down: BTreeSet::new(),
             stalled_until: HashMap::new(),
+            power_states: HashMap::new(),
+            power_cap_w: None,
         }
     }
 
@@ -380,6 +394,124 @@ impl Cluster {
         self.down.remove(&a);
     }
 
+    // -- power management (docs/POWER.md) --------------------------------
+
+    /// Current DVFS state of `a` ([`PowerState::Nominal`] by default).
+    pub fn power_state(&self, a: AccelId) -> PowerState {
+        self.power_states.get(&a).copied().unwrap_or_default()
+    }
+
+    /// Restore/rebuild hook: set a state directly, bypassing delta
+    /// validation (snapshot restore; policies go through
+    /// [`PlacementOp::SetPowerState`]).
+    pub fn set_power_state(&mut self, a: AccelId, s: PowerState) {
+        Self::write_state(&mut self.power_states, a, s);
+    }
+
+    fn write_state(states: &mut HashMap<AccelId, PowerState>, a: AccelId, s: PowerState) {
+        if s == PowerState::Nominal {
+            states.remove(&a);
+        } else {
+            states.insert(a, s);
+        }
+    }
+
+    /// Every instance in a non-default state, sorted (snapshot capture
+    /// and the daemon's `status` body).
+    pub fn power_state_entries(&self) -> Vec<(AccelId, PowerState)> {
+        let mut v: Vec<(AccelId, PowerState)> =
+            self.power_states.iter().map(|(a, s)| (*a, *s)).collect();
+        v.sort();
+        v
+    }
+
+    /// Set (or clear) the cluster power cap in worst-case watts.
+    pub fn set_power_cap(&mut self, cap_w: Option<f64>) {
+        self.power_cap_w = cap_w.filter(|c| c.is_finite() && *c > 0.0);
+    }
+
+    pub fn power_cap_w(&self) -> Option<f64> {
+        self.power_cap_w
+    }
+
+    /// Worst-case cluster draw under the current placement and states:
+    /// every in-service instance at `u = 1` if occupied, idle if empty;
+    /// down instances contribute zero. The quantity the power cap bounds
+    /// — actual loads are ≤ 1, so measured power can never exceed a cap
+    /// this accepted.
+    pub fn worst_case_watts(&self) -> f64 {
+        self.worst_case_watts_of(&self.placement, &self.power_states)
+    }
+
+    fn worst_case_watts_of(
+        &self,
+        placement: &Placement,
+        states: &HashMap<AccelId, PowerState>,
+    ) -> f64 {
+        self.spec
+            .accels
+            .iter()
+            .filter(|a| !self.down.contains(a))
+            .map(|a| {
+                let s = states.get(a).copied().unwrap_or_default();
+                let u = if placement.combo_on(*a).is_some() { 1.0 } else { 0.0 };
+                state_power_watts(a.accel, s, u)
+            })
+            .sum()
+    }
+
+    /// Shrink a policy delta to fit the power cap (no-op when uncapped):
+    /// ops are replayed in order against scratch state; an op that would
+    /// push the worst case over the cap is retried with its target
+    /// instance forced to [`PowerState::Low`] (assignments/migrations)
+    /// or dropped (turbo upgrades). Ops that fail validation outright
+    /// are kept verbatim so [`Cluster::apply_delta`] still surfaces the
+    /// policy bug transactionally.
+    pub fn trim_to_power_cap(&self, delta: &PlacementDelta) -> PlacementDelta {
+        let Some(cap) = self.power_cap_w else {
+            return delta.clone();
+        };
+        let mut next = self.placement.clone();
+        let mut states = self.power_states.clone();
+        let mut kept: Vec<PlacementOp> = vec![];
+        for op in &delta.ops {
+            let next_bak = next.clone();
+            let states_bak = states.clone();
+            if self.apply_op(&mut next, &mut states, op).is_err() {
+                next = next_bak;
+                states = states_bak;
+                kept.push(*op);
+                continue;
+            }
+            if self.worst_case_watts_of(&next, &states) <= cap + 1e-9 {
+                kept.push(*op);
+                continue;
+            }
+            // breach: for load-adding ops, try the target down-clocked
+            let target = match *op {
+                PlacementOp::Assign { accel, .. } => Some(accel),
+                PlacementOp::Migrate { to, .. } => Some(to),
+                _ => None,
+            };
+            let retry =
+                target.filter(|a| states.get(a).copied().unwrap_or_default() != PowerState::Low);
+            if let Some(accel) = retry {
+                Self::write_state(&mut states, accel, PowerState::Low);
+                if self.worst_case_watts_of(&next, &states) <= cap + 1e-9 {
+                    kept.push(PlacementOp::SetPowerState {
+                        accel,
+                        state: PowerState::Low,
+                    });
+                    kept.push(*op);
+                    continue;
+                }
+            }
+            next = next_bak;
+            states = states_bak;
+        }
+        PlacementDelta { ops: kept }
+    }
+
     /// Charge a restart penalty: `j` makes no progress before `until`.
     /// Returns the stall seconds actually added — overlapping penalties
     /// extend the stall window instead of double-charging it.
@@ -406,8 +538,16 @@ impl Cluster {
     /// distributability D_j allows.
     pub fn apply_delta(&mut self, delta: &PlacementDelta) -> Result<DeltaOutcome> {
         let mut next = self.placement.clone();
+        let mut next_states = self.power_states.clone();
         for op in &delta.ops {
-            self.apply_op(&mut next, op)?;
+            self.apply_op(&mut next, &mut next_states, op)?;
+        }
+        if let Some(cap) = self.power_cap_w {
+            let worst = self.worst_case_watts_of(&next, &next_states);
+            anyhow::ensure!(
+                worst <= cap + 1e-9,
+                "delta breaches the power cap (worst case {worst:.0} W > cap {cap:.0} W)"
+            );
         }
         for (j, accels) in next.by_job.iter() {
             let d = self
@@ -451,13 +591,19 @@ impl Cluster {
             .collect();
         migrated.sort();
         self.placement = next;
+        self.power_states = next_states;
         Ok(DeltaOutcome {
             moves,
             migrated_jobs: migrated,
         })
     }
 
-    fn apply_op(&self, next: &mut Placement, op: &PlacementOp) -> Result<()> {
+    fn apply_op(
+        &self,
+        next: &mut Placement,
+        states: &mut HashMap<AccelId, PowerState>,
+        op: &PlacementOp,
+    ) -> Result<()> {
         let check_target = |accel: AccelId, next: &Placement| -> Result<()> {
             anyhow::ensure!(
                 self.spec.accels.contains(&accel),
@@ -506,6 +652,15 @@ impl Cluster {
                     next.assign(from, Combo::Solo(peer));
                 }
                 next.assign(to, Combo::Solo(job));
+            }
+            PlacementOp::SetPowerState { accel, state } => {
+                // deliberately NOT check_target: re-stating a down or
+                // occupied instance is legal (no combo is touched)
+                anyhow::ensure!(
+                    self.spec.accels.contains(&accel),
+                    "unknown accelerator {accel}"
+                );
+                Self::write_state(states, accel, state);
             }
         }
         Ok(())
@@ -829,6 +984,153 @@ mod tests {
         let out = c.apply_delta(&d).unwrap();
         assert_eq!(c.placement.diff_count(&target), 0);
         assert_eq!(out.migrated_jobs, vec![JobId(0)]);
+    }
+
+    #[test]
+    fn set_power_state_is_cheap_validated_and_down_legal() {
+        let mut c = delta_cluster();
+        let v100 = *c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
+        assert_eq!(c.power_state(v100), crate::power::PowerState::Nominal);
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::SetPowerState {
+                accel: v100,
+                state: crate::power::PowerState::Low,
+            }],
+        };
+        let out = c.apply_delta(&d).unwrap();
+        assert_eq!(out.moves, 0, "re-stating is not a placement move");
+        assert!(out.migrated_jobs.is_empty());
+        assert_eq!(c.power_state(v100), crate::power::PowerState::Low);
+        // back to nominal keeps the map sparse
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::SetPowerState {
+                accel: v100,
+                state: crate::power::PowerState::Nominal,
+            }],
+        };
+        c.apply_delta(&d).unwrap();
+        assert!(c.power_state_entries().is_empty());
+        // legal on a down instance (unlike Assign)
+        c.set_accel_down(v100);
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::SetPowerState {
+                accel: v100,
+                state: crate::power::PowerState::Turbo,
+            }],
+        };
+        c.apply_delta(&d).unwrap();
+        assert_eq!(c.power_state(v100), crate::power::PowerState::Turbo);
+        // unknown instance still rejected
+        let bogus = AccelId {
+            server: 999,
+            accel: AccelType::V100,
+        };
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::SetPowerState {
+                accel: bogus,
+                state: crate::power::PowerState::Low,
+            }],
+        };
+        assert!(c.apply_delta(&d).is_err());
+    }
+
+    #[test]
+    fn worst_case_watts_tracks_occupancy_states_and_outages() {
+        use crate::power::{state_power_watts, PowerState};
+        let mut c = delta_cluster(); // balanced(1): one instance per type
+        let all_idle: f64 =
+            c.spec.accels.iter().map(|a| crate::cluster::power_watts(a.accel, 0.0)).sum();
+        assert!((c.worst_case_watts() - all_idle).abs() < 1e-9);
+        let v100 = *c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
+        c.placement.assign(v100, Combo::Solo(JobId(0)));
+        let busy_nominal = all_idle - crate::cluster::power_watts(AccelType::V100, 0.0)
+            + crate::cluster::power_watts(AccelType::V100, 1.0);
+        assert!((c.worst_case_watts() - busy_nominal).abs() < 1e-9);
+        c.set_power_state(v100, PowerState::Low);
+        let busy_low = all_idle - crate::cluster::power_watts(AccelType::V100, 0.0)
+            + state_power_watts(AccelType::V100, PowerState::Low, 1.0);
+        assert!((c.worst_case_watts() - busy_low).abs() < 1e-9);
+        // a down instance contributes nothing, whatever its state
+        c.set_accel_down(v100);
+        let without = all_idle - crate::cluster::power_watts(AccelType::V100, 0.0);
+        assert!((c.worst_case_watts() - without).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_cap_rejects_breaching_deltas_transactionally() {
+        use crate::power::PowerState;
+        let mut c = delta_cluster();
+        let v100 = *c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
+        // balanced(1) all-idle nominal = 180 W; busy V100 nominal = 395 W,
+        // busy V100 low = 293 W (see docs/POWER.md worked example)
+        c.set_power_cap(Some(300.0));
+        let before = c.placement.clone();
+        let assign = PlacementOp::Assign {
+            accel: v100,
+            combo: Combo::Solo(JobId(0)),
+        };
+        let d = PlacementDelta {
+            ops: vec![assign],
+        };
+        let err = c.apply_delta(&d).unwrap_err().to_string();
+        assert!(err.contains("power cap"), "{err}");
+        assert_eq!(c.placement.diff_count(&before), 0, "partial apply leaked");
+        assert!(c.power_state_entries().is_empty(), "state change leaked");
+        // the same assignment fits once the target is down-clocked
+        let d = PlacementDelta {
+            ops: vec![
+                PlacementOp::SetPowerState {
+                    accel: v100,
+                    state: PowerState::Low,
+                },
+                assign,
+            ],
+        };
+        c.apply_delta(&d).unwrap();
+        assert!(c.worst_case_watts() <= 300.0 + 1e-9);
+    }
+
+    #[test]
+    fn trim_to_power_cap_downclocks_then_drops() {
+        use crate::power::PowerState;
+        let mut c = delta_cluster();
+        let v100 = *c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
+        let assign = PlacementOp::Assign {
+            accel: v100,
+            combo: Combo::Solo(JobId(0)),
+        };
+        let d = PlacementDelta {
+            ops: vec![assign],
+        };
+        // uncapped: the delta passes through untouched
+        assert_eq!(c.trim_to_power_cap(&d), d);
+        // 300 W: fits only at low → trim inserts the down-clock
+        c.set_power_cap(Some(300.0));
+        let trimmed = c.trim_to_power_cap(&d);
+        assert_eq!(
+            trimmed.ops,
+            vec![
+                PlacementOp::SetPowerState {
+                    accel: v100,
+                    state: PowerState::Low,
+                },
+                assign,
+            ]
+        );
+        c.apply_delta(&trimmed).unwrap();
+        assert!(c.worst_case_watts() <= 300.0 + 1e-9);
+        c.placement.clear_accel(v100);
+        c.set_power_state(v100, PowerState::Nominal);
+        // 200 W: not even low fits → the assignment is dropped
+        c.set_power_cap(Some(200.0));
+        let trimmed = c.trim_to_power_cap(&d);
+        assert!(trimmed.is_empty(), "{:?}", trimmed.ops);
+        // an invalid op is kept so apply_delta still surfaces the bug
+        let bad = PlacementDelta {
+            ops: vec![PlacementOp::Evict { accel: v100 }],
+        };
+        assert_eq!(c.trim_to_power_cap(&bad), bad);
+        assert!(c.apply_delta(&bad).is_err());
     }
 
     #[test]

@@ -229,6 +229,70 @@ impl Default for GoghPolicyConfig {
     }
 }
 
+/// Power management (docs/POWER.md): per-accelerator DVFS states, the
+/// cluster power cap and the diurnal carbon signal. All off by default —
+/// the pre-power behaviour, bit-for-bit.
+#[derive(Debug, Clone, Default)]
+pub struct PowerConfig {
+    /// Cluster-wide power cap in watts (`None` = uncapped). Enforced
+    /// transactionally against the worst-case draw of every placement
+    /// delta; the run report carries cap attainment.
+    pub cap_w: Option<f64>,
+    /// Let the optimizer and the monitor-tick governor pick per-accel
+    /// DVFS states. Off pins every instance to nominal frequency.
+    pub dvfs: bool,
+    /// Diurnal grid carbon signal (disabled while `base_gco2_per_kwh`
+    /// is 0).
+    pub carbon: CarbonConfig,
+}
+
+/// Diurnal carbon/price signal parameters (see
+/// [`crate::power::CarbonSignal`]) — also the schema of `--carbon-trace`
+/// JSON files.
+#[derive(Debug, Clone, Default)]
+pub struct CarbonConfig {
+    /// Mean grid intensity in gCO₂ per kWh; ≤ 0 disables the signal.
+    pub base_gco2_per_kwh: f64,
+    /// Diurnal swing as a fraction of the mean, clamped to 0..1.
+    pub amplitude: f64,
+    /// Phase offset in seconds (0 puts the peak 6 h into the day).
+    pub phase_s: f64,
+}
+
+impl CarbonConfig {
+    /// The runtime signal, or `None` while disabled.
+    pub fn signal(&self) -> Option<crate::power::CarbonSignal> {
+        (self.base_gco2_per_kwh > 0.0).then(|| crate::power::CarbonSignal {
+            base_gco2_per_kwh: self.base_gco2_per_kwh,
+            amplitude: self.amplitude,
+            phase_s: self.phase_s,
+        })
+    }
+
+    /// Parse a `--carbon-trace` JSON file: the same keys as the
+    /// `power.carbon` config section, with `base_gco2_per_kwh` required
+    /// (a trace file that disables the signal is almost certainly a
+    /// typo).
+    pub fn from_json(text: &str) -> Result<Self> {
+        use anyhow::Context as _;
+        let j = Json::parse(text).context("invalid carbon trace JSON")?;
+        let base = j
+            .get("base_gco2_per_kwh")
+            .ok_or_else(|| anyhow::anyhow!("carbon trace: missing base_gco2_per_kwh"))?;
+        let mut cfg = Self {
+            base_gco2_per_kwh: expect_f64(base, "base_gco2_per_kwh")?,
+            ..Self::default()
+        };
+        if let Some(v) = j.get("amplitude") {
+            cfg.amplitude = expect_f64(v, "amplitude")?;
+        }
+        if let Some(v) = j.get("phase_s") {
+            cfg.phase_s = expect_f64(v, "phase_s")?;
+        }
+        Ok(cfg)
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -237,6 +301,7 @@ pub struct ExperimentConfig {
     pub estimator: EstimatorConfig,
     pub optimizer: OptimizerConfig,
     pub gogh: GoghPolicyConfig,
+    pub power: PowerConfig,
     /// Monitoring interval (seconds of simulated time). Must be > 0;
     /// validated by `SimDriver::new`.
     pub monitor_interval_s: f64,
@@ -259,6 +324,7 @@ impl Default for ExperimentConfig {
             estimator: Default::default(),
             optimizer: Default::default(),
             gogh: Default::default(),
+            power: Default::default(),
             monitor_interval_s: 30.0,
             noise_sigma: 0.03,
             migration_cost_s: 0.0,
@@ -313,7 +379,11 @@ impl ExperimentConfig {
             "large" => Ok(Self::large_scale()),
             "mixed" => Ok(Self::mixed_workload()),
             "serving" => Ok(Self::serving_heavy()),
-            other => anyhow::bail!("unknown preset {other:?} (want default|large|mixed|serving)"),
+            "powercap" => Ok(Self::powercap()),
+            "carbon" => Ok(Self::carbon()),
+            other => anyhow::bail!(
+                "unknown preset {other:?} (want default|large|mixed|serving|powercap|carbon)"
+            ),
         }
     }
 
@@ -364,6 +434,35 @@ impl ExperimentConfig {
         let mut cfg = Self::mixed_workload();
         cfg.trace = TraceConfig::serving_heavy();
         cfg.seed = 78;
+        cfg
+    }
+
+    /// The `powercap` scenario: the default 12-instance cluster run
+    /// under a binding 1.2 kW cluster cap with the DVFS layer on — low
+    /// enough that some decisions get trimmed to `Low`, high enough that
+    /// every job still completes. The CI power smoke asserts the report
+    /// never shows peak draw above the cap.
+    pub fn powercap() -> Self {
+        let mut cfg = Self::default();
+        cfg.power.cap_w = Some(1200.0);
+        cfg.power.dvfs = true;
+        cfg.seed = 91;
+        cfg
+    }
+
+    /// The `carbon` scenario: the default cluster priced under a diurnal
+    /// grid signal (420 gCO₂/kWh mean, ±35% swing) with DVFS on, so the
+    /// objective's energy term follows the grid and the report carries
+    /// emissions.
+    pub fn carbon() -> Self {
+        let mut cfg = Self::default();
+        cfg.power.dvfs = true;
+        cfg.power.carbon = CarbonConfig {
+            base_gco2_per_kwh: 420.0,
+            amplitude: 0.35,
+            phase_s: 0.0,
+        };
+        cfg.seed = 92;
         cfg
     }
 
@@ -501,6 +600,29 @@ impl ExperimentConfig {
                 cfg.gogh.p1_candidates = expect_usize(v, "gogh.p1_candidates")?;
             }
         }
+        if let Some(p) = j.get("power") {
+            if let Some(v) = p.get("cap_w") {
+                cfg.power.cap_w = match v {
+                    Json::Null => None,
+                    other => Some(expect_f64(other, "power.cap_w")?),
+                };
+            }
+            if let Some(v) = p.get("dvfs") {
+                cfg.power.dvfs = expect_bool(v, "power.dvfs")?;
+            }
+            if let Some(c) = p.get("carbon") {
+                if let Some(v) = c.get("base_gco2_per_kwh") {
+                    cfg.power.carbon.base_gco2_per_kwh =
+                        expect_f64(v, "power.carbon.base_gco2_per_kwh")?;
+                }
+                if let Some(v) = c.get("amplitude") {
+                    cfg.power.carbon.amplitude = expect_f64(v, "power.carbon.amplitude")?;
+                }
+                if let Some(v) = c.get("phase_s") {
+                    cfg.power.carbon.phase_s = expect_f64(v, "power.carbon.phase_s")?;
+                }
+            }
+        }
         if let Some(v) = j.get("monitor_interval_s") {
             cfg.monitor_interval_s = expect_f64(v, "monitor_interval_s")?;
         }
@@ -589,6 +711,24 @@ impl ExperimentConfig {
                     ("shards", self.gogh.shards.into()),
                     ("estimate_cache", self.gogh.estimate_cache.into()),
                     ("p1_candidates", self.gogh.p1_candidates.into()),
+                ]),
+            ),
+            (
+                "power",
+                Json::obj(vec![
+                    ("cap_w", self.power.cap_w.map(Json::from).unwrap_or(Json::Null)),
+                    ("dvfs", self.power.dvfs.into()),
+                    (
+                        "carbon",
+                        Json::obj(vec![
+                            (
+                                "base_gco2_per_kwh",
+                                self.power.carbon.base_gco2_per_kwh.into(),
+                            ),
+                            ("amplitude", self.power.carbon.amplitude.into()),
+                            ("phase_s", self.power.carbon.phase_s.into()),
+                        ]),
+                    ),
                 ]),
             ),
             ("monitor_interval_s", self.monitor_interval_s.into()),
@@ -768,6 +908,60 @@ mod tests {
         assert_eq!(d.gogh.shards, 1);
         assert!(d.gogh.estimate_cache);
         assert_eq!(d.gogh.p1_candidates, 0);
+    }
+
+    #[test]
+    fn power_knobs_roundtrip_and_presets_resolve() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.power.cap_w, None);
+        assert!(!cfg.power.dvfs);
+        assert!(cfg.power.carbon.signal().is_none());
+        cfg.power.cap_w = Some(900.0);
+        cfg.power.dvfs = true;
+        cfg.power.carbon.base_gco2_per_kwh = 300.0;
+        cfg.power.carbon.amplitude = 0.2;
+        cfg.power.carbon.phase_s = 3600.0;
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.power.cap_w, Some(900.0));
+        assert!(back.power.dvfs);
+        let sig = back.power.carbon.signal().unwrap();
+        assert_eq!(sig.base_gco2_per_kwh, 300.0);
+        assert_eq!(sig.amplitude, 0.2);
+        assert_eq!(sig.phase_s, 3600.0);
+        // omission keeps power management entirely off
+        let d = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(d.power.cap_w, None);
+        assert!(!d.power.dvfs);
+        assert!(d.power.carbon.signal().is_none());
+        // explicit null lifts a cap set earlier in the overlay chain
+        let n = ExperimentConfig::from_json(r#"{"power": {"cap_w": null}}"#).unwrap();
+        assert_eq!(n.power.cap_w, None);
+        // type mismatches name the dotted path
+        let err = ExperimentConfig::from_json(r#"{"power": {"cap_w": "big"}}"#).unwrap_err();
+        assert!(err.to_string().contains("power.cap_w"), "{err}");
+        // presets
+        let p = ExperimentConfig::preset("powercap").unwrap();
+        assert_eq!(p.power.cap_w, Some(1200.0));
+        assert!(p.power.dvfs);
+        let c = ExperimentConfig::preset("carbon").unwrap();
+        assert!(c.power.dvfs);
+        assert!(c.power.carbon.signal().is_some());
+        let back = ExperimentConfig::from_json(&p.to_json().to_string()).unwrap();
+        assert_eq!(back.power.cap_w, Some(1200.0));
+        assert!(back.power.dvfs);
+    }
+
+    #[test]
+    fn carbon_trace_file_parses_and_validates() {
+        let c = CarbonConfig::from_json(r#"{"base_gco2_per_kwh": 420.0, "amplitude": 0.35}"#)
+            .unwrap();
+        assert_eq!(c.base_gco2_per_kwh, 420.0);
+        assert_eq!(c.amplitude, 0.35);
+        assert_eq!(c.phase_s, 0.0);
+        assert!(c.signal().is_some());
+        // base is required in the file form; junk is a parse error
+        assert!(CarbonConfig::from_json(r#"{"amplitude": 0.35}"#).is_err());
+        assert!(CarbonConfig::from_json("not json").is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::coordinator::scheduler::{ClusterEvent, Decision, Scheduler, SimDriver
 use crate::ilp::branch_bound::{BnbConfig, BnbStatus};
 use crate::ilp::problem1::{pool_accel_counts, solve_problem1, Problem1Input};
 use crate::metrics::{ErrorTracker, RunReport};
+use crate::power::{state_cost, CarbonSignal, PowerKnobs, PowerState};
 use crate::runtime::dataset::Sample;
 use crate::runtime::{Backend, Engine, Estimator, NativeBackend};
 use crate::workload::encoding::{p1_row, psi_distance};
@@ -86,6 +87,15 @@ pub struct GoghOptions {
     /// O(active² × types) over a trace; the cap keeps the most similar
     /// candidates (the ones P1's transfer is most reliable for).
     pub p1_candidates: usize,
+    /// DVFS decision layer: power states enter the Problem-1 objective
+    /// and the monitor-tick governor re-states accelerators between
+    /// re-solves. Off (the default) reproduces the fixed-nominal
+    /// objective bit-for-bit.
+    pub power_dvfs: bool,
+    /// Diurnal carbon/price signal reweighting the objective's energy
+    /// term and pricing emissions in the energy meters. `None` keeps
+    /// unweighted watts (the pre-power behaviour).
+    pub carbon: Option<CarbonSignal>,
     pub seed: u64,
 }
 
@@ -102,6 +112,8 @@ impl Default for GoghOptions {
             shards: 1,
             estimate_cache: true,
             p1_candidates: 0,
+            power_dvfs: false,
+            carbon: None,
             seed: 17,
         }
     }
@@ -121,6 +133,8 @@ impl GoghOptions {
             shards: cfg.gogh.shards,
             estimate_cache: cfg.gogh.estimate_cache,
             p1_candidates: cfg.gogh.p1_candidates,
+            power_dvfs: cfg.power.dvfs,
+            carbon: cfg.power.carbon.signal(),
             seed: cfg.seed,
         }
     }
@@ -716,6 +730,7 @@ fn local_arrival_solve(
     shard: Option<(&ShardSpec, &HashSet<AccelId>)>,
     neighborhood: usize,
     ocfg: &crate::config::OptimizerConfig,
+    power: PowerKnobs,
 ) -> LocalSolve {
     if neighborhood == 0 {
         return LocalSolve::skipped();
@@ -786,6 +801,7 @@ fn local_arrival_solve(
         slack_penalty: Some(ocfg.slack_penalty),
         throughput_bonus: ocfg.throughput_bonus,
         now_s: cluster.now(),
+        power,
     };
     let bnb = BnbConfig {
         max_nodes: ocfg.max_nodes.min(LOCAL_NODE_BUDGET),
@@ -821,7 +837,7 @@ fn local_arrival_solve(
             .map(|(aid, c)| {
                 let total_t: f64 = c.jobs().iter().map(|&j| thr(aid.accel, j, &c)).sum();
                 let u = (total_t / solo_cap(aid.accel).max(1e-9)).clamp(0.0, 1.0);
-                crate::cluster::power_watts(aid.accel, u) - ocfg.throughput_bonus * total_t
+                crate::power::column_cost(aid.accel, u, total_t, ocfg.throughput_bonus, power)
             })
             .sum();
         sol.objective - baseline
@@ -977,10 +993,108 @@ impl GoghScheduler {
         delta
     }
 
+    /// Power knobs at simulated time `now`: DVFS enable from the
+    /// options, carbon weight sampled off the diurnal signal (1.0
+    /// without one).
+    fn power_knobs(&self, now: f64) -> PowerKnobs {
+        PowerKnobs {
+            dvfs: self.options.power_dvfs,
+            carbon_weight: self.options.carbon.map_or(1.0, |c| c.weight(now)),
+        }
+    }
+
+    /// DVFS governor, run on every monitor tick after the autoscaler:
+    /// appends cheap [`PlacementOp::SetPowerState`] ops (no migration)
+    /// for in-service accelerators whose cost-optimal state differs
+    /// from the current one.
+    ///
+    /// * **idle** instances drop to [`PowerState::Low`] — pure
+    ///   idle-power savings with no throughput at stake;
+    /// * **occupied** instances take the state minimizing the same
+    ///   carbon-weighted column cost the ILP prices, except that `Low`
+    ///   is skipped when the 0.70× frequency would push any hosted
+    ///   job's estimated throughput under its floor, and combos hosting
+    ///   inference jobs never run below nominal frequency (serving
+    ///   latency is priced off nominal service rates).
+    ///
+    /// The ops ride the autoscale delta through the same transactional
+    /// `apply_delta` (and the engine's power-cap trim) as every other
+    /// decision. Accelerators that delta already touches are left alone
+    /// this tick — their occupancy is about to change.
+    fn power_governor(&self, cluster: &Cluster, delta: &mut PlacementDelta) {
+        if !self.options.power_dvfs {
+            return;
+        }
+        let knobs = self.power_knobs(cluster.now());
+        let bonus = self.options.optimizer.throughput_bonus;
+        let touched: HashSet<AccelId> = delta
+            .ops
+            .iter()
+            .flat_map(|op| match *op {
+                PlacementOp::Assign { accel, .. }
+                | PlacementOp::Evict { accel }
+                | PlacementOp::SetPowerState { accel, .. } => vec![accel],
+                PlacementOp::Migrate { from, to, .. } => vec![from, to],
+            })
+            .collect();
+        let catalog = &self.catalog;
+        let cache = self.options.estimate_cache.then_some(&self.cache);
+        for aid in cluster.available_accels() {
+            if touched.contains(&aid) {
+                continue;
+            }
+            let want = match cluster.placement.combo_on(aid) {
+                None => PowerState::Low,
+                Some(combo) => {
+                    let ests: Vec<(JobId, f64)> = combo
+                        .jobs()
+                        .iter()
+                        .map(|&j| (j, value_via(catalog, cache, aid.accel, j, combo)))
+                        .collect();
+                    let total_t: f64 = ests.iter().map(|&(_, v)| v).sum();
+                    let solo = aid.accel.base_speed() / AccelType::V100.base_speed();
+                    let u = (total_t / solo.max(1e-9)).clamp(0.0, 1.0);
+                    let hosts_serving = ests
+                        .iter()
+                        .any(|&(j, _)| cluster.job(j).map_or(false, |s| s.is_inference()));
+                    let safe = |s: PowerState| {
+                        if hosts_serving && s.freq_scalar() < 1.0 {
+                            return false;
+                        }
+                        ests.iter().all(|&(j, v)| {
+                            cluster.job(j).map_or(true, |spec| {
+                                s.freq_scalar() * v + 1e-9 >= spec.min_throughput
+                            })
+                        })
+                    };
+                    let mut best = PowerState::Nominal;
+                    let mut best_cost =
+                        state_cost(aid.accel, best, u, total_t, bonus, knobs.carbon_weight);
+                    for s in [PowerState::Low, PowerState::Turbo] {
+                        if !safe(s) {
+                            continue;
+                        }
+                        let c = state_cost(aid.accel, s, u, total_t, bonus, knobs.carbon_weight);
+                        if c < best_cost - 1e-12 {
+                            best = s;
+                            best_cost = c;
+                        }
+                    }
+                    best
+                }
+            };
+            if want != cluster.power_state(aid) {
+                delta.push(PlacementOp::SetPowerState { accel: aid, state: want });
+            }
+        }
+    }
+
     /// Full Problem-1 re-solve over every active job (the escape hatch,
     /// the pre-redesign behaviour, and — when sharded — the periodic
     /// cross-shard rebalance), returned as a delta.
     fn full_allocate(&mut self, cluster: &Cluster) -> Result<Decision> {
+        // carbon weight is time-varying: refresh before every re-solve
+        self.opt.power = self.power_knobs(cluster.now());
         let catalog = &self.catalog;
         let cache = self.options.estimate_cache.then_some(&self.cache);
         let thr = move |a: AccelType, j: JobId, c: &Combo| value_via(catalog, cache, a, j, c);
@@ -1020,6 +1134,7 @@ impl GoghScheduler {
             None,
             self.options.neighborhood,
             &self.options.optimizer,
+            self.power_knobs(cluster.now()),
         );
         self.record_local_solve(0, &ls);
         Ok(ls.delta)
@@ -1082,6 +1197,7 @@ impl GoghScheduler {
             let cache = self.options.estimate_cache.then_some(&self.cache);
             let k = self.options.neighborhood;
             let ocfg = &self.options.optimizer;
+            let power = self.power_knobs(cluster.now());
             // Scoped threads let workers borrow the catalog/cache
             // directly (a persistent pool would need 'static captures
             // or unsafe lifetime erasure); the per-arrival spawn cost
@@ -1104,6 +1220,7 @@ impl GoghScheduler {
                                 Some((shard, set)),
                                 k,
                                 ocfg,
+                                power,
                             )
                         })
                     })
@@ -1353,8 +1470,12 @@ impl Scheduler for GoghScheduler {
             ClusterEvent::MonitorTick { measurements } => {
                 self.on_monitor_tick(measurements)?;
                 // fresh measurements (and refinements) just landed:
-                // react to measured serving latency with replica scaling
-                Ok(Decision::apply(self.autoscale(cluster)))
+                // react to measured serving latency with replica
+                // scaling, then let the DVFS governor re-state whatever
+                // the autoscaler left alone
+                let mut delta = self.autoscale(cluster);
+                self.power_governor(cluster, &mut delta);
+                Ok(Decision::apply(delta))
             }
         }
     }
@@ -1471,7 +1592,9 @@ impl Gogh {
             cfg.monitor_interval_s,
             cfg.seed,
         )?
-        .with_migration_cost(cfg.migration_cost_s);
+        .with_migration_cost(cfg.migration_cost_s)
+        .with_power_cap(cfg.power.cap_w)
+        .with_carbon(cfg.power.carbon.signal());
         Ok((driver, oracle))
     }
 

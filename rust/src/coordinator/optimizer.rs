@@ -9,11 +9,16 @@ use crate::cluster::{AccelId, Cluster, Placement, PlacementDelta};
 use crate::config::OptimizerConfig;
 use crate::ilp::branch_bound::BnbConfig;
 use crate::ilp::problem1::{solve_problem1, AllocationSolution, Problem1Input};
+use crate::power::PowerKnobs;
 use crate::workload::{AccelType, Combo, JobId};
 use crate::Result;
 
 pub struct Optimizer {
     pub cfg: OptimizerConfig,
+    /// Power knobs threaded into every solve. The GOGH coordinator
+    /// refreshes the carbon weight before each re-solve; baselines keep
+    /// the default (fixed nominal state, unweighted watts).
+    pub power: PowerKnobs,
     /// cumulative solve statistics for §Perf reporting
     pub solves: usize,
     pub solve_seconds: f64,
@@ -28,6 +33,7 @@ impl Optimizer {
     pub fn new(cfg: OptimizerConfig) -> Self {
         Self {
             cfg,
+            power: PowerKnobs::default(),
             solves: 0,
             solve_seconds: 0.0,
             total_nodes: 0,
@@ -80,6 +86,7 @@ impl Optimizer {
             // inference latency floors (2e′) are sized at the cluster's
             // current simulated time
             now_s: cluster.now(),
+            power: self.power,
         };
         let bnb = BnbConfig {
             max_nodes: self.cfg.max_nodes,

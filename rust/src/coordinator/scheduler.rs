@@ -144,6 +144,20 @@ impl SimDriver {
         self
     }
 
+    /// Enforce a cluster-wide power cap (watts); `None` lifts it. See
+    /// [`GoghCore::with_power_cap`].
+    pub fn with_power_cap(mut self, cap_w: Option<f64>) -> Self {
+        self.core = self.core.with_power_cap(cap_w);
+        self
+    }
+
+    /// Price emissions off a diurnal carbon signal. See
+    /// [`GoghCore::with_carbon`].
+    pub fn with_carbon(mut self, signal: Option<crate::power::CarbonSignal>) -> Self {
+        self.core = self.core.with_carbon(signal);
+        self
+    }
+
     /// The simulated cluster (read access for tests and tooling).
     pub fn cluster(&self) -> &Cluster {
         self.core.cluster()
@@ -170,6 +184,7 @@ impl SimDriver {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::power::{state_power_watts, PowerState};
     use crate::workload::{AccelType, InferenceSpec, JobSpec, TraceConfig, TraceEvent};
 
     /// Trivial incremental policy: place every waiting job solo on the
@@ -459,6 +474,105 @@ mod tests {
         assert_eq!(with.sim_seconds, without.sim_seconds);
         assert!((with.energy_joules - without.energy_joules).abs() < 1e-6);
         let expected_saving = crate::cluster::power_watts(AccelType::V100, 0.0) * 990.0;
+        let saving = without.total_energy_joules - with.total_energy_joules;
+        assert!(
+            (saving - expected_saving).abs() < 1e-3 * expected_saving,
+            "outage saved {saving} J, expected {expected_saving} J"
+        );
+    }
+
+    /// Puts the arriving job on the last free instance (the k80, like
+    /// `FirstFit`), drops the idle v100 to the low state at arrival,
+    /// and re-states it to turbo at the first monitor tick past t=10.
+    struct StatefulFit {
+        idle: Option<AccelId>,
+        restated: bool,
+    }
+    impl Scheduler for StatefulFit {
+        fn name(&self) -> &str {
+            "stateful-fit"
+        }
+        fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+            let mut delta = PlacementDelta::new();
+            match event {
+                ClusterEvent::JobArrived { job } => {
+                    let accels = cluster.available_accels();
+                    self.idle = Some(accels[0]);
+                    delta.push(PlacementOp::SetPowerState {
+                        accel: accels[0],
+                        state: PowerState::Low,
+                    });
+                    delta.push(PlacementOp::Assign {
+                        accel: *accels.last().unwrap(),
+                        combo: Combo::Solo(*job),
+                    });
+                }
+                ClusterEvent::MonitorTick { .. } if !self.restated && cluster.now() > 10.0 => {
+                    // legal even while the accelerator is down: the
+                    // state is remembered for when it comes back
+                    self.restated = true;
+                    delta.push(PlacementOp::SetPowerState {
+                        accel: self.idle.unwrap(),
+                        state: PowerState::Turbo,
+                    });
+                }
+                _ => {}
+            }
+            Ok(Decision::apply(delta))
+        }
+    }
+
+    #[test]
+    fn down_accelerator_bills_zero_regardless_of_power_state() {
+        // like the outage test above but with DVFS in play: the idle
+        // v100 sits in the low state when it goes down at t=10 and is
+        // re-stated to turbo mid-outage (t=15). A down accelerator
+        // bills zero watts no matter what state it holds, and the
+        // state survives for when it comes back up.
+        let run = |churn: bool| {
+            let oracle = ThroughputOracle::new(7);
+            let mut events = vec![TraceEvent::Arrival {
+                at: 1.0,
+                job: job(0, 2000.0),
+            }];
+            if churn {
+                events.push(TraceEvent::AccelChurn {
+                    at: 10.0,
+                    accel_index: 0,
+                    up: false,
+                });
+                events.push(TraceEvent::AccelChurn {
+                    at: 1000.0,
+                    accel_index: 0,
+                    up: true,
+                });
+            }
+            let trace = Trace {
+                events,
+                config: TraceConfig {
+                    n_jobs: 1,
+                    ..Default::default()
+                },
+            };
+            let spec = ClusterSpec::mix(&[(AccelType::V100, 1), (AccelType::K80, 1)]);
+            let mut d = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1).unwrap();
+            let mut policy = StatefulFit {
+                idle: None,
+                restated: false,
+            };
+            d.run(&mut policy).unwrap()
+        };
+        let with = run(true);
+        let without = run(false);
+        assert_eq!(with.jobs_completed, 1);
+        assert_eq!(with.sim_seconds, without.sim_seconds);
+        assert!((with.energy_joules - without.energy_joules).abs() < 1e-6);
+        // the un-churned run bills the v100 at low idle over [10, 15]
+        // and turbo idle over [15, 1000]; the churned run bills zero
+        // for the whole outage. Everything outside [10, 1000] cancels.
+        let low_idle = state_power_watts(AccelType::V100, PowerState::Low, 0.0);
+        let turbo_idle = state_power_watts(AccelType::V100, PowerState::Turbo, 0.0);
+        let expected_saving = low_idle * 5.0 + turbo_idle * 985.0;
         let saving = without.total_energy_joules - with.total_energy_joules;
         assert!(
             (saving - expected_saving).abs() < 1e-3 * expected_saving,

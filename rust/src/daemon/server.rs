@@ -191,6 +191,23 @@ impl DaemonState {
             ("records", self.scheduler.catalog.len().into()),
             ("measured", self.scheduler.catalog.n_measured().into()),
         ]);
+        // additive power block (protocol stays v1 — clients ignore
+        // unknown fields): peak/cap draw, cumulative emissions, and the
+        // sparse per-accel DVFS states (absent accel = nominal)
+        let states: Vec<Json> = cluster
+            .power_state_entries()
+            .into_iter()
+            .map(|(a, s)| {
+                Json::obj(vec![("accel", a.to_string().into()), ("state", s.key().into())])
+            })
+            .collect();
+        let power = Json::obj(vec![
+            ("peak_w", report.power_peak_w.into()),
+            ("cap_w", report.power_cap_w.map(Json::from).unwrap_or(Json::Null)),
+            ("cap_attainment", report.power_cap_attainment.into()),
+            ("grams_co2", report.grams_co2.into()),
+            ("states", Json::Array(states)),
+        ]);
         ok_envelope(vec![
             ("backend", self.backend.into()),
             ("draining", self.draining.into()),
@@ -199,6 +216,7 @@ impl DaemonState {
             ("placements", Json::Array(placements)),
             ("catalog", catalog),
             ("energy_joules", report.energy_joules.into()),
+            ("power", power),
         ])
     }
 }
@@ -235,7 +253,9 @@ pub fn serve(opts: DaemonOptions) -> Result<()> {
         opts.cfg.monitor_interval_s,
         opts.cfg.seed,
     )?
-    .with_migration_cost(opts.cfg.migration_cost_s);
+    .with_migration_cost(opts.cfg.migration_cost_s)
+    .with_power_cap(opts.cfg.power.cap_w)
+    .with_carbon(opts.cfg.power.carbon.signal());
 
     let mut next_job_id = 0;
     let mut draining = false;

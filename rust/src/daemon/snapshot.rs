@@ -6,6 +6,7 @@ use crate::catalog::Catalog;
 use crate::cluster::AccelId;
 use crate::coordinator::GoghScheduler;
 use crate::engine::{CoreEvent, GoghCore};
+use crate::power::PowerState;
 use crate::util::Json;
 use crate::workload::{
     AccelType, Combo, InferenceSpec, JobId, JobSpec, ModelFamily, ACCEL_TYPES, FAMILIES,
@@ -13,8 +14,10 @@ use crate::workload::{
 use crate::Result;
 use anyhow::Context as _;
 
-/// Version stamp written into (and required from) every state file.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// Version stamp written into every state file. Loads accept
+/// `1..=SNAPSHOT_VERSION`: version 1 predates power management, so its
+/// files simply restore with every accelerator at the nominal state.
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 /// In-memory form of one state file (format: module docs above).
 #[derive(Debug, Clone, PartialEq)]
@@ -34,6 +37,9 @@ pub struct Snapshot {
     pub placements: Vec<(AccelId, Combo)>,
     /// Out-of-service accelerators, sorted.
     pub down: Vec<AccelId>,
+    /// Non-nominal DVFS states, sorted (an absent accelerator is
+    /// nominal). New in version 2; empty for version-1 files.
+    pub power_states: Vec<(AccelId, PowerState)>,
     /// Undelivered queue events in dispatch order (no monitor tick).
     pub queue: Vec<(f64, CoreEvent)>,
     /// Learned state, embedded in the catalog store's own format.
@@ -69,19 +75,23 @@ impl Snapshot {
             jobs,
             placements,
             down: cluster.down_accels(),
+            power_states: cluster.power_state_entries(),
             queue: core.pending_events(),
             catalog: scheduler.catalog.to_json(),
         }
     }
 
-    /// Rebuild daemon state from this snapshot: accelerator health
-    /// first, then jobs (with their original arrival times), then the
-    /// placement map, then the clock, counters, pending events, and
-    /// finally the learned catalog. The caller starts the monitor tick
-    /// afterwards.
+    /// Rebuild daemon state from this snapshot: accelerator health and
+    /// DVFS states first, then jobs (with their original arrival
+    /// times), then the placement map, then the clock, counters,
+    /// pending events, and finally the learned catalog. The caller
+    /// starts the monitor tick afterwards.
     pub fn restore_into(&self, core: &mut GoghCore, scheduler: &mut GoghScheduler) -> Result<()> {
         for a in &self.down {
             core.cluster_mut().set_accel_down(*a);
+        }
+        for (a, s) in &self.power_states {
+            core.cluster_mut().set_power_state(*a, *s);
         }
         for (arrived_at, spec) in &self.jobs {
             core.restore_job(spec.clone(), *arrived_at);
@@ -115,6 +125,8 @@ impl Snapshot {
         let placements: Vec<Json> =
             self.placements.iter().map(|(a, c)| placement_entry_json(*a, c)).collect();
         let down: Vec<Json> = self.down.iter().map(|a| accel_to_json(*a)).collect();
+        let power: Vec<Json> =
+            self.power_states.iter().map(|(a, s)| power_entry_json(*a, *s)).collect();
         let queue: Vec<Json> = self.queue.iter().map(|(t, e)| event_to_json(*t, e)).collect();
         Json::obj(vec![
             ("version", SNAPSHOT_VERSION.into()),
@@ -125,6 +137,7 @@ impl Snapshot {
             ("jobs", Json::Array(jobs)),
             ("placements", Json::Array(placements)),
             ("down", Json::Array(down)),
+            ("power_states", Json::Array(power)),
             ("queue", Json::Array(queue)),
             ("catalog", self.catalog.clone()),
         ])
@@ -133,8 +146,8 @@ impl Snapshot {
     pub fn from_json(v: &Json) -> Result<Snapshot> {
         let version = v.req_f64("version").context("snapshot")? as u32;
         anyhow::ensure!(
-            version == SNAPSHOT_VERSION,
-            "snapshot version {version} unsupported (this build reads version {SNAPSHOT_VERSION})"
+            (1..=SNAPSHOT_VERSION).contains(&version),
+            "snapshot version {version} unsupported (this build reads 1..={SNAPSHOT_VERSION})"
         );
         let counters = v.get("counters").context("snapshot: missing counters")?;
         let mut jobs = Vec::new();
@@ -165,6 +178,17 @@ impl Snapshot {
         for (i, e) in req_array(v, "down")?.iter().enumerate() {
             down.push(accel_from_json(e).with_context(|| format!("down[{i}]"))?);
         }
+        // required from version 2 on; version-1 files predate it
+        let mut power_states = Vec::new();
+        if version >= 2 {
+            for (i, e) in req_array(v, "power_states")?.iter().enumerate() {
+                let ctx = || format!("power_states[{i}]");
+                let accel = accel_from_json(e.get("accel").with_context(ctx)?).with_context(ctx)?;
+                let state = PowerState::from_key(e.req_str("state").with_context(ctx)?)
+                    .with_context(ctx)?;
+                power_states.push((accel, state));
+            }
+        }
         let mut queue = Vec::new();
         for (i, e) in req_array(v, "queue")?.iter().enumerate() {
             queue.push(event_from_json(e).with_context(|| format!("queue[{i}]"))?);
@@ -179,6 +203,7 @@ impl Snapshot {
             jobs,
             placements,
             down,
+            power_states,
             queue,
             catalog: v.get("catalog").context("snapshot: missing catalog")?.clone(),
         })
@@ -215,6 +240,10 @@ fn job_entry_json(arrived_at: f64, spec: &JobSpec) -> Json {
 fn placement_entry_json(a: AccelId, c: &Combo) -> Json {
     let ids: Vec<Json> = c.jobs().iter().map(|j| Json::from(j.0)).collect();
     Json::obj(vec![("accel", accel_to_json(a)), ("jobs", Json::Array(ids))])
+}
+
+fn power_entry_json(a: AccelId, s: PowerState) -> Json {
+    Json::obj(vec![("accel", accel_to_json(a)), ("state", s.key().into())])
 }
 
 fn accel_to_json(a: AccelId) -> Json {
@@ -449,6 +478,94 @@ mod tests {
     fn version_mismatch_is_rejected() {
         let err = Snapshot::from_json(&Json::parse(r#"{"version": 9}"#).unwrap()).unwrap_err();
         assert!(err.to_string().contains("version 9"), "{err}");
+    }
+
+    /// Power states (new in snapshot version 2) survive the full
+    /// capture → serialize → parse → restore cycle.
+    #[test]
+    fn power_states_round_trip_through_snapshot() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.gogh.backend = crate::config::BackendKind::Native;
+        let oracle = ThroughputOracle::new(7);
+        let (mut sched, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        core.submit(0.0, training_job(0, 500.0));
+        core.start_monitor();
+        core.advance_to(10.0, &mut sched).unwrap();
+        let accels = core.cluster().available_accels();
+        core.cluster_mut().set_power_state(accels[0], PowerState::Low);
+        core.cluster_mut().set_power_state(accels[1], PowerState::Turbo);
+
+        let snap = Snapshot::capture(&core, &sched, 1, false);
+        assert_eq!(snap.power_states.len(), 2, "nominal accels stay out of the sparse map");
+        let text = snap.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap);
+
+        let (mut sched2, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core2 = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        back.restore_into(&mut core2, &mut sched2).unwrap();
+        assert_eq!(core2.cluster().power_state(accels[0]), PowerState::Low);
+        assert_eq!(core2.cluster().power_state(accels[1]), PowerState::Turbo);
+        assert_eq!(core2.cluster().power_state_entries(), snap.power_states);
+    }
+
+    /// Version skew: a version-1 state file (written before power
+    /// management existed) restores cleanly with every accelerator at
+    /// the nominal state.
+    #[test]
+    fn v1_snapshot_without_power_states_restores_nominal() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.gogh.backend = crate::config::BackendKind::Native;
+        let oracle = ThroughputOracle::new(7);
+        let (mut sched, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        core.submit(0.0, training_job(0, 500.0));
+        core.start_monitor();
+        core.advance_to(10.0, &mut sched).unwrap();
+        let text = Snapshot::capture(&core, &sched, 1, false).to_json().to_string();
+        // rewrite to the exact byte shape a version-1 build produced:
+        // old version stamp, no power_states section at all
+        let v1 = text.replace("\"version\":2", "\"version\":1").replace(",\"power_states\":[]", "");
+        assert!(v1.contains("\"version\":1") && !v1.contains("power_states"), "{v1}");
+        let snap = Snapshot::from_json(&Json::parse(&v1).unwrap()).unwrap();
+        assert!(snap.power_states.is_empty());
+
+        let (mut sched2, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core2 = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        snap.restore_into(&mut core2, &mut sched2).unwrap();
+        assert!(core2.cluster().power_state_entries().is_empty());
+        for a in core2.cluster().available_accels() {
+            assert_eq!(core2.cluster().power_state(a), PowerState::Nominal);
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::cluster::energy::{placement_loads, EnergyMeter};
 use crate::cluster::{AccelId, Cluster, ClusterSpec, Monitor};
 use crate::coordinator::{ClusterEvent, Scheduler};
 use crate::metrics::{LatencyHistogram, RunReport};
+use crate::power::{state_power_watts, CarbonSignal};
 use crate::workload::{serving, AccelType, JobId, JobSpec, ThroughputOracle, Trace, TraceEvent};
 use crate::Result;
 
@@ -116,6 +117,11 @@ struct Accounting {
     inf_total_s: f64,
     /// per-job (attained, total) serving seconds, for the SLO-met count
     inf_job_time: HashMap<JobId, (f64, f64)>,
+    /// peak instantaneous measured cluster power (W)
+    peak_power_w: f64,
+    /// integration intervals measured, and of those, within the cap
+    cap_intervals: usize,
+    cap_ok_intervals: usize,
 }
 
 /// The shared policy/event core: cluster + monitor + meters + event
@@ -140,6 +146,8 @@ pub struct GoghCore {
     monitor_interval_s: f64,
     /// restart penalty charged to every migrated job (seconds of stall).
     migration_cost_s: f64,
+    /// carbon/price signal for emissions accounting (docs/POWER.md).
+    carbon: Option<CarbonSignal>,
     /// Distinct trace cycles can collide on one physical instance
     /// (accel_index is taken modulo the cluster size), so outages are
     /// reference-counted: an instance is down while any cycle holds it.
@@ -175,6 +183,7 @@ impl GoghCore {
             report: RunReport::default(),
             monitor_interval_s,
             migration_cost_s: 0.0,
+            carbon: None,
             down_votes: HashMap::new(),
             arrivals_pending: 0,
             last_arrival_t: 0.0,
@@ -186,6 +195,22 @@ impl GoghCore {
     /// (integrated into energy, SLO and JCT accounting).
     pub fn with_migration_cost(mut self, cost_s: f64) -> Self {
         self.migration_cost_s = cost_s.max(0.0);
+        self
+    }
+
+    /// Cap the cluster's worst-case draw at `cap_w` watts: policy deltas
+    /// are trimmed to fit (see [`Cluster::trim_to_power_cap`]) and the
+    /// cluster rejects anything that still breaches, transactionally.
+    pub fn with_power_cap(mut self, cap_w: Option<f64>) -> Self {
+        self.cluster.set_power_cap(cap_w);
+        self
+    }
+
+    /// Attach a diurnal carbon/price signal: the meters accrue gCO₂ and
+    /// the `power:` report carries it (schedulers read the same signal
+    /// from their own options to reweight the objective).
+    pub fn with_carbon(mut self, signal: Option<CarbonSignal>) -> Self {
+        self.carbon = signal;
         self
     }
 
@@ -464,6 +489,15 @@ impl GoghCore {
         let (scale_ups, scale_downs) = policy.autoscale_counts();
         report.scale_ups = scale_ups;
         report.scale_downs = scale_downs;
+        report.power_peak_w = self.state.peak_power_w;
+        report.power_cap_w = self.cluster.power_cap_w();
+        report.power_cap_attainment = if self.state.cap_intervals > 0 {
+            self.state.cap_ok_intervals as f64 / self.state.cap_intervals as f64
+        } else {
+            1.0
+        };
+        report.joules_by_state = self.meter_total.joules_by_state();
+        report.grams_co2 = self.meter_total.grams_co2();
         report
     }
 
@@ -474,7 +508,11 @@ impl GoghCore {
         let decision = policy.on_event(&event, &self.cluster)?;
         self.state.decision_s += t0.elapsed().as_secs_f64();
         self.report.events += 1;
-        let outcome = self.cluster.apply_delta(&decision.delta)?;
+        // under a power cap, down-clock or drop breaching ops instead of
+        // failing the run; apply_delta still rejects anything that slips
+        // through, transactionally
+        let delta = self.cluster.trim_to_power_cap(&decision.delta);
+        let outcome = self.cluster.apply_delta(&delta)?;
         self.report.migrations += outcome.moves;
         // jobs restarting from scratch: migrated by this delta, plus any
         // failure-evicted job re-placed now (unplaced when the delta
@@ -527,10 +565,12 @@ impl GoghCore {
         let mut per_job: HashMap<JobId, f64> = HashMap::new();
         let mut replica_mus: HashMap<JobId, Vec<f64>> = HashMap::new();
         for (aid, combo) in self.cluster.placement.iter() {
+            // ground truth scales with the host's DVFS frequency
+            let freq = self.cluster.power_state(*aid).freq_scalar();
             for j in combo.jobs() {
                 let spec = self.cluster.job(j).expect("placed job registered");
                 let lookup = |id: JobId| self.cluster.job(id).cloned();
-                let t = oracle.throughput(spec, combo, aid.accel, &lookup);
+                let t = freq * oracle.throughput(spec, combo, aid.accel, &lookup);
                 *per_job.entry(j).or_default() += t;
                 if spec.is_inference() {
                     replica_mus.entry(j).or_default().push(serving::service_rate(t));
@@ -551,9 +591,27 @@ impl GoghCore {
             &|aid| solo_cap(aid.accel),
         );
         let busy: Vec<AccelId> = loads.keys().copied().collect();
-        self.meter_busy.accrue(t1, &busy, &loads);
         let in_service = self.cluster.available_accels();
-        self.meter_total.accrue(t1, &in_service, &loads);
+        let gco2 = self.carbon.map_or(0.0, |c| c.intensity(t0));
+        let cluster = &self.cluster;
+        let state_of = |aid: AccelId| cluster.power_state(aid);
+        self.meter_busy.accrue_states(t1, &busy, &state_of, &loads, gco2);
+        self.meter_total.accrue_states(t1, &in_service, &state_of, &loads, gco2);
+        // instantaneous measured draw: in-service instances at their real
+        // loads. Since u ≤ 1, this never exceeds worst_case_watts, so the
+        // transactional cap check implies peak ≤ cap at every interval.
+        let watts: f64 = in_service
+            .iter()
+            .map(|aid| {
+                let u = loads.get(aid).copied().unwrap_or(0.0);
+                state_power_watts(aid.accel, cluster.power_state(*aid), u)
+            })
+            .sum();
+        self.state.peak_power_w = self.state.peak_power_w.max(watts);
+        self.state.cap_intervals += 1;
+        if cluster.power_cap_w().map_or(true, |cap| watts <= cap + 1e-9) {
+            self.state.cap_ok_intervals += 1;
+        }
 
         // SLO + progress + completion (stalled jobs make no progress).
         // Training jobs burn work at their achieved throughput against a
@@ -767,5 +825,48 @@ mod tests {
         // JCT measured from the restored arrival time (40), not from 0
         // or from the restore point: completion is ≥ 105 ⇒ jct ≥ 65
         assert!(report.mean_jct >= 65.0 / 3.0, "{}", report.mean_jct);
+    }
+
+    #[test]
+    fn power_cap_trims_decisions_and_peak_stays_under_cap() {
+        use crate::power::PowerState;
+        // two V100s under a 250 W cap: both busy at nominal would draw
+        // 500 W worst-case, so the trim layer must down-clock and
+        // serialize instead of failing the run
+        let spec = ClusterSpec::mix(&[(AccelType::V100, 2)]);
+        let mut c = GoghCore::new(spec, ThroughputOracle::new(9), 0.0, 15.0, 1)
+            .unwrap()
+            .with_power_cap(Some(250.0));
+        c.submit(1.0, job(0, 40.0));
+        c.submit(2.0, job(1, 40.0));
+        c.run(&mut FirstFit, 3600.0).unwrap();
+        let report = c.report(&FirstFit);
+        assert_eq!(report.jobs_completed, 2);
+        assert_eq!(report.power_cap_w, Some(250.0));
+        assert!(report.power_peak_w > 0.0, "{}", report.power_peak_w);
+        assert!(report.power_peak_w <= 250.0, "{}", report.power_peak_w);
+        assert_eq!(report.power_cap_attainment, 1.0);
+        // the down-clocked host accrued energy in the low bucket
+        assert!(report.joules_by_state[PowerState::Low.index()] > 0.0);
+        assert_eq!(report.grams_co2, 0.0); // no carbon signal attached
+    }
+
+    #[test]
+    fn carbon_signal_accrues_emissions() {
+        let signal = crate::power::CarbonSignal {
+            base_gco2_per_kwh: 420.0,
+            amplitude: 0.35,
+            phase_s: 0.0,
+        };
+        let mut c = core(11).with_carbon(Some(signal));
+        c.submit(1.0, job(0, 40.0));
+        c.run(&mut FirstFit, 3600.0).unwrap();
+        let report = c.report(&FirstFit);
+        assert_eq!(report.jobs_completed, 1);
+        assert!(report.grams_co2 > 0.0);
+        // sanity: grams ≈ joules × intensity bounds (0.65–1.35 × base)
+        let j = report.total_energy_joules;
+        assert!(report.grams_co2 >= 0.65 * 420.0 * j / 3.6e6 - 1e-9);
+        assert!(report.grams_co2 <= 1.35 * 420.0 * j / 3.6e6 + 1e-9);
     }
 }

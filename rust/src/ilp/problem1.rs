@@ -35,7 +35,7 @@ use std::collections::HashMap;
 
 use super::branch_bound::{solve_ilp, BnbConfig, BnbResult, BnbStatus};
 use super::model::{Model, ObjSense, Sense, VarId, VarKind};
-use crate::cluster::energy::power_watts;
+use crate::power::{column_cost, PowerKnobs};
 use crate::workload::{AccelType, Combo, JobId, JobSpec, ACCEL_TYPES};
 
 /// Inputs to the allocation ILP.
@@ -70,6 +70,11 @@ pub struct Problem1Input<'a> {
     /// job's diurnal request rate λ(t) for the latency-feasibility
     /// constraint 2e′ (irrelevant to pure-training pools; pass 0.0).
     pub now_s: f64,
+    /// Power-subsystem knobs (docs/POWER.md): with DVFS on, each column
+    /// cost is the minimum over the host's power states; the carbon
+    /// weight scales the energy term. The default reproduces the
+    /// pre-power objective bit-for-bit.
+    pub power: PowerKnobs,
 }
 
 /// Decoded solution.
@@ -181,7 +186,7 @@ pub fn build_problem1(
                 continue; // useless column
             }
             let u = (total_t / (input.solo_capability)(a).max(1e-9)).clamp(0.0, 1.0);
-            let energy = power_watts(a, u) - input.throughput_bonus * total_t;
+            let energy = column_cost(a, u, total_t, input.throughput_bonus, input.power);
             let v = model.add_var(
                 format!("n[{},{:?}]", a.name(), c),
                 0.0,
@@ -381,6 +386,7 @@ mod tests {
             slack_penalty: None,
             throughput_bonus: 0.0,
             now_s: 0.0,
+            power: PowerKnobs::default(),
         }
         .with(oracle)
     }
@@ -471,6 +477,7 @@ mod tests {
             slack_penalty: None,
             throughput_bonus: 0.0,
             now_s: 0.0,
+            power: PowerKnobs::default(),
         };
         let sol = solve_problem1(&hard, &BnbConfig::default());
         assert_eq!(sol.status, BnbStatus::Infeasible);
@@ -509,6 +516,7 @@ mod tests {
             slack_penalty: None,
             throughput_bonus: 0.0,
             now_s: 0.0,
+            power: PowerKnobs::default(),
         };
         let sol = solve_problem1(&input, &BnbConfig::default());
         assert_eq!(sol.assignments.len(), 1);
@@ -547,6 +555,7 @@ mod tests {
             slack_penalty: None,
             throughput_bonus: 0.0,
             now_s: 0.0,
+            power: PowerKnobs::default(),
         };
         let sol = solve_problem1(&input, &BnbConfig::default());
         assert!(matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible));
@@ -580,6 +589,7 @@ mod tests {
                 slack_penalty: None,
                 throughput_bonus: bonus,
                 now_s: 0.0,
+                power: PowerKnobs::default(),
             };
             solve_problem1(&input, &BnbConfig::default())
         };
@@ -628,6 +638,7 @@ mod tests {
                 slack_penalty: None,
                 throughput_bonus: 0.0,
                 now_s: 0.0,
+                power: PowerKnobs::default(),
             };
             solve_problem1(&input, &BnbConfig::default())
         };

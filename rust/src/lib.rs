@@ -59,6 +59,7 @@ pub mod daemon;
 pub mod engine;
 pub mod ilp;
 pub mod metrics;
+pub mod power;
 pub mod runtime;
 pub mod util;
 pub mod workload;

@@ -10,7 +10,7 @@
 //! (Argument parsing is hand-rolled — offline build, see Cargo.toml.)
 
 use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
-use gogh::config::{BackendKind, ExperimentConfig};
+use gogh::config::{BackendKind, CarbonConfig, ExperimentConfig};
 use gogh::coordinator::{Gogh, Scheduler, SimDriver};
 use gogh::daemon::{JobRequest, Request};
 use gogh::runtime::Engine;
@@ -22,14 +22,16 @@ const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in hetero
 
 USAGE:
   gogh simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S]
-                [--config cfg.json] [--preset default|large|mixed|serving]
+                [--config cfg.json]
+                [--preset default|large|mixed|serving|powercap|carbon]
                 [--shards P] [--backend auto|pjrt|native|none]
                 [--save-catalog catalog.json] [--gavel-csv data.csv]
                 [--cancel-rate P] [--accel-churn N] [--migration-cost-s S]
-                [--inference-fraction F]
+                [--inference-fraction F] [--power-cap W]
+                [--power-dvfs true|false] [--carbon-trace signal.json]
   gogh info [--workloads]
   gogh solve [--jobs N] [--servers-per-type K] [--seed S]
-  gogh config [--preset default|large|mixed|serving]
+  gogh config [--preset default|large|mixed|serving|powercap|carbon]
 
 Daemon clients (talk to a running goghd; see docs/PROTOCOL.md):
   gogh submit --family NAME --work S [--batch N] [--min-throughput F]
@@ -49,6 +51,12 @@ The `mixed` and `serving` presets add the inference workload class:
 a fraction of arrivals (--inference-fraction overrides it) are
 latency-SLO serving jobs scaled across 1..R replicas, with GOGH
 autoscaling replicas on monitor ticks.
+
+The `powercap` and `carbon` presets turn on the power subsystem
+(docs/POWER.md): per-accelerator DVFS states with a cluster power cap,
+resp. a diurnal grid carbon signal. --power-cap sets/overrides the cap
+in watts, --power-dvfs toggles the DVFS layer, and --carbon-trace reads
+a {\"base_gco2_per_kwh\", \"amplitude\", \"phase_s\"} JSON signal.
 
 --backend picks the P1/P2 estimator engine: `pjrt` (AOT artifacts,
 errors if absent), `native` (pure-Rust MLP, zero artifacts), `none`
@@ -127,6 +135,17 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(s) = args.get_parse::<f64>("migration-cost-s") {
         cfg.migration_cost_s = s;
+    }
+    if let Some(w) = args.get_parse::<f64>("power-cap") {
+        cfg.power.cap_w = Some(w);
+    }
+    if let Some(d) = args.get_parse::<bool>("power-dvfs") {
+        cfg.power.dvfs = d;
+    }
+    if let Some(p) = args.get("carbon-trace") {
+        let text = std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+        cfg.power.carbon =
+            CarbonConfig::from_json(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
     }
     Ok(cfg)
 }
@@ -208,7 +227,9 @@ fn simulate(args: &Args) -> Result<()> {
                 cfg.monitor_interval_s,
                 cfg.seed,
             )?
-            .with_migration_cost(cfg.migration_cost_s);
+            .with_migration_cost(cfg.migration_cost_s)
+            .with_power_cap(cfg.power.cap_w)
+            .with_carbon(cfg.power.carbon.signal());
             let mut sched: Box<dyn Scheduler> = match other {
                 "random" => Box::new(RandomScheduler::new(cfg.seed)),
                 "greedy" => Box::new(GreedyScheduler::new()),
@@ -249,6 +270,27 @@ fn simulate(args: &Args) -> Result<()> {
             report.scale_ups,
             report.scale_downs,
             report.replica_seconds
+        );
+    }
+    // emitted whenever the power subsystem was active (cap set, DVFS
+    // re-stated something, or a carbon signal priced emissions) — the
+    // CI power smokes grep and parse this line
+    let power_active = report.power_cap_w.is_some()
+        || report.grams_co2 > 0.0
+        || report.joules_by_state[0] > 0.0
+        || report.joules_by_state[2] > 0.0;
+    if power_active {
+        println!(
+            "power: peak {:.0} W / cap {} W, attainment {:.3}, {:.0} J total \
+             (low {:.0} J, nominal {:.0} J, turbo {:.0} J), {:.1} gCO2",
+            report.power_peak_w,
+            report.power_cap_w.map_or("-".to_string(), |c| format!("{c:.0}")),
+            report.power_cap_attainment,
+            report.energy_joules,
+            report.joules_by_state[0],
+            report.joules_by_state[1],
+            report.joules_by_state[2],
+            report.grams_co2
         );
     }
     Ok(())
@@ -519,6 +561,32 @@ fn status(args: &Args) -> Result<()> {
         println!("  {} <- [{}]", p.req_str("accel")?, ids.join(", "));
     }
     println!("energy: {:.0} J", resp.req_f64("energy_joules")?);
+    // power block (absent on pre-power daemons — unknown-field rule)
+    if let Some(p) = resp.get("power") {
+        let cap = p
+            .get("cap_w")
+            .and_then(Json::as_f64)
+            .map_or("-".to_string(), |c| format!("{c:.0}"));
+        println!(
+            "power: peak {:.0} W / cap {cap} W, {:.1} gCO2",
+            p.req_f64("peak_w")?,
+            p.req_f64("grams_co2")?
+        );
+        let states: Vec<String> = p
+            .get("states")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|s| {
+                let accel = s.get("accel").and_then(Json::as_str)?;
+                let state = s.get("state").and_then(Json::as_str)?;
+                Some(format!("{accel}={state}"))
+            })
+            .collect();
+        if !states.is_empty() {
+            println!("  non-nominal states: {}", states.join(", "));
+        }
+    }
     Ok(())
 }
 

@@ -58,6 +58,17 @@ pub struct RunReport {
     pub scale_ups: u64,
     /// replica scale-down events the policy's autoscaler applied
     pub scale_downs: u64,
+    /// peak instantaneous measured cluster draw over the run (W)
+    pub power_peak_w: f64,
+    /// configured cluster power cap, if any (W)
+    pub power_cap_w: Option<f64>,
+    /// fraction of integration intervals with measured draw ≤ cap
+    /// (1.0 when uncapped — vacuously attained)
+    pub power_cap_attainment: f64,
+    /// cluster joules by DVFS state, `[low, nominal, turbo]`
+    pub joules_by_state: [f64; 3],
+    /// cumulative emissions under the carbon signal (g; 0 without one)
+    pub grams_co2: f64,
 }
 
 impl RunReport {

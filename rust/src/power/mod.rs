@@ -1,0 +1,306 @@
+#![doc = include_str!("../../../docs/POWER.md")]
+
+use crate::cluster::power_watts;
+use crate::workload::AccelType;
+
+/// One discrete DVFS operating point. Every accelerator instance is in
+/// exactly one state; [`PowerState::Nominal`] is the pre-power behaviour
+/// (and the default for fresh clusters and v1 snapshots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum PowerState {
+    /// Down-clocked: 0.70× frequency, 0.85× idle, 0.55× active power.
+    Low,
+    /// The unmodified catalog operating point.
+    #[default]
+    Nominal,
+    /// Over-clocked: 1.15× frequency, 1.05× idle, 1.40× active power.
+    Turbo,
+}
+
+impl PowerState {
+    /// Every state, in `joules_by_state` index order.
+    pub const ALL: [PowerState; 3] = [PowerState::Low, PowerState::Nominal, PowerState::Turbo];
+
+    /// Stable wire/snapshot key.
+    pub fn key(self) -> &'static str {
+        match self {
+            PowerState::Low => "low",
+            PowerState::Nominal => "nominal",
+            PowerState::Turbo => "turbo",
+        }
+    }
+
+    pub fn from_key(s: &str) -> crate::Result<Self> {
+        match s {
+            "low" => Ok(PowerState::Low),
+            "nominal" => Ok(PowerState::Nominal),
+            "turbo" => Ok(PowerState::Turbo),
+            other => anyhow::bail!("unknown power state {other:?} (want low|nominal|turbo)"),
+        }
+    }
+
+    /// Index into `[low, nominal, turbo]` accumulators.
+    pub fn index(self) -> usize {
+        match self {
+            PowerState::Low => 0,
+            PowerState::Nominal => 1,
+            PowerState::Turbo => 2,
+        }
+    }
+
+    /// Frequency scalar: multiplies catalog throughput *and* solo
+    /// capability, so relative load `u` is state-invariant.
+    pub fn freq_scalar(self) -> f64 {
+        match self {
+            PowerState::Low => 0.70,
+            PowerState::Nominal => 1.0,
+            PowerState::Turbo => 1.15,
+        }
+    }
+
+    /// `(idle multiplier, active-term multiplier)` on the type's
+    /// `(idle, extra)` power parameters.
+    fn power_mults(self) -> (f64, f64) {
+        match self {
+            PowerState::Low => (0.85, 0.55),
+            PowerState::Nominal => (1.0, 1.0),
+            PowerState::Turbo => (1.05, 1.40),
+        }
+    }
+}
+
+/// Instantaneous power (watts) of accelerator type `a` in DVFS state `s`
+/// at relative load `u`. [`PowerState::Nominal`] routes through the
+/// original [`crate::cluster::power_watts`] curve unmodified, so every
+/// pre-power energy figure is bit-identical when DVFS never engages.
+pub fn state_power_watts(a: AccelType, s: PowerState, u: f64) -> f64 {
+    if s == PowerState::Nominal {
+        return power_watts(a, u);
+    }
+    let (idle, extra) = a.power_params();
+    let (idle_mult, extra_mult) = s.power_mults();
+    let u = u.clamp(0.0, 1.0);
+    idle_mult * idle + extra_mult * extra * u.powf(0.8)
+}
+
+/// Power-subsystem knobs threaded into the ILP objective. The default
+/// (`dvfs: false`, `carbon_weight: 1.0`) reproduces the pre-power
+/// objective bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerKnobs {
+    /// Minimize each column's cost over DVFS states instead of assuming
+    /// nominal.
+    pub dvfs: bool,
+    /// Multiplier on the energy term (the carbon/price signal's
+    /// `weight(t)`; 1.0 = plain watts).
+    pub carbon_weight: f64,
+}
+
+impl Default for PowerKnobs {
+    fn default() -> Self {
+        Self {
+            dvfs: false,
+            carbon_weight: 1.0,
+        }
+    }
+}
+
+/// Column cost of hosting aggregate throughput `total_t` (relative load
+/// `u`) on type `a` in state `s`:
+/// `carbon_weight·watts − throughput_bonus·freq_scalar·total_t`.
+pub fn state_cost(
+    a: AccelType,
+    s: PowerState,
+    u: f64,
+    total_t: f64,
+    throughput_bonus: f64,
+    carbon_weight: f64,
+) -> f64 {
+    carbon_weight * state_power_watts(a, s, u) - throughput_bonus * s.freq_scalar() * total_t
+}
+
+/// The DVFS state minimizing [`state_cost`], preferring
+/// [`PowerState::Nominal`] on ties (a strict improvement is required to
+/// leave the default state).
+pub fn best_state_cost(
+    a: AccelType,
+    u: f64,
+    total_t: f64,
+    throughput_bonus: f64,
+    carbon_weight: f64,
+) -> (PowerState, f64) {
+    let mut best = PowerState::Nominal;
+    let mut best_cost = state_cost(a, best, u, total_t, throughput_bonus, carbon_weight);
+    for s in [PowerState::Low, PowerState::Turbo] {
+        let c = state_cost(a, s, u, total_t, throughput_bonus, carbon_weight);
+        if c < best_cost - 1e-12 {
+            best = s;
+            best_cost = c;
+        }
+    }
+    (best, best_cost)
+}
+
+/// The effective per-column energy cost the ILP and the incremental
+/// arrival path both use: with `dvfs` off, exactly the pre-power
+/// expression (scaled by the carbon weight); with it on, the minimum
+/// over states.
+pub fn column_cost(
+    a: AccelType,
+    u: f64,
+    total_t: f64,
+    throughput_bonus: f64,
+    knobs: PowerKnobs,
+) -> f64 {
+    if knobs.dvfs {
+        best_state_cost(a, u, total_t, throughput_bonus, knobs.carbon_weight).1
+    } else {
+        state_cost(a, PowerState::Nominal, u, total_t, throughput_bonus, knobs.carbon_weight)
+    }
+}
+
+/// Diurnal carbon/price signal (docs/POWER.md):
+/// `intensity(t) = base · (1 + amplitude · sin(2π (t + phase_s) / 86400))`.
+/// Lives in the *config*, never the trace event stream, so seeded
+/// arrival streams stay byte-identical with and without it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CarbonSignal {
+    /// Mean grid intensity (gCO₂ per kWh); ≤ 0 disables the signal.
+    pub base_gco2_per_kwh: f64,
+    /// Diurnal swing, 0..1.
+    pub amplitude: f64,
+    /// Phase offset in seconds.
+    pub phase_s: f64,
+}
+
+impl CarbonSignal {
+    /// Grid intensity (gCO₂/kWh) at simulated time `t`.
+    pub fn intensity(&self, t: f64) -> f64 {
+        let day = 86_400.0;
+        let swing = (2.0 * std::f64::consts::PI * (t + self.phase_s) / day).sin();
+        self.base_gco2_per_kwh * (1.0 + self.amplitude.clamp(0.0, 1.0) * swing)
+    }
+
+    /// Objective reweight at time `t`: `intensity(t) / base` (1.0 when
+    /// the signal is disabled).
+    pub fn weight(&self, t: f64) -> f64 {
+        if self.base_gco2_per_kwh <= 0.0 {
+            1.0
+        } else {
+            self.intensity(t) / self.base_gco2_per_kwh
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_state_matches_legacy_power_curve() {
+        // bit-identical, not approximately equal: nominal must route
+        // through the original curve so pre-power reports never move
+        for a in crate::workload::ACCEL_TYPES {
+            for i in 0..=10 {
+                let u = i as f64 / 10.0;
+                assert_eq!(state_power_watts(a, PowerState::Nominal, u), power_watts(a, u));
+            }
+        }
+    }
+
+    #[test]
+    fn states_form_a_concave_throughput_power_curve() {
+        for a in crate::workload::ACCEL_TYPES {
+            let p = |s: PowerState| state_power_watts(a, s, 1.0);
+            let (lo, nom, tur) = (p(PowerState::Low), p(PowerState::Nominal), p(PowerState::Turbo));
+            assert!(lo < nom && nom < tur, "{a:?}: {lo} {nom} {tur}");
+            // decreasing marginal throughput per watt = concavity
+            let m1 = (1.0 - 0.70) / (nom - lo);
+            let m2 = (1.15 - 1.0) / (tur - nom);
+            assert!(m2 < m1, "{a:?}: marginal thr/W must decrease ({m1} vs {m2})");
+        }
+    }
+
+    #[test]
+    fn worked_example_v100_watts() {
+        // the docs/POWER.md table
+        assert!((state_power_watts(AccelType::V100, PowerState::Low, 1.0) - 148.0).abs() < 1e-9);
+        assert!(
+            (state_power_watts(AccelType::V100, PowerState::Nominal, 1.0) - 250.0).abs() < 1e-9
+        );
+        assert!(
+            (state_power_watts(AccelType::V100, PowerState::Turbo, 1.0) - 337.75).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn key_roundtrip_and_unknown_key() {
+        for s in PowerState::ALL {
+            assert_eq!(PowerState::from_key(s.key()).unwrap(), s);
+        }
+        assert_eq!(PowerState::ALL[PowerState::Turbo.index()], PowerState::Turbo);
+        let err = PowerState::from_key("ludicrous").unwrap_err().to_string();
+        assert!(err.contains("low|nominal|turbo"), "{err}");
+        assert_eq!(PowerState::default(), PowerState::Nominal);
+    }
+
+    #[test]
+    fn default_knobs_reproduce_legacy_column_cost() {
+        for a in crate::workload::ACCEL_TYPES {
+            for (u, t) in [(0.0, 0.0), (0.5, 0.8), (1.0, 1.6)] {
+                let legacy = power_watts(a, u) - 300.0 * t;
+                assert_eq!(column_cost(a, u, t, 300.0, PowerKnobs::default()), legacy);
+            }
+        }
+    }
+
+    #[test]
+    fn dvfs_cost_never_exceeds_nominal_and_picks_sane_states() {
+        let knobs = PowerKnobs {
+            dvfs: true,
+            carbon_weight: 1.0,
+        };
+        for a in crate::workload::ACCEL_TYPES {
+            for (u, t) in [(0.0, 0.0), (0.3, 0.5), (1.0, 1.8)] {
+                let dvfs = column_cost(a, u, t, 300.0, knobs);
+                let nominal = column_cost(a, u, t, 300.0, PowerKnobs::default());
+                assert!(dvfs <= nominal, "{a:?} u={u}: min over states must include nominal");
+            }
+        }
+        // an idle accelerator always prefers low (pure idle-watt saving)
+        let (s, _) = best_state_cost(AccelType::V100, 0.0, 0.0, 300.0, 1.0);
+        assert_eq!(s, PowerState::Low);
+        // a huge throughput bonus at full load buys turbo
+        let (s, _) = best_state_cost(AccelType::V100, 1.0, 2.0, 5000.0, 1.0);
+        assert_eq!(s, PowerState::Turbo);
+        // zero bonus at full load: watts dominate, low wins
+        let (s, _) = best_state_cost(AccelType::V100, 1.0, 2.0, 0.0, 1.0);
+        assert_eq!(s, PowerState::Low);
+    }
+
+    #[test]
+    fn carbon_signal_is_diurnal_and_disables_at_zero_base() {
+        let sig = CarbonSignal {
+            base_gco2_per_kwh: 420.0,
+            amplitude: 0.35,
+            phase_s: 0.0,
+        };
+        // peak a quarter-day in, trough at three quarters
+        assert!((sig.intensity(21_600.0) - 420.0 * 1.35).abs() < 1e-6);
+        assert!((sig.intensity(64_800.0) - 420.0 * 0.65).abs() < 1e-6);
+        assert!((sig.intensity(0.0) - 420.0).abs() < 1e-9);
+        assert!((sig.weight(21_600.0) - 1.35).abs() < 1e-9);
+        // phase shifts the peak
+        let shifted = CarbonSignal {
+            phase_s: 21_600.0,
+            ..sig
+        };
+        assert!((shifted.intensity(0.0) - 420.0 * 1.35).abs() < 1e-6);
+        // disabled signal: weight pinned to 1
+        let off = CarbonSignal {
+            base_gco2_per_kwh: 0.0,
+            ..sig
+        };
+        assert_eq!(off.weight(12_345.0), 1.0);
+    }
+}

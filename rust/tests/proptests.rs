@@ -146,6 +146,7 @@ fn prop_problem1_solutions_always_satisfy_constraints() {
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
             now_s: 0.0,
+            power: Default::default(),
         };
         let sol = solve_problem1(&input, &BnbConfig::default());
         assert!(
@@ -398,6 +399,71 @@ fn prop_random_op_sequences_never_double_book() {
                 Err(_) => {
                     // rejected deltas must not leak partial state
                     assert_eq!(c.placement.diff_count(&before), 0);
+                }
+            }
+            assert_placement_invariants(&c, n_jobs);
+        }
+    }
+}
+
+#[test]
+fn prop_power_capped_op_sequences_respect_cap_and_invariants() {
+    // Random SetPowerState + placement ops under a cluster power cap:
+    // after trim_to_power_cap, applied deltas never push worst-case
+    // draw over the cap, rejected deltas never leak placement or state,
+    // and the placement invariants hold throughout.
+    use gogh::power::PowerState;
+    let mut rng = Rng::seed_from_u64(7007);
+    for _case in 0..40 {
+        let n_jobs = rng.range_u32_inclusive(2, 10);
+        let mut c = delta_test_cluster(n_jobs);
+        let cap = rng.range_f64(200.0, 500.0);
+        c.set_power_cap(Some(cap));
+        let accels = c.spec.accels.clone();
+        for _step in 0..40 {
+            let a = accels[rng.range_usize(0, accels.len())];
+            let j1 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+            let j2 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+            let op = match rng.range_usize(0, 5) {
+                0 => PlacementOp::Assign {
+                    accel: a,
+                    combo: Combo::Solo(j1),
+                },
+                1 => PlacementOp::Assign {
+                    accel: a,
+                    combo: Combo::pair(j1, j2),
+                },
+                2 => PlacementOp::Evict { accel: a },
+                3 => PlacementOp::SetPowerState {
+                    accel: a,
+                    state: PowerState::ALL[rng.range_usize(0, 3)],
+                },
+                _ => PlacementOp::Migrate {
+                    job: j1,
+                    from: accels[rng.range_usize(0, accels.len())],
+                    to: a,
+                },
+            };
+            let before = c.placement.clone();
+            let states_before: Vec<PowerState> =
+                accels.iter().map(|&a| c.power_state(a)).collect();
+            let delta = c.trim_to_power_cap(&PlacementDelta { ops: vec![op] });
+            match c.apply_delta(&delta) {
+                Ok(_) => {
+                    assert!(
+                        c.worst_case_watts() <= cap + 1e-6,
+                        "worst {} > cap {cap}",
+                        c.worst_case_watts()
+                    );
+                }
+                Err(e) => {
+                    // the trim removed every cap breach, so a residual
+                    // error is a validity one — and nothing may leak
+                    assert!(!e.to_string().contains("power cap"), "{e}");
+                    assert_eq!(c.placement.diff_count(&before), 0);
+                    let states_after: Vec<PowerState> =
+                        accels.iter().map(|&a| c.power_state(a)).collect();
+                    assert_eq!(states_after, states_before);
                 }
             }
             assert_placement_invariants(&c, n_jobs);

@@ -64,6 +64,7 @@ fn greedy_incumbent_is_feasible_and_bounds_the_optimum() {
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
             now_s: 0.0,
+            power: Default::default(),
         };
         let cfg = BnbConfig::default();
         let (model, cols, slacks) = build_problem1(&input, &cfg);
@@ -104,6 +105,7 @@ fn warm_and_cold_reach_identical_optima() {
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
             now_s: 0.0,
+            power: Default::default(),
         };
         let warm_cfg = BnbConfig {
             max_nodes: 100_000,
@@ -158,6 +160,7 @@ fn warm_start_explores_strictly_fewer_nodes_at_scale() {
             slack_penalty: Some(2000.0),
             throughput_bonus: 300.0,
             now_s: 0.0,
+            power: Default::default(),
         };
         let warm_cfg = BnbConfig {
             max_nodes: 150_000,
@@ -209,6 +212,7 @@ fn node_budget_degrades_gracefully_to_the_incumbent() {
         slack_penalty: Some(2000.0),
         throughput_bonus: 300.0,
         now_s: 0.0,
+        power: Default::default(),
     };
     let cfg = BnbConfig::default();
     let (model, cols, slacks) = build_problem1(&input, &cfg);
