@@ -1,11 +1,15 @@
 #!/usr/bin/env python3
-"""Fail CI if a CLI flag read by the binaries is missing from docs/CLI.md.
+"""Fail CI if the docs fall behind the code they describe.
 
-The binaries read flags exclusively through the `Args` accessors
-(`get` / `get_parse` / `has`), so a regex over the two entry points is
-a complete inventory. Every flag found there must appear in
-docs/CLI.md spelled `--flag`, which keeps the CLI reference from
-silently rotting as flags are added.
+Two checks, both pure-regex so they run without a toolchain:
+
+1. CLI flags: the binaries read flags exclusively through the `Args`
+   accessors (`get` / `get_parse` / `has`), so a regex over the two
+   entry points is a complete inventory. Every flag found there must
+   appear in docs/CLI.md spelled `--flag`.
+2. Lint rules: every rule declared in the `RULES` table of
+   rust/src/lint/rules.rs (`name: "<rule>"`) must be documented in
+   docs/LINTS.md, which `cargo doc` includes at `gogh::lint`.
 
 Usage: python3 .github/scripts/docs_freshness.py  (run from repo root)
 """
@@ -22,8 +26,13 @@ DOC = Path("docs/CLI.md")
 
 FLAG_RE = re.compile(r'args\.(?:get|get_parse|has)(?:::<[^>]+>)?\s*\(\s*"([a-z0-9-]+)"\s*\)')
 
+LINT_SRC = Path("rust/src/lint/rules.rs")
+LINT_DOC = Path("docs/LINTS.md")
 
-def main() -> int:
+RULE_RE = re.compile(r'name:\s*"([a-z0-9-]+)"')
+
+
+def check_cli_flags() -> int:
     flags: dict[str, list[str]] = {}
     for src in SOURCES:
         for flag in FLAG_RE.findall(src.read_text()):
@@ -42,6 +51,29 @@ def main() -> int:
 
     print(f"docs_freshness: all {len(flags)} flags documented in {DOC}")
     return 0
+
+
+def check_lint_rules() -> int:
+    rules = RULE_RE.findall(LINT_SRC.read_text())
+    if not rules:
+        print(f"docs_freshness: no rules found in {LINT_SRC} — "
+              "the extraction regex is stale", file=sys.stderr)
+        return 1
+
+    doc = LINT_DOC.read_text()
+    missing = sorted(r for r in set(rules) if f"`{r}`" not in doc)
+    if missing:
+        for r in missing:
+            print(f"docs_freshness: lint rule {r} (declared in {LINT_SRC}) "
+                  f"is not documented in {LINT_DOC}", file=sys.stderr)
+        return 1
+
+    print(f"docs_freshness: all {len(set(rules))} lint rules documented in {LINT_DOC}")
+    return 0
+
+
+def main() -> int:
+    return check_cli_flags() | check_lint_rules()
 
 
 if __name__ == "__main__":

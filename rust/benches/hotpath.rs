@@ -6,7 +6,7 @@
 
 include!("bench_util.rs");
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use gogh::catalog::{Catalog, EstimateKey, SimilarityIndex};
 use gogh::ilp::branch_bound::BnbConfig;
@@ -134,7 +134,7 @@ fn main() -> gogh::Result<()> {
         oracle_c.throughput(spec, c, a, &lookup)
     };
     let cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
-    let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+    let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
     let input = Problem1Input {
         jobs: &jobs,
         accel_counts: &counts,

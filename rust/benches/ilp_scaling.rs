@@ -14,7 +14,7 @@
 
 include!("bench_util.rs");
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use gogh::ilp::branch_bound::BnbConfig;
 use gogh::ilp::problem1::{build_problem1, solve_problem1, Problem1Input};
@@ -61,7 +61,7 @@ fn main() {
                 oracle_c.throughput(spec, c, a, &lookup)
             };
             let cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
-            let counts: HashMap<AccelType, u32> =
+            let counts: BTreeMap<AccelType, u32> =
                 ACCEL_TYPES.iter().map(|&a| (a, per_type)).collect();
             let input = Problem1Input {
                 jobs: &jobs,

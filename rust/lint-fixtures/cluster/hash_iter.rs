@@ -1,0 +1,13 @@
+// BAD: hash containers on a decision path (determinism-hash-container).
+// Iteration order is seeded per process; float accumulation order (and
+// therefore energy totals and placements) would differ run to run.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn total_load(loads: &HashMap<u32, f64>, busy: &HashSet<u32>) -> f64 {
+    loads
+        .iter()
+        .filter(|(id, _)| busy.contains(id))
+        .map(|(_, u)| u)
+        .sum()
+}

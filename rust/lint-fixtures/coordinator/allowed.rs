@@ -1,0 +1,12 @@
+// GOOD: a correctly allow-listed exemption — gogh-lint must report
+// nothing for this file.
+
+pub struct SolveStats {
+    pub solve_seconds: f64,
+}
+
+pub fn timed_solve(stats: &mut SolveStats) {
+    // gogh-lint: allow(determinism-wall-clock, timing statistic only; never branches on it)
+    let t0 = std::time::Instant::now();
+    stats.solve_seconds += t0.elapsed().as_secs_f64();
+}

@@ -1,0 +1,9 @@
+// BAD: suppressions that don't carry their weight (bad-suppression).
+
+// gogh-lint: allow(determinism-wall-clock)
+pub fn missing_reason() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+// gogh-lint: allow(no-such-rule, a reason for a rule that does not exist)
+pub fn unknown_rule() {}

@@ -1,0 +1,11 @@
+// BAD: ambient randomness (rng-source). Every experiment must be
+// exactly reproducible from its seed via util/rng.rs streams.
+
+use std::collections::hash_map::RandomState;
+
+pub fn jitter() -> u64 {
+    let state = RandomState::new();
+    let sample = rand::thread_rng();
+    let _ = (state, sample);
+    0
+}

@@ -1,0 +1,10 @@
+// BAD: panic macros in the daemon (panic-macro).
+
+pub fn dispatch(cmd: &str) -> u32 {
+    match cmd {
+        "queue" => 1,
+        "status" => 2,
+        "drain" => unimplemented!("drain not wired yet"),
+        _ => panic!("unknown cmd {cmd}"),
+    }
+}

@@ -1,0 +1,15 @@
+// BAD: error code outside the documented closed set
+// (protocol-error-code). Clients match on codes — a new one is a
+// protocol change that must land in ERROR_CODES + docs/PROTOCOL.md.
+
+pub struct ProtoError;
+
+impl ProtoError {
+    pub fn new(_code: &'static str, _message: String) -> Self {
+        ProtoError
+    }
+}
+
+pub fn reject(detail: String) -> ProtoError {
+    ProtoError::new("quota_exceeded", detail)
+}

@@ -1,0 +1,9 @@
+// BAD: panicking extraction in the daemon (panic-unwrap). A panic here
+// kills goghd and loses the cluster; return a protocol error envelope.
+
+pub fn job_id(line: &str) -> u32 {
+    let parsed: Option<u32> = line.trim().parse().ok();
+    let id = parsed.unwrap();
+    let doubled = line.trim().parse::<u32>().expect("numeric job id");
+    id + doubled
+}

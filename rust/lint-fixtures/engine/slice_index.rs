@@ -1,0 +1,6 @@
+// BAD: literal slice index in the engine (panic-slice-index). An empty
+// placement panics the event loop; use .first() / .get().
+
+pub fn first_accel(accels: &[u32]) -> u32 {
+    accels[0]
+}

@@ -1,0 +1,9 @@
+// BAD: wall-clock read on a decision path (determinism-wall-clock).
+// A solver cutoff keyed to real time makes placements irreproducible.
+
+pub fn solve_with_deadline() -> f64 {
+    let start = std::time::Instant::now();
+    let epoch = std::time::SystemTime::now();
+    let _ = epoch;
+    start.elapsed().as_secs_f64()
+}

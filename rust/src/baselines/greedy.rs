@@ -8,7 +8,7 @@
 //! packing that seeds the ILP's branch-and-bound with its first
 //! incumbent (the warm start of `ilp::problem1::solve_problem1`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::{AccelId, Cluster, Placement};
 use crate::coordinator::{ClusterEvent, Decision, Scheduler};
@@ -120,10 +120,10 @@ pub fn greedy_incumbent(
     input: &Problem1Input,
     model: &Model,
     cols: &[(AccelType, Combo, VarId)],
-    slacks: &HashMap<JobId, (Option<VarId>, Option<VarId>)>,
+    slacks: &BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
 ) -> Option<Vec<f64>> {
     let mut x = vec![0.0f64; model.n_vars()];
-    let mut remaining: HashMap<AccelType, u32> = input.accel_counts.clone();
+    let mut remaining: BTreeMap<AccelType, u32> = input.accel_counts.clone();
     // hardest SLOs first
     let mut jobs: Vec<&JobSpec> = input.jobs.iter().collect();
     jobs.sort_by(|a, b| b.min_throughput.partial_cmp(&a.min_throughput).unwrap());

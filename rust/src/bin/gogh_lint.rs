@@ -1,0 +1,52 @@
+//! `gogh-lint` — the project-invariant static-analysis pass
+//! (docs/LINTS.md): determinism, panic-safety, protocol-evolution and
+//! RNG-discipline rules that clippy cannot express.
+//!
+//! Usage: `cargo run --bin gogh_lint -- [PATH …]` (default `rust/src`).
+//! Prints `file:line: rule: message` per finding and exits nonzero if
+//! any. `--list-rules` prints the rule table (consumed by the
+//! docs-freshness CI check).
+
+#![deny(unsafe_code)]
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use gogh::lint::{check_tree, RULES};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--list-rules") {
+        for r in RULES {
+            println!("{}: {}", r.name, r.summary);
+        }
+        return ExitCode::SUCCESS;
+    }
+    let roots: Vec<&str> = if args.is_empty() {
+        vec!["rust/src"]
+    } else {
+        args.iter().map(String::as_str).collect()
+    };
+    let mut total = 0usize;
+    for root in roots {
+        match check_tree(Path::new(root)) {
+            Ok(violations) => {
+                for v in &violations {
+                    println!("{v}");
+                }
+                total += violations.len();
+            }
+            Err(e) => {
+                eprintln!("gogh-lint: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if total > 0 {
+        eprintln!("gogh-lint: {total} violation(s)");
+        ExitCode::FAILURE
+    } else {
+        println!("gogh-lint: clean");
+        ExitCode::SUCCESS
+    }
+}

@@ -7,7 +7,7 @@
 //! power, which is what makes consolidation onto fewer, faster GPUs
 //! energy-favourable — the effect GOGH's objective exploits.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::{AccelId, Placement};
 use crate::power::{state_power_watts, PowerState};
@@ -51,7 +51,7 @@ pub fn power_linearized(a: AccelType, u: f64, segments: usize) -> f64 {
 pub struct EnergyMeter {
     total_joules: f64,
     /// per-accelerator-type cumulative joules (for the breakdown table)
-    by_type: HashMap<AccelType, f64>,
+    by_type: BTreeMap<AccelType, f64>,
     /// per-DVFS-state cumulative joules, indexed by [`PowerState::index`]
     by_state: [f64; 3],
     /// cumulative grams of CO₂ (0 unless a carbon signal is configured)
@@ -78,7 +78,12 @@ impl EnergyMeter {
     /// state, but because billing walks the in-service list — never the
     /// state map — it accrues zero until it returns (the down+re-state
     /// regression test next to the churn test pins this).
-    pub fn accrue(&mut self, t: f64, accels_in_service: &[AccelId], loads: &HashMap<AccelId, f64>) {
+    pub fn accrue(
+        &mut self,
+        t: f64,
+        accels_in_service: &[AccelId],
+        loads: &BTreeMap<AccelId, f64>,
+    ) {
         self.accrue_states(t, accels_in_service, &|_| PowerState::Nominal, loads, 0.0);
     }
 
@@ -91,7 +96,7 @@ impl EnergyMeter {
         t: f64,
         accels_in_service: &[AccelId],
         state_of: &dyn Fn(AccelId) -> PowerState,
-        loads: &HashMap<AccelId, f64>,
+        loads: &BTreeMap<AccelId, f64>,
         gco2_per_kwh: f64,
     ) {
         let dt = (t - self.last_t).max(0.0);
@@ -114,7 +119,7 @@ impl EnergyMeter {
         self.total_joules
     }
 
-    pub fn joules_by_type(&self) -> &HashMap<AccelType, f64> {
+    pub fn joules_by_type(&self) -> &BTreeMap<AccelType, f64> {
         &self.by_type
     }
 
@@ -140,8 +145,8 @@ pub fn placement_loads(
     placement: &Placement,
     throughput_of: &dyn Fn(JobId, AccelId) -> f64,
     solo_capability: &dyn Fn(AccelId) -> f64,
-) -> HashMap<AccelId, f64> {
-    let mut loads = HashMap::new();
+) -> BTreeMap<AccelId, f64> {
+    let mut loads = BTreeMap::new();
     for (aid, combo) in placement.iter() {
         let total: f64 = combo.jobs().iter().map(|&j| throughput_of(j, *aid)).sum();
         let cap = solo_capability(*aid).max(1e-9);
@@ -191,7 +196,7 @@ mod tests {
             server: 0,
             accel: AccelType::K80,
         }];
-        m.accrue(10.0, &accels, &HashMap::new());
+        m.accrue(10.0, &accels, &BTreeMap::new());
         // 10 s at k80 idle (25 W) = 250 J
         assert!((m.total_joules() - 250.0).abs() < 1e-9);
     }
@@ -209,7 +214,7 @@ mod tests {
         };
         let accels = vec![k80, v100];
         let state_of = |a: AccelId| if a == k80 { PowerState::Low } else { PowerState::Nominal };
-        m.accrue_states(10.0, &accels, &state_of, &HashMap::new(), 360.0);
+        m.accrue_states(10.0, &accels, &state_of, &BTreeMap::new(), 360.0);
         // 10 s idle: k80 low 21.25 W → 212.5 J, v100 nominal 35 W → 350 J
         assert!((m.total_joules() - 562.5).abs() < 1e-9);
         let by = m.joules_by_state();
@@ -226,7 +231,7 @@ mod tests {
             server: 0,
             accel: AccelType::P100,
         }];
-        let mut loads = HashMap::new();
+        let mut loads = BTreeMap::new();
         loads.insert(accels[0], 0.7);
         let mut legacy = EnergyMeter::new();
         legacy.accrue(25.0, &accels, &loads);
@@ -244,9 +249,9 @@ mod tests {
             accel: AccelType::V100,
         }];
         let mut idle = EnergyMeter::new();
-        idle.accrue(10.0, &accels, &HashMap::new());
+        idle.accrue(10.0, &accels, &BTreeMap::new());
         let mut busy = EnergyMeter::new();
-        let mut loads = HashMap::new();
+        let mut loads = BTreeMap::new();
         loads.insert(accels[0], 1.0);
         busy.accrue(10.0, &accels, &loads);
         assert!(busy.total_joules() > idle.total_joules());

@@ -13,7 +13,11 @@ pub mod monitor;
 pub use energy::{power_watts, EnergyMeter};
 pub use monitor::{Measurement, Monitor};
 
-use std::collections::{BTreeSet, HashMap};
+// Ordered containers only on this decision path: placement and job maps
+// are iterated when diffing deltas and accruing energy, and BTreeMap's
+// sorted order keeps those walks — and the f64 accumulation order they
+// feed — identical run to run (the determinism-hash-container lint).
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::power::{state_power_watts, PowerState};
 use crate::workload::{AccelType, Combo, JobId, JobSpec};
@@ -116,13 +120,16 @@ impl ShardSpec {
     }
 }
 
-/// Live placement state of the cluster.
+/// Live placement state of the cluster. Both maps are ordered, so
+/// [`Placement::iter`] and [`Placement::jobs`] walk in sorted key
+/// order — deterministic for every consumer (delta diffs, energy
+/// accrual, snapshots).
 #[derive(Debug, Clone, Default)]
 pub struct Placement {
     /// accelerator instance -> hosted combination.
-    by_accel: HashMap<AccelId, Combo>,
+    by_accel: BTreeMap<AccelId, Combo>,
     /// job -> accelerator instances running it (|set| ≤ D_j).
-    by_job: HashMap<JobId, Vec<AccelId>>,
+    by_job: BTreeMap<JobId, Vec<AccelId>>,
 }
 
 impl Placement {
@@ -300,15 +307,15 @@ pub struct DeltaOutcome {
 pub struct Cluster {
     pub spec: ClusterSpec,
     pub placement: Placement,
-    jobs: HashMap<JobId, JobSpec>,
+    jobs: BTreeMap<JobId, JobSpec>,
     now: f64,
     /// instances currently out of service (AccelDown events).
     down: BTreeSet<AccelId>,
     /// restart penalty: jobs make no progress until this simulated time.
-    stalled_until: HashMap<JobId, f64>,
+    stalled_until: BTreeMap<JobId, f64>,
     /// DVFS states; absent = [`PowerState::Nominal`] (the map stays
     /// sparse so a never-restated cluster costs nothing).
-    power_states: HashMap<AccelId, PowerState>,
+    power_states: BTreeMap<AccelId, PowerState>,
     /// cluster power cap (worst-case watts); deltas breaching it are
     /// rejected transactionally.
     power_cap_w: Option<f64>,
@@ -319,11 +326,11 @@ impl Cluster {
         Self {
             spec,
             placement: Placement::new(),
-            jobs: HashMap::new(),
+            jobs: BTreeMap::new(),
             now: 0.0,
             down: BTreeSet::new(),
-            stalled_until: HashMap::new(),
-            power_states: HashMap::new(),
+            stalled_until: BTreeMap::new(),
+            power_states: BTreeMap::new(),
             power_cap_w: None,
         }
     }
@@ -408,7 +415,7 @@ impl Cluster {
         Self::write_state(&mut self.power_states, a, s);
     }
 
-    fn write_state(states: &mut HashMap<AccelId, PowerState>, a: AccelId, s: PowerState) {
+    fn write_state(states: &mut BTreeMap<AccelId, PowerState>, a: AccelId, s: PowerState) {
         if s == PowerState::Nominal {
             states.remove(&a);
         } else {
@@ -417,12 +424,10 @@ impl Cluster {
     }
 
     /// Every instance in a non-default state, sorted (snapshot capture
-    /// and the daemon's `status` body).
+    /// and the daemon's `status` body; BTreeMap order is already the
+    /// sort order).
     pub fn power_state_entries(&self) -> Vec<(AccelId, PowerState)> {
-        let mut v: Vec<(AccelId, PowerState)> =
-            self.power_states.iter().map(|(a, s)| (*a, *s)).collect();
-        v.sort();
-        v
+        self.power_states.iter().map(|(a, s)| (*a, *s)).collect()
     }
 
     /// Set (or clear) the cluster power cap in worst-case watts.
@@ -446,7 +451,7 @@ impl Cluster {
     fn worst_case_watts_of(
         &self,
         placement: &Placement,
-        states: &HashMap<AccelId, PowerState>,
+        states: &BTreeMap<AccelId, PowerState>,
     ) -> f64 {
         self.spec
             .accels
@@ -601,7 +606,7 @@ impl Cluster {
     fn apply_op(
         &self,
         next: &mut Placement,
-        states: &mut HashMap<AccelId, PowerState>,
+        states: &mut BTreeMap<AccelId, PowerState>,
         op: &PlacementOp,
     ) -> Result<()> {
         let check_target = |accel: AccelId, next: &Placement| -> Result<()> {
@@ -678,10 +683,9 @@ impl Cluster {
         self.jobs.values()
     }
 
+    /// Active job ids in ascending (arrival) order — BTreeMap key order.
     pub fn active_job_ids(&self) -> Vec<JobId> {
-        let mut v: Vec<JobId> = self.jobs.keys().copied().collect();
-        v.sort();
-        v
+        self.jobs.keys().copied().collect()
     }
 
     pub fn n_jobs(&self) -> usize {

@@ -17,7 +17,7 @@
 //! simulator, with catalog history seeding and estimator bootstrap
 //! training.
 
-use std::collections::{BTreeSet, HashSet};
+use std::collections::BTreeSet;
 
 use crate::catalog::{Catalog, EstimateKey, SimilarityIndex};
 use crate::cluster::{
@@ -235,9 +235,9 @@ pub struct GoghScheduler {
     /// incremental path's slot)
     shard_stats: Vec<ShardStats>,
     /// jobs whose round-0 estimates were already produced
-    initialized: HashSet<JobId>,
+    initialized: BTreeSet<JobId>,
     /// live inference jobs (autoscaler + learning-stats attribution)
-    inference_jobs: HashSet<JobId>,
+    inference_jobs: BTreeSet<JobId>,
     /// replica autoscaling events applied on monitor ticks
     scale_ups: u64,
     scale_downs: u64,
@@ -322,8 +322,8 @@ impl GoghScheduler {
             cache: EstimateCache::new(),
             partition: None,
             shard_stats: vec![ShardStats::default(); options.shards.max(1)],
-            initialized: HashSet::new(),
-            inference_jobs: HashSet::new(),
+            initialized: BTreeSet::new(),
+            inference_jobs: BTreeSet::new(),
             scale_ups: 0,
             scale_downs: 0,
             inference_measurements: 0,
@@ -549,6 +549,7 @@ impl GoghScheduler {
 
         let preds: Vec<[f32; 2]> = match self.p1.as_mut() {
             Some(p1) => {
+                // gogh-lint: allow(determinism-wall-clock, p1_seconds is a latency statistic; nothing branches on it)
                 let t0 = std::time::Instant::now();
                 let preds = p1.predict(&rows)?;
                 self.p1_seconds += t0.elapsed().as_secs_f64();
@@ -711,8 +712,9 @@ struct ShardPartition {
     spec: Vec<AccelId>,
     p: usize,
     shards: Vec<ShardSpec>,
-    /// per-shard membership sets for O(1) `within_shard` checks
-    sets: Vec<HashSet<AccelId>>,
+    /// per-shard membership sets for fast `within_shard` checks
+    /// (ordered set: iteration order must not depend on hashing)
+    sets: Vec<BTreeSet<AccelId>>,
 }
 
 /// Bounded local re-solve for one arrival over one instance pool: only
@@ -727,7 +729,7 @@ fn local_arrival_solve(
     cache: Option<&EstimateCache>,
     cluster: &Cluster,
     j1: JobId,
-    shard: Option<(&ShardSpec, &HashSet<AccelId>)>,
+    shard: Option<(&ShardSpec, &BTreeSet<AccelId>)>,
     neighborhood: usize,
     ocfg: &crate::config::OptimizerConfig,
     power: PowerKnobs,
@@ -815,6 +817,7 @@ fn local_arrival_solve(
         node_selection: ocfg.node_selection,
         ..Default::default()
     };
+    // gogh-lint: allow(determinism-wall-clock, shard solve latency statistic; the solve itself runs under a node budget)
     let t0 = std::time::Instant::now();
     let sol = solve_problem1(&input, &bnb);
     let seconds = t0.elapsed().as_secs_f64();
@@ -1027,7 +1030,7 @@ impl GoghScheduler {
         }
         let knobs = self.power_knobs(cluster.now());
         let bonus = self.options.optimizer.throughput_bonus;
-        let touched: HashSet<AccelId> = delta
+        let touched: BTreeSet<AccelId> = delta
             .ops
             .iter()
             .flat_map(|op| match *op {

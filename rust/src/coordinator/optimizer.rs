@@ -3,7 +3,7 @@
 //! (type-level) solution onto concrete accelerator instances with
 //! migration-minimizing stability.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::{AccelId, Cluster, Placement, PlacementDelta};
 use crate::config::OptimizerConfig;
@@ -95,6 +95,7 @@ impl Optimizer {
             node_selection: self.cfg.node_selection,
             ..Default::default()
         };
+        // gogh-lint: allow(determinism-wall-clock, solve_seconds is a reporting statistic; nothing branches on it)
         let t0 = std::time::Instant::now();
         let sol = solve_problem1(&input, &bnb);
         self.solve_seconds += t0.elapsed().as_secs_f64();
@@ -114,14 +115,14 @@ impl Optimizer {
 fn bind_instances(cluster: &Cluster, sol: &AllocationSolution) -> Result<Placement> {
     let mut placement = Placement::new();
     // in-service instances per type, stable order
-    let mut by_type: HashMap<AccelType, Vec<AccelId>> = HashMap::new();
+    let mut by_type: BTreeMap<AccelType, Vec<AccelId>> = BTreeMap::new();
     for a in cluster.available_accels() {
         by_type.entry(a.accel).or_default().push(a);
     }
     for v in by_type.values_mut() {
         v.sort();
     }
-    let mut used: std::collections::HashSet<AccelId> = Default::default();
+    let mut used: BTreeSet<AccelId> = BTreeSet::new();
 
     // pass 1: keep combos where they already run
     let mut remaining: Vec<(AccelType, Combo, u32)> = vec![];
@@ -177,15 +178,15 @@ pub(crate) fn bind_pool(
     pool: &[AccelId],
     sol: &AllocationSolution,
 ) -> Option<PlacementDelta> {
-    let mut by_type: HashMap<AccelType, Vec<AccelId>> = HashMap::new();
+    let mut by_type: BTreeMap<AccelType, Vec<AccelId>> = BTreeMap::new();
     for a in pool {
         by_type.entry(a.accel).or_default().push(*a);
     }
     for v in by_type.values_mut() {
         v.sort();
     }
-    let mut target: HashMap<AccelId, Combo> = HashMap::new();
-    let mut used: HashSet<AccelId> = HashSet::new();
+    let mut target: BTreeMap<AccelId, Combo> = BTreeMap::new();
+    let mut used: BTreeSet<AccelId> = BTreeSet::new();
     // pass 1: keep combos where they already run
     let mut remaining: Vec<(AccelType, Combo, u32)> = vec![];
     for &(a, combo, mult) in &sol.assignments {

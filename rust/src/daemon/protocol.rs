@@ -17,12 +17,26 @@ use crate::workload::{InferenceSpec, JobId, JobSpec, ModelFamily, FAMILIES};
 /// gracefully).
 pub const PROTOCOL_VERSION: u32 = 1;
 
+/// The closed set of wire error codes (docs/PROTOCOL.md §Errors).
+/// Clients match on these, so adding one is a protocol change: extend
+/// this list and the doc together — `gogh-lint` (docs/LINTS.md,
+/// `protocol-error-code`) rejects any `ProtoError::new` literal under
+/// `daemon/` that is not in this set.
+pub const ERROR_CODES: &[&str] = &[
+    "bad_request",
+    "unknown_cmd",
+    "unknown_job",
+    "draining",
+    "unsupported_version",
+    "internal",
+];
+
 /// A protocol-level failure: one of the closed set of error codes plus
 /// a human-readable message (the `error` object of the envelope).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ProtoError {
-    /// `bad_request` | `unknown_cmd` | `unknown_job` | `draining` |
-    /// `unsupported_version` | `internal`
+    /// One of [`ERROR_CODES`]: `bad_request` | `unknown_cmd` |
+    /// `unknown_job` | `draining` | `unsupported_version` | `internal`
     pub code: &'static str,
     pub message: String,
 }

@@ -261,8 +261,16 @@ pub fn serve(opts: DaemonOptions) -> Result<()> {
     let mut draining = false;
     let mut base_sim_t = 0.0;
     if let Some(path) = opts.state.as_ref().filter(|p| p.exists() && !opts.fresh) {
-        let snap = Snapshot::load(path)?;
-        snap.restore_into(&mut core, &mut scheduler)?;
+        // a corrupt state file must refuse startup with a named error,
+        // never panic or silently start empty (pinned by the
+        // garbage-snapshot test in rust/tests/daemon.rs); --fresh is
+        // the explicit way to discard it
+        let snap = Snapshot::load(path).with_context(|| {
+            format!("state snapshot {} is unreadable (--fresh discards it)", path.display())
+        })?;
+        snap.restore_into(&mut core, &mut scheduler).with_context(|| {
+            format!("state snapshot {} failed to restore (--fresh discards it)", path.display())
+        })?;
         next_job_id = snap.next_job_id;
         draining = snap.draining;
         base_sim_t = snap.now_s;

@@ -21,7 +21,7 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 
-use crate::cluster::energy::{placement_loads, EnergyMeter};
+use crate::cluster::energy::EnergyMeter;
 use crate::cluster::{AccelId, Cluster, ClusterSpec, Monitor};
 use crate::coordinator::{ClusterEvent, Scheduler};
 use crate::metrics::{LatencyHistogram, RunReport};
@@ -562,34 +562,36 @@ impl GoghCore {
         // ground-truth throughput per job; inference jobs additionally
         // keep their per-replica rates for the M/M/c latency model
         let oracle = self.monitor.oracle().clone();
+        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
         let mut per_job: HashMap<JobId, f64> = HashMap::new();
         let mut replica_mus: HashMap<JobId, Vec<f64>> = HashMap::new();
+        // per-instance relative loads, accumulated in the same pass
+        // (same definition as `energy::placement_loads`: *un-scaled*
+        // throughput over the type's solo capability — DVFS changes
+        // power through the state curve, not the load argument)
+        let mut loads: std::collections::BTreeMap<AccelId, f64> = Default::default();
         for (aid, combo) in self.cluster.placement.iter() {
             // ground truth scales with the host's DVFS frequency
             let freq = self.cluster.power_state(*aid).freq_scalar();
+            let mut raw_total = 0.0;
             for j in combo.jobs() {
-                let spec = self.cluster.job(j).expect("placed job registered");
+                let spec = self
+                    .cluster
+                    .job(j)
+                    .ok_or_else(|| anyhow::anyhow!("placed job {j} is not registered"))?;
                 let lookup = |id: JobId| self.cluster.job(id).cloned();
-                let t = freq * oracle.throughput(spec, combo, aid.accel, &lookup);
+                let raw = oracle.throughput(spec, combo, aid.accel, &lookup);
+                raw_total += raw;
+                let t = freq * raw;
                 *per_job.entry(j).or_default() += t;
                 if spec.is_inference() {
                     replica_mus.entry(j).or_default().push(serving::service_rate(t));
                 }
             }
+            loads.insert(*aid, (raw_total / solo_cap(aid.accel).max(1e-9)).clamp(0.0, 1.0));
         }
 
         // energy: busy = only instances hosting work; total = in-service
-        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
-        let loads = placement_loads(
-            &self.cluster.placement,
-            &|j, aid| {
-                let spec = self.cluster.job(j).unwrap();
-                let combo = self.cluster.placement.combo_on(aid).unwrap();
-                let lookup = |id: JobId| self.cluster.job(id).cloned();
-                oracle.throughput(spec, combo, aid.accel, &lookup)
-            },
-            &|aid| solo_cap(aid.accel),
-        );
         let busy: Vec<AccelId> = loads.keys().copied().collect();
         let in_service = self.cluster.available_accels();
         let gco2 = self.carbon.map_or(0.0, |c| c.intensity(t0));
@@ -624,7 +626,10 @@ impl GoghCore {
             let achieved = per_job.get(&id).copied().unwrap_or(0.0);
             let stalled_until = self.cluster.stalled_until(id);
             let run_dt = (t1 - stalled_until.max(t0)).clamp(0.0, dt);
-            let spec = self.cluster.job(id).unwrap();
+            let spec = self
+                .cluster
+                .job(id)
+                .ok_or_else(|| anyhow::anyhow!("active job {id} has no spec"))?;
             if let Some(inf) = spec.inference {
                 // serving capacity over the interval, de-rated by the
                 // stalled fraction (a restarting replica serves nothing);
@@ -647,7 +652,10 @@ impl GoghCore {
                 self.state.inf_hist.record(lat, dt);
                 self.report.replica_seconds += mus.len() as f64 * dt;
                 let placed = !mus.is_empty();
-                let j = self.cluster.job_mut(id).unwrap();
+                let j = self
+                    .cluster
+                    .job_mut(id)
+                    .ok_or_else(|| anyhow::anyhow!("active job {id} vanished mid-interval"))?;
                 if placed {
                     j.work -= run_dt;
                 }
@@ -661,7 +669,10 @@ impl GoghCore {
                     self.report.slo_deficit += deficit * dt;
                     slo_violated = true;
                 }
-                let j = self.cluster.job_mut(id).unwrap();
+                let j = self
+                    .cluster
+                    .job_mut(id)
+                    .ok_or_else(|| anyhow::anyhow!("active job {id} vanished mid-interval"))?;
                 j.work -= achieved * run_dt;
                 if j.work <= 0.0 {
                     completed.push(id);

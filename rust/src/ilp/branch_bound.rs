@@ -188,6 +188,7 @@ impl Frontier {
 
 /// Solve `model` to integrality.
 pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
+    // gogh-lint: allow(determinism-wall-clock, time_limit_s anytime cutoff is the documented config escape hatch; node budgets are the deterministic default)
     let start = Instant::now();
     let min_sense = model.obj_sense == ObjSense::Minimize;
     // Internally work with min-sense objective values.

@@ -31,7 +31,7 @@
 //! [`crate::workload::serving::effective_min_throughput`]. The same
 //! soft-slack machinery covers transient latency infeasibility.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::branch_bound::{solve_ilp, BnbConfig, BnbResult, BnbStatus};
 use super::model::{Model, ObjSense, Sense, VarId, VarKind};
@@ -43,7 +43,7 @@ pub struct Problem1Input<'a> {
     /// Active jobs 𝒥.
     pub jobs: &'a [JobSpec],
     /// Instances available per accelerator type.
-    pub accel_counts: &'a HashMap<AccelType, u32>,
+    pub accel_counts: &'a BTreeMap<AccelType, u32>,
     /// Estimated (or measured) normalized throughput T̃^c_{a,j}.
     pub throughput: &'a dyn Fn(AccelType, JobId, &Combo) -> f64,
     /// Solo capability of type `a` (denominator of the relative load fed
@@ -99,8 +99,8 @@ pub struct AllocationSolution {
 /// [`Problem1Input::accel_counts`] — the pool-scoped problem build used
 /// by the shard workers, the incremental arrival path and the full
 /// re-solve (whose pool is the whole in-service cluster).
-pub fn pool_accel_counts(pool: &[crate::cluster::AccelId]) -> HashMap<AccelType, u32> {
-    let mut counts: HashMap<AccelType, u32> = HashMap::new();
+pub fn pool_accel_counts(pool: &[crate::cluster::AccelId]) -> BTreeMap<AccelType, u32> {
+    let mut counts: BTreeMap<AccelType, u32> = BTreeMap::new();
     for a in pool {
         *counts.entry(a.accel).or_default() += 1;
     }
@@ -143,7 +143,7 @@ pub fn candidate_combos(
         }
     }
     scored.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
-    let mut per_job: HashMap<JobId, usize> = HashMap::new();
+    let mut per_job: BTreeMap<JobId, usize> = BTreeMap::new();
     for (_, c) in scored {
         let js = c.jobs();
         if js.iter().all(|j| per_job.get(j).copied().unwrap_or(0) < max_pairs_per_job) {
@@ -164,7 +164,7 @@ pub fn build_problem1(
 ) -> (
     Model,
     Vec<(AccelType, Combo, VarId)>,
-    HashMap<JobId, (Option<VarId>, Option<VarId>)>,
+    BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
 ) {
     let combos = candidate_combos(input.jobs, input.throughput, input.max_pairs_per_job);
     let mut model = Model::new(ObjSense::Minimize);
@@ -199,7 +199,7 @@ pub fn build_problem1(
     }
 
     // Per-job slack (soft mode).
-    let mut slacks: HashMap<JobId, (Option<VarId>, Option<VarId>)> = HashMap::new();
+    let mut slacks: BTreeMap<JobId, (Option<VarId>, Option<VarId>)> = BTreeMap::new();
     for j in input.jobs {
         let (mut cover_s, mut thr_s) = (None, None);
         if let Some(p) = input.slack_penalty {
@@ -305,7 +305,7 @@ pub fn solve_problem1(input: &Problem1Input, bnb: &BnbConfig) -> AllocationSolut
 fn decode(
     r: &BnbResult,
     cols: &[(AccelType, Combo, VarId)],
-    slacks: &HashMap<JobId, (Option<VarId>, Option<VarId>)>,
+    slacks: &BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
 ) -> AllocationSolution {
     let mut assignments = vec![];
     let mut violated = vec![];
@@ -373,7 +373,7 @@ mod tests {
     fn oracle_input<'a>(
         jobs: &'a [JobSpec],
         oracle: &'a ThroughputOracle,
-        counts: &'a HashMap<AccelType, u32>,
+        counts: &'a BTreeMap<AccelType, u32>,
         thr: &'a dyn Fn(AccelType, JobId, &Combo) -> f64,
         cap: &'a dyn Fn(AccelType) -> f64,
     ) -> Problem1Input<'a> {
@@ -403,11 +403,11 @@ mod tests {
     ) -> (
         Vec<JobSpec>,
         ThroughputOracle,
-        HashMap<AccelType, u32>,
+        BTreeMap<AccelType, u32>,
     ) {
         let oracle = ThroughputOracle::new(11);
         let jobs = mk_jobs(n, &oracle);
-        let counts: HashMap<AccelType, u32> =
+        let counts: BTreeMap<AccelType, u32> =
             ACCEL_TYPES.iter().map(|&a| (a, per_type)).collect();
         (jobs, oracle, counts)
     }
@@ -458,7 +458,7 @@ mod tests {
             j.min_throughput = 0.95; // nearly the global max: only feasible on the best GPU solo
             j.distributability = 1;
         }
-        let mut counts = HashMap::new();
+        let mut counts = BTreeMap::new();
         counts.insert(AccelType::K80, 4u32);
         let jobs_c = jobs.clone();
         let oracle_c = oracle.clone();
@@ -498,7 +498,7 @@ mod tests {
         let oracle = ThroughputOracle::new(11);
         let mut jobs = mk_jobs(1, &oracle);
         jobs[0].min_throughput = 0.05 * oracle.solo(&jobs[0], AccelType::K80);
-        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 1)).collect();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 1)).collect();
         let jobs_c = jobs.clone();
         let oracle_c = oracle.clone();
         let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
@@ -537,7 +537,7 @@ mod tests {
             .fold(0.0f64, f64::max);
         jobs[0].min_throughput = 1.5 * best;
         jobs[0].distributability = 2;
-        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
         let jobs_c = jobs.clone();
         let oracle_c = oracle.clone();
         let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
@@ -570,7 +570,7 @@ mod tests {
         let oracle = ThroughputOracle::new(11);
         let mut jobs = mk_jobs(1, &oracle);
         jobs[0].min_throughput = 0.05 * oracle.solo(&jobs[0], AccelType::K80);
-        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 1)).collect();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 1)).collect();
         let jobs_c = jobs.clone();
         let oracle_c = oracle.clone();
         let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
@@ -619,7 +619,7 @@ mod tests {
             diurnal_phase_s: 0.0,
             latency_slo_s: 10.0 / lam.max(1e-9),
         });
-        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 3)).collect();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 3)).collect();
         let jobs_c = jobs.clone();
         let oracle_c = oracle.clone();
         let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {

@@ -50,6 +50,12 @@
 //! the greedy warm start ([`baselines::greedy::greedy_incumbent`]);
 //! `benches/ilp_scaling.rs` measures both.
 
+// The scheduler must never reach for raw pointers: the shard fan-out is
+// scoped threads + RwLock, the runtime talks to PJRT through the xla
+// crate's safe surface, and gogh-lint (docs/LINTS.md) polices the rest
+// of the project invariants this attribute can't reach.
+#![deny(unsafe_code)]
+
 pub mod baselines;
 pub mod catalog;
 pub mod cluster;
@@ -58,6 +64,7 @@ pub mod coordinator;
 pub mod daemon;
 pub mod engine;
 pub mod ilp;
+pub mod lint;
 pub mod metrics;
 pub mod power;
 pub mod runtime;

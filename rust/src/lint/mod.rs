@@ -1,0 +1,98 @@
+#![doc = include_str!("../../../docs/LINTS.md")]
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+pub mod rules;
+pub mod scanner;
+
+pub use rules::{check_source, Rule, Violation, RULES};
+
+/// Recursively lint every `.rs` file under `root`, in sorted path order
+/// (deterministic output, like everything else in this repo). `root`
+/// may be a single file.
+pub fn check_tree(root: &Path) -> Result<Vec<Violation>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", f.display()))?;
+        out.extend(check_source(&f.to_string_lossy(), &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let meta = fs::metadata(path)
+        .map_err(|e| anyhow::anyhow!("stat {}: {e}", path.display()))?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let entries = fs::read_dir(path)
+        .map_err(|e| anyhow::anyhow!("listing {}: {e}", path.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("listing {}: {e}", path.display()))?;
+        collect_rs(&entry.path(), out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_path(rel: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+    }
+
+    /// The real gate, also enforced by the CI `gogh-lint` job: the
+    /// shipped tree must be violation-free.
+    #[test]
+    fn shipped_tree_is_clean() {
+        let got = check_tree(&repo_path("rust/src")).unwrap();
+        assert!(
+            got.is_empty(),
+            "gogh-lint violations in rust/src:\n{}",
+            got.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    /// The committed bad-fixture tree must trip every rule, each with
+    /// the right rule name, file, and a plausible line.
+    #[test]
+    fn fixture_tree_trips_every_rule() {
+        let got = check_tree(&repo_path("rust/lint-fixtures")).unwrap();
+        for rule in RULES {
+            let hits: Vec<&Violation> =
+                got.iter().filter(|v| v.rule == rule.name).collect();
+            assert!(!hits.is_empty(), "no fixture violation for rule {}", rule.name);
+            for v in hits {
+                assert!(v.file.ends_with(".rs") && v.line >= 1, "{v}");
+            }
+        }
+        // and allow-listed fixture code passes: the `allowed.rs` fixture
+        // exercises a valid suppression and must produce no findings
+        assert!(
+            !got.iter().any(|v| v.file.ends_with("allowed.rs")),
+            "allow-listed fixture flagged: {got:?}"
+        );
+    }
+
+    #[test]
+    fn check_tree_accepts_a_single_file() {
+        let p = repo_path("rust/src/util/rng.rs");
+        assert!(check_tree(&p).unwrap().is_empty());
+    }
+
+    #[test]
+    fn check_tree_errors_on_missing_path() {
+        assert!(check_tree(Path::new("/no/such/dir")).is_err());
+    }
+}

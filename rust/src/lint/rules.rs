@@ -1,0 +1,410 @@
+//! The project-invariant rules `gogh-lint` enforces and the per-file
+//! checker. Every rule is documented with its rationale in
+//! `docs/LINTS.md` (CI cross-checks that the table below and the doc
+//! stay in sync).
+
+use std::fmt;
+
+use crate::lint::scanner::{parse_allows, scrub, test_fence, Line};
+
+/// A lint rule: stable name (used in `allow(<rule>, …)` suppressions
+/// and in docs/LINTS.md) plus a one-line summary.
+pub struct Rule {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// Every rule the pass knows. Names are load-bearing: suppressions
+/// reference them and `.github/scripts/docs_freshness.py` fails CI if
+/// any is missing from docs/LINTS.md.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "determinism-wall-clock",
+        summary: "no Instant::now / SystemTime in decision-path modules \
+                  (ilp/, coordinator/, cluster/, baselines/)",
+    },
+    Rule {
+        name: "determinism-hash-container",
+        summary: "no HashMap / HashSet in decision-path modules: iteration \
+                  order is per-process random and leaks into placements",
+    },
+    Rule {
+        name: "panic-unwrap",
+        summary: "no .unwrap() / .expect() in non-test daemon/, engine/, \
+                  bin/ code — return Result or a protocol error envelope",
+    },
+    Rule {
+        name: "panic-macro",
+        summary: "no panic!/unreachable!/todo!/unimplemented! in non-test \
+                  daemon/, engine/, bin/ code",
+    },
+    Rule {
+        name: "panic-slice-index",
+        summary: "no literal-index slicing (v[0]) in non-test daemon/, \
+                  engine/, bin/ code — use .get() / .first()",
+    },
+    Rule {
+        name: "protocol-error-code",
+        summary: "ProtoError codes under daemon/ must come from the closed \
+                  set documented in daemon/protocol.rs",
+    },
+    Rule {
+        name: "rng-source",
+        summary: "all randomness flows through util/rng.rs seeded streams; \
+                  no thread_rng / RandomState / entropy sources",
+    },
+    Rule {
+        name: "bad-suppression",
+        summary: "a gogh-lint allow() must name a known rule and carry a \
+                  non-empty reason",
+    },
+];
+
+/// One finding: `file:line: rule: message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Module zones, derived from path components so the same scoping works
+/// for `rust/src/` and for the committed bad-fixture tree.
+struct Zones {
+    decision: bool,
+    panic_free: bool,
+    daemon: bool,
+    rng_exempt: bool,
+}
+
+fn zones(path: &str) -> Zones {
+    let p = path.replace('\\', "/");
+    let comps: Vec<&str> = p.split('/').collect();
+    let has = |name: &str| comps.iter().any(|c| *c == name);
+    Zones {
+        decision: has("ilp") || has("coordinator") || has("cluster") || has("baselines"),
+        // main.rs is the `gogh` CLI's crate root — same zone as bin/
+        panic_free: has("daemon") || has("engine") || has("bin") || p.ends_with("main.rs"),
+        daemon: has("daemon"),
+        rng_exempt: p.ends_with("util/rng.rs"),
+    }
+}
+
+/// Wall-clock / hash-container / panic / RNG token patterns. A pattern
+/// starting with an identifier char only matches on an identifier
+/// boundary (`operand::` must not trip `rand::`).
+fn find_token(code: &str, pat: &str) -> bool {
+    let pat_ident = pat.as_bytes().first().is_some_and(|c| c.is_ascii_alphanumeric());
+    let mut from = 0;
+    while let Some(i) = code[from..].find(pat) {
+        let at = from + i;
+        let boundary = !pat_ident
+            || at == 0
+            || !{
+                let prev = code.as_bytes()[at - 1];
+                prev.is_ascii_alphanumeric() || prev == b'_'
+            };
+        if boundary {
+            return true;
+        }
+        from = at + pat.len();
+    }
+    false
+}
+
+/// Literal-index slicing: `ident[<digits>]` (also after `)` / `]`).
+fn has_literal_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    for i in 0..b.len() {
+        if b[i] != b'[' || i == 0 {
+            continue;
+        }
+        let prev = b[i - 1];
+        let indexable =
+            prev.is_ascii_alphanumeric() || prev == b'_' || prev == b')' || prev == b']';
+        if !indexable {
+            continue;
+        }
+        let digits = b[i + 1..].iter().take_while(|c| c.is_ascii_digit()).count();
+        if digits > 0 && b.get(i + 1 + digits) == Some(&b']') {
+            return true;
+        }
+    }
+    false
+}
+
+/// Check one file. `path` is used both for zone scoping and reporting.
+pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
+    let lines = scrub(src);
+    let allows = parse_allows(&lines);
+    let fence = test_fence(&lines).unwrap_or(usize::MAX);
+    let z = zones(path);
+    let mut out: Vec<Violation> = Vec::new();
+
+    // the suppression mechanism polices itself
+    for a in &allows {
+        if a.directive_line >= fence {
+            continue;
+        }
+        if a.rule.is_empty() || a.reason.is_none() {
+            out.push(Violation {
+                file: path.to_string(),
+                line: a.directive_line,
+                rule: "bad-suppression",
+                message: "suppression requires a rule and a reason: \
+                          gogh-lint: allow(<rule>, <reason>)"
+                    .into(),
+            });
+        } else if !RULES.iter().any(|r| r.name == a.rule) {
+            out.push(Violation {
+                file: path.to_string(),
+                line: a.directive_line,
+                rule: "bad-suppression",
+                message: format!("unknown rule {:?} in suppression", a.rule),
+            });
+        }
+    }
+    let allowed = |line: usize, rule: &str| {
+        allows
+            .iter()
+            .any(|a| a.target_line == line && a.rule == rule && a.reason.is_some())
+    };
+    let mut push = |line: usize, rule: &'static str, message: String, out: &mut Vec<Violation>| {
+        if line < fence && !allowed(line, rule) {
+            out.push(Violation {
+                file: path.to_string(),
+                line,
+                rule,
+                message,
+            });
+        }
+    };
+
+    for (idx, Line { code, .. }) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        if lineno >= fence {
+            break;
+        }
+        if z.decision {
+            for pat in ["Instant::now", "SystemTime"] {
+                if find_token(code, pat) {
+                    let msg = format!(
+                        "{pat} in a decision-path module: wall-clock reads make \
+                         scheduling non-reproducible (use deterministic budgets, \
+                         or allow-list a timing-only statistic)"
+                    );
+                    push(lineno, "determinism-wall-clock", msg, &mut out);
+                }
+            }
+            for pat in ["HashMap", "HashSet"] {
+                if find_token(code, pat) {
+                    let msg = format!(
+                        "{pat} in a decision-path module: iteration order is \
+                         per-process random (use BTreeMap/BTreeSet, or \
+                         allow-list a lookup-only map with a reason)"
+                    );
+                    push(lineno, "determinism-hash-container", msg, &mut out);
+                }
+            }
+        }
+        if z.panic_free {
+            for pat in [".unwrap()", ".expect("] {
+                if code.contains(pat) {
+                    let msg = format!(
+                        "{pat} in a panic-free zone: a panicking daemon/engine \
+                         loses the cluster — return Result or an error envelope"
+                    );
+                    push(lineno, "panic-unwrap", msg, &mut out);
+                }
+            }
+            for pat in ["panic!(", "unreachable!(", "todo!(", "unimplemented!("] {
+                if find_token(code, pat) {
+                    let msg = format!("{pat}…) in a panic-free zone");
+                    push(lineno, "panic-macro", msg, &mut out);
+                }
+            }
+            if has_literal_index(code) {
+                push(
+                    lineno,
+                    "panic-slice-index",
+                    "literal index in a panic-free zone: out-of-bounds panics \
+                     instead of returning an error (use .get())"
+                        .into(),
+                    &mut out,
+                );
+            }
+        }
+        if !z.rng_exempt {
+            for pat in ["thread_rng", "from_entropy", "RandomState", "rand::", "getrandom"] {
+                if find_token(code, pat) {
+                    let msg = format!(
+                        "{pat} bypasses util/rng.rs: experiments must be exactly \
+                         reproducible from their seed"
+                    );
+                    push(lineno, "rng-source", msg, &mut out);
+                }
+            }
+        }
+    }
+
+    if z.daemon {
+        check_protocol_codes(path, src, fence, &allowed, &mut out);
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Error-code literals passed to `ProtoError::new` must stay inside the
+/// closed set the wire protocol documents ([`crate::daemon::protocol`]):
+/// clients match on codes, so a new code is a protocol change that must
+/// land in `ERROR_CODES` + docs/PROTOCOL.md first. Scans the *raw*
+/// source (the argument is a string literal, which scrubbing blanks).
+fn check_protocol_codes(
+    path: &str,
+    src: &str,
+    fence: usize,
+    allowed: &dyn Fn(usize, &str) -> bool,
+    out: &mut Vec<Violation>,
+) {
+    const NEEDLE: &str = "ProtoError::new(";
+    let mut from = 0;
+    while let Some(i) = src[from..].find(NEEDLE) {
+        let at = from + i;
+        from = at + NEEDLE.len();
+        let lineno = 1 + src[..at].bytes().filter(|&b| b == b'\n').count();
+        if lineno >= fence {
+            continue;
+        }
+        let rest = src[at + NEEDLE.len()..].trim_start();
+        let code = rest
+            .strip_prefix('"')
+            .and_then(|r| r.split_once('"'))
+            .map(|(code, _)| code);
+        let ok = match code {
+            Some(c) => crate::daemon::protocol::ERROR_CODES.contains(&c),
+            // non-literal argument: cannot be verified against the set
+            None => false,
+        };
+        if !ok && !allowed(lineno, "protocol-error-code") {
+            let what = code.map_or("<non-literal>".to_string(), |c| format!("{c:?}"));
+            out.push(Violation {
+                file: path.to_string(),
+                line: lineno,
+                rule: "protocol-error-code",
+                message: format!(
+                    "error code {what} is outside the closed protocol set \
+                     {:?} (extend daemon/protocol.rs ERROR_CODES + \
+                     docs/PROTOCOL.md first)",
+                    crate::daemon::protocol::ERROR_CODES
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(path: &str, src: &str) -> Vec<(&'static str, usize)> {
+        check_source(path, src).into_iter().map(|v| (v.rule, v.line)).collect()
+    }
+
+    #[test]
+    fn wall_clock_flagged_only_in_decision_zone() {
+        let src = "fn f() { let t = std::time::Instant::now(); }";
+        assert_eq!(rules_of("rust/src/ilp/x.rs", src), vec![("determinism-wall-clock", 1)]);
+        assert_eq!(rules_of("rust/src/runtime/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn hash_container_flagged_with_line() {
+        let src = "use std::collections::BTreeMap;\nfn f(m: &HashMap<u32, f64>) {}\n";
+        assert_eq!(
+            rules_of("rust/src/cluster/x.rs", src),
+            vec![("determinism-hash-container", 2)]
+        );
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses() {
+        let src = "// gogh-lint: allow(determinism-wall-clock, timing stat only)\n\
+                   let t = Instant::now();\n";
+        assert_eq!(rules_of("rust/src/coordinator/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_an_error_and_does_not_suppress() {
+        let src = "// gogh-lint: allow(determinism-wall-clock)\nlet t = Instant::now();\n";
+        assert_eq!(
+            rules_of("rust/src/coordinator/x.rs", src),
+            vec![("bad-suppression", 1), ("determinism-wall-clock", 2)]
+        );
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_an_error() {
+        let src = "// gogh-lint: allow(no-such-rule, because)\nx();\n";
+        assert_eq!(rules_of("rust/src/engine/x.rs", src), vec![("bad-suppression", 1)]);
+    }
+
+    #[test]
+    fn panic_rules_fire_in_zone_and_respect_test_fence() {
+        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod t { fn g() { y.unwrap(); } }\n";
+        assert_eq!(rules_of("rust/src/daemon/x.rs", src), vec![("panic-unwrap", 1)]);
+        assert_eq!(rules_of("rust/src/catalog/x.rs", src), vec![]);
+        let src = "fn f() { unreachable!(\"no\"); }";
+        assert_eq!(rules_of("rust/src/bin/x.rs", src), vec![("panic-macro", 1)]);
+        assert_eq!(rules_of("rust/src/main.rs", "fn f() { v.expect(\"x\"); }"),
+            vec![("panic-unwrap", 1)]);
+    }
+
+    #[test]
+    fn slice_index_literal_only() {
+        assert_eq!(rules_of("rust/src/engine/x.rs", "let a = xs[0];"),
+            vec![("panic-slice-index", 1)]);
+        for benign in ["let a = xs[i];", "let a = &xs[1..n];", "#[cfg(feature)]", "[0u8; 4];"] {
+            assert_eq!(rules_of("rust/src/engine/x.rs", benign), vec![], "{benign}");
+        }
+    }
+
+    #[test]
+    fn unwrap_or_variants_are_fine() {
+        for benign in ["x.unwrap_or(3);", "x.unwrap_or_else(f);", "x.unwrap_or_default();"] {
+            assert_eq!(rules_of("rust/src/daemon/x.rs", benign), vec![], "{benign}");
+        }
+    }
+
+    #[test]
+    fn rng_rule_is_global_except_rng_module() {
+        let src = "let r = rand::thread_rng();";
+        let got = rules_of("rust/src/workload/x.rs", src);
+        assert!(got.iter().all(|(r, _)| *r == "rng-source") && !got.is_empty());
+        assert_eq!(rules_of("rust/src/util/rng.rs", src), vec![]);
+        // identifier boundary: `operand::` is not `rand::`
+        assert_eq!(rules_of("rust/src/workload/x.rs", "operand::f();"), vec![]);
+    }
+
+    #[test]
+    fn strings_and_comments_never_match() {
+        let src = "// HashMap Instant::now\nlet s = \"thread_rng .unwrap()\";\n";
+        assert_eq!(rules_of("rust/src/coordinator/x.rs", src), vec![]);
+        assert_eq!(rules_of("rust/src/daemon/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn protocol_codes_checked_across_wrapped_lines() {
+        let good = "fn f() { Err(ProtoError::new(\n    \"draining\",\n    \"x\")) }";
+        assert_eq!(rules_of("rust/src/daemon/x.rs", good), vec![]);
+        let bad = "fn f() { Err(ProtoError::new(\n    \"brand_new_code\",\n    \"x\")) }";
+        assert_eq!(rules_of("rust/src/daemon/x.rs", bad), vec![("protocol-error-code", 1)]);
+    }
+}

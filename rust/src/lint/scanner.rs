@@ -1,0 +1,313 @@
+//! Source preparation for the lint pass: a small lexical scrubber that
+//! blanks string literals and comments (so rule patterns never match
+//! inside data or prose), the `// gogh-lint: allow(<rule>, <reason>)`
+//! suppression parser, and the `#[cfg(test)]` fence.
+//!
+//! The scrubber is deliberately lexical, not a parser: it tracks just
+//! enough state (line comments, nested block comments, string / raw
+//! string / char literals) to know which bytes of a line are *code*.
+//! Rule patterns are then matched against the scrubbed text only, which
+//! is also what lets the lint scan its own sources: the pattern tables
+//! in `rules.rs` live inside string literals and scrub to blanks.
+
+/// One source line after scrubbing, plus the raw text the suppression
+/// parser reads (directives live in comments, which scrubbing removes).
+pub struct Line<'a> {
+    pub raw: &'a str,
+    /// `raw` with comments and string/char literal *contents* replaced
+    /// by spaces (delimiters too) — byte positions are preserved.
+    pub code: String,
+    /// Byte offset where a code-level `//` comment starts on this line,
+    /// if any. Suppression directives are only honored there — never in
+    /// string literals or block comments.
+    pub comment_start: Option<usize>,
+}
+
+/// A parsed `gogh-lint: allow(...)` directive.
+pub struct Allow<'a> {
+    /// 1-based line the directive suppresses (the directive's own line
+    /// for trailing comments, the following line for whole-line ones).
+    pub target_line: usize,
+    /// 1-based line the directive itself sits on (for error reporting).
+    pub directive_line: usize,
+    pub rule: &'a str,
+    /// `None` when the reason is missing/empty — itself a lint error.
+    pub reason: Option<&'a str>,
+}
+
+/// Scrub a whole file into per-line code views. Handles `//` comments,
+/// nested `/* */` comments, `"…"` strings with escapes, `r"…"` /
+/// `r#"…"#` raw strings (including multi-line bodies) and char
+/// literals; lifetimes (`'a`) are left untouched.
+pub fn scrub(src: &str) -> Vec<Line<'_>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        Block(u32),     // nesting depth
+        Str,            // inside "…"
+        RawStr(usize),  // inside r#…"…"#… with N hashes
+    }
+    let mut st = St::Code;
+    let mut out = Vec::new();
+    for raw in src.lines() {
+        let b = raw.as_bytes();
+        let mut code: Vec<u8> = vec![b' '; b.len()];
+        let mut comment_start = None;
+        let mut i = 0;
+        while i < b.len() {
+            match st {
+                St::Code => {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        comment_start = Some(i);
+                        break; // rest of line is a comment
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        st = St::Block(1);
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        st = St::Str;
+                        i += 1;
+                    } else if b[i] == b'r'
+                        && !prev_is_ident(&code, i)
+                        && raw_str_hashes(&b[i + 1..]).is_some()
+                    {
+                        let n = raw_str_hashes(&b[i + 1..]).unwrap_or(0);
+                        st = St::RawStr(n);
+                        i += 2 + n; // r, hashes, opening quote
+                    } else if b[i] == b'\'' {
+                        // char literal vs lifetime: a char literal closes
+                        // with ' within a few bytes ('x', '\n', '\u{…}')
+                        if let Some(len) = char_literal_len(&b[i..]) {
+                            i += len;
+                        } else {
+                            code[i] = b[i]; // lifetime tick is code
+                            i += 1;
+                        }
+                    } else {
+                        code[i] = b[i];
+                        i += 1;
+                    }
+                }
+                St::Block(depth) => {
+                    if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                        i += 2;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        st = St::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if b[i] == b'\\' {
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        st = St::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::RawStr(n) => {
+                    let hashes = b[i + 1..].iter().take(n).filter(|&&c| c == b'#').count();
+                    if b[i] == b'"' && hashes == n {
+                        st = St::Code;
+                        i += 1 + n;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // a "…" string continues onto the next line only behind a
+        // trailing backslash; otherwise reset so one stray quote cannot
+        // blank the rest of the file
+        if st == St::Str && !raw.ends_with('\\') {
+            st = St::Code;
+        }
+        let code = String::from_utf8(code).unwrap_or_default();
+        out.push(Line {
+            raw,
+            code,
+            comment_start,
+        });
+    }
+    out
+}
+
+fn prev_is_ident(code: &[u8], i: usize) -> bool {
+    i > 0 && (code[i - 1].is_ascii_alphanumeric() || code[i - 1] == b'_')
+}
+
+/// `r"` → Some(0), `r#"` → Some(1), … ; anything else → None.
+fn raw_str_hashes(after_r: &[u8]) -> Option<usize> {
+    let n = after_r.iter().take_while(|&&c| c == b'#').count();
+    (after_r.get(n) == Some(&b'"')).then_some(n)
+}
+
+/// Byte length of a char literal starting at `'`, or None for lifetimes.
+fn char_literal_len(b: &[u8]) -> Option<usize> {
+    if b.len() < 3 {
+        return None;
+    }
+    if b[1] == b'\\' {
+        // '\n', '\\', '\u{1F600}': scan to the closing quote, bounded
+        return b
+            .iter()
+            .enumerate()
+            .skip(3)
+            .take(10)
+            .find(|&(_, &c)| c == b'\'')
+            .map(|(i, _)| i + 1);
+    }
+    // one (possibly multi-byte) char then the closing quote; reject
+    // separator bytes so `<'a, 'b>` stays a pair of lifetimes
+    (1..=4usize).find_map(|k| {
+        let closes = b.get(1 + k) == Some(&b'\'');
+        let plain = b[1..1 + k].iter().all(|&c| c != b' ' && c != b',');
+        (closes && plain).then_some(k + 2)
+    })
+}
+
+/// Extract every suppression directive in the file. The grammar is
+/// `gogh-lint: allow(<rule>, <reason>)` inside a plain `//` comment; a
+/// directive with no code before it on its line targets the *next*
+/// line, a trailing directive targets its own line. String literals and
+/// block comments never register, and doc comments (`///` / `//!`) are
+/// rendered prose — a directive spelled there is documentation, not a
+/// suppression (which is what lets this very grammar be documented).
+pub fn parse_allows<'a>(lines: &[Line<'a>]) -> Vec<Allow<'a>> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some(cstart) = line.comment_start else {
+            continue;
+        };
+        let tail = &line.raw[cstart..];
+        if tail.starts_with("///") || tail.starts_with("//!") {
+            continue;
+        }
+        let Some(rel) = tail.find("gogh-lint:") else {
+            continue;
+        };
+        let pos = cstart + rel;
+        let lineno = idx + 1;
+        let whole_line = line.code.trim().is_empty();
+        let target = if whole_line { lineno + 1 } else { lineno };
+        let rest = line.raw[pos + "gogh-lint:".len()..].trim_start();
+        let body = rest
+            .strip_prefix("allow(")
+            .and_then(|r| r.rfind(')').map(|e| &r[..e]));
+        let (rule, reason) = match body {
+            Some(body) => match body.split_once(',') {
+                Some((rule, reason)) => {
+                    let reason = reason.trim();
+                    (rule.trim(), (!reason.is_empty()).then_some(reason))
+                }
+                None => (body.trim(), None),
+            },
+            // malformed directive: surface it as a nameless allow so the
+            // rule layer reports a bad-suppression error
+            None => ("", None),
+        };
+        out.push(Allow {
+            target_line: target,
+            directive_line: lineno,
+            rule,
+            reason,
+        });
+    }
+    out
+}
+
+/// 1-based line of the `#[cfg(test)]` fence, if any: everything from
+/// that line on is test code (this repo keeps test modules at the end
+/// of each file) and exempt from every rule.
+pub fn test_fence(lines: &[Line<'_>]) -> Option<usize> {
+    lines
+        .iter()
+        .position(|l| l.code.contains("#[cfg(test)]"))
+        .map(|i| i + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_strings_and_comments() {
+        let src = "let a = \"Instant::now\"; // Instant::now\nlet b = 1;";
+        let lines = scrub(src);
+        assert!(!lines[0].code.contains("Instant::now"));
+        assert!(lines[0].code.contains("let a ="));
+        assert!(lines[1].code.contains("let b = 1;"));
+    }
+
+    #[test]
+    fn scrub_handles_raw_and_multiline() {
+        let src = "let s = r#\"x\nHashMap\ny\"#;\nlet t = HashMap::new();";
+        let lines = scrub(src);
+        assert!(!lines[1].code.contains("HashMap"));
+        assert!(lines[3].code.contains("HashMap::new"));
+    }
+
+    #[test]
+    fn scrub_handles_block_comments_and_chars() {
+        let src = "/* HashMap\n still comment */ let c = 'x'; let l: &'a str = v;";
+        let lines = scrub(src);
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[1].code.contains("let c ="));
+        assert!(!lines[1].code.contains('x'));
+        assert!(lines[1].code.contains("&'a str"));
+    }
+
+    #[test]
+    fn allow_targets_trailing_and_next_line() {
+        let src = "a(); // gogh-lint: allow(r1, reason one)\n// gogh-lint: allow(r2, two)\nb();";
+        let allows = parse_allows(&scrub(src));
+        assert_eq!(allows.len(), 2);
+        assert_eq!((allows[0].target_line, allows[0].rule), (1, "r1"));
+        assert_eq!(allows[0].reason, Some("reason one"));
+        assert_eq!((allows[1].target_line, allows[1].rule), (3, "r2"));
+    }
+
+    #[test]
+    fn allow_without_reason_is_detected() {
+        let src = "// gogh-lint: allow(r1)\nx();";
+        let allows = parse_allows(&scrub(src));
+        assert_eq!(allows[0].reason, None);
+        let src2 = "// gogh-lint: allow(r1, )\nx();";
+        assert_eq!(parse_allows(&scrub(src2))[0].reason, None);
+    }
+
+    #[test]
+    fn continued_string_spans_lines() {
+        // a trailing backslash continues the literal onto the next line;
+        // its body must stay scrubbed (the rule tables in rules.rs rely
+        // on this)
+        let src = "let s = \"no thread_rng here \\\n          more HashMap text\";\nlet x = 1;";
+        let lines = scrub(src);
+        assert!(!lines[1].code.contains("HashMap"));
+        assert!(lines[2].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn directives_in_strings_and_doc_comments_are_inert() {
+        // the lint's own sources mention the marker in literals and docs
+        let src = "let p = line.find(\"gogh-lint:\");\n\
+                   /// `// gogh-lint: allow(<rule>, <reason>)` syntax\n\
+                   //! gogh-lint: allow(also, prose)\n\
+                   /* gogh-lint: allow(blocked, out) */ x();\n\
+                   // gogh-lint: allow(real, this one counts)\n\
+                   y();";
+        let allows = parse_allows(&scrub(src));
+        assert_eq!(allows.len(), 1);
+        assert_eq!((allows[0].target_line, allows[0].rule), (6, "real"));
+    }
+
+    #[test]
+    fn fence_marks_test_tail() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {}";
+        assert_eq!(test_fence(&scrub(src)), Some(2));
+        assert_eq!(test_fence(&scrub("fn a() {}")), None);
+    }
+}

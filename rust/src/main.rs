@@ -275,10 +275,11 @@ fn simulate(args: &Args) -> Result<()> {
     // emitted whenever the power subsystem was active (cap set, DVFS
     // re-stated something, or a carbon signal priced emissions) — the
     // CI power smokes grep and parse this line
+    let [j_low, j_nominal, j_turbo] = report.joules_by_state;
     let power_active = report.power_cap_w.is_some()
         || report.grams_co2 > 0.0
-        || report.joules_by_state[0] > 0.0
-        || report.joules_by_state[2] > 0.0;
+        || j_low > 0.0
+        || j_turbo > 0.0;
     if power_active {
         println!(
             "power: peak {:.0} W / cap {} W, attainment {:.3}, {:.0} J total \
@@ -287,9 +288,9 @@ fn simulate(args: &Args) -> Result<()> {
             report.power_cap_w.map_or("-".to_string(), |c| format!("{c:.0}")),
             report.power_cap_attainment,
             report.energy_joules,
-            report.joules_by_state[0],
-            report.joules_by_state[1],
-            report.joules_by_state[2],
+            j_low,
+            j_nominal,
+            j_turbo,
             report.grams_co2
         );
     }
@@ -359,7 +360,10 @@ fn solve(args: &Args) -> Result<()> {
     let thr = {
         let oracle = oracle.clone();
         move |a, j: JobId, c: &gogh::workload::Combo| {
-            let spec = all_jobs.iter().find(|s| s.id == j).unwrap();
+            // unknown job id contributes nothing rather than panicking
+            let Some(spec) = all_jobs.iter().find(|s| s.id == j) else {
+                return 0.0;
+            };
             let lookup = |id: JobId| all_jobs.iter().find(|s| s.id == id).cloned();
             oracle.throughput(spec, c, a, &lookup)
         }

@@ -265,3 +265,39 @@ fn daemon_kill_and_resume_restores_state() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// A corrupt snapshot file must refuse (non-`--fresh`) startup with a
+/// named error on stderr — never panic, never silently start empty —
+/// while `--fresh` explicitly discards it and starts clean.
+#[test]
+fn garbage_snapshot_fails_startup_gracefully() {
+    let dir = fresh_dir("garbage_snap");
+    let state = dir.join("state.json");
+    std::fs::write(&state, "{not json at all").unwrap();
+    let state_s = state.to_str().unwrap();
+    let sock = dir.join("d.sock");
+    let sock_s = sock.to_str().unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_goghd"))
+        .args(["--socket", sock_s, "--state", state_s])
+        .output()
+        .expect("running goghd");
+    assert!(!out.status.success(), "goghd started despite a corrupt snapshot");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("state snapshot") && stderr.contains("state.json"),
+        "error must name the snapshot file: {stderr:?}"
+    );
+    assert!(
+        !stderr.contains("panicked"),
+        "corrupt snapshot must be an error, not a panic: {stderr:?}"
+    );
+
+    // --fresh is the documented escape hatch: same file, clean start
+    let daemon = spawn_daemon(&["--socket", sock_s, "--state", state_s, "--fresh"]);
+    poll("daemon socket", || sock.exists().then_some(()));
+    let r = request_unix(&sock, r#"{"cmd":"status"}"#);
+    assert!(is_ok(&r), "{r}");
+    drop(daemon);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -4,7 +4,7 @@
 //! algebra, and encoding round-trips, each over hundreds of random
 //! instances.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use gogh::catalog::{Catalog, EstimateKey};
 use gogh::cluster::{AccelId, Cluster, ClusterSpec, Placement, PlacementDelta, PlacementOp};
@@ -127,7 +127,7 @@ fn prop_problem1_solutions_always_satisfy_constraints() {
             })
             .collect();
         let per_type = rng.range_u32_inclusive(1, 3);
-        let counts: HashMap<AccelType, u32> =
+        let counts: BTreeMap<AccelType, u32> =
             ACCEL_TYPES.iter().map(|&a| (a, per_type)).collect();
         let jobs_c = jobs.clone();
         let oracle_c = oracle.clone();

@@ -4,7 +4,7 @@
 //! the explored tree at scale, and (d) make node-budget cutoffs degrade
 //! gracefully to the incumbent instead of failing.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use gogh::baselines::greedy_incumbent;
 use gogh::ilp::branch_bound::{solve_ilp, BnbConfig, BnbStatus};
@@ -53,7 +53,7 @@ fn greedy_incumbent_is_feasible_and_bounds_the_optimum() {
     for seed in 0..5u64 {
         let oracle = ThroughputOracle::new(seed);
         let jobs = mk_jobs(6, &oracle, 0.35);
-        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
         let thr = thr_fn(jobs.clone(), oracle.clone());
         let input = Problem1Input {
             jobs: &jobs,
@@ -94,7 +94,7 @@ fn warm_and_cold_reach_identical_optima() {
         let oracle = ThroughputOracle::new(seed * 7 + 1);
         let n = 4 + (seed % 2) as u32 * 2; // 4, 6, 4, 6, 4, 6
         let jobs = mk_jobs(n, &oracle, 0.4);
-        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
         let thr = thr_fn(jobs.clone(), oracle.clone());
         let input = Problem1Input {
             jobs: &jobs,
@@ -149,7 +149,7 @@ fn warm_start_explores_strictly_fewer_nodes_at_scale() {
     for seed in [41u64, 42, 43] {
         let oracle = ThroughputOracle::new(seed);
         let jobs = mk_jobs(10, &oracle, 0.35);
-        let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
         let thr = thr_fn(jobs.clone(), oracle.clone());
         let input = Problem1Input {
             jobs: &jobs,
@@ -201,7 +201,7 @@ fn warm_start_explores_strictly_fewer_nodes_at_scale() {
 fn node_budget_degrades_gracefully_to_the_incumbent() {
     let oracle = ThroughputOracle::new(9);
     let jobs = mk_jobs(8, &oracle, 0.4);
-    let counts: HashMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+    let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
     let thr = thr_fn(jobs.clone(), oracle.clone());
     let input = Problem1Input {
         jobs: &jobs,
