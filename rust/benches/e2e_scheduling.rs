@@ -19,6 +19,7 @@ use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
 use gogh::cluster::ClusterSpec;
 use gogh::config::ExperimentConfig;
 use gogh::coordinator::{GoghOptions, GoghScheduler, SimDriver};
+use gogh::engine::EngineOptions;
 use gogh::metrics::SchedulerComparison;
 use gogh::runtime::Engine;
 use gogh::workload::{ThroughputOracle, Trace};
@@ -58,7 +59,7 @@ fn mixed_bench() -> gogh::Result<()> {
         cfg.monitor_interval_s,
         cfg.seed,
     )?
-    .with_migration_cost(cfg.migration_cost_s);
+    .with_options(EngineOptions::new().with_migration_cost(cfg.migration_cost_s));
     let mut sched = GoghScheduler::without_engine(&oracle, GoghOptions::from_config(&cfg))?;
     let t0 = Instant::now();
     let report = driver.run(&mut sched)?;
@@ -135,7 +136,7 @@ fn scale_bench() -> gogh::Result<()> {
             cfg.monitor_interval_s,
             cfg.seed,
         )?
-        .with_migration_cost(cfg.migration_cost_s);
+        .with_options(EngineOptions::new().with_migration_cost(cfg.migration_cost_s));
         let mut sched = GoghScheduler::without_engine(&oracle, GoghOptions::from_config(&cfg))?;
         let t0 = Instant::now();
         let report = driver.run(&mut sched)?;

@@ -120,6 +120,8 @@ fn main() -> gogh::Result<()> {
                 min_throughput: 0.0,
                 distributability: 2,
                 work: 100.0,
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             j.min_throughput = 0.35 * oracle.solo(&j, AccelType::P100);

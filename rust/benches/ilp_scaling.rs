@@ -33,6 +33,8 @@ fn mk_jobs(n: u32, oracle: &ThroughputOracle) -> Vec<JobSpec> {
                 min_throughput: 0.0,
                 distributability: 2,
                 work: 100.0,
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             j.min_throughput = 0.35 * oracle.solo(&j, AccelType::P100);

@@ -4,18 +4,34 @@
 //! cluster fills. This is the heterogeneity-aware-but-energy-oblivious
 //! policy a throughput-maximizing scheduler approximates.
 //!
+//! Decisions are native incremental deltas (ISSUE 9): each non-tick
+//! event places whatever is unplaced with explicit [`PlacementOp`]s,
+//! splits pairs back onto capacity that came free (the incremental
+//! analogue of the old full-rebuild compaction — throughput-greedy
+//! never leaves two jobs sharing while an instance idles), and grants
+//! leftover instances to inference jobs as extra replicas.
+//!
 //! This module also hosts [`greedy_incumbent`]: the energy-aware greedy
 //! packing that seeds the ILP's branch-and-bound with its first
 //! incumbent (the warm start of `ilp::problem1::solve_problem1`).
 
 use std::collections::BTreeMap;
 
-use crate::cluster::{AccelId, Cluster, Placement};
+use crate::cluster::{AccelId, Cluster, PlacementDelta, PlacementOp};
 use crate::coordinator::{ClusterEvent, Decision, Scheduler};
 use crate::ilp::model::{Model, VarId};
 use crate::ilp::problem1::Problem1Input;
 use crate::workload::{AccelType, Combo, JobId, JobSpec};
 use crate::Result;
+
+/// Fastest-hardware-first instance order (stable for determinism).
+fn by_speed_desc(a: &AccelId, b: &AccelId) -> std::cmp::Ordering {
+    b.accel
+        .base_speed()
+        .partial_cmp(&a.accel.base_speed())
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.server.cmp(&b.server))
+}
 
 #[derive(Default)]
 pub struct GreedyScheduler;
@@ -25,41 +41,83 @@ impl GreedyScheduler {
         Self
     }
 
-    /// Fastest-free-GPU-first packing of every active job (full-rebuild
-    /// policy; the driver applies it as a delta). After every job has an
-    /// instance, leftover capacity goes to inference jobs as extra
-    /// replicas (fastest-first, round-robin, up to each job's replica
-    /// cap) — throughput-maximizing serving, as energy-oblivious as the
-    /// rest of this baseline.
-    fn rebuild(&self, cluster: &Cluster) -> Placement {
-        let mut p = Placement::new();
-        // fastest in-service instances first (stable order for
-        // determinism)
-        let mut free: Vec<AccelId> = cluster.available_accels();
-        free.sort_by(|a, b| {
-            b.accel
-                .base_speed()
-                .partial_cmp(&a.accel.base_speed())
-                .unwrap()
-                .then(a.server.cmp(&b.server))
-        });
-        let mut jobs = cluster.active_job_ids(); // sorted: arrival order
-        let mut solos: Vec<AccelId> = vec![];
+    /// One decision round as a native delta: unplaced jobs take the
+    /// fastest free instance (pairing onto the fastest solo host once
+    /// the cluster fills), pairs split back onto freed capacity, and
+    /// leftover instances become inference replicas (fastest-first,
+    /// round-robin, up to each job's replica cap) — throughput-
+    /// maximizing serving, as energy-oblivious as the rest of this
+    /// baseline.
+    fn incremental(&self, cluster: &Cluster) -> PlacementDelta {
+        let mut delta = PlacementDelta::new();
+        let mut free: Vec<AccelId> = cluster
+            .available_accels()
+            .into_iter()
+            .filter(|a| cluster.placement.combo_on(*a).is_none())
+            .collect();
+        free.sort_by(by_speed_desc);
+        // solo hosts able to take a second job, fastest first
+        let mut solos: Vec<(AccelId, JobId)> = cluster
+            .available_accels()
+            .into_iter()
+            .filter_map(|a| match cluster.placement.combo_on(a) {
+                Some(Combo::Solo(j)) => Some((a, *j)),
+                _ => None,
+            })
+            .collect();
+        solos.sort_by(|x, y| by_speed_desc(&x.0, &y.0));
+        let unplaced: Vec<JobId> = cluster
+            .active_job_ids() // sorted: arrival order
+            .into_iter()
+            .filter(|&j| !cluster.placement.is_placed(j) && !cluster.is_suspended(j))
+            .collect();
         let mut i = 0;
-        for j in jobs.drain(..) {
+        for j in unplaced {
             if i < free.len() {
-                p.assign(free[i], Combo::Solo(j));
-                solos.push(free[i]);
+                delta.push(PlacementOp::Assign { accel: free[i], combo: Combo::Solo(j) });
+                solos.push((free[i], j));
+                solos.sort_by(|x, y| by_speed_desc(&x.0, &y.0));
                 i += 1;
             } else if !solos.is_empty() {
-                // pair onto the fastest host still holding a solo
-                let a = solos.remove(0);
-                let existing = match p.combo_on(a) {
-                    Some(Combo::Solo(e)) => *e,
-                    _ => unreachable!(),
-                };
-                p.assign(a, Combo::pair(existing, j));
+                // pair onto the fastest host still holding a solo; the
+                // Evict clears a pre-existing host so the pair Assign
+                // lands on an empty instance (pending solos from this
+                // delta are retracted and re-pushed as the pair)
+                let (a, existing) = solos.remove(0);
+                let pending = delta.ops.iter().any(|op| {
+                    matches!(op, PlacementOp::Assign { accel, .. } if *accel == a)
+                });
+                if pending {
+                    delta.ops.retain(|op| {
+                        !matches!(op, PlacementOp::Assign { accel, combo: Combo::Solo(e) }
+                            if *accel == a && *e == existing)
+                    });
+                } else {
+                    delta.push(PlacementOp::Evict { accel: a });
+                }
+                delta.push(PlacementOp::Assign { accel: a, combo: Combo::pair(existing, j) });
             }
+        }
+        // compaction: split existing pairs onto instances still free
+        // (fastest pair host first — its jobs gain the most)
+        let mut pairs: Vec<(AccelId, Combo)> = cluster
+            .available_accels()
+            .into_iter()
+            .filter_map(|a| match cluster.placement.combo_on(a) {
+                Some(c) if c.len() == 2 => Some((a, *c)),
+                _ => None,
+            })
+            .collect();
+        pairs.sort_by(|x, y| by_speed_desc(&x.0, &y.0));
+        for (host, combo) in pairs {
+            if i >= free.len() {
+                break;
+            }
+            // move the younger member out; the peer keeps the host solo
+            let js = combo.jobs();
+            let Some(&mover) = js.iter().max() else { continue };
+            delta.push(PlacementOp::Migrate { job: mover, from: host, to: free[i] });
+            i += 1;
         }
         // inference replica pass over whatever capacity is left
         let serving: Vec<(JobId, u32)> = {
@@ -71,14 +129,27 @@ impl GreedyScheduler {
             v.sort(); // arrival order
             v
         };
+        let mut replicas: BTreeMap<JobId, u32> = BTreeMap::new();
+        for &(j, _) in &serving {
+            let pending = delta
+                .ops
+                .iter()
+                .filter(|op| {
+                    matches!(op, PlacementOp::Assign { combo, .. } if combo.contains(j))
+                })
+                .count() as u32;
+            replicas.insert(j, cluster.placement.accels_of(j).len() as u32 + pending);
+        }
         loop {
             let mut granted = false;
             for &(j, cap) in &serving {
                 if i >= free.len() {
                     break;
                 }
-                if (p.accels_of(j).len() as u32) < cap && p.is_placed(j) {
-                    p.assign(free[i], Combo::Solo(j));
+                let n = replicas.get(&j).copied().unwrap_or(0);
+                if n > 0 && n < cap {
+                    delta.push(PlacementOp::Assign { accel: free[i], combo: Combo::Solo(j) });
+                    replicas.insert(j, n + 1);
                     i += 1;
                     granted = true;
                 }
@@ -87,7 +158,7 @@ impl GreedyScheduler {
                 break;
             }
         }
-        p
+        delta
     }
 }
 
@@ -100,10 +171,7 @@ impl Scheduler for GreedyScheduler {
         match event {
             ClusterEvent::MonitorTick { .. } => Ok(Decision::none()),
             _ if cluster.n_jobs() == 0 => Ok(Decision::none()),
-            _ => {
-                let target = self.rebuild(cluster);
-                Ok(Decision::replace(&cluster.placement, &target))
-            }
+            _ => Ok(Decision::apply(self.incremental(cluster))),
         }
     }
 }
@@ -177,6 +245,8 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work: 10.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         }
     }
@@ -185,8 +255,9 @@ mod tests {
     fn first_job_gets_fastest_gpu() {
         let mut c = Cluster::new(ClusterSpec::balanced(1));
         c.add_job(job(0));
-        let p = GreedyScheduler::new().rebuild(&c);
-        let (aid, _) = p.iter().next().unwrap();
+        let delta = GreedyScheduler::new().incremental(&c);
+        c.apply_delta(&delta).unwrap();
+        let (aid, _) = c.placement.iter().next().unwrap();
         assert_eq!(aid.accel, AccelType::V100);
     }
 
@@ -196,12 +267,13 @@ mod tests {
         for i in 0..3 {
             c.add_job(job(i));
         }
-        let p = GreedyScheduler::new().rebuild(&c);
+        let delta = GreedyScheduler::new().incremental(&c);
+        c.apply_delta(&delta).unwrap();
         // 2 instances, 3 jobs: the v100 must host a pair
         let v100 = c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
-        assert_eq!(p.combo_on(*v100).unwrap().len(), 2);
+        assert_eq!(c.placement.combo_on(*v100).unwrap().len(), 2);
         for i in 0..3 {
-            assert!(p.is_placed(JobId(i)));
+            assert!(c.placement.is_placed(JobId(i)));
         }
     }
 
@@ -224,7 +296,9 @@ mod tests {
             });
             c.add_job(s);
         }
-        let p = GreedyScheduler::new().rebuild(&c);
+        let delta = GreedyScheduler::new().incremental(&c);
+        c.apply_delta(&delta).unwrap();
+        let p = &c.placement;
         assert_eq!(p.accels_of(JobId(0)).len(), 1, "training job must stay solo");
         let r1 = p.accels_of(JobId(1)).len();
         let r2 = p.accels_of(JobId(2)).len();
@@ -245,18 +319,43 @@ mod tests {
             latency_slo_s: 0.5,
         });
         c.add_job(s);
-        let p = GreedyScheduler::new().rebuild(&c);
-        assert_eq!(p.accels_of(JobId(0)).len(), 2);
+        let delta = GreedyScheduler::new().incremental(&c);
+        c.apply_delta(&delta).unwrap();
+        assert_eq!(c.placement.accels_of(JobId(0)).len(), 2);
     }
 
     #[test]
-    fn rebuild_skips_down_accels() {
+    fn delta_skips_down_accels() {
         let mut c = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 1), (AccelType::K80, 1)]));
         c.add_job(job(0));
         let v100 = *c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
         c.set_accel_down(v100);
-        let p = GreedyScheduler::new().rebuild(&c);
-        let (aid, _) = p.iter().next().unwrap();
+        let delta = GreedyScheduler::new().incremental(&c);
+        c.apply_delta(&delta).unwrap();
+        let (aid, _) = c.placement.iter().next().unwrap();
         assert_eq!(aid.accel, AccelType::K80, "down v100 must not be used");
+    }
+
+    #[test]
+    fn pairs_split_back_onto_freed_capacity() {
+        // a pre-existing pair on the v100 while the k80 sits free: the
+        // incremental compaction pass must split the pair with a native
+        // Migrate instead of leaving capacity idle
+        let mut c = Cluster::new(ClusterSpec::mix(&[(AccelType::V100, 1), (AccelType::K80, 1)]));
+        c.add_job(job(0));
+        c.add_job(job(1));
+        let v100 = *c.spec.accels.iter().find(|a| a.accel == AccelType::V100).unwrap();
+        let mut seed = PlacementDelta::new();
+        seed.push(PlacementOp::Assign { accel: v100, combo: Combo::pair(JobId(0), JobId(1)) });
+        c.apply_delta(&seed).unwrap();
+        let delta = GreedyScheduler::new().incremental(&c);
+        assert!(
+            delta.ops.iter().any(|op| matches!(op, PlacementOp::Migrate { job: JobId(1), .. })),
+            "no pair split emitted: {:?}",
+            delta.ops
+        );
+        c.apply_delta(&delta).unwrap();
+        assert_eq!(c.placement.combo_on(v100).map(|co| co.len()), Some(1));
+        assert!(c.placement.is_placed(JobId(0)) && c.placement.is_placed(JobId(1)));
     }
 }

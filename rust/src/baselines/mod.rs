@@ -7,11 +7,22 @@
 //! * [`OracleScheduler`] — Problem 1 solved with *ground-truth*
 //!   throughputs: the energy lower bound (what GOGH converges toward as
 //!   estimates sharpen).
+//! * [`GavelRoundsScheduler`] — round-based least-attained-service
+//!   scheduling (Gavel-style): heterogeneity-aware but tied to round
+//!   boundaries, the finish-time-fairness yardstick for `ftf_p99`.
+//!
+//! Random and greedy emit native incremental [`PlacementOp`] deltas;
+//! Gavel diffs a whole-round target placement. Only the ILP paths still
+//! go through full placement replacement.
+//!
+//! [`PlacementOp`]: crate::cluster::PlacementOp
 
+pub mod gavel_rounds;
 pub mod greedy;
 pub mod oracle;
 pub mod random;
 
+pub use gavel_rounds::GavelRoundsScheduler;
 pub use greedy::{greedy_incumbent, GreedyScheduler};
 pub use oracle::OracleScheduler;
 pub use random::RandomScheduler;

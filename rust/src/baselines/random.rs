@@ -2,12 +2,19 @@
 //! accelerator with free capacity (pairing at random when instances run
 //! short). Heterogeneity- and energy-oblivious — the floor of the
 //! comparison table.
+//!
+//! Decisions are native incremental deltas (ISSUE 9): each non-tick
+//! event places whatever is unplaced with explicit [`PlacementOp`]s and
+//! relocates one random solo job onto leftover free capacity — the
+//! incremental analogue of the pre-redesign full reshuffle, keeping
+//! this baseline exactly as migration-happy as it was (the
+//! migration-cost plumbing stays exercised end to end).
 
 use crate::util::Rng;
 
-use crate::cluster::{Cluster, Placement};
+use crate::cluster::{AccelId, Cluster, PlacementDelta, PlacementOp};
 use crate::coordinator::{ClusterEvent, Decision, Scheduler};
-use crate::workload::Combo;
+use crate::workload::{Combo, JobId};
 use crate::Result;
 
 pub struct RandomScheduler {
@@ -21,23 +28,41 @@ impl RandomScheduler {
         }
     }
 
-    /// Fresh random placement of every active job (full-rebuild policy;
-    /// the driver applies it as a delta against the current placement).
-    /// Inference jobs receive a uniformly random replica count up to
-    /// their cap — rate- and latency-oblivious, like everything else
-    /// this baseline does (training-only traces draw exactly as before).
-    fn rebuild(&mut self, cluster: &Cluster) -> Placement {
-        let mut p = Placement::new();
-        let mut accels = cluster.available_accels();
-        self.rng.shuffle(&mut accels);
-        let mut jobs = cluster.active_job_ids();
+    /// One decision round: place every unplaced active job onto a
+    /// uniformly random free instance (inference jobs draw a uniformly
+    /// random replica count up to their cap — rate- and
+    /// latency-oblivious, like everything else here), pair with a
+    /// random solo host once free instances run out, then shuffle one
+    /// random pre-existing solo job onto a leftover free instance.
+    fn incremental(&mut self, cluster: &Cluster) -> PlacementDelta {
+        let mut delta = PlacementDelta::new();
+        let mut free: Vec<AccelId> = cluster
+            .available_accels()
+            .into_iter()
+            .filter(|a| cluster.placement.combo_on(*a).is_none())
+            .collect();
+        self.rng.shuffle(&mut free);
+        // (host, job, pre-existing?) — only pre-existing solos are
+        // relocation candidates (a job assigned by this very delta has
+        // no progress to move)
+        let mut solos: Vec<(AccelId, JobId, bool)> = cluster
+            .available_accels()
+            .into_iter()
+            .filter_map(|a| match cluster.placement.combo_on(a) {
+                Some(Combo::Solo(j)) => Some((a, *j, true)),
+                _ => None,
+            })
+            .collect();
+        let mut jobs: Vec<JobId> = cluster
+            .active_job_ids()
+            .into_iter()
+            .filter(|&j| !cluster.placement.is_placed(j) && !cluster.is_suspended(j))
+            .collect();
         self.rng.shuffle(&mut jobs);
-        let mut free = accels;
-        let mut solos: Vec<crate::cluster::AccelId> = vec![];
         for j in jobs {
             if let Some(a) = free.pop() {
-                p.assign(a, Combo::Solo(j));
-                solos.push(a);
+                delta.push(PlacementOp::Assign { accel: a, combo: Combo::Solo(j) });
+                solos.push((a, j, false));
                 let replica_cap = cluster
                     .job(j)
                     .filter(|s| s.is_inference())
@@ -46,23 +71,43 @@ impl RandomScheduler {
                     let extra = self.rng.range_u32_inclusive(0, replica_cap - 1);
                     for _ in 0..extra {
                         let Some(a) = free.pop() else { break };
-                        p.assign(a, Combo::Solo(j));
-                        solos.push(a);
+                        delta.push(PlacementOp::Assign { accel: a, combo: Combo::Solo(j) });
+                        solos.push((a, j, false));
                     }
                 }
             } else if !solos.is_empty() {
                 // out of free instances: pair with a random solo host
+                // (the Evict clears the host so the pair Assign lands on
+                // an empty instance — apply_op validates targets)
                 let idx = (self.rng.next_u32() as usize) % solos.len();
-                let a = solos.swap_remove(idx);
-                let existing = match p.combo_on(a) {
-                    Some(Combo::Solo(e)) => *e,
-                    _ => unreachable!("solos list only holds solo hosts"),
-                };
-                p.assign(a, Combo::pair(existing, j));
+                let (a, existing, pre) = solos.swap_remove(idx);
+                if pre {
+                    delta.push(PlacementOp::Evict { accel: a });
+                } else {
+                    // the solo assign is still pending inside this delta:
+                    // retract it and re-push as a pair
+                    delta.ops.retain(|op| {
+                        !matches!(op, PlacementOp::Assign { accel, combo: Combo::Solo(e) }
+                            if *accel == a && *e == existing)
+                    });
+                }
+                delta.push(PlacementOp::Assign { accel: a, combo: Combo::pair(existing, j) });
             }
             // else: cluster totally full (2 jobs everywhere) → job waits
         }
-        p
+        // random relocation of one pre-existing solo job — the
+        // incremental stand-in for the old every-event reshuffle
+        let movable: Vec<(AccelId, JobId)> = solos
+            .iter()
+            .filter(|&&(_, _, pre)| pre)
+            .map(|&(a, j, _)| (a, j))
+            .collect();
+        if !free.is_empty() && !movable.is_empty() {
+            let (from, j) = movable[(self.rng.next_u32() as usize) % movable.len()];
+            let to = free[(self.rng.next_u32() as usize) % free.len()];
+            delta.push(PlacementOp::Migrate { job: j, from, to });
+        }
+        delta
     }
 }
 
@@ -75,10 +120,7 @@ impl Scheduler for RandomScheduler {
         match event {
             ClusterEvent::MonitorTick { .. } => Ok(Decision::none()),
             _ if cluster.n_jobs() == 0 => Ok(Decision::none()),
-            _ => {
-                let target = self.rebuild(cluster);
-                Ok(Decision::replace(&cluster.placement, &target))
-            }
+            _ => Ok(Decision::apply(self.incremental(cluster))),
         }
     }
 }
@@ -99,6 +141,8 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work: 10.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         }
     }
@@ -110,25 +154,31 @@ mod tests {
             c.add_job(job(i)); // 9 jobs > 6 instances → pairing needed
         }
         let mut s = RandomScheduler::new(1);
-        let p = s.rebuild(&c);
+        let delta = s.incremental(&c);
+        c.apply_delta(&delta).unwrap();
         for i in 0..9 {
-            assert!(p.is_placed(JobId(i)), "job {i} unplaced");
+            assert!(c.placement.is_placed(JobId(i)), "job {i} unplaced");
         }
         // capacity respected
-        for (_, combo) in p.iter() {
+        for (_, combo) in c.placement.iter() {
             assert!(combo.len() <= 2);
         }
     }
 
     #[test]
     fn deterministic_per_seed() {
-        let mut c = Cluster::new(ClusterSpec::balanced(1));
-        for i in 0..4 {
-            c.add_job(job(i));
-        }
-        let p1 = RandomScheduler::new(7).rebuild(&c);
-        let p2 = RandomScheduler::new(7).rebuild(&c);
-        assert_eq!(p1.diff_count(&p2), 0);
+        let build = || {
+            let mut c = Cluster::new(ClusterSpec::balanced(1));
+            for i in 0..4 {
+                c.add_job(job(i));
+            }
+            c
+        };
+        let mut c1 = build();
+        let mut c2 = build();
+        c1.apply_delta(&RandomScheduler::new(7).incremental(&c1)).unwrap();
+        c2.apply_delta(&RandomScheduler::new(7).incremental(&c2)).unwrap();
+        assert_eq!(c1.placement.diff_count(&c2.placement), 0);
     }
 
     #[test]
@@ -148,5 +198,25 @@ mod tests {
         // a monitor tick changes nothing
         let tick = ClusterEvent::MonitorTick { measurements: vec![] };
         assert!(s.on_event(&tick, &c).unwrap().delta.is_empty());
+    }
+
+    #[test]
+    fn reshuffles_one_placed_job_when_capacity_allows() {
+        // 6 instances, 1 placed job, 1 arrival: after placing the
+        // arrival a free instance remains, so the pre-existing solo job
+        // must be relocated by a native Migrate op.
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        c.add_job(job(0));
+        let mut s = RandomScheduler::new(3);
+        c.apply_delta(&s.incremental(&c)).unwrap();
+        c.add_job(job(1));
+        let delta = s.incremental(&c);
+        assert!(
+            delta.ops.iter().any(|op| matches!(op, PlacementOp::Migrate { job: JobId(0), .. })),
+            "no relocation emitted: {:?}",
+            delta.ops
+        );
+        c.apply_delta(&delta).unwrap();
+        assert!(c.placement.is_placed(JobId(0)) && c.placement.is_placed(JobId(1)));
     }
 }

@@ -233,6 +233,17 @@ pub enum PlacementOp {
     /// *down* instance — the state is remembered for when it returns,
     /// and a down instance bills zero joules regardless.
     SetPowerState { accel: AccelId, state: PowerState },
+    /// Park `job` (the preemption primitive): clear every instance it
+    /// holds (a co-runner stays behind solo) and mark it suspended. The
+    /// job keeps its remaining work — parking loses no progress — but
+    /// pays the migration stall when it restarts. The job must be
+    /// registered, placed, and not already suspended.
+    Suspend { job: JobId },
+    /// Un-park `job` solo onto the empty in-service instance `accel`.
+    /// The job must currently be suspended. A plain [`PlacementOp::Assign`]
+    /// naming a suspended job auto-resumes it too, so full re-solve
+    /// replace deltas restore parked jobs without special-casing.
+    Resume { job: JobId, accel: AccelId },
 }
 
 /// An incremental placement change: the unit every [`crate::coordinator::Scheduler`]
@@ -293,12 +304,20 @@ pub struct DeltaOutcome {
     /// instance-level placement moves (same metric as [`Placement::diff_count`])
     pub moves: usize,
     /// jobs that were running before AND after but on a different accel
-    /// set — these pay the migration/restart penalty. Exception: an
+    /// set — these pay the migration/restart penalty. Exceptions: an
     /// *inference* job that purely gained or purely lost replicas (one
     /// accel set contains the other) is NOT a migration — its surviving
     /// replicas never stop serving, so the autoscaler's grow/shrink
-    /// actions must not stall the whole job.
+    /// actions must not stall the whole job — and an *elastic* training
+    /// job gets the same grace for pure grows/shrinks.
     pub migrated_jobs: Vec<JobId>,
+    /// jobs newly parked by this delta ([`PlacementOp::Suspend`]);
+    /// the engine counts these as preemptions.
+    pub suspended_jobs: Vec<JobId>,
+    /// jobs un-parked by this delta ([`PlacementOp::Resume`], or an
+    /// `Assign` naming a suspended job); the engine charges the
+    /// migration stall to these on restart.
+    pub resumed_jobs: Vec<JobId>,
 }
 
 /// The simulated cluster: spec + placement + job registry + clock +
@@ -313,6 +332,9 @@ pub struct Cluster {
     down: BTreeSet<AccelId>,
     /// restart penalty: jobs make no progress until this simulated time.
     stalled_until: BTreeMap<JobId, f64>,
+    /// jobs parked by [`PlacementOp::Suspend`]: registered, hold no
+    /// instances, keep their remaining work until resumed.
+    suspended: BTreeSet<JobId>,
     /// DVFS states; absent = [`PowerState::Nominal`] (the map stays
     /// sparse so a never-restated cluster costs nothing).
     power_states: BTreeMap<AccelId, PowerState>,
@@ -330,6 +352,7 @@ impl Cluster {
             now: 0.0,
             down: BTreeSet::new(),
             stalled_until: BTreeMap::new(),
+            suspended: BTreeSet::new(),
             power_states: BTreeMap::new(),
             power_cap_w: None,
         }
@@ -351,7 +374,25 @@ impl Cluster {
     pub fn remove_job(&mut self, j: JobId) -> Option<JobSpec> {
         self.placement.remove_job(j);
         self.stalled_until.remove(&j);
+        self.suspended.remove(&j);
         self.jobs.remove(&j)
+    }
+
+    /// Is `j` currently parked by a [`PlacementOp::Suspend`]?
+    pub fn is_suspended(&self, j: JobId) -> bool {
+        self.suspended.contains(&j)
+    }
+
+    /// Suspended job ids in ascending order (reports and snapshots).
+    pub fn suspended_job_ids(&self) -> Vec<JobId> {
+        self.suspended.iter().copied().collect()
+    }
+
+    /// Restore/rebuild hook: mark a job suspended directly, bypassing
+    /// delta validation (snapshot restore; policies go through
+    /// [`PlacementOp::Suspend`]).
+    pub fn set_suspended(&mut self, j: JobId) {
+        self.suspended.insert(j);
     }
 
     /// Instances currently in service, in spec order.
@@ -478,13 +519,16 @@ impl Cluster {
         };
         let mut next = self.placement.clone();
         let mut states = self.power_states.clone();
+        let mut parked = self.suspended.clone();
         let mut kept: Vec<PlacementOp> = vec![];
         for op in &delta.ops {
             let next_bak = next.clone();
             let states_bak = states.clone();
-            if self.apply_op(&mut next, &mut states, op).is_err() {
+            let parked_bak = parked.clone();
+            if self.apply_op(&mut next, &mut states, &mut parked, op).is_err() {
                 next = next_bak;
                 states = states_bak;
+                parked = parked_bak;
                 kept.push(*op);
                 continue;
             }
@@ -496,6 +540,7 @@ impl Cluster {
             let target = match *op {
                 PlacementOp::Assign { accel, .. } => Some(accel),
                 PlacementOp::Migrate { to, .. } => Some(to),
+                PlacementOp::Resume { accel, .. } => Some(accel),
                 _ => None,
             };
             let retry =
@@ -513,6 +558,7 @@ impl Cluster {
             }
             next = next_bak;
             states = states_bak;
+            parked = parked_bak;
         }
         PlacementDelta { ops: kept }
     }
@@ -544,8 +590,9 @@ impl Cluster {
     pub fn apply_delta(&mut self, delta: &PlacementDelta) -> Result<DeltaOutcome> {
         let mut next = self.placement.clone();
         let mut next_states = self.power_states.clone();
+        let mut next_suspended = self.suspended.clone();
         for op in &delta.ops {
-            self.apply_op(&mut next, &mut next_states, op)?;
+            self.apply_op(&mut next, &mut next_states, &mut next_suspended, op)?;
         }
         if let Some(cap) = self.power_cap_w {
             let worst = self.worst_case_watts_of(&next, &next_states);
@@ -583,7 +630,7 @@ impl Cluster {
                         let a: BTreeSet<AccelId> = a.iter().copied().collect();
                         if b == a {
                             false
-                        } else if spec.is_inference() {
+                        } else if spec.is_inference() || spec.elastic {
                             !(b.is_subset(&a) || a.is_subset(&b))
                         } else {
                             true
@@ -595,11 +642,20 @@ impl Cluster {
             .map(|(j, _)| *j)
             .collect();
         migrated.sort();
+        // BTreeSet::difference walks in ascending order — both lists
+        // come out sorted.
+        let suspended_jobs: Vec<JobId> =
+            next_suspended.difference(&self.suspended).copied().collect();
+        let resumed_jobs: Vec<JobId> =
+            self.suspended.difference(&next_suspended).copied().collect();
         self.placement = next;
         self.power_states = next_states;
+        self.suspended = next_suspended;
         Ok(DeltaOutcome {
             moves,
             migrated_jobs: migrated,
+            suspended_jobs,
+            resumed_jobs,
         })
     }
 
@@ -607,6 +663,7 @@ impl Cluster {
         &self,
         next: &mut Placement,
         states: &mut BTreeMap<AccelId, PowerState>,
+        suspended: &mut BTreeSet<JobId>,
         op: &PlacementOp,
     ) -> Result<()> {
         let check_target = |accel: AccelId, next: &Placement| -> Result<()> {
@@ -636,6 +693,9 @@ impl Cluster {
                         !next.accels_of(*j).contains(&accel),
                         "job {j} already on {accel}"
                     );
+                    // assigning a suspended job auto-resumes it, so a
+                    // full re-solve replace delta restores parked jobs
+                    suspended.remove(j);
                 }
                 next.assign(accel, combo);
             }
@@ -666,6 +726,22 @@ impl Cluster {
                     "unknown accelerator {accel}"
                 );
                 Self::write_state(states, accel, state);
+            }
+            PlacementOp::Suspend { job } => {
+                anyhow::ensure!(self.jobs.contains_key(&job), "unregistered job {job}");
+                anyhow::ensure!(!suspended.contains(&job), "job {job} is already suspended");
+                anyhow::ensure!(next.is_placed(job), "suspending unplaced job {job}");
+                next.remove_job(job);
+                suspended.insert(job);
+            }
+            PlacementOp::Resume { job, accel } => {
+                anyhow::ensure!(
+                    suspended.contains(&job),
+                    "resuming job {job} that is not suspended"
+                );
+                check_target(accel, next)?;
+                suspended.remove(&job);
+                next.assign(accel, Combo::Solo(job));
             }
         }
         Ok(())
@@ -707,6 +783,8 @@ mod tests {
             min_throughput: 0.1,
             distributability: 2,
             work: 100.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         }
     }
@@ -1135,6 +1213,128 @@ mod tests {
         };
         assert_eq!(c.trim_to_power_cap(&bad), bad);
         assert!(c.apply_delta(&bad).is_err());
+    }
+
+    #[test]
+    fn suspend_parks_and_resume_restores() {
+        let mut c = delta_cluster();
+        let a0 = c.spec.accels[0];
+        let a1 = c.spec.accels[1];
+        c.placement.assign(a0, Combo::pair(JobId(0), JobId(1)));
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Suspend { job: JobId(0) }],
+        };
+        let out = c.apply_delta(&d).unwrap();
+        assert!(c.is_suspended(JobId(0)));
+        assert!(!c.placement.is_placed(JobId(0)));
+        // the co-runner is re-hosted solo on the same instance
+        assert_eq!(c.placement.combo_on(a0), Some(&Combo::Solo(JobId(1))));
+        assert_eq!(out.suspended_jobs, vec![JobId(0)]);
+        assert!(out.resumed_jobs.is_empty());
+        assert!(out.migrated_jobs.is_empty(), "parking is not a migration");
+        assert_eq!(c.suspended_job_ids(), vec![JobId(0)]);
+        // resume onto an empty instance restores it solo
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Resume {
+                job: JobId(0),
+                accel: a1,
+            }],
+        };
+        let out = c.apply_delta(&d).unwrap();
+        assert!(!c.is_suspended(JobId(0)));
+        assert_eq!(c.placement.combo_on(a1), Some(&Combo::Solo(JobId(0))));
+        assert_eq!(out.resumed_jobs, vec![JobId(0)]);
+        assert!(out.suspended_jobs.is_empty());
+    }
+
+    #[test]
+    fn suspend_resume_validation() {
+        let mut c = delta_cluster();
+        let a0 = c.spec.accels[0];
+        let a1 = c.spec.accels[1];
+        let park0 = PlacementOp::Suspend { job: JobId(0) };
+        // suspending an unplaced job is a policy bug
+        assert!(c.apply_delta(&PlacementDelta { ops: vec![park0] }).is_err());
+        c.placement.assign(a0, Combo::Solo(JobId(0)));
+        c.apply_delta(&PlacementDelta { ops: vec![park0] }).unwrap();
+        // double-suspend rejected
+        assert!(c.apply_delta(&PlacementDelta { ops: vec![park0] }).is_err());
+        // resuming a job that is not suspended is rejected
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Resume {
+                job: JobId(1),
+                accel: a1,
+            }],
+        };
+        assert!(c.apply_delta(&d).is_err());
+        // resume onto an occupied instance is rejected
+        c.placement.assign(a1, Combo::Solo(JobId(1)));
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Resume {
+                job: JobId(0),
+                accel: a1,
+            }],
+        };
+        assert!(c.apply_delta(&d).is_err());
+        // resume onto a down instance is rejected
+        let a2 = c.spec.accels[2];
+        c.set_accel_down(a2);
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Resume {
+                job: JobId(0),
+                accel: a2,
+            }],
+        };
+        assert!(c.apply_delta(&d).is_err());
+        assert!(c.is_suspended(JobId(0)), "failed resume must leave the job parked");
+        // a plain Assign naming the suspended job auto-resumes it
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Assign {
+                accel: c.spec.accels[3],
+                combo: Combo::Solo(JobId(0)),
+            }],
+        };
+        let out = c.apply_delta(&d).unwrap();
+        assert!(!c.is_suspended(JobId(0)));
+        assert_eq!(out.resumed_jobs, vec![JobId(0)]);
+        // departure clears any parked state
+        c.apply_delta(&PlacementDelta { ops: vec![park0] }).unwrap();
+        c.remove_job(JobId(0));
+        assert!(!c.is_suspended(JobId(0)));
+    }
+
+    #[test]
+    fn elastic_training_grow_and_shrink_are_not_migrations() {
+        let mut c = Cluster::new(ClusterSpec::balanced(1));
+        let mut t = job(0);
+        t.elastic = true;
+        t.distributability = 3;
+        c.add_job(t);
+        let a = [c.spec.accels[0], c.spec.accels[1], c.spec.accels[2]];
+        c.placement.assign(a[0], Combo::Solo(JobId(0)));
+        let grow = PlacementDelta {
+            ops: vec![PlacementOp::Assign {
+                accel: a[1],
+                combo: Combo::Solo(JobId(0)),
+            }],
+        };
+        let out = c.apply_delta(&grow).unwrap();
+        assert!(out.migrated_jobs.is_empty(), "elastic grow billed as migration");
+        let shrink = PlacementDelta {
+            ops: vec![PlacementOp::Evict { accel: a[0] }],
+        };
+        let out = c.apply_delta(&shrink).unwrap();
+        assert!(out.migrated_jobs.is_empty(), "elastic shrink billed as migration");
+        // an actual replica MOVE still restarts the job
+        let mv = PlacementDelta {
+            ops: vec![PlacementOp::Migrate {
+                job: JobId(0),
+                from: a[1],
+                to: a[2],
+            }],
+        };
+        let out = c.apply_delta(&mv).unwrap();
+        assert_eq!(out.migrated_jobs, vec![JobId(0)]);
     }
 
     #[test]

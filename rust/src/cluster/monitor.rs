@@ -89,6 +89,8 @@ mod tests {
             min_throughput: 0.1,
             distributability: 1,
             work: 10.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         });
         c.add_job(JobSpec {
@@ -99,6 +101,8 @@ mod tests {
             min_throughput: 0.1,
             distributability: 1,
             work: 10.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         });
         let aid = c.spec.accels[2]; // a v100

@@ -211,6 +211,12 @@ pub struct GoghPolicyConfig {
     /// job); large clusters need the cap to keep the round-0 estimate
     /// fan-out O(active) instead of O(active²).
     pub p1_candidates: usize,
+    /// Priority preemption: let a higher-tier arrival suspend the
+    /// cheapest strictly-lower-tier job when no instance is free, and
+    /// let the periodic full re-solve park jobs the ILP drops instead
+    /// of leaving them pending. Off (the default) reproduces the
+    /// pre-priority decision stream bit-for-bit.
+    pub preemption: bool,
 }
 
 impl Default for GoghPolicyConfig {
@@ -225,6 +231,7 @@ impl Default for GoghPolicyConfig {
             shards: 1,
             estimate_cache: true,
             p1_candidates: 0,
+            preemption: false,
         }
     }
 }
@@ -381,8 +388,12 @@ impl ExperimentConfig {
             "serving" => Ok(Self::serving_heavy()),
             "powercap" => Ok(Self::powercap()),
             "carbon" => Ok(Self::carbon()),
+            "priority" => Ok(Self::priority()),
+            "burst" => Ok(Self::burst()),
+            "contended" => Ok(Self::contended()),
             other => anyhow::bail!(
-                "unknown preset {other:?} (want default|large|mixed|serving|powercap|carbon)"
+                "unknown preset {other:?} (want default|large|mixed|serving|powercap|carbon|\
+                 priority|burst|contended)"
             ),
         }
     }
@@ -466,6 +477,50 @@ impl ExperimentConfig {
         cfg
     }
 
+    /// The `priority` scenario: a tiered arrival mix (20% Critical, 35%
+    /// best-effort, some elastic training) on the default 12-instance
+    /// cluster with arrivals fast enough that tiers regularly contend
+    /// for instances. Preemption is on — the CI priority smoke asserts
+    /// Critical-tier attainment ≥ Standard and preemptions > 0 here.
+    pub fn priority() -> Self {
+        let mut cfg = Self::default();
+        cfg.trace.critical_fraction = 0.2;
+        cfg.trace.best_fraction = 0.35;
+        cfg.trace.elastic_fraction = 0.25;
+        cfg.trace.slo_fraction = 0.8;
+        cfg.trace.mean_interarrival_s = 12.0;
+        cfg.trace.mean_work_s = 240.0;
+        cfg.migration_cost_s = 5.0;
+        cfg.gogh.preemption = true;
+        cfg.seed = 93;
+        cfg
+    }
+
+    /// The `burst` scenario: the priority mix under bursty arrivals
+    /// (interarrivals a third of `priority`'s), so queues form even
+    /// though the long-run load is serviceable — the case preemption
+    /// and round-based fairness answer differently.
+    pub fn burst() -> Self {
+        let mut cfg = Self::priority();
+        cfg.trace.mean_interarrival_s = 4.0;
+        cfg.trace.mean_work_s = 180.0;
+        cfg.seed = 94;
+        cfg
+    }
+
+    /// The `contended` scenario: standing overload (offered load well
+    /// above capacity), where tier weights decide who runs at all and
+    /// elastic jobs surrender instances first.
+    pub fn contended() -> Self {
+        let mut cfg = Self::priority();
+        cfg.trace.critical_fraction = 0.3;
+        cfg.trace.best_fraction = 0.3;
+        cfg.trace.mean_interarrival_s = 6.0;
+        cfg.trace.mean_work_s = 480.0;
+        cfg.seed = 95;
+        cfg
+    }
+
     /// Parse a config, overlaying the given fields on the defaults.
     /// Errors carry a pointer to the offending input: parse failures
     /// name the line/column, type mismatches and unknown enum values
@@ -511,6 +566,17 @@ impl ExperimentConfig {
             if let Some(v) = t.get("inference_fraction") {
                 cfg.trace.inference_fraction =
                     expect_f64(v, "trace.inference_fraction")?.clamp(0.0, 1.0);
+            }
+            if let Some(v) = t.get("critical_fraction") {
+                cfg.trace.critical_fraction =
+                    expect_f64(v, "trace.critical_fraction")?.clamp(0.0, 1.0);
+            }
+            if let Some(v) = t.get("best_fraction") {
+                cfg.trace.best_fraction = expect_f64(v, "trace.best_fraction")?.clamp(0.0, 1.0);
+            }
+            if let Some(v) = t.get("elastic_fraction") {
+                cfg.trace.elastic_fraction =
+                    expect_f64(v, "trace.elastic_fraction")?.clamp(0.0, 1.0);
             }
             if let Some(v) = t.get("seed") {
                 cfg.trace.seed = expect_u64(v, "trace.seed")?;
@@ -599,6 +665,9 @@ impl ExperimentConfig {
             if let Some(v) = g.get("p1_candidates") {
                 cfg.gogh.p1_candidates = expect_usize(v, "gogh.p1_candidates")?;
             }
+            if let Some(v) = g.get("preemption") {
+                cfg.gogh.preemption = expect_bool(v, "gogh.preemption")?;
+            }
         }
         if let Some(p) = j.get("power") {
             if let Some(v) = p.get("cap_w") {
@@ -670,6 +739,9 @@ impl ExperimentConfig {
                     ("cancel_rate", self.trace.cancel_rate.into()),
                     ("accel_churn", self.trace.accel_churn.into()),
                     ("inference_fraction", self.trace.inference_fraction.into()),
+                    ("critical_fraction", self.trace.critical_fraction.into()),
+                    ("best_fraction", self.trace.best_fraction.into()),
+                    ("elastic_fraction", self.trace.elastic_fraction.into()),
                     ("seed", self.trace.seed.into()),
                 ]),
             ),
@@ -711,6 +783,7 @@ impl ExperimentConfig {
                     ("shards", self.gogh.shards.into()),
                     ("estimate_cache", self.gogh.estimate_cache.into()),
                     ("p1_candidates", self.gogh.p1_candidates.into()),
+                    ("preemption", self.gogh.preemption.into()),
                 ]),
             ),
             (
@@ -990,6 +1063,44 @@ mod tests {
         assert!(s.trace.inference_fraction > m.trace.inference_fraction);
         // training presets stay training-only
         assert_eq!(ExperimentConfig::preset("large").unwrap().trace.inference_fraction, 0.0);
+    }
+
+    #[test]
+    fn priority_knobs_roundtrip_and_presets_resolve() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(!cfg.gogh.preemption);
+        assert_eq!(cfg.trace.critical_fraction, 0.0);
+        assert_eq!(cfg.trace.best_fraction, 0.0);
+        assert_eq!(cfg.trace.elastic_fraction, 0.0);
+        cfg.gogh.preemption = true;
+        cfg.trace.critical_fraction = 0.2;
+        cfg.trace.best_fraction = 0.3;
+        cfg.trace.elastic_fraction = 0.4;
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert!(back.gogh.preemption);
+        assert_eq!(back.trace.critical_fraction, 0.2);
+        assert_eq!(back.trace.best_fraction, 0.3);
+        assert_eq!(back.trace.elastic_fraction, 0.4);
+        // omission keeps the pre-priority behaviour entirely off
+        let d = ExperimentConfig::from_json("{}").unwrap();
+        assert!(!d.gogh.preemption);
+        assert_eq!(d.trace.critical_fraction, 0.0);
+        // fractions clamp; type mismatches name the dotted path
+        let j = r#"{"trace": {"critical_fraction": 9.0}}"#;
+        assert_eq!(ExperimentConfig::from_json(j).unwrap().trace.critical_fraction, 1.0);
+        let err = ExperimentConfig::from_json(r#"{"gogh": {"preemption": 3}}"#).unwrap_err();
+        assert!(err.to_string().contains("gogh.preemption"), "{err}");
+        // presets
+        for (name, seed) in [("priority", 93), ("burst", 94), ("contended", 95)] {
+            let p = ExperimentConfig::preset(name).unwrap();
+            assert_eq!(p.seed, seed, "{name}");
+            assert!(p.gogh.preemption, "{name}");
+            assert!(p.trace.critical_fraction > 0.0 && p.trace.best_fraction > 0.0, "{name}");
+            let back = ExperimentConfig::from_json(&p.to_json().to_string()).unwrap();
+            assert_eq!(back.trace.critical_fraction, p.trace.critical_fraction);
+            assert!(back.gogh.preemption);
+        }
+        assert!(ExperimentConfig::preset("burst").unwrap().trace.mean_interarrival_s < 6.0);
     }
 
     #[test]

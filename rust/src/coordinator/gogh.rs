@@ -29,6 +29,7 @@ use crate::coordinator::history;
 use crate::coordinator::optimizer::{self, Optimizer};
 use crate::coordinator::refinement::{self, catalog_value};
 use crate::coordinator::scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};
+use crate::engine::EngineOptions;
 use crate::ilp::branch_bound::{BnbConfig, BnbStatus};
 use crate::ilp::problem1::{pool_accel_counts, solve_problem1, Problem1Input};
 use crate::metrics::{ErrorTracker, RunReport};
@@ -96,6 +97,14 @@ pub struct GoghOptions {
     /// term and pricing emissions in the energy meters. `None` keeps
     /// unweighted watts (the pre-power behaviour).
     pub carbon: Option<CarbonSignal>,
+    /// Priority preemption (ISSUE 9): arrivals that outrank running
+    /// work may park ([`PlacementOp::Suspend`]) the cheapest
+    /// strictly-lower-tier victim when no free instance exists, and
+    /// the full re-solve parks (rather than silently drops) still-
+    /// active jobs the new allocation sheds. Parked jobs re-enter via
+    /// the monitor-tick resume pass. Off (the default) reproduces the
+    /// pre-priority behaviour bit-for-bit.
+    pub preemption: bool,
     pub seed: u64,
 }
 
@@ -114,6 +123,7 @@ impl Default for GoghOptions {
             p1_candidates: 0,
             power_dvfs: false,
             carbon: None,
+            preemption: false,
             seed: 17,
         }
     }
@@ -135,6 +145,7 @@ impl GoghOptions {
             p1_candidates: cfg.gogh.p1_candidates,
             power_dvfs: cfg.power.dvfs,
             carbon: cfg.power.carbon.signal(),
+            preemption: cfg.gogh.preemption,
             seed: cfg.seed,
         }
     }
@@ -241,6 +252,9 @@ pub struct GoghScheduler {
     /// replica autoscaling events applied on monitor ticks
     scale_ups: u64,
     scale_downs: u64,
+    /// elastic-training grow/shrink actions applied on monitor ticks
+    elastic_grows: u64,
+    elastic_shrinks: u64,
     /// monitor measurements of inference jobs seen so far
     inference_measurements: u64,
     replay_p1: Vec<Sample>,
@@ -326,6 +340,8 @@ impl GoghScheduler {
             inference_jobs: BTreeSet::new(),
             scale_ups: 0,
             scale_downs: 0,
+            elastic_grows: 0,
+            elastic_shrinks: 0,
             inference_measurements: 0,
             replay_p1: vec![],
             replay_p2: vec![],
@@ -996,6 +1012,218 @@ impl GoghScheduler {
         delta
     }
 
+    /// Elastic grow/shrink counts applied on monitor ticks.
+    pub fn elastic_counts(&self) -> (u64, u64) {
+        (self.elastic_grows, self.elastic_shrinks)
+    }
+
+    /// Preemption path of one arrival: when preemption is enabled and
+    /// no free in-service instance exists, the cheapest victim of a
+    /// strictly lower tier is parked ([`PlacementOp::Suspend`]) and the
+    /// arrival takes over the freed instance it runs fastest on. The
+    /// victim keeps its progress and re-enters through the monitor-tick
+    /// resume pass or a later full re-solve. Victims must hold at least
+    /// one solo instance — pairs are never broken (the co-runner's
+    /// estimate provenance would silently corrupt).
+    fn preempt_for_arrival(&self, cluster: &Cluster, j1: JobId) -> Option<PlacementDelta> {
+        if !self.options.preemption {
+            return None;
+        }
+        let spec = cluster.job(j1)?;
+        if cluster.placement.is_placed(j1) {
+            return None;
+        }
+        // last resort only: a free instance means the normal decision
+        // paths can host the arrival without collateral
+        let any_free = cluster
+            .available_accels()
+            .into_iter()
+            .any(|a| cluster.placement.combo_on(a).is_none());
+        if any_free {
+            return None;
+        }
+        let catalog = &self.catalog;
+        let cache = self.options.estimate_cache.then_some(&self.cache);
+        let solo_accels = |v: JobId| -> Vec<AccelId> {
+            cluster
+                .placement
+                .accels_of(v)
+                .iter()
+                .copied()
+                .filter(|a| cluster.placement.combo_on(*a).map_or(false, |c| c.len() == 1))
+                .collect()
+        };
+        // cheapest lower-tier victim: tier ascending, then estimated
+        // delivered throughput ascending, ties to the lower id
+        let mut victims: Vec<(usize, f64, JobId)> = cluster
+            .jobs()
+            .filter(|v| v.priority < spec.priority && !solo_accels(v.id).is_empty())
+            .map(|v| {
+                let est: f64 = solo_accels(v.id)
+                    .iter()
+                    .map(|a| value_via(catalog, cache, a.accel, v.id, &Combo::Solo(v.id)))
+                    .sum();
+                (v.priority.index(), est, v.id)
+            })
+            .collect();
+        victims.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2)));
+        let &(_, _, victim) = victims.first()?;
+        let target = solo_accels(victim).into_iter().max_by(|x, y| {
+            let vx = value_via(catalog, cache, x.accel, j1, &Combo::Solo(j1));
+            let vy = value_via(catalog, cache, y.accel, j1, &Combo::Solo(j1));
+            vx.total_cmp(&vy).then(y.cmp(x))
+        })?;
+        let mut delta = PlacementDelta::new();
+        delta.push(PlacementOp::Suspend { job: victim });
+        delta.push(PlacementOp::Assign {
+            accel: target,
+            combo: Combo::Solo(j1),
+        });
+        Some(delta)
+    }
+
+    /// Free in-service instances this tick's delta does not already
+    /// target (shared by the resume and elastic passes; spec order).
+    fn free_untouched(&self, cluster: &Cluster, delta: &PlacementDelta) -> Vec<AccelId> {
+        let taken: BTreeSet<AccelId> = delta
+            .ops
+            .iter()
+            .filter_map(|op| match *op {
+                PlacementOp::Assign { accel, .. }
+                | PlacementOp::Resume { accel, .. } => Some(accel),
+                PlacementOp::Migrate { to, .. } => Some(to),
+                _ => None,
+            })
+            .collect();
+        cluster
+            .available_accels()
+            .into_iter()
+            .filter(|a| cluster.placement.combo_on(*a).is_none() && !taken.contains(a))
+            .collect()
+    }
+
+    /// Resume pass, run on monitor ticks when preemption is enabled:
+    /// parked jobs re-enter highest tier first (FIFO by id within a
+    /// tier), each onto the free in-service instance its estimated solo
+    /// throughput is best on. Resuming charges the same migration-stall
+    /// penalty a live migration pays (the checkpoint must reload).
+    fn resume_suspended(&self, cluster: &Cluster, delta: &mut PlacementDelta) {
+        if !self.options.preemption {
+            return;
+        }
+        let suspended = cluster.suspended_job_ids();
+        if suspended.is_empty() {
+            return;
+        }
+        let catalog = &self.catalog;
+        let cache = self.options.estimate_cache.then_some(&self.cache);
+        let mut free = self.free_untouched(cluster, delta);
+        let mut parked: Vec<(usize, JobId)> = suspended
+            .iter()
+            .filter_map(|&j| cluster.job(j).map(|s| (s.priority.index(), j)))
+            .collect();
+        parked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (_, j) in parked {
+            if free.is_empty() {
+                break;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for (i, a) in free.iter().enumerate() {
+                let v = value_via(catalog, cache, a.accel, j, &Combo::Solo(j));
+                if best.map_or(true, |(bv, _)| v > bv) {
+                    best = Some((v, i));
+                }
+            }
+            if let Some((_, i)) = best {
+                let accel = free.remove(i);
+                delta.push(PlacementOp::Resume { job: j, accel });
+            }
+        }
+    }
+
+    /// Elastic grow/shrink of training jobs, run on monitor ticks and
+    /// mirroring the replica autoscaler: an elastic job delivering
+    /// under its throughput floor gains one instance on the
+    /// estimated-fastest free accel (up to its distributability D_j);
+    /// one still clearing `min_throughput / SCALE_DOWN_MARGIN` after
+    /// dropping its weakest solo-held instance releases it
+    /// (hysteresis). One action per job per tick; pure grow/shrink of
+    /// an elastic job is never billed as a migration by `apply_delta`.
+    fn elastic_training(&mut self, cluster: &Cluster, delta: &mut PlacementDelta) {
+        let mut free = self.free_untouched(cluster, delta);
+        let mut grows = 0u64;
+        let mut shrinks = 0u64;
+        {
+            let catalog = &self.catalog;
+            let cache = self.options.estimate_cache.then_some(&self.cache);
+            let mut jobs: Vec<JobSpec> = cluster
+                .jobs()
+                .filter(|s| s.elastic && !s.is_inference())
+                .cloned()
+                .collect();
+            jobs.sort_by_key(|s| s.id);
+            for spec in &jobs {
+                let accels = cluster.placement.accels_of(spec.id).to_vec();
+                if accels.is_empty() {
+                    continue; // unplaced or parked: other paths own it
+                }
+                let est_of = |aid: AccelId| {
+                    let c = cluster
+                        .placement
+                        .combo_on(aid)
+                        .copied()
+                        .unwrap_or(Combo::Solo(spec.id));
+                    value_via(catalog, cache, aid.accel, spec.id, &c)
+                };
+                let est: f64 = accels.iter().map(|a| est_of(*a)).sum();
+                if est + 1e-9 < spec.min_throughput
+                    && (accels.len() as u32) < spec.distributability
+                {
+                    // grow onto the estimated-fastest free instance
+                    let mut best: Option<(f64, usize)> = None;
+                    for (i, a) in free.iter().enumerate() {
+                        let v =
+                            value_via(catalog, cache, a.accel, spec.id, &Combo::Solo(spec.id));
+                        if best.map_or(true, |(bv, _)| v > bv) {
+                            best = Some((v, i));
+                        }
+                    }
+                    if let Some((_, i)) = best {
+                        let aid = free.remove(i);
+                        delta.push(PlacementOp::Assign {
+                            accel: aid,
+                            combo: Combo::Solo(spec.id),
+                        });
+                        grows += 1;
+                    }
+                } else if accels.len() >= 2 {
+                    // weakest instance this job holds solo (pairs stay)
+                    let mut weakest: Option<(f64, AccelId)> = None;
+                    for &aid in &accels {
+                        if cluster.placement.combo_on(aid).map_or(false, |c| c.len() == 1) {
+                            let v = est_of(aid);
+                            let better = weakest.map_or(true, |(wv, waid)| {
+                                v.total_cmp(&wv).then(aid.cmp(&waid)).is_lt()
+                            });
+                            if better {
+                                weakest = Some((v, aid));
+                            }
+                        }
+                    }
+                    if let Some((wv, victim)) = weakest {
+                        if est - wv >= spec.min_throughput / SCALE_DOWN_MARGIN {
+                            delta.push(PlacementOp::Evict { accel: victim });
+                            shrinks += 1;
+                            free.push(victim);
+                        }
+                    }
+                }
+            }
+        }
+        self.elastic_grows += grows;
+        self.elastic_shrinks += shrinks;
+    }
+
     /// Power knobs at simulated time `now`: DVFS enable from the
     /// options, carbon weight sampled off the diurnal signal (1.0
     /// without one).
@@ -1036,8 +1264,13 @@ impl GoghScheduler {
             .flat_map(|op| match *op {
                 PlacementOp::Assign { accel, .. }
                 | PlacementOp::Evict { accel }
-                | PlacementOp::SetPowerState { accel, .. } => vec![accel],
+                | PlacementOp::SetPowerState { accel, .. }
+                | PlacementOp::Resume { accel, .. } => vec![accel],
                 PlacementOp::Migrate { from, to, .. } => vec![from, to],
+                // the instances a Suspend clears are not known until the
+                // delta applies; they idle one tick and the governor
+                // re-states them on the next
+                PlacementOp::Suspend { .. } => vec![],
             })
             .collect();
         let catalog = &self.catalog;
@@ -1109,6 +1342,30 @@ impl GoghScheduler {
             self.explore(cluster, &mut placement);
         }
         self.events_since_full = 0;
+        // Suspend-transform (preemption mode): still-active jobs the new
+        // allocation drops — typically low-tier work shed by the
+        // tier-weighted slack — are parked instead of silently evicted,
+        // so their progress survives until the resume pass or a later
+        // re-solve lets them back in. The Suspends run first (a Suspend
+        // requires the job to still be placed); the remaining diff is
+        // computed against the post-suspend placement.
+        if self.options.preemption {
+            let dropped: Vec<JobId> = cluster
+                .active_job_ids()
+                .into_iter()
+                .filter(|&j| cluster.placement.is_placed(j) && !placement.is_placed(j))
+                .collect();
+            if !dropped.is_empty() {
+                let mut base = cluster.placement.clone();
+                let mut delta = PlacementDelta::new();
+                for j in dropped {
+                    delta.push(PlacementOp::Suspend { job: j });
+                    base.remove_job(j);
+                }
+                delta.ops.extend(PlacementDelta::diff(&base, &placement).ops);
+                return Ok(Decision::apply(delta));
+            }
+        }
         Ok(Decision::replace(&cluster.placement, &placement))
     }
 
@@ -1124,9 +1381,13 @@ impl GoghScheduler {
         if self.options.neighborhood == 0 {
             return Ok(None);
         }
-        // older unplaced jobs need global capacity — go full
+        // older unplaced jobs need global capacity — go full (parked
+        // jobs don't count: the resume pass owns them)
         let active = cluster.active_job_ids();
-        if active.iter().any(|&j| j != j1 && !cluster.placement.is_placed(j)) {
+        if active
+            .iter()
+            .any(|&j| j != j1 && !cluster.placement.is_placed(j) && !cluster.is_suspended(j))
+        {
             return Ok(None);
         }
         let ls = local_arrival_solve(
@@ -1262,7 +1523,7 @@ impl GoghScheduler {
         let unplaced: Vec<JobId> = cluster
             .active_job_ids()
             .into_iter()
-            .filter(|&j| !cluster.placement.is_placed(j))
+            .filter(|&j| !cluster.placement.is_placed(j) && !cluster.is_suspended(j))
             .collect();
         match unplaced.as_slice() {
             [] => Ok(Some(PlacementDelta::new())),
@@ -1417,6 +1678,11 @@ impl Scheduler for GoghScheduler {
                     if let Some(delta) = self.incremental_arrival(cluster, *job)? {
                         return Ok(Decision::apply(delta));
                     }
+                    // capacity tight: park a lower-tier victim before
+                    // paying for the global re-solve
+                    if let Some(delta) = self.preempt_for_arrival(cluster, *job) {
+                        return Ok(Decision::apply(delta));
+                    }
                 }
                 self.full_allocate(cluster)
             }
@@ -1439,7 +1705,7 @@ impl Scheduler for GoghScheduler {
                 let unplaced = cluster
                     .active_job_ids()
                     .iter()
-                    .any(|&j| !cluster.placement.is_placed(j));
+                    .any(|&j| !cluster.placement.is_placed(j) && !cluster.is_suspended(j));
                 if unplaced && sharded {
                     // sharded: place the stragglers locally before
                     // resorting to the global re-solve
@@ -1477,6 +1743,10 @@ impl Scheduler for GoghScheduler {
                 // scaling, then let the DVFS governor re-state whatever
                 // the autoscaler left alone
                 let mut delta = self.autoscale(cluster);
+                // parked jobs re-enter before elastic growth competes
+                // for the same free instances
+                self.resume_suspended(cluster, &mut delta);
+                self.elastic_training(cluster, &mut delta);
                 self.power_governor(cluster, &mut delta);
                 Ok(Decision::apply(delta))
             }
@@ -1595,9 +1865,12 @@ impl Gogh {
             cfg.monitor_interval_s,
             cfg.seed,
         )?
-        .with_migration_cost(cfg.migration_cost_s)
-        .with_power_cap(cfg.power.cap_w)
-        .with_carbon(cfg.power.carbon.signal());
+        .with_options(
+            EngineOptions::new()
+                .with_migration_cost(cfg.migration_cost_s)
+                .with_power_cap(cfg.power.cap_w)
+                .with_carbon(cfg.power.carbon.signal()),
+        );
         Ok((driver, oracle))
     }
 

@@ -40,6 +40,8 @@ pub fn seed_catalog(
             min_throughput: 0.0,
             distributability: 1,
             work: 0.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         };
         catalog.register_job(job.id, job.psi());

@@ -261,6 +261,8 @@ mod tests {
                 min_throughput: 0.0,
                 distributability: 1,
                 work: 100.0,
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             j.min_throughput = 0.3 * oracle.solo(&j, AccelType::P100);

@@ -16,7 +16,7 @@
 use crate::cluster::{
     AccelId, Cluster, ClusterSpec, Measurement, Monitor, Placement, PlacementDelta, PlacementOp,
 };
-use crate::engine::GoghCore;
+use crate::engine::{EngineOptions, GoghCore};
 use crate::metrics::RunReport;
 use crate::workload::{Combo, JobId, ThroughputOracle, Trace};
 use crate::Result;
@@ -72,6 +72,12 @@ impl Decision {
 
     /// Compatibility shim for full-placement policies: the delta that
     /// turns `current` into `target` (unchanged instances cost nothing).
+    ///
+    /// Hidden from the public API: every shipped policy now emits native
+    /// incremental deltas; this survives as the equivalence oracle for
+    /// the diff-vs-delta proptest and for the full re-solve path, which
+    /// genuinely computes a whole-placement target.
+    #[doc(hidden)]
     pub fn replace(current: &Placement, target: &Placement) -> Self {
         Self {
             delta: PlacementDelta::diff(current, target),
@@ -137,24 +143,11 @@ impl SimDriver {
         })
     }
 
-    /// Charge every migrated job `cost_s` seconds of restart stall
-    /// (integrated into energy, SLO and JCT accounting).
-    pub fn with_migration_cost(mut self, cost_s: f64) -> Self {
-        self.core = self.core.with_migration_cost(cost_s);
-        self
-    }
-
-    /// Enforce a cluster-wide power cap (watts); `None` lifts it. See
-    /// [`GoghCore::with_power_cap`].
-    pub fn with_power_cap(mut self, cap_w: Option<f64>) -> Self {
-        self.core = self.core.with_power_cap(cap_w);
-        self
-    }
-
-    /// Price emissions off a diurnal carbon signal. See
-    /// [`GoghCore::with_carbon`].
-    pub fn with_carbon(mut self, signal: Option<crate::power::CarbonSignal>) -> Self {
-        self.core = self.core.with_carbon(signal);
+    /// Apply the shared substrate knobs (migration cost, power cap,
+    /// carbon signal): one [`EngineOptions`] struct consumed by both
+    /// frontends, forwarded to [`GoghCore::with_options`].
+    pub fn with_options(mut self, opts: EngineOptions) -> Self {
+        self.core = self.core.with_options(opts);
         self
     }
 
@@ -227,6 +220,8 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         }
     }
@@ -631,7 +626,7 @@ mod tests {
             let spec = ClusterSpec::mix(&[(AccelType::V100, 2)]);
             let mut d = SimDriver::new(spec, oracle, trace, 0.0, 15.0, 1)
                 .unwrap()
-                .with_migration_cost(cost);
+                .with_options(EngineOptions::new().with_migration_cost(cost));
             d.run(&mut MigrateOnce { done: false }).unwrap()
         };
         let free = run(0.0);

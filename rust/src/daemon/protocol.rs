@@ -9,7 +9,7 @@
 //! closed set and a human `message` with position/field context.
 
 use crate::util::Json;
-use crate::workload::{InferenceSpec, JobId, JobSpec, ModelFamily, FAMILIES};
+use crate::workload::{InferenceSpec, JobId, JobSpec, ModelFamily, Priority, FAMILIES};
 
 /// Version of the request/response schema. The daemon answers requests
 /// with `v` ≤ this; larger values are rejected with
@@ -65,6 +65,9 @@ pub struct JobRequest {
     /// Remaining work (training) or serving lifetime (inference), in
     /// seconds of normalized-throughput / placed time.
     pub work: f64,
+    /// Priority tier; absent on the wire ⇒ `Standard` (the additive-v1
+    /// rule: pre-priority clients keep their exact behaviour).
+    pub priority: Priority,
     pub inference: Option<InferenceSpec>,
 }
 
@@ -79,6 +82,8 @@ impl JobRequest {
             min_throughput: self.min_throughput,
             distributability: self.distributability,
             work: self.work,
+            priority: self.priority,
+            elastic: false,
             inference: self.inference,
         }
     }
@@ -91,6 +96,9 @@ impl JobRequest {
             ("distributability", self.distributability.into()),
             ("work", self.work.into()),
         ];
+        if self.priority != Priority::Standard {
+            kv.push(("priority", self.priority.key().into()));
+        }
         if let Some(inf) = self.inference {
             let inf_json = Json::obj(vec![
                 ("base_rate", inf.base_rate.into()),
@@ -130,12 +138,24 @@ impl JobRequest {
                 latency_slo_s: req_f64(inf, "job.inference.latency_slo_s")?,
             }),
         };
+        let priority = match j.get("priority") {
+            None | Some(Json::Null) => Priority::Standard,
+            Some(v) => {
+                let key = v.as_str().ok_or_else(|| {
+                    ProtoError::bad_request(format!("job.priority: expected a string, got {v}"))
+                })?;
+                Priority::from_key(key).map_err(|e| {
+                    ProtoError::bad_request(format!("job.priority: {e}"))
+                })?
+            }
+        };
         Ok(Self {
             family,
             batch_size: opt_f64(j, "batch_size", 32.0, "job")? as u32,
             min_throughput: opt_f64(j, "min_throughput", 0.0, "job")?,
             distributability: (opt_f64(j, "distributability", 1.0, "job")? as u32).max(1),
             work,
+            priority,
             inference,
         })
     }
@@ -279,12 +299,14 @@ mod tests {
             min_throughput: 0.25,
             distributability: 2,
             work: 1800.0,
+            priority: Default::default(),
             inference: None,
         }
     }
 
     fn serve_job() -> JobRequest {
         JobRequest {
+            priority: Default::default(),
             inference: Some(InferenceSpec {
                 base_rate: 12.0,
                 diurnal_amplitude: 0.4,
@@ -325,6 +347,35 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn priority_is_additive_v1() {
+        // absent ⇒ Standard, and Standard is omitted on the wire, so
+        // pre-priority clients and transcripts are untouched
+        let line = r#"{"cmd":"submit","job":{"family":"lm","work":60}}"#;
+        match Request::parse(line).unwrap() {
+            Request::Submit { job } => assert_eq!(job.priority, Priority::Standard),
+            other => panic!("{other:?}"),
+        }
+        assert!(!train_job().to_json().to_string().contains("priority"));
+        // explicit tiers round-trip
+        let mut j = train_job();
+        j.priority = Priority::Critical;
+        let line = Request::Submit { job: j.clone() }.to_json().to_string();
+        assert!(line.contains(r#""priority":"critical""#), "{line}");
+        assert_eq!(Request::parse(&line).unwrap(), Request::Submit { job: j });
+        // junk tiers are bad_request naming the field
+        let line = r#"{"cmd":"submit","job":{"family":"lm","work":60,"priority":"vip"}}"#;
+        let e = Request::parse(line).unwrap_err();
+        assert_eq!(e.code, "bad_request");
+        assert!(e.message.contains("job.priority"), "{}", e.message);
+        // wire priority reaches the cluster spec; daemon jobs are rigid
+        let mut j = train_job();
+        j.priority = Priority::Best;
+        let spec = j.into_spec(JobId(3));
+        assert_eq!(spec.priority, Priority::Best);
+        assert!(!spec.elastic);
     }
 
     #[test]

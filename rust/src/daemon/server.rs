@@ -25,7 +25,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{build_scheduler, GoghScheduler};
 use crate::daemon::protocol::{error_envelope, ok_envelope, ProtoError, Request};
 use crate::daemon::snapshot::Snapshot;
-use crate::engine::GoghCore;
+use crate::engine::{EngineOptions, GoghCore};
 use crate::util::Json;
 use crate::workload::{JobId, JobSpec};
 use crate::Result;
@@ -208,6 +208,27 @@ impl DaemonState {
             ("grams_co2", report.grams_co2.into()),
             ("states", Json::Array(states)),
         ]);
+        // additive priority block (still protocol v1): preemption
+        // counters plus per-tier SLO attainment, best→critical
+        let suspended = cluster.suspended_job_ids().len();
+        let tiers = Json::Array(
+            crate::workload::Priority::ALL
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("tier", p.key().into()),
+                        ("attainment", report.tier_attainment[p.index()].into()),
+                    ])
+                })
+                .collect(),
+        );
+        let priority = Json::obj(vec![
+            ("preemptions", report.preemptions.into()),
+            ("suspended_now", suspended.into()),
+            ("suspended_seconds", report.suspended_seconds.into()),
+            ("ftf_p99", report.ftf_p99.into()),
+            ("tiers", tiers),
+        ]);
         ok_envelope(vec![
             ("backend", self.backend.into()),
             ("draining", self.draining.into()),
@@ -217,6 +238,7 @@ impl DaemonState {
             ("catalog", catalog),
             ("energy_joules", report.energy_joules.into()),
             ("power", power),
+            ("priority", priority),
         ])
     }
 }
@@ -230,7 +252,9 @@ fn queue_row(cluster: &Cluster, j: &JobSpec) -> Json {
         ("id", j.id.0.into()),
         ("family", j.family.name().into()),
         ("kind", kind.into()),
+        ("priority", j.priority.key().into()),
         ("placed", (!accels.is_empty()).into()),
+        ("suspended", cluster.is_suspended(j.id).into()),
         ("accels", Json::Array(accels)),
         ("work_remaining", j.work.into()),
     ])
@@ -253,9 +277,12 @@ pub fn serve(opts: DaemonOptions) -> Result<()> {
         opts.cfg.monitor_interval_s,
         opts.cfg.seed,
     )?
-    .with_migration_cost(opts.cfg.migration_cost_s)
-    .with_power_cap(opts.cfg.power.cap_w)
-    .with_carbon(opts.cfg.power.carbon.signal());
+    .with_options(
+        EngineOptions::new()
+            .with_migration_cost(opts.cfg.migration_cost_s)
+            .with_power_cap(opts.cfg.power.cap_w)
+            .with_carbon(opts.cfg.power.carbon.signal()),
+    );
 
     let mut next_job_id = 0;
     let mut draining = false;

@@ -16,8 +16,10 @@ use anyhow::Context as _;
 
 /// Version stamp written into every state file. Loads accept
 /// `1..=SNAPSHOT_VERSION`: version 1 predates power management, so its
-/// files simply restore with every accelerator at the nominal state.
-pub const SNAPSHOT_VERSION: u32 = 2;
+/// files simply restore with every accelerator at the nominal state;
+/// versions 1–2 predate priorities, so their jobs restore as
+/// `Standard`/rigid with nothing suspended.
+pub const SNAPSHOT_VERSION: u32 = 3;
 
 /// In-memory form of one state file (format: module docs above).
 #[derive(Debug, Clone, PartialEq)]
@@ -40,6 +42,9 @@ pub struct Snapshot {
     /// Non-nominal DVFS states, sorted (an absent accelerator is
     /// nominal). New in version 2; empty for version-1 files.
     pub power_states: Vec<(AccelId, PowerState)>,
+    /// Jobs parked by `PlacementOp::Suspend` at capture, ascending.
+    /// New in version 3; empty for older files.
+    pub suspended: Vec<JobId>,
     /// Undelivered queue events in dispatch order (no monitor tick).
     pub queue: Vec<(f64, CoreEvent)>,
     /// Learned state, embedded in the catalog store's own format.
@@ -76,6 +81,7 @@ impl Snapshot {
             placements,
             down: cluster.down_accels(),
             power_states: cluster.power_state_entries(),
+            suspended: cluster.suspended_job_ids(),
             queue: core.pending_events(),
             catalog: scheduler.catalog.to_json(),
         }
@@ -105,6 +111,17 @@ impl Snapshot {
             }
             core.cluster_mut().placement.assign(*accel, *combo);
         }
+        for j in &self.suspended {
+            anyhow::ensure!(
+                core.cluster().job(*j).is_some(),
+                "snapshot suspends unknown job {j}"
+            );
+            anyhow::ensure!(
+                !core.cluster().placement.is_placed(*j),
+                "snapshot suspends job {j} that is also placed"
+            );
+            core.cluster_mut().set_suspended(*j);
+        }
         core.cluster_mut().advance_to(self.now_s);
         core.restore_counters(self.jobs_total, self.jobs_completed, self.jobs_cancelled);
         for (at, ev) in &self.queue {
@@ -127,6 +144,7 @@ impl Snapshot {
         let down: Vec<Json> = self.down.iter().map(|a| accel_to_json(*a)).collect();
         let power: Vec<Json> =
             self.power_states.iter().map(|(a, s)| power_entry_json(*a, *s)).collect();
+        let suspended: Vec<Json> = self.suspended.iter().map(|j| Json::from(j.0)).collect();
         let queue: Vec<Json> = self.queue.iter().map(|(t, e)| event_to_json(*t, e)).collect();
         Json::obj(vec![
             ("version", SNAPSHOT_VERSION.into()),
@@ -138,6 +156,7 @@ impl Snapshot {
             ("placements", Json::Array(placements)),
             ("down", Json::Array(down)),
             ("power_states", Json::Array(power)),
+            ("suspended", Json::Array(suspended)),
             ("queue", Json::Array(queue)),
             ("catalog", self.catalog.clone()),
         ])
@@ -189,6 +208,16 @@ impl Snapshot {
                 power_states.push((accel, state));
             }
         }
+        // required from version 3 on; older files predate suspension
+        let mut suspended = Vec::new();
+        if version >= 3 {
+            for (i, e) in req_array(v, "suspended")?.iter().enumerate() {
+                let n = e
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("suspended[{i}]: bad job id {e}"))?;
+                suspended.push(JobId(n as u32));
+            }
+        }
         let mut queue = Vec::new();
         for (i, e) in req_array(v, "queue")?.iter().enumerate() {
             queue.push(event_from_json(e).with_context(|| format!("queue[{i}]"))?);
@@ -204,6 +233,7 @@ impl Snapshot {
             placements,
             down,
             power_states,
+            suspended,
             queue,
             catalog: v.get("catalog").context("snapshot: missing catalog")?.clone(),
         })
@@ -273,7 +303,7 @@ fn job_spec_to_json(j: &JobSpec) -> Json {
             ("latency_slo_s", inf.latency_slo_s.into()),
         ]),
     };
-    Json::obj(vec![
+    let mut kv = vec![
         ("id", j.id.0.into()),
         ("family", j.family.name().into()),
         ("batch_size", j.batch_size.into()),
@@ -281,8 +311,17 @@ fn job_spec_to_json(j: &JobSpec) -> Json {
         ("min_throughput", j.min_throughput.into()),
         ("distributability", j.distributability.into()),
         ("work", j.work.into()),
-        ("inference", inference),
-    ])
+    ];
+    // additive fields (version 3): defaults are omitted, so a
+    // priority-free job serializes exactly as version 2 wrote it
+    if j.priority != crate::workload::Priority::Standard {
+        kv.push(("priority", j.priority.key().into()));
+    }
+    if j.elastic {
+        kv.push(("elastic", true.into()));
+    }
+    kv.push(("inference", inference));
+    Json::obj(kv)
 }
 
 fn job_spec_from_json(v: &Json) -> Result<JobSpec> {
@@ -301,6 +340,15 @@ fn job_spec_from_json(v: &Json) -> Result<JobSpec> {
             latency_slo_s: inf.req_f64("latency_slo_s")?,
         }),
     };
+    let priority = match v.get("priority") {
+        None | Some(Json::Null) => crate::workload::Priority::Standard,
+        Some(p) => {
+            let key = p
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("priority: expected a string, got {p}"))?;
+            crate::workload::Priority::from_key(key)?
+        }
+    };
     Ok(JobSpec {
         id: JobId(v.req_f64("id")? as u32),
         family,
@@ -309,6 +357,8 @@ fn job_spec_from_json(v: &Json) -> Result<JobSpec> {
         min_throughput: v.req_f64("min_throughput")?,
         distributability: v.req_f64("distributability")? as u32,
         work: v.req_f64("work")?,
+        priority,
+        elastic: v.get("elastic").and_then(Json::as_bool).unwrap_or(false),
         inference,
     })
 }
@@ -369,6 +419,8 @@ mod tests {
             min_throughput: 0.1,
             distributability: 1,
             work,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         }
     }
@@ -376,6 +428,8 @@ mod tests {
     fn serving_job(id: u32) -> JobSpec {
         JobSpec {
             family: ModelFamily::LanguageModel,
+            priority: Default::default(),
+            elastic: false,
             inference: Some(InferenceSpec {
                 base_rate: 9.0,
                 diurnal_amplitude: 0.3,
@@ -546,11 +600,16 @@ mod tests {
         core.advance_to(10.0, &mut sched).unwrap();
         let text = Snapshot::capture(&core, &sched, 1, false).to_json().to_string();
         // rewrite to the exact byte shape a version-1 build produced:
-        // old version stamp, no power_states section at all
-        let v1 = text.replace("\"version\":2", "\"version\":1").replace(",\"power_states\":[]", "");
+        // old version stamp, no power_states or suspended sections
+        let v1 = text
+            .replace("\"version\":3", "\"version\":1")
+            .replace(",\"power_states\":[]", "")
+            .replace(",\"suspended\":[]", "");
         assert!(v1.contains("\"version\":1") && !v1.contains("power_states"), "{v1}");
+        assert!(!v1.contains("suspended"), "{v1}");
         let snap = Snapshot::from_json(&Json::parse(&v1).unwrap()).unwrap();
         assert!(snap.power_states.is_empty());
+        assert!(snap.suspended.is_empty());
 
         let (mut sched2, _) = build_scheduler(&cfg, &oracle).unwrap();
         let mut core2 = GoghCore::new(
@@ -566,6 +625,82 @@ mod tests {
         for a in core2.cluster().available_accels() {
             assert_eq!(core2.cluster().power_state(a), PowerState::Nominal);
         }
+    }
+
+    /// Priority tiers, elastic flags and the suspended set (new in
+    /// snapshot version 3) survive capture → serialize → restore, and
+    /// a restored parked job is suspended, not merely unplaced.
+    #[test]
+    fn priority_and_suspension_round_trip_through_snapshot() {
+        use crate::cluster::{PlacementDelta, PlacementOp};
+        use crate::workload::Priority;
+        let mut cfg = ExperimentConfig::default();
+        cfg.gogh.backend = crate::config::BackendKind::Native;
+        let oracle = ThroughputOracle::new(7);
+        let (mut sched, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        let mut critical = training_job(0, 500.0);
+        critical.priority = Priority::Critical;
+        let mut victim = training_job(1, 800.0);
+        victim.priority = Priority::Best;
+        victim.elastic = true;
+        victim.distributability = 3;
+        core.submit(0.0, critical);
+        core.submit(1.0, victim);
+        core.start_monitor();
+        core.advance_to(30.0, &mut sched).unwrap();
+        // park the best-effort job the way the preemption path would
+        let d = PlacementDelta {
+            ops: vec![PlacementOp::Suspend { job: JobId(1) }],
+        };
+        core.cluster_mut().apply_delta(&d).unwrap();
+
+        let snap = Snapshot::capture(&core, &sched, 2, false);
+        assert_eq!(snap.suspended, vec![JobId(1)]);
+        let text = snap.to_json().to_string();
+        assert!(text.contains(r#""priority":"critical""#), "{text}");
+        assert!(text.contains(r#""elastic":true"#), "{text}");
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap);
+
+        let (mut sched2, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core2 = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        back.restore_into(&mut core2, &mut sched2).unwrap();
+        let c = core2.cluster();
+        assert_eq!(c.job(JobId(0)).unwrap().priority, Priority::Critical);
+        let v = c.job(JobId(1)).unwrap();
+        assert_eq!(v.priority, Priority::Best);
+        assert!(v.elastic);
+        assert!(c.is_suspended(JobId(1)), "restored job must still be parked");
+        assert!(!c.placement.is_placed(JobId(1)));
+        // a corrupted file that suspends a placed job is refused
+        let bad = text.replace("\"suspended\":[1]", "\"suspended\":[0]");
+        let snap = Snapshot::from_json(&Json::parse(&bad).unwrap()).unwrap();
+        let (mut sched3, _) = build_scheduler(&cfg, &oracle).unwrap();
+        let mut core3 = GoghCore::new(
+            ClusterSpec::balanced(1),
+            oracle.clone(),
+            0.01,
+            cfg.monitor_interval_s,
+            7,
+        )
+        .unwrap();
+        let err = snap.restore_into(&mut core3, &mut sched3).unwrap_err();
+        assert!(err.to_string().contains("also placed"), "{err}");
     }
 
     #[test]

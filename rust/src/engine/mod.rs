@@ -29,6 +29,50 @@ use crate::power::{state_power_watts, CarbonSignal};
 use crate::workload::{serving, AccelType, JobId, JobSpec, ThroughputOracle, Trace, TraceEvent};
 use crate::Result;
 
+/// Substrate knobs shared by both frontends: [`GoghCore`] here and the
+/// simulator's [`crate::coordinator::SimDriver`] consume the same
+/// struct (via `with_options`), so a new knob is added in exactly one
+/// place instead of duplicating builder setters on each type.
+#[derive(Debug, Clone, Default)]
+pub struct EngineOptions {
+    /// restart penalty charged to every migrated or resumed job
+    /// (seconds of stall; 0 = free migrations).
+    pub migration_cost_s: f64,
+    /// cluster power cap in worst-case watts (None = uncapped).
+    pub power_cap_w: Option<f64>,
+    /// diurnal carbon/price signal for emissions accounting.
+    pub carbon: Option<CarbonSignal>,
+}
+
+impl EngineOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge every migrated/resumed job `cost_s` seconds of restart
+    /// stall (integrated into energy, SLO and JCT accounting).
+    pub fn with_migration_cost(mut self, cost_s: f64) -> Self {
+        self.migration_cost_s = cost_s.max(0.0);
+        self
+    }
+
+    /// Cap the cluster's worst-case draw at `cap_w` watts: policy
+    /// deltas are trimmed to fit (see [`Cluster::trim_to_power_cap`])
+    /// and the cluster rejects anything that still breaches.
+    pub fn with_power_cap(mut self, cap_w: Option<f64>) -> Self {
+        self.power_cap_w = cap_w;
+        self
+    }
+
+    /// Attach a diurnal carbon/price signal: the meters accrue gCO₂
+    /// and the `power:` report carries it (schedulers read the same
+    /// signal from their own options to reweight the objective).
+    pub fn with_carbon(mut self, signal: Option<CarbonSignal>) -> Self {
+        self.carbon = signal;
+        self
+    }
+}
+
 /// One queued input to the core: trace events, network submissions and
 /// the self-rescheduling monitor tick share this queue.
 #[derive(Debug, Clone, PartialEq)]
@@ -122,6 +166,18 @@ struct Accounting {
     /// integration intervals measured, and of those, within the cap
     cap_intervals: usize,
     cap_ok_intervals: usize,
+    /// seconds jobs spent parked by Suspend ops (summed over jobs)
+    suspended_s: f64,
+    /// ideal exclusive JCT per training job: work ÷ best solo
+    /// ground-truth throughput at submit — the finish-time-fairness
+    /// denominator (Gavel, PAPERS.md)
+    ideal_jct: HashMap<JobId, f64>,
+    /// finish-time fairness (actual ÷ ideal JCT) of completed training
+    /// jobs, pushed at completion, quantiled at report time
+    ftf: Vec<f64>,
+    /// per-priority-tier (attained, total) SLO-scored seconds; parked
+    /// jobs count toward the total but never toward attained
+    tier_time: [(f64, f64); 3],
 }
 
 /// The shared policy/event core: cluster + monitor + meters + event
@@ -191,26 +247,13 @@ impl GoghCore {
         })
     }
 
-    /// Charge every migrated job `cost_s` seconds of restart stall
-    /// (integrated into energy, SLO and JCT accounting).
-    pub fn with_migration_cost(mut self, cost_s: f64) -> Self {
-        self.migration_cost_s = cost_s.max(0.0);
-        self
-    }
-
-    /// Cap the cluster's worst-case draw at `cap_w` watts: policy deltas
-    /// are trimmed to fit (see [`Cluster::trim_to_power_cap`]) and the
-    /// cluster rejects anything that still breaches, transactionally.
-    pub fn with_power_cap(mut self, cap_w: Option<f64>) -> Self {
-        self.cluster.set_power_cap(cap_w);
-        self
-    }
-
-    /// Attach a diurnal carbon/price signal: the meters accrue gCO₂ and
-    /// the `power:` report carries it (schedulers read the same signal
-    /// from their own options to reweight the objective).
-    pub fn with_carbon(mut self, signal: Option<CarbonSignal>) -> Self {
-        self.carbon = signal;
+    /// Apply the shared substrate knobs (the one configuration point —
+    /// [`SimDriver`](crate::coordinator::SimDriver) forwards its own
+    /// `with_options` here).
+    pub fn with_options(mut self, opts: EngineOptions) -> Self {
+        self.migration_cost_s = opts.migration_cost_s.max(0.0);
+        self.cluster.set_power_cap(opts.power_cap_w);
+        self.carbon = opts.carbon;
         self
     }
 
@@ -265,6 +308,7 @@ impl GoghCore {
         if job.is_inference() {
             self.report.inference_total += 1;
         }
+        self.note_ideal_jct(&job);
         self.arrivals_pending += 1;
         self.last_arrival_t = self.last_arrival_t.max(at);
         self.queue.push(at, CoreEvent::Arrival(job));
@@ -318,7 +362,28 @@ impl GoghCore {
     /// keeping its original arrival time for JCT accounting.
     pub fn restore_job(&mut self, job: JobSpec, arrived_at: f64) {
         self.state.arrival_time.insert(job.id, arrived_at);
+        self.note_ideal_jct(&job);
         self.cluster.add_job(job);
+    }
+
+    /// Record the job's ideal exclusive JCT — its work at the best solo
+    /// ground-truth throughput anywhere in the cluster, as if it ran
+    /// alone from arrival. The finish-time-fairness ratio reported as
+    /// `ftf_p99` divides the actual JCT by this (Gavel, PAPERS.md);
+    /// inference jobs serve until cancelled and are scored by latency
+    /// attainment instead.
+    fn note_ideal_jct(&mut self, job: &JobSpec) {
+        if job.is_inference() {
+            return;
+        }
+        let oracle = self.monitor.oracle();
+        let best = crate::workload::ACCEL_TYPES
+            .iter()
+            .map(|a| oracle.solo(job, *a))
+            .fold(0.0_f64, f64::max);
+        if best > 0.0 && job.work > 0.0 {
+            self.state.ideal_jct.insert(job.id, job.work / best);
+        }
     }
 
     /// Restore hook: seed the run counters a snapshot carried across a
@@ -498,6 +563,12 @@ impl GoghCore {
         };
         report.joules_by_state = self.meter_total.joules_by_state();
         report.grams_co2 = self.meter_total.grams_co2();
+        report.suspended_seconds = self.state.suspended_s;
+        report.ftf_p99 = percentile(&self.state.ftf, 0.99);
+        report.tier_attainment = self
+            .state
+            .tier_time
+            .map(|(ok, total)| if total > 0.0 { ok / total } else { 1.0 });
         report
     }
 
@@ -514,10 +585,15 @@ impl GoghCore {
         let delta = self.cluster.trim_to_power_cap(&decision.delta);
         let outcome = self.cluster.apply_delta(&delta)?;
         self.report.migrations += outcome.moves;
-        // jobs restarting from scratch: migrated by this delta, plus any
-        // failure-evicted job re-placed now (unplaced when the delta
-        // applied, so migrated_jobs cannot see it — the sets are disjoint)
+        self.report.preemptions += outcome.suspended_jobs.len();
+        // jobs restarting from scratch: migrated by this delta, resumed
+        // from a parked state (they pay the same restart stall), plus
+        // any failure-evicted job re-placed now (unplaced when the delta
+        // applied, so migrated_jobs cannot see it — the sets are
+        // disjoint). stall_job never double-charges an overlap, so a
+        // job in two lists costs one stall.
         let mut restarted = outcome.migrated_jobs;
+        restarted.extend(outcome.resumed_jobs);
         let replaced: Vec<JobId> = self
             .state
             .failure_evicted
@@ -626,10 +702,19 @@ impl GoghCore {
             let achieved = per_job.get(&id).copied().unwrap_or(0.0);
             let stalled_until = self.cluster.stalled_until(id);
             let run_dt = (t1 - stalled_until.max(t0)).clamp(0.0, dt);
+            // Parked jobs hold no instances: no progress, no SLO deficit
+            // (parking is a deliberate policy action, not a violation),
+            // but the parked time is reported and never counts as
+            // attained in the per-tier score.
+            let parked = self.cluster.is_suspended(id);
+            if parked {
+                self.state.suspended_s += dt;
+            }
             let spec = self
                 .cluster
                 .job(id)
                 .ok_or_else(|| anyhow::anyhow!("active job {id} has no spec"))?;
+            let tier = spec.priority.index();
             if let Some(inf) = spec.inference {
                 // serving capacity over the interval, de-rated by the
                 // stalled fraction (a restarting replica serves nothing);
@@ -640,6 +725,12 @@ impl GoghCore {
                 let lam = spec.request_rate_at(t0);
                 let lat = serving::mmc_sojourn(lam, &eff);
                 let ok = lat <= inf.latency_slo_s;
+                if let Some(tt) = self.state.tier_time.get_mut(tier) {
+                    tt.1 += dt;
+                    if ok && !parked {
+                        tt.0 += dt;
+                    }
+                }
                 self.state.inf_total_s += dt;
                 if ok {
                     self.state.inf_attained_s += dt;
@@ -665,7 +756,14 @@ impl GoghCore {
             } else {
                 let avg = achieved * run_dt / dt;
                 let deficit = (spec.min_throughput - avg).max(0.0);
-                if deficit > 1e-9 {
+                let ok = deficit <= 1e-9;
+                if let Some(tt) = self.state.tier_time.get_mut(tier) {
+                    tt.1 += dt;
+                    if ok && !parked {
+                        tt.0 += dt;
+                    }
+                }
+                if !ok && !parked {
                     self.report.slo_deficit += deficit * dt;
                     slo_violated = true;
                 }
@@ -698,11 +796,26 @@ impl GoghCore {
                 }
                 let arrived = self.state.arrival_time.get(&id).copied().unwrap_or(0.0);
                 self.state.jct_sum += t1 - arrived;
+                if let Some(ideal) = self.state.ideal_jct.remove(&id) {
+                    self.state.ftf.push((t1 - arrived) / ideal.max(1e-9));
+                }
                 self.dispatch(policy, ClusterEvent::JobCompleted { job: id })?;
             }
         }
         Ok(())
     }
+}
+
+/// Quantile of an unsorted sample by the nearest-rank rule (0.0 when
+/// the sample is empty — reports print it unconditionally).
+fn percentile(sample: &[f64], q: f64) -> f64 {
+    if sample.is_empty() {
+        return 0.0;
+    }
+    let mut v = sample.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((v.len() as f64 * q).ceil() as usize).clamp(1, v.len()) - 1;
+    v.get(idx).copied().unwrap_or(0.0)
 }
 
 #[cfg(test)]
@@ -749,6 +862,8 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         }
     }
@@ -847,7 +962,7 @@ mod tests {
         let spec = ClusterSpec::mix(&[(AccelType::V100, 2)]);
         let mut c = GoghCore::new(spec, ThroughputOracle::new(9), 0.0, 15.0, 1)
             .unwrap()
-            .with_power_cap(Some(250.0));
+            .with_options(EngineOptions::new().with_power_cap(Some(250.0)));
         c.submit(1.0, job(0, 40.0));
         c.submit(2.0, job(1, 40.0));
         c.run(&mut FirstFit, 3600.0).unwrap();
@@ -863,13 +978,70 @@ mod tests {
     }
 
     #[test]
+    fn suspend_counts_preemption_and_resume_charges_stall() {
+        struct ParkOnce {
+            parked: bool,
+            resumed: bool,
+        }
+        impl Scheduler for ParkOnce {
+            fn name(&self) -> &str {
+                "parkonce"
+            }
+            fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
+                let mut delta = crate::cluster::PlacementDelta::new();
+                match event {
+                    ClusterEvent::JobArrived { job } => delta.push(PlacementOp::Assign {
+                        accel: cluster.spec.accels[0],
+                        combo: Combo::Solo(*job),
+                    }),
+                    ClusterEvent::MonitorTick { .. } if !self.parked => {
+                        self.parked = true;
+                        delta.push(PlacementOp::Suspend { job: JobId(0) });
+                    }
+                    ClusterEvent::MonitorTick { .. } if !self.resumed => {
+                        self.resumed = true;
+                        delta.push(PlacementOp::Resume {
+                            job: JobId(0),
+                            accel: cluster.spec.accels[1],
+                        });
+                    }
+                    _ => {}
+                }
+                Ok(Decision::apply(delta))
+            }
+        }
+        let mut c = core(13).with_options(EngineOptions::new().with_migration_cost(5.0));
+        c.submit(1.0, job(0, 200.0));
+        let mut policy = ParkOnce {
+            parked: false,
+            resumed: false,
+        };
+        c.run(&mut policy, 24.0 * 3600.0).unwrap();
+        let report = c.report(&policy);
+        assert_eq!(report.jobs_completed, 1);
+        assert_eq!(report.preemptions, 1);
+        // parked from the first tick (t=15) to the second (t=30)
+        assert!(
+            (report.suspended_seconds - 15.0).abs() < 1e-6,
+            "{}",
+            report.suspended_seconds
+        );
+        // the resume paid the 5 s restart stall
+        assert!(report.migration_stall_s >= 5.0 - 1e-9, "{}", report.migration_stall_s);
+        // parked seconds never count as attained for the job's tier
+        assert!(report.tier_attainment[1] < 1.0, "{}", report.tier_attainment[1]);
+        // the parked job finished later than its exclusive ideal
+        assert!(report.ftf_p99 > 1.0, "{}", report.ftf_p99);
+    }
+
+    #[test]
     fn carbon_signal_accrues_emissions() {
         let signal = crate::power::CarbonSignal {
             base_gco2_per_kwh: 420.0,
             amplitude: 0.35,
             phase_s: 0.0,
         };
-        let mut c = core(11).with_carbon(Some(signal));
+        let mut c = core(11).with_options(EngineOptions::new().with_carbon(Some(signal)));
         c.submit(1.0, job(0, 40.0));
         c.run(&mut FirstFit, 3600.0).unwrap();
         let report = c.report(&FirstFit);

@@ -203,19 +203,25 @@ pub fn build_problem1(
     for j in input.jobs {
         let (mut cover_s, mut thr_s) = (None, None);
         if let Some(p) = input.slack_penalty {
+            // Tier weighting: slack on a Critical job costs 4× the
+            // Standard rate and slack on a Best job 1/4 of it, so under
+            // contention the optimizer sheds SLOs bottom-tier first.
+            // Standard's weight is 1.0, keeping priority-free runs
+            // bit-identical to the unweighted formulation.
+            let w = j.priority.weight();
             cover_s = Some(model.add_var(
                 format!("sc[{}]", j.id),
                 0.0,
                 1.0,
                 VarKind::Continuous,
-                4.0 * p,
+                4.0 * p * w,
             ));
             thr_s = Some(model.add_var(
                 format!("st[{}]", j.id),
                 0.0,
                 j.min_throughput.max(0.0),
                 VarKind::Continuous,
-                p / j.min_throughput.max(1e-3),
+                w * p / j.min_throughput.max(1e-3),
             ));
         }
         slacks.insert(j.id, (cover_s, thr_s));
@@ -362,6 +368,8 @@ mod tests {
                     min_throughput: 0.0,
                     distributability: 2,
                     work: 100.0,
+                    priority: Default::default(),
+                    elastic: false,
                     inference: None,
                 };
                 j.min_throughput = 0.4 * oracle.solo(&j, AccelType::P100);
@@ -659,6 +667,51 @@ mod tests {
         let sol = solve(&loose);
         let replicas: u32 = sol.assignments.iter().map(|(_, _, m)| m).sum();
         assert_eq!(replicas, 1, "{:?}", sol.assignments);
+    }
+
+    #[test]
+    fn tier_weight_sheds_best_effort_job_first() {
+        // Two identical jobs, one K80, solos only, D_j = 1: exactly one
+        // job can be covered. The Critical job's slack costs 16× the
+        // Best job's, so the optimizer must shed the Best-effort one.
+        let oracle = ThroughputOracle::new(11);
+        let mut jobs = mk_jobs(2, &oracle);
+        jobs[1].family = jobs[0].family;
+        jobs[1].batch_size = jobs[0].batch_size;
+        for j in &mut jobs {
+            j.min_throughput = 0.3 * oracle.solo(j, AccelType::K80);
+            j.distributability = 1;
+        }
+        jobs[0].priority = crate::workload::Priority::Best;
+        jobs[1].priority = crate::workload::Priority::Critical;
+        let mut counts = BTreeMap::new();
+        counts.insert(AccelType::K80, 1u32);
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 0,
+            slack_penalty: Some(1000.0),
+            throughput_bonus: 0.0,
+            now_s: 0.0,
+            power: PowerKnobs::default(),
+        };
+        let sol = solve_problem1(&input, &BnbConfig::default());
+        assert!(matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible));
+        assert_eq!(sol.violated_jobs, vec![jobs[0].id], "{:?}", sol.violated_jobs);
+        assert!(sol
+            .assignments
+            .iter()
+            .any(|(_, c, m)| c.contains(jobs[1].id) && *m >= 1));
     }
 
     #[test]

@@ -9,33 +9,38 @@
 //!
 //! (Argument parsing is hand-rolled — offline build, see Cargo.toml.)
 
-use gogh::baselines::{GreedyScheduler, OracleScheduler, RandomScheduler};
+use gogh::baselines::{GavelRoundsScheduler, GreedyScheduler, OracleScheduler, RandomScheduler};
 use gogh::config::{BackendKind, CarbonConfig, ExperimentConfig};
 use gogh::coordinator::{Gogh, Scheduler, SimDriver};
 use gogh::daemon::{JobRequest, Request};
+use gogh::engine::EngineOptions;
 use gogh::runtime::Engine;
 use gogh::util::{Args, Json};
-use gogh::workload::{InferenceSpec, ThroughputOracle, Trace, FAMILIES};
+use gogh::workload::{InferenceSpec, Priority, ThroughputOracle, Trace, FAMILIES};
 use gogh::Result;
 
 const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in heterogeneous clusters
 
 USAGE:
-  gogh simulate [--policy gogh|random|greedy|oracle] [--jobs N] [--seed S]
+  gogh simulate [--policy gogh|random|greedy|oracle|gavel] [--jobs N] [--seed S]
                 [--config cfg.json]
-                [--preset default|large|mixed|serving|powercap|carbon]
+                [--preset default|large|mixed|serving|powercap|carbon|
+                          priority|burst|contended]
                 [--shards P] [--backend auto|pjrt|native|none]
                 [--save-catalog catalog.json] [--gavel-csv data.csv]
                 [--cancel-rate P] [--accel-churn N] [--migration-cost-s S]
                 [--inference-fraction F] [--power-cap W]
                 [--power-dvfs true|false] [--carbon-trace signal.json]
+                [--preemption true|false]
   gogh info [--workloads]
   gogh solve [--jobs N] [--servers-per-type K] [--seed S]
-  gogh config [--preset default|large|mixed|serving|powercap|carbon]
+  gogh config [--preset default|large|mixed|serving|powercap|carbon|
+                        priority|burst|contended]
 
 Daemon clients (talk to a running goghd; see docs/PROTOCOL.md):
   gogh submit --family NAME --work S [--batch N] [--min-throughput F]
-              [--distributability N] [--rate R --latency-slo S]
+              [--distributability N] [--priority best|standard|critical]
+              [--rate R --latency-slo S]
               [--diurnal-amplitude A] [--diurnal-phase-s P]
   gogh submit --file jobs.json        (a JSON array of job objects)
   gogh queue | status | drain
@@ -57,6 +62,14 @@ The `powercap` and `carbon` presets turn on the power subsystem
 resp. a diurnal grid carbon signal. --power-cap sets/overrides the cap
 in watts, --power-dvfs toggles the DVFS layer, and --carbon-trace reads
 a {\"base_gco2_per_kwh\", \"amplitude\", \"phase_s\"} JSON signal.
+
+The `priority`, `burst`, and `contended` presets mix priority tiers
+(best/standard/critical) and elastic training jobs into the trace and
+turn on GOGH's preemption path: when capacity is tight a critical
+arrival may park (`Suspend`) best-effort jobs, which resume later
+without losing progress. --preemption toggles the path; the `gavel`
+policy is the round-based finish-time-fairness baseline it is scored
+against.
 
 --backend picks the P1/P2 estimator engine: `pjrt` (AOT artifacts,
 errors if absent), `native` (pure-Rust MLP, zero artifacts), `none`
@@ -147,6 +160,9 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
         cfg.power.carbon =
             CarbonConfig::from_json(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
     }
+    if let Some(p) = args.get_parse::<bool>("preemption") {
+        cfg.gogh.preemption = p;
+    }
     Ok(cfg)
 }
 
@@ -227,14 +243,20 @@ fn simulate(args: &Args) -> Result<()> {
                 cfg.monitor_interval_s,
                 cfg.seed,
             )?
-            .with_migration_cost(cfg.migration_cost_s)
-            .with_power_cap(cfg.power.cap_w)
-            .with_carbon(cfg.power.carbon.signal());
+            .with_options(
+                EngineOptions::new()
+                    .with_migration_cost(cfg.migration_cost_s)
+                    .with_power_cap(cfg.power.cap_w)
+                    .with_carbon(cfg.power.carbon.signal()),
+            );
             let mut sched: Box<dyn Scheduler> = match other {
                 "random" => Box::new(RandomScheduler::new(cfg.seed)),
                 "greedy" => Box::new(GreedyScheduler::new()),
                 "oracle" => Box::new(OracleScheduler::new(oracle, cfg.optimizer.clone())),
-                _ => anyhow::bail!("unknown policy {other:?} (want gogh|random|greedy|oracle)"),
+                "gavel" => Box::new(GavelRoundsScheduler::new(oracle)),
+                _ => {
+                    anyhow::bail!("unknown policy {other:?} (want gogh|random|greedy|oracle|gavel)")
+                }
             };
             driver.run(sched.as_mut())?
         }
@@ -294,6 +316,23 @@ fn simulate(args: &Args) -> Result<()> {
             report.grams_co2
         );
     }
+    // emitted whenever priority tiers are in play (tiered/elastic
+    // trace, preemption enabled, or any job actually parked) — the CI
+    // priority smoke greps and parses this line
+    let priority_active = cfg.trace.critical_fraction > 0.0
+        || cfg.trace.best_fraction > 0.0
+        || cfg.trace.elastic_fraction > 0.0
+        || cfg.gogh.preemption
+        || report.preemptions > 0
+        || report.suspended_seconds > 0.0;
+    if priority_active {
+        let [best, standard, critical] = report.tier_attainment;
+        println!(
+            "priority: {} preemptions, {:.0} s suspended, attainment best {:.3} / \
+             standard {:.3} / critical {:.3}, ftf p99 {:.2}",
+            report.preemptions, report.suspended_seconds, best, standard, critical, report.ftf_p99
+        );
+    }
     Ok(())
 }
 
@@ -351,6 +390,8 @@ fn solve(args: &Args) -> Result<()> {
             min_throughput: 0.0,
             distributability: 2,
             work: 100.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         };
         j.min_throughput = 0.4 * oracle.solo(&j, gogh::workload::AccelType::P100);
@@ -454,12 +495,17 @@ fn job_from_flags(args: &Args) -> Result<JobRequest> {
         }),
         _ => anyhow::bail!("inference jobs need both --rate and --latency-slo"),
     };
+    let priority = match args.get("priority") {
+        Some(key) => Priority::from_key(key)?,
+        None => Priority::Standard,
+    };
     Ok(JobRequest {
         family,
         batch_size: args.get_parse("batch").unwrap_or(32),
         min_throughput: args.get_parse("min-throughput").unwrap_or(0.0),
         distributability: args.get_parse::<u32>("distributability").unwrap_or(1).max(1),
         work,
+        priority,
         inference,
     })
 }
@@ -510,11 +556,17 @@ fn queue(args: &Args) -> Result<()> {
             .iter()
             .filter_map(Json::as_str)
             .collect();
+        // priority/suspended are additive-v1: absent when talking to
+        // a pre-priority daemon, so default rather than error
+        let tier = j.get("priority").and_then(Json::as_str).unwrap_or("standard");
+        let suspended = j.get("suspended").and_then(Json::as_bool).unwrap_or(false);
         println!(
-            "  j{} {} {} placed={} work={:.1}",
+            "  j{} {} {} [{}{}] placed={} work={:.1}",
             j.req_f64("id")? as u64,
             j.req_str("family")?,
             j.req_str("kind")?,
+            tier,
+            if suspended { ", suspended" } else { "" },
             if accels.is_empty() { "-".to_string() } else { accels.join("+") },
             j.req_f64("work_remaining")?
         );
@@ -590,6 +642,29 @@ fn status(args: &Args) -> Result<()> {
         if !states.is_empty() {
             println!("  non-nominal states: {}", states.join(", "));
         }
+    }
+    // priority block (absent on pre-priority daemons — unknown-field rule)
+    if let Some(p) = resp.get("priority") {
+        let tiers: Vec<String> = p
+            .get("tiers")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|t| {
+                let tier = t.get("tier").and_then(Json::as_str)?;
+                let att = t.get("attainment").and_then(Json::as_f64)?;
+                Some(format!("{tier} {att:.3}"))
+            })
+            .collect();
+        println!(
+            "priority: {} preemptions, {} suspended now, {:.0} s suspended, \
+             ftf p99 {:.2} ({})",
+            p.req_f64("preemptions")? as u64,
+            p.req_f64("suspended_now")? as u64,
+            p.req_f64("suspended_seconds")?,
+            p.req_f64("ftf_p99")?,
+            tiers.join(", ")
+        );
     }
     Ok(())
 }

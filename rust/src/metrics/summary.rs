@@ -69,6 +69,17 @@ pub struct RunReport {
     pub joules_by_state: [f64; 3],
     /// cumulative emissions under the carbon signal (g; 0 without one)
     pub grams_co2: f64,
+    /// jobs parked by `Suspend` ops over the run (preemption count)
+    pub preemptions: usize,
+    /// job-seconds spent parked (summed across suspended jobs)
+    pub suspended_seconds: f64,
+    /// p99 finish-time fairness over completed training jobs: actual
+    /// JCT ÷ ideal exclusive JCT (Gavel, PAPERS.md); 0 when none
+    pub ftf_p99: f64,
+    /// per-priority-tier SLO attainment `[best, standard, critical]`:
+    /// fraction of each tier's scored seconds that met the SLO (parked
+    /// seconds never count as attained; 1.0 for an empty tier)
+    pub tier_attainment: [f64; 3],
 }
 
 impl RunReport {
@@ -85,7 +96,7 @@ impl RunReport {
     pub fn row(&self) -> String {
         format!(
             "{:<14} {:>10.0} {:>12.0} {:>7}/{:<4} {:>6} {:>9.3} {:>6} {:>7.1} {:>9} {:>7.1} \
-             {:>4}/{:<4} {:>8.3} {:>6.3}",
+             {:>4}/{:<4} {:>8.3} {:>6.3} {:>7} {:>8.0} {:>7.2}",
             self.scheduler,
             self.energy_joules,
             self.total_energy_joules,
@@ -101,12 +112,16 @@ impl RunReport {
             self.inference_total,
             self.inference_p99_latency_s,
             self.inference_attainment,
+            self.preemptions,
+            self.suspended_seconds,
+            self.ftf_p99,
         )
     }
 
     pub fn header() -> String {
         format!(
-            "{:<14} {:>10} {:>12} {:>12} {:>6} {:>9} {:>6} {:>7} {:>9} {:>7} {:>9} {:>8} {:>6}",
+            "{:<14} {:>10} {:>12} {:>12} {:>6} {:>9} {:>6} {:>7} {:>9} {:>7} {:>9} {:>8} {:>6} \
+             {:>7} {:>8} {:>7}",
             "scheduler",
             "busy_J",
             "total_J",
@@ -119,7 +134,10 @@ impl RunReport {
             "queue_s",
             "inf_met",
             "p99_lat",
-            "attain"
+            "attain",
+            "preempt",
+            "susp_s",
+            "ftf_p99"
         )
     }
 }
@@ -381,6 +399,24 @@ mod tests {
         assert!(row.contains("0.930"), "{row}");
         assert!(RunReport::header().contains("inf_met"));
         assert!(RunReport::header().contains("attain"));
+    }
+
+    #[test]
+    fn report_row_carries_priority_columns() {
+        let r = RunReport {
+            scheduler: "gogh".into(),
+            preemptions: 3,
+            suspended_seconds: 120.0,
+            ftf_p99: 1.75,
+            tier_attainment: [0.5, 0.8, 1.0],
+            ..Default::default()
+        };
+        let row = r.row();
+        assert!(row.contains("120"), "{row}");
+        assert!(row.contains("1.75"), "{row}");
+        for col in ["preempt", "susp_s", "ftf_p99"] {
+            assert!(RunReport::header().contains(col), "missing {col}");
+        }
     }
 
     #[test]

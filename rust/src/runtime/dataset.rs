@@ -76,6 +76,8 @@ fn mk_job(id: u32, cfg: (ModelFamily, u32)) -> JobSpec {
         min_throughput: 0.0,
         distributability: 1,
         work: 1.0,
+        priority: Default::default(),
+        elastic: false,
         inference: None,
     }
 }

@@ -205,6 +205,8 @@ mod tests {
             min_throughput: 0.0,
             distributability: 1,
             work: 1.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         }
     }

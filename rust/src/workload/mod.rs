@@ -71,6 +71,67 @@ impl InferenceSpec {
     }
 }
 
+/// Priority tier of a job. Tiers order the scheduler's sympathies under
+/// contention: the ILP weights a tier's SLO slack by
+/// [`Priority::weight`], and with preemption enabled a higher-tier
+/// arrival may suspend lower-tier victims to get capacity
+/// ([`crate::cluster::PlacementOp::Suspend`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Best-effort: cheapest to violate, first to be preempted.
+    Best,
+    /// The default tier (and what every pre-priority trace ran as).
+    #[default]
+    Standard,
+    /// Latency- or deadline-critical: its slack is priced 4× Standard
+    /// and it may preempt lower tiers when capacity is tight.
+    Critical,
+}
+
+impl Priority {
+    /// Every tier, in ascending order (index order of the per-tier
+    /// report accumulators).
+    pub const ALL: [Priority; 3] = [Priority::Best, Priority::Standard, Priority::Critical];
+
+    /// Stable wire/snapshot/config key.
+    pub fn key(self) -> &'static str {
+        match self {
+            Priority::Best => "best",
+            Priority::Standard => "standard",
+            Priority::Critical => "critical",
+        }
+    }
+
+    pub fn from_key(s: &str) -> crate::Result<Self> {
+        match s {
+            "best" => Ok(Priority::Best),
+            "standard" => Ok(Priority::Standard),
+            "critical" => Ok(Priority::Critical),
+            other => anyhow::bail!("unknown priority {other:?} (want best|standard|critical)"),
+        }
+    }
+
+    /// Index into `[best, standard, critical]` accumulators.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Best => 0,
+            Priority::Standard => 1,
+            Priority::Critical => 2,
+        }
+    }
+
+    /// Multiplier on this tier's SLO-slack penalty in the Problem-1
+    /// objective. `Standard` is exactly 1.0 so priority-free workloads
+    /// price bit-identically to the pre-priority objective.
+    pub fn weight(self) -> f64 {
+        match self {
+            Priority::Best => 0.25,
+            Priority::Standard => 1.0,
+            Priority::Critical => 4.0,
+        }
+    }
+}
+
 /// A deep-learning job as the scheduler sees it (paper §2.2: the
 /// attribute vector Ψ_j is derived from these fields).
 #[derive(Debug, Clone, PartialEq)]
@@ -84,11 +145,21 @@ pub struct JobSpec {
     /// inference jobs — their requirement is the latency SLO instead.
     pub min_throughput: f64,
     /// Distributability D_j: max number of accelerators (constraint 2c).
-    /// For inference jobs this is the replica cap R_j.
+    /// For inference jobs this is the replica cap R_j; for elastic
+    /// training jobs it is the top of the elastic accel range.
     pub distributability: u32,
     /// Remaining work in normalized-throughput · seconds. For inference
     /// jobs: remaining serving lifetime in *placed* seconds.
     pub work: f64,
+    /// Priority tier (see [`Priority`]; `Standard` reproduces the
+    /// pre-priority behaviour everywhere).
+    pub priority: Priority,
+    /// Elastic training: the coordinator's monitor-tick path may grow or
+    /// shrink this job's accelerator count within `1..=distributability`
+    /// (mirroring the inference replica autoscaler), and a pure
+    /// grow/shrink is not billed as a migration. Ignored for inference
+    /// jobs (their replicas are always elastic).
+    pub elastic: bool,
     /// Serving profile when this is an inference job; `None` = training.
     pub inference: Option<InferenceSpec>,
 }
@@ -208,6 +279,8 @@ mod tests {
             min_throughput: 0.2,
             distributability: 1,
             work: 10.0,
+            priority: Priority::Standard,
+            elastic: false,
             inference: None,
         };
         assert_eq!(j.kind(), JobKind::Training);
@@ -227,6 +300,22 @@ mod tests {
         // trough: 10 · 0.5
         assert!((j.request_rate_at(3.0 * 21_600.0) - 5.0).abs() < 1e-9);
         assert_eq!(JobKind::default(), JobKind::Training);
+    }
+
+    #[test]
+    fn priority_keys_order_and_weights() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::from_key(p.key()).unwrap(), p);
+            assert_eq!(Priority::ALL[p.index()], p);
+        }
+        // tiers are ordered (preemption compares them) and Standard's
+        // weight is exactly 1.0 (priority-free objectives must not move)
+        assert!(Priority::Best < Priority::Standard && Priority::Standard < Priority::Critical);
+        assert_eq!(Priority::Standard.weight(), 1.0);
+        assert!(Priority::Best.weight() < 1.0 && Priority::Critical.weight() > 1.0);
+        assert_eq!(Priority::default(), Priority::Standard);
+        let err = Priority::from_key("vip").unwrap_err().to_string();
+        assert!(err.contains("best|standard|critical"), "{err}");
     }
 
     #[test]

@@ -111,6 +111,8 @@ mod tests {
             min_throughput: 0.0,
             distributability: 4,
             work: 100.0,
+            priority: Default::default(),
+            elastic: false,
             inference: Some(InferenceSpec {
                 base_rate,
                 diurnal_amplitude: 0.0,

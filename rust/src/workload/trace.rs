@@ -7,7 +7,7 @@ use crate::util::Rng;
 
 use super::families::{ModelFamily, FAMILIES};
 use super::gavel::ThroughputOracle;
-use super::{serving, InferenceSpec, JobId, JobSpec};
+use super::{serving, InferenceSpec, JobId, JobSpec, Priority};
 use crate::workload::families::AccelType;
 
 /// Trace generation parameters.
@@ -37,6 +37,16 @@ pub struct TraceConfig {
     /// Inference fields draw from their own RNG stream, so 0 keeps the
     /// arrival trace byte-identical to the pre-inference generator.
     pub inference_fraction: f64,
+    /// Fraction of arrivals in the `Critical` priority tier. Tier and
+    /// elastic draws use their own RNG stream (like inference above),
+    /// so all-zero fractions keep traces byte-identical to the
+    /// pre-priority generator.
+    pub critical_fraction: f64,
+    /// Fraction of arrivals in the best-effort tier.
+    pub best_fraction: f64,
+    /// Probability that a *training* arrival is elastic (grow/shrink
+    /// within `1..=distributability` at monitor ticks).
+    pub elastic_fraction: f64,
     pub seed: u64,
 }
 
@@ -51,6 +61,9 @@ impl Default for TraceConfig {
             cancel_rate: 0.0,
             accel_churn: 0.0,
             inference_fraction: 0.0,
+            critical_fraction: 0.0,
+            best_fraction: 0.0,
+            elastic_fraction: 0.0,
             seed: 17,
         }
     }
@@ -73,6 +86,9 @@ impl TraceConfig {
             cancel_rate: 0.06,
             accel_churn: 12.0,
             inference_fraction: 0.0,
+            critical_fraction: 0.0,
+            best_fraction: 0.0,
+            elastic_fraction: 0.0,
             seed: 42,
         }
     }
@@ -91,6 +107,9 @@ impl TraceConfig {
             cancel_rate: 0.02,
             accel_churn: 0.0,
             inference_fraction: 0.35,
+            critical_fraction: 0.0,
+            best_fraction: 0.0,
+            elastic_fraction: 0.0,
             seed: 77,
         }
     }
@@ -150,6 +169,13 @@ impl Trace {
         // arrival-stream draws (times, families, batches, work).
         let mut irng =
             (cfg.inference_fraction > 0.0).then(|| Rng::seed_from_u64(cfg.seed ^ 0x1f5e));
+        // Tier/elastic draws get their own stream too: priority-free
+        // traces (all fractions zero) never consume from it and stay
+        // byte-identical to the pre-priority generator.
+        let mut prng = (cfg.critical_fraction > 0.0
+            || cfg.best_fraction > 0.0
+            || cfg.elastic_fraction > 0.0)
+            .then(|| Rng::seed_from_u64(cfg.seed ^ 0x9121));
         let mut events = Vec::with_capacity(cfg.n_jobs);
         let mut t = 0.0f64;
         for i in 0..cfg.n_jobs {
@@ -166,6 +192,8 @@ impl Trace {
                 min_throughput: 0.0,
                 distributability: rng.range_u32_inclusive(1, cfg.max_distributability),
                 work: rng.exponential(cfg.mean_work_s),
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             // SLO: a fraction of the P100 solo throughput for this job.
@@ -188,6 +216,23 @@ impl Trace {
                         diurnal_phase_s: irng.range_f64(0.0, 86_400.0),
                         latency_slo_s: irng.range_f64(4.0, 12.0) / mu_p100.max(1e-9),
                     });
+                }
+            }
+            if let Some(prng) = prng.as_mut() {
+                let r = prng.range_f64(0.0, 1.0);
+                job.priority = if r < cfg.critical_fraction {
+                    Priority::Critical
+                } else if r < cfg.critical_fraction + cfg.best_fraction {
+                    Priority::Best
+                } else {
+                    Priority::Standard
+                };
+                if !job.is_inference() && prng.bool(cfg.elastic_fraction.clamp(0.0, 1.0)) {
+                    // elastic training: widen the accel range so the
+                    // grow path has somewhere to go
+                    job.elastic = true;
+                    job.distributability =
+                        job.distributability.max(prng.range_u32_inclusive(2, 4));
                 }
             }
             events.push(TraceEvent::Arrival { at: t, job });
@@ -472,6 +517,51 @@ mod tests {
             );
         }
         assert!(seen > 20, "mixed preset produced only {seen} inference jobs");
+    }
+
+    #[test]
+    fn priority_fractions_only_retier_jobs() {
+        // The tier/elastic stream is separate: a tiered trace keeps the
+        // exact arrival times, families, batches, work and SLOs of the
+        // priority-free trace; only priority/elastic fields differ.
+        let oracle = ThroughputOracle::new(1);
+        let plain = Trace::generate(&TraceConfig::default(), &oracle);
+        let tiered = Trace::generate(
+            &TraceConfig {
+                critical_fraction: 0.25,
+                best_fraction: 0.35,
+                elastic_fraction: 0.4,
+                ..Default::default()
+            },
+            &oracle,
+        );
+        let mut crit = 0;
+        let mut best = 0;
+        let mut elastic = 0;
+        for (p, m) in plain.jobs().zip(tiered.jobs()) {
+            assert_eq!(p.id, m.id);
+            assert_eq!(p.family, m.family);
+            assert_eq!(p.batch_size, m.batch_size);
+            assert_eq!(p.work, m.work);
+            assert_eq!(p.min_throughput, m.min_throughput);
+            assert_eq!(p.priority, Priority::Standard);
+            assert!(!p.elastic);
+            match m.priority {
+                Priority::Critical => crit += 1,
+                Priority::Best => best += 1,
+                Priority::Standard => {}
+            }
+            if m.elastic {
+                elastic += 1;
+                assert!(!m.is_inference(), "inference jobs are never flagged elastic");
+                assert!(m.distributability >= 2, "elastic job with nowhere to grow");
+            }
+        }
+        assert!(crit > 0 && best > 0 && elastic > 0, "{crit}/{best}/{elastic}");
+        // all-zero fractions leave the field at the Standard default
+        for j in plain.jobs() {
+            assert_eq!(j.priority, Priority::Standard);
+        }
     }
 
     #[test]

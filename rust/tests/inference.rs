@@ -38,6 +38,8 @@ fn pr3_arrival_stream(cfg: &TraceConfig, oracle: &ThroughputOracle) -> Vec<(f64,
             min_throughput: 0.0,
             distributability: rng.range_u32_inclusive(1, cfg.max_distributability),
             work: rng.exponential(cfg.mean_work_s),
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         };
         let p100 = oracle.solo(&job, AccelType::P100);
@@ -103,6 +105,8 @@ fn latency_adjustment_touches_only_inference_jobs() {
         min_throughput: 0.33,
         distributability: 2,
         work: 100.0,
+        priority: Default::default(),
+        elastic: false,
         inference: None,
     };
     let mut inference = training.clone();
@@ -141,6 +145,8 @@ fn serving_job(id: u32, base_rate: f64, slo_s: f64, replica_cap: u32) -> JobSpec
         min_throughput: 0.0,
         distributability: replica_cap,
         work: 1000.0,
+        priority: Default::default(),
+        elastic: false,
         inference: Some(InferenceSpec {
             base_rate,
             diurnal_amplitude: 0.0,

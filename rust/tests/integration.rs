@@ -154,7 +154,7 @@ fn migration_cost_is_integrated_into_the_report() {
             9,
         )
         .unwrap()
-        .with_migration_cost(cost);
+        .with_options(gogh::engine::EngineOptions::new().with_migration_cost(cost));
         d.run(&mut RandomScheduler::new(9)).unwrap()
     };
     let free = run(0.0);

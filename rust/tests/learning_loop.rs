@@ -54,6 +54,8 @@ fn eval_jobs() -> Vec<JobSpec> {
             min_throughput: 0.0,
             distributability: 1,
             work: 1.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         })
         .collect()

@@ -120,6 +120,8 @@ fn prop_problem1_solutions_always_satisfy_constraints() {
                     min_throughput: 0.0,
                     distributability: rng.range_u32_inclusive(1, 2),
                     work: 10.0,
+                    priority: Default::default(),
+                    elastic: false,
                     inference: None,
                 };
                 j.min_throughput = rng.range_f64(0.1, 0.5) * oracle.solo(&j, AccelType::P100);
@@ -279,6 +281,8 @@ fn delta_test_cluster(n_jobs: u32) -> Cluster {
             min_throughput: 0.0,
             distributability: 2,
             work: 100.0,
+            priority: Default::default(),
+            elastic: false,
             inference: None,
         });
     }
@@ -407,6 +411,71 @@ fn prop_random_op_sequences_never_double_book() {
 }
 
 #[test]
+fn prop_suspend_resume_op_sequences_preserve_invariants() {
+    // Random op sequences mixing the preemption primitives (Suspend /
+    // Resume) with assigns, evicts and migrates, on a cluster with a
+    // few instances down: applied deltas never double-book an instance,
+    // never lose a job (every job stays registered and is never both
+    // placed and suspended), and never resume onto a down instance;
+    // rejected deltas leak neither placement nor suspension state.
+    let mut rng = Rng::seed_from_u64(9911);
+    for _case in 0..60 {
+        let n_jobs = rng.range_u32_inclusive(2, 10);
+        let mut c = delta_test_cluster(n_jobs);
+        let accels = c.spec.accels.clone();
+        for _ in 0..rng.range_usize(0, 3) {
+            c.set_accel_down(accels[rng.range_usize(0, accels.len())]);
+        }
+        for _step in 0..60 {
+            let a = accels[rng.range_usize(0, accels.len())];
+            let j1 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+            let j2 = JobId(rng.range_u32_inclusive(0, n_jobs - 1));
+            let op = match rng.range_usize(0, 6) {
+                0 => PlacementOp::Assign {
+                    accel: a,
+                    combo: Combo::Solo(j1),
+                },
+                1 => PlacementOp::Assign {
+                    accel: a,
+                    combo: Combo::pair(j1, j2),
+                },
+                2 => PlacementOp::Evict { accel: a },
+                3 => PlacementOp::Migrate {
+                    job: j1,
+                    from: accels[rng.range_usize(0, accels.len())],
+                    to: a,
+                },
+                4 => PlacementOp::Suspend { job: j1 },
+                _ => PlacementOp::Resume { job: j1, accel: a },
+            };
+            let before = c.placement.clone();
+            let suspended_before = c.suspended_job_ids();
+            match c.apply_delta(&PlacementDelta { ops: vec![op] }) {
+                Ok(_) => {
+                    if let PlacementOp::Resume { job, accel } = op {
+                        assert!(!c.is_accel_down(accel), "job {job} resumed onto down {accel}");
+                        assert!(c.placement.accels_of(job).contains(&accel));
+                        assert!(!c.is_suspended(job));
+                    }
+                }
+                Err(_) => {
+                    // rejected deltas must not leak partial state
+                    assert_eq!(c.placement.diff_count(&before), 0);
+                    assert_eq!(c.suspended_job_ids(), suspended_before);
+                }
+            }
+            assert_placement_invariants(&c, n_jobs);
+            for j in (0..n_jobs).map(JobId) {
+                assert!(c.job(j).is_some(), "job {j} lost");
+                if c.is_suspended(j) {
+                    assert!(!c.placement.is_placed(j), "job {j} both suspended and placed");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_power_capped_op_sequences_respect_cap_and_invariants() {
     // Random SetPowerState + placement ops under a cluster power cap:
     // after trim_to_power_cap, applied deltas never push worst-case
@@ -507,6 +576,8 @@ fn prop_oracle_pair_is_never_faster_than_solo() {
                 min_throughput: 0.0,
                 distributability: 1,
                 work: 1.0,
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             let j2 = JobSpec {
@@ -517,6 +588,8 @@ fn prop_oracle_pair_is_never_faster_than_solo() {
                 min_throughput: 0.0,
                 distributability: 1,
                 work: 1.0,
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             for &a in ACCEL_TYPES.iter() {
@@ -679,6 +752,8 @@ fn prop_autoscaling_deltas_preserve_cluster_invariants() {
                 min_throughput: 0.0,
                 distributability: rng.range_u32_inclusive(2, 4),
                 work: 500.0,
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             if rng.bool(0.7) {

@@ -24,6 +24,8 @@ fn mk_jobs(n: u32, oracle: &ThroughputOracle, slo_frac: f64) -> Vec<JobSpec> {
                 min_throughput: 0.0,
                 distributability: 2,
                 work: 100.0,
+                priority: Default::default(),
+                elastic: false,
                 inference: None,
             };
             j.min_throughput = slo_frac * oracle.solo(&j, AccelType::P100);
