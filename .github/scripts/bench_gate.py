@@ -7,6 +7,8 @@ Usage: bench_gate.py <measured.json> <baseline.json> [tolerance]
 Gated fields:
   * mean_decision_ms  — required in both files; fail above
                         baseline * (1 + tolerance).
+  * p99_decision_ms   — gated the same way when the baseline carries a
+                        nonzero value (decision-tail regression).
   * explored_nodes    — gated the same way when the baseline carries a
                         nonzero value (solver-work regression).
   * peak_rss_bytes    — gated when both sides carry a nonzero value
@@ -83,6 +85,7 @@ def gate(measured, baseline, tolerance=0.25):
     worst = 0
     for name, required in [
         ("mean_decision_ms", True),
+        ("p99_decision_ms", False),
         ("explored_nodes", False),
         ("peak_rss_bytes", False),
     ]:

@@ -22,6 +22,7 @@ def record(**overrides):
         "bench": "e2e_scheduling",
         "jobs": 300,
         "mean_decision_ms": 10.0,
+        "p99_decision_ms": 40.0,
         "explored_nodes": 1000,
         "peak_rss_bytes": 100_000_000,
     }
@@ -44,6 +45,20 @@ def test_latency_regression_fails():
 
 def test_node_regression_fails():
     assert bench_gate.gate(record(explored_nodes=2000), record(), 0.25) == 1
+
+
+def test_p99_regression_fails():
+    # a fat decision tail must fail even when the mean stays healthy
+    assert bench_gate.gate(record(p99_decision_ms=80.0), record(), 0.25) == 1
+
+
+def test_p99_vanishing_from_the_record_is_malformed():
+    measured = record()
+    del measured["p99_decision_ms"]
+    assert bench_gate.gate(measured, record(), 0.25) == 2
+    # pre-extension baselines never gated the tail — skipping is fine
+    old_baseline = {"bench": "e2e_scheduling", "jobs": 300, "mean_decision_ms": 10.0}
+    assert bench_gate.gate(measured, old_baseline, 0.25) == 0
 
 
 def test_rss_regression_fails():

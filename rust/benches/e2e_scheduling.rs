@@ -32,7 +32,74 @@ fn main() -> gogh::Result<()> {
         Err(err) => println!("# skipping the estimator-backed comparison (no PJRT engine: {err})"),
     }
     scale_bench()?;
+    huge_bench()?;
     mixed_bench()
+}
+
+/// Fleet-scale decision path on the `huge` preset (≥10k accelerators,
+/// two-level topology routing, estimator-free GOGH): the p99 decision
+/// latency is the headline number. GOGH_HUGE_JOBS=N truncates;
+/// GOGH_BENCH_JSON_HUGE=<path> emits the gated `e2e_huge` BENCH record.
+fn huge_bench() -> gogh::Result<()> {
+    let mut cfg = ExperimentConfig::preset("huge")?;
+    if let Some(n) = std::env::var("GOGH_HUGE_JOBS").ok().and_then(|s| s.parse().ok()) {
+        cfg.trace.n_jobs = n;
+    }
+    println!(
+        "\n# Huge: two-level topology decision path, {} accels, {} jobs, \
+         {} groups x {} shards (estimator-free GOGH)",
+        cfg.cluster.accel_mix.iter().map(|(_, n)| n).sum::<u32>(),
+        cfg.trace.n_jobs,
+        cfg.gogh.topology_groups,
+        cfg.gogh.shards
+    );
+    let oracle = cfg.build_oracle()?;
+    let trace = Trace::generate(&cfg.trace, &oracle);
+    println!("  trace: {} events ({} arrivals)", trace.len(), trace.n_jobs());
+    let mut driver = SimDriver::new(
+        ClusterSpec::mix(&cfg.cluster.accel_mix),
+        oracle.clone(),
+        trace,
+        cfg.noise_sigma,
+        cfg.monitor_interval_s,
+        cfg.seed,
+    )?
+    .with_options(EngineOptions::new().with_migration_cost(cfg.migration_cost_s));
+    let mut sched = GoghScheduler::without_engine(&oracle, GoghOptions::from_config(&cfg))?;
+    let t0 = Instant::now();
+    let report = driver.run(&mut sched)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = sched.solver_stats();
+    let cache = sched.cache_stats();
+    let routed: usize = sched.shard_stats().iter().map(|s| s.routed).sum();
+    println!(
+        "  mean {:.3} ms/event, p99 {:.3} ms over {} events; completed {}/{}; \
+         {} arrivals routed; cache {:.1}% hit ({} hits / {} misses); wall {:.0} s",
+        report.mean_decision_ms,
+        report.p99_decision_ms,
+        report.events,
+        report.jobs_completed,
+        report.jobs_total,
+        routed,
+        100.0 * cache.hit_rate(),
+        cache.hits,
+        cache.misses,
+        wall,
+    );
+    assert!(report.jobs_completed > 0, "huge leg completed nothing");
+    if let Ok(path) = std::env::var("GOGH_BENCH_JSON_HUGE") {
+        let record = gogh::metrics::BenchRecord {
+            bench: "e2e_huge".to_string(),
+            jobs: report.jobs_total,
+            mean_decision_ms: report.mean_decision_ms,
+            p99_decision_ms: report.p99_decision_ms,
+            explored_nodes: stats.full_nodes + stats.incremental_nodes,
+            peak_rss_bytes: gogh::metrics::peak_rss_bytes(),
+        };
+        record.write(std::path::Path::new(&path))?;
+        println!("bench record written to {path}: {}", record.to_json());
+    }
+    Ok(())
 }
 
 /// Mixed train+infer decision path on the `mixed` preset (estimator-free
@@ -86,6 +153,7 @@ fn mixed_bench() -> gogh::Result<()> {
             bench: "e2e_mixed".to_string(),
             jobs: report.jobs_total,
             mean_decision_ms: report.mean_decision_ms,
+            p99_decision_ms: report.p99_decision_ms,
             explored_nodes: stats.full_nodes + stats.incremental_nodes,
             peak_rss_bytes: gogh::metrics::peak_rss_bytes(),
         };
@@ -168,6 +236,7 @@ fn scale_bench() -> gogh::Result<()> {
         assert!(report.jobs_completed > 0, "P={shards}: nothing completed");
         if shards == 1 {
             gated.mean_decision_ms = report.mean_decision_ms;
+            gated.p99_decision_ms = report.p99_decision_ms;
             gated.explored_nodes = stats.full_nodes + stats.incremental_nodes;
         }
         latency.push((shards, report.mean_decision_ms));

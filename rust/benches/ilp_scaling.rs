@@ -17,7 +17,9 @@ include!("bench_util.rs");
 use std::collections::BTreeMap;
 
 use gogh::ilp::branch_bound::BnbConfig;
-use gogh::ilp::problem1::{build_problem1, solve_problem1, Problem1Input};
+use gogh::ilp::problem1::{
+    build_problem1, solve_problem1, solve_problem1_with_basis, ColumnBasis, Problem1Input,
+};
 use gogh::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, ACCEL_TYPES, FAMILIES};
 
 fn mk_jobs(n: u32, oracle: &ThroughputOracle) -> Vec<JobSpec> {
@@ -115,5 +117,68 @@ fn main() {
         "# total nodes explored: warm {total_warm_nodes} vs cold {total_cold_nodes} \
          ({:.1}% saved by the greedy incumbent)",
         100.0 * (1.0 - total_warm_nodes as f64 / total_cold_nodes.max(1) as f64)
+    );
+
+    // --- basis reuse across arrivals ---------------------------------
+    // The sharded decision path chains each local solve off the basis
+    // its pool exported last arrival. Replay that shape: a growing job
+    // set, each step solved (a) chained off the previous step's basis
+    // and (b) cold, comparing cumulative simplex pivots.
+    println!("\n# arrival chaining: simplex basis reuse across related solves");
+    println!("{:>5} {:>10} {:>10} {:>10} {:>10}", "jobs", "piv_chain", "piv_cold", "ms_chain", "ms_cold");
+    let mut chained_pivots = 0usize;
+    let mut cold_pivots = 0usize;
+    let mut basis = ColumnBasis::new();
+    for n_jobs in 6u32..=16 {
+        let jobs = mk_jobs(n_jobs, &oracle);
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 2,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+            now_s: 0.0,
+            power: Default::default(),
+        };
+        let cfg = BnbConfig {
+            max_nodes: 8_000,
+            time_limit_s: 10.0,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let chained = solve_problem1_with_basis(&input, &cfg, &basis);
+        let ms_chain = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let cold = solve_problem1(&input, &cfg);
+        let ms_cold = t1.elapsed().as_secs_f64() * 1e3;
+        chained_pivots += chained.lp_pivots;
+        cold_pivots += cold.lp_pivots;
+        if let Some(b) = chained.basis {
+            basis = b;
+        }
+        println!(
+            "{:>5} {:>10} {:>10} {:>10.1} {:>10.1}",
+            n_jobs, chained.lp_pivots, cold.lp_pivots, ms_chain, ms_cold
+        );
+    }
+    println!(
+        "# cumulative LP pivots: chained {chained_pivots} vs cold {cold_pivots} \
+         ({:.1}% saved by basis reuse)",
+        100.0 * (1.0 - chained_pivots as f64 / cold_pivots.max(1) as f64)
+    );
+    assert!(
+        chained_pivots < cold_pivots,
+        "basis chaining must save simplex pivots: chained {chained_pivots} vs cold {cold_pivots}"
     );
 }

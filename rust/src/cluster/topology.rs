@@ -1,0 +1,194 @@
+//! Two-level cluster topology: shard-groups of server-pool shards.
+//!
+//! PR 3's flat round-robin [`ClusterSpec::shards`] partition scales to
+//! ~1k accelerators: every arrival fans one local solve per shard, so
+//! the per-decision fan-out grows linearly with the fleet. The
+//! hierarchical topology bounds that. A cheap top-level router scores
+//! *groups* (catalog-only marginal energy, no LP) and descends into the
+//! winning group's local shards, so a 10k-accelerator cluster still
+//! solves the same bounded number of local ILPs per arrival.
+//!
+//! Depth 1 (`groups == 1`) reproduces the PR 3 flat partition
+//! bit-for-bit (parity-tested below), so existing single-level
+//! configurations see identical placements.
+
+use std::collections::BTreeSet;
+
+use super::{AccelId, ClusterSpec, ShardSpec};
+
+/// One shard-group: a deterministic slice of the cluster spec that the
+/// top-level router treats as a routing domain. Its shards are the
+/// actual placement domains the local ILP workers solve.
+#[derive(Debug, Clone)]
+pub struct TopologyGroup {
+    pub index: usize,
+    /// Member instances, in spec order.
+    pub accels: Vec<AccelId>,
+    /// Local shards. [`ShardSpec::index`] is globally unique across the
+    /// whole topology (sequential over groups), so per-shard stats and
+    /// logs keep a single flat index space whatever the depth.
+    pub shards: Vec<ShardSpec>,
+    /// Membership sets, parallel to `shards` (ordered sets so walks on
+    /// the decision path stay deterministic).
+    pub sets: Vec<BTreeSet<AccelId>>,
+}
+
+impl TopologyGroup {
+    pub fn contains(&self, a: AccelId) -> bool {
+        self.accels.contains(&a)
+    }
+}
+
+/// The full two-level partition: every instance appears in exactly one
+/// shard of exactly one group (property-tested in `tests/proptests.rs`).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub groups: Vec<TopologyGroup>,
+}
+
+impl Topology {
+    /// Total number of local shards across all groups.
+    pub fn total_shards(&self) -> usize {
+        self.groups.iter().map(|g| g.shards.len()).sum()
+    }
+
+    /// Flattened walk over every (group, shard, membership set), in
+    /// global shard-index order.
+    pub fn shards(&self) -> impl Iterator<Item = (&TopologyGroup, &ShardSpec, &BTreeSet<AccelId>)> {
+        self.groups
+            .iter()
+            .flat_map(|g| g.shards.iter().zip(&g.sets).map(move |(s, set)| (g, s, set)))
+    }
+
+    /// Flatten into the plain shard list (the PR 3 shape); global shard
+    /// indices are already sequential, so the order is `0..total`.
+    pub fn into_shards(self) -> Vec<ShardSpec> {
+        self.groups.into_iter().flat_map(|g| g.shards).collect()
+    }
+}
+
+impl ClusterSpec {
+    /// Build the two-level topology: `groups` shard-groups, each split
+    /// into `shards_per_group` local shards. Instances are dealt
+    /// round-robin over spec order at both levels — since
+    /// [`ClusterSpec::mix`] lists each type as a contiguous run, every
+    /// group (and every shard within it) receives a near-equal slice of
+    /// every accelerator type. Both counts are clamped so no group or
+    /// shard is ever empty on a non-empty cluster. `topology(1, p)`
+    /// reproduces the flat [`ClusterSpec::shards`] partition
+    /// bit-for-bit.
+    pub fn topology(&self, groups: usize, shards_per_group: usize) -> Topology {
+        let g = groups.clamp(1, self.accels.len().max(1));
+        let mut members: Vec<Vec<AccelId>> = vec![vec![]; g];
+        for (i, a) in self.accels.iter().enumerate() {
+            members[i % g].push(*a);
+        }
+        let mut out: Vec<TopologyGroup> = Vec::with_capacity(g);
+        let mut next_shard = 0usize;
+        for (index, accels) in members.into_iter().enumerate() {
+            let p = shards_per_group.clamp(1, accels.len().max(1));
+            let shards: Vec<ShardSpec> = (0..p)
+                .map(|s| ShardSpec {
+                    index: next_shard + s,
+                    accels: accels
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % p == s)
+                        .map(|(_, a)| *a)
+                        .collect(),
+                })
+                .collect();
+            next_shard += p;
+            let sets = shards.iter().map(|s| s.accels.iter().copied().collect()).collect();
+            out.push(TopologyGroup {
+                index,
+                accels,
+                shards,
+                sets,
+            });
+        }
+        Topology { groups: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth1_topology_matches_flat_shards_bit_for_bit() {
+        // The deprecated flat partition is the PR 3 ground truth; a
+        // depth-1 topology must reproduce it exactly so single-level
+        // configurations keep byte-identical placements.
+        for spt in [1u32, 4] {
+            let spec = ClusterSpec::balanced(spt);
+            for p in [0usize, 1, 2, 3, 5, 8, 100] {
+                #[allow(deprecated)]
+                let flat = spec.shards(p);
+                let topo = spec.topology(1, p);
+                assert_eq!(topo.groups.len(), 1);
+                let nested = topo.into_shards();
+                assert_eq!(flat.len(), nested.len(), "p={p}");
+                for (f, n) in flat.iter().zip(&nested) {
+                    assert_eq!(f.index, n.index, "p={p}");
+                    assert_eq!(f.accels, n.accels, "p={p} shard {}", f.index);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_topology_partitions_exactly_once() {
+        let spec = ClusterSpec::balanced(4); // 24 instances, 6 types
+        for g in [1usize, 2, 3, 4] {
+            for p in [1usize, 2, 3] {
+                let topo = spec.topology(g, p);
+                assert_eq!(topo.groups.len(), g);
+                assert_eq!(topo.total_shards(), g * p);
+                // global shard indices are sequential over groups
+                let indices: Vec<usize> = topo.shards().map(|(_, s, _)| s.index).collect();
+                assert_eq!(indices, (0..g * p).collect::<Vec<_>>());
+                // every instance lands in exactly one shard of one group
+                let mut seen: Vec<AccelId> =
+                    topo.shards().flat_map(|(_, s, _)| s.accels.clone()).collect();
+                seen.sort();
+                let mut all = spec.accels.clone();
+                all.sort();
+                assert_eq!(seen, all, "g={g} p={p}");
+                for (grp, shard, set) in topo.shards() {
+                    assert_eq!(
+                        set.iter().copied().collect::<Vec<_>>(),
+                        {
+                            let mut v = shard.accels.clone();
+                            v.sort();
+                            v
+                        },
+                        "set/shard mismatch in group {}",
+                        grp.index
+                    );
+                    for a in &shard.accels {
+                        assert!(grp.contains(*a));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topology_clamps_both_levels() {
+        let spec = ClusterSpec::balanced(1); // 6 instances
+        let topo = spec.topology(100, 100);
+        assert_eq!(topo.groups.len(), 6, "groups clamp to the instance count");
+        assert_eq!(topo.total_shards(), 6, "singleton groups hold one shard");
+        for (g, s, _) in topo.shards() {
+            assert_eq!(g.accels.len(), 1);
+            assert_eq!(s.accels.len(), 1);
+        }
+        assert_eq!(spec.topology(0, 0).total_shards(), 1, "zeros clamp to one");
+        let empty = ClusterSpec { accels: vec![] };
+        let topo = empty.topology(4, 4);
+        assert_eq!(topo.groups.len(), 1);
+        assert_eq!(topo.total_shards(), 1);
+        assert!(topo.groups[0].shards[0].accels.is_empty());
+    }
+}

@@ -204,6 +204,12 @@ pub struct GoghPolicyConfig {
     /// global as the cross-shard rebalance. 1 (the default) keeps the
     /// single-threaded pre-shard path.
     pub shards: usize,
+    /// Top-level shard-groups of the hierarchical two-level decision
+    /// path (`shards` then counts shards *per group*): a catalog-only
+    /// router picks the cheapest group per arrival and only that
+    /// group's shards solve, bounding per-decision work at 10k-accel
+    /// scale. 1 (the default) keeps flat single-level sharding.
+    pub topology_groups: usize,
     /// Memoize estimate-matrix lookups between catalog mutations
     /// (value-transparent; disable only for cache benchmarking).
     pub estimate_cache: bool,
@@ -229,6 +235,7 @@ impl Default for GoghPolicyConfig {
             full_resolve_every: 8,
             neighborhood: 4,
             shards: 1,
+            topology_groups: 1,
             estimate_cache: true,
             p1_candidates: 0,
             preemption: false,
@@ -384,6 +391,7 @@ impl ExperimentConfig {
         match name {
             "default" => Ok(Self::default()),
             "large" => Ok(Self::large_scale()),
+            "huge" => Ok(Self::huge_scale()),
             "mixed" => Ok(Self::mixed_workload()),
             "serving" => Ok(Self::serving_heavy()),
             "powercap" => Ok(Self::powercap()),
@@ -392,8 +400,8 @@ impl ExperimentConfig {
             "burst" => Ok(Self::burst()),
             "contended" => Ok(Self::contended()),
             other => anyhow::bail!(
-                "unknown preset {other:?} (want default|large|mixed|serving|powercap|carbon|\
-                 priority|burst|contended)"
+                "unknown preset {other:?} (want default|large|huge|mixed|serving|powercap|\
+                 carbon|priority|burst|contended)"
             ),
         }
     }
@@ -418,6 +426,29 @@ impl ExperimentConfig {
         cfg.gogh.full_resolve_every = 5000;
         cfg.gogh.shards = 4;
         cfg.gogh.p1_candidates = 8;
+        cfg
+    }
+
+    /// The `huge` scale scenario: ~10k accelerator instances under a
+    /// ≥ 500k-event trace ([`TraceConfig::huge`]) — the regime the
+    /// hierarchical topology exists for. The top-level router fans
+    /// each arrival into a single group's shards, so per-decision work
+    /// matches the `large` scenario at ten times the fleet.
+    pub fn huge_scale() -> Self {
+        let mut cfg = Self::large_scale();
+        // 6 types × 1667 = 10,002 instances
+        cfg.cluster.accel_mix = ACCEL_TYPES.iter().map(|&a| (a, 1667)).collect();
+        cfg.trace = TraceConfig::huge();
+        cfg.seed = 43;
+        // coarser monitoring: ~420 ticks over the ~250k-second horizon
+        cfg.monitor_interval_s = 600.0;
+        // 8 groups × 4 shards/group: each arrival routes to one group
+        // and solves 4 local ILPs over ~310-instance pools
+        cfg.gogh.topology_groups = 8;
+        // a 10k-accel full ILP is out of budget at any frequency: the
+        // hierarchical path carries the whole run and the global
+        // re-solve remains only as the no-feasible-shard fallback
+        cfg.gogh.full_resolve_every = 1_000_000;
         cfg
     }
 
@@ -659,6 +690,9 @@ impl ExperimentConfig {
             if let Some(v) = g.get("shards") {
                 cfg.gogh.shards = expect_usize(v, "gogh.shards")?.max(1);
             }
+            if let Some(v) = g.get("topology_groups") {
+                cfg.gogh.topology_groups = expect_usize(v, "gogh.topology_groups")?.max(1);
+            }
             if let Some(v) = g.get("estimate_cache") {
                 cfg.gogh.estimate_cache = expect_bool(v, "gogh.estimate_cache")?;
             }
@@ -781,6 +815,7 @@ impl ExperimentConfig {
                     ("full_resolve_every", self.gogh.full_resolve_every.into()),
                     ("neighborhood", self.gogh.neighborhood.into()),
                     ("shards", self.gogh.shards.into()),
+                    ("topology_groups", self.gogh.topology_groups.into()),
                     ("estimate_cache", self.gogh.estimate_cache.into()),
                     ("p1_candidates", self.gogh.p1_candidates.into()),
                     ("preemption", self.gogh.preemption.into()),
@@ -1114,7 +1149,26 @@ mod tests {
         let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
         assert_eq!(back.gogh.shards, cfg.gogh.shards);
         assert_eq!(back.trace.n_jobs, cfg.trace.n_jobs);
-        assert!(ExperimentConfig::preset("huge").is_err());
         assert_eq!(ExperimentConfig::preset("default").unwrap().gogh.shards, 1);
+    }
+
+    #[test]
+    fn huge_preset_is_fleet_scale_and_topology_groups_roundtrip() {
+        let cfg = ExperimentConfig::preset("huge").unwrap();
+        let total: u32 = cfg.cluster.accel_mix.iter().map(|(_, n)| n).sum();
+        assert!(total >= 10_000, "huge preset has only {total} accels");
+        assert!(cfg.trace.n_jobs >= 500_000);
+        assert!(cfg.gogh.topology_groups > 1, "huge must route hierarchically");
+        assert!(cfg.gogh.shards > 1);
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.gogh.topology_groups, cfg.gogh.topology_groups);
+        assert_eq!(back.trace.n_jobs, cfg.trace.n_jobs);
+        // depth-1 default + clamp semantics match `shards`
+        assert_eq!(ExperimentConfig::default().gogh.topology_groups, 1);
+        let z = ExperimentConfig::from_json(r#"{"gogh": {"topology_groups": 0}}"#).unwrap();
+        assert_eq!(z.gogh.topology_groups, 1);
+        let err =
+            ExperimentConfig::from_json(r#"{"gogh": {"topology_groups": true}}"#).unwrap_err();
+        assert!(err.to_string().contains("gogh.topology_groups"), "{err}");
     }
 }

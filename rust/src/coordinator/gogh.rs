@@ -22,6 +22,7 @@ use std::collections::BTreeSet;
 use crate::catalog::{Catalog, EstimateKey, SimilarityIndex};
 use crate::cluster::{
     AccelId, Cluster, ClusterSpec, Measurement, Placement, PlacementDelta, PlacementOp, ShardSpec,
+    Topology,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::estimate_cache::{value_via, EstimateCache, EstimateCacheStats};
@@ -31,7 +32,9 @@ use crate::coordinator::refinement::{self, catalog_value};
 use crate::coordinator::scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};
 use crate::engine::EngineOptions;
 use crate::ilp::branch_bound::{BnbConfig, BnbStatus};
-use crate::ilp::problem1::{pool_accel_counts, solve_problem1, Problem1Input};
+use crate::ilp::problem1::{
+    pool_accel_counts, solve_problem1, solve_problem1_with_basis, ColumnBasis, Problem1Input,
+};
 use crate::metrics::{ErrorTracker, RunReport};
 use crate::power::{state_cost, CarbonSignal, PowerKnobs, PowerState};
 use crate::runtime::dataset::Sample;
@@ -77,8 +80,15 @@ pub struct GoghOptions {
     /// Server-pool shards of the parallel decision path: arrivals are
     /// solved per shard on scoped worker threads and routed to the shard
     /// with the lowest marginal energy. 1 (the default) keeps the
-    /// single-threaded pre-shard path bit-for-bit.
+    /// single-threaded pre-shard path bit-for-bit. With topology groups
+    /// this is the shard count *per group*.
     pub shards: usize,
+    /// Top-level shard-groups of the hierarchical decision path: a
+    /// cheap catalog-only router scores groups (no LP) and only the
+    /// winning group's shards solve the arrival, so per-decision work
+    /// stays bounded however large the fleet grows. 1 (the default)
+    /// keeps the flat single-level sharding.
+    pub topology_groups: usize,
     /// Memoize `catalog_value` lookups in the [`EstimateCache`]
     /// (invalidated per refinement round). Value-transparent: disabling
     /// it changes wall-clock only, never placements.
@@ -119,6 +129,7 @@ impl Default for GoghOptions {
             full_resolve_every: 8,
             neighborhood: 4,
             shards: 1,
+            topology_groups: 1,
             estimate_cache: true,
             p1_candidates: 0,
             power_dvfs: false,
@@ -141,6 +152,7 @@ impl GoghOptions {
             full_resolve_every: cfg.gogh.full_resolve_every,
             neighborhood: cfg.gogh.neighborhood,
             shards: cfg.gogh.shards,
+            topology_groups: cfg.gogh.topology_groups,
             estimate_cache: cfg.gogh.estimate_cache,
             p1_candidates: cfg.gogh.p1_candidates,
             power_dvfs: cfg.power.dvfs,
@@ -239,12 +251,16 @@ pub struct GoghScheduler {
     options: GoghOptions,
     /// memoized estimate matrix (invalidated on catalog mutation)
     cache: EstimateCache,
-    /// shard partition of the current cluster spec (computed lazily on
-    /// the first sharded arrival, reused for the rest of the run)
-    partition: Option<ShardPartition>,
-    /// per-shard decision-path stats (index 0 doubles as the unsharded
-    /// incremental path's slot)
+    /// two-level topology of the current cluster spec (computed lazily
+    /// on the first sharded arrival, reused for the rest of the run)
+    topology: Option<CachedTopology>,
+    /// per-shard decision-path stats, by global shard index (index 0
+    /// doubles as the unsharded incremental path's slot)
     shard_stats: Vec<ShardStats>,
+    /// last exported simplex basis per global shard index: the next
+    /// arrival's local ILP crash-starts its root LP from it (stale
+    /// hints degrade gracefully to the cold solve)
+    shard_bases: Vec<Option<ColumnBasis>>,
     /// jobs whose round-0 estimates were already produced
     initialized: BTreeSet<JobId>,
     /// live inference jobs (autoscaler + learning-stats attribution)
@@ -334,8 +350,9 @@ impl GoghScheduler {
             p2,
             opt: Optimizer::new(options.optimizer.clone()),
             cache: EstimateCache::new(),
-            partition: None,
+            topology: None,
             shard_stats: vec![ShardStats::default(); options.shards.max(1)],
+            shard_bases: vec![],
             initialized: BTreeSet::new(),
             inference_jobs: BTreeSet::new(),
             scale_ups: 0,
@@ -384,6 +401,9 @@ impl GoghScheduler {
         self.initialized.extend(catalog.known_jobs().copied());
         self.catalog = catalog;
         self.cache.invalidate();
+        // the full-resolve builder's pair scores derive from the old
+        // catalog: rescore on the next solve
+        self.opt.note_estimates_changed();
     }
 
     /// Pre-train P1/P2 on catalog history (build-time data only).
@@ -705,6 +725,9 @@ struct LocalSolve {
     seconds: f64,
     /// whether an ILP actually ran (early-outs must not count as solves)
     attempted: bool,
+    /// root-LP basis exported by a chained solve, for the next arrival
+    /// landing on the same shard
+    basis: Option<ColumnBasis>,
 }
 
 impl LocalSolve {
@@ -715,22 +738,22 @@ impl LocalSolve {
             nodes: 0,
             seconds: 0.0,
             attempted: false,
+            basis: None,
         }
     }
 }
 
-/// The shard partition of one cluster spec, computed once per run and
-/// reused on every sharded arrival (the partition depends only on the
-/// immutable spec and the shard count; rebuilding the `ShardSpec`s and
-/// membership sets per event was measurable on the 1000-accel hot path).
-struct ShardPartition {
-    /// the spec accels this partition was computed from (staleness key)
+/// The two-level topology of one cluster spec, computed once per run
+/// and reused on every sharded arrival (it depends only on the
+/// immutable spec and the group/shard counts; rebuilding the
+/// `ShardSpec`s and membership sets per event was measurable on the
+/// 1000-accel hot path).
+struct CachedTopology {
+    /// the spec accels this topology was computed from (staleness key)
     spec: Vec<AccelId>,
-    p: usize,
-    shards: Vec<ShardSpec>,
-    /// per-shard membership sets for fast `within_shard` checks
-    /// (ordered set: iteration order must not depend on hashing)
-    sets: Vec<BTreeSet<AccelId>>,
+    groups: usize,
+    per_group: usize,
+    topo: Topology,
 }
 
 /// Bounded local re-solve for one arrival over one instance pool: only
@@ -749,6 +772,7 @@ fn local_arrival_solve(
     neighborhood: usize,
     ocfg: &crate::config::OptimizerConfig,
     power: PowerKnobs,
+    basis: Option<&ColumnBasis>,
 ) -> LocalSolve {
     if neighborhood == 0 {
         return LocalSolve::skipped();
@@ -835,7 +859,13 @@ fn local_arrival_solve(
     };
     // gogh-lint: allow(determinism-wall-clock, shard solve latency statistic; the solve itself runs under a node budget)
     let t0 = std::time::Instant::now();
-    let sol = solve_problem1(&input, &bnb);
+    // basis reuse across arrivals (sharded path only): crash-start the
+    // root LP from the previous arrival's exported basis and export the
+    // new one for the next arrival on this shard
+    let sol = match basis {
+        Some(hint) => solve_problem1_with_basis(&input, &bnb, hint),
+        None => solve_problem1(&input, &bnb),
+    };
     let seconds = t0.elapsed().as_secs_f64();
     let solved = matches!(sol.status, BnbStatus::Optimal | BnbStatus::Feasible)
         && sol.violated_jobs.is_empty();
@@ -869,6 +899,7 @@ fn local_arrival_solve(
         nodes: sol.nodes,
         seconds,
         attempted: true,
+        basis: sol.basis,
     }
 }
 
@@ -1399,6 +1430,9 @@ impl GoghScheduler {
             self.options.neighborhood,
             &self.options.optimizer,
             self.power_knobs(cluster.now()),
+            // no basis chaining on the P = 1 path: it stays bit-for-bit
+            // the pre-shard behaviour
+            None,
         );
         self.record_local_solve(0, &ls);
         Ok(ls.delta)
@@ -1418,45 +1452,102 @@ impl GoghScheduler {
         }
     }
 
-    /// Recompute the cached shard partition if the spec or shard count
-    /// changed (within one run they never do — this is a lazy init).
-    fn refresh_partition(&mut self, cluster: &Cluster) {
+    /// Recompute the cached two-level topology if the spec or the
+    /// group/shard counts changed (within one run they never do — this
+    /// is a lazy init).
+    fn refresh_topology(&mut self, cluster: &Cluster) {
+        let g = self.options.topology_groups;
         let p = self.options.shards;
-        let stale = self
-            .partition
-            .as_ref()
-            .map_or(true, |c| c.p != p || c.spec != cluster.spec.accels);
+        let stale = self.topology.as_ref().map_or(true, |c| {
+            c.groups != g || c.per_group != p || c.spec != cluster.spec.accels
+        });
         if stale {
-            let shards = cluster.spec.shards(p);
-            let sets = shards.iter().map(|s| s.accels.iter().copied().collect()).collect();
-            self.partition = Some(ShardPartition {
+            self.topology = Some(CachedTopology {
                 spec: cluster.spec.accels.clone(),
-                p,
-                shards,
-                sets,
+                groups: g,
+                per_group: p,
+                topo: cluster.spec.topology(g, p),
             });
         }
     }
 
-    /// Fan one arrival out to every shard on scoped worker threads and
-    /// route it to the shard whose local solve has the lowest marginal
-    /// energy (deterministic: ties break toward the lower shard index).
-    /// Returns the winning (shard index, delta) — the caller bumps that
-    /// shard's `routed` count only when the delta is actually committed
-    /// (a multi-straggler batch may abort to the full re-solve; the
+    /// Top-level router: score every shard-group by the cheapest
+    /// catalog-only solo column cost of hosting `j1` on a *free*
+    /// in-service instance of the group (no LP runs here — this is
+    /// O(fleet) arithmetic, not solver work). Ties break toward the
+    /// lower group index. `None` when no group has a free instance —
+    /// the caller then fans across every shard, since only a local
+    /// repack can host the arrival.
+    fn route_group(&self, cluster: &Cluster, j1: JobId) -> Option<usize> {
+        let part = self.topology.as_ref()?;
+        let cache = self.options.estimate_cache.then_some(&self.cache);
+        let ocfg = &self.options.optimizer;
+        let power = self.power_knobs(cluster.now());
+        let solo_cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+        let free: BTreeSet<AccelId> = cluster
+            .available_accels()
+            .into_iter()
+            .filter(|aid| cluster.placement.combo_on(*aid).is_none())
+            .collect();
+        let mut best: Option<(f64, usize)> = None;
+        for g in &part.topo.groups {
+            let types: BTreeSet<AccelType> =
+                g.accels.iter().filter(|a| free.contains(a)).map(|a| a.accel).collect();
+            let mut score = f64::INFINITY;
+            for a in types {
+                let t = value_via(&self.catalog, cache, a, j1, &Combo::Solo(j1));
+                let u = (t / solo_cap(a).max(1e-9)).clamp(0.0, 1.0);
+                let c = crate::power::column_cost(a, u, t, ocfg.throughput_bonus, power);
+                if c < score {
+                    score = c;
+                }
+            }
+            if score.is_finite() && best.map_or(true, |(s, _)| score < s) {
+                best = Some((score, g.index));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Fan one arrival out to shard workers on scoped threads and route
+    /// it to the shard whose local solve has the lowest marginal energy
+    /// (deterministic: ties break toward the lower global shard index).
+    /// With topology groups, the top-level router first picks the
+    /// cheapest group and only its shards solve. Returns the winning
+    /// (global shard index, delta) — the caller bumps that shard's
+    /// `routed` count only when the delta is actually committed (a
+    /// multi-straggler batch may abort to the full re-solve; the
     /// solve/node counters still record work genuinely performed).
     fn sharded_arrival_once(
         &mut self,
         cluster: &Cluster,
         j1: JobId,
     ) -> Result<Option<(usize, PlacementDelta)>> {
-        self.refresh_partition(cluster);
-        let n_shards = self.partition.as_ref().map_or(1, |c| c.shards.len());
+        self.refresh_topology(cluster);
+        let n_shards = self.topology.as_ref().map_or(1, |c| c.topo.total_shards());
         if self.shard_stats.len() < n_shards {
             self.shard_stats.resize(n_shards, ShardStats::default());
         }
-        let solves: Vec<LocalSolve> = {
-            let part = self.partition.as_ref().expect("partition refreshed");
+        if self.shard_bases.len() < n_shards {
+            self.shard_bases.resize(n_shards, None);
+        }
+        let route = self
+            .topology
+            .as_ref()
+            .filter(|c| c.topo.groups.len() > 1)
+            .and_then(|_| self.route_group(cluster, j1));
+        let solves: Vec<(usize, LocalSolve)> = {
+            let part = self.topology.as_ref().expect("topology refreshed");
+            let targets: Vec<(usize, &ShardSpec, &BTreeSet<AccelId>)> = part
+                .topo
+                .shards()
+                .filter(|(g, _, _)| route.map_or(true, |r| g.index == r))
+                .map(|(_, s, set)| (s.index, s, set))
+                .collect();
+            let hints: Vec<ColumnBasis> = targets
+                .iter()
+                .map(|(gi, _, _)| self.shard_bases[*gi].clone().unwrap_or_default())
+                .collect();
             let catalog = &self.catalog;
             let cache = self.options.estimate_cache.then_some(&self.cache);
             let k = self.options.neighborhood;
@@ -1470,13 +1561,12 @@ impl GoghScheduler {
             // scale bench margin ever thins, a channel-fed worker pool
             // over Arc snapshots is the next step.
             std::thread::scope(|scope| {
-                let handles: Vec<_> = part
-                    .shards
+                let handles: Vec<_> = targets
                     .iter()
-                    .zip(&part.sets)
-                    .map(|(shard, set)| {
+                    .zip(&hints)
+                    .map(|(&(gi, shard, set), hint)| {
                         scope.spawn(move || {
-                            local_arrival_solve(
+                            let ls = local_arrival_solve(
                                 catalog,
                                 cache,
                                 cluster,
@@ -1485,7 +1575,9 @@ impl GoghScheduler {
                                 k,
                                 ocfg,
                                 power,
-                            )
+                                Some(hint),
+                            );
+                            (gi, ls)
                         })
                     })
                     .collect();
@@ -1495,18 +1587,25 @@ impl GoghScheduler {
                     .collect()
             })
         };
+        // persist exported bases for the next arrival on each shard
+        for (gi, ls) in &solves {
+            if let Some(b) = &ls.basis {
+                self.shard_bases[*gi] = Some(b.clone());
+            }
+        }
         let mut best: Option<usize> = None;
-        for (i, ls) in solves.iter().enumerate() {
-            if ls.delta.is_some() && best.map_or(true, |b| ls.marginal < solves[b].marginal) {
+        for (i, (_, ls)) in solves.iter().enumerate() {
+            if ls.delta.is_some() && best.map_or(true, |b| ls.marginal < solves[b].1.marginal) {
                 best = Some(i);
             }
         }
-        for (i, ls) in solves.iter().enumerate() {
-            self.record_local_solve(i, ls);
+        for (gi, ls) in &solves {
+            self.record_local_solve(*gi, ls);
         }
         let Some(b) = best else { return Ok(None) };
+        let gi = solves[b].0;
         let mut solves = solves;
-        Ok(solves.swap_remove(b).delta.map(|d| (b, d)))
+        Ok(solves.swap_remove(b).1.delta.map(|d| (gi, d)))
     }
 
     /// Route every currently-unplaced job through the shard workers.
@@ -1646,10 +1745,25 @@ impl GoghScheduler {
                 self.train_once()?;
             }
         }
-        // measurements + refinements mutated the estimate matrix: the
-        // cache's per-round invalidation point
+        // Measurements + refinements mutated the estimate matrix — but
+        // only rows touching the measured jobs and their co-runners
+        // (round recording and P2 transfer both write under those jobs'
+        // keys): a targeted drop keeps the rest of the memoized matrix
+        // warm across rounds instead of the old O(entire cache) flush.
         if !measurements.is_empty() {
-            self.cache.invalidate();
+            let mut stale: BTreeSet<JobId> = BTreeSet::new();
+            for m in measurements {
+                stale.insert(m.job);
+                for j in m.combo.jobs() {
+                    stale.insert(j);
+                }
+            }
+            for j in stale {
+                self.cache.drop_job(j);
+            }
+            // the full-resolve builder's stored pair scores read the
+            // same estimates: rescore at the next solve
+            self.opt.note_estimates_changed();
         }
         Ok(())
     }
@@ -1661,7 +1775,7 @@ impl Scheduler for GoghScheduler {
     }
 
     fn on_event(&mut self, event: &ClusterEvent, cluster: &Cluster) -> Result<Decision> {
-        let sharded = self.options.shards > 1;
+        let sharded = self.options.shards > 1 || self.options.topology_groups > 1;
         match event {
             ClusterEvent::JobArrived { job } => {
                 // round-0 estimates for any job we haven't seen
@@ -1800,50 +1914,37 @@ impl Gogh {
     ///   infallible, so the terminal `none` rung is never reached in
     ///   practice).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
-        let (driver, oracle) = Self::build_driver(cfg)?;
-        let (scheduler, backend) = build_scheduler(cfg, &oracle)?;
-        Ok(Self {
-            driver,
-            scheduler,
-            backend,
-        })
+        Self::builder(cfg).build()
+    }
+
+    /// Start building a system over `cfg`, overriding the backend with
+    /// the builder's methods (the one construction path behind
+    /// [`Gogh::from_config`], [`Gogh::with_engine`], [`Gogh::with_native`]
+    /// and [`Gogh::without_engine`], which remain as thin shorthands).
+    pub fn builder(cfg: &ExperimentConfig) -> GoghBuilder<'_> {
+        GoghBuilder {
+            cfg,
+            engine: None,
+            backend: None,
+        }
     }
 
     /// Build reusing an existing engine (benches construct many systems).
     pub fn with_engine(engine: &Engine, cfg: &ExperimentConfig) -> Result<Self> {
-        let (driver, oracle) = Self::build_driver(cfg)?;
-        let scheduler = GoghScheduler::new(engine, &oracle, GoghOptions::from_config(cfg))?;
-        Ok(Self {
-            driver,
-            scheduler,
-            backend: "pjrt",
-        })
+        Self::builder(cfg).with_engine(engine).build()
     }
 
     /// Build over the native pure-Rust backend (see
     /// [`GoghScheduler::with_native_backend`]): the full learning loop
     /// with zero external artifacts.
     pub fn with_native(cfg: &ExperimentConfig) -> Result<Self> {
-        let (driver, oracle) = Self::build_driver(cfg)?;
-        let scheduler =
-            GoghScheduler::with_native_backend(&oracle, GoghOptions::from_config(cfg))?;
-        Ok(Self {
-            driver,
-            scheduler,
-            backend: "native",
-        })
+        Self::builder(cfg).native().build()
     }
 
     /// Build without any estimator: the estimator-free degraded mode
     /// (see [`GoghScheduler::without_engine`]).
     pub fn without_engine(cfg: &ExperimentConfig) -> Result<Self> {
-        let (driver, oracle) = Self::build_driver(cfg)?;
-        let scheduler = GoghScheduler::without_engine(&oracle, GoghOptions::from_config(cfg))?;
-        Ok(Self {
-            driver,
-            scheduler,
-            backend: "none",
-        })
+        Self::builder(cfg).estimator_free().build()
     }
 
     /// The estimator backend actually mounted ("pjrt" / "native" /
@@ -1885,6 +1986,69 @@ impl Gogh {
 
     pub fn scheduler_mut(&mut self) -> &mut GoghScheduler {
         &mut self.scheduler
+    }
+}
+
+/// Builder behind [`Gogh::builder`]: one construction path instead of
+/// the `from_config` / `with_engine` / `with_native` / `without_engine`
+/// constructor zoo (mirroring [`EngineOptions`]' chained style). With
+/// no override, `cfg.gogh.backend` resolves through the usual ladder.
+pub struct GoghBuilder<'a> {
+    cfg: &'a ExperimentConfig,
+    engine: Option<&'a Engine>,
+    backend: Option<crate::config::BackendKind>,
+}
+
+impl<'a> GoghBuilder<'a> {
+    /// Mount the P1/P2 estimators from an already-loaded PJRT engine
+    /// (benches construct many systems over one engine). Takes
+    /// precedence over any backend override.
+    pub fn with_engine(mut self, engine: &'a Engine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Force the native pure-Rust estimator backend, whatever the
+    /// config says.
+    pub fn native(mut self) -> Self {
+        self.backend = Some(crate::config::BackendKind::Native);
+        self
+    }
+
+    /// Force the estimator-free degraded mode (catalog priors +
+    /// measurements only), whatever the config says.
+    pub fn estimator_free(mut self) -> Self {
+        self.backend = Some(crate::config::BackendKind::None);
+        self
+    }
+
+    pub fn build(self) -> Result<Gogh> {
+        let (driver, oracle) = Gogh::build_driver(self.cfg)?;
+        if let Some(engine) = self.engine {
+            let options = GoghOptions::from_config(self.cfg);
+            let scheduler = GoghScheduler::new(engine, &oracle, options)?;
+            return Ok(Gogh {
+                driver,
+                scheduler,
+                backend: "pjrt",
+            });
+        }
+        let overridden;
+        let cfg = match self.backend {
+            Some(kind) => {
+                let mut c = self.cfg.clone();
+                c.gogh.backend = kind;
+                overridden = c;
+                &overridden
+            }
+            None => self.cfg,
+        };
+        let (scheduler, backend) = build_scheduler(cfg, &oracle)?;
+        Ok(Gogh {
+            driver,
+            scheduler,
+            backend,
+        })
     }
 }
 

@@ -14,7 +14,8 @@ pub mod scheduler;
 
 pub use estimate_cache::{EstimateCache, EstimateCacheStats};
 pub use gogh::{
-    build_scheduler, Gogh, GoghOptions, GoghScheduler, LearningStats, ShardStats, SolverPathStats,
+    build_scheduler, Gogh, GoghBuilder, GoghOptions, GoghScheduler, LearningStats, ShardStats,
+    SolverPathStats,
 };
 pub use optimizer::Optimizer;
 pub use scheduler::{ClusterEvent, Decision, Scheduler, SimDriver};

@@ -8,7 +8,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::cluster::{AccelId, Cluster, Placement, PlacementDelta};
 use crate::config::OptimizerConfig;
 use crate::ilp::branch_bound::BnbConfig;
-use crate::ilp::problem1::{solve_problem1, AllocationSolution, Problem1Input};
+use crate::ilp::problem1::{AllocationSolution, Problem1Builder, Problem1Input};
 use crate::power::PowerKnobs;
 use crate::workload::{AccelType, Combo, JobId};
 use crate::Result;
@@ -27,10 +27,15 @@ pub struct Optimizer {
     pub total_lp_pivots: u64,
     /// solves that started from a greedy/explicit incumbent
     pub warm_started_solves: usize,
+    /// Incremental Problem 1 state: job edits land as O(changes)
+    /// updates and the constraint matrix is reused verbatim between
+    /// solves whose inputs did not change.
+    pub builder: Problem1Builder,
 }
 
 impl Optimizer {
     pub fn new(cfg: OptimizerConfig) -> Self {
+        let builder = Problem1Builder::new(cfg.max_pairs_per_job);
         Self {
             cfg,
             power: PowerKnobs::default(),
@@ -39,7 +44,15 @@ impl Optimizer {
             total_nodes: 0,
             total_lp_pivots: 0,
             warm_started_solves: 0,
+            builder,
         }
+    }
+
+    /// The throughput estimates behind the next `allocate` call changed
+    /// (measurement or Problem 2 refinement round): invalidate the
+    /// builder's stored pair scores and cached matrix.
+    pub fn note_estimates_changed(&mut self) {
+        self.builder.note_estimates_changed();
     }
 
     pub fn mean_solve_ms(&self) -> f64 {
@@ -97,7 +110,9 @@ impl Optimizer {
         };
         // gogh-lint: allow(determinism-wall-clock, solve_seconds is a reporting statistic; nothing branches on it)
         let t0 = std::time::Instant::now();
-        let sol = solve_problem1(&input, &bnb);
+        self.builder.sync_jobs(&jobs, throughput);
+        self.builder.set_accel_counts(counts.clone());
+        let sol = self.builder.solve(&input, &bnb, None);
         self.solve_seconds += t0.elapsed().as_secs_f64();
         self.solves += 1;
         self.total_nodes += sol.nodes;
@@ -307,5 +322,8 @@ mod tests {
         // same jobs, same estimates → the rebound placement must be identical
         let (p2, _) = opt.allocate(&c, &thr).unwrap();
         assert_eq!(p1.diff_count(&p2), 0);
+        // ... and the second solve must have reused the cached matrix
+        assert!(opt.builder.model_reuses >= 1, "{}", opt.builder.model_reuses);
+        assert_eq!(opt.builder.model_rebuilds, 1);
     }
 }

@@ -149,6 +149,10 @@ struct Accounting {
     queue_wait_sum: f64,
     queue_waits: usize,
     decision_s: f64,
+    /// per-event decision-latency distribution, recorded in
+    /// *milliseconds* (re-using the histogram's 1e-3..1e3 domain as
+    /// 1 µs..1000 ms so the sub-millisecond decision path resolves)
+    decision_hist: LatencyHistogram,
     /// jobs evicted by an AccelDown; they pay the restart penalty when
     /// re-placed (the eviction happens outside `apply_delta`, so
     /// `DeltaOutcome::migrated_jobs` cannot see them).
@@ -538,6 +542,13 @@ impl GoghCore {
         } else {
             0.0
         };
+        // histogram units are ms (see Accounting::decision_hist), so
+        // the quantile reads back as milliseconds directly
+        report.p99_decision_ms = if self.state.decision_hist.total_weight() > 0.0 {
+            self.state.decision_hist.quantile(0.99)
+        } else {
+            0.0
+        };
         report.estimation_mae = policy.estimation_mae();
         let (solve_ms, p1_ms) = policy.decision_latencies();
         report.mean_solve_ms = solve_ms;
@@ -577,7 +588,9 @@ impl GoghCore {
     fn dispatch(&mut self, policy: &mut dyn Scheduler, event: ClusterEvent) -> Result<()> {
         let t0 = std::time::Instant::now();
         let decision = policy.on_event(&event, &self.cluster)?;
-        self.state.decision_s += t0.elapsed().as_secs_f64();
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        self.state.decision_s += elapsed_s;
+        self.state.decision_hist.record(elapsed_s * 1000.0, 1.0);
         self.report.events += 1;
         // under a power cap, down-clock or drop breaching ops instead of
         // failing the run; apply_delta still rejects anything that slips

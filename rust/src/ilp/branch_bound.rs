@@ -65,6 +65,14 @@ pub struct BnbConfig {
     /// allow the problem layer (`solve_problem1`) to derive a greedy
     /// incumbent automatically when `warm_start` is `None`.
     pub auto_warm_start: bool,
+    /// Optional simplex crash basis (original-space variable indices
+    /// from [`SimplexWorkspace::basic_structurals`] of a previous
+    /// related solve). `Some` also turns on node-to-node basis
+    /// chaining: each node LP crash-starts from the basis its
+    /// predecessor exported. `Some(vec![])` enables chaining without a
+    /// prior-arrival hint. A stale hint only costs pivots — the
+    /// simplex falls back to the cold two-phase path.
+    pub basis_hint: Option<Vec<usize>>,
     pub node_selection: NodeSelection,
 }
 
@@ -76,6 +84,7 @@ impl Default for BnbConfig {
             rel_gap: 1e-6,
             warm_start: None,
             auto_warm_start: true,
+            basis_hint: None,
             node_selection: NodeSelection::BestBound,
         }
     }
@@ -106,6 +115,10 @@ pub struct BnbResult {
     pub lp_pivots: u64,
     /// whether a feasible warm-start incumbent seeded the search
     pub warm_started: bool,
+    /// structural variables basic at the root LP optimum, exported only
+    /// when [`BnbConfig::basis_hint`] was set — feed it back as the next
+    /// arrival's hint to chain bases across solves
+    pub root_basis: Option<Vec<usize>>,
 }
 
 impl BnbResult {
@@ -206,8 +219,14 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
     }
     let warm_started = incumbent.is_some();
 
+    // Basis chaining: when a hint is supplied, the root LP crash-starts
+    // from it, and every node LP crash-starts from the basis of the
+    // previously solved node (structurally identical models differing
+    // only in bounds, so the previous basis is usually one or two
+    // pivots from re-optimal).
+    let chain = cfg.basis_hint.is_some();
     let root_bounds: Vec<(f64, f64)> = model.vars.iter().map(|v| (v.lb, v.ub)).collect();
-    let root = ws.solve(model, Some(&root_bounds));
+    let root = ws.solve_with_basis(model, Some(&root_bounds), cfg.basis_hint.as_deref());
     lp_iterations += root.iterations;
     match root.status {
         LpStatus::Infeasible => {
@@ -220,6 +239,7 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
                 lp_iterations,
                 lp_pivots: ws.total_pivots(),
                 warm_started,
+                root_basis: None,
             }
         }
         LpStatus::Unbounded => {
@@ -232,10 +252,13 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
                 lp_iterations,
                 lp_pivots: ws.total_pivots(),
                 warm_started,
+                root_basis: None,
             }
         }
         LpStatus::Optimal => {}
     }
+    let root_basis = chain.then(|| ws.basic_structurals());
+    let mut last_basis = root_basis.clone();
 
     let best_first = cfg.node_selection == NodeSelection::BestBound;
     let mut frontier = Frontier::new(cfg.node_selection);
@@ -282,10 +305,13 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
             break;
         }
 
-        let lp = ws.solve(model, Some(&node.bounds));
+        let lp = ws.solve_with_basis(model, Some(&node.bounds), last_basis.as_deref());
         lp_iterations += lp.iterations;
         if lp.status != LpStatus::Optimal {
             continue; // infeasible subtree
+        }
+        if chain {
+            last_basis = Some(ws.basic_structurals());
         }
         let lp_obj = to_min(lp.objective);
         if let Some((_, inc)) = &incumbent {
@@ -386,6 +412,7 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
                 lp_iterations,
                 lp_pivots: ws.total_pivots(),
                 warm_started,
+                root_basis,
             }
         }
         None => BnbResult {
@@ -404,6 +431,7 @@ pub fn solve_ilp(model: &Model, cfg: &BnbConfig) -> BnbResult {
             lp_iterations,
             lp_pivots: ws.total_pivots(),
             warm_started,
+            root_basis,
         },
     }
 }
@@ -542,6 +570,37 @@ mod tests {
                 dfs.objective
             );
         }
+    }
+
+    #[test]
+    fn basis_chaining_matches_cold_search() {
+        let mut m = Model::new(ObjSense::Minimize);
+        let x = m.add_var("x", 0.0, 100.0, VarKind::Integer, 4.0);
+        let y = m.add_var("y", 0.0, 100.0, VarKind::Integer, 5.0);
+        m.add_constraint("c1", vec![(x, 2.0), (y, 1.0)], Sense::Ge, 7.0);
+        m.add_constraint("c2", vec![(x, 1.0), (y, 3.0)], Sense::Ge, 9.0);
+        let cold = solve_ilp(&m, &BnbConfig::default());
+        assert!(cold.root_basis.is_none(), "no hint → no basis export");
+        let chained = solve_ilp(
+            &m,
+            &BnbConfig {
+                basis_hint: Some(vec![]), // chaining on, no prior hint
+                ..Default::default()
+            },
+        );
+        assert_eq!(chained.status, BnbStatus::Optimal);
+        assert!((cold.objective - chained.objective).abs() < 1e-9);
+        // feed the exported root basis back in, as an arrival loop would
+        let again = solve_ilp(
+            &m,
+            &BnbConfig {
+                basis_hint: chained.root_basis.clone(),
+                ..Default::default()
+            },
+        );
+        assert_eq!(again.status, BnbStatus::Optimal);
+        assert!((cold.objective - again.objective).abs() < 1e-9);
+        assert!(chained.root_basis.is_some() && again.root_basis.is_some());
     }
 
     #[test]

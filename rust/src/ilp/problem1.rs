@@ -31,12 +31,21 @@
 //! [`crate::workload::serving::effective_min_throughput`]. The same
 //! soft-slack machinery covers transient latency infeasibility.
 
-use std::collections::BTreeMap;
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::branch_bound::{solve_ilp, BnbConfig, BnbResult, BnbStatus};
 use super::model::{Model, ObjSense, Sense, VarId, VarKind};
 use crate::power::{column_cost, PowerKnobs};
 use crate::workload::{AccelType, Combo, JobId, JobSpec, ACCEL_TYPES};
+
+/// Semantic simplex basis of a Problem 1 solve: the `(type, combo)`
+/// columns basic at the root LP optimum. Variable indices shift between
+/// arrivals as the column set changes, so the basis is exported in this
+/// index-free form and re-mapped onto the next model's columns by
+/// [`solve_problem1_with_basis`]; columns that no longer exist are
+/// silently dropped (stale-hint tolerance).
+pub type ColumnBasis = Vec<(AccelType, Combo)>;
 
 /// Inputs to the allocation ILP.
 pub struct Problem1Input<'a> {
@@ -93,6 +102,10 @@ pub struct AllocationSolution {
     pub lp_pivots: u64,
     /// whether a greedy/explicit incumbent seeded the search
     pub warm_started: bool,
+    /// root LP basis in `(type, combo)` form, exported only by
+    /// [`solve_problem1_with_basis`] — feed it back as the next
+    /// arrival's hint to chain bases across solves
+    pub basis: Option<ColumnBasis>,
 }
 
 /// Aggregate a concrete instance pool into the per-type capacity map of
@@ -166,9 +179,23 @@ pub fn build_problem1(
     Vec<(AccelType, Combo, VarId)>,
     BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
 ) {
-    let combos = candidate_combos(input.jobs, input.throughput, input.max_pairs_per_job);
-    let mut model = Model::new(ObjSense::Minimize);
     let _ = bnb;
+    let combos = candidate_combos(input.jobs, input.throughput, input.max_pairs_per_job);
+    build_model(input, &combos)
+}
+
+/// Assemble the Problem 1 model over an already-chosen candidate
+/// universe — the shared back half of [`build_problem1`] and the
+/// incremental [`Problem1Builder`] path.
+fn build_model(
+    input: &Problem1Input,
+    combos: &[Combo],
+) -> (
+    Model,
+    Vec<(AccelType, Combo, VarId)>,
+    BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
+) {
+    let mut model = Model::new(ObjSense::Minimize);
 
     // n_{a,c} variables with per-column energy coefficients.
     let mut cols: Vec<(AccelType, Combo, VarId)> = vec![];
@@ -177,7 +204,7 @@ pub fn build_problem1(
         if count == 0 {
             continue;
         }
-        for c in &combos {
+        for c in combos {
             if c.len() as u32 > a.capacity() {
                 continue; // constraint (2d) by pruning
             }
@@ -286,6 +313,29 @@ pub fn build_problem1(
 /// of thousands of nodes before the first feasible point (measured by
 /// `benches/ilp_scaling.rs`, asserted by `tests/warm_start.rs`).
 pub fn solve_problem1(input: &Problem1Input, bnb: &BnbConfig) -> AllocationSolution {
+    solve_problem1_impl(input, bnb, None, None)
+}
+
+/// [`solve_problem1`] with basis chaining: the previous arrival's
+/// [`AllocationSolution::basis`] crash-starts this solve's LPs, and the
+/// returned solution carries the new basis for the next arrival. An
+/// empty hint still turns chaining on (first arrival of a sequence).
+/// A stale hint only costs crash pivots — the optimum is unchanged
+/// (asserted by `basis_chaining_reaches_the_same_optimum` below).
+pub fn solve_problem1_with_basis(
+    input: &Problem1Input,
+    bnb: &BnbConfig,
+    hint: &ColumnBasis,
+) -> AllocationSolution {
+    solve_problem1_impl(input, bnb, None, Some(hint))
+}
+
+fn solve_problem1_impl(
+    input: &Problem1Input,
+    bnb: &BnbConfig,
+    combos: Option<&[Combo]>,
+    hint: Option<&ColumnBasis>,
+) -> AllocationSolution {
     // 2e′: fold each inference job's latency SLO into its throughput
     // row before the model is built (no-op — and no clone — for the
     // common pure-training pool).
@@ -298,14 +348,305 @@ pub fn solve_problem1(input: &Problem1Input, bnb: &BnbConfig) -> AllocationSolut
         jobs: adjusted.as_deref().unwrap_or(input.jobs),
         ..*input
     };
-    let (model, cols, slacks) = build_problem1(input, bnb);
+    let fresh: Vec<Combo>;
+    let combos = match combos {
+        Some(c) => c,
+        None => {
+            fresh = candidate_combos(input.jobs, input.throughput, input.max_pairs_per_job);
+            &fresh
+        }
+    };
+    let (model, cols, slacks) = build_model(input, combos);
+    solve_built(input, bnb, &model, &cols, &slacks, hint)
+}
+
+/// Run the branch-and-bound over an already-built model (shared by the
+/// from-scratch path and the [`Problem1Builder`] cached-matrix path).
+fn solve_built(
+    input: &Problem1Input,
+    bnb: &BnbConfig,
+    model: &Model,
+    cols: &[(AccelType, Combo, VarId)],
+    slacks: &BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
+    hint: Option<&ColumnBasis>,
+) -> AllocationSolution {
     let mut bnb = bnb.clone();
     if bnb.warm_start.is_none() && bnb.auto_warm_start {
-        bnb.warm_start =
-            crate::baselines::greedy::greedy_incumbent(input, &model, &cols, &slacks);
+        bnb.warm_start = crate::baselines::greedy::greedy_incumbent(input, model, cols, slacks);
     }
-    let r: BnbResult = solve_ilp(&model, &bnb);
-    decode(&r, &cols, &slacks)
+    if let Some(hint) = hint {
+        // map the semantic (type, combo) basis onto this model's
+        // columns; combos that left the candidate universe vanish
+        let mapped: Vec<usize> = hint
+            .iter()
+            .filter_map(|(a, c)| {
+                cols.iter().find(|(a2, c2, _)| a2 == a && c2 == c).map(|(_, _, v)| v.0)
+            })
+            .collect();
+        bnb.basis_hint = Some(mapped);
+    }
+    let r: BnbResult = solve_ilp(model, &bnb);
+    decode(&r, cols, slacks)
+}
+
+/// Incremental Problem 1 construction (scale-out lever 3): instead of
+/// re-deriving the candidate universe and re-assembling the constraint
+/// matrix from scratch on every arrival, the builder keeps the job set,
+/// the capacity map, the scored pair list and the last-built model
+/// alive, and applies job-add / job-remove / accelerator-churn edits
+/// with dirty tracking. An arrival costs O(|J|) pair scorings instead
+/// of the O(|J|²) full rescan, and a re-solve with no edits at all
+/// (measurement rounds on a quiet cluster) reuses the entire matrix.
+///
+/// Equivalence contract: after any edit sequence,
+/// [`Problem1Builder::build`] produces exactly the model
+/// [`build_problem1`] would derive from the final state
+/// (property-tested in `tests/proptests.rs`). The pair list is
+/// maintained in `candidate_combos`' canonical order — score
+/// descending, ties by ascending id pair, which is what its stable
+/// sort over id-ordered generation yields — so the reuse is bit-exact.
+///
+/// Estimates are read through the caller's `throughput` closure (the
+/// coordinator backs it with its `EstimateCache`); when entries behind
+/// it change, call [`Problem1Builder::note_estimates_changed`] so the
+/// stored pair scores and the cached matrix are refreshed.
+pub struct Problem1Builder {
+    max_pairs_per_job: usize,
+    jobs: BTreeMap<JobId, JobSpec>,
+    accel_counts: BTreeMap<AccelType, u32>,
+    /// every candidate pair with its v100 combined-throughput score, in
+    /// canonical order (see above)
+    scored_pairs: Vec<(f64, Combo)>,
+    rescore: bool,
+    cached: Option<CachedModel>,
+    /// edit / reuse counters for §Perf reporting
+    pub edits: u64,
+    pub pairs_scored: u64,
+    pub model_rebuilds: u64,
+    pub model_reuses: u64,
+}
+
+struct CachedModel {
+    key: ModelKey,
+    model: Model,
+    cols: Vec<(AccelType, Combo, VarId)>,
+    slacks: BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
+}
+
+/// Everything besides jobs / capacities / estimates that shapes the
+/// model — a key mismatch forces a rebuild.
+#[derive(Debug, Clone, PartialEq)]
+struct ModelKey {
+    /// `now_s` when any job is latency-constrained (2e′ reads the
+    /// diurnal rate), else 0.0 so pure-training pools reuse the matrix
+    /// across arrivals at any simulated time
+    now_s: f64,
+    slack_penalty: Option<f64>,
+    throughput_bonus: f64,
+    dvfs: bool,
+    carbon_weight: f64,
+}
+
+impl ModelKey {
+    fn of(input: &Problem1Input) -> Self {
+        let latency = input.jobs.iter().any(|j| j.is_inference());
+        Self {
+            now_s: if latency { input.now_s } else { 0.0 },
+            slack_penalty: input.slack_penalty,
+            throughput_bonus: input.throughput_bonus,
+            dvfs: input.power.dvfs,
+            carbon_weight: input.power.carbon_weight,
+        }
+    }
+}
+
+fn pair_ids(c: &Combo) -> (JobId, JobId) {
+    let js = c.jobs();
+    (js[0], js[js.len() - 1])
+}
+
+impl Problem1Builder {
+    pub fn new(max_pairs_per_job: usize) -> Self {
+        Self {
+            max_pairs_per_job,
+            jobs: BTreeMap::new(),
+            accel_counts: BTreeMap::new(),
+            scored_pairs: vec![],
+            rescore: false,
+            cached: None,
+            edits: 0,
+            pairs_scored: 0,
+            model_rebuilds: 0,
+            model_reuses: 0,
+        }
+    }
+
+    /// Jobs currently in the problem, ascending id (the order the
+    /// optimizer passes to [`Problem1Input`]).
+    pub fn jobs_sorted(&self) -> Vec<JobSpec> {
+        self.jobs.values().cloned().collect()
+    }
+
+    pub fn accel_counts(&self) -> &BTreeMap<AccelType, u32> {
+        &self.accel_counts
+    }
+
+    /// Add (or replace) a job: only its own O(|J|) pairs are scored.
+    pub fn add_job(&mut self, job: JobSpec, throughput: &dyn Fn(AccelType, JobId, &Combo) -> f64) {
+        self.remove_job(job.id);
+        let others: Vec<JobId> = self.jobs.keys().copied().collect();
+        for other in others {
+            let c = Combo::pair(other, job.id);
+            let s: f64 = c.jobs().iter().map(|&j| throughput(AccelType::V100, j, &c)).sum();
+            let slot = self.pair_slot(s, pair_ids(&c));
+            self.scored_pairs.insert(slot, (s, c));
+            self.pairs_scored += 1;
+        }
+        self.jobs.insert(job.id, job);
+        self.cached = None;
+        self.edits += 1;
+    }
+
+    /// Drop a job and every pair containing it.
+    pub fn remove_job(&mut self, id: JobId) -> bool {
+        if self.jobs.remove(&id).is_none() {
+            return false;
+        }
+        self.scored_pairs.retain(|(_, c)| !c.contains(id));
+        self.cached = None;
+        self.edits += 1;
+        true
+    }
+
+    /// Apply accelerator churn: replace the capacity map.
+    pub fn set_accel_counts(&mut self, counts: BTreeMap<AccelType, u32>) {
+        if self.accel_counts != counts {
+            self.accel_counts = counts;
+            self.cached = None;
+            self.edits += 1;
+        }
+    }
+
+    /// Estimates behind the throughput closure changed (measurement or
+    /// P2 refinement round): stored pair scores and the cached matrix
+    /// are stale and will be refreshed at the next build.
+    pub fn note_estimates_changed(&mut self) {
+        self.rescore = true;
+        self.cached = None;
+    }
+
+    /// Reconcile against the scheduler's current job list (ascending
+    /// id): jobs that disappeared are removed, new or changed specs
+    /// (re-)added. This is how an arrival, completion or elastic
+    /// re-spec lands as an O(changes) edit instead of a rebuild.
+    pub fn sync_jobs(
+        &mut self,
+        jobs: &[JobSpec],
+        throughput: &dyn Fn(AccelType, JobId, &Combo) -> f64,
+    ) {
+        let target: BTreeSet<JobId> = jobs.iter().map(|j| j.id).collect();
+        let gone: Vec<JobId> =
+            self.jobs.keys().filter(|id| !target.contains(id)).copied().collect();
+        for id in gone {
+            self.remove_job(id);
+        }
+        for j in jobs {
+            if self.jobs.get(&j.id) != Some(j) {
+                self.add_job(j.clone(), throughput);
+            }
+        }
+    }
+
+    /// Canonical insertion slot: descending score, ties by ascending
+    /// id pair (exactly `candidate_combos`' stable-sort order).
+    fn pair_slot(&self, score: f64, ids: (JobId, JobId)) -> usize {
+        self.scored_pairs
+            .partition_point(|(s, c)| *s > score || (*s == score && pair_ids(c) < ids))
+    }
+
+    /// Candidate universe for the current state, reusing stored pair
+    /// scores (rescored only after [`Problem1Builder::note_estimates_changed`]).
+    fn combos(&mut self, throughput: &dyn Fn(AccelType, JobId, &Combo) -> f64) -> Vec<Combo> {
+        if self.rescore {
+            for (s, c) in &mut self.scored_pairs {
+                *s = c.jobs().iter().map(|&j| throughput(AccelType::V100, j, c)).sum();
+                self.pairs_scored += 1;
+            }
+            self.scored_pairs.sort_by(|x, y| {
+                y.0.partial_cmp(&x.0)
+                    .unwrap_or(Ordering::Equal)
+                    .then_with(|| pair_ids(&x.1).cmp(&pair_ids(&y.1)))
+            });
+            self.rescore = false;
+        }
+        let mut combos: Vec<Combo> = self.jobs.keys().map(|&j| Combo::Solo(j)).collect();
+        if self.max_pairs_per_job == 0 || self.jobs.len() < 2 {
+            return combos;
+        }
+        let mut per_job: BTreeMap<JobId, usize> = BTreeMap::new();
+        for (_, c) in &self.scored_pairs {
+            let js = c.jobs();
+            if js.iter().all(|j| per_job.get(j).copied().unwrap_or(0) < self.max_pairs_per_job) {
+                for j in &js {
+                    *per_job.entry(*j).or_default() += 1;
+                }
+                combos.push(*c);
+            }
+        }
+        combos
+    }
+
+    /// Build (or reuse) the constraint matrix for the current state.
+    /// `input.jobs` must be this builder's [`Problem1Builder::jobs_sorted`]
+    /// list, with 2e′ already folded in by the caller when relevant.
+    pub fn build(
+        &mut self,
+        input: &Problem1Input,
+    ) -> (
+        &Model,
+        &[(AccelType, Combo, VarId)],
+        &BTreeMap<JobId, (Option<VarId>, Option<VarId>)>,
+    ) {
+        debug_assert_eq!(input.jobs.len(), self.jobs.len());
+        debug_assert_eq!(input.max_pairs_per_job, self.max_pairs_per_job);
+        let key = ModelKey::of(input);
+        if self.cached.as_ref().map_or(true, |c| c.key != key) {
+            let combos = self.combos(input.throughput);
+            let (model, cols, slacks) = build_model(input, &combos);
+            self.cached = Some(CachedModel {
+                key,
+                model,
+                cols,
+                slacks,
+            });
+            self.model_rebuilds += 1;
+        } else {
+            self.model_reuses += 1;
+        }
+        let c = self.cached.as_ref().expect("just built");
+        (&c.model, &c.cols, &c.slacks)
+    }
+
+    /// Solve Problem 1 through the cached matrix, with optional basis
+    /// chaining. 2e′ latency folding matches [`solve_problem1`].
+    pub fn solve(
+        &mut self,
+        input: &Problem1Input,
+        bnb: &BnbConfig,
+        hint: Option<&ColumnBasis>,
+    ) -> AllocationSolution {
+        let adjusted: Option<Vec<JobSpec>> = input
+            .jobs
+            .iter()
+            .any(|j| j.is_inference())
+            .then(|| latency_adjusted_jobs(input.jobs, input.now_s));
+        let input = &Problem1Input {
+            jobs: adjusted.as_deref().unwrap_or(input.jobs),
+            ..*input
+        };
+        let (model, cols, slacks) = self.build(input);
+        solve_built(input, bnb, model, cols, slacks, hint)
+    }
 }
 
 fn decode(
@@ -331,6 +672,16 @@ fn decode(
         }
         violated.sort();
     }
+    // Re-map the root basis (original var indices) onto (type, combo)
+    // pairs; slack variables are per-job and never transfer, so only
+    // structural columns survive the export.
+    let basis = r.root_basis.as_ref().map(|b| {
+        b.iter()
+            .filter_map(|&i| {
+                cols.iter().find(|(_, _, v)| v.0 == i).map(|(a, c, _)| (*a, *c))
+            })
+            .collect()
+    });
     AllocationSolution {
         assignments,
         violated_jobs: violated,
@@ -340,6 +691,7 @@ fn decode(
         gap: r.gap(),
         lp_pivots: r.lp_pivots,
         warm_started: r.warm_started,
+        basis,
     }
 }
 
@@ -712,6 +1064,137 @@ mod tests {
             .assignments
             .iter()
             .any(|(_, c, m)| c.contains(jobs[1].id) && *m >= 1));
+    }
+
+    #[test]
+    fn basis_chaining_reaches_the_same_optimum() {
+        let (jobs, oracle, counts) = setup(6, 2);
+        let jobs_c = jobs.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let input = oracle_input(&jobs, &oracle, &counts, &thr, &cap);
+        let bnb = BnbConfig {
+            max_nodes: 200_000,
+            time_limit_s: 60.0,
+            ..Default::default()
+        };
+        let cold = solve_problem1(&input, &bnb);
+        assert_eq!(cold.status, BnbStatus::Optimal);
+        assert!(cold.basis.is_none(), "plain solve exports no basis");
+        // first arrival of a chain: empty hint, basis exported
+        let first = solve_problem1_with_basis(&input, &bnb, &ColumnBasis::new());
+        assert_eq!(first.status, BnbStatus::Optimal);
+        assert!((cold.objective - first.objective).abs() < 1e-6);
+        let basis = first.basis.clone().expect("chaining exports a basis");
+        assert!(!basis.is_empty());
+        // next arrival: crash-start from the previous basis
+        let warm = solve_problem1_with_basis(&input, &bnb, &basis);
+        assert_eq!(warm.status, BnbStatus::Optimal);
+        assert!((cold.objective - warm.objective).abs() < 1e-6);
+    }
+
+    #[test]
+    fn builder_edit_sequence_matches_from_scratch() {
+        let (jobs, oracle, counts) = setup(8, 2);
+        let jobs_c = jobs.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let mut b = Problem1Builder::new(3);
+        b.set_accel_counts(counts.clone());
+        for j in &jobs {
+            b.add_job(j.clone(), &thr);
+        }
+        b.remove_job(jobs[2].id);
+        b.remove_job(jobs[5].id);
+        let mut smaller = counts.clone();
+        smaller.insert(AccelType::K80, 1);
+        b.set_accel_counts(smaller.clone());
+        let final_jobs = b.jobs_sorted();
+        assert_eq!(final_jobs.len(), 6);
+        let input = Problem1Input {
+            jobs: &final_jobs,
+            accel_counts: &smaller,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 3,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+            now_s: 0.0,
+            power: PowerKnobs::default(),
+        };
+        let (sm, sc, ss) = build_problem1(&input, &BnbConfig::default());
+        let (m, c, s) = b.build(&input);
+        assert_eq!(c, sc.as_slice());
+        assert_eq!(s, &ss);
+        assert_eq!(m.vars.len(), sm.vars.len());
+        for (a, z) in m.vars.iter().zip(&sm.vars) {
+            assert_eq!(a.name, z.name);
+            assert_eq!((a.lb, a.ub, a.obj), (z.lb, z.ub, z.obj));
+            assert_eq!(a.kind, z.kind);
+        }
+        assert_eq!(m.constraints.len(), sm.constraints.len());
+        for (a, z) in m.constraints.iter().zip(&sm.constraints) {
+            assert_eq!(a.name, z.name);
+            assert_eq!(a.terms, z.terms);
+            assert_eq!(a.sense, z.sense);
+            assert_eq!(a.rhs, z.rhs);
+        }
+    }
+
+    #[test]
+    fn builder_reuses_matrix_until_dirtied() {
+        let (jobs, oracle, counts) = setup(4, 2);
+        let jobs_c = jobs.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / 5.0;
+        let mut b = Problem1Builder::new(2);
+        b.set_accel_counts(counts.clone());
+        for j in &jobs {
+            b.add_job(j.clone(), &thr);
+        }
+        // 4 arrivals score 0 + 1 + 2 + 3 = 6 pairs, O(|J|) each
+        assert_eq!(b.pairs_scored, 6);
+        let final_jobs = b.jobs_sorted();
+        let input = Problem1Input {
+            jobs: &final_jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 2,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 0.0,
+            now_s: 0.0,
+            power: PowerKnobs::default(),
+        };
+        let bnb = BnbConfig::default();
+        let scratch = solve_problem1(&input, &bnb);
+        let built = b.solve(&input, &bnb, None);
+        assert_eq!(built.assignments, scratch.assignments);
+        assert_eq!(built.objective, scratch.objective);
+        assert_eq!((b.model_rebuilds, b.model_reuses), (1, 0));
+        // identical re-solve: the whole matrix is reused
+        let again = b.solve(&input, &bnb, None);
+        assert_eq!(again.assignments, scratch.assignments);
+        assert_eq!((b.model_rebuilds, b.model_reuses), (1, 1));
+        // estimate change: every stored pair is rescored once
+        let before = b.pairs_scored;
+        b.note_estimates_changed();
+        let _ = b.solve(&input, &bnb, None);
+        assert_eq!((b.model_rebuilds, b.model_reuses), (2, 1));
+        assert_eq!(b.pairs_scored, before + 6);
     }
 
     #[test]

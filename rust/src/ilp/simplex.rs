@@ -52,6 +52,16 @@ struct RowMeta {
     rhs: f64,
 }
 
+/// Tableau dimensions of one solve (compact space).
+#[derive(Debug, Clone, Copy)]
+struct Dims {
+    m: usize,
+    n_slack: usize,
+    n_art: usize,
+    total: usize,
+    width: usize,
+}
+
 /// Reusable scratch space for repeated LP solves (see module docs).
 #[derive(Debug, Default)]
 pub struct SimplexWorkspace {
@@ -90,11 +100,48 @@ impl SimplexWorkspace {
         self.solves
     }
 
+    /// Original-space indices of the structural variables basic at the
+    /// end of the last solve, ascending. Export these as a warm-start
+    /// hint for [`SimplexWorkspace::solve_with_basis`] on the next
+    /// structurally-similar model (the basis-reuse half of the
+    /// scale-out levers; see `benches/ilp_scaling.rs`).
+    pub fn basic_structurals(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .basis
+            .iter()
+            .filter(|&&b| b < self.originals.len())
+            .map(|&b| self.originals[b])
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     /// Solve the LP relaxation of `model`, with optional per-variable
     /// bound overrides (used by branch-and-bound to fix/branch
     /// variables). Identical semantics to [`solve_lp`]; buffers are
     /// reused across calls.
     pub fn solve(&mut self, model: &Model, bounds: Option<&[(f64, f64)]>) -> LpResult {
+        self.solve_with_basis(model, bounds, None)
+    }
+
+    /// [`SimplexWorkspace::solve`] with an optional crash-start basis:
+    /// `hint` names original-space variable indices that were basic at a
+    /// previous solve of a related model (from
+    /// [`SimplexWorkspace::basic_structurals`]). Each hinted column is
+    /// driven into the starting basis by Gauss-Jordan pivots; when the
+    /// crashed basis is primal-feasible with no artificial left basic,
+    /// phase 1 is skipped entirely. A stale, fixed-out or
+    /// rank-deficient hint degrades gracefully to the cold two-phase
+    /// path on a rebuilt tableau, so the result is always correct —
+    /// only the pivot count changes. `hint: None` is bit-identical to
+    /// [`SimplexWorkspace::solve`].
+    pub fn solve_with_basis(
+        &mut self,
+        model: &Model,
+        bounds: Option<&[(f64, f64)]>,
+        hint: Option<&[usize]>,
+    ) -> LpResult {
         self.solves += 1;
         let n = model.n_vars();
         let get_bounds = |i: usize| -> (f64, f64) {
@@ -188,69 +235,28 @@ impl SimplexWorkspace {
             }
         }
         let n = nf; // from here on, work in the compact space
-
-        let m = self.rows.len();
-        // Column layout: [structural 0..n | slack/surplus | artificials]
-        // + RHS. Count extras.
-        let mut n_slack = 0;
-        let mut n_art = 0;
-        for r in &self.rows {
-            let rhs_neg = r.rhs < -EPS;
-            match effective_sense(r.sense, rhs_neg) {
-                Sense::Le => n_slack += 1,
-                Sense::Ge => {
-                    n_slack += 1;
-                    n_art += 1;
-                }
-                Sense::Eq => n_art += 1,
-            }
-        }
-        let total = n + n_slack + n_art;
-        let width = total + 1; // + RHS column
-        self.t.clear();
-        self.t.resize(m * width, 0.0);
-        self.basis.clear();
-        self.basis.resize(m, 0);
-        self.art_rows.clear();
-
-        let mut slack_col = n;
-        let mut art_col = n + n_slack;
-        for ri in 0..m {
-            let r = self.rows[ri];
-            let neg = r.rhs < -EPS;
-            let sgn = if neg { -1.0 } else { 1.0 };
-            for k in r.start..r.start + r.len {
-                let (ci, coef) = self.coefs[k];
-                self.t[ri * width + ci] += sgn * coef;
-            }
-            self.t[ri * width + total] = sgn * r.rhs;
-            match effective_sense(r.sense, neg) {
-                Sense::Le => {
-                    self.t[ri * width + slack_col] = 1.0;
-                    self.basis[ri] = slack_col;
-                    slack_col += 1;
-                }
-                Sense::Ge => {
-                    self.t[ri * width + slack_col] = -1.0;
-                    slack_col += 1;
-                    self.t[ri * width + art_col] = 1.0;
-                    self.basis[ri] = art_col;
-                    art_col += 1;
-                    self.art_rows.push(ri);
-                }
-                Sense::Eq => {
-                    self.t[ri * width + art_col] = 1.0;
-                    self.basis[ri] = art_col;
-                    art_col += 1;
-                    self.art_rows.push(ri);
-                }
-            }
-        }
+        let mut d = self.build_tableau(n);
 
         let mut iterations = 0usize;
 
+        // ---- Optional crash start: drive the hinted basis in before
+        // phase 1. On success the crashed basis is primal-feasible with
+        // no artificial basic, so phase 1 is skipped outright (phase 2
+        // below rebuilds its reduced-cost row from scratch for ANY
+        // basis). On failure the crash pivots have corrupted the
+        // tableau, so it is rebuilt and the cold path runs.
+        let mut crashed = false;
+        if let Some(hint) = hint {
+            crashed = self.crash_basis(hint, n, d);
+            if !crashed {
+                d = self.build_tableau(n);
+            }
+        }
+        let (m, n_slack, n_art) = (d.m, d.n_slack, d.n_art);
+        let (total, width) = (d.total, d.width);
+
         // ---- Phase 1: minimize sum of artificials.
-        if n_art > 0 {
+        if !crashed && n_art > 0 {
             // reduced costs z for the phase-1 objective (Σ artificial rows)
             self.z.clear();
             self.z.resize(width, 0.0);
@@ -365,6 +371,163 @@ impl SimplexWorkspace {
             objective,
             iterations,
         }
+    }
+
+    /// (Re)build the standard-form tableau from the prepared `rows` /
+    /// `coefs` buffers. Column layout: `[structural 0..n | slack/surplus
+    /// | artificials] + RHS`; each row's starting basic column is its
+    /// slack or artificial.
+    fn build_tableau(&mut self, n: usize) -> Dims {
+        let m = self.rows.len();
+        let mut n_slack = 0;
+        let mut n_art = 0;
+        for r in &self.rows {
+            let rhs_neg = r.rhs < -EPS;
+            match effective_sense(r.sense, rhs_neg) {
+                Sense::Le => n_slack += 1,
+                Sense::Ge => {
+                    n_slack += 1;
+                    n_art += 1;
+                }
+                Sense::Eq => n_art += 1,
+            }
+        }
+        let total = n + n_slack + n_art;
+        let width = total + 1; // + RHS column
+        self.t.clear();
+        self.t.resize(m * width, 0.0);
+        self.basis.clear();
+        self.basis.resize(m, 0);
+        self.art_rows.clear();
+
+        let mut slack_col = n;
+        let mut art_col = n + n_slack;
+        for ri in 0..m {
+            let r = self.rows[ri];
+            let neg = r.rhs < -EPS;
+            let sgn = if neg { -1.0 } else { 1.0 };
+            for k in r.start..r.start + r.len {
+                let (ci, coef) = self.coefs[k];
+                self.t[ri * width + ci] += sgn * coef;
+            }
+            self.t[ri * width + total] = sgn * r.rhs;
+            match effective_sense(r.sense, neg) {
+                Sense::Le => {
+                    self.t[ri * width + slack_col] = 1.0;
+                    self.basis[ri] = slack_col;
+                    slack_col += 1;
+                }
+                Sense::Ge => {
+                    self.t[ri * width + slack_col] = -1.0;
+                    slack_col += 1;
+                    self.t[ri * width + art_col] = 1.0;
+                    self.basis[ri] = art_col;
+                    art_col += 1;
+                    self.art_rows.push(ri);
+                }
+                Sense::Eq => {
+                    self.t[ri * width + art_col] = 1.0;
+                    self.basis[ri] = art_col;
+                    art_col += 1;
+                    self.art_rows.push(ri);
+                }
+            }
+        }
+        Dims {
+            m,
+            n_slack,
+            n_art,
+            total,
+            width,
+        }
+    }
+
+    /// Gauss-Jordan crash: drive each hinted structural column into the
+    /// starting basis. Hint entries that are out of range, fixed out by
+    /// presolve, or linearly dependent on already-crashed columns are
+    /// skipped (stale-hint tolerance). Pivot rows are chosen by largest
+    /// absolute coefficient among unclaimed rows (ties to the lowest
+    /// row index — deterministic). Returns whether the crashed basis is
+    /// usable: primal-feasible RHS and no artificial left basic. The
+    /// crash pivots count toward [`SimplexWorkspace::total_pivots`].
+    fn crash_basis(&mut self, hint: &[usize], n: usize, d: Dims) -> bool {
+        let (m, n_slack, total, width) = (d.m, d.n_slack, d.total, d.width);
+        if m == 0 {
+            return true;
+        }
+        // dummy reduced-cost row for pivot bookkeeping: phase 2 rebuilds
+        // the real one from scratch for whatever basis results
+        self.z.clear();
+        self.z.resize(width, 0.0);
+        let mut claimed = vec![false; m];
+        for &orig in hint {
+            let Some(&ci) = self.compact.get(orig) else { continue };
+            if ci == usize::MAX || ci >= n {
+                continue;
+            }
+            if let Some(r) = (0..m).find(|&r| self.basis[r] == ci) {
+                claimed[r] = true; // duplicate hint entry: already basic
+                continue;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for (r, c) in claimed.iter().enumerate() {
+                if *c {
+                    continue;
+                }
+                let a = self.t[r * width + ci].abs();
+                if a > 1e-7 && best.map_or(true, |(ba, _)| a > ba) {
+                    best = Some((a, r));
+                }
+            }
+            let Some((_, r)) = best else { continue };
+            pivot(
+                &mut self.t,
+                &mut self.basis,
+                r,
+                ci,
+                m,
+                width,
+                &mut self.z,
+                &mut self.total_pivots,
+            );
+            claimed[r] = true;
+        }
+        // Rescue pass: a row still holding a basic artificial can often
+        // be claimed by a slack/surplus column instead (a `≥` row the
+        // crashed structurals over-satisfy takes its surplus in with a
+        // positive value). Only pivots keeping this row's RHS feasible
+        // are tried; the final check validates the whole tableau.
+        for r in 0..m {
+            if self.basis[r] < n + n_slack {
+                continue;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for c in n..n + n_slack {
+                if self.basis.contains(&c) {
+                    continue;
+                }
+                let a = self.t[r * width + c];
+                if a.abs() > 1e-7 && self.t[r * width + total] / a >= -EPS {
+                    let better = best.map_or(true, |(ba, _)| a.abs() > ba);
+                    if better {
+                        best = Some((a.abs(), c));
+                    }
+                }
+            }
+            if let Some((_, c)) = best {
+                pivot(
+                    &mut self.t,
+                    &mut self.basis,
+                    r,
+                    c,
+                    m,
+                    width,
+                    &mut self.z,
+                    &mut self.total_pivots,
+                );
+            }
+        }
+        (0..m).all(|r| self.basis[r] < n + n_slack && self.t[r * width + total] >= -EPS)
     }
 }
 
@@ -672,6 +835,98 @@ mod tests {
             }
         }
         assert!(ws.solves() == 30 && ws.total_pivots() > 0);
+    }
+
+    #[test]
+    fn basis_warm_start_matches_cold_solve() {
+        // Re-solving with the exported basis must reach the same
+        // optimum as the cold two-phase path. Degenerate ties may pick
+        // a different optimal vertex, so the objective (not x) is the
+        // contract here.
+        let mut cold = SimplexWorkspace::new();
+        let mut warm = SimplexWorkspace::new();
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        for case in 0..30 {
+            let nv = rng.range_usize(2, 12);
+            let sense = if rng.bool(0.5) {
+                ObjSense::Minimize
+            } else {
+                ObjSense::Maximize
+            };
+            let mut m = Model::new(sense);
+            let vars: Vec<_> = (0..nv)
+                .map(|i| {
+                    m.add_var(
+                        format!("x{i}"),
+                        0.0,
+                        rng.range_f64(1.0, 10.0),
+                        VarKind::Continuous,
+                        rng.range_f64(-4.0, 4.0),
+                    )
+                })
+                .collect();
+            for ci in 0..rng.range_usize(1, 6) {
+                let mut terms = vec![];
+                for &v in &vars {
+                    if rng.bool(0.5) {
+                        terms.push((v, rng.range_f64(-2.0, 2.0)));
+                    }
+                }
+                if terms.is_empty() {
+                    continue;
+                }
+                let s = match rng.range_usize(0, 3) {
+                    0 => Sense::Le,
+                    1 => Sense::Ge,
+                    _ => Sense::Eq,
+                };
+                m.add_constraint(format!("c{ci}"), terms, s, rng.range_f64(-3.0, 6.0));
+            }
+            let a = cold.solve(&m, None);
+            let hint = cold.basic_structurals();
+            let b = warm.solve_with_basis(&m, None, Some(&hint));
+            assert_eq!(a.status, b.status, "case {case}");
+            if a.status == LpStatus::Optimal {
+                assert!((a.objective - b.objective).abs() < 1e-7, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_on_ge_rows_matches_cold() {
+        let mut m = Model::new(ObjSense::Minimize);
+        let x = var(&mut m, "x", 2.0);
+        let y = var(&mut m, "y", 3.0);
+        m.add_constraint("cover", vec![(x, 1.0), (y, 1.0)], Sense::Ge, 10.0);
+        m.add_constraint("xmin", vec![(x, 1.0)], Sense::Ge, 2.0);
+        let mut ws = SimplexWorkspace::new();
+        let cold = ws.solve(&m, None);
+        let hint = ws.basic_structurals();
+        assert!(hint.contains(&0), "x is basic at the optimum");
+        let warm = ws.solve_with_basis(&m, None, Some(&hint));
+        assert_eq!(warm.status, LpStatus::Optimal);
+        assert!((cold.objective - warm.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stale_or_bogus_basis_hints_degrade_gracefully() {
+        let mut ws = SimplexWorkspace::new();
+        let mut m = Model::new(ObjSense::Maximize);
+        let x = var(&mut m, "x", 3.0);
+        let y = var(&mut m, "y", 5.0);
+        m.add_constraint("c1", vec![(x, 1.0)], Sense::Le, 4.0);
+        m.add_constraint("c2", vec![(y, 2.0)], Sense::Le, 12.0);
+        m.add_constraint("c3", vec![(x, 3.0), (y, 2.0)], Sense::Le, 18.0);
+        for hint in [vec![], vec![0], vec![1, 1], vec![99, 7, 0, 1]] {
+            let r = ws.solve_with_basis(&m, None, Some(&hint));
+            assert_eq!(r.status, LpStatus::Optimal, "hint {hint:?}");
+            assert!((r.objective - 36.0).abs() < 1e-6, "hint {hint:?}");
+        }
+        // hinting a variable that bound overrides have fixed out of the
+        // model must fall through presolve harmlessly
+        let r = ws.solve_with_basis(&m, Some(&[(2.0, 2.0), (0.0, f64::INFINITY)]), Some(&[0, 1]));
+        assert_eq!(r.status, LpStatus::Optimal);
+        assert!((r.x[0] - 2.0).abs() < 1e-6);
     }
 
     #[test]

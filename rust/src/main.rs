@@ -24,9 +24,9 @@ const USAGE: &str = "gogh — correlation-guided orchestration of GPUs in hetero
 USAGE:
   gogh simulate [--policy gogh|random|greedy|oracle|gavel] [--jobs N] [--seed S]
                 [--config cfg.json]
-                [--preset default|large|mixed|serving|powercap|carbon|
+                [--preset default|large|huge|mixed|serving|powercap|carbon|
                           priority|burst|contended]
-                [--shards P] [--backend auto|pjrt|native|none]
+                [--shards P] [--topology G] [--backend auto|pjrt|native|none]
                 [--save-catalog catalog.json] [--gavel-csv data.csv]
                 [--cancel-rate P] [--accel-churn N] [--migration-cost-s S]
                 [--inference-fraction F] [--power-cap W]
@@ -34,7 +34,7 @@ USAGE:
                 [--preemption true|false]
   gogh info [--workloads]
   gogh solve [--jobs N] [--servers-per-type K] [--seed S]
-  gogh config [--preset default|large|mixed|serving|powercap|carbon|
+  gogh config [--preset default|large|huge|mixed|serving|powercap|carbon|
                         priority|burst|contended]
 
 Daemon clients (talk to a running goghd; see docs/PROTOCOL.md):
@@ -50,7 +50,11 @@ All five accept --addr HOST:PORT (default 127.0.0.1:7411) or
 
 The `large` preset is the scale scenario: ≥1024 accelerator instances,
 a ≥50k-event trace, and the shard-parallel decision path (--shards
-overrides the shard count; 1 = the single-threaded path).
+overrides the shard count; 1 = the single-threaded path). The `huge`
+preset is the fleet scenario: ≥10k instances, a ≥500k-event trace, and
+the two-level topology router (--topology overrides the group count;
+each group holds --shards shards, and arrivals are routed to one group
+before its shards solve in parallel).
 
 The `mixed` and `serving` presets add the inference workload class:
 a fraction of arrivals (--inference-fraction overrides it) are
@@ -127,6 +131,9 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
     if let Some(p) = args.get_parse::<usize>("shards") {
         cfg.gogh.shards = p.max(1);
     }
+    if let Some(g) = args.get_parse::<usize>("topology") {
+        cfg.gogh.topology_groups = g.max(1);
+    }
     if let Some(b) = args.get("backend") {
         cfg.gogh.backend = BackendKind::from_key(b)?;
     }
@@ -199,17 +206,20 @@ fn simulate(args: &Args) -> Result<()> {
             }
             println!(
                 "solver paths: {} full ({:.1} nodes/solve), {} incremental \
-                 ({:.1} nodes/solve); estimate cache {:.1}% hit over {} lookups",
+                 ({:.1} nodes/solve); estimate cache {:.1}% hit \
+                 ({} hits / {} misses, {} invalidation rounds)",
                 stats.full_solves,
                 stats.mean_full_nodes(),
                 stats.incremental_solves,
                 stats.mean_incremental_nodes(),
                 100.0 * cache.hit_rate(),
-                cache.hits + cache.misses,
+                cache.hits,
+                cache.misses,
+                cache.invalidations,
             );
-            if cfg.gogh.shards > 1 {
+            if cfg.gogh.shards > 1 || cfg.gogh.topology_groups > 1 {
                 // stats are sized by the requested shard count; the
-                // partition clamps to the cluster size, so skip slots
+                // topology clamps to the cluster size, so skip slots
                 // that never solved
                 for (i, s) in sys.scheduler().shard_stats().iter().enumerate() {
                     if s.solves == 0 {
@@ -267,8 +277,13 @@ fn simulate(args: &Args) -> Result<()> {
         println!("estimation MAE vs measured: {mae:.4}");
     }
     println!(
-        "decision path: ILP {:.2} ms, P1 {:.2} ms, {:.3} ms/event over {} events",
-        report.mean_solve_ms, report.mean_p1_ms, report.mean_decision_ms, report.events
+        "decision path: ILP {:.2} ms, P1 {:.2} ms, {:.3} ms/event \
+         (p99 {:.3} ms) over {} events",
+        report.mean_solve_ms,
+        report.mean_p1_ms,
+        report.mean_decision_ms,
+        report.p99_decision_ms,
+        report.events
     );
     println!(
         "completed {}/{} jobs ({} cancelled, mean queue {:.1} s, \

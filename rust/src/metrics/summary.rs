@@ -31,6 +31,9 @@ pub struct RunReport {
     pub events: usize,
     /// mean wall-clock policy latency per dispatched event (ms)
     pub mean_decision_ms: f64,
+    /// p99 wall-clock policy latency per dispatched event (ms) — the
+    /// tail the hierarchical decision path is sized against
+    pub p99_decision_ms: f64,
     /// mean job completion time (s)
     pub mean_jct: f64,
     /// throughput-estimation MAE vs ground truth, if an estimator ran
@@ -240,6 +243,9 @@ pub struct BenchRecord {
     pub jobs: usize,
     /// mean per-event decision latency (ms) — the gated number
     pub mean_decision_ms: f64,
+    /// p99 per-event decision latency (ms) — gated alongside the mean
+    /// so a fat tail can't hide behind a healthy average
+    pub p99_decision_ms: f64,
     /// total branch-and-bound nodes explored across the run
     pub explored_nodes: usize,
     /// peak resident set of the bench process (bytes; 0 off-Linux)
@@ -252,6 +258,7 @@ impl BenchRecord {
             ("bench", self.bench.as_str().into()),
             ("jobs", self.jobs.into()),
             ("mean_decision_ms", self.mean_decision_ms.into()),
+            ("p99_decision_ms", self.p99_decision_ms.into()),
             ("explored_nodes", self.explored_nodes.into()),
             ("peak_rss_bytes", self.peak_rss_bytes.into()),
         ])
@@ -333,6 +340,7 @@ mod tests {
             bench: "e2e_scheduling".into(),
             jobs: 300,
             mean_decision_ms: 1.25,
+            p99_decision_ms: 4.5,
             explored_nodes: 42,
             peak_rss_bytes: 4096,
         };
@@ -340,6 +348,7 @@ mod tests {
         assert_eq!(j.req_str("bench").unwrap(), "e2e_scheduling");
         assert_eq!(j.req_usize("jobs").unwrap(), 300);
         assert!((j.req_f64("mean_decision_ms").unwrap() - 1.25).abs() < 1e-12);
+        assert!((j.req_f64("p99_decision_ms").unwrap() - 4.5).abs() < 1e-12);
         assert_eq!(j.req_usize("explored_nodes").unwrap(), 42);
         assert_eq!(j.req_usize("peak_rss_bytes").unwrap(), 4096);
     }

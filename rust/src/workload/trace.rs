@@ -93,6 +93,26 @@ impl TraceConfig {
         }
     }
 
+    /// The `huge` scale preset: ≥ 500k trace events for the
+    /// ~10k-accelerator scenario (`ExperimentConfig::preset("huge")`).
+    /// 500k arrivals at a 0.5 s mean inter-arrival; mean work of 700
+    /// normalized-seconds keeps the steady-state active-job count in
+    /// the low thousands — the regime where only the hierarchical
+    /// topology keeps per-decision work bounded. CI truncates the job
+    /// count via `GOGH_SCALE_JOBS`; the full trace is the bench/soak
+    /// shape.
+    pub fn huge() -> Self {
+        Self {
+            n_jobs: 500_000,
+            mean_interarrival_s: 0.5,
+            mean_work_s: 700.0,
+            cancel_rate: 0.05,
+            accel_churn: 24.0,
+            seed: 43,
+            ..Self::large()
+        }
+    }
+
     /// The `mixed` preset: roughly one third of arrivals are
     /// latency-SLO inference jobs, the rest training — the smallest
     /// trace that exercises the full train+infer decision path (the CI

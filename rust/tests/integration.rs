@@ -300,6 +300,58 @@ fn gogh_without_artifacts_from_config() {
     assert_eq!(report.jobs_completed, 4);
 }
 
+#[test]
+fn gogh_builder_matches_legacy_constructors() {
+    // Gogh::builder is the one construction path; the legacy
+    // constructors are thin wrappers over it, so both spellings must
+    // produce bit-identical runs.
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.n_jobs = 4;
+    cfg.trace.mean_work_s = 100.0;
+    cfg.trace.mean_interarrival_s = 20.0;
+    cfg.gogh.shards = 2;
+    let mut legacy = gogh::Gogh::without_engine(&cfg).unwrap();
+    let mut built = gogh::Gogh::builder(&cfg).estimator_free().build().unwrap();
+    assert_eq!(legacy.backend_name(), built.backend_name());
+    let a = legacy.run().unwrap();
+    let b = built.run().unwrap();
+    assert_eq!(a.jobs_completed, b.jobs_completed);
+    assert_eq!(a.energy_joules, b.energy_joules);
+    assert_eq!(a.mean_jct, b.mean_jct);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.row(), b.row());
+}
+
+#[test]
+fn topology_routed_path_is_deterministic_and_drains() {
+    // two-level routing (2 groups × 2 shards): the router picks one
+    // group per arrival and only that group's shards solve, yet the
+    // run stays deterministic and loses no jobs
+    let run = || {
+        let (mut d, mut sched) = free_gogh(
+            37,
+            GoghOptions {
+                history_jobs: 12,
+                shards: 2,
+                topology_groups: 2,
+                seed: 37,
+                ..Default::default()
+            },
+        );
+        let report = d.run(&mut sched).unwrap();
+        let routed: usize = sched.shard_stats().iter().map(|s| s.routed).sum();
+        (report, routed)
+    };
+    let (a, routed_a) = run();
+    let (b, routed_b) = run();
+    assert_eq!(a.jobs_completed, 8, "topology path lost jobs");
+    assert_eq!(a.energy_joules, b.energy_joules, "topology path nondeterministic");
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.mean_jct, b.mean_jct);
+    assert_eq!(routed_a, routed_b);
+    assert!(routed_a > 0, "no arrival was topology-routed");
+}
+
 // ---------------------------------------------------------------------
 // PJRT-dependent tests (skip when artifacts are absent)
 // ---------------------------------------------------------------------

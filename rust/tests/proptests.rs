@@ -10,7 +10,7 @@ use gogh::catalog::{Catalog, EstimateKey};
 use gogh::cluster::{AccelId, Cluster, ClusterSpec, Placement, PlacementDelta, PlacementOp};
 use gogh::ilp::branch_bound::{solve_ilp, BnbConfig, BnbStatus};
 use gogh::ilp::model::{Model, ObjSense, Sense};
-use gogh::ilp::problem1::{solve_problem1, Problem1Input};
+use gogh::ilp::problem1::{build_problem1, solve_problem1, Problem1Builder, Problem1Input};
 use gogh::util::Rng;
 use gogh::workload::{
     encoding, AccelType, Combo, JobId, JobSpec, ModelFamily, ThroughputOracle, ACCEL_TYPES,
@@ -854,6 +854,7 @@ fn prop_shards_partition_and_filter_availability() {
         let per_type = rng.range_u32_inclusive(1, 6);
         let spec = Spec::balanced(per_type);
         let p = rng.range_usize(1, 12);
+        #[allow(deprecated)]
         let shards = spec.shards(p);
         assert_eq!(shards.len(), p.min(spec.len()));
         let mut seen: Vec<AccelId> = shards.iter().flat_map(|s| s.accels.clone()).collect();
@@ -872,6 +873,156 @@ fn prop_shards_partition_and_filter_availability() {
                 assert!(!c.is_accel_down(a));
                 assert!(s.contains(a));
             }
+        }
+    }
+}
+
+#[test]
+fn prop_topology_partitions_and_filters_availability() {
+    use gogh::cluster::ClusterSpec as Spec;
+    let mut rng = Rng::seed_from_u64(2828);
+    for case in 0..80 {
+        let per_type = rng.range_u32_inclusive(1, 6);
+        let spec = Spec::balanced(per_type);
+        let g = rng.range_usize(1, 8);
+        let p = rng.range_usize(1, 6);
+        let topo = spec.topology(g, p);
+        // both levels clamp: no empty group or shard on a non-empty
+        // cluster, and global shard indices stay sequential
+        assert!(topo.groups.len() <= g.max(1));
+        let indices: Vec<usize> = topo.shards().map(|(_, s, _)| s.index).collect();
+        assert_eq!(indices, (0..topo.total_shards()).collect::<Vec<_>>(), "case {case}");
+        for grp in &topo.groups {
+            assert!(!grp.accels.is_empty(), "case {case}: empty group {}", grp.index);
+            for s in &grp.shards {
+                assert!(!s.accels.is_empty(), "case {case}: empty shard {}", s.index);
+                for a in &s.accels {
+                    assert!(grp.contains(*a), "case {case}: shard leaks outside its group");
+                }
+            }
+        }
+        // two-level partition: every instance in exactly one shard of
+        // exactly one group
+        let mut seen: Vec<AccelId> = topo.shards().flat_map(|(_, s, _)| s.accels.clone()).collect();
+        seen.sort();
+        let mut all = spec.accels.clone();
+        all.sort();
+        assert_eq!(seen, all, "case {case}: topology must cover each instance exactly once");
+        // availability filtering never leaks a down instance into a pool
+        let mut c = Cluster::new(spec);
+        for _ in 0..rng.range_usize(0, 4) {
+            let a = c.spec.accels[rng.range_usize(0, c.spec.accels.len())];
+            c.set_accel_down(a);
+        }
+        for (_, s, set) in topo.shards() {
+            for a in c.shard_available_accels(s) {
+                assert!(!c.is_accel_down(a), "case {case}");
+                assert!(set.contains(&a), "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_builder_edit_sequences_match_from_scratch() {
+    // Any sequence of job adds/removes and capacity churn applied to a
+    // Problem1Builder must leave it building the exact constraint
+    // matrix a cold `build_problem1` produces for the final state —
+    // otherwise the incremental path drifts from the paper formulation.
+    let mut rng = Rng::seed_from_u64(3131);
+    for case in 0..30 {
+        let oracle = ThroughputOracle::new(case);
+        let universe: Vec<JobSpec> = (0..12u32)
+            .map(|i| {
+                let f = FAMILIES[i as usize % FAMILIES.len()];
+                let b = f.batch_sizes()[i as usize % f.batch_sizes().len()];
+                let mut j = JobSpec {
+                    id: JobId(i),
+                    family: f,
+                    batch_size: b,
+                    replication: 1,
+                    min_throughput: 0.0,
+                    distributability: 1 + i % 2,
+                    work: 10.0,
+                    priority: Default::default(),
+                    elastic: false,
+                    inference: None,
+                };
+                j.min_throughput = 0.3 * oracle.solo(&j, AccelType::P100);
+                j
+            })
+            .collect();
+        let jobs_c = universe.clone();
+        let oracle_c = oracle.clone();
+        let thr = move |a: AccelType, j: JobId, c: &Combo| -> f64 {
+            let spec = jobs_c.iter().find(|s| s.id == j).unwrap();
+            let lookup = |id: JobId| jobs_c.iter().find(|s| s.id == id).cloned();
+            oracle_c.throughput(spec, c, a, &lookup)
+        };
+        let cap = |a: AccelType| a.base_speed() / AccelType::V100.base_speed();
+
+        let mut b = Problem1Builder::new(2);
+        let mut live: BTreeMap<JobId, JobSpec> = BTreeMap::new();
+        let mut counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        b.set_accel_counts(counts.clone());
+        for _ in 0..rng.range_usize(3, 15) {
+            match rng.range_usize(0, 4) {
+                0 | 1 => {
+                    // add (or re-add, which must replace cleanly)
+                    let j = universe[rng.range_usize(0, universe.len())].clone();
+                    live.insert(j.id, j.clone());
+                    b.add_job(j, &thr);
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let ids: Vec<JobId> = live.keys().copied().collect();
+                        let id = ids[rng.range_usize(0, ids.len())];
+                        live.remove(&id);
+                        assert!(b.remove_job(id), "case {case}: live job missing from builder");
+                    }
+                }
+                _ => {
+                    let a = ACCEL_TYPES[rng.range_usize(0, ACCEL_TYPES.len())];
+                    counts.insert(a, rng.range_u32_inclusive(0, 3));
+                    b.set_accel_counts(counts.clone());
+                }
+            }
+        }
+        if live.is_empty() {
+            let j = universe[0].clone();
+            live.insert(j.id, j.clone());
+            b.add_job(j, &thr);
+        }
+        let jobs_vec: Vec<JobSpec> = live.values().cloned().collect();
+        assert_eq!(b.jobs_sorted(), jobs_vec, "case {case}: builder job list drifted");
+        let input = Problem1Input {
+            jobs: &jobs_vec,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &cap,
+            max_pairs_per_job: 2,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+            now_s: 0.0,
+            power: Default::default(),
+        };
+        let (cold_model, cold_cols, cold_slacks) = build_problem1(&input, &BnbConfig::default());
+        let (model, cols, slacks) = b.build(&input);
+        assert_eq!(cols, cold_cols.as_slice(), "case {case}: column universe differs");
+        assert_eq!(slacks, &cold_slacks, "case {case}: slack map differs");
+        assert_eq!(model.obj_sense, cold_model.obj_sense);
+        assert_eq!(model.vars.len(), cold_model.vars.len(), "case {case}");
+        for (v, w) in model.vars.iter().zip(&cold_model.vars) {
+            assert_eq!(v.name, w.name, "case {case}");
+            assert_eq!((v.lb, v.ub, v.obj), (w.lb, w.ub, w.obj), "case {case}: {}", v.name);
+            assert_eq!(v.kind, w.kind, "case {case}: {}", v.name);
+        }
+        assert_eq!(model.constraints.len(), cold_model.constraints.len(), "case {case}");
+        for (x, y) in model.constraints.iter().zip(&cold_model.constraints) {
+            assert_eq!(x.name, y.name, "case {case}");
+            assert_eq!(x.terms, y.terms, "case {case}: {}", x.name);
+            assert_eq!(x.sense, y.sense, "case {case}: {}", x.name);
+            assert_eq!(x.rhs, y.rhs, "case {case}: {}", x.name);
         }
     }
 }

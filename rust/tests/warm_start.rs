@@ -8,7 +8,9 @@ use std::collections::BTreeMap;
 
 use gogh::baselines::greedy_incumbent;
 use gogh::ilp::branch_bound::{solve_ilp, BnbConfig, BnbStatus};
-use gogh::ilp::problem1::{build_problem1, solve_problem1, Problem1Input};
+use gogh::ilp::problem1::{
+    build_problem1, solve_problem1, solve_problem1_with_basis, ColumnBasis, Problem1Input,
+};
 use gogh::workload::{AccelType, Combo, JobId, JobSpec, ThroughputOracle, ACCEL_TYPES, FAMILIES};
 
 fn mk_jobs(n: u32, oracle: &ThroughputOracle, slo_frac: f64) -> Vec<JobSpec> {
@@ -197,6 +199,60 @@ fn warm_start_explores_strictly_fewer_nodes_at_scale() {
         total_warm < total_cold,
         "warm start must explore strictly fewer nodes: warm {total_warm} vs cold {total_cold}"
     );
+}
+
+#[test]
+fn basis_warm_start_matches_cold_solve_at_ten_jobs() {
+    // Simplex basis reuse (the arrival-chaining path) must be purely a
+    // speed lever: at |J| = 10 the warm-started solve lands on the same
+    // optimum as the cold one, and the exported basis round-trips
+    // through a second solve unchanged.
+    for seed in [51u64, 52, 53] {
+        let oracle = ThroughputOracle::new(seed);
+        let jobs = mk_jobs(10, &oracle, 0.35);
+        let counts: BTreeMap<AccelType, u32> = ACCEL_TYPES.iter().map(|&a| (a, 2)).collect();
+        let thr = thr_fn(jobs.clone(), oracle.clone());
+        let input = Problem1Input {
+            jobs: &jobs,
+            accel_counts: &counts,
+            throughput: &thr,
+            solo_capability: &solo_cap,
+            max_pairs_per_job: 2,
+            slack_penalty: Some(2000.0),
+            throughput_bonus: 300.0,
+            now_s: 0.0,
+            power: Default::default(),
+        };
+        let cfg = BnbConfig {
+            max_nodes: 150_000,
+            time_limit_s: 120.0,
+            ..Default::default()
+        };
+        let cold = solve_problem1(&input, &cfg);
+        assert_eq!(cold.status, BnbStatus::Optimal, "seed {seed}");
+        assert!(cold.basis.is_none(), "cold solve must not export a basis");
+        // empty hint = chaining enabled with no prior: crash fails
+        // gracefully and the solve still proves the same optimum
+        let first = solve_problem1_with_basis(&input, &cfg, &ColumnBasis::new());
+        assert_eq!(first.status, BnbStatus::Optimal, "seed {seed}");
+        assert!(
+            (first.objective - cold.objective).abs() < 1e-6,
+            "seed {seed}: basis path {} vs cold {}",
+            first.objective,
+            cold.objective
+        );
+        let basis = first.basis.clone().expect("chained solve exports its root basis");
+        assert!(!basis.is_empty(), "seed {seed}: empty exported basis");
+        // re-solve warm-started from the exported basis
+        let warm = solve_problem1_with_basis(&input, &cfg, &basis);
+        assert_eq!(warm.status, BnbStatus::Optimal, "seed {seed}");
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-6,
+            "seed {seed}: warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+    }
 }
 
 #[test]
